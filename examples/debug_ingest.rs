@@ -1,0 +1,26 @@
+use ssr::model::{handle::KvCache, tokenizer, ModelHandle};
+use ssr::runtime::literals::lit_f32;
+use ssr::runtime::{Manifest, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let m = Manifest::load(&dir)?;
+    let rt = Runtime::new(&dir)?;
+    let target = ModelHandle::load(&m, "target")?;
+    let v = m.vocab.clone();
+    let prompt = tokenizer::prompt(&v, &tokenizer::tokenize_expr(&v, "23+4+9")?, None);
+    let spec = &target.spec;
+    let dims = spec.cache_dims(1);
+    let n: usize = dims.iter().product();
+    let zeros = vec![0f32; n];
+    let mut cache = KvCache { k: lit_f32(&zeros, &dims)?, v: lit_f32(&zeros, &dims)?, batch: 1 };
+    let out = target.ingest(&rt, &mut cache, &[0], &[prompt.clone()])?;
+    let nl = &out.last_logits[0];
+    let mut idx: Vec<usize> = (0..nl.len()).collect();
+    idx.sort_by(|&a, &b| nl[b].partial_cmp(&nl[a]).unwrap());
+    println!("ingest pos_out={} cnt={}", out.pos[0], out.cnt[0]);
+    for &i in idx.iter().take(3) {
+        println!("ingest top: {} {:.4}", v.names.get(&(i as i32)).map(|s| s.as_str()).unwrap_or("?"), nl[i]);
+    }
+    Ok(())
+}

@@ -1,0 +1,49 @@
+//! Quickstart: load the AOT artifacts, solve one problem with every
+//! inference method, and print what the SSR machinery did.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use ssr::backend::pjrt::PjrtBackend;
+use ssr::config::{SsrConfig, StopRule};
+use ssr::coordinator::engine::{Engine, Method};
+use ssr::workload::problems::problem_from_text;
+
+fn main() -> anyhow::Result<()> {
+    ssr::util::logging::init();
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let mut backend = PjrtBackend::load(&dir)?;
+    backend.temp = 0.5;
+    let vocab = backend.manifest().vocab.clone();
+
+    let expr = std::env::args().nth(1).unwrap_or_else(|| "(31+17)*2-5".to_string());
+    let problem = problem_from_text(&vocab, &expr)?;
+    println!("problem: {expr}   (gold answer: {})\n", problem.answer);
+
+    let methods = [
+        Method::Baseline,
+        Method::Parallel { n: 3, spm: true },
+        Method::SpecReason { tau: 7 },
+        Method::Ssr { n: 3, tau: 7, stop: StopRule::Full },
+        Method::Ssr { n: 3, tau: 7, stop: StopRule::Fast2 },
+    ];
+    println!(
+        "{:<18} {:>8} {:>8} {:>6} {:>9} {:>10} {:>9}",
+        "method", "answer", "correct", "steps", "rewrites", "tok(d/t)", "model(s)"
+    );
+    for (i, m) in methods.into_iter().enumerate() {
+        let mut engine = Engine::new(&mut backend, SsrConfig::default());
+        let r = engine.run(&problem, m, 100 + i as u64)?;
+        println!(
+            "{:<18} {:>8} {:>8} {:>6} {:>9} {:>5}/{:<5} {:>8.2}",
+            m.name(),
+            r.answer().map(|a| a.to_string()).unwrap_or_else(|| "-".into()),
+            r.answer() == Some(problem.answer),
+            r.steps,
+            r.rewrites,
+            r.draft_tokens,
+            r.target_tokens,
+            r.model_secs,
+        );
+    }
+    Ok(())
+}

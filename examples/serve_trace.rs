@@ -1,0 +1,90 @@
+//! End-to-end serving driver (the DESIGN.md "e2e" experiment): load the
+//! real draft/target pair, replay a batch trace of synth-math500
+//! problems through the full SSR stack, and report accuracy, latency,
+//! throughput, rewrite rate and normalized FLOPs — the serving-paper
+//! headline run recorded in EXPERIMENTS.md.
+//!
+//!     cargo run --release --example serve_trace -- [n_requests] [method]
+//!     methods: ssr (default) | baseline | spec-reason | parallel-spm
+
+use std::time::Instant;
+
+use ssr::backend::pjrt::PjrtBackend;
+use ssr::backend::Backend;
+use ssr::config::{SsrConfig, StopRule};
+use ssr::coordinator::engine::{Engine, Method};
+use ssr::coordinator::metrics::Metrics;
+use ssr::util::stats;
+use ssr::workload::{suites, traces};
+
+fn main() -> anyhow::Result<()> {
+    ssr::util::logging::init();
+    let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(12);
+    let method = match std::env::args().nth(2).as_deref() {
+        None | Some("ssr") => Method::Ssr { n: 3, tau: 7, stop: StopRule::Full },
+        Some("baseline") => Method::Baseline,
+        Some("spec-reason") => Method::SpecReason { tau: 7 },
+        Some("parallel-spm") => Method::Parallel { n: 3, spm: true },
+        Some(other) => anyhow::bail!("unknown method {other}"),
+    };
+
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let mut backend = PjrtBackend::load(&dir)?;
+    backend.temp = 0.5;
+    backend.warmup(3)?; // compile ahead of serving (see §Perf)
+    let vocab = backend.manifest().vocab.clone();
+    let suite = suites::generate(suites::spec("synth-math500")?, &vocab);
+    let trace = traces::batch_trace(&suite, n, 0xE2E);
+
+    println!("serving {} requests of synth-math500 with {}\n", trace.len(), method.name());
+    let mut metrics = Metrics::new();
+    let mut correct = 0usize;
+    let t0 = Instant::now();
+    let mut per_req = Vec::new();
+    for req in &trace.requests {
+        let rt0 = Instant::now();
+        let mut engine = Engine::new(&mut backend, SsrConfig::default());
+        let r = engine.run(&req.problem, method, req.id)?;
+        let lat = rt0.elapsed().as_secs_f64();
+        let ok = r.answer() == Some(req.problem.answer);
+        correct += ok as usize;
+        metrics.record_request(lat, r.answer().is_some());
+        metrics.record_tokens(r.draft_tokens, r.target_tokens, r.steps, r.rewrites);
+        per_req.push(lat);
+        println!(
+            "  req {:>3}: answer {:>4} gold {:>4} {} {:>5.2}s  ({} steps, {} rewrites)",
+            req.id,
+            r.answer().map(|a| a.to_string()).unwrap_or_else(|| "-".into()),
+            req.problem.answer,
+            if ok { "OK " } else { "ERR" },
+            lat,
+            r.steps,
+            r.rewrites
+        );
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let meta = backend.meta();
+
+    println!("\n=== serve_trace summary ===");
+    println!("requests          : {}", trace.len());
+    println!("accuracy          : {:.1}%", 100.0 * correct as f64 / trace.len() as f64);
+    println!("throughput        : {:.3} req/s", trace.len() as f64 / elapsed);
+    println!("latency mean/p50/p99: {:.2}/{:.2}/{:.2} s",
+        stats::mean(&per_req), stats::median(&per_req), stats::percentile(&per_req, 99.0));
+    println!("rewrite rate R    : {:.2}", metrics.rewrite_rate());
+    println!(
+        "tokens draft/target: {}/{}  (alpha = {:.3})",
+        metrics.draft_tokens, metrics.target_tokens, meta.alpha
+    );
+    println!(
+        "model time        : {:.2}s of {:.2}s wall ({:.0}% in PJRT)",
+        backend.clock_secs(),
+        elapsed,
+        100.0 * backend.clock_secs() / elapsed
+    );
+    let hist = backend.score_histogram();
+    if hist.total() > 0 {
+        println!("step-score dist   : {:?}", hist.fractions().iter().map(|f| (f * 100.0).round()).collect::<Vec<_>>());
+    }
+    Ok(())
+}

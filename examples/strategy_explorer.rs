@@ -1,0 +1,81 @@
+//! SPM deep-dive: how does the target model's own strategy selection
+//! compare with random and oracle selection across problem families?
+//! (the mechanism behind the paper's Fig. 4 gains).
+//!
+//!     cargo run --release --example strategy_explorer -- [pjrt|calibrated]
+
+use ssr::backend::calibrated::CalibratedBackend;
+use ssr::backend::pjrt::PjrtBackend;
+use ssr::backend::Backend;
+use ssr::config::Selection;
+use ssr::coordinator::spm;
+use ssr::model::tokenizer;
+use ssr::util::rng::Rng;
+use ssr::workload::{strategies, suites};
+
+fn main() -> anyhow::Result<()> {
+    ssr::util::logging::init();
+    let kind = std::env::args().nth(1).unwrap_or_else(|| "calibrated".into());
+    let vocab = tokenizer::builtin_vocab();
+    let suite = suites::generate(suites::spec("synth-livemath")?, &vocab);
+
+    let mut backend: Box<dyn Backend> = match kind.as_str() {
+        "pjrt" => {
+            let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+            Box::new(PjrtBackend::load(&dir)?)
+        }
+        _ => Box::new(CalibratedBackend::for_suite("synth-livemath", 1)?),
+    };
+
+    let meta = strategies::builtin_meta();
+    println!("strategy pool (paper Appendix D):");
+    for (i, name) in meta.names.iter().enumerate().take(12) {
+        let style = meta.styles[i];
+        println!(
+            "  {} {:<26} -> {:<12} aptitude(add/mul/paren/mod) = {:?}",
+            (b'A' + i as u8) as char,
+            name,
+            meta.style_names[style],
+            meta.aptitude[style]
+        );
+    }
+
+    let mut rng = Rng::new(7);
+    println!("\nper-family selection quality (mean aptitude of n=5 picks):");
+    println!("{:<10} {:>8} {:>8} {:>8}", "family", "model", "random", "oracle");
+    for fam in ssr::workload::problems::FAMILIES {
+        let probs: Vec<_> =
+            suite.problems.iter().filter(|p| p.family == fam).take(12).collect();
+        let (mut qm, mut qr, mut qo) = (0.0, 0.0, 0.0);
+        for p in &probs {
+            let sm = spm::select(backend.as_mut(), p, 12, 5, Selection::ModelTopN, &mut rng)?;
+            let sr = spm::select(backend.as_mut(), p, 12, 5, Selection::Random, &mut rng)?;
+            let so = spm::select(backend.as_mut(), p, 12, 5, Selection::Oracle, &mut rng)?;
+            qm += spm::selection_quality(&sm, p);
+            qr += spm::selection_quality(&sr, p);
+            qo += spm::selection_quality(&so, p);
+        }
+        let n = probs.len() as f64;
+        println!(
+            "{:<10} {:>8.3} {:>8.3} {:>8.3}",
+            fam.name(),
+            qm / n,
+            qr / n,
+            qo / n
+        );
+    }
+
+    println!("\nexample selections (model-internal scoring):");
+    for p in suite.problems.iter().take(6) {
+        let picked =
+            spm::select(backend.as_mut(), p, 12, 5, Selection::ModelTopN, &mut rng)?;
+        let letters: String =
+            picked.iter().map(|&s| (b'A' + s as u8) as char).collect::<String>();
+        println!(
+            "  {} [{}]  ->  {letters}",
+            tokenizer::detokenize(&vocab, &p.tokens),
+            p.family.name(),
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,226 @@
+"""AOT lowering: JAX entry points -> HLO text artifacts + manifest.
+
+Emits HLO *text* (never `.serialize()`): jax >= 0.5 writes HloModuleProto
+with 64-bit instruction ids which the xla crate's xla_extension 0.5.1
+rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (all consumed by rust/src/runtime/):
+  artifacts/<entry>.hlo.txt          one per entry point x batch variant
+  artifacts/<model>.weights.bin/.json  trained parameters (train.py)
+  artifacts/manifest.json            vocab, configs, entry-point registry,
+                                     suite files, token-id constants
+  artifacts/suite-<name>.json        benchmark problem sets (corpus.py)
+
+Python runs ONCE at build time; the rust binary is self-contained after
+`make artifacts`.
+
+Usage: python -m compile.aot [--out DIR] [--random]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import corpus, model, train
+
+PREFILL_BATCHES = (1, 2, 4, 8)
+STEP_BATCHES = (1, 2, 4, 8)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the default printer elides big constant
+    # tensors as `constant({...})`, which the 0.5.1-era text parser happily
+    # reads back as GARBAGE (we lost a day's worth of position-embedding
+    # table to this). Guard against any residual elision.
+    text = comp.as_hlo_text(True)
+    assert "{...}" not in text, "HLO text still contains elided constants"
+    return text
+
+
+def _f32(shape=()):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _i32(shape=()):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def _param_specs(cfg: model.ModelConfig):
+    return tuple(_f32(shape) for _, shape in model.param_shapes(cfg))
+
+
+def _cache_spec(cfg: model.ModelConfig, b: int):
+    return _f32((cfg.n_layers, b, cfg.n_heads, cfg.s_max, cfg.d_head))
+
+
+def entry_points(cfg: model.ModelConfig, batches_prefill, batches_step):
+    """Yield (name, fn, example_args, signature_doc)."""
+    p_specs = _param_specs(cfg)
+    n_p = len(p_specs)
+
+    for b in batches_prefill:
+        def prefill_fn(*args, _b=b):
+            params = model.unflatten_params(cfg, args[:n_p])
+            tokens, lengths = args[n_p], args[n_p + 1]
+            return model.prefill(cfg, params, tokens, lengths)
+
+        yield (
+            f"prefill_{cfg.name}_b{b}",
+            prefill_fn,
+            p_specs + (_i32((b, cfg.s_max)), _i32((b,))),
+            {"kind": "prefill", "model": cfg.name, "batch": b,
+             "inputs": ["params*", "tokens[B,S]", "lengths[B]"],
+             "outputs": ["logits[B,S,V]", "k[L,B,H,S,D]", "v[L,B,H,S,D]"]},
+        )
+
+    for b in batches_step:
+        def span_fn(*args, _b=b):
+            params = model.unflatten_params(cfg, args[:n_p])
+            k, v, pos, cur, temp, seed = args[n_p:]
+            return model.span(cfg, params, k, v, pos, cur, temp, seed)
+
+        yield (
+            f"span_{cfg.name}_b{b}",
+            span_fn,
+            p_specs + (_cache_spec(cfg, b), _cache_spec(cfg, b),
+                       _i32((b,)), _i32((b,)), _f32(), _i32()),
+            {"kind": "span", "model": cfg.name, "batch": b,
+             "inputs": ["params*", "k", "v", "pos[B]", "cur[B]",
+                        "temp", "seed"],
+             "outputs": ["toks[B,T]", "ntake[B]", "done[B]", "pos_out[B]",
+                         "k", "v"]},
+        )
+
+        def ingest_fn(*args, _b=b):
+            params = model.unflatten_params(cfg, args[:n_p])
+            k, v, pos, toks, lens = args[n_p:]
+            return model.ingest(cfg, params, k, v, pos, toks, lens)
+
+        yield (
+            f"ingest_{cfg.name}_b{b}",
+            ingest_fn,
+            p_specs + (_cache_spec(cfg, b), _cache_spec(cfg, b),
+                       _i32((b,)), _i32((b, model.T_SPAN)), _i32((b,))),
+            {"kind": "ingest", "model": cfg.name, "batch": b,
+             "inputs": ["params*", "k", "v", "pos[B]", "toks[B,T]",
+                        "lens[B]"],
+             "outputs": ["sum_lp[B]", "cnt[B]", "last_logits[B,V]",
+                         "pos_out[B]", "k", "v"]},
+        )
+
+
+def model_manifest(cfg: model.ModelConfig) -> dict:
+    return {
+        "name": cfg.name,
+        "n_layers": cfg.n_layers,
+        "d_model": cfg.d_model,
+        "n_heads": cfg.n_heads,
+        "d_head": cfg.d_head,
+        "d_ff": cfg.d_ff,
+        "vocab": cfg.vocab,
+        "s_max": cfg.s_max,
+        "n_params": cfg.n_params,
+        "flops_per_token": cfg.flops_per_token(),
+        "weights_bin": f"{cfg.name}.weights.bin",
+        "weights_json": f"{cfg.name}.weights.json",
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--random", action="store_true",
+                    help="write random weights instead of requiring train.py "
+                         "output (smoke/testing only)")
+    args = ap.parse_args()
+    out = args.out
+    os.makedirs(out, exist_ok=True)
+
+    configs = (model.DRAFT_CONFIG, model.TARGET_CONFIG)
+
+    # Weights must exist (or be faked) before the manifest claims them.
+    for cfg in configs:
+        wpath = os.path.join(out, f"{cfg.name}.weights.bin")
+        if not os.path.exists(wpath):
+            if not args.random:
+                raise SystemExit(
+                    f"missing {wpath}; run `python -m compile.train` first "
+                    f"(or pass --random for smoke testing)")
+            params = model.init_params(cfg, jax.random.PRNGKey(0))
+            train.save_weights(cfg, params, out)
+
+    entries = []
+    for cfg in configs:
+        for name, fn, specs, sig in entry_points(cfg, PREFILL_BATCHES,
+                                                 STEP_BATCHES):
+            lowered = jax.jit(fn).lower(*specs)
+            text = to_hlo_text(lowered)
+            path = os.path.join(out, f"{name}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            sig["file"] = f"{name}.hlo.txt"
+            sig["name"] = name
+            entries.append(sig)
+            print(f"lowered {name}: {len(text)} chars", flush=True)
+
+    # Benchmark suites.
+    suites = []
+    for spec in corpus.SUITES:
+        data = corpus.suite_to_json(spec)
+        fname = f"suite-{spec.name}.json"
+        with open(os.path.join(out, fname), "w") as f:
+            json.dump(data, f)
+        suites.append({"name": spec.name, "file": fname,
+                       "n_problems": data and len(data["problems"])})
+        print(f"wrote {fname} ({len(data['problems'])} problems)")
+
+    manifest = {
+        "version": 1,
+        "t_span": model.T_SPAN,
+        "vocab": {
+            "size": corpus.VOCAB_SIZE,
+            "names": {str(k): v for k, v in corpus.TOKEN_NAMES.items()},
+            "pad": corpus.PAD, "bos": corpus.BOS, "q": corpus.Q,
+            "sep": corpus.SEP, "step": corpus.STEP, "fin": corpus.FIN,
+            "eos": corpus.EOS, "digit0": corpus.DIGIT0,
+            "plus": corpus.PLUS, "minus": corpus.MINUS, "mul": corpus.MUL,
+            "lparen": corpus.LPAREN, "rparen": corpus.RPAREN,
+            "eq": corpus.EQ, "mod": corpus.MOD,
+            "strat0": corpus.STRAT0,
+            "num_strategies": corpus.NUM_STRATEGIES,
+        },
+        "strategies": {
+            "names": corpus.STRATEGY_NAMES,
+            "styles": corpus.STRATEGY_STYLE,
+            "style_names": corpus.STYLE_NAMES,
+            "aptitude": {
+                str(style): apt for style, apt in corpus.STYLE_APTITUDE.items()
+            },
+        },
+        "families": corpus.FAMILY_NAMES,
+        "models": [model_manifest(cfg) for cfg in configs],
+        "alpha": (model.DRAFT_CONFIG.flops_per_token()
+                  / model.TARGET_CONFIG.flops_per_token()),
+        "prefill_batches": list(PREFILL_BATCHES),
+        "step_batches": list(STEP_BATCHES),
+        "entries": entries,
+        "suites": suites,
+    }
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote manifest.json ({len(entries)} entry points)")
+
+
+if __name__ == "__main__":
+    main()

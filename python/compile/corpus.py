@@ -1,0 +1,525 @@
+"""Synthetic step-structured arithmetic-reasoning corpus.
+
+This is the data substrate standing in for the paper's math benchmarks
+(AIME 2024 / MATH-500 / LiveMathBench): procedurally generated arithmetic
+chain problems with exact ground-truth answers, rendered as multi-step
+reasoning traces
+
+    BOS Q <expr> ; <strategy> S <a><op><b>=<v> ; ... F <answer> .
+
+The strategy token conditions the *decomposition style* of the steps, so
+the Selective Parallel Module has a real signal to learn: some styles are
+a much better fit for some problem families (e.g. precedence-first on
+mul-heavy expressions, modular-reduce on `% m` problems), mirroring the
+paper's Appendix-D strategy pool.
+
+Everything here is deterministic given a seed (splitmix64, mirrored
+bit-for-bit by `rust/src/util/rng.rs`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Iterable
+
+# ---------------------------------------------------------------------------
+# Vocabulary — fixed ids, mirrored by rust/src/model/vocab.rs via
+# artifacts/manifest.json (rust never hard-codes these).
+# ---------------------------------------------------------------------------
+
+PAD, BOS, Q, SEP, STEP, FIN, EOS = 0, 1, 2, 3, 4, 5, 6
+DIGIT0 = 7  # ids 7..16 are digits 0..9
+PLUS, MINUS, MUL, LPAREN, RPAREN, EQ, MOD = 17, 18, 19, 20, 21, 22, 23
+STRAT0 = 24  # ids 24..36 are strategy tokens A..M (M = "Unknown")
+NUM_STRATEGIES = 13  # A..L real strategies + M
+VOCAB_SIZE = 64
+
+TOKEN_NAMES = {
+    PAD: "<pad>", BOS: "<bos>", Q: "Q", SEP: ";", STEP: "S", FIN: "F",
+    EOS: ".", PLUS: "+", MINUS: "-", MUL: "*", LPAREN: "(", RPAREN: ")",
+    EQ: "=", MOD: "%",
+}
+for _d in range(10):
+    TOKEN_NAMES[DIGIT0 + _d] = str(_d)
+for _s in range(NUM_STRATEGIES):
+    TOKEN_NAMES[STRAT0 + _s] = f"<{chr(ord('A') + _s)}>"
+
+STEP_DELIMS = (SEP, EOS)
+
+# Problem families (mirrored in rust/src/workload/problems.rs).
+FAM_ADD_CHAIN = 0   # a + b - c + d
+FAM_MUL_MIX = 1     # a + b*c - d   (precedence matters)
+FAM_PAREN = 2       # (a + b) * c - d
+FAM_MODULAR = 3     # (a*b + c) % m
+FAMILY_NAMES = ["add_chain", "mul_mix", "paren", "modular"]
+
+# Decomposition styles.
+STYLE_L2R = 0        # leftmost evaluable reduction
+STYLE_PREC = 1       # all '*' first (left to right), then +/- l2r
+STYLE_PAREN = 2      # innermost parenthesis first, then precedence
+STYLE_RTL = 3        # rightmost evaluable reduction (awkward)
+STYLE_TENS = 4       # like l2r, but 2-digit additions split into tens+ones
+STYLE_MODRED = 5     # reduce operands mod m early (modular family)
+STYLE_NAMES = ["l2r", "prec_first", "paren_first", "rtl", "tens", "mod_reduce"]
+
+# Strategy -> style mapping (paper Appendix D pool A..M; M = unknown).
+# Several paper strategies share a decomposition style in the arithmetic
+# domain but keep distinct tokens, so the pool stays at K=12 (+M).
+STRATEGY_STYLE = [
+    STYLE_PREC,    # A algebraic simplification
+    STYLE_PAREN,   # B clever substitution
+    STYLE_L2R,     # C coordinate geometry
+    STYLE_RTL,     # D complex numbers
+    STYLE_MODRED,  # E number theory
+    STYLE_TENS,    # F combinatorics
+    STYLE_PREC,    # G probability
+    STYLE_L2R,     # H functional equations
+    STYLE_RTL,     # I recursion / invariants
+    STYLE_PAREN,   # J geometry
+    STYLE_TENS,    # K casework / constructive
+    STYLE_MODRED,  # L calculus / inequalities
+    # M ("Unknown") handled by callers: uniform random style.
+]
+STRATEGY_NAMES = [
+    "algebraic_simplification", "clever_substitution", "coordinate_geometry",
+    "complex_numbers", "number_theory", "combinatorics", "probability",
+    "functional_equations", "recursion_invariants", "geometry",
+    "casework_constructive", "calculus_inequalities", "unknown",
+]
+
+# Aptitude of each *style* for each family, in [0, 1]; used to sample the
+# strategy paired with a problem in the training corpus (good pairings are
+# seen more often), and by the calibrated backend's success model.
+STYLE_APTITUDE = {
+    #               add   mul   paren modular
+    STYLE_L2R:     [0.95, 0.35, 0.30, 0.40],
+    STYLE_PREC:    [0.80, 0.95, 0.55, 0.55],
+    STYLE_PAREN:   [0.70, 0.70, 0.95, 0.50],
+    STYLE_RTL:     [0.45, 0.25, 0.25, 0.30],
+    STYLE_TENS:    [0.90, 0.45, 0.40, 0.35],
+    STYLE_MODRED:  [0.30, 0.30, 0.30, 0.95],
+}
+
+
+def strategy_aptitude(strategy: int, family: int) -> float:
+    """Aptitude of strategy token `strategy` (0..12) for `family`."""
+    if strategy >= len(STRATEGY_STYLE):  # M / unknown
+        return 0.40
+    return STYLE_APTITUDE[STRATEGY_STYLE[strategy]][family]
+
+
+# ---------------------------------------------------------------------------
+# Deterministic RNG — splitmix64, mirrored by rust/src/util/rng.rs.
+# ---------------------------------------------------------------------------
+
+_M64 = (1 << 64) - 1
+
+
+class SplitMix64:
+    def __init__(self, seed: int):
+        self.state = seed & _M64
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & _M64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & _M64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & _M64
+        return z ^ (z >> 31)
+
+    def below(self, n: int) -> int:
+        """Uniform in [0, n) (multiply-shift, matches rust)."""
+        return (self.next_u64() * n) >> 64
+
+    def range(self, lo: int, hi: int) -> int:
+        """Uniform in [lo, hi] inclusive."""
+        return lo + self.below(hi - lo + 1)
+
+    def f64(self) -> float:
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def choice_weighted(self, weights: list[float]) -> int:
+        total = sum(weights)
+        x = self.f64() * total
+        acc = 0.0
+        for i, w in enumerate(weights):
+            acc += w
+            if x < acc:
+                return i
+        return len(weights) - 1
+
+
+# ---------------------------------------------------------------------------
+# Expressions — tiny AST: int leaf, or (op, left, right); op in '+-*%'.
+# ---------------------------------------------------------------------------
+
+Node = object  # int | tuple[str, Node, Node]
+
+
+def ev(node) -> int:
+    if isinstance(node, int):
+        return node
+    op, a, b = node
+    x, y = ev(a), ev(b)
+    if op == "+":
+        return x + y
+    if op == "-":
+        return x - y
+    if op == "*":
+        return x * y
+    if op == "%":
+        return x % y
+    raise ValueError(op)
+
+
+def num_tokens(v: int) -> list[int]:
+    assert v >= 0, "corpus values are non-negative"
+    return [DIGIT0 + int(c) for c in str(v)]
+
+
+_OP_TOK = {"+": PLUS, "-": MINUS, "*": MUL, "%": MOD}
+
+
+def expr_tokens(node, parent_prec: int = 0) -> list[int]:
+    """Render with minimal parentheses (matching the rust renderer)."""
+    if isinstance(node, int):
+        return num_tokens(node)
+    op, a, b = node
+    prec = {"+": 1, "-": 1, "*": 2, "%": 0}[op]
+    # `%` binds loosest in our grammar but tightest in conventional
+    # notation — force parens around a compound left operand so the
+    # rendered string is unambiguous under standard precedence too.
+    lhs_prec = 3 if op == "%" else prec
+    inner = (
+        expr_tokens(a, lhs_prec)
+        + [_OP_TOK[op]]
+        + expr_tokens(b, prec + 1)  # left-assoc: rhs binds tighter
+    )
+    if prec < parent_prec:
+        return [LPAREN] + inner + [RPAREN]
+    return inner
+
+
+# ---------------------------------------------------------------------------
+# Problem generation per family.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Problem:
+    family: int
+    expr: Node
+    answer: int
+    difficulty: int  # 1 (easy) .. 5 (hard)
+
+    def tokens(self) -> list[int]:
+        return expr_tokens(self.expr)
+
+
+def _gen_add_chain(rng: SplitMix64, max_operand: int, n_ops: int) -> Node:
+    node: Node = rng.range(1, max_operand)
+    total = node
+    for _ in range(n_ops):
+        if total > 10 and rng.below(2) == 0:
+            v = rng.range(1, min(total, max_operand))
+            node = ("-", node, v)
+            total -= v
+        else:
+            v = rng.range(1, max_operand)
+            node = ("+", node, v)
+            total += v
+    return node
+
+
+def _gen_mul_mix(rng: SplitMix64, max_operand: int, n_ops: int) -> Node:
+    # a +/- b*c [+/- d [* e]] — at least one multiplication.
+    small = max(2, min(9, max_operand // 4))
+    prod = ("*", rng.range(2, small), rng.range(2, small))
+    node: Node = ("+", rng.range(1, max_operand), prod)
+    for _ in range(max(0, n_ops - 2)):
+        if rng.below(3) == 0:
+            node = ("+", node, ("*", rng.range(2, small), rng.range(2, small)))
+        elif ev(node) > max_operand and rng.below(2) == 0:
+            node = ("-", node, rng.range(1, max_operand))
+        else:
+            node = ("+", node, rng.range(1, max_operand))
+    return node
+
+
+def _gen_paren(rng: SplitMix64, max_operand: int, n_ops: int) -> Node:
+    inner = ("+", rng.range(1, max_operand // 2 + 1), rng.range(1, max_operand // 2 + 1))
+    node: Node = ("*", inner, rng.range(2, 5))
+    for _ in range(max(0, n_ops - 2)):
+        if ev(node) > 20 and rng.below(2) == 0:
+            node = ("-", node, rng.range(1, 20))
+        else:
+            node = ("+", node, rng.range(1, max_operand))
+    return node
+
+
+def _gen_modular(rng: SplitMix64, max_operand: int, n_ops: int) -> Node:
+    small = max(2, min(9, max_operand // 4))
+    base: Node = ("+", ("*", rng.range(2, small), rng.range(2, small)),
+                  rng.range(1, max_operand))
+    for _ in range(max(0, n_ops - 3)):
+        base = ("+", base, rng.range(1, max_operand))
+    return ("%", base, rng.range(3, 9))
+
+
+_FAMILY_GEN = [_gen_add_chain, _gen_mul_mix, _gen_paren, _gen_modular]
+
+
+def gen_problem(rng: SplitMix64, family: int, max_operand: int, n_ops: int) -> Problem:
+    expr = _FAMILY_GEN[family](rng, max_operand, n_ops)
+    diff = min(5, 1 + n_ops + (1 if max_operand > 30 else 0)
+               + (1 if family in (FAM_PAREN, FAM_MODULAR) else 0))
+    return Problem(family=family, expr=expr, answer=ev(expr), difficulty=diff)
+
+
+# ---------------------------------------------------------------------------
+# Decomposition styles — turn an expression into reasoning steps.
+# Each step is (lhs_tokens, value); rendered `S <lhs>=<value> ;`.
+# ---------------------------------------------------------------------------
+
+def _find_redex(node, path=()):  # leftmost innermost reducible pair
+    """Return path to the leftmost node whose children are both ints."""
+    if isinstance(node, int):
+        return None
+    op, a, b = node
+    p = _find_redex(a, path + (1,))
+    if p is not None:
+        return p
+    p = _find_redex(b, path + (2,))
+    if p is not None:
+        return p
+    if isinstance(a, int) and isinstance(b, int):
+        return path
+    return None
+
+
+def _find_redex_rtl(node, path=()):
+    if isinstance(node, int):
+        return None
+    op, a, b = node
+    p = _find_redex_rtl(b, path + (2,))
+    if p is not None:
+        return p
+    p = _find_redex_rtl(a, path + (1,))
+    if p is not None:
+        return p
+    if isinstance(a, int) and isinstance(b, int):
+        return path
+    return None
+
+
+def _find_redex_prec(node):
+    """Prefer '*' redexes (leftmost), then '%', then leftmost any."""
+    best = None  # (prec_rank, order, path)
+    order = [0]
+
+    def walk(n, path):
+        if isinstance(n, int):
+            return
+        op, a, b = n
+        walk(a, path + (1,))
+        # in-order position
+        order[0] += 1
+        here = order[0]
+        walk(b, path + (2,))
+        if isinstance(a, int) and isinstance(b, int):
+            rank = {"*": 0, "%": 2, "+": 1, "-": 1}[op]
+            nonlocal best
+            key = (rank, here)
+            if best is None or key < best[0]:
+                best = (key, path)
+
+    walk(node, ())
+    return None if best is None else best[1]
+
+
+def _get(node, path):
+    for step in path:
+        node = node[step]
+    return node
+
+
+def _set(node, path, value):
+    if not path:
+        return value
+    op, a, b = node
+    if path[0] == 1:
+        return (op, _set(a, path[1:], value), b)
+    return (op, a, _set(b, path[1:], value))
+
+
+def _reduce_once(node, path):
+    red = _get(node, path)
+    op, a, b = red
+    v = ev(red)
+    lhs = expr_tokens(red)
+    return _set(node, path, v), (lhs, v)
+
+
+def decompose(node, style: int, rng: SplitMix64 | None = None):
+    """Return (steps, answer); steps = list[(lhs_tokens, value)]."""
+    steps = []
+    guard = 0
+    while not isinstance(node, int):
+        guard += 1
+        assert guard < 64, "runaway decomposition"
+        if style == STYLE_RTL:
+            path = _find_redex_rtl(node)
+        elif style in (STYLE_PREC, STYLE_PAREN):
+            # paren-first == leftmost-innermost with precedence tiebreak;
+            # our _find_redex already returns innermost-leftmost, so use
+            # precedence search for PREC and innermost for PAREN.
+            path = _find_redex_prec(node) if style == STYLE_PREC else _find_redex(node)
+        elif style == STYLE_MODRED and isinstance(node, tuple) and node[0] == "%":
+            path = _modred_path(node)
+        else:
+            path = _find_redex(node)
+        assert path is not None
+        red = _get(node, path)
+        op, a, b = red
+        if (style == STYLE_TENS and op == "+" and isinstance(a, int)
+                and isinstance(b, int) and b >= 10 and a >= 10):
+            # split a + b into (a + tens(b)) + ones(b); two smaller steps
+            tens, ones = (b // 10) * 10, b % 10
+            mid = a + tens
+            steps.append((num_tokens(a) + [PLUS] + num_tokens(tens), mid))
+            if ones:
+                steps.append((num_tokens(mid) + [PLUS] + num_tokens(ones), mid + ones))
+            node = _set(node, path, a + b)
+            continue
+        node, step = _reduce_once(node, path)
+        steps.append(step)
+    return steps, node
+
+
+def _modred_path(node):
+    """For `(X) % m`: reduce inside X first but emit mod-m reductions of
+    completed subterms when they exceed m (early modular reduction)."""
+    # Practical approximation: innermost-leftmost redex inside X.
+    op, x, m = node
+    if isinstance(x, int):
+        return ()
+    p = _find_redex(x)
+    return None if p is None else (1,) + tuple(p)
+
+
+def style_for_strategy(strategy: int, rng: SplitMix64) -> int:
+    if strategy >= len(STRATEGY_STYLE):
+        return rng.below(len(STYLE_APTITUDE))
+    return STRATEGY_STYLE[strategy]
+
+
+# ---------------------------------------------------------------------------
+# Sequence rendering.
+# ---------------------------------------------------------------------------
+
+def render_sequence(problem: Problem, strategy: int, steps, answer: int,
+                    max_len: int) -> tuple[list[int], int]:
+    """Full training sequence; returns (tokens padded to max_len, true_len)."""
+    toks = [BOS, Q] + problem.tokens() + [SEP, STRAT0 + strategy]
+    for lhs, v in steps:
+        toks += [STEP] + lhs + [EQ] + num_tokens(v) + [SEP]
+    toks += [FIN] + num_tokens(answer) + [EOS]
+    n = len(toks)
+    if n > max_len:
+        toks = toks[:max_len]
+        n = max_len
+    return toks + [PAD] * (max_len - n), n
+
+
+def prompt_tokens(problem: Problem, strategy: int | None) -> list[int]:
+    """Serving-time prompt: `BOS Q <expr> ; [<strategy>]`."""
+    toks = [BOS, Q] + problem.tokens() + [SEP]
+    if strategy is not None:
+        toks.append(STRAT0 + strategy)
+    return toks
+
+
+# ---------------------------------------------------------------------------
+# Corpus sampling (training) and benchmark suites (evaluation).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SuiteSpec:
+    name: str
+    n_problems: int
+    seed: int
+    family_mix: list[float]      # sampling weights over the 4 families
+    max_operand: int
+    ops_lo: int
+    ops_hi: int
+
+
+SUITES = [
+    SuiteSpec("synth-math500", 500, 0x4D415448, [0.40, 0.30, 0.20, 0.10], 30, 2, 3),
+    SuiteSpec("synth-livemath", 138, 0x4C495645, [0.25, 0.25, 0.25, 0.25], 50, 2, 4),
+    SuiteSpec("synth-aime", 30, 0x41494D45, [0.10, 0.25, 0.35, 0.30], 99, 3, 4),
+]
+
+
+def gen_suite(spec: SuiteSpec) -> list[Problem]:
+    rng = SplitMix64(spec.seed)
+    out = []
+    while len(out) < spec.n_problems:
+        fam = rng.choice_weighted(spec.family_mix)
+        n_ops = rng.range(spec.ops_lo, spec.ops_hi)
+        p = gen_problem(rng, fam, spec.max_operand, n_ops)
+        # keep answers in a renderable (non-negative, small-ish) range
+        if 0 <= p.answer <= 999 and len(prompt_tokens(p, 0)) <= 40:
+            out.append(p)
+    return out
+
+
+def sample_training_example(rng: SplitMix64, max_len: int):
+    """One (tokens, length) training row; strategy sampled ∝ aptitude."""
+    fam = rng.below(4)
+    max_operand = (20, 40, 60, 99)[rng.below(4)]
+    n_ops = rng.range(2, 4)
+    p = gen_problem(rng, fam, max_operand, n_ops)
+    if not (0 <= p.answer <= 999):
+        return None
+    weights = [strategy_aptitude(s, fam) ** 2 for s in range(NUM_STRATEGIES)]
+    strat = rng.choice_weighted(weights)
+    style = style_for_strategy(strat, rng)
+    steps, ans = decompose(p.expr, style, rng)
+    toks, n = render_sequence(p, strat, steps, ans, max_len)
+    if n >= max_len:  # truncated: drop, keep corpus clean
+        return None
+    return toks, n
+
+
+def suite_to_json(spec: SuiteSpec) -> dict:
+    problems = gen_suite(spec)
+    return {
+        "name": spec.name,
+        "seed": spec.seed,
+        "problems": [
+            {
+                "family": p.family,
+                "tokens": p.tokens(),
+                "answer": p.answer,
+                "difficulty": p.difficulty,
+            }
+            for p in problems
+        ],
+    }
+
+
+def detokenize(toks: Iterable[int]) -> str:
+    return "".join(TOKEN_NAMES.get(t, "?") for t in toks if t != PAD)
+
+
+if __name__ == "__main__":
+    rng = SplitMix64(7)
+    for _ in range(4):
+        ex = None
+        while ex is None:
+            ex = sample_training_example(rng, 160)
+        toks, n = ex
+        print(n, detokenize(toks))
+    for spec in SUITES:
+        s = gen_suite(spec)
+        print(spec.name, len(s), "answers", [p.answer for p in s[:8]])

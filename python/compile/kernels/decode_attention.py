@@ -1,0 +1,99 @@
+"""Pallas decode attention — the serving hot-spot (one token vs KV cache).
+
+Flash-decoding structure: grid = (B*H,); each program owns one (batch,
+head) pair, holds the single query vector in VMEM and streams the K/V
+cache row through BLOCK_K-sized tiles with an online-softmax carry, so
+every cache byte is read exactly once (decode is bandwidth-bound — one
+pass over the cache is the roofline optimum; see DESIGN.md §8).
+
+Positions >= length are masked: the KV cache is a fixed S_MAX ring of
+which only `length` entries are valid.
+
+Must run with interpret=True on CPU (Mosaic custom-calls are TPU-only).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, *, block_k: int,
+                   seq_len: int, scale: float):
+    q = q_ref[0].astype(jnp.float32) * scale             # [d]
+    d = q.shape[-1]
+    length = len_ref[0]
+
+    def body(ki, carry):
+        acc, m_prev, l_prev = carry
+        k_tile = pl.load(
+            k_ref, (0, pl.dslice(ki * block_k, block_k), slice(None))
+        ).astype(jnp.float32)                            # [block_k, d]
+        v_tile = pl.load(
+            v_ref, (0, pl.dslice(ki * block_k, block_k), slice(None))
+        ).astype(jnp.float32)
+        s = k_tile @ q                                   # [block_k]
+        k_pos = ki * block_k + jax.lax.iota(jnp.int32, block_k)
+        s = jnp.where(k_pos < length, s, NEG_INF)
+
+        m_cur = jnp.max(s)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_new = l_prev * alpha + jnp.sum(p)
+        acc = acc * alpha + p @ v_tile
+        return acc, m_new, l_new
+
+    num_k = seq_len // block_k
+    acc0 = jnp.zeros((d,), jnp.float32)
+    acc, m, l = jax.lax.fori_loop(
+        0, num_k, body, (acc0, jnp.float32(NEG_INF), jnp.float32(0.0))
+    )
+    safe_l = jnp.where(l > 0.0, l, 1.0)
+    o_ref[0] = (acc / safe_l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_k", "interpret")
+)
+def decode_attention(q, k, v, lengths, *, block_k: int = 32,
+                     interpret: bool = True):
+    """Single-token attention against a KV cache.
+
+    q: [B, H, D]; k, v: [B, H, S, D]; lengths: [B] int32 (valid entries,
+    including the current token's freshly-written k/v). Returns [B, H, D]
+    with q's dtype.
+    """
+    b, h, d = q.shape
+    s = k.shape[2]
+    assert k.shape == (b, h, s, d) and v.shape == (b, h, s, d)
+    assert s % block_k == 0, (s, block_k)
+    scale = 1.0 / (d ** 0.5)
+
+    qr = q.reshape(b * h, d)
+    kr = k.reshape(b * h, s, d)
+    vr = v.reshape(b * h, s, d)
+    len_r = jnp.repeat(lengths.astype(jnp.int32), h)
+
+    kernel = functools.partial(
+        _decode_kernel, block_k=block_k, seq_len=s, scale=scale
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda bh: (bh,)),
+            pl.BlockSpec((1, d), lambda bh: (bh, 0)),
+            pl.BlockSpec((1, s, d), lambda bh: (bh, 0, 0)),
+            pl.BlockSpec((1, s, d), lambda bh: (bh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda bh: (bh, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, d), q.dtype),
+        interpret=interpret,
+    )(len_r, qr, kr, vr)
+    return out.reshape(b, h, d)

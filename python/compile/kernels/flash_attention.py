@@ -1,0 +1,118 @@
+"""Pallas flash attention (causal, length-masked) — the prefill hot-spot.
+
+Design (TPU mapping, see DESIGN.md §Hardware-Adaptation):
+  * grid = (B*H, S // BLOCK_Q): one program per (batch·head, query tile).
+  * The query tile (BLOCK_Q × D) is pinned in VMEM; K/V stream through in
+    BLOCK_K × D tiles (the `BlockSpec` below hands the kernel the whole
+    (S × D) row and the kernel walks it tile-by-tile with `pl.dslice` — on
+    TPU this is the HBM→VMEM schedule the paper's GPU baselines express
+    with threadblocks / shared memory).
+  * Online softmax: running (m, l, acc) state so each K/V tile is read
+    exactly once; both matmuls are MXU-shaped (BLOCK×D · D×BLOCK).
+  * Causal tiles beyond the query tile are skipped entirely (upper bound
+    on the tile loop), halving prefill FLOPs.
+
+Must run with interpret=True on CPU: real-TPU lowering emits a Mosaic
+custom-call that the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, *, block_q: int,
+                  block_k: int, seq_len: int, scale: float, causal: bool):
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32) * scale            # [block_q, d]
+    d = q.shape[-1]
+    length = len_ref[0]                                  # valid key count
+
+    q_pos = qi * block_q + jax.lax.iota(jnp.int32, block_q)
+
+    # Causal programs only need key tiles up to the end of their own query
+    # tile; non-causal (scoring) programs walk the full row.
+    if causal:
+        num_k = (qi + 1) * block_q // block_k
+    else:
+        num_k = seq_len // block_k
+
+    def body(ki, carry):
+        acc, m_prev, l_prev = carry
+        k_tile = pl.load(
+            k_ref, (0, pl.dslice(ki * block_k, block_k), slice(None))
+        ).astype(jnp.float32)                            # [block_k, d]
+        v_tile = pl.load(
+            v_ref, (0, pl.dslice(ki * block_k, block_k), slice(None))
+        ).astype(jnp.float32)
+        s = q @ k_tile.T                                 # [block_q, block_k]
+        k_pos = ki * block_k + jax.lax.iota(jnp.int32, block_k)
+        mask = k_pos[None, :] < length
+        if causal:
+            mask = mask & (k_pos[None, :] <= q_pos[:, None])
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)                  # rescale old state
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + p @ v_tile
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((block_q, d), jnp.float32)
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc, m, l = jax.lax.fori_loop(0, num_k, body, (acc0, m0, l0))
+    # Fully-masked rows (query position >= length) have l == 0; emit zeros.
+    safe_l = jnp.where(l > 0.0, l, 1.0)
+    o_ref[0] = (acc / safe_l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "block_q", "block_k", "interpret"),
+)
+def flash_attention(q, k, v, lengths=None, *, causal: bool = True,
+                    block_q: int = 32, block_k: int = 32,
+                    interpret: bool = True):
+    """Multi-head attention via a Pallas flash kernel.
+
+    q, k, v: [B, H, S, D]; lengths: [B] int32 (defaults to S). Returns
+    [B, H, S, D] with the dtype of q.
+    """
+    b, h, s, d = q.shape
+    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
+    if lengths is None:
+        lengths = jnp.full((b,), s, jnp.int32)
+    scale = 1.0 / (d ** 0.5)
+
+    qr = q.reshape(b * h, s, d)
+    kr = k.reshape(b * h, s, d)
+    vr = v.reshape(b * h, s, d)
+    len_r = jnp.repeat(lengths.astype(jnp.int32), h)     # [B*H]
+
+    kernel = functools.partial(
+        _flash_kernel, block_q=block_q, block_k=block_k, seq_len=s,
+        scale=scale, causal=causal,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, s // block_q),
+        in_specs=[
+            pl.BlockSpec((1,), lambda bh, qi: (bh,)),          # lengths
+            pl.BlockSpec((1, block_q, d), lambda bh, qi: (bh, qi, 0)),
+            pl.BlockSpec((1, s, d), lambda bh, qi: (bh, 0, 0)),  # K row
+            pl.BlockSpec((1, s, d), lambda bh, qi: (bh, 0, 0)),  # V row
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda bh, qi: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+        interpret=interpret,
+    )(len_r, qr, kr, vr)
+    return out.reshape(b, h, s, d)

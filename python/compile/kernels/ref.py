@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness references: `python/tests/test_kernels.py`
+sweeps shapes/dtypes with hypothesis and asserts the Pallas kernels (run
+under interpret=True) match these to tight tolerances. The L2 model also
+uses these implementations for *training* (faster than interpret-mode
+Pallas); the exported inference artifacts use the Pallas kernels, and a
+dedicated test asserts the two lowerings agree.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True, lengths=None, scale=None):
+    """Reference multi-head attention.
+
+    q, k, v: [B, H, S, D]. `lengths`: optional [B] int32 — positions >= length
+    are masked out of the keys (padding). Returns [B, H, S, D] in f32.
+    """
+    b, h, s, d = q.shape
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", qf, kf) * scale
+    if causal:
+        qi = jnp.arange(s)[:, None]
+        ki = jnp.arange(s)[None, :]
+        logits = jnp.where(ki <= qi, logits, NEG_INF)
+    if lengths is not None:
+        ki = jnp.arange(s)[None, None, None, :]
+        logits = jnp.where(ki < lengths[:, None, None, None], logits, NEG_INF)
+    p = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vf)
+
+
+def decode_attention_ref(q, k, v, lengths, *, scale=None):
+    """Reference single-token decode attention against a KV cache.
+
+    q: [B, H, D] (the current token's query);
+    k, v: [B, H, S, D] caches; lengths: [B] int32 — valid cache length
+    (the current token's k/v must already be written, so the mask is
+    `position < length`). Returns [B, H, D] in f32.
+    """
+    b, h, s, d = k.shape
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    logits = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    ki = jnp.arange(s)[None, None, :]
+    logits = jnp.where(ki < lengths[:, None, None], logits, NEG_INF)
+    p = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhk,bhkd->bhd", p, v.astype(jnp.float32))

@@ -1,0 +1,338 @@
+"""L2 — decoder-only transformer for the SSR draft/target pair.
+
+Stand-ins for the paper's QwQ-32B (target) and R1-Distill-1.5B (draft):
+same architecture family, trained on the synthetic reasoning corpus
+(`corpus.py`). The serving entry points exported by `aot.py` are:
+
+  prefill(params, tokens[B,S], lengths[B])
+      -> (logits[B,S,V], k[L,B,H,S,D], v[L,B,H,S,D])
+  span(params, k, v, pos[B], cur[B], temp, seed)
+      -> (toks[B,T], ntake[B], done[B], pos_out[B], k', v')
+      speculative *step* generation: a lax.scan decodes up to T_SPAN
+      tokens inside one XLA execution, stopping at a step delimiter
+      (`;` or `.`) — one host<->device round-trip per reasoning STEP,
+      which is the L2 half of the paper's step-level granularity.
+  ingest(params, k, v, pos[B], toks[B,T], lens[B])
+      -> (sum_lp[B], cnt[B], last_logits[B,V], pos_out[B], k', v')
+      teacher-forcing: extends the cache with given tokens and returns
+      the summed next-token log-prob — used by the target model both to
+      SCORE a drafted step (paper Eq. 2) and to sync caches after a
+      rewrite.
+
+Cache contract (mirrored by rust/src/model/handle.rs):
+  * `pos[b]` = number of valid cache entries for path b.
+  * span caches `cur` plus all sampled tokens EXCEPT the final one
+    (the final sampled token — usually the delimiter — must be fed as
+    `cur`/first ingest token of the next call).
+  * ingest caches every token in `toks[:len]`.
+
+Attention is the Pallas kernels (interpret=True) in export mode and the
+pure-jnp refs in training mode; `python/tests/test_model.py` asserts the
+two paths agree.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus
+from .kernels.decode_attention import decode_attention
+from .kernels.flash_attention import flash_attention
+from .kernels.ref import attention_ref, decode_attention_ref
+
+T_SPAN = 16  # max tokens drafted/ingested per reasoning step
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    vocab: int = corpus.VOCAB_SIZE
+    s_max: int = 128
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def d_ff(self) -> int:
+        return 4 * self.d_model
+
+    @property
+    def n_params(self) -> int:
+        return sum(int(np.prod(s)) for _, s in param_shapes(self))
+
+    def flops_per_token(self) -> int:
+        """Dense fwd FLOPs/token ≈ 2 * matmul params (paper's F_t / F_d)."""
+        per_layer = 2 * (4 * self.d_model * self.d_model
+                         + 2 * self.d_model * self.d_ff)
+        return self.n_layers * per_layer + 2 * self.d_model * self.vocab
+
+
+TARGET_CONFIG = ModelConfig("target", n_layers=4, d_model=128, n_heads=4)
+DRAFT_CONFIG = ModelConfig("draft", n_layers=2, d_model=64, n_heads=2)
+
+
+# ---------------------------------------------------------------------------
+# Parameters — explicit canonical ordering (the artifact manifest and the
+# rust weight loader both rely on this exact order).
+# ---------------------------------------------------------------------------
+
+def param_shapes(cfg: ModelConfig) -> list[tuple[str, tuple[int, ...]]]:
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    shapes: list[tuple[str, tuple[int, ...]]] = [("embed", (v, d))]
+    for i in range(cfg.n_layers):
+        p = f"blocks.{i}."
+        shapes += [
+            (p + "ln1_scale", (d,)), (p + "ln1_bias", (d,)),
+            (p + "wq", (d, d)), (p + "wk", (d, d)), (p + "wv", (d, d)),
+            (p + "wo", (d, d)),
+            (p + "ln2_scale", (d,)), (p + "ln2_bias", (d,)),
+            (p + "w1", (d, f)), (p + "b1", (f,)),
+            (p + "w2", (f, d)), (p + "b2", (d,)),
+        ]
+    shapes += [("ln_f_scale", (d,)), ("ln_f_bias", (d,)), ("head", (d, v))]
+    return shapes
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    params = {}
+    for name, shape in param_shapes(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith("_scale"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name.endswith(("_bias", "b1", "b2")):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            fan_in = shape[0]
+            params[name] = (jax.random.normal(sub, shape, jnp.float32)
+                            * (1.0 / np.sqrt(fan_in)))
+    return params
+
+
+def flatten_params(cfg: ModelConfig, params: dict) -> list[jnp.ndarray]:
+    return [params[name] for name, _ in param_shapes(cfg)]
+
+
+def unflatten_params(cfg: ModelConfig, leaves) -> dict:
+    return {name: leaf for (name, _), leaf in zip(param_shapes(cfg), leaves)}
+
+
+# ---------------------------------------------------------------------------
+# Building blocks.
+# ---------------------------------------------------------------------------
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def sinusoid_table(s_max: int, d: int) -> jnp.ndarray:
+    """Fixed sinusoidal position encodings (no learned rows: positions
+    beyond the training length behave sanely at serving time)."""
+    pos = np.arange(s_max)[:, None]
+    i = np.arange(d // 2)[None, :]
+    ang = pos / np.power(10000.0, 2 * i / d)
+    table = np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+    return jnp.asarray(table, jnp.float32)
+
+
+def _mlp(params, prefix, x):
+    h = jax.nn.gelu(x @ params[prefix + "w1"] + params[prefix + "b1"])
+    return h @ params[prefix + "w2"] + params[prefix + "b2"]
+
+
+# ---------------------------------------------------------------------------
+# Prefill (full-sequence forward, builds the KV cache).
+# ---------------------------------------------------------------------------
+
+def prefill(cfg: ModelConfig, params: dict, tokens, lengths, *,
+            use_pallas: bool = True):
+    """tokens [B,S] int32, lengths [B] int32 ->
+    (logits [B,S,V] f32, k [L,B,H,S_MAX,D], v [L,B,H,S_MAX,D])."""
+    b, s = tokens.shape
+    h_, dh = cfg.n_heads, cfg.d_head
+    x = params["embed"][tokens] + sinusoid_table(cfg.s_max, cfg.d_model)[:s]
+    ks, vs = [], []
+    for i in range(cfg.n_layers):
+        p = f"blocks.{i}."
+        hn = layer_norm(x, params[p + "ln1_scale"], params[p + "ln1_bias"])
+        q = (hn @ params[p + "wq"]).reshape(b, s, h_, dh).transpose(0, 2, 1, 3)
+        k = (hn @ params[p + "wk"]).reshape(b, s, h_, dh).transpose(0, 2, 1, 3)
+        v = (hn @ params[p + "wv"]).reshape(b, s, h_, dh).transpose(0, 2, 1, 3)
+        if use_pallas:
+            att = flash_attention(q, k, v, lengths, causal=True)
+        else:
+            att = attention_ref(q, k, v, causal=True, lengths=lengths)
+        att = att.astype(x.dtype).transpose(0, 2, 1, 3).reshape(b, s, cfg.d_model)
+        x = x + att @ params[p + "wo"]
+        x = x + _mlp(params, p, layer_norm(
+            x, params[p + "ln2_scale"], params[p + "ln2_bias"]))
+        ks.append(k)
+        vs.append(v)
+    x = layer_norm(x, params["ln_f_scale"], params["ln_f_bias"])
+    logits = x @ params["head"]
+    k_cache = jnp.stack(ks)  # [L,B,H,S,D]
+    v_cache = jnp.stack(vs)
+    if s < cfg.s_max:
+        pad = [(0, 0), (0, 0), (0, 0), (0, cfg.s_max - s), (0, 0)]
+        k_cache = jnp.pad(k_cache, pad)
+        v_cache = jnp.pad(v_cache, pad)
+    return logits, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# Single-token decode (shared by span and ingest scans).
+# ---------------------------------------------------------------------------
+
+def _write_kv(cache_l, new_bhd, pos):
+    """cache_l [B,H,S,D], new [B,H,D], pos [B] -> per-path write at pos."""
+    def one(c, n, p):  # c [H,S,D], n [H,D], p scalar
+        return jax.lax.dynamic_update_slice(c, n[:, None, :], (0, p, 0))
+    return jax.vmap(one)(cache_l, new_bhd, pos)
+
+
+def decode_step(cfg: ModelConfig, params: dict, k_cache, v_cache, pos, tok, *,
+                use_pallas: bool = True):
+    """One-token forward. Writes tok's k/v at `pos`, attends over pos+1
+    entries. Returns (logits [B,V], k_cache', v_cache')."""
+    b = tok.shape[0]
+    h_, dh = cfg.n_heads, cfg.d_head
+    table = sinusoid_table(cfg.s_max, cfg.d_model)
+    x = params["embed"][tok] + table[pos]
+    lengths = pos + 1
+    for i in range(cfg.n_layers):
+        p = f"blocks.{i}."
+        hn = layer_norm(x, params[p + "ln1_scale"], params[p + "ln1_bias"])
+        q = (hn @ params[p + "wq"]).reshape(b, h_, dh)
+        k = (hn @ params[p + "wk"]).reshape(b, h_, dh)
+        v = (hn @ params[p + "wv"]).reshape(b, h_, dh)
+        k_cache = k_cache.at[i].set(_write_kv(k_cache[i], k, pos))
+        v_cache = v_cache.at[i].set(_write_kv(v_cache[i], v, pos))
+        if use_pallas:
+            att = decode_attention(q, k_cache[i], v_cache[i], lengths)
+        else:
+            att = decode_attention_ref(q, k_cache[i], v_cache[i], lengths)
+        x = x + att.astype(x.dtype).reshape(b, cfg.d_model) @ params[p + "wo"]
+        x = x + _mlp(params, p, layer_norm(
+            x, params[p + "ln2_scale"], params[p + "ln2_bias"]))
+    x = layer_norm(x, params["ln_f_scale"], params["ln_f_bias"])
+    return x @ params["head"], k_cache, v_cache
+
+
+def _sample(logits, temp, key):
+    """Greedy when temp<=0 else temperature sampling; [B,V] -> [B] i32.
+
+    PAD/BOS are masked out: a sampled PAD would corrupt the span's
+    token-count contract (PAD marks inactive emit slots).
+    """
+    mask = jnp.zeros(logits.shape[-1]).at[corpus.PAD].set(-1e30)
+    mask = mask.at[corpus.BOS].set(-1e30)
+    logits = logits + mask
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    t = jnp.maximum(temp, 1e-3)
+    sampled = jax.random.categorical(key, logits / t, axis=-1).astype(jnp.int32)
+    return jnp.where(temp <= 0.0, greedy, sampled)
+
+
+def span(cfg: ModelConfig, params: dict, k_cache, v_cache, pos, cur, temp,
+         seed, *, use_pallas: bool = True, t_span: int = T_SPAN):
+    """Draft one reasoning step (up to t_span tokens) inside one XLA call.
+
+    Returns (toks [B,T] i32 — sampled tokens, PAD after the delimiter;
+    ntake [B] i32 — sampled count incl. delimiter; done [B] i32;
+    pos_out [B] i32; k', v').
+    """
+    key0 = jax.random.PRNGKey(seed)
+    b = cur.shape[0]
+    delims = jnp.asarray(corpus.STEP_DELIMS, jnp.int32)
+
+    def body(carry, i):
+        k_c, v_c, pos, cur, done = carry
+        logits, k_c, v_c = decode_step(cfg, params, k_c, v_c, pos, cur,
+                                       use_pallas=use_pallas)
+        nxt = _sample(logits, temp, jax.random.fold_in(key0, i))
+        active = jnp.logical_not(done)
+        emit = jnp.where(active, nxt, corpus.PAD)
+        is_delim = jnp.isin(nxt, delims)
+        done = jnp.logical_or(done, jnp.logical_and(active, is_delim))
+        pos = jnp.where(active, pos + 1, pos)
+        cur = jnp.where(active, nxt, cur)
+        return (k_c, v_c, pos, cur, done), emit
+
+    done0 = jnp.zeros((b,), bool)
+    (k_cache, v_cache, pos_out, _, done), emits = jax.lax.scan(
+        body, (k_cache, v_cache, pos, cur, done0), jnp.arange(t_span))
+    toks = emits.T  # [B, T]
+    ntake = jnp.sum(toks != corpus.PAD, axis=-1).astype(jnp.int32)
+    return (toks.astype(jnp.int32), ntake, done.astype(jnp.int32),
+            pos_out.astype(jnp.int32), k_cache, v_cache)
+
+
+def ingest(cfg: ModelConfig, params: dict, k_cache, v_cache, pos, toks, lens,
+           *, use_pallas: bool = True):
+    """Teacher-force `toks[:, :lens]` into the cache.
+
+    Returns (sum_lp [B] f32 — sum over i>=1 of log P(toks[i] | ...);
+    cnt [B] i32 — number of scored predictions (lens-1 clamped >= 0);
+    last_logits [B,V] — logits after the final ingested token;
+    pos_out [B]; k', v').
+    """
+    b = toks.shape[0]
+
+    def body(carry, i):
+        k_c, v_c, pos, sum_lp, cnt, last_logits = carry
+        cur = toks[:, i]
+        active = i < lens
+        logits, k_c2, v_c2 = decode_step(cfg, params, k_c, v_c, pos, cur,
+                                         use_pallas=use_pallas)
+        logprobs = jax.nn.log_softmax(logits, axis=-1)
+        nxt_active = (i + 1) < lens
+        nxt_tok = toks[:, jnp.minimum(i + 1, toks.shape[1] - 1)]
+        lp = jnp.take_along_axis(logprobs, nxt_tok[:, None], axis=-1)[:, 0]
+        sum_lp = sum_lp + jnp.where(nxt_active, lp, 0.0)
+        cnt = cnt + nxt_active.astype(jnp.int32)
+        new_pos = jnp.where(active, pos + 1, pos)
+        last_logits = jnp.where(active[:, None], logits, last_logits)
+        # inactive lanes must not mutate the cache state they already hold
+        k_c = jnp.where(active[None, :, None, None, None], k_c2, k_c)
+        v_c = jnp.where(active[None, :, None, None, None], v_c2, v_c)
+        return (k_c, v_c, new_pos, sum_lp, cnt, last_logits), None
+
+    sum0 = jnp.zeros((b,), jnp.float32)
+    cnt0 = jnp.zeros((b,), jnp.int32)
+    ll0 = jnp.zeros((b, cfg.vocab), jnp.float32)
+    (k_cache, v_cache, pos_out, sum_lp, cnt, last_logits), _ = jax.lax.scan(
+        body, (k_cache, v_cache, pos, sum0, cnt0, ll0),
+        jnp.arange(toks.shape[1]))
+    return (sum_lp, cnt, last_logits, pos_out.astype(jnp.int32),
+            k_cache, v_cache)
+
+
+# ---------------------------------------------------------------------------
+# Training-path loss (teacher forcing over full sequences, ref attention).
+# ---------------------------------------------------------------------------
+
+def loss_fn(cfg: ModelConfig, params: dict, tokens, lengths):
+    """Mean next-token cross-entropy over valid positions."""
+    logits, _, _ = prefill(cfg, params, tokens, lengths, use_pallas=False)
+    targets = tokens[:, 1:]
+    logprobs = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    lp = jnp.take_along_axis(logprobs, targets[..., None], axis=-1)[..., 0]
+    mask = (jnp.arange(tokens.shape[1] - 1)[None, :] + 1
+            < lengths[:, None]).astype(jnp.float32)
+    return -(lp * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def kv_cache_bytes(cfg: ModelConfig, batch: int) -> int:
+    """Bytes held by one f32 KV cache pair at batch `batch` (for §Perf)."""
+    return (2 * cfg.n_layers * batch * cfg.n_heads * cfg.s_max
+            * cfg.d_head * 4)

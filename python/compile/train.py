@@ -1,0 +1,271 @@
+"""Train the draft/target transformer pair on the synthetic corpus.
+
+Build-time only (invoked by `make artifacts`); produces
+`artifacts/{draft,target}.weights.bin` + `.weights.json` consumed by
+`aot.py` (which bakes nothing — weights stay runtime inputs) and by the
+rust runtime. A final held-out evaluation reports the exact-match answer
+accuracy of both models, giving the real capability gap that the SSD
+acceptance rate is built on (recorded in EXPERIMENTS.md).
+
+Usage: python -m compile.train [--out DIR] [--steps-target N]
+       [--steps-draft N] [--batch B] [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus, model
+
+TRAIN_SEQ = 80  # covers ~all corpus rows; serving s_max is 128
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline.
+# ---------------------------------------------------------------------------
+
+def batch_iter(seed: int, batch: int):
+    rng = corpus.SplitMix64(seed)
+    while True:
+        rows, lens = [], []
+        while len(rows) < batch:
+            ex = corpus.sample_training_example(rng, TRAIN_SEQ)
+            if ex is None:
+                continue
+            toks, n = ex
+            rows.append(toks)
+            lens.append(n)
+        yield (jnp.asarray(np.array(rows, np.int32)),
+               jnp.asarray(np.array(lens, np.int32)))
+
+
+# ---------------------------------------------------------------------------
+# Adam (hand-rolled: optax is not in the build environment).
+# ---------------------------------------------------------------------------
+
+def adam_init(params):
+    zeros = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": zeros, "v": {k: jnp.zeros_like(v) for k, v in params.items()},
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = {k: b1 * state["m"][k] + (1 - b1) * grads[k] for k in params}
+    v = {k: b2 * state["v"][k] + (1 - b2) * grads[k] ** 2 for k in params}
+    tf = t.astype(jnp.float32)
+    corr = jnp.sqrt(1 - b2 ** tf) / (1 - b1 ** tf)
+    new = {k: params[k] - lr * corr * m[k] / (jnp.sqrt(v[k]) + eps)
+           for k in params}
+    return new, {"m": m, "v": v, "t": t}
+
+
+def _clip_grads(grads, max_norm=1.0):
+    norm = jnp.sqrt(sum(jnp.sum(g ** 2) for g in grads.values()))
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return {k: g * scale for k, g in grads.items()}
+
+
+def train_model(cfg: model.ModelConfig, steps: int, batch: int, lr: float,
+                seed: int, log_every: int = 100, warmup: int = 50):
+    params = model.init_params(cfg, jax.random.PRNGKey(seed))
+    opt = adam_init(params)
+
+    @jax.jit
+    def update(params, opt, tokens, lengths, lr_t):
+        loss, grads = jax.value_and_grad(
+            lambda p: model.loss_fn(cfg, p, tokens, lengths))(params)
+        params, opt = adam_update(params, _clip_grads(grads), opt, lr_t)
+        return params, opt, loss
+
+    it = batch_iter(seed * 7919 + 13, batch)
+    t0 = time.time()
+    for step in range(1, steps + 1):
+        # linear warmup then cosine decay to 10% of peak
+        if step <= warmup:
+            lr_t = lr * step / warmup
+        else:
+            import math
+            frac = (step - warmup) / max(1, steps - warmup)
+            lr_t = lr * (0.1 + 0.9 * 0.5 * (1 + math.cos(math.pi * frac)))
+        tokens, lengths = next(it)
+        params, opt, loss = update(params, opt, tokens, lengths,
+                                   jnp.float32(lr_t))
+        if step % log_every == 0 or step == 1:
+            print(f"[{cfg.name}] step {step:5d} loss {float(loss):.4f} "
+                  f"({time.time() - t0:.0f}s)", flush=True)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Held-out evaluation: greedy decode, exact-match answers.
+# ---------------------------------------------------------------------------
+
+def generate_greedy(cfg, params, prompts: list[list[int]], max_new: int = 90):
+    """Batched greedy generation until EOS; returns list of token lists."""
+    b = len(prompts)
+    s = cfg.s_max
+    toks = np.zeros((b, s), np.int32)
+    lens = np.zeros((b,), np.int32)
+    for i, p in enumerate(prompts):
+        toks[i, : len(p)] = p
+        lens[i] = len(p)
+    toks_j = jnp.asarray(toks)
+    lens_j = jnp.asarray(lens)
+    logits, k, v = jax.jit(
+        lambda pr, t, l: model.prefill(cfg, pr, t, l, use_pallas=False)
+    )(params, toks_j, lens_j)
+    last = jnp.take_along_axis(
+        logits, (lens_j - 1)[:, None, None], axis=1)[:, 0]
+    cur = jnp.argmax(last, axis=-1).astype(jnp.int32)
+
+    @jax.jit
+    def gen(params, k, v, pos, cur):
+        def body(carry, i):
+            k, v, pos, cur, done = carry
+            lg, k, v = model.decode_step(cfg, params, k, v, pos, cur,
+                                         use_pallas=False)
+            nxt = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+            active = jnp.logical_not(done)
+            emit = jnp.where(active, cur, corpus.PAD)
+            done = done | (cur == corpus.EOS) | (pos + 1 >= cfg.s_max - 1)
+            pos = jnp.where(active, pos + 1, pos)
+            cur = jnp.where(active, nxt, cur)
+            return (k, v, pos, cur, done), emit
+
+        done0 = jnp.zeros(cur.shape, bool)
+        _, emits = jax.lax.scan(body, (k, v, pos, cur, done0),
+                                jnp.arange(max_new))
+        return emits.T
+
+    out = np.asarray(gen(params, k, v, lens_j, cur))
+    return [[int(t) for t in row if t != corpus.PAD] for row in out]
+
+
+def parse_answer(tokens: list[int]) -> int | None:
+    """Extract the answer from `... F <digits> .`"""
+    try:
+        fi = len(tokens) - 1 - tokens[::-1].index(corpus.FIN)
+    except ValueError:
+        return None
+    digits = []
+    for t in tokens[fi + 1:]:
+        if corpus.DIGIT0 <= t < corpus.DIGIT0 + 10:
+            digits.append(t - corpus.DIGIT0)
+        else:
+            break
+    if not digits:
+        return None
+    return int("".join(map(str, digits)))
+
+
+def evaluate(cfg, params, n_problems: int = 32, seed: int = 99) -> float:
+    rng = corpus.SplitMix64(seed)
+    problems, strategies = [], []
+    while len(problems) < n_problems:
+        fam = rng.below(4)
+        p = corpus.gen_problem(rng, fam, 40, rng.range(2, 3))
+        if not (0 <= p.answer <= 999):
+            continue
+        weights = [corpus.strategy_aptitude(s, fam) ** 2
+                   for s in range(corpus.NUM_STRATEGIES)]
+        problems.append(p)
+        strategies.append(rng.choice_weighted(weights))
+    correct = 0
+    bs = 8
+    for i in range(0, len(problems), bs):
+        chunk = problems[i:i + bs]
+        prompts = [corpus.prompt_tokens(p, s)
+                   for p, s in zip(chunk, strategies[i:i + bs])]
+        outs = generate_greedy(cfg, params, prompts)
+        for p, o in zip(chunk, outs):
+            if parse_answer(o) == p.answer:
+                correct += 1
+    return correct / len(problems)
+
+
+# ---------------------------------------------------------------------------
+# Weight export.
+# ---------------------------------------------------------------------------
+
+def save_weights(cfg: model.ModelConfig, params: dict, out_dir: str):
+    leaves = model.flatten_params(cfg, params)
+    manifest, offset = [], 0
+    flat = []
+    for (name, shape), leaf in zip(model.param_shapes(cfg), leaves):
+        arr = np.asarray(leaf, np.float32).reshape(-1)
+        manifest.append({"name": name, "shape": list(shape),
+                         "offset": offset, "size": int(arr.size)})
+        offset += int(arr.size)
+        flat.append(arr)
+    blob = np.concatenate(flat)
+    with open(os.path.join(out_dir, f"{cfg.name}.weights.bin"), "wb") as f:
+        f.write(blob.astype("<f4").tobytes())
+    with open(os.path.join(out_dir, f"{cfg.name}.weights.json"), "w") as f:
+        json.dump({"model": cfg.name, "n_elems": int(offset),
+                   "params": manifest}, f, indent=1)
+    print(f"[{cfg.name}] wrote {offset} f32 weights")
+
+
+def load_weights(cfg: model.ModelConfig, out_dir: str) -> dict:
+    with open(os.path.join(out_dir, f"{cfg.name}.weights.json")) as f:
+        manifest = json.load(f)
+    blob = np.fromfile(os.path.join(out_dir, f"{cfg.name}.weights.bin"),
+                       dtype="<f4")
+    params = {}
+    for ent in manifest["params"]:
+        arr = blob[ent["offset"]: ent["offset"] + ent["size"]]
+        params[ent["name"]] = jnp.asarray(arr.reshape(ent["shape"]))
+    return params
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps-target", type=int, default=4000)
+    ap.add_argument("--steps-draft", type=int, default=1500)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny run for smoke testing")
+    ap.add_argument("--only", choices=["draft", "target"], default=None,
+                    help="train just one of the two models")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    if args.quick:
+        args.steps_target, args.steps_draft = 30, 20
+
+    results = {}
+    for cfg, steps, seed in ((model.TARGET_CONFIG, args.steps_target, 1),
+                             (model.DRAFT_CONFIG, args.steps_draft, 2)):
+        if args.only and cfg.name != args.only:
+            continue
+        print(f"=== training {cfg.name}: {cfg.n_params} params, "
+              f"{steps} steps ===", flush=True)
+        params = train_model(cfg, steps, args.batch, args.lr, seed)
+        acc = evaluate(cfg, params)
+        print(f"[{cfg.name}] held-out exact-match accuracy: {acc:.3f}",
+              flush=True)
+        save_weights(cfg, params, args.out)
+        results[cfg.name] = {"accuracy": acc, "steps": steps,
+                             "params": cfg.n_params}
+    tj = os.path.join(args.out, "training.json")
+    if os.path.exists(tj):
+        with open(tj) as f:
+            prev = json.load(f)
+        prev.update(results)
+        results = prev
+    with open(tj, "w") as f:
+        json.dump(results, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,122 @@
+"""Corpus substrate invariants: every generated reasoning trace is
+arithmetically correct, every suite is deterministic, and the grammar
+round-trips."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import corpus
+
+settings.register_profile("corpus", max_examples=200, deadline=None)
+settings.load_profile("corpus")
+
+
+def test_vocab_ids_disjoint():
+    ids = list(corpus.TOKEN_NAMES)
+    assert len(ids) == len(set(ids))
+    assert max(ids) < corpus.VOCAB_SIZE
+    assert corpus.STRAT0 + corpus.NUM_STRATEGIES <= corpus.VOCAB_SIZE
+
+
+@given(st.integers(0, 2**32 - 1), st.integers(0, 3))
+def test_problem_answers_match_evaluator(seed, family):
+    rng = corpus.SplitMix64(seed)
+    p = corpus.gen_problem(rng, family, 50, rng.range(2, 4))
+    assert p.answer == corpus.ev(p.expr)
+    assert p.family == family
+
+
+@given(st.integers(0, 2**32 - 1), st.integers(0, 3),
+       st.integers(0, corpus.NUM_STRATEGIES - 1))
+def test_every_decomposition_reaches_the_answer(seed, family, strategy):
+    """Whatever style decomposes the expression, the final value equals
+    the exact evaluator's answer and every step is itself correct."""
+    rng = corpus.SplitMix64(seed)
+    p = corpus.gen_problem(rng, family, 40, rng.range(2, 4))
+    style = corpus.style_for_strategy(strategy, rng)
+    steps, answer = corpus.decompose(p.expr, style, rng)
+    assert answer == p.answer
+    assert len(steps) >= 1
+    for lhs_tokens, value in steps:
+        # each step's rendered lhs must evaluate to its claimed value
+        assert _eval_tokens(lhs_tokens) == value
+
+
+def _eval_tokens(toks):
+    """Tiny evaluator over rendered token strings (parens + precedence)."""
+    text = "".join(corpus.TOKEN_NAMES[t] for t in toks)
+    return eval(text)  # trusted: our own generator output, digits/ops only
+
+
+@given(st.integers(0, 2**32 - 1))
+def test_training_example_well_formed(seed):
+    rng = corpus.SplitMix64(seed)
+    ex = None
+    for _ in range(20):
+        ex = corpus.sample_training_example(rng, 160)
+        if ex is not None:
+            break
+    assert ex is not None
+    toks, n = ex
+    assert len(toks) == 160
+    assert toks[0] == corpus.BOS and toks[1] == corpus.Q
+    assert toks[n - 1] == corpus.EOS
+    assert all(t == corpus.PAD for t in toks[n:])
+    assert all(t != corpus.PAD for t in toks[:n])
+    # exactly one strategy token, right after the first SEP
+    strat_positions = [i for i, t in enumerate(toks[:n])
+                       if corpus.STRAT0 <= t < corpus.STRAT0 + corpus.NUM_STRATEGIES]
+    assert len(strat_positions) == 1
+    assert toks[strat_positions[0] - 1] == corpus.SEP
+
+
+def test_suites_deterministic_and_sized():
+    for spec in corpus.SUITES:
+        a = corpus.gen_suite(spec)
+        b = corpus.gen_suite(spec)
+        assert len(a) == spec.n_problems
+        assert [p.answer for p in a] == [p.answer for p in b]
+        assert [p.tokens() for p in a] == [p.tokens() for p in b]
+        for p in a:
+            assert 0 <= p.answer <= 999
+            assert _eval_tokens(p.tokens()) == p.answer
+
+
+def test_aptitude_shapes():
+    for fam in range(4):
+        apts = [corpus.strategy_aptitude(s, fam)
+                for s in range(corpus.NUM_STRATEGIES)]
+        assert all(0.0 < a <= 1.0 for a in apts)
+    # the modular family is best served by the mod-reduce strategies
+    assert corpus.strategy_aptitude(4, corpus.FAM_MODULAR) > \
+        corpus.strategy_aptitude(2, corpus.FAM_MODULAR)
+
+
+@given(st.integers(0, 2**32 - 1))
+def test_splitmix_below_in_range(seed):
+    rng = corpus.SplitMix64(seed)
+    for n in (1, 2, 7, 100):
+        x = rng.below(n)
+        assert 0 <= x < n
+
+
+def test_splitmix_reference_vector():
+    """Pinned outputs — rust/src/util/rng.rs asserts the same vector."""
+    rng = corpus.SplitMix64(42)
+    got = [rng.next_u64() for _ in range(4)]
+    assert got == [
+        13679457532755275413,
+        2949826092126892291,
+        5139283748462763858,
+        6349198060258255764,
+    ], got
+
+
+def test_prompt_tokens_shape():
+    rng = corpus.SplitMix64(3)
+    p = corpus.gen_problem(rng, corpus.FAM_MUL_MIX, 30, 2)
+    with_strat = corpus.prompt_tokens(p, 5)
+    without = corpus.prompt_tokens(p, None)
+    assert with_strat[:-1] == without
+    assert with_strat[-1] == corpus.STRAT0 + 5
+    assert with_strat[0] == corpus.BOS

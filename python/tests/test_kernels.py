@@ -1,0 +1,140 @@
+"""Hypothesis sweeps of the Pallas kernels against the pure-jnp oracles.
+
+This is the L1 correctness signal: every (shape, dtype, mask) combination
+generated here must match ref.py to tight tolerance under interpret=True.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.decode_attention import decode_attention
+from compile.kernels.flash_attention import flash_attention
+from compile.kernels.ref import attention_ref, decode_attention_ref
+
+settings.register_profile("kernels", max_examples=25, deadline=None)
+settings.load_profile("kernels")
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+def _tol(dtype):
+    return 2e-5 if dtype == jnp.float32 else 2e-2
+
+
+@st.composite
+def attn_case(draw):
+    b = draw(st.sampled_from([1, 2, 4]))
+    h = draw(st.sampled_from([1, 2, 4]))
+    blk = draw(st.sampled_from([16, 32]))
+    n_blk = draw(st.integers(1, 4))
+    s = blk * n_blk
+    d = draw(st.sampled_from([16, 32, 64]))
+    dtype = draw(st.sampled_from([jnp.float32, jnp.bfloat16]))
+    seed = draw(st.integers(0, 2**31 - 1))
+    lengths = draw(st.one_of(
+        st.none(),
+        st.lists(st.integers(1, s), min_size=b, max_size=b),
+    ))
+    return b, h, s, d, blk, dtype, seed, lengths
+
+
+@given(attn_case(), st.booleans())
+def test_flash_attention_matches_ref(case, causal):
+    b, h, s, d, blk, dtype, seed, lengths = case
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = _rand(kq, (b, h, s, d), dtype)
+    k = _rand(kk, (b, h, s, d), dtype)
+    v = _rand(kv, (b, h, s, d), dtype)
+    lens = None if lengths is None else jnp.asarray(lengths, jnp.int32)
+    out = flash_attention(q, k, v, lens, causal=causal,
+                          block_q=blk, block_k=blk)
+    ref = attention_ref(q, k, v, causal=causal, lengths=lens)
+    # rows that are fully masked (query pos >= length, non-causal) are
+    # defined as zero by the kernel but NaN-free garbage in ref; compare
+    # only valid rows.
+    out_f = out.astype(jnp.float32)
+    if lens is not None:
+        valid = (jnp.arange(s)[None, :] < lens[:, None])
+        if causal:
+            pass  # causal rows are always self-attending -> well defined
+        out_f = jnp.where(valid[:, None, :, None], out_f, 0.0)
+        ref = jnp.where(valid[:, None, :, None], ref, 0.0)
+    np.testing.assert_allclose(np.asarray(out_f), np.asarray(ref),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+@given(attn_case())
+def test_decode_attention_matches_ref(case):
+    b, h, s, d, blk, dtype, seed, lengths = case
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = _rand(kq, (b, h, d), dtype)
+    k = _rand(kk, (b, h, s, d), dtype)
+    v = _rand(kv, (b, h, s, d), dtype)
+    lens = (jnp.full((b,), s, jnp.int32) if lengths is None
+            else jnp.asarray(lengths, jnp.int32))
+    out = decode_attention(q, k, v, lens, block_k=blk)
+    ref = decode_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(np.asarray(out.astype(jnp.float32)),
+                               np.asarray(ref),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+def test_flash_attention_causality():
+    """Future keys must not influence outputs: perturb k/v at position j,
+    outputs at positions < j are unchanged."""
+    key = jax.random.PRNGKey(0)
+    b, h, s, d = 1, 2, 64, 16
+    kq, kk, kv = jax.random.split(key, 3)
+    q = _rand(kq, (b, h, s, d), jnp.float32)
+    k = _rand(kk, (b, h, s, d), jnp.float32)
+    v = _rand(kv, (b, h, s, d), jnp.float32)
+    out1 = flash_attention(q, k, v, causal=True)
+    k2 = k.at[:, :, 40:].set(99.0)
+    v2 = v.at[:, :, 40:].set(-99.0)
+    out2 = flash_attention(q, k2, v2, causal=True)
+    np.testing.assert_allclose(np.asarray(out1[:, :, :40]),
+                               np.asarray(out2[:, :, :40]), atol=1e-6)
+    assert float(jnp.abs(out1[:, :, 41:] - out2[:, :, 41:]).max()) > 1.0
+
+
+def test_decode_attention_length_mask():
+    """Entries at position >= length must not influence the output."""
+    key = jax.random.PRNGKey(1)
+    b, h, s, d = 2, 2, 32, 16
+    kq, kk, kv = jax.random.split(key, 3)
+    q = _rand(kq, (b, h, d), jnp.float32)
+    k = _rand(kk, (b, h, s, d), jnp.float32)
+    v = _rand(kv, (b, h, s, d), jnp.float32)
+    lens = jnp.array([5, 17], jnp.int32)
+    out1 = decode_attention(q, k, v, lens)
+    k2 = jnp.where(jnp.arange(s)[None, None, :, None] >= lens[:, None, None, None], 50.0, k)
+    v2 = jnp.where(jnp.arange(s)[None, None, :, None] >= lens[:, None, None, None], -50.0, v)
+    out2 = decode_attention(q, k2, v2, lens)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-6)
+
+
+def test_flash_attention_rejects_bad_block():
+    q = jnp.zeros((1, 1, 48, 16))
+    with pytest.raises(AssertionError):
+        flash_attention(q, q, q, block_q=32, block_k=32)
+
+
+def test_decode_softmax_normalization():
+    """Uniform keys -> output is the mean of valid values."""
+    b, h, s, d = 1, 1, 32, 8
+    q = jnp.ones((b, h, d))
+    k = jnp.ones((b, h, s, d))
+    v = jnp.tile(jnp.arange(s, dtype=jnp.float32)[None, None, :, None],
+                 (b, h, 1, d))
+    lens = jnp.array([10], jnp.int32)
+    out = decode_attention(q, k, v, lens)
+    np.testing.assert_allclose(np.asarray(out)[0, 0, 0], np.mean(np.arange(10)),
+                               rtol=1e-5)

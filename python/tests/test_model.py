@@ -1,0 +1,192 @@
+"""L2 model invariants: prefill/decode equivalence, span & ingest cache
+contracts, pallas-vs-ref lowering agreement."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import corpus, model
+
+CFG = model.ModelConfig("t", n_layers=2, d_model=32, n_heads=2, s_max=64)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(CFG, jax.random.PRNGKey(0))
+
+
+def _rand_tokens(key, b, s, lo=1, hi=36):
+    return jax.random.randint(key, (b, s), lo, hi, jnp.int32)
+
+
+def test_prefill_shapes(params):
+    toks = _rand_tokens(jax.random.PRNGKey(1), 2, CFG.s_max)
+    lens = jnp.array([10, 20], jnp.int32)
+    logits, k, v = model.prefill(CFG, params, toks, lens)
+    assert logits.shape == (2, CFG.s_max, CFG.vocab)
+    assert k.shape == (CFG.n_layers, 2, CFG.n_heads, CFG.s_max, CFG.d_head)
+    assert v.shape == k.shape
+
+
+def test_prefill_matches_decode_chain(params):
+    """Prefill logits at position i == decode_step logits after feeding
+    tokens 0..i — the fundamental KV-cache correctness invariant."""
+    b = 2
+    toks = _rand_tokens(jax.random.PRNGKey(2), b, CFG.s_max)
+    lens = jnp.array([12, 9], jnp.int32)
+    logits, _, _ = model.prefill(CFG, params, toks, lens)
+    shape = (CFG.n_layers, b, CFG.n_heads, CFG.s_max, CFG.d_head)
+    k = jnp.zeros(shape)
+    v = jnp.zeros(shape)
+    pos = jnp.zeros((b,), jnp.int32)
+    for i in range(12):
+        lg, k, v = model.decode_step(CFG, params, k, v, pos, toks[:, i])
+        for bb in range(b):
+            if i < int(lens[bb]):
+                np.testing.assert_allclose(
+                    np.asarray(lg[bb]), np.asarray(logits[bb, i]),
+                    atol=1e-4, rtol=1e-4)
+        pos = pos + 1
+
+
+def test_pallas_and_ref_agree_end_to_end(params):
+    toks = _rand_tokens(jax.random.PRNGKey(3), 2, CFG.s_max)
+    lens = jnp.array([15, 30], jnp.int32)
+    lp, _, _ = model.prefill(CFG, params, toks, lens, use_pallas=True)
+    lr, _, _ = model.prefill(CFG, params, toks, lens, use_pallas=False)
+    valid = np.arange(CFG.s_max)[None, :] < np.asarray(lens)[:, None]
+    np.testing.assert_allclose(
+        np.asarray(lp)[valid], np.asarray(lr)[valid], atol=1e-4, rtol=1e-4)
+
+
+def test_span_stops_at_delimiter(params):
+    """With a rigged head that always emits SEP, span must take exactly
+    one token and report done."""
+    rig = dict(params)
+    head = np.zeros((CFG.d_model, CFG.vocab), np.float32)
+    head[:, corpus.SEP] = 1.0  # every position votes SEP
+    rig["head"] = jnp.asarray(head)
+    rig["ln_f_bias"] = jnp.ones((CFG.d_model,)) * 0.5  # keep x positive-ish
+    b = 2
+    shape = (CFG.n_layers, b, CFG.n_heads, CFG.s_max, CFG.d_head)
+    k = jnp.zeros(shape)
+    v = jnp.zeros(shape)
+    pos = jnp.array([3, 5], jnp.int32)
+    cur = jnp.array([corpus.STEP, corpus.STEP], jnp.int32)
+    toks, ntake, done, pos_out, _, _ = model.span(
+        CFG, rig, k, v, pos, cur, jnp.float32(0.0), jnp.int32(0))
+    assert list(np.asarray(ntake)) == [1, 1]
+    assert list(np.asarray(done)) == [1, 1]
+    assert list(np.asarray(toks[:, 0])) == [corpus.SEP, corpus.SEP]
+    # one active iteration -> pos advanced by exactly 1
+    assert list(np.asarray(pos_out)) == [4, 6]
+
+
+def test_span_cache_contract(params):
+    """span caches cur + all-but-last sampled tokens: replaying the same
+    tokens through ingest from the same start state must produce an
+    identical cache prefix."""
+    b = 1
+    shape = (CFG.n_layers, b, CFG.n_heads, CFG.s_max, CFG.d_head)
+    prompt = _rand_tokens(jax.random.PRNGKey(4), b, 8)
+    k = jnp.zeros(shape); v = jnp.zeros(shape)
+    pos0 = jnp.zeros((b,), jnp.int32)
+    _, _, ll, pos, k, v = model.ingest(
+        CFG, params, k, v, pos0, prompt, jnp.array([8], jnp.int32))
+    cur = jnp.argmax(ll, axis=-1).astype(jnp.int32)
+
+    toks, ntake, done, pos_out, k1, v1 = model.span(
+        CFG, params, k, v, pos, cur, jnp.float32(0.0), jnp.int32(0))
+    n = int(ntake[0])
+    # replay: ingest cur + sampled[:-1] (the cached portion)
+    replay = jnp.concatenate([cur[:, None], toks[:, :model.T_SPAN - 1]], axis=1)
+    replay_len = jnp.array([n], jnp.int32)  # cur + (n-1) sampled
+    _, _, _, pos2, k2, v2 = model.ingest(
+        CFG, params, k, v, pos, replay, replay_len)
+    assert int(pos2[0]) == int(pos_out[0])
+    m = int(pos_out[0])
+    np.testing.assert_allclose(np.asarray(k1)[:, :, :, :m],
+                               np.asarray(k2)[:, :, :, :m], atol=1e-5)
+    np.testing.assert_allclose(np.asarray(v1)[:, :, :, :m],
+                               np.asarray(v2)[:, :, :, :m], atol=1e-5)
+
+
+def test_ingest_scores_match_prefill_logprobs(params):
+    """ingest's sum_lp must equal the teacher-forcing logprob computed
+    from prefill logits."""
+    b = 1
+    n = 10
+    toks_full = _rand_tokens(jax.random.PRNGKey(5), b, CFG.s_max)
+    lens = jnp.array([n], jnp.int32)
+    logits, _, _ = model.prefill(CFG, params, toks_full, lens)
+    lp_ref = 0.0
+    for i in range(n - 1):
+        row = jax.nn.log_softmax(logits[0, i])
+        lp_ref += float(row[int(toks_full[0, i + 1])])
+
+    shape = (CFG.n_layers, b, CFG.n_heads, CFG.s_max, CFG.d_head)
+    sum_lp, cnt, _, _, _, _ = model.ingest(
+        CFG, params, jnp.zeros(shape), jnp.zeros(shape),
+        jnp.zeros((b,), jnp.int32), toks_full[:, :model.T_SPAN],
+        jnp.array([min(n, model.T_SPAN)], jnp.int32))
+    assert int(cnt[0]) == min(n, model.T_SPAN) - 1
+    np.testing.assert_allclose(float(sum_lp[0]), lp_ref, atol=1e-3)
+
+
+def test_ingest_inactive_lanes_frozen(params):
+    """Lanes with len=0 must not change their cache, position or score."""
+    b = 2
+    shape = (CFG.n_layers, b, CFG.n_heads, CFG.s_max, CFG.d_head)
+    k = jax.random.normal(jax.random.PRNGKey(6), shape)
+    v = jax.random.normal(jax.random.PRNGKey(7), shape)
+    pos = jnp.array([4, 9], jnp.int32)
+    toks = _rand_tokens(jax.random.PRNGKey(8), b, model.T_SPAN)
+    lens = jnp.array([5, 0], jnp.int32)
+    sum_lp, cnt, _, pos_out, k2, v2 = model.ingest(
+        CFG, params, k, v, pos, toks, lens)
+    assert int(pos_out[1]) == 9
+    assert float(sum_lp[1]) == 0.0
+    assert int(cnt[1]) == 0
+    np.testing.assert_allclose(np.asarray(k2)[:, 1], np.asarray(k)[:, 1])
+    np.testing.assert_allclose(np.asarray(v2)[:, 1], np.asarray(v)[:, 1])
+
+
+def test_span_greedy_deterministic(params):
+    b = 1
+    shape = (CFG.n_layers, b, CFG.n_heads, CFG.s_max, CFG.d_head)
+    k = jnp.zeros(shape); v = jnp.zeros(shape)
+    pos = jnp.zeros((b,), jnp.int32)
+    cur = jnp.array([corpus.Q], jnp.int32)
+    r1 = model.span(CFG, params, k, v, pos, cur, jnp.float32(0.0), jnp.int32(1))
+    r2 = model.span(CFG, params, k, v, pos, cur, jnp.float32(0.0), jnp.int32(2))
+    np.testing.assert_array_equal(np.asarray(r1[0]), np.asarray(r2[0]))
+
+
+def test_sampling_seed_changes_output(params):
+    b = 4
+    shape = (CFG.n_layers, b, CFG.n_heads, CFG.s_max, CFG.d_head)
+    k = jnp.zeros(shape); v = jnp.zeros(shape)
+    pos = jnp.zeros((b,), jnp.int32)
+    cur = jnp.full((b,), corpus.Q, jnp.int32)
+    r1 = model.span(CFG, params, k, v, pos, cur, jnp.float32(2.0), jnp.int32(1))
+    r2 = model.span(CFG, params, k, v, pos, cur, jnp.float32(2.0), jnp.int32(9))
+    assert not np.array_equal(np.asarray(r1[0]), np.asarray(r2[0]))
+
+
+def test_param_shapes_roundtrip():
+    shapes = model.param_shapes(CFG)
+    names = [n for n, _ in shapes]
+    assert len(names) == len(set(names))
+    p = model.init_params(CFG, jax.random.PRNGKey(0))
+    leaves = model.flatten_params(CFG, p)
+    p2 = model.unflatten_params(CFG, leaves)
+    assert set(p2) == set(p)
+    for k in p:
+        np.testing.assert_array_equal(np.asarray(p[k]), np.asarray(p2[k]))
+
+
+def test_flops_per_token_alpha():
+    a = model.DRAFT_CONFIG.flops_per_token()
+    t = model.TARGET_CONFIG.flops_per_token()
+    assert 0.0 < a / t < 0.2  # real compute gap between draft and target

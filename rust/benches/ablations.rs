@@ -1,0 +1,19 @@
+//! Design-choice ablations (DESIGN.md §7): the rewrite-threshold sweep
+//! behind the paper's Appendix-C tau=7 choice, and the SPM
+//! selection-mode ablation (random vs model-internal vs oracle).
+mod common;
+use ssr::eval::experiments;
+
+fn main() {
+    common::run_timed("ablations", || {
+        let mut f = common::calibrated_factory();
+        let mut out =
+            experiments::tau_sweep(&mut f, &common::default_cfg(), &common::bench_opts())?;
+        out.push_str(&experiments::selection_ablation(
+            &mut f,
+            &common::default_cfg(),
+            &common::bench_opts(),
+        )?);
+        Ok(out)
+    });
+}

@@ -1,0 +1,53 @@
+//! Shared bench plumbing (no criterion in the offline environment; each
+//! bench is a `harness = false` binary that prints the paper-shaped
+//! table plus its own wall time).
+#![allow(dead_code)]
+
+use anyhow::Result;
+use ssr::backend::calibrated::CalibratedBackend;
+use ssr::backend::pjrt::PjrtBackend;
+use ssr::backend::Backend;
+use ssr::config::SsrConfig;
+use ssr::eval::experiments::ExpOpts;
+
+pub fn calibrated_factory() -> impl FnMut(&str, u64) -> Result<Box<dyn Backend>> {
+    |suite: &str, seed: u64| {
+        Ok(Box::new(CalibratedBackend::for_suite(suite, seed)?) as Box<dyn Backend>)
+    }
+}
+
+pub fn pjrt_factory() -> Option<impl FnMut(&str, u64) -> Result<Box<dyn Backend>>> {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        return None;
+    }
+    Some(move |_suite: &str, _seed: u64| {
+        let mut b = PjrtBackend::load(&dir)?;
+        b.temp = 0.5;
+        Ok(Box::new(b) as Box<dyn Backend>)
+    })
+}
+
+pub fn default_cfg() -> SsrConfig {
+    SsrConfig::default()
+}
+
+pub fn bench_opts() -> ExpOpts {
+    // trials/problems scaled for bench wall-time; `ssr exp` runs the full
+    // protocol (6 trials x 60 problems)
+    ExpOpts { trials: 3, max_problems: 40 }
+}
+
+pub fn run_timed(name: &str, f: impl FnOnce() -> Result<String>) {
+    let t0 = std::time::Instant::now();
+    match f() {
+        Ok(out) => {
+            println!("{out}");
+            println!("[bench {name}] completed in {:.2}s", t0.elapsed().as_secs_f64());
+        }
+        Err(e) => {
+            eprintln!("[bench {name}] error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,117 @@
+//! End-to-end + per-layer performance bench on the REAL stack (the §Perf
+//! input): per-entry-point latencies (prefill / draft span / target
+//! ingest / target span), SSD cycle time, and serving throughput for
+//! baseline vs spec-reason vs SSR.
+//!
+//! Skips (exit 0) when artifacts are absent so `cargo bench` stays green
+//! on a fresh checkout.
+mod common;
+
+use std::time::Instant;
+
+use ssr::backend::pjrt::PjrtBackend;
+use ssr::backend::Backend;
+use ssr::config::{SsrConfig, StopRule};
+use ssr::coordinator::engine::{Engine, Method};
+use ssr::model::tokenizer;
+use ssr::util::stats;
+use ssr::workload::suites;
+
+fn timeit<T>(reps: usize, mut f: impl FnMut() -> T) -> (f64, T) {
+    let mut out = f(); // warmup (includes lazy artifact compile)
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        out = f();
+    }
+    (t0.elapsed().as_secs_f64() / reps as f64, out)
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("[bench e2e_serving] skipped: run `make artifacts` first");
+        return Ok(());
+    }
+    let t_start = Instant::now();
+    let mut b = PjrtBackend::load(&dir)?;
+    b.temp = 0.5;
+    let vocab = b.manifest().vocab.clone();
+    let suite = suites::generate(suites::spec("synth-math500")?, &vocab);
+
+    // --- L2/L3 micro: per-operation latency at batch 1 and 4 ------------
+    println!("## per-operation latency (mean over 5 reps, after warmup)");
+    for lanes in [1usize, 4] {
+        let strategies = vec![None; lanes];
+        let problem = &suite.problems[0];
+        let (dt_open, ids) =
+            timeit(2, || b.open_paths(problem, &strategies, 1, true).unwrap());
+        let (dt_draft, _) = timeit(5, || b.draft_step(&ids).unwrap());
+        let (dt_score, _) = timeit(5, || b.score_step(&ids).unwrap());
+        let (dt_rewrite, _) = timeit(3, || {
+            let o = b.draft_step(&ids).unwrap();
+            let _ = b.score_step(&ids).unwrap();
+            let r = b.rewrite_step(&ids).unwrap();
+            (o, r)
+        });
+        for &id in &ids {
+            let _ = b.close_path(id);
+        }
+        println!(
+            "  lanes={lanes}: open(prefill x2) {:.1}ms  draft_span {:.1}ms  \
+             score_ingest {:.1}ms  full-cycle+rewrite {:.1}ms",
+            dt_open * 1e3,
+            dt_draft * 1e3,
+            dt_score * 1e3,
+            dt_rewrite * 1e3
+        );
+    }
+
+    // --- E2E: serving throughput per method -----------------------------
+    println!("\n## end-to-end serving (8 requests of synth-math500)");
+    for method in [
+        Method::Baseline,
+        Method::SpecReason { tau: 7 },
+        Method::Ssr { n: 3, tau: 7, stop: StopRule::Full },
+        Method::Ssr { n: 3, tau: 7, stop: StopRule::Fast2 },
+    ] {
+        let mut b = PjrtBackend::load(&dir)?;
+        b.temp = 0.5;
+        let mut lat = Vec::new();
+        let mut correct = 0;
+        let mut tokens = (0u64, 0u64);
+        let t0 = Instant::now();
+        for (i, p) in suite.problems.iter().take(8).enumerate() {
+            let rt0 = Instant::now();
+            let mut engine = Engine::new(&mut b, SsrConfig::default());
+            let r = engine.run(p, method, i as u64)?;
+            lat.push(rt0.elapsed().as_secs_f64());
+            correct += (r.answer() == Some(p.answer)) as usize;
+            tokens.0 += r.draft_tokens;
+            tokens.1 += r.target_tokens;
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "  {:<16} acc {}/8  mean {:.2}s p99 {:.2}s  {:.3} req/s  tok d/t {}/{}  pjrt {:.0}%",
+            method.name(),
+            correct,
+            stats::mean(&lat),
+            stats::percentile(&lat, 99.0),
+            8.0 / wall,
+            tokens.0,
+            tokens.1,
+            100.0 * b.clock_secs() / wall,
+        );
+    }
+
+    // --- score distribution on the real pair (fig5 input) ---------------
+    let hist = b.score_histogram();
+    if hist.total() > 0 {
+        let cum = hist.cumulative();
+        println!("\nreal-pair score dist: {:?}", hist.fractions());
+        println!("fraction below tau=7: {:.1}%", 100.0 * cum[6]);
+    }
+
+    let _ = tokenizer::builtin_vocab();
+    println!("\n[bench e2e_serving] completed in {:.1}s", t_start.elapsed().as_secs_f64());
+    Ok(())
+}

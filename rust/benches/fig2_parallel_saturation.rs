@@ -1,0 +1,11 @@
+//! Regenerates Fig. 2: pass@1 vs number of parallel paths (1..10) on the
+//! three suites — the diminishing-returns study motivating SPM.
+mod common;
+use ssr::eval::experiments;
+
+fn main() {
+    common::run_timed("fig2", || {
+        let mut f = common::calibrated_factory();
+        experiments::fig2(&mut f, &common::default_cfg(), &common::bench_opts())
+    });
+}

@@ -1,0 +1,11 @@
+//! Regenerates Fig. 3: pass@1 vs computational efficiency (1/gamma) for
+//! Baseline / Parallel / Parallel-SPM / SSR-m3 / SSR-m5 on each suite.
+mod common;
+use ssr::eval::experiments;
+
+fn main() {
+    common::run_timed("fig3", || {
+        let mut f = common::calibrated_factory();
+        Ok(experiments::fig3(&mut f, &common::default_cfg(), &common::bench_opts())?.1)
+    });
+}

@@ -1,0 +1,11 @@
+//! Regenerates Fig. 4: the SPM ablation (Baseline vs Parallel vs
+//! Parallel-SPM at N=5, SSD disabled).
+mod common;
+use ssr::eval::experiments;
+
+fn main() {
+    common::run_timed("fig4", || {
+        let mut f = common::calibrated_factory();
+        Ok(experiments::fig4(&mut f, &common::default_cfg(), &common::bench_opts())?.1)
+    });
+}

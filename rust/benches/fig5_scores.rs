@@ -1,0 +1,20 @@
+//! Regenerates Fig. 5: the 0..9 step-score distribution + cumulative
+//! curve justifying tau = 7. Uses the REAL PJRT backend when artifacts
+//! are built (actual target-model scores of actual draft steps), else
+//! the calibrated distribution.
+mod common;
+use ssr::eval::experiments::{self, ExpOpts};
+
+fn main() {
+    common::run_timed("fig5", || {
+        let opts = ExpOpts { trials: 1, max_problems: 8 };
+        if let Some(mut f) = common::pjrt_factory() {
+            println!("(real PJRT backend)");
+            Ok(experiments::fig5(&mut f, &common::default_cfg(), &opts)?.1)
+        } else {
+            println!("(calibrated backend — run `make artifacts` for real scores)");
+            let mut f = common::calibrated_factory();
+            Ok(experiments::fig5(&mut f, &common::default_cfg(), &common::bench_opts())?.1)
+        }
+    });
+}

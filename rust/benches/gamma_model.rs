@@ -1,0 +1,11 @@
+//! Appendix B check: analytic gamma (Eqs. 6/8/11 and the Eq. 9 variant)
+//! vs the measured token ledger.
+mod common;
+use ssr::eval::experiments;
+
+fn main() {
+    common::run_timed("gamma", || {
+        let mut f = common::calibrated_factory();
+        experiments::gamma_check(&mut f, &common::default_cfg(), &common::bench_opts())
+    });
+}

@@ -1,0 +1,11 @@
+//! Regenerates Table 1: baseline / spec-reason(7,9) / SSR-Fast-1 /
+//! SSR-Fast-2 / SSR with pass@1, pass@3 and time on each suite.
+mod common;
+use ssr::eval::experiments;
+
+fn main() {
+    common::run_timed("table1", || {
+        let mut f = common::calibrated_factory();
+        Ok(experiments::table1(&mut f, &common::default_cfg(), &common::bench_opts())?.1)
+    });
+}

@@ -1,0 +1,167 @@
+//! The `Backend` trait — the seam between the SSR coordinator logic
+//! (SPM, SSD, voting, fast modes, baselines) and the model substrate.
+//!
+//! Two implementations:
+//!   * [`pjrt::PjrtBackend`] — the real thing: the AOT-compiled
+//!     draft/target transformer pair executing via PJRT. Acceptance
+//!     rates, latencies, and FLOPs are all genuinely measured.
+//!   * [`calibrated::CalibratedBackend`] — a statistical substrate
+//!     calibrated to the paper's published operating points (QwQ-32B /
+//!     R1-Distill-1.5B scale), used to regenerate the paper's accuracy
+//!     figures through the *identical* coordinator code.
+//!
+//! The cache/step protocol both implement (documented in detail in
+//! `model/handle.rs` and DESIGN.md §2):
+//!   open -> [draft_step -> score_step -> (accept | rewrite_step)]* -> close
+//! with `target_step` replacing the draft/score/rewrite cycle for
+//! non-speculative baselines.
+
+pub mod calibrated;
+pub mod pjrt;
+
+use anyhow::Result;
+
+use crate::workload::Problem;
+
+/// Opaque per-path handle issued by a backend.
+pub type PathId = usize;
+
+/// Outcome of generating one reasoning step on a path.
+#[derive(Debug, Clone)]
+pub struct StepOutcome {
+    /// the step's tokens (tentative until scored/committed)
+    pub tokens: Vec<i32>,
+    /// path produced EOS (trace complete) within this step
+    pub terminal: bool,
+}
+
+/// Per-path accounting returned on close.
+#[derive(Debug, Clone, Default)]
+pub struct PathStats {
+    /// tokens processed by the draft model (prefill + spans)
+    pub draft_tokens: u64,
+    /// tokens processed by the target model (prefill + rewrites)
+    pub target_tokens: u64,
+    /// tokens the target only *scored* (teacher-forced, not rewritten) —
+    /// ledgered separately because the paper's Appendix B treats scoring
+    /// as negligible ("tokens that are only scored ... are thus ignored")
+    pub score_tokens: u64,
+    /// number of reasoning steps generated
+    pub steps: u64,
+    /// steps rewritten by the target
+    pub rewrites: u64,
+    /// final trace (prompt + reasoning)
+    pub trace: Vec<i32>,
+}
+
+/// Static facts the engine needs from a backend.
+#[derive(Debug, Clone)]
+pub struct BackendMeta {
+    /// per-token FLOPs ratio F_d / F_t (paper's alpha)
+    pub alpha: f64,
+    /// FLOPs per target-model token (F_t), for absolute accounting
+    pub target_flops_per_token: u64,
+    pub num_strategies: usize,
+    /// max reasoning steps before the engine force-finishes a path
+    pub max_steps: usize,
+}
+
+pub trait Backend {
+    fn meta(&self) -> BackendMeta;
+
+    /// The target model's preference distribution over the K strategies
+    /// for this problem (SPM's model-internal scoring, paper §3.1) —
+    /// logits, higher = more promising.
+    fn select_scores(&mut self, problem: &Problem) -> Result<Vec<f32>>;
+
+    /// Open one reasoning path per entry in `strategies` (None = no
+    /// strategy prompt, i.e. naive parallel / baseline). Paths of one
+    /// call share a batch group. `use_draft` controls whether the draft
+    /// model's cache is set up (speculative methods) or only the target's.
+    fn open_paths(
+        &mut self,
+        problem: &Problem,
+        strategies: &[Option<usize>],
+        seed: u64,
+        use_draft: bool,
+    ) -> Result<Vec<PathId>>;
+
+    /// Draft model proposes the next step on each path (tentative).
+    fn draft_step(&mut self, paths: &[PathId]) -> Result<Vec<StepOutcome>>;
+
+    /// Target model scores each path's tentative step on the paper's 0..9
+    /// scale (Eq. 2). Accepting afterwards is free (the scoring pass
+    /// already extended the target cache).
+    fn score_step(&mut self, paths: &[PathId]) -> Result<Vec<u8>>;
+
+    /// Reject the tentative step on each path and have the target rewrite
+    /// it (paper's `s_t -> s'_t`). Returns the replacement steps.
+    fn rewrite_step(&mut self, paths: &[PathId]) -> Result<Vec<StepOutcome>>;
+
+    /// Accept each path's tentative step as-is.
+    fn accept_step(&mut self, paths: &[PathId]) -> Result<()>;
+
+    /// Target-only generation of the next step (baselines; no draft).
+    fn target_step(&mut self, paths: &[PathId]) -> Result<Vec<StepOutcome>>;
+
+    /// Current full trace (prompt + accepted reasoning) of a path.
+    fn trace(&self, path: PathId) -> &[i32];
+
+    /// Close a path, releasing its lane, returning its accounting.
+    fn close_path(&mut self, path: PathId) -> Result<PathStats>;
+
+    /// Parse the final answer out of a trace (backend-specific grammar).
+    fn parse_answer(&self, trace: &[i32]) -> Option<i64>;
+
+    /// Cumulative model-time in seconds: real PJRT execute time for the
+    /// real backend, virtual modeled time for the calibrated one. The
+    /// engine reports per-run deltas of this clock (Table 1 "Time").
+    fn clock_secs(&self) -> f64;
+
+    /// Cumulative 0..=9 step-score histogram across all scored steps
+    /// (raw scores, pre-threshold — Fig. 5's input).
+    fn score_histogram(&self) -> crate::util::stats::Histogram;
+}
+
+/// FLOPs ledger across one problem (paper Appendix B quantities).
+#[derive(Debug, Clone, Default)]
+pub struct FlopsLedger {
+    pub draft_tokens: u64,
+    pub target_tokens: u64,
+}
+
+impl FlopsLedger {
+    pub fn add(&mut self, s: &PathStats) {
+        self.draft_tokens += s.draft_tokens;
+        self.target_tokens += s.target_tokens;
+    }
+
+    /// Absolute FLOPs given per-token costs.
+    pub fn total_flops(&self, meta: &BackendMeta) -> f64 {
+        let ft = meta.target_flops_per_token as f64;
+        let fd = ft * meta.alpha;
+        self.draft_tokens as f64 * fd + self.target_tokens as f64 * ft
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ledger_accumulates() {
+        let mut l = FlopsLedger::default();
+        l.add(&PathStats { draft_tokens: 10, target_tokens: 5, ..Default::default() });
+        l.add(&PathStats { draft_tokens: 1, target_tokens: 2, ..Default::default() });
+        assert_eq!(l.draft_tokens, 11);
+        assert_eq!(l.target_tokens, 7);
+        let meta = BackendMeta {
+            alpha: 0.1,
+            target_flops_per_token: 100,
+            num_strategies: 13,
+            max_steps: 12,
+        };
+        // 11 * 10 + 7 * 100 = 810
+        assert!((l.total_flops(&meta) - 810.0).abs() < 1e-9);
+    }
+}

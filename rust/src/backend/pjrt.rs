@@ -1,0 +1,495 @@
+//! The real backend: draft/target transformers executing via PJRT.
+//!
+//! Cache-frontier protocol (see DESIGN.md §2 and `model/handle.rs`):
+//! for each model we track how many trace tokens are in its KV cache.
+//! Invariants between calls:
+//!   * draft lane ready to generate  <=> frontier_d == trace.len() - 1
+//!     (exactly one pending token = span's `cur`);
+//!   * target cache is extended lazily by the scoring ingest
+//!     (frontier_t <= trace.len()); accepting a scored step is free.
+//! Rejected steps are rolled back by *pointer reset only* — positions
+//! beyond the frontier hold garbage that the next span/ingest overwrites
+//! before it ever becomes visible under the attention length mask.
+//!
+//! Batching: the engine opens one lane group per problem (n paths <= the
+//! largest compiled batch variant). Batched calls always execute the
+//! whole group; inactive lanes pass their real (pos, cur) so their state
+//! is untouched (span re-writes the same kv at `pos`; ingest freezes with
+//! len = 0) and their outputs are discarded.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{Backend, BackendMeta, PathId, PathStats, StepOutcome};
+use crate::model::{handle::KvCache, sampler, tokenizer, ModelHandle};
+use crate::runtime::{Manifest, Runtime};
+use crate::workload::Problem;
+
+const MAX_STEPS_DEFAULT: usize = 14;
+
+#[allow(dead_code)] // batch kept for assertions & future lane reuse
+struct LaneGroup {
+    draft_cache: Option<KvCache>,
+    target_cache: KvCache,
+    /// lanes in use (index into cache batch dim)
+    lanes: Vec<PathId>,
+    batch: usize,
+}
+
+#[allow(dead_code)] // lane/prompt_len/seed kept for diagnostics
+struct PathState {
+    group: usize,
+    lane: usize,
+    /// prompt + accepted reasoning (+ the tentative step while pending)
+    trace: Vec<i32>,
+    /// prompt length (trace[..prompt_len] is the prompt)
+    prompt_len: usize,
+    /// tokens of trace in the draft cache
+    frontier_d: usize,
+    /// tokens of trace in the target cache
+    frontier_t: usize,
+    /// trace index where the tentative (unscored) step starts
+    tentative_start: Option<usize>,
+    use_draft: bool,
+    seed: i32,
+    terminal: bool,
+    stats: PathStats,
+    closed: bool,
+}
+
+/// Runs the draft/target pair loaded from `artifacts/`.
+pub struct PjrtBackend {
+    rt: Runtime,
+    draft: ModelHandle,
+    target: ModelHandle,
+    manifest: Manifest,
+    groups: Vec<LaneGroup>,
+    paths: Vec<PathState>,
+    /// sampling temperature for spans (0 = greedy)
+    pub temp: f32,
+    pub max_steps: usize,
+    /// 0..=9 score histogram across all scored steps (fig5)
+    pub score_hist: crate::util::stats::Histogram,
+    seed_counter: i32,
+}
+
+impl PjrtBackend {
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let rt = Runtime::new(artifacts_dir)?;
+        let draft = ModelHandle::load(&manifest, "draft")?;
+        let target = ModelHandle::load(&manifest, "target")?;
+        Ok(PjrtBackend {
+            rt,
+            draft,
+            target,
+            manifest,
+            groups: Vec::new(),
+            paths: Vec::new(),
+            temp: 0.7,
+            max_steps: MAX_STEPS_DEFAULT,
+            score_hist: crate::util::stats::Histogram::new(10),
+            seed_counter: 1,
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    /// Eagerly compile the entry points a run with <= `max_lanes` paths
+    /// will touch. Lazy compilation otherwise lands on the first request
+    /// (§Perf: ~2-4s of p99 latency on this testbed).
+    pub fn warmup(&self, max_lanes: usize) -> Result<()> {
+        use crate::runtime::EntryKind::{Ingest, Prefill, Span};
+        for model in ["draft", "target"] {
+            for kind in [Prefill, Span, Ingest] {
+                let b = self.manifest.fit_batch(kind, max_lanes)?;
+                // also warm batch-1 (baseline / spec-reason paths)
+                for bb in [1, b] {
+                    if let Ok(e) = self.manifest.entry(kind, model, bb) {
+                        self.rt.precompile(&e.name)?;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn next_seed(&mut self) -> i32 {
+        self.seed_counter = self.seed_counter.wrapping_add(0x9E37);
+        self.seed_counter
+    }
+
+    /// Map mean token log-prob to the paper's 0..9 scale:
+    /// score = floor(10 * geometric-mean token probability), clamped.
+    /// tau = 7 therefore accepts steps whose geometric-mean token
+    /// probability under the target is >= 0.7.
+    pub fn bucket_score(mean_lp: f32) -> u8 {
+        let p = mean_lp.exp().clamp(0.0, 0.9999);
+        (p * 10.0) as u8
+    }
+
+    /// Group lanes -> (pos, cur) vectors for a full-group model call.
+    /// Active paths use their live state; inactive lanes replay their
+    /// frontier token so the call leaves them unchanged.
+    fn group_inputs(&self, group: usize, model_is_draft: bool) -> (Vec<i32>, Vec<i32>) {
+        let g = &self.groups[group];
+        let mut pos = Vec::with_capacity(g.lanes.len());
+        let mut cur = Vec::with_capacity(g.lanes.len());
+        for &pid in &g.lanes {
+            let p = &self.paths[pid];
+            let f = if model_is_draft { p.frontier_d } else { p.frontier_t };
+            // safe even for closed lanes: replay the last cached token
+            let f = f.min(p.trace.len().saturating_sub(1));
+            pos.push(f as i32);
+            cur.push(p.trace[f]);
+        }
+        (pos, cur)
+    }
+
+    /// Execute a draft span for the whole group of `paths[0]`, applying
+    /// results only to `paths`.
+    fn run_span(&mut self, paths: &[PathId], use_target: bool) -> Result<Vec<StepOutcome>> {
+        let group = self.paths[paths[0]].group;
+        for &p in paths {
+            if self.paths[p].group != group {
+                bail!("span batch spans multiple lane groups");
+            }
+            let st = &self.paths[p];
+            let f = if use_target { st.frontier_t } else { st.frontier_d };
+            if f + 1 != st.trace.len() {
+                bail!(
+                    "lane not generation-ready: frontier {f} vs trace {} (path {p})",
+                    st.trace.len()
+                );
+            }
+        }
+        let (pos, cur) = self.group_inputs(group, !use_target);
+        let seed = self.next_seed();
+        let g = &mut self.groups[group];
+        let out = if use_target {
+            self.target.span(&self.rt, &mut g.target_cache, &pos, &cur, self.temp, seed)?
+        } else {
+            let cache = g.draft_cache.as_mut().context("draft cache not initialized")?;
+            self.draft.span(&self.rt, cache, &pos, &cur, self.temp, seed)?
+        };
+
+        let lane_index: HashMap<PathId, usize> = self.groups[group]
+            .lanes
+            .iter()
+            .enumerate()
+            .map(|(i, &p)| (p, i))
+            .collect();
+
+        let eos = self.manifest.vocab.eos;
+        let mut results = Vec::with_capacity(paths.len());
+        for &p in paths {
+            let li = lane_index[&p];
+            let toks = out.toks[li].clone();
+            let st = &mut self.paths[p];
+            st.tentative_start = Some(st.trace.len());
+            st.trace.extend_from_slice(&toks);
+            if use_target {
+                st.frontier_t = out.pos[li] as usize;
+                st.stats.target_tokens += toks.len() as u64 + 1; // +cur fwd
+            } else {
+                st.frontier_d = out.pos[li] as usize;
+                st.stats.draft_tokens += toks.len() as u64 + 1;
+            }
+            let terminal = toks.last() == Some(&eos)
+                || !out.done[li] && st.trace.len() + self.manifest.t_span + 2 >= self.target.spec.s_max;
+            results.push(StepOutcome { tokens: toks, terminal });
+        }
+        Ok(results)
+    }
+
+    /// Ingest each path's un-synced suffix into one model's cache.
+    /// `keep_pending` leaves the final trace token out (generation-ready).
+    fn run_ingest(
+        &mut self,
+        paths: &[PathId],
+        use_target: bool,
+        keep_pending: bool,
+    ) -> Result<Vec<f32>> {
+        // target ingests are scoring passes (charged to score_tokens);
+        // draft ingests are cache syncs (real draft compute)
+        let group = self.paths[paths[0]].group;
+        let g_lanes = self.groups[group].lanes.clone();
+        let n = g_lanes.len();
+        let mut toks: Vec<Vec<i32>> = vec![Vec::new(); n];
+        let mut pos: Vec<i32> = Vec::with_capacity(n);
+        for (li, &pid) in g_lanes.iter().enumerate() {
+            let st = &self.paths[pid];
+            let f = if use_target { st.frontier_t } else { st.frontier_d };
+            pos.push(f.min(st.trace.len()) as i32);
+            if paths.contains(&pid) {
+                let end = if keep_pending { st.trace.len() - 1 } else { st.trace.len() };
+                if f < end {
+                    toks[li] = st.trace[f..end].to_vec();
+                }
+            } // inactive lanes: len 0 -> frozen
+        }
+        let g = &mut self.groups[group];
+        let out = if use_target {
+            self.target.ingest(&self.rt, &mut g.target_cache, &pos, &toks)?
+        } else {
+            let cache = g.draft_cache.as_mut().context("draft cache not initialized")?;
+            self.draft.ingest(&self.rt, cache, &pos, &toks)?
+        };
+
+        let mut lps = Vec::with_capacity(paths.len());
+        for &pid in paths {
+            let li = g_lanes.iter().position(|&x| x == pid).unwrap();
+            let st = &mut self.paths[pid];
+            let ingested = toks[li].len() as u64;
+            if use_target {
+                st.frontier_t = out.pos[li] as usize;
+                st.stats.score_tokens += ingested;
+            } else {
+                st.frontier_d = out.pos[li] as usize;
+                st.stats.draft_tokens += ingested;
+            }
+            lps.push(out.mean_lp[li]);
+        }
+        Ok(lps)
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn meta(&self) -> BackendMeta {
+        BackendMeta {
+            alpha: self.manifest.alpha,
+            target_flops_per_token: self.target.spec.flops_per_token,
+            num_strategies: self.manifest.vocab.num_strategies,
+            max_steps: self.max_steps,
+        }
+    }
+
+    fn select_scores(&mut self, problem: &Problem) -> Result<Vec<f32>> {
+        // One target prefill of the bare prompt; read the logits over the
+        // strategy tokens at the next position — the model's own
+        // preference distribution (paper: "query the target model itself").
+        let v = &self.manifest.vocab;
+        let prompt = tokenizer::prompt(v, &problem.tokens, None);
+        let out = self.target.prefill(&self.rt, &[prompt.clone()])?;
+        let logits = &out.next_logits[0];
+        let s0 = v.strat0 as usize;
+        let k = crate::workload::strategies::NUM_REAL_STRATEGIES;
+        Ok(logits[s0..s0 + k].to_vec())
+        // prefill cost charged to SPM: one prompt pass
+    }
+
+    fn open_paths(
+        &mut self,
+        problem: &Problem,
+        strategies: &[Option<usize>],
+        seed: u64,
+        use_draft: bool,
+    ) -> Result<Vec<PathId>> {
+        let n = strategies.len();
+        if n == 0 {
+            bail!("open_paths: empty");
+        }
+        let v = &self.manifest.vocab;
+        let prompts: Vec<Vec<i32>> =
+            strategies.iter().map(|s| tokenizer::prompt(v, &problem.tokens, *s)).collect();
+
+        // Target prefill builds the target cache for all lanes.
+        let t_out = self.target.prefill(&self.rt, &prompts)?;
+        let d_out = if use_draft { Some(self.draft.prefill(&self.rt, &prompts)?) } else { None };
+
+        let group_id = self.groups.len();
+        let batch = t_out.cache.batch;
+        let mut lanes = Vec::with_capacity(n);
+        let base = self.paths.len();
+        for (i, prompt) in prompts.iter().enumerate() {
+            let pid = base + i;
+            // First pending token: sampled from the generating model's
+            // prefill logits (draft when speculative, else target).
+            let logits = match &d_out {
+                Some(d) => &d.next_logits[i],
+                None => &t_out.next_logits[i],
+            };
+            let mut rng = crate::util::rng::Rng::new(seed ^ (pid as u64) << 8);
+            let first = sampler::sample(logits, self.temp, &mut rng) as i32;
+            let mut trace = prompt.clone();
+            trace.push(first);
+            let prefill_cost = prompt.len() as u64;
+            self.paths.push(PathState {
+                group: group_id,
+                lane: i,
+                prompt_len: prompt.len(),
+                frontier_d: if use_draft { prompt.len() } else { 0 },
+                frontier_t: prompt.len(),
+                tentative_start: None,
+                trace,
+                use_draft,
+                seed: (seed as i32).wrapping_add(i as i32),
+                terminal: false,
+                stats: PathStats {
+                    draft_tokens: if use_draft { prefill_cost } else { 0 },
+                    target_tokens: prefill_cost,
+                    ..Default::default()
+                },
+                closed: false,
+            });
+            lanes.push(pid);
+        }
+        self.groups.push(LaneGroup {
+            draft_cache: d_out.map(|d| d.cache),
+            target_cache: t_out.cache,
+            lanes: lanes.clone(),
+            batch,
+        });
+        Ok(lanes)
+    }
+
+    fn draft_step(&mut self, paths: &[PathId]) -> Result<Vec<StepOutcome>> {
+        for &p in paths {
+            if !self.paths[p].use_draft {
+                bail!("draft_step on a target-only path {p}");
+            }
+        }
+        let out = self.run_span(paths, false)?;
+        for (&p, o) in paths.iter().zip(&out) {
+            self.paths[p].stats.steps += 1;
+            if o.terminal {
+                self.paths[p].terminal = true;
+            }
+        }
+        Ok(out)
+    }
+
+    fn score_step(&mut self, paths: &[PathId]) -> Result<Vec<u8>> {
+        // The scoring ingest pulls the target frontier up through the
+        // whole tentative step (minus nothing: ingest caches everything,
+        // leaving the target ready to re-generate only after rollback).
+        let lps = self.run_ingest(paths, true, false)?;
+        let scores: Vec<u8> = lps.iter().map(|&lp| Self::bucket_score(lp)).collect();
+        for &s in &scores {
+            self.score_hist.add(s as usize);
+        }
+        Ok(scores)
+    }
+
+    fn accept_step(&mut self, paths: &[PathId]) -> Result<()> {
+        for &p in paths {
+            self.paths[p].tentative_start = None;
+        }
+        Ok(())
+    }
+
+    fn rewrite_step(&mut self, paths: &[PathId]) -> Result<Vec<StepOutcome>> {
+        // Roll back the tentative step (pointer reset), then target-span a
+        // replacement and re-sync the draft cache.
+        let group = self.paths[paths[0]].group;
+        for &p in paths {
+            let st = &mut self.paths[p];
+            let start = st.tentative_start.take().context("rewrite without tentative step")?;
+            st.trace.truncate(start);
+            st.terminal = false;
+            // Re-generate from the last committed token: its kv is already
+            // cached; span re-writes it idempotently at pos = start-1.
+            st.frontier_t = start - 1;
+            if st.use_draft {
+                st.frontier_d = st.frontier_d.min(start - 1);
+            }
+        }
+        let out = self.run_span(paths, true)?;
+        for (&p, o) in paths.iter().zip(&out) {
+            let st = &mut self.paths[p];
+            st.stats.rewrites += 1;
+            st.tentative_start = None; // rewrites are committed immediately
+            if o.terminal {
+                st.terminal = true;
+            }
+        }
+        // Sync the draft cache with the rewritten text (keep one pending).
+        let draft_paths: Vec<PathId> =
+            paths.iter().copied().filter(|&p| self.paths[p].use_draft).collect();
+        if !draft_paths.is_empty() {
+            let _ = self.run_ingest(&draft_paths, false, true)?;
+        }
+        let _ = group; // group consistency validated in run_span
+        Ok(out)
+    }
+
+    fn target_step(&mut self, paths: &[PathId]) -> Result<Vec<StepOutcome>> {
+        for &p in paths {
+            let st = &self.paths[p];
+            if st.frontier_t + 1 != st.trace.len() {
+                bail!("target_step: lane {p} not generation-ready");
+            }
+        }
+        let out = self.run_span(paths, true)?;
+        for (&p, o) in paths.iter().zip(&out) {
+            let st = &mut self.paths[p];
+            st.stats.steps += 1;
+            st.tentative_start = None; // target-only steps are committed
+            if o.terminal {
+                st.terminal = true;
+            }
+        }
+        Ok(out)
+    }
+
+    fn trace(&self, path: PathId) -> &[i32] {
+        &self.paths[path].trace
+    }
+
+    fn close_path(&mut self, path: PathId) -> Result<PathStats> {
+        let st = &mut self.paths[path];
+        if st.closed {
+            bail!("double close of path {path}");
+        }
+        st.closed = true;
+        st.stats.trace = st.trace.clone();
+        Ok(st.stats.clone())
+    }
+
+    fn parse_answer(&self, trace: &[i32]) -> Option<i64> {
+        tokenizer::parse_answer(&self.manifest.vocab, trace)
+    }
+
+    /// Real model-time: cumulative PJRT execute seconds.
+    fn clock_secs(&self) -> f64 {
+        self.rt.stats().execute_secs
+    }
+
+    fn score_histogram(&self) -> crate::util::stats::Histogram {
+        self.score_hist.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_score_curve() {
+        // p = e^lp; score = floor(10p)
+        assert_eq!(PjrtBackend::bucket_score(0.0), 9); // p=1.0 clamped
+        assert_eq!(PjrtBackend::bucket_score(-0.01), 9);
+        assert_eq!(PjrtBackend::bucket_score((0.75f32).ln()), 7);
+        assert_eq!(PjrtBackend::bucket_score((0.69f32).ln()), 6);
+        assert_eq!(PjrtBackend::bucket_score(-10.0), 0);
+    }
+
+    #[test]
+    fn bucket_monotone() {
+        let mut prev = 0;
+        for i in 0..100 {
+            let lp = -5.0 + i as f32 * 0.05;
+            let s = PjrtBackend::bucket_score(lp);
+            assert!(s >= prev, "non-monotone at {lp}");
+            prev = s;
+        }
+    }
+}

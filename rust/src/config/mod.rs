@@ -1,0 +1,222 @@
+//! Layered configuration: built-in defaults -> optional JSON config file
+//! (`--config path.json`) -> CLI overrides. All knobs of the SSR engine
+//! and server live here so experiments are reproducible from a single
+//! artifact.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::cli::Args;
+use crate::util::json::Value;
+
+/// How the Selective Parallel Module picks strategies (paper §3.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Selection {
+    /// top-n of the target model's strategy distribution (paper default)
+    ModelTopN,
+    /// sample n distinct strategies from that distribution
+    ModelSample,
+    /// uniform-random n strategies (ablation)
+    Random,
+    /// ground-truth aptitude ranking (upper bound for the ablation)
+    Oracle,
+}
+
+impl Selection {
+    pub fn parse(s: &str) -> Result<Selection> {
+        Ok(match s {
+            "model-top" | "model" => Selection::ModelTopN,
+            "model-sample" => Selection::ModelSample,
+            "random" => Selection::Random,
+            "oracle" => Selection::Oracle,
+            _ => bail!("unknown selection mode `{s}`"),
+        })
+    }
+}
+
+/// Early-exit modes (paper §3.2 "Fast Modes").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StopRule {
+    /// run every path to completion (full SSR)
+    Full,
+    /// stop all paths once any one finishes with an answer
+    Fast1,
+    /// stop once two paths agree on an answer
+    Fast2,
+}
+
+impl StopRule {
+    pub fn parse(s: &str) -> Result<StopRule> {
+        Ok(match s {
+            "full" => StopRule::Full,
+            "fast1" | "fast-1" => StopRule::Fast1,
+            "fast2" | "fast-2" => StopRule::Fast2,
+            _ => bail!("unknown stop rule `{s}`"),
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct SsrConfig {
+    pub artifacts_dir: PathBuf,
+    /// n — selected parallel paths (paper: 3 or 5)
+    pub n_paths: usize,
+    /// K — strategy pool size
+    pub pool_size: usize,
+    /// rewrite threshold tau in 0..=9 (paper: 7)
+    pub tau: u8,
+    /// sampling temperature for step generation
+    pub temp: f32,
+    /// max reasoning steps per path before force-finish
+    pub max_steps: usize,
+    pub stop_rule: StopRule,
+    pub selection: Selection,
+    pub seed: u64,
+}
+
+impl Default for SsrConfig {
+    fn default() -> Self {
+        SsrConfig {
+            artifacts_dir: PathBuf::from("artifacts"),
+            n_paths: 5,
+            pool_size: 12,
+            tau: 7,
+            temp: 0.7,
+            max_steps: 14,
+            stop_rule: StopRule::Full,
+            selection: Selection::ModelTopN,
+            seed: 42,
+        }
+    }
+}
+
+impl SsrConfig {
+    /// Apply a JSON config object (unknown keys rejected).
+    pub fn apply_json(&mut self, v: &Value) -> Result<()> {
+        for (k, val) in v.obj()? {
+            match k.as_str() {
+                "artifacts_dir" => self.artifacts_dir = PathBuf::from(val.str()?),
+                "n_paths" => self.n_paths = val.usize()?,
+                "pool_size" => self.pool_size = val.usize()?,
+                "tau" => self.tau = val.i64()? as u8,
+                "temp" => self.temp = val.f64()? as f32,
+                "max_steps" => self.max_steps = val.usize()?,
+                "stop_rule" => self.stop_rule = StopRule::parse(val.str()?)?,
+                "selection" => self.selection = Selection::parse(val.str()?)?,
+                "seed" => self.seed = val.i64()? as u64,
+                other => bail!("unknown config key `{other}`"),
+            }
+        }
+        self.validate()
+    }
+
+    /// Apply CLI overrides (flags shared across subcommands).
+    pub fn apply_args(&mut self, args: &mut Args) -> Result<()> {
+        if let Some(p) = args.opt("config") {
+            let text = std::fs::read_to_string(p).with_context(|| format!("reading {p}"))?;
+            let v = Value::parse(&text)?;
+            self.apply_json(&v)?;
+        }
+        if let Some(d) = args.opt("artifacts") {
+            self.artifacts_dir = PathBuf::from(d);
+        }
+        self.n_paths = args.opt_usize("paths", self.n_paths)?;
+        self.tau = args.opt_u64("tau", self.tau as u64)? as u8;
+        self.temp = args.opt_f64("temp", self.temp as f64)? as f32;
+        self.max_steps = args.opt_usize("max-steps", self.max_steps)?;
+        if let Some(s) = args.opt("stop") {
+            self.stop_rule = StopRule::parse(s)?;
+        }
+        if let Some(s) = args.opt("selection") {
+            self.selection = Selection::parse(s)?;
+        }
+        self.seed = args.opt_u64("seed", self.seed)?;
+        self.validate()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.n_paths == 0 || self.n_paths > 16 {
+            bail!("n_paths must be in 1..=16, got {}", self.n_paths);
+        }
+        if self.tau > 9 {
+            bail!("tau must be in 0..=9, got {}", self.tau);
+        }
+        if self.pool_size == 0 || self.pool_size > 12 {
+            bail!("pool_size must be in 1..=12");
+        }
+        if self.max_steps == 0 || self.max_steps > 64 {
+            bail!("max_steps must be in 1..=64");
+        }
+        Ok(())
+    }
+
+    /// Default artifacts location relative to the repo root.
+    pub fn locate_artifacts(dir: &Path) -> PathBuf {
+        if dir.is_absolute() || dir.exists() {
+            dir.to_path_buf()
+        } else {
+            PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(dir)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_paper_settings() {
+        let c = SsrConfig::default();
+        assert_eq!(c.n_paths, 5);
+        assert_eq!(c.tau, 7);
+        assert_eq!(c.pool_size, 12);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn json_overrides() {
+        let mut c = SsrConfig::default();
+        let v = Value::parse(r#"{"n_paths": 3, "tau": 9, "stop_rule": "fast2"}"#).unwrap();
+        c.apply_json(&v).unwrap();
+        assert_eq!(c.n_paths, 3);
+        assert_eq!(c.tau, 9);
+        assert_eq!(c.stop_rule, StopRule::Fast2);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut c = SsrConfig::default();
+        let v = Value::parse(r#"{"bogus": 1}"#).unwrap();
+        assert!(c.apply_json(&v).is_err());
+    }
+
+    #[test]
+    fn invalid_values_rejected() {
+        let mut c = SsrConfig::default();
+        assert!(c.apply_json(&Value::parse(r#"{"tau": 12}"#).unwrap()).is_err());
+        c.tau = 7;
+        assert!(c.apply_json(&Value::parse(r#"{"n_paths": 0}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let mut c = SsrConfig::default();
+        let argv: Vec<String> =
+            ["run", "--paths", "3", "--tau", "9", "--selection", "oracle"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        let mut args = Args::parse(&argv).unwrap();
+        c.apply_args(&mut args).unwrap();
+        assert_eq!(c.n_paths, 3);
+        assert_eq!(c.tau, 9);
+        assert_eq!(c.selection, Selection::Oracle);
+    }
+
+    #[test]
+    fn selection_and_stop_parsers() {
+        assert!(Selection::parse("nope").is_err());
+        assert_eq!(StopRule::parse("fast-1").unwrap(), StopRule::Fast1);
+    }
+}

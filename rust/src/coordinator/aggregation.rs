@@ -1,0 +1,203 @@
+//! Answer aggregation (paper §3.2): majority voting over the parallel
+//! paths' final answers, with score-based voting (mean step score, PRM
+//! style) breaking ties — rewritten steps count as score 9, "reflecting
+//! stronger confidence from the large model".
+
+use std::collections::BTreeMap;
+
+/// One finished path's vote.
+#[derive(Debug, Clone)]
+pub struct PathVote {
+    pub answer: Option<i64>,
+    /// 0..=9 scores of its accepted steps (rewrites recorded as 9)
+    pub step_scores: Vec<u8>,
+}
+
+impl PathVote {
+    pub fn mean_score(&self) -> f64 {
+        if self.step_scores.is_empty() {
+            return 0.0;
+        }
+        self.step_scores.iter().map(|&s| s as f64).sum::<f64>() / self.step_scores.len() as f64
+    }
+}
+
+/// Outcome of aggregation, with the decision trail for logging.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Decision {
+    Majority { answer: i64, votes: usize },
+    ScoreBased { answer: i64, mean_score: f64 },
+    NoAnswer,
+}
+
+impl Decision {
+    pub fn answer(&self) -> Option<i64> {
+        match self {
+            Decision::Majority { answer, .. } | Decision::ScoreBased { answer, .. } => {
+                Some(*answer)
+            }
+            Decision::NoAnswer => None,
+        }
+    }
+}
+
+/// Aggregate path votes. Deterministic under permutation of `votes`
+/// (ties inside score-voting break toward the smaller answer).
+pub fn aggregate(votes: &[PathVote]) -> Decision {
+    let mut counts: BTreeMap<i64, usize> = BTreeMap::new();
+    for v in votes {
+        if let Some(a) = v.answer {
+            *counts.entry(a).or_insert(0) += 1;
+        }
+    }
+    if counts.is_empty() {
+        return Decision::NoAnswer;
+    }
+    let best = counts.values().copied().max().unwrap();
+    let leaders: Vec<i64> =
+        counts.iter().filter(|(_, &c)| c == best).map(|(&a, _)| a).collect();
+    if leaders.len() == 1 && best > 1 {
+        return Decision::Majority { answer: leaders[0], votes: best };
+    }
+    // Tie (or all answers distinct): score-based voting among the tied
+    // leaders' paths — highest mean step score wins.
+    let mut best_answer = None;
+    let mut best_score = f64::NEG_INFINITY;
+    for v in votes {
+        let Some(a) = v.answer else { continue };
+        if !leaders.contains(&a) {
+            continue;
+        }
+        let s = v.mean_score();
+        let better = s > best_score
+            || (s == best_score && best_answer.map_or(true, |b| a < b));
+        if better {
+            best_score = s;
+            best_answer = Some(a);
+        }
+    }
+    match best_answer {
+        Some(answer) => Decision::ScoreBased { answer, mean_score: best_score },
+        None => Decision::NoAnswer,
+    }
+}
+
+/// pass@k: does any of the top-k *distinct* answers (ranked by vote count
+/// then mean score) match the gold answer?
+pub fn pass_at_k(votes: &[PathVote], gold: i64, k: usize) -> bool {
+    let mut by_answer: BTreeMap<i64, (usize, f64)> = BTreeMap::new();
+    for v in votes {
+        if let Some(a) = v.answer {
+            let e = by_answer.entry(a).or_insert((0, f64::NEG_INFINITY));
+            e.0 += 1;
+            e.1 = e.1.max(v.mean_score());
+        }
+    }
+    let mut ranked: Vec<(i64, usize, f64)> =
+        by_answer.into_iter().map(|(a, (c, s))| (a, c, s)).collect();
+    ranked.sort_by(|x, y| {
+        y.1.cmp(&x.1)
+            .then(y.2.partial_cmp(&x.2).unwrap_or(std::cmp::Ordering::Equal))
+            .then(x.0.cmp(&y.0))
+    });
+    ranked.iter().take(k).any(|&(a, _, _)| a == gold)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use anyhow::ensure;
+
+    fn vote(answer: Option<i64>, scores: &[u8]) -> PathVote {
+        PathVote { answer, step_scores: scores.to_vec() }
+    }
+
+    #[test]
+    fn clear_majority_wins() {
+        let votes =
+            [vote(Some(7), &[5]), vote(Some(7), &[2]), vote(Some(3), &[9, 9])];
+        assert_eq!(aggregate(&votes), Decision::Majority { answer: 7, votes: 2 });
+    }
+
+    #[test]
+    fn tie_resolved_by_score() {
+        let votes = [vote(Some(7), &[5, 5]), vote(Some(3), &[9, 9])];
+        match aggregate(&votes) {
+            Decision::ScoreBased { answer, mean_score } => {
+                assert_eq!(answer, 3);
+                assert_eq!(mean_score, 9.0);
+            }
+            d => panic!("expected score-based, got {d:?}"),
+        }
+    }
+
+    #[test]
+    fn all_distinct_uses_scores() {
+        let votes =
+            [vote(Some(1), &[4]), vote(Some(2), &[8]), vote(Some(3), &[6])];
+        assert_eq!(aggregate(&votes).answer(), Some(2));
+    }
+
+    #[test]
+    fn no_answers() {
+        assert_eq!(aggregate(&[vote(None, &[9])]), Decision::NoAnswer);
+        assert_eq!(aggregate(&[]), Decision::NoAnswer);
+    }
+
+    #[test]
+    fn none_votes_ignored_in_majority() {
+        let votes = [vote(None, &[]), vote(Some(5), &[7]), vote(Some(5), &[6])];
+        assert_eq!(aggregate(&votes).answer(), Some(5));
+    }
+
+    #[test]
+    fn permutation_invariant() {
+        prop::check("aggregate permutation-invariant", 300, |rng| {
+            let n = 1 + rng.below(6) as usize;
+            let mut votes: Vec<PathVote> = (0..n)
+                .map(|_| {
+                    let ans =
+                        if rng.below(5) == 0 { None } else { Some(rng.below(4) as i64) };
+                    let scores: Vec<u8> =
+                        (0..1 + rng.below(4)).map(|_| rng.below(10) as u8).collect();
+                    PathVote { answer: ans, step_scores: scores }
+                })
+                .collect();
+            let d1 = aggregate(&votes);
+            rng.shuffle(&mut votes);
+            let d2 = aggregate(&votes);
+            ensure!(d1.answer() == d2.answer(), "{d1:?} vs {d2:?}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pass_at_k_ranking() {
+        let votes = [
+            vote(Some(10), &[9]),
+            vote(Some(10), &[8]),
+            vote(Some(20), &[9, 9]),
+            vote(Some(30), &[1]),
+        ];
+        assert!(pass_at_k(&votes, 10, 1)); // 2 votes beats 1
+        assert!(!pass_at_k(&votes, 20, 1));
+        assert!(pass_at_k(&votes, 20, 2));
+        assert!(pass_at_k(&votes, 30, 3));
+        assert!(!pass_at_k(&votes, 99, 4));
+    }
+
+    #[test]
+    fn majority_answer_always_wins_pass_at_1() {
+        prop::check("aggregate majority in top-1 of pass@k ranking", 200, |rng| {
+            let n = 2 + rng.below(5) as usize;
+            let votes: Vec<PathVote> = (0..n)
+                .map(|_| vote(Some(rng.below(3) as i64), &[rng.below(10) as u8]))
+                .collect();
+            if let Decision::Majority { answer, .. } = aggregate(&votes) {
+                ensure!(pass_at_k(&votes, answer, 1));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,372 @@
+//! The SSR engine: drives a [`Backend`] through the paper's inference
+//! methods — baseline decoding, naive/SPM parallel scaling, sequential
+//! speculative reasoning (spec-reason), and full SSR = SPM + step-level
+//! speculative decoding + answer aggregation + fast modes.
+//!
+//! One call = one problem = one lane group; the server and the
+//! experiment runners layer batching-across-requests and trial
+//! repetition on top.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::aggregation::{aggregate, Decision, PathVote};
+use super::spm;
+use crate::backend::{Backend, PathId, StepOutcome};
+use crate::config::{SsrConfig, StopRule};
+use crate::util::rng::Rng;
+use crate::workload::Problem;
+
+/// The five evaluated settings of the paper (§4.2) plus ablation knobs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Method {
+    /// single-path target-only decoding
+    Baseline,
+    /// N parallel target-only paths; `spm` toggles strategy selection
+    Parallel { n: usize, spm: bool },
+    /// sequential speculative reasoning (single path, draft + rewrite)
+    SpecReason { tau: u8 },
+    /// the full framework: SPM selection + SSD + voting (+ fast modes)
+    Ssr { n: usize, tau: u8, stop: StopRule },
+}
+
+impl Method {
+    pub fn name(&self) -> String {
+        match self {
+            Method::Baseline => "baseline".into(),
+            Method::Parallel { n, spm: false } => format!("parallel-{n}"),
+            Method::Parallel { n, spm: true } => format!("parallel-spm-{n}"),
+            Method::SpecReason { tau } => format!("spec-reason({tau})"),
+            Method::Ssr { n, stop: StopRule::Full, .. } => format!("ssr-m{n}"),
+            Method::Ssr { n, stop: StopRule::Fast1, .. } => format!("ssr-m{n}-fast1"),
+            Method::Ssr { n, stop: StopRule::Fast2, .. } => format!("ssr-m{n}-fast2"),
+        }
+    }
+
+    pub fn uses_draft(&self) -> bool {
+        matches!(self, Method::SpecReason { .. } | Method::Ssr { .. })
+    }
+}
+
+/// Everything the eval layer needs from one problem run.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub decision: Decision,
+    pub votes: Vec<PathVote>,
+    pub draft_tokens: u64,
+    pub target_tokens: u64,
+    /// scored-but-not-rewritten target tokens (excluded from gamma per
+    /// the paper's Appendix B accounting; reported separately)
+    pub score_tokens: u64,
+    pub steps: u64,
+    pub rewrites: u64,
+    /// strategies the SPM picked (empty when not used)
+    pub selection: Vec<usize>,
+    /// wall-clock of the engine loop
+    pub wall_secs: f64,
+    /// backend model-time (real execute time on PJRT, virtual calibrated)
+    pub model_secs: f64,
+}
+
+impl RunResult {
+    pub fn answer(&self) -> Option<i64> {
+        self.decision.answer()
+    }
+
+    /// Token-level rewrite-rate proxy R (paper Appendix B approximates
+    /// the token rate by the step rate).
+    pub fn rewrite_rate(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.rewrites as f64 / self.steps as f64
+        }
+    }
+}
+
+struct LivePath {
+    id: PathId,
+    steps_taken: usize,
+    scores: Vec<u8>,
+    terminal: bool,
+}
+
+pub struct Engine<'a> {
+    pub backend: &'a mut dyn Backend,
+    pub cfg: SsrConfig,
+}
+
+impl<'a> Engine<'a> {
+    pub fn new(backend: &'a mut dyn Backend, cfg: SsrConfig) -> Self {
+        Engine { backend, cfg }
+    }
+
+    /// Run one problem under `method`. `seed` controls sampling (trial id).
+    pub fn run(&mut self, problem: &Problem, method: Method, seed: u64) -> Result<RunResult> {
+        let t0 = Instant::now();
+        let clock0 = self.backend.clock_secs();
+        let mut rng = Rng::new(seed ^ 0xE46);
+
+        // --- strategy selection -------------------------------------------------
+        let (strategies, selection): (Vec<Option<usize>>, Vec<usize>) = match method {
+            Method::Baseline | Method::SpecReason { .. } => (vec![None], vec![]),
+            Method::Parallel { n, spm: false } => (vec![None; n], vec![]),
+            Method::Parallel { n, spm: true } | Method::Ssr { n, .. } => {
+                let picked = spm::select(
+                    self.backend,
+                    problem,
+                    self.cfg.pool_size,
+                    n,
+                    self.cfg.selection,
+                    &mut rng,
+                )?;
+                (picked.iter().map(|&s| Some(s)).collect(), picked)
+            }
+        };
+
+        let speculative = method.uses_draft();
+        let (tau, stop) = match method {
+            Method::SpecReason { tau } => (tau, StopRule::Full),
+            Method::Ssr { tau, stop, .. } => (tau, stop),
+            _ => (0, StopRule::Full),
+        };
+
+        // --- open the lane group ------------------------------------------------
+        let ids = self.backend.open_paths(problem, &strategies, seed, speculative)?;
+        let mut live: Vec<LivePath> = ids
+            .iter()
+            .map(|&id| LivePath { id, steps_taken: 0, scores: Vec::new(), terminal: false })
+            .collect();
+
+        // --- the step loop ------------------------------------------------------
+        let max_steps = self.cfg.max_steps;
+        loop {
+            let active: Vec<PathId> = live
+                .iter()
+                .filter(|p| !p.terminal && p.steps_taken < max_steps)
+                .map(|p| p.id)
+                .collect();
+            if active.is_empty() {
+                break;
+            }
+
+            let outcomes: Vec<(PathId, StepOutcome, u8)> = if speculative {
+                let outs = self.backend.draft_step(&active)?;
+                let scores = self.backend.score_step(&active)?;
+                let mut acc = Vec::new();
+                let mut rej = Vec::new();
+                for ((&id, o), &s) in active.iter().zip(outs).zip(&scores) {
+                    if s >= tau {
+                        acc.push((id, o, s));
+                    } else {
+                        rej.push((id, o, s));
+                    }
+                }
+                if !acc.is_empty() {
+                    let ids: Vec<PathId> = acc.iter().map(|x| x.0).collect();
+                    self.backend.accept_step(&ids)?;
+                }
+                if !rej.is_empty() {
+                    let ids: Vec<PathId> = rej.iter().map(|x| x.0).collect();
+                    let rewritten = self.backend.rewrite_step(&ids)?;
+                    // rewritten steps replace the rejected outcome and are
+                    // recorded with score 9 (paper §3.2)
+                    rej = ids
+                        .into_iter()
+                        .zip(rewritten)
+                        .map(|(id, o)| (id, o, 9u8))
+                        .collect();
+                }
+                acc.into_iter().chain(rej).collect()
+            } else {
+                let outs = self.backend.target_step(&active)?;
+                // target-generated steps carry full target confidence
+                active.iter().zip(outs).map(|(&id, o)| (id, o, 9u8)).collect()
+            };
+
+            for (id, outcome, score) in outcomes {
+                let lp = live.iter_mut().find(|p| p.id == id).expect("live path");
+                lp.steps_taken += 1;
+                lp.scores.push(score);
+                if outcome.terminal {
+                    lp.terminal = true;
+                }
+            }
+
+            // --- fast modes (paper §3.2) ---------------------------------------
+            match stop {
+                StopRule::Full => {}
+                StopRule::Fast1 => {
+                    let any_done = live.iter().any(|p| {
+                        p.terminal && self.backend.parse_answer(self.backend.trace(p.id)).is_some()
+                    });
+                    if any_done {
+                        break;
+                    }
+                }
+                StopRule::Fast2 => {
+                    let mut finished: Vec<i64> = live
+                        .iter()
+                        .filter(|p| p.terminal)
+                        .filter_map(|p| self.backend.parse_answer(self.backend.trace(p.id)))
+                        .collect();
+                    finished.sort_unstable();
+                    if finished.windows(2).any(|w| w[0] == w[1]) {
+                        break;
+                    }
+                }
+            }
+        }
+
+        // --- close + vote -------------------------------------------------------
+        let mut votes = Vec::with_capacity(live.len());
+        let (mut draft_tokens, mut target_tokens, mut score_tokens) = (0, 0, 0);
+        let (mut steps, mut rewrites) = (0, 0);
+        for lp in &live {
+            let stats = self.backend.close_path(lp.id)?;
+            let answer = if lp.terminal {
+                self.backend.parse_answer(&stats.trace)
+            } else {
+                // unfinished path (fast mode cut or step cap): no vote
+                // unless the trace happens to contain a FIN answer
+                self.backend.parse_answer(&stats.trace)
+            };
+            draft_tokens += stats.draft_tokens;
+            target_tokens += stats.target_tokens;
+            score_tokens += stats.score_tokens;
+            steps += stats.steps;
+            rewrites += stats.rewrites;
+            votes.push(PathVote { answer, step_scores: lp.scores.clone() });
+        }
+
+        Ok(RunResult {
+            decision: aggregate(&votes),
+            votes,
+            draft_tokens,
+            target_tokens,
+            score_tokens,
+            steps,
+            rewrites,
+            selection,
+            wall_secs: t0.elapsed().as_secs_f64(),
+            model_secs: self.backend.clock_secs() - clock0,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::calibrated::CalibratedBackend;
+    use crate::model::tokenizer::builtin_vocab as test_vocab;
+    use crate::workload::suites;
+
+    fn setup(suite: &str, seed: u64) -> (CalibratedBackend, Vec<Problem>) {
+        let b = CalibratedBackend::for_suite(suite, seed).unwrap();
+        let v = test_vocab();
+        let s = suites::generate(suites::spec(suite).unwrap(), &v);
+        (b, s.problems)
+    }
+
+    fn accuracy(suite: &str, method: Method, n_problems: usize, trials: u64) -> f64 {
+        let mut correct = 0u64;
+        let mut total = 0u64;
+        for trial in 0..trials {
+            let (mut b, problems) = setup(suite, 1000 + trial);
+            let mut eng = Engine::new(&mut b, SsrConfig::default());
+            for p in problems.iter().take(n_problems) {
+                let r = eng.run(p, method, trial * 7919 + 11).unwrap();
+                if r.answer() == Some(p.answer) {
+                    correct += 1;
+                }
+                total += 1;
+            }
+        }
+        correct as f64 / total as f64
+    }
+
+    #[test]
+    fn baseline_run_shape() {
+        let (mut b, problems) = setup("synth-aime", 1);
+        let mut eng = Engine::new(&mut b, SsrConfig::default());
+        let r = eng.run(&problems[0], Method::Baseline, 3).unwrap();
+        assert_eq!(r.votes.len(), 1);
+        assert_eq!(r.draft_tokens, 0);
+        assert!(r.target_tokens > 0);
+        assert!(r.rewrites == 0);
+        assert!(r.model_secs > 0.0);
+    }
+
+    #[test]
+    fn ssr_run_uses_both_models_and_selects() {
+        let (mut b, problems) = setup("synth-math500", 2);
+        let mut eng = Engine::new(&mut b, SsrConfig::default());
+        let r = eng
+            .run(&problems[0], Method::Ssr { n: 5, tau: 7, stop: StopRule::Full }, 4)
+            .unwrap();
+        assert_eq!(r.votes.len(), 5);
+        assert_eq!(r.selection.len(), 5);
+        assert!(r.draft_tokens > 0);
+        assert!(r.target_tokens > 0);
+        assert!(r.steps > 0);
+    }
+
+    #[test]
+    fn tau9_rewrites_more_than_tau0() {
+        let (mut b, problems) = setup("synth-aime", 3);
+        let mut eng = Engine::new(&mut b, SsrConfig::default());
+        let mut hi = 0.0;
+        let mut lo = 0.0;
+        for (i, p) in problems.iter().take(10).enumerate() {
+            let r9 = eng
+                .run(p, Method::Ssr { n: 3, tau: 9, stop: StopRule::Full }, i as u64)
+                .unwrap();
+            let r0 = eng
+                .run(p, Method::Ssr { n: 3, tau: 0, stop: StopRule::Full }, i as u64)
+                .unwrap();
+            hi += r9.rewrite_rate();
+            lo += r0.rewrite_rate();
+        }
+        assert!(hi > lo + 1.0, "tau=9 rate {hi} vs tau=0 rate {lo}");
+    }
+
+    #[test]
+    fn fast_modes_cost_no_more_than_full() {
+        let (mut b, problems) = setup("synth-math500", 4);
+        let mut eng = Engine::new(&mut b, SsrConfig::default());
+        let mut full = 0u64;
+        let mut fast = 0u64;
+        for (i, p) in problems.iter().take(12).enumerate() {
+            let rf = eng
+                .run(p, Method::Ssr { n: 5, tau: 7, stop: StopRule::Full }, i as u64)
+                .unwrap();
+            let r1 = eng
+                .run(p, Method::Ssr { n: 5, tau: 7, stop: StopRule::Fast1 }, i as u64)
+                .unwrap();
+            full += rf.target_tokens + rf.draft_tokens;
+            fast += r1.target_tokens + r1.draft_tokens;
+        }
+        assert!(fast <= full, "fast1 {fast} > full {full}");
+    }
+
+    #[test]
+    fn parallel_beats_baseline_on_calibrated_substrate() {
+        let base = accuracy("synth-livemath", Method::Baseline, 40, 3);
+        let par5 = accuracy("synth-livemath", Method::Parallel { n: 5, spm: false }, 40, 3);
+        let spm5 = accuracy("synth-livemath", Method::Parallel { n: 5, spm: true }, 40, 3);
+        assert!(par5 > base, "parallel {par5} <= baseline {base}");
+        assert!(spm5 > par5 - 0.02, "spm {spm5} much worse than parallel {par5}");
+    }
+
+    #[test]
+    fn method_names() {
+        assert_eq!(Method::Baseline.name(), "baseline");
+        assert_eq!(Method::Parallel { n: 5, spm: true }.name(), "parallel-spm-5");
+        assert_eq!(Method::SpecReason { tau: 7 }.name(), "spec-reason(7)");
+        assert_eq!(
+            Method::Ssr { n: 3, tau: 7, stop: StopRule::Fast2 }.name(),
+            "ssr-m3-fast2"
+        );
+    }
+}

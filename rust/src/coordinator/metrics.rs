@@ -1,0 +1,143 @@
+//! Serving metrics: latency recorder + counters surfaced by the server
+//! (`ssr serve` replies to a `{"op":"stats"}` request) and the bench
+//! harness.
+
+use std::time::Instant;
+
+use crate::util::stats::{mean, percentile, Histogram};
+
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    /// per-request end-to-end latency, seconds
+    pub latencies: Vec<f64>,
+    pub requests: u64,
+    pub answered: u64,
+    pub errors: u64,
+    pub draft_tokens: u64,
+    pub target_tokens: u64,
+    pub steps: u64,
+    pub rewrites: u64,
+    /// 0..=9 step-score histogram (fig5 input)
+    pub scores: Option<Histogram>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics { scores: Some(Histogram::new(10)), ..Default::default() }
+    }
+
+    pub fn record_request(&mut self, latency_s: f64, answered: bool) {
+        self.latencies.push(latency_s);
+        self.requests += 1;
+        if answered {
+            self.answered += 1;
+        }
+    }
+
+    pub fn record_tokens(&mut self, draft: u64, target: u64, steps: u64, rewrites: u64) {
+        self.draft_tokens += draft;
+        self.target_tokens += target;
+        self.steps += steps;
+        self.rewrites += rewrites;
+    }
+
+    pub fn p50(&self) -> f64 {
+        percentile(&self.latencies, 50.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        percentile(&self.latencies, 99.0)
+    }
+
+    pub fn mean_latency(&self) -> f64 {
+        mean(&self.latencies)
+    }
+
+    /// requests/second over the observed span (0 when < 2 requests).
+    pub fn throughput(&self, elapsed_s: f64) -> f64 {
+        if elapsed_s <= 0.0 {
+            0.0
+        } else {
+            self.requests as f64 / elapsed_s
+        }
+    }
+
+    pub fn rewrite_rate(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.rewrites as f64 / self.steps as f64
+        }
+    }
+
+    pub fn summary_json(&self, elapsed_s: f64) -> crate::util::json::Value {
+        use crate::util::json::{i, n, obj};
+        obj(vec![
+            ("requests", i(self.requests as i64)),
+            ("answered", i(self.answered as i64)),
+            ("errors", i(self.errors as i64)),
+            ("mean_latency_s", n(self.mean_latency())),
+            ("p50_s", n(self.p50())),
+            ("p99_s", n(self.p99())),
+            ("throughput_rps", n(self.throughput(elapsed_s))),
+            ("draft_tokens", i(self.draft_tokens as i64)),
+            ("target_tokens", i(self.target_tokens as i64)),
+            ("rewrite_rate", n(self.rewrite_rate())),
+        ])
+    }
+}
+
+/// Simple scoped timer.
+pub struct Timer(Instant);
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer(Instant::now())
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_percentiles() {
+        let mut m = Metrics::new();
+        for i in 1..=100 {
+            m.record_request(i as f64 / 100.0, true);
+        }
+        assert!((m.p50() - 0.505).abs() < 0.01);
+        assert!(m.p99() > 0.98);
+        assert_eq!(m.answered, 100);
+    }
+
+    #[test]
+    fn rates() {
+        let mut m = Metrics::new();
+        m.record_tokens(100, 50, 10, 3);
+        assert!((m.rewrite_rate() - 0.3).abs() < 1e-12);
+        m.record_request(0.1, true);
+        assert_eq!(m.throughput(2.0), 0.5);
+        assert_eq!(m.throughput(0.0), 0.0);
+    }
+
+    #[test]
+    fn summary_json_parses() {
+        let mut m = Metrics::new();
+        m.record_request(0.2, true);
+        let v = m.summary_json(1.0);
+        assert_eq!(v.get_i64("requests").unwrap(), 1);
+        assert!(v.get_f64("mean_latency_s").unwrap() > 0.0);
+    }
+
+    #[test]
+    fn timer_monotone() {
+        let t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(t.secs() >= 0.004);
+    }
+}

@@ -1,0 +1,17 @@
+//! L3 coordinator — the paper's system contribution, as a serving stack:
+//!
+//! * [`spm`] — Selective Parallel Module (strategy selection, §3.1)
+//! * [`engine`] — the SSD step loop, baselines, spec-reason, fast modes
+//! * [`aggregation`] — majority + score-based voting (§3.2)
+//! * [`flops`] — normalized-FLOPs gamma accounting (Appendix B)
+//! * [`server`] — TCP front-end, FIFO scheduler, engine thread
+//! * [`metrics`] — latency/throughput/score instrumentation
+
+pub mod aggregation;
+pub mod engine;
+pub mod flops;
+pub mod metrics;
+pub mod server;
+pub mod spm;
+
+pub use engine::{Engine, Method, RunResult};

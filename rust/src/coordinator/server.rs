@@ -1,0 +1,292 @@
+//! TCP serving front-end: JSON-lines protocol over a router that feeds a
+//! dedicated engine thread (PJRT wrapper types are not Send, and the
+//! testbed is single-core, so one model-executor thread is the right
+//! topology; the listener and connection handlers run on the pool).
+//!
+//! Protocol (one JSON object per line):
+//!   -> {"op":"solve", "expr":"(17+25)*3", "method":"ssr", "paths":5,
+//!       "tau":7}
+//!   <- {"ok":true, "answer":126, "method":"ssr-m5", "steps":9,
+//!       "rewrites":2, "latency_s":0.41, "trace":"Q(17+25)*3;..."}
+//!   -> {"op":"stats"}
+//!   <- {"ok":true, "requests":..., "p50_s":..., ...}
+//!   -> {"op":"shutdown"}
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::engine::{Engine, Method};
+use super::metrics::Metrics;
+use crate::backend::Backend;
+use crate::config::{SsrConfig, StopRule};
+use crate::util::json::{self, Value};
+use crate::util::threadpool::ThreadPool;
+use crate::workload::problems::problem_from_text;
+
+/// A queued unit of work: one solve request and its reply slot.
+pub struct WorkItem {
+    pub expr: String,
+    pub method: Method,
+    pub seed: u64,
+    pub reply: mpsc::Sender<Result<Value>>,
+}
+
+/// Parse the request's method field (mirrors `Method::name`).
+pub fn parse_method(v: &Value, default_paths: usize, default_tau: u8) -> Result<Method> {
+    let name = v.opt("method").map(|m| m.str()).transpose()?.unwrap_or("ssr");
+    let n = v.opt("paths").map(|x| x.usize()).transpose()?.unwrap_or(default_paths);
+    let tau = v.opt("tau").map(|x| x.i64()).transpose()?.unwrap_or(default_tau as i64) as u8;
+    Ok(match name {
+        "baseline" => Method::Baseline,
+        "parallel" => Method::Parallel { n, spm: false },
+        "parallel-spm" => Method::Parallel { n, spm: true },
+        "spec-reason" => Method::SpecReason { tau },
+        "ssr" => Method::Ssr { n, tau, stop: StopRule::Full },
+        "ssr-fast1" => Method::Ssr { n, tau, stop: StopRule::Fast1 },
+        "ssr-fast2" => Method::Ssr { n, tau, stop: StopRule::Fast2 },
+        other => bail!("unknown method `{other}`"),
+    })
+}
+
+/// The engine thread: owns the backend, drains the queue in arrival
+/// order (FIFO scheduler), records metrics.
+fn engine_loop(
+    mut backend: Box<dyn Backend>,
+    cfg: SsrConfig,
+    rx: mpsc::Receiver<WorkItem>,
+    metrics: Arc<Mutex<Metrics>>,
+    vocab: crate::runtime::Vocab,
+) {
+    let mut seq = 0u64;
+    while let Ok(item) = rx.recv() {
+        let t0 = Instant::now();
+        seq += 1;
+        let result = (|| -> Result<Value> {
+            let problem = problem_from_text(&vocab, &item.expr)?;
+            let mut engine = Engine::new(backend.as_mut(), cfg.clone());
+            let r = engine.run(&problem, item.method, item.seed ^ seq)?;
+            let latency = t0.elapsed().as_secs_f64();
+            {
+                let mut m = metrics.lock().unwrap();
+                m.record_request(latency, r.answer().is_some());
+                m.record_tokens(r.draft_tokens, r.target_tokens, r.steps, r.rewrites);
+            }
+            Ok(json::obj(vec![
+                ("ok", Value::Bool(true)),
+                ("answer", r.answer().map(json::i).unwrap_or(Value::Null)),
+                ("gold", json::i(problem.answer)),
+                ("correct", Value::Bool(r.answer() == Some(problem.answer))),
+                ("method", json::s(item.method.name())),
+                ("steps", json::i(r.steps as i64)),
+                ("rewrites", json::i(r.rewrites as i64)),
+                ("draft_tokens", json::i(r.draft_tokens as i64)),
+                ("target_tokens", json::i(r.target_tokens as i64)),
+                ("latency_s", json::n(latency)),
+            ]))
+        })();
+        if result.is_err() {
+            metrics.lock().unwrap().errors += 1;
+        }
+        let _ = item.reply.send(result);
+    }
+}
+
+pub struct Server {
+    pub addr: String,
+    tx: mpsc::Sender<WorkItem>,
+    metrics: Arc<Mutex<Metrics>>,
+    started: Instant,
+    shutdown: Arc<AtomicBool>,
+    cfg: SsrConfig,
+}
+
+impl Server {
+    /// Spawn the engine thread and bind the listener. `backend_factory`
+    /// runs on the engine thread (PJRT types are not Send).
+    pub fn start<F>(
+        host: &str,
+        port: u16,
+        cfg: SsrConfig,
+        vocab: crate::runtime::Vocab,
+        backend_factory: F,
+    ) -> Result<(Server, TcpListener)>
+    where
+        F: FnOnce() -> Result<Box<dyn Backend>> + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<WorkItem>();
+        let metrics = Arc::new(Mutex::new(Metrics::new()));
+        let m2 = Arc::clone(&metrics);
+        let cfg2 = cfg.clone();
+        std::thread::Builder::new()
+            .name("ssr-engine".into())
+            .spawn(move || match backend_factory() {
+                Ok(backend) => engine_loop(backend, cfg2, rx, m2, vocab),
+                Err(e) => log::error!("backend init failed: {e:#}"),
+            })
+            .context("spawning engine thread")?;
+
+        let listener =
+            TcpListener::bind((host, port)).with_context(|| format!("binding {host}:{port}"))?;
+        let addr = listener.local_addr()?.to_string();
+        log::info!("ssr server listening on {addr}");
+        Ok((
+            Server {
+                addr,
+                tx,
+                metrics,
+                started: Instant::now(),
+                shutdown: Arc::new(AtomicBool::new(false)),
+                cfg,
+            },
+            listener,
+        ))
+    }
+
+    /// Accept-loop; blocks until a shutdown request arrives.
+    pub fn serve(&self, listener: TcpListener, pool: &ThreadPool) -> Result<()> {
+        listener.set_nonblocking(true)?;
+        while !self.shutdown.load(Ordering::Acquire) {
+            match listener.accept() {
+                Ok((stream, peer)) => {
+                    log::debug!("connection from {peer}");
+                    let tx = self.tx.clone();
+                    let metrics = Arc::clone(&self.metrics);
+                    let started = self.started;
+                    let shutdown = Arc::clone(&self.shutdown);
+                    let cfg = self.cfg.clone();
+                    pool.execute(move || {
+                        if let Err(e) =
+                            handle_conn(stream, tx, metrics, started, shutdown, cfg)
+                        {
+                            log::warn!("connection error: {e:#}");
+                        }
+                    });
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(10));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+        pool.join();
+        Ok(())
+    }
+
+    pub fn metrics(&self) -> Arc<Mutex<Metrics>> {
+        Arc::clone(&self.metrics)
+    }
+
+    pub fn request_shutdown(&self) {
+        self.shutdown.store(true, Ordering::Release);
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    tx: mpsc::Sender<WorkItem>,
+    metrics: Arc<Mutex<Metrics>>,
+    started: Instant,
+    shutdown: Arc<AtomicBool>,
+    cfg: SsrConfig,
+) -> Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut out = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // client closed
+        }
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match process_line(&line, &tx, &metrics, started, &shutdown, &cfg) {
+            Ok(v) => v,
+            Err(e) => json::obj(vec![
+                ("ok", Value::Bool(false)),
+                ("error", json::s(format!("{e:#}"))),
+            ]),
+        };
+        out.write_all(reply.print().as_bytes())?;
+        out.write_all(b"\n")?;
+        out.flush()?;
+        if shutdown.load(Ordering::Acquire) {
+            return Ok(());
+        }
+    }
+}
+
+fn process_line(
+    line: &str,
+    tx: &mpsc::Sender<WorkItem>,
+    metrics: &Arc<Mutex<Metrics>>,
+    started: Instant,
+    shutdown: &Arc<AtomicBool>,
+    cfg: &SsrConfig,
+) -> Result<Value> {
+    let req = Value::parse(line).context("parsing request")?;
+    match req.get_str("op")? {
+        "solve" => {
+            let expr = req.get_str("expr")?.to_string();
+            let method = parse_method(&req, cfg.n_paths, cfg.tau)?;
+            let seed = req.opt("seed").map(|s| s.i64()).transpose()?.unwrap_or(0) as u64;
+            let (rtx, rrx) = mpsc::channel();
+            tx.send(WorkItem { expr, method, seed, reply: rtx })
+                .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
+            rrx.recv().context("engine reply")??.pipe_ok()
+        }
+        "stats" => {
+            let m = metrics.lock().unwrap();
+            let mut v = m.summary_json(started.elapsed().as_secs_f64());
+            if let Value::Obj(ref mut map) = v {
+                map.insert("ok".into(), Value::Bool(true));
+            }
+            Ok(v)
+        }
+        "shutdown" => {
+            shutdown.store(true, Ordering::Release);
+            Ok(json::obj(vec![("ok", Value::Bool(true)), ("bye", Value::Bool(true))]))
+        }
+        other => bail!("unknown op `{other}`"),
+    }
+}
+
+trait PipeOk {
+    fn pipe_ok(self) -> Result<Value>;
+}
+
+impl PipeOk for Value {
+    fn pipe_ok(self) -> Result<Value> {
+        Ok(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_method_variants() {
+        let v = Value::parse(r#"{"op":"solve","method":"parallel-spm","paths":3}"#).unwrap();
+        assert_eq!(parse_method(&v, 5, 7).unwrap(), Method::Parallel { n: 3, spm: true });
+        let v = Value::parse(r#"{"op":"solve"}"#).unwrap();
+        assert_eq!(
+            parse_method(&v, 5, 7).unwrap(),
+            Method::Ssr { n: 5, tau: 7, stop: StopRule::Full }
+        );
+        let v = Value::parse(r#"{"op":"solve","method":"nope"}"#).unwrap();
+        assert!(parse_method(&v, 5, 7).is_err());
+    }
+
+    #[test]
+    fn parse_method_tau_override() {
+        let v = Value::parse(r#"{"method":"spec-reason","tau":9}"#).unwrap();
+        assert_eq!(parse_method(&v, 5, 7).unwrap(), Method::SpecReason { tau: 9 });
+    }
+}

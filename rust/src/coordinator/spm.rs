@@ -1,0 +1,142 @@
+//! Selective Parallel Module (paper §3.1): rather than exhaustively
+//! running all K = 12 strategies, ask the target model which n << K are
+//! most promising for this problem and instantiate only those.
+//!
+//! The model-internal score is the target's next-token distribution over
+//! the strategy tokens at the selection position (`Backend::
+//! select_scores`) — the near-zero-cost control mechanism the paper
+//! describes (one prompt prefill). Ablation modes: uniform random
+//! (naive parallel with prompts) and the ground-truth aptitude oracle.
+
+use anyhow::Result;
+
+use crate::backend::Backend;
+use crate::config::Selection;
+use crate::model::sampler;
+use crate::util::rng::Rng;
+use crate::workload::strategies::{self, NUM_REAL_STRATEGIES};
+use crate::workload::Problem;
+
+/// Pick `n` strategies from the first `pool_size` entries of the pool.
+pub fn select(
+    backend: &mut dyn Backend,
+    problem: &Problem,
+    pool_size: usize,
+    n: usize,
+    mode: Selection,
+    rng: &mut Rng,
+) -> Result<Vec<usize>> {
+    let k = pool_size.min(NUM_REAL_STRATEGIES);
+    let n = n.min(k);
+    Ok(match mode {
+        Selection::ModelTopN => {
+            let scores = backend.select_scores(problem)?;
+            sampler::top_n(&scores[..k], n)
+        }
+        Selection::ModelSample => {
+            let scores = backend.select_scores(problem)?;
+            sampler::sample_n_distinct(&scores[..k], n, 1.0, rng)
+        }
+        Selection::Random => {
+            let mut pool: Vec<usize> = (0..k).collect();
+            rng.shuffle(&mut pool);
+            pool.truncate(n);
+            pool
+        }
+        Selection::Oracle => {
+            let meta = strategies::builtin_meta();
+            strategies::oracle_ranking(&meta, problem.family)
+                .into_iter()
+                .filter(|&s| s < k)
+                .take(n)
+                .collect()
+        }
+    })
+}
+
+/// Quality of a selection: mean aptitude of the chosen strategies for the
+/// problem's family (diagnostic surfaced by the SPM ablation).
+pub fn selection_quality(strats: &[usize], problem: &Problem) -> f64 {
+    if strats.is_empty() {
+        return 0.0;
+    }
+    let meta = strategies::builtin_meta();
+    strats
+        .iter()
+        .map(|&s| strategies::aptitude(&meta, s, problem.family))
+        .sum::<f64>()
+        / strats.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::calibrated::CalibratedBackend;
+    use crate::model::tokenizer::builtin_vocab as test_vocab;
+    use crate::workload::suites;
+
+    fn problems() -> Vec<Problem> {
+        let v = test_vocab();
+        suites::generate(suites::spec("synth-livemath").unwrap(), &v).problems
+    }
+
+    #[test]
+    fn returns_n_distinct_in_pool() {
+        let mut b = CalibratedBackend::for_suite("synth-livemath", 1).unwrap();
+        let mut rng = Rng::new(2);
+        for mode in
+            [Selection::ModelTopN, Selection::ModelSample, Selection::Random, Selection::Oracle]
+        {
+            for p in problems().iter().take(5) {
+                let s = select(&mut b, p, 12, 5, mode, &mut rng).unwrap();
+                assert_eq!(s.len(), 5, "{mode:?}");
+                let mut d = s.clone();
+                d.sort_unstable();
+                d.dedup();
+                assert_eq!(d.len(), 5, "{mode:?} produced duplicates");
+                assert!(s.iter().all(|&x| x < 12));
+            }
+        }
+    }
+
+    #[test]
+    fn model_selection_beats_random_on_average() {
+        // The SPM claim in miniature: model-internal scores pick
+        // higher-aptitude strategies than uniform random.
+        let mut b = CalibratedBackend::for_suite("synth-livemath", 3).unwrap();
+        let mut rng = Rng::new(4);
+        let ps = problems();
+        let (mut q_model, mut q_rand) = (0.0, 0.0);
+        for p in ps.iter().take(60) {
+            let sm = select(&mut b, p, 12, 5, Selection::ModelTopN, &mut rng).unwrap();
+            let sr = select(&mut b, p, 12, 5, Selection::Random, &mut rng).unwrap();
+            q_model += selection_quality(&sm, p);
+            q_rand += selection_quality(&sr, p);
+        }
+        assert!(
+            q_model > q_rand + 1.0,
+            "model {q_model:.2} should beat random {q_rand:.2}"
+        );
+    }
+
+    #[test]
+    fn oracle_is_upper_bound() {
+        let mut b = CalibratedBackend::for_suite("synth-livemath", 5).unwrap();
+        let mut rng = Rng::new(6);
+        for p in problems().iter().take(30) {
+            let so = select(&mut b, p, 12, 3, Selection::Oracle, &mut rng).unwrap();
+            let sm = select(&mut b, p, 12, 3, Selection::ModelTopN, &mut rng).unwrap();
+            assert!(selection_quality(&so, p) >= selection_quality(&sm, p) - 1e-9);
+        }
+    }
+
+    #[test]
+    fn n_clamped_to_pool() {
+        let mut b = CalibratedBackend::for_suite("synth-livemath", 7).unwrap();
+        let mut rng = Rng::new(8);
+        let p = &problems()[0];
+        let s = select(&mut b, p, 4, 9, Selection::Random, &mut rng).unwrap();
+        assert_eq!(s.len(), 4);
+        assert!(s.iter().all(|&x| x < 4));
+    }
+}

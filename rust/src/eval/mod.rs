@@ -1,0 +1,7 @@
+//! Evaluation layer: pass@k scoring, experiment runners for every table
+//! and figure in the paper's evaluation section, and text-table report
+//! rendering (EXPERIMENTS.md records their output).
+
+pub mod experiments;
+pub mod passk;
+pub mod report;

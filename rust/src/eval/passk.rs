@@ -1,0 +1,129 @@
+//! pass@k accounting across trials (paper §4.1: 6 independent trials per
+//! problem, pass@1 = exact match of the aggregated answer, pass@3 over
+//! the pooled candidate answers).
+
+use crate::coordinator::aggregation::{pass_at_k, PathVote};
+
+/// Accumulates one problem's outcomes across trials.
+#[derive(Debug, Clone, Default)]
+pub struct ProblemTally {
+    pub gold: i64,
+    /// per-trial: (aggregated answer, all path votes)
+    pub trials: Vec<(Option<i64>, Vec<PathVote>)>,
+}
+
+impl ProblemTally {
+    pub fn new(gold: i64) -> Self {
+        ProblemTally { gold, trials: Vec::new() }
+    }
+
+    pub fn add_trial(&mut self, answer: Option<i64>, votes: Vec<PathVote>) {
+        self.trials.push((answer, votes));
+    }
+
+    /// Fraction of trials whose aggregated answer is exactly right.
+    pub fn pass1(&self) -> f64 {
+        if self.trials.is_empty() {
+            return 0.0;
+        }
+        let hit = self.trials.iter().filter(|(a, _)| *a == Some(self.gold)).count();
+        hit as f64 / self.trials.len() as f64
+    }
+
+    /// pass@3 per trial over that trial's pooled path votes; single-path
+    /// methods pool votes from up to 3 consecutive trials (sampling-based
+    /// candidates, as the paper's stochastic-decoding protocol implies).
+    pub fn pass3(&self) -> f64 {
+        if self.trials.is_empty() {
+            return 0.0;
+        }
+        let multi_path = self.trials.iter().any(|(_, v)| v.len() >= 3);
+        if multi_path {
+            let hit = self
+                .trials
+                .iter()
+                .filter(|(_, votes)| pass_at_k(votes, self.gold, 3))
+                .count();
+            hit as f64 / self.trials.len() as f64
+        } else {
+            // pool windows of 3 trials
+            let mut hits = 0;
+            let mut windows = 0;
+            for chunk in self.trials.chunks(3) {
+                let pooled: Vec<PathVote> =
+                    chunk.iter().flat_map(|(_, v)| v.clone()).collect();
+                if pass_at_k(&pooled, self.gold, 3) {
+                    hits += 1;
+                }
+                windows += 1;
+            }
+            hits as f64 / windows as f64
+        }
+    }
+}
+
+/// Mean pass@1 / pass@3 over a set of problems.
+pub fn summarize(tallies: &[ProblemTally]) -> (f64, f64) {
+    if tallies.is_empty() {
+        return (0.0, 0.0);
+    }
+    let p1 = tallies.iter().map(|t| t.pass1()).sum::<f64>() / tallies.len() as f64;
+    let p3 = tallies.iter().map(|t| t.pass3()).sum::<f64>() / tallies.len() as f64;
+    (p1, p3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vote(a: Option<i64>) -> PathVote {
+        PathVote { answer: a, step_scores: vec![8] }
+    }
+
+    #[test]
+    fn pass1_counts_aggregated_answers() {
+        let mut t = ProblemTally::new(5);
+        t.add_trial(Some(5), vec![vote(Some(5))]);
+        t.add_trial(Some(4), vec![vote(Some(4))]);
+        assert_eq!(t.pass1(), 0.5);
+    }
+
+    #[test]
+    fn pass3_multi_path_within_trial() {
+        let mut t = ProblemTally::new(9);
+        // aggregated answer wrong, but gold among top-3 candidates
+        t.add_trial(Some(1), vec![vote(Some(1)), vote(Some(1)), vote(Some(9))]);
+        assert_eq!(t.pass1(), 0.0);
+        assert_eq!(t.pass3(), 1.0);
+    }
+
+    #[test]
+    fn pass3_single_path_pools_trials() {
+        let mut t = ProblemTally::new(7);
+        t.add_trial(Some(1), vec![vote(Some(1))]);
+        t.add_trial(Some(7), vec![vote(Some(7))]);
+        t.add_trial(Some(3), vec![vote(Some(3))]);
+        // one window of 3 trials pooling {1,7,3} -> gold in top-3
+        assert_eq!(t.pass3(), 1.0);
+        assert!((t.pass1() - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pass3_at_least_pass1() {
+        let mut t = ProblemTally::new(2);
+        t.add_trial(Some(2), vec![vote(Some(2)), vote(Some(3)), vote(Some(2))]);
+        t.add_trial(Some(3), vec![vote(Some(3)), vote(Some(3)), vote(Some(2))]);
+        assert!(t.pass3() >= t.pass1());
+    }
+
+    #[test]
+    fn summarize_means() {
+        let mut a = ProblemTally::new(1);
+        a.add_trial(Some(1), vec![vote(Some(1))]);
+        let mut b = ProblemTally::new(2);
+        b.add_trial(Some(9), vec![vote(Some(9))]);
+        let (p1, _) = summarize(&[a, b]);
+        assert_eq!(p1, 0.5);
+        assert_eq!(summarize(&[]), (0.0, 0.0));
+    }
+}

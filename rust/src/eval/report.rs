@@ -1,0 +1,96 @@
+//! Plain-text table / series rendering for experiment output (the same
+//! rows the paper's tables and figure series report). Also JSON dumps
+//! for downstream plotting.
+
+use std::fmt::Write as _;
+
+/// Render an aligned text table.
+pub fn table(title: &str, headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let _ = writeln!(out, "## {title}");
+    let line = |cells: &[String], widths: &[usize]| -> String {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>w$}", c, w = widths.get(i).copied().unwrap_or(8)))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    let hdr: Vec<String> = headers.iter().map(|s| s.to_string()).collect();
+    let _ = writeln!(out, "{}", line(&hdr, &widths));
+    let _ = writeln!(out, "{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+    for row in rows {
+        let _ = writeln!(out, "{}", line(row, &widths));
+    }
+    out
+}
+
+/// Render an (x, y) series as a small text plot plus the raw points —
+/// used for the figure-shaped experiments (fig2, fig5 cumulative).
+pub fn series(title: &str, xlabel: &str, ylabel: &str, points: &[(f64, f64)]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "## {title}");
+    let _ = writeln!(out, "{xlabel:>10}  {ylabel:>10}  ");
+    let ymax = points.iter().map(|p| p.1).fold(f64::MIN, f64::max).max(1e-9);
+    for &(x, y) in points {
+        let bars = ((y / ymax) * 40.0).round() as usize;
+        let _ = writeln!(out, "{x:>10.3}  {y:>10.4}  {}", "#".repeat(bars));
+    }
+    out
+}
+
+pub fn pct(x: f64) -> String {
+    format!("{:.2}", 100.0 * x)
+}
+
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+pub fn f3(x: f64) -> String {
+    format!("{x:.3}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_alignment() {
+        let t = table(
+            "T",
+            &["method", "pass@1"],
+            &[
+                vec!["baseline".into(), "38.89".into()],
+                vec!["ssr".into(), "53.33".into()],
+            ],
+        );
+        assert!(t.contains("## T"));
+        assert!(t.contains("baseline"));
+        let lines: Vec<&str> = t.lines().collect();
+        // header and rows right-aligned to same width
+        assert_eq!(lines[1].len(), lines[3].len());
+    }
+
+    #[test]
+    fn series_renders_bars() {
+        let s = series("acc vs n", "n", "acc", &[(1.0, 0.5), (2.0, 1.0)]);
+        assert!(s.contains("####"));
+        assert!(s.lines().count() >= 4);
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(pct(0.5333), "53.33");
+        assert_eq!(f2(1.188), "1.19");
+        assert_eq!(f3(0.1234), "0.123");
+    }
+}

@@ -1,0 +1,25 @@
+//! SSR — Speculative Parallel Scaling Reasoning (test-time), a full-stack
+//! reproduction of the paper's serving system.
+//!
+//! Three layers (see DESIGN.md):
+//!   * L1/L2 live in `python/compile/` (Pallas kernels + JAX models),
+//!     AOT-lowered to HLO text consumed here;
+//!   * L3 — this crate — is the serving coordinator: the Selective
+//!     Parallel Module ([`coordinator::spm`]), Step-level Speculative
+//!     Decoding ([`coordinator::ssd`]), answer aggregation, fast modes,
+//!     baselines, batching, a TCP server, and the normalized-FLOPs
+//!     accounting from the paper's Appendix B.
+//!
+//! The [`backend`] module is the seam between coordinator logic and model
+//! substrate: the PJRT backend runs the real draft/target transformers
+//! from `artifacts/`; the calibrated backend reproduces the paper's
+//! published operating points through the *same* engine code.
+
+pub mod backend;
+pub mod config;
+pub mod coordinator;
+pub mod eval;
+pub mod model;
+pub mod runtime;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,206 @@
+//! `ssr` — leader binary: solve one problem, serve a TCP endpoint, or
+//! regenerate the paper's experiments.
+//!
+//! ```text
+//! ssr solve --expr "(17+25)*3" [--method ssr|baseline|parallel|parallel-spm|
+//!           spec-reason|ssr-fast1|ssr-fast2] [--backend pjrt|calibrated]
+//! ssr serve [--host 127.0.0.1] [--port 7878] [--backend ...] [--threads 4]
+//! ssr exp   fig2|fig3|fig4|fig5|table1|gamma|all [--backend calibrated]
+//!           [--trials 6] [--problems 60]
+//! ssr selfcheck            # artifacts -> PJRT -> one SSR problem
+//! ```
+//! Shared engine flags: --paths N --tau T --temp X --stop full|fast1|fast2
+//! --selection model-top|model-sample|random|oracle --seed S --artifacts DIR
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use ssr::backend::calibrated::CalibratedBackend;
+use ssr::backend::pjrt::PjrtBackend;
+use ssr::backend::Backend;
+use ssr::config::{SsrConfig, StopRule};
+use ssr::coordinator::engine::{Engine, Method};
+use ssr::coordinator::server::{parse_method, Server};
+use ssr::eval::experiments::{self, ExpOpts};
+use ssr::model::tokenizer;
+use ssr::util::cli::Args;
+use ssr::util::json;
+use ssr::util::threadpool::ThreadPool;
+use ssr::workload::problems::problem_from_text;
+
+fn main() {
+    ssr::util::logging::init();
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn artifacts_dir(cfg: &SsrConfig) -> PathBuf {
+    SsrConfig::locate_artifacts(&cfg.artifacts_dir)
+}
+
+fn make_factory(
+    backend: String,
+    cfg: &SsrConfig,
+) -> impl FnMut(&str, u64) -> Result<Box<dyn Backend>> {
+    let dir = artifacts_dir(cfg);
+    let temp = cfg.temp;
+    let max_steps = cfg.max_steps;
+    move |suite: &str, seed: u64| -> Result<Box<dyn Backend>> {
+        match backend.as_str() {
+            "calibrated" => {
+                Ok(Box::new(CalibratedBackend::for_suite(suite, seed)?) as Box<dyn Backend>)
+            }
+            "pjrt" => {
+                let mut b = PjrtBackend::load(&dir)?;
+                b.temp = temp;
+                b.max_steps = max_steps;
+                Ok(Box::new(b) as Box<dyn Backend>)
+            }
+            other => bail!("unknown backend `{other}` (pjrt|calibrated)"),
+        }
+    }
+}
+
+fn run() -> Result<()> {
+    let mut args = Args::from_env()?;
+    let mut cfg = SsrConfig::default();
+    cfg.apply_args(&mut args)?;
+    let backend_kind = args.opt_str("backend", "pjrt");
+
+    match args.command.clone().as_deref() {
+        Some("solve") => {
+            let expr = args
+                .opt("expr")
+                .map(|s| s.to_string())
+                .or_else(|| args.positional.first().cloned())
+                .context("need --expr or a positional expression")?;
+            let method_name = args.opt_str("method", "ssr");
+            args.finish()?;
+            let req = json::obj(vec![("method", json::s(method_name))]);
+            let method = parse_method(&req, cfg.n_paths, cfg.tau)?;
+            let mut factory = make_factory(backend_kind, &cfg);
+            // calibrated backend needs a suite profile; medium fits ad-hoc
+            let mut backend = factory("synth-livemath", cfg.seed)?;
+            let vocab = tokenizer::builtin_vocab();
+            let problem = problem_from_text(&vocab, &expr)?;
+            let mut engine = Engine::new(backend.as_mut(), cfg.clone());
+            let r = engine.run(&problem, method, cfg.seed)?;
+            println!("expr           : {expr}");
+            println!("method         : {}", method.name());
+            println!("answer         : {:?}", r.answer());
+            println!("gold           : {}", problem.answer);
+            println!("correct        : {}", r.answer() == Some(problem.answer));
+            println!("selection      : {:?}", r.selection);
+            println!("steps/rewrites : {}/{}", r.steps, r.rewrites);
+            println!("tokens d/t     : {}/{}", r.draft_tokens, r.target_tokens);
+            println!("model time     : {:.3}s (wall {:.3}s)", r.model_secs, r.wall_secs);
+            Ok(())
+        }
+        Some("serve") => {
+            let host = args.opt_str("host", "127.0.0.1");
+            let port = args.opt_usize("port", 7878)? as u16;
+            let threads = args.opt_usize("threads", 4)?;
+            let suite = args.opt_str("suite", "synth-livemath");
+            args.finish()?;
+            let mut factory = make_factory(backend_kind, &cfg);
+            let vocab = tokenizer::builtin_vocab();
+            let seed = cfg.seed;
+            let factory_once = move || factory(&suite, seed);
+            let (server, listener) = Server::start(&host, port, cfg, vocab, factory_once)?;
+            println!("listening on {}", server.addr);
+            let pool = ThreadPool::new(threads);
+            server.serve(listener, &pool)
+        }
+        Some("exp") => {
+            let which = args.positional.first().cloned().unwrap_or_else(|| "all".into());
+            let opts = ExpOpts {
+                trials: args.opt_u64("trials", 6)?,
+                max_problems: args.opt_usize("problems", 60)?,
+            };
+            let backend_kind = args.opt_str("backend", "calibrated");
+            let out_path = args.opt("out").map(PathBuf::from);
+            args.finish()?;
+            let mut factory = make_factory(backend_kind, &cfg);
+            let text = run_experiment(&which, &mut factory, &cfg, &opts)?;
+            println!("{text}");
+            if let Some(p) = out_path {
+                std::fs::write(&p, &text).with_context(|| format!("writing {p:?}"))?;
+                println!("(written to {p:?})");
+            }
+            Ok(())
+        }
+        Some("selfcheck") => {
+            args.finish()?;
+            selfcheck(&cfg)
+        }
+        Some(cmd) => bail!("unknown command `{cmd}` (solve|serve|exp|selfcheck)"),
+        None => {
+            println!(
+                "ssr — Speculative Parallel Scaling Reasoning\n\
+                 commands: solve | serve | exp | selfcheck   (see README)"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn run_experiment(
+    which: &str,
+    factory: &mut dyn FnMut(&str, u64) -> Result<Box<dyn Backend>>,
+    cfg: &SsrConfig,
+    opts: &ExpOpts,
+) -> Result<String> {
+    Ok(match which {
+        "fig2" => experiments::fig2(factory, cfg, opts)?,
+        "fig3" => experiments::fig3(factory, cfg, opts)?.1,
+        "fig4" => experiments::fig4(factory, cfg, opts)?.1,
+        "fig5" => experiments::fig5(factory, cfg, opts)?.1,
+        "table1" => experiments::table1(factory, cfg, opts)?.1,
+        "gamma" => experiments::gamma_check(factory, cfg, opts)?,
+        "tau" => experiments::tau_sweep(factory, cfg, opts)?,
+        "selection" => experiments::selection_ablation(factory, cfg, opts)?,
+        "all" => {
+            let mut text = String::new();
+            for name in ["fig2", "fig3", "fig4", "fig5", "table1", "gamma", "tau", "selection"] {
+                let t = run_experiment(name, factory, cfg, opts)?;
+                text.push_str(&format!("==== {name} ====\n{t}\n"));
+            }
+            text
+        }
+        other => bail!("unknown experiment `{other}`"),
+    })
+}
+
+/// Load artifacts, run one SSR problem end-to-end on the PJRT backend,
+/// print timing — the fastest way to verify an installation.
+fn selfcheck(cfg: &SsrConfig) -> Result<()> {
+    let dir = artifacts_dir(cfg);
+    println!("artifacts: {dir:?}");
+    let mut b = PjrtBackend::load(&dir)?;
+    b.temp = cfg.temp;
+    b.warmup(3)?; // precompile the variants this run touches
+    let vocab = b.manifest().vocab.clone();
+    let problem = problem_from_text(&vocab, "17+25*3")?;
+    let mut engine = Engine::new(&mut b, cfg.clone());
+    let t0 = std::time::Instant::now();
+    let r = engine.run(&problem, Method::Ssr { n: 3, tau: cfg.tau, stop: StopRule::Full }, 7)?;
+    println!(
+        "answer={:?} gold={} steps={} rewrites={}",
+        r.answer(),
+        problem.answer,
+        r.steps,
+        r.rewrites
+    );
+    println!(
+        "tokens draft/target = {}/{}   model {:.2}s   wall {:.2}s",
+        r.draft_tokens,
+        r.target_tokens,
+        r.model_secs,
+        t0.elapsed().as_secs_f64()
+    );
+    println!("selfcheck OK");
+    Ok(())
+}

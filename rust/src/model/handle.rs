@@ -1,0 +1,309 @@
+//! Typed execution wrappers over the AOT entry points of one model
+//! (draft or target): prefill / span / ingest, plus the KV-cache state
+//! they thread through.
+//!
+//! Cache contract (mirrors `python/compile/model.py`):
+//!   * `pos[b]` = number of valid cache entries for lane b;
+//!   * `span` caches `cur` + all sampled tokens EXCEPT the last one —
+//!     the caller must feed that token back (as the next span's `cur` or
+//!     the next ingest's first token);
+//!   * `ingest` caches every token in `toks[:len]`; lanes with `len = 0`
+//!     are frozen (no cache/pos/score mutation).
+//!
+//! Methods accept up to `batch` logical lanes and pad internally to the
+//! compiled batch variant; the coordinator's batcher chooses variants.
+
+use anyhow::{bail, Context, Result};
+use xla::Literal;
+
+use crate::runtime::literals::{lit_i32, scalar_f32, scalar_i32, to_vec_f32, to_vec_i32};
+use crate::runtime::{EntryKind, Manifest, ModelSpec, Runtime, Weights};
+
+/// Device-shaped KV cache for a lane group (batch = compiled variant).
+pub struct KvCache {
+    pub k: Literal,
+    pub v: Literal,
+    pub batch: usize,
+}
+
+pub struct PrefillOut {
+    /// per-lane logits at the last prompt position (next-token dist)
+    pub next_logits: Vec<Vec<f32>>,
+    pub cache: KvCache,
+    /// per-lane valid cache length (= prompt length)
+    pub pos: Vec<i32>,
+}
+
+pub struct SpanOut {
+    /// per-lane sampled tokens, trimmed to `ntake` (delimiter included)
+    pub toks: Vec<Vec<i32>>,
+    /// lane hit a step delimiter within T_SPAN
+    pub done: Vec<bool>,
+    pub pos: Vec<i32>,
+}
+
+pub struct IngestOut {
+    /// per-lane mean next-token log-prob over the ingested span
+    pub mean_lp: Vec<f32>,
+    /// per-lane count of scored predictions
+    pub cnt: Vec<i32>,
+    /// per-lane logits after the final ingested token
+    pub last_logits: Vec<Vec<f32>>,
+    pub pos: Vec<i32>,
+}
+
+pub struct ModelHandle {
+    pub spec: ModelSpec,
+    weights: Weights,
+    t_span: usize,
+    prefill_batches: Vec<usize>,
+    step_batches: Vec<usize>,
+}
+
+impl ModelHandle {
+    pub fn load(manifest: &Manifest, name: &str) -> Result<Self> {
+        let spec = manifest.model(name)?.clone();
+        let weights = Weights::load(&manifest.dir, &spec)?;
+        Ok(ModelHandle {
+            spec,
+            weights,
+            t_span: manifest.t_span,
+            prefill_batches: manifest.prefill_batches.clone(),
+            step_batches: manifest.step_batches.clone(),
+        })
+    }
+
+    pub fn t_span(&self) -> usize {
+        self.t_span
+    }
+
+    fn pick_batch(&self, kind: EntryKind, n: usize) -> Result<usize> {
+        let list = match kind {
+            EntryKind::Prefill => &self.prefill_batches,
+            _ => &self.step_batches,
+        };
+        list.iter().copied().filter(|&b| b >= n).min().with_context(|| {
+            format!("{n} lanes exceed every compiled {kind:?} batch variant {list:?}")
+        })
+    }
+
+    fn entry_name(&self, kind: EntryKind, batch: usize) -> String {
+        let k = match kind {
+            EntryKind::Prefill => "prefill",
+            EntryKind::Span => "span",
+            EntryKind::Ingest => "ingest",
+        };
+        format!("{k}_{}_b{batch}", self.spec.name)
+    }
+
+    /// Weight literals followed by per-call args, as the HLO expects.
+    fn args<'a>(&'a self, rest: &'a [&'a Literal]) -> Vec<&'a Literal> {
+        let mut v: Vec<&Literal> = self.weights.literals.iter().collect();
+        v.extend_from_slice(rest);
+        v
+    }
+
+    /// Run prefill over `prompts` (<= largest compiled batch). Prompts are
+    /// right-padded to S_MAX with PAD(0); per-lane `pos` = prompt length.
+    pub fn prefill(&self, rt: &Runtime, prompts: &[Vec<i32>]) -> Result<PrefillOut> {
+        let n = prompts.len();
+        let b = self.pick_batch(EntryKind::Prefill, n)?;
+        let s = self.spec.s_max;
+        let vsz = self.spec.vocab;
+
+        let mut tokens = vec![0i32; b * s];
+        let mut lens = vec![1i32; b]; // padded lanes: length 1 (BOS-ish)
+        for (i, p) in prompts.iter().enumerate() {
+            if p.len() > s {
+                bail!("prompt of {} tokens exceeds S_MAX={s}", p.len());
+            }
+            tokens[i * s..i * s + p.len()].copy_from_slice(p);
+            lens[i] = p.len() as i32;
+        }
+        let tokens_l = lit_i32(&tokens, &[b, s])?;
+        let lens_l = lit_i32(&lens, &[b])?;
+
+        let name = self.entry_name(EntryKind::Prefill, b);
+        let outs = rt.execute(&name, &self.args(&[&tokens_l, &lens_l]))?;
+        let [logits, k, v] = take3(outs)?;
+
+        let logits_v = to_vec_f32(&logits)?;
+        let mut next_logits = Vec::with_capacity(n);
+        for (i, p) in prompts.iter().enumerate() {
+            let at = (i * s + p.len() - 1) * vsz;
+            next_logits.push(logits_v[at..at + vsz].to_vec());
+        }
+        Ok(PrefillOut {
+            next_logits,
+            cache: KvCache { k, v, batch: b },
+            pos: lens[..n].to_vec(),
+        })
+    }
+
+    /// Speculatively draft one reasoning step per active lane.
+    pub fn span(
+        &self,
+        rt: &Runtime,
+        cache: &mut KvCache,
+        pos: &[i32],
+        cur: &[i32],
+        temp: f32,
+        seed: i32,
+    ) -> Result<SpanOut> {
+        let n = pos.len();
+        let b = cache.batch;
+        if n > b || cur.len() != n {
+            bail!("span: {n} lanes vs cache batch {b} / cur {}", cur.len());
+        }
+        let pos_l = lit_i32(&pad_to(pos, b, 0), &[b])?;
+        let cur_l = lit_i32(&pad_to(cur, b, 0), &[b])?;
+        let temp_l = scalar_f32(temp);
+        let seed_l = scalar_i32(seed);
+
+        let name = self.entry_name(EntryKind::Span, b);
+        let outs = rt.execute(
+            &name,
+            &self.args(&[&cache.k, &cache.v, &pos_l, &cur_l, &temp_l, &seed_l]),
+        )?;
+        let [toks, ntake, done, pos_out, k, v] = take6(outs)?;
+        cache.k = k;
+        cache.v = v;
+
+        let toks_v = to_vec_i32(&toks)?;
+        let ntake_v = to_vec_i32(&ntake)?;
+        let done_v = to_vec_i32(&done)?;
+        let pos_v = to_vec_i32(&pos_out)?;
+        let t = self.t_span;
+        let out_toks = (0..n)
+            .map(|i| toks_v[i * t..i * t + ntake_v[i] as usize].to_vec())
+            .collect();
+        Ok(SpanOut {
+            toks: out_toks,
+            done: done_v[..n].iter().map(|&d| d != 0).collect(),
+            pos: pos_v[..n].to_vec(),
+        })
+    }
+
+    /// Teacher-force tokens into the cache; returns span scores.
+    /// `toks[i].len()` may be 0 to freeze a lane. Rows longer than T_SPAN
+    /// are processed in T_SPAN-sized chunks (multiple HLO calls); scores
+    /// accumulate across chunks. (The log-prob of each chunk's first
+    /// token given the previous chunk's last is skipped by the ingest
+    /// kernel's skip-first semantics — a <1-token approximation per
+    /// chunk, documented in DESIGN.md §9.)
+    pub fn ingest(
+        &self,
+        rt: &Runtime,
+        cache: &mut KvCache,
+        pos: &[i32],
+        toks: &[Vec<i32>],
+    ) -> Result<IngestOut> {
+        let n = pos.len();
+        let b = cache.batch;
+        if n > b || toks.len() != n {
+            bail!("ingest: {n} lanes vs cache batch {b} / toks {}", toks.len());
+        }
+        let t = self.t_span;
+        let vsz = self.spec.vocab;
+
+        let mut offset = vec![0usize; n];
+        let mut cur_pos: Vec<i32> = pad_to(pos, b, 0);
+        let mut sum_acc = vec![0.0f32; n];
+        let mut cnt_acc = vec![0i32; n];
+        let mut last_logits: Vec<Vec<f32>> = vec![vec![0.0; vsz]; n];
+
+        loop {
+            let mut flat = vec![0i32; b * t];
+            let mut lens = vec![0i32; b];
+            let mut any = false;
+            for (i, row) in toks.iter().enumerate() {
+                let take = (row.len() - offset[i]).min(t);
+                if take > 0 {
+                    flat[i * t..i * t + take]
+                        .copy_from_slice(&row[offset[i]..offset[i] + take]);
+                    lens[i] = take as i32;
+                    any = true;
+                }
+            }
+            if !any {
+                break;
+            }
+            let toks_l = lit_i32(&flat, &[b, t])?;
+            let lens_l = lit_i32(&lens, &[b])?;
+            let pos_l = lit_i32(&cur_pos, &[b])?;
+
+            let name = self.entry_name(EntryKind::Ingest, b);
+            let outs =
+                rt.execute(&name, &self.args(&[&cache.k, &cache.v, &pos_l, &toks_l, &lens_l]))?;
+            let [sum_lp, cnt, ll, pos_out, k, v] = take6(outs)?;
+            cache.k = k;
+            cache.v = v;
+
+            let sum_v = to_vec_f32(&sum_lp)?;
+            let cnt_v = to_vec_i32(&cnt)?;
+            let ll_v = to_vec_f32(&ll)?;
+            let pos_v = to_vec_i32(&pos_out)?;
+            for i in 0..n {
+                if lens[i] > 0 {
+                    sum_acc[i] += sum_v[i];
+                    cnt_acc[i] += cnt_v[i];
+                    last_logits[i].copy_from_slice(&ll_v[i * vsz..(i + 1) * vsz]);
+                    offset[i] += lens[i] as usize;
+                }
+            }
+            cur_pos[..n].copy_from_slice(&pos_v[..n]);
+        }
+
+        Ok(IngestOut {
+            mean_lp: (0..n).map(|i| sum_acc[i] / (cnt_acc[i].max(1) as f32)).collect(),
+            cnt: cnt_acc,
+            last_logits,
+            pos: cur_pos[..n].to_vec(),
+        })
+    }
+
+    /// FLOPs of one forward token (the paper's F_d / F_t).
+    pub fn flops_per_token(&self) -> u64 {
+        self.spec.flops_per_token
+    }
+}
+
+fn pad_to(xs: &[i32], b: usize, fill: i32) -> Vec<i32> {
+    let mut v = xs.to_vec();
+    v.resize(b, fill);
+    v
+}
+
+fn take3(mut outs: Vec<Literal>) -> Result<[Literal; 3]> {
+    if outs.len() != 3 {
+        bail!("expected 3 outputs, got {}", outs.len());
+    }
+    let c = outs.pop().unwrap();
+    let b = outs.pop().unwrap();
+    let a = outs.pop().unwrap();
+    Ok([a, b, c])
+}
+
+fn take6(mut outs: Vec<Literal>) -> Result<[Literal; 6]> {
+    if outs.len() != 6 {
+        bail!("expected 6 outputs, got {}", outs.len());
+    }
+    let f = outs.pop().unwrap();
+    let e = outs.pop().unwrap();
+    let d = outs.pop().unwrap();
+    let c = outs.pop().unwrap();
+    let b = outs.pop().unwrap();
+    let a = outs.pop().unwrap();
+    Ok([a, b, c, d, e, f])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_to_extends_and_preserves() {
+        assert_eq!(pad_to(&[1, 2], 4, 0), vec![1, 2, 0, 0]);
+        assert_eq!(pad_to(&[1, 2, 3], 3, 9), vec![1, 2, 3]);
+    }
+}

@@ -1,0 +1,9 @@
+//! Model layer: typed access to the AOT-compiled draft/target
+//! transformers (handles + KV caches), the shared tokenizer/grammar, and
+//! host-side sampling.
+
+pub mod handle;
+pub mod sampler;
+pub mod tokenizer;
+
+pub use handle::{IngestOut, KvCache, ModelHandle, PrefillOut, SpanOut};

@@ -1,0 +1,145 @@
+//! Host-side sampling over logits rows — used for the first token after a
+//! prefill, for strategy selection (SPM reads the target model's
+//! distribution over strategy tokens), and by the calibrated backend.
+
+use crate::util::rng::Rng;
+
+/// Numerically-stable softmax.
+pub fn softmax(logits: &[f32]) -> Vec<f32> {
+    let m = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = logits.iter().map(|&x| (x - m).exp()).collect();
+    let z: f32 = exps.iter().sum();
+    exps.iter().map(|&e| e / z).collect()
+}
+
+/// Log-softmax (scoring paths re-derive per-token log-probs host-side).
+pub fn log_softmax(logits: &[f32]) -> Vec<f32> {
+    let m = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let z: f32 = logits.iter().map(|&x| (x - m).exp()).sum();
+    let lz = z.ln() + m;
+    logits.iter().map(|&x| x - lz).collect()
+}
+
+pub fn argmax(logits: &[f32]) -> usize {
+    logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+/// Greedy when `temp <= 0`, else temperature sampling.
+pub fn sample(logits: &[f32], temp: f32, rng: &mut Rng) -> usize {
+    if temp <= 0.0 {
+        return argmax(logits);
+    }
+    let scaled: Vec<f32> = logits.iter().map(|&x| x / temp).collect();
+    let probs = softmax(&scaled);
+    let x = rng.f64() as f32;
+    let mut acc = 0.0f32;
+    for (i, &p) in probs.iter().enumerate() {
+        acc += p;
+        if x < acc {
+            return i;
+        }
+    }
+    probs.len() - 1
+}
+
+/// Indices of the `n` largest logits, descending (deterministic
+/// tie-break by index, so strategy selection is reproducible).
+pub fn top_n(logits: &[f32], n: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    idx.sort_by(|&a, &b| {
+        logits[b].partial_cmp(&logits[a]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    });
+    idx.truncate(n);
+    idx
+}
+
+/// Sample `n` distinct indices without replacement, proportional to
+/// softmax probabilities (the stochastic variant of strategy selection).
+pub fn sample_n_distinct(logits: &[f32], n: usize, temp: f32, rng: &mut Rng) -> Vec<usize> {
+    let mut remaining: Vec<usize> = (0..logits.len()).collect();
+    let mut out = Vec::with_capacity(n);
+    let t = temp.max(1e-3);
+    while out.len() < n && !remaining.is_empty() {
+        let weights: Vec<f64> = {
+            let sub: Vec<f32> = remaining.iter().map(|&i| logits[i] / t).collect();
+            softmax(&sub).iter().map(|&p| p as f64).collect()
+        };
+        let pick = rng.choice_weighted(&weights);
+        out.push(remaining.remove(pick));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let p = softmax(&[1.0, 2.0, 3.0]);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn softmax_handles_large_logits() {
+        let p = softmax(&[1000.0, 1000.0]);
+        assert!((p[0] - 0.5).abs() < 1e-6);
+        assert!(p.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn log_softmax_consistent() {
+        let l = [0.5f32, -1.0, 2.0];
+        let ls = log_softmax(&l);
+        let s = softmax(&l);
+        for (a, b) in ls.iter().zip(&s) {
+            assert!((a.exp() - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn greedy_is_argmax() {
+        let mut rng = Rng::new(1);
+        assert_eq!(sample(&[0.1, 5.0, 0.2], 0.0, &mut rng), 1);
+        assert_eq!(argmax(&[-1.0, -2.0]), 0);
+    }
+
+    #[test]
+    fn sampling_respects_distribution() {
+        let mut rng = Rng::new(2);
+        let logits = [0.0f32, 2.0];
+        let mut counts = [0usize; 2];
+        for _ in 0..5000 {
+            counts[sample(&logits, 1.0, &mut rng)] += 1;
+        }
+        let frac = counts[1] as f64 / 5000.0;
+        let expect = (2.0f64.exp()) / (1.0 + 2.0f64.exp());
+        assert!((frac - expect).abs() < 0.03, "frac={frac} expect={expect}");
+    }
+
+    #[test]
+    fn top_n_ordering_and_tiebreak() {
+        assert_eq!(top_n(&[1.0, 3.0, 2.0, 3.0], 3), vec![1, 3, 2]);
+        assert_eq!(top_n(&[1.0], 5), vec![0]);
+    }
+
+    #[test]
+    fn sample_n_distinct_no_repeats() {
+        let mut rng = Rng::new(3);
+        let logits = vec![0.0f32; 13];
+        for _ in 0..50 {
+            let picks = sample_n_distinct(&logits, 5, 1.0, &mut rng);
+            assert_eq!(picks.len(), 5);
+            let mut s = picks.clone();
+            s.sort_unstable();
+            s.dedup();
+            assert_eq!(s.len(), 5);
+        }
+    }
+}

@@ -1,0 +1,419 @@
+//! Token-stream utilities over the manifest vocabulary: rendering,
+//! text tokenization, answer/step parsing, and an exact evaluator for
+//! step grading.
+//!
+//! The grammar mirrors `python/compile/corpus.py`:
+//!   problem  := BOS Q <expr> SEP [<strategy>]
+//!   trace    := (STEP <expr> EQ <number> SEP)* FIN <number> EOS
+//! with `%` binding loosest (its compound left operand is always
+//! parenthesized by the renderer, so standard precedence reads the same).
+
+use anyhow::{bail, Result};
+
+use crate::runtime::Vocab;
+
+/// Render a non-negative integer as digit tokens (no leading zeros).
+pub fn num_tokens(v: &Vocab, value: i64) -> Vec<i32> {
+    assert!(value >= 0, "corpus values are non-negative");
+    value.to_string().bytes().map(|b| v.digit0 + (b - b'0') as i32).collect()
+}
+
+/// Human-readable rendering of a token stream (debugging / server output).
+pub fn detokenize(v: &Vocab, toks: &[i32]) -> String {
+    toks.iter()
+        .filter(|&&t| t != v.pad)
+        .map(|t| v.names.get(t).map(|s| s.as_str()).unwrap_or("?").to_string())
+        .collect()
+}
+
+/// Tokenize an expression string (`"(17+25)*3%4"`) into vocab ids.
+/// Digits become individual digit tokens; whitespace is skipped.
+pub fn tokenize_expr(v: &Vocab, text: &str) -> Result<Vec<i32>> {
+    let mut out = Vec::new();
+    for c in text.chars() {
+        let t = match c {
+            '0'..='9' => v.digit0 + (c as i32 - '0' as i32),
+            '+' => v.plus,
+            '-' => v.minus,
+            '*' => v.mul,
+            '(' => v.lparen,
+            ')' => v.rparen,
+            '%' => v.modulo,
+            ' ' | '\t' => continue,
+            _ => bail!("unsupported character `{c}` in expression"),
+        };
+        out.push(t);
+    }
+    if out.is_empty() {
+        bail!("empty expression");
+    }
+    Ok(out)
+}
+
+/// Build the serving prompt: `BOS Q <expr> SEP [<strategy>]`.
+pub fn prompt(v: &Vocab, expr: &[i32], strategy: Option<usize>) -> Vec<i32> {
+    let mut p = Vec::with_capacity(expr.len() + 4);
+    p.push(v.bos);
+    p.push(v.q);
+    p.extend_from_slice(expr);
+    p.push(v.sep);
+    if let Some(s) = strategy {
+        p.push(v.strat0 + s as i32);
+    }
+    p
+}
+
+/// Extract the final answer from a trace ending `... FIN <digits> EOS`.
+pub fn parse_answer(v: &Vocab, toks: &[i32]) -> Option<i64> {
+    let fi = toks.iter().rposition(|&t| t == v.fin)?;
+    let mut digits = Vec::new();
+    for &t in &toks[fi + 1..] {
+        if (v.digit0..v.digit0 + 10).contains(&t) {
+            digits.push((t - v.digit0) as i64);
+        } else {
+            break;
+        }
+    }
+    if digits.is_empty() || digits.len() > 9 {
+        return None;
+    }
+    Some(digits.iter().fold(0, |acc, d| acc * 10 + d))
+}
+
+/// One parsed reasoning step: `STEP <lhs> EQ <claimed> SEP`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParsedStep {
+    pub lhs: Vec<i32>,
+    pub claimed: i64,
+}
+
+/// Split a full trace into its steps (ignoring the final answer segment).
+pub fn parse_steps(v: &Vocab, toks: &[i32]) -> Vec<ParsedStep> {
+    let mut steps = Vec::new();
+    let mut i = 0;
+    while i < toks.len() {
+        if toks[i] != v.step {
+            i += 1;
+            continue;
+        }
+        let start = i + 1;
+        let mut eq = None;
+        let mut end = toks.len();
+        for (j, &t) in toks.iter().enumerate().skip(start) {
+            if t == v.eq && eq.is_none() {
+                eq = Some(j);
+            }
+            if t == v.sep || t == v.eos {
+                end = j;
+                break;
+            }
+        }
+        if let Some(eqi) = eq {
+            let lhs = toks[start..eqi].to_vec();
+            if let Some(claimed) = parse_number(v, &toks[eqi + 1..end]) {
+                steps.push(ParsedStep { lhs, claimed });
+            }
+        }
+        i = end + 1;
+    }
+    steps
+}
+
+fn parse_number(v: &Vocab, toks: &[i32]) -> Option<i64> {
+    if toks.is_empty() || toks.len() > 9 {
+        return None;
+    }
+    let mut acc = 0i64;
+    for &t in toks {
+        if !(v.digit0..v.digit0 + 10).contains(&t) {
+            return None;
+        }
+        acc = acc * 10 + (t - v.digit0) as i64;
+    }
+    Some(acc)
+}
+
+/// Exact evaluator over rendered expression tokens (shunting-yard with the
+/// corpus grammar: `%` loosest, then `+`/`-`, then `*`; parens). Used by
+/// the step grader and the workload generator's cross-checks.
+pub fn eval_expr(v: &Vocab, toks: &[i32]) -> Result<i64> {
+    let mut ops: Vec<i32> = Vec::new();
+    let mut vals: Vec<i64> = Vec::new();
+    let prec = |t: i32| -> i32 {
+        if t == v.modulo {
+            0
+        } else if t == v.plus || t == v.minus {
+            1
+        } else {
+            2 // mul
+        }
+    };
+    let apply = |vals: &mut Vec<i64>, op: i32| -> Result<()> {
+        let b = vals.pop().ok_or_else(|| anyhow::anyhow!("missing rhs"))?;
+        let a = vals.pop().ok_or_else(|| anyhow::anyhow!("missing lhs"))?;
+        let r = if op == v.plus {
+            a + b
+        } else if op == v.minus {
+            a - b
+        } else if op == v.mul {
+            a * b
+        } else if op == v.modulo {
+            if b == 0 {
+                bail!("mod by zero");
+            }
+            a.rem_euclid(b)
+        } else {
+            bail!("unknown op token {op}")
+        };
+        vals.push(r);
+        Ok(())
+    };
+
+    let mut i = 0;
+    let mut expect_operand = true;
+    while i < toks.len() {
+        let t = toks[i];
+        if (v.digit0..v.digit0 + 10).contains(&t) {
+            let mut acc = 0i64;
+            let mut n = 0;
+            while i < toks.len() && (v.digit0..v.digit0 + 10).contains(&toks[i]) {
+                acc = acc * 10 + (toks[i] - v.digit0) as i64;
+                i += 1;
+                n += 1;
+                if n > 9 {
+                    bail!("number too long");
+                }
+            }
+            vals.push(acc);
+            expect_operand = false;
+            continue;
+        } else if t == v.lparen {
+            ops.push(t);
+            expect_operand = true;
+        } else if t == v.rparen {
+            while let Some(&op) = ops.last() {
+                if op == v.lparen {
+                    break;
+                }
+                apply(&mut vals, ops.pop().unwrap())?;
+            }
+            if ops.pop() != Some(v.lparen) {
+                bail!("unbalanced parens");
+            }
+            expect_operand = false;
+        } else if t == v.plus || t == v.minus || t == v.mul || t == v.modulo {
+            if expect_operand {
+                bail!("operator in operand position");
+            }
+            while let Some(&op) = ops.last() {
+                if op != v.lparen && prec(op) >= prec(t) {
+                    apply(&mut vals, ops.pop().unwrap())?;
+                } else {
+                    break;
+                }
+            }
+            ops.push(t);
+            expect_operand = true;
+        } else {
+            bail!("unexpected token {t} in expression");
+        }
+        i += 1;
+    }
+    while let Some(op) = ops.pop() {
+        if op == v.lparen {
+            bail!("unbalanced parens");
+        }
+        apply(&mut vals, op)?;
+    }
+    if vals.len() != 1 {
+        bail!("malformed expression");
+    }
+    Ok(vals[0])
+}
+
+/// Fraction of steps in a trace whose claimed value is arithmetically
+/// correct (an analysis metric the paper's Fig. 5 discussion implies).
+pub fn step_correctness(v: &Vocab, toks: &[i32]) -> Option<f64> {
+    let steps = parse_steps(v, toks);
+    if steps.is_empty() {
+        return None;
+    }
+    let ok = steps
+        .iter()
+        .filter(|s| eval_expr(v, &s.lhs).map(|x| x == s.claimed).unwrap_or(false))
+        .count();
+    Some(ok as f64 / steps.len() as f64)
+}
+
+
+/// The corpus vocabulary layout (ids mirror `python/compile/corpus.py`).
+/// Manifest-free paths (calibrated backend, tests, workload generation)
+/// use this; artifact-backed paths read the manifest instead — an
+/// integration test asserts the two agree.
+pub fn builtin_vocab() -> Vocab {
+    use std::collections::BTreeMap;
+    let mut names = BTreeMap::new();
+    for d in 0..10 {
+        names.insert(7 + d, d.to_string());
+    }
+    for (id, s) in [
+        (0, "<pad>"),
+        (1, "<bos>"),
+        (2, "Q"),
+        (3, ";"),
+        (4, "S"),
+        (5, "F"),
+        (6, "."),
+        (17, "+"),
+        (18, "-"),
+        (19, "*"),
+        (20, "("),
+        (21, ")"),
+        (22, "="),
+        (23, "%"),
+    ] {
+        names.insert(id, s.to_string());
+    }
+    for s in 0..13 {
+        names.insert(24 + s, format!("<{}>", (b'A' + s as u8) as char));
+    }
+    Vocab {
+        size: 64,
+        pad: 0,
+        bos: 1,
+        q: 2,
+        sep: 3,
+        step: 4,
+        fin: 5,
+        eos: 6,
+        digit0: 7,
+        plus: 17,
+        minus: 18,
+        mul: 19,
+        lparen: 20,
+        rparen: 21,
+        eq: 22,
+        modulo: 23,
+        strat0: 24,
+        num_strategies: 13,
+        names,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    /// Vocab for tests (no artifacts needed).
+    pub(crate) fn test_vocab() -> Vocab {
+        super::builtin_vocab()
+    }
+
+    #[test]
+    fn tokenize_eval_roundtrip() {
+        let v = test_vocab();
+        for (text, want) in [
+            ("1+2", 3),
+            ("17+25*3", 92),
+            ("(17+25)*3", 126),
+            ("10-3-2", 5),
+            ("(2*5+26)%4", 0),
+            ("100*3", 300),
+        ] {
+            let toks = tokenize_expr(&v, text).unwrap();
+            assert_eq!(eval_expr(&v, &toks).unwrap(), want, "{text}");
+            assert_eq!(detokenize(&v, &toks), text);
+        }
+    }
+
+    #[test]
+    fn eval_rejects_malformed() {
+        let v = test_vocab();
+        for bad in ["+1", "1+", "(1+2", "1)(", "1++2"] {
+            let toks = tokenize_expr(&v, bad).unwrap();
+            assert!(eval_expr(&v, &toks).is_err(), "{bad}");
+        }
+        assert!(tokenize_expr(&v, "1a2").is_err());
+        assert!(tokenize_expr(&v, "").is_err());
+    }
+
+    #[test]
+    fn prompt_layout() {
+        let v = test_vocab();
+        let expr = tokenize_expr(&v, "1+2").unwrap();
+        let p = prompt(&v, &expr, Some(4));
+        assert_eq!(p[0], v.bos);
+        assert_eq!(p[1], v.q);
+        assert_eq!(p[p.len() - 2], v.sep);
+        assert_eq!(p[p.len() - 1], v.strat0 + 4);
+        let p2 = prompt(&v, &expr, None);
+        assert_eq!(p2.len(), p.len() - 1);
+    }
+
+    #[test]
+    fn parse_answer_finds_last_fin() {
+        let v = test_vocab();
+        // S 1+2=3 ; F 36 .
+        let mut toks = vec![v.step];
+        toks.extend(tokenize_expr(&v, "1+2").unwrap());
+        toks.push(v.eq);
+        toks.extend(num_tokens(&v, 3));
+        toks.push(v.sep);
+        toks.push(v.fin);
+        toks.extend(num_tokens(&v, 36));
+        toks.push(v.eos);
+        assert_eq!(parse_answer(&v, &toks), Some(36));
+    }
+
+    #[test]
+    fn parse_answer_none_without_fin_or_digits() {
+        let v = test_vocab();
+        assert_eq!(parse_answer(&v, &[v.step, v.sep]), None);
+        assert_eq!(parse_answer(&v, &[v.fin, v.eos]), None);
+    }
+
+    #[test]
+    fn parse_steps_and_grade() {
+        let v = test_vocab();
+        // S 4*3=12 ; S 5+12=17 ; F 17 .   (all correct)
+        let mut toks = Vec::new();
+        for (lhs, val) in [("4*3", 12), ("5+12", 17)] {
+            toks.push(v.step);
+            toks.extend(tokenize_expr(&v, lhs).unwrap());
+            toks.push(v.eq);
+            toks.extend(num_tokens(&v, val));
+            toks.push(v.sep);
+        }
+        toks.push(v.fin);
+        toks.extend(num_tokens(&v, 17));
+        toks.push(v.eos);
+        let steps = parse_steps(&v, &toks);
+        assert_eq!(steps.len(), 2);
+        assert_eq!(steps[0].claimed, 12);
+        assert_eq!(step_correctness(&v, &toks), Some(1.0));
+
+        // corrupt the second step's claimed value
+        let bad: Vec<i32> = toks
+            .iter()
+            .map(|&t| if t == v.digit0 + 7 { v.digit0 + 8 } else { t })
+            .collect();
+        assert!(step_correctness(&v, &bad).unwrap() < 1.0);
+    }
+
+    #[test]
+    fn num_tokens_no_leading_zeros() {
+        let v = test_vocab();
+        assert_eq!(num_tokens(&v, 0), vec![v.digit0]);
+        assert_eq!(num_tokens(&v, 105), vec![v.digit0 + 1, v.digit0, v.digit0 + 5]);
+    }
+
+    #[test]
+    fn rem_euclid_semantics() {
+        let v = test_vocab();
+        // our corpus never renders negatives, but the evaluator must not
+        // return negative remainders if an intermediate dips below zero
+        let toks = tokenize_expr(&v, "(1-3)%4").unwrap();
+        assert_eq!(eval_expr(&v, &toks).unwrap(), 2);
+    }
+}

@@ -1,0 +1,162 @@
+//! PJRT runtime: loads HLO-text artifacts, compiles them once, executes
+//! them from the serving hot path.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax >= 0.5
+//! emits serialized protos with 64-bit instruction ids that xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids (see DESIGN.md §2).
+//!
+//! Executables are compiled lazily and cached by entry-point name — the
+//! manifest registers ~20 (entry x batch) variants and a typical run
+//! touches a handful.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+/// Cumulative runtime counters (read by metrics / EXPERIMENTS.md §Perf).
+#[derive(Debug, Default, Clone)]
+pub struct RuntimeStats {
+    pub compiles: u64,
+    pub compile_secs: f64,
+    pub executions: u64,
+    pub execute_secs: f64,
+    /// host->device + device->host literal traffic, bytes
+    pub transfer_bytes: u64,
+}
+
+/// Owns the PJRT client and the executable cache. Not `Send` (PJRT
+/// wrapper types are raw pointers) — the coordinator runs all model
+/// execution on one dedicated thread, which also matches the single-core
+/// testbed.
+pub struct Runtime {
+    client: PjRtClient,
+    dir: PathBuf,
+    exes: RefCell<HashMap<String, PjRtLoadedExecutable>>,
+    stats: RefCell<RuntimeStats>,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        log::info!(
+            "PJRT client up: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Runtime {
+            client,
+            dir: artifacts_dir.to_path_buf(),
+            exes: RefCell::new(HashMap::new()),
+            stats: RefCell::new(RuntimeStats::default()),
+        })
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Compile (or fetch cached) the artifact `<name>.hlo.txt`.
+    fn ensure_compiled(&self, name: &str) -> Result<()> {
+        if self.exes.borrow().contains_key(name) {
+            return Ok(());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {name}"))?;
+        let dt = t0.elapsed().as_secs_f64();
+        {
+            let mut s = self.stats.borrow_mut();
+            s.compiles += 1;
+            s.compile_secs += dt;
+        }
+        log::debug!("compiled {name} in {dt:.2}s");
+        self.exes.borrow_mut().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an entry point with literal inputs; returns the untupled
+    /// output literals. (xla_extension's default ExecuteOptions returns
+    /// one tuple buffer — we decompose on host; see DESIGN.md §9.)
+    pub fn execute(&self, name: &str, args: &[&Literal]) -> Result<Vec<Literal>> {
+        self.ensure_compiled(name)?;
+        let in_bytes: usize = args.iter().map(|l| l.size_bytes()).sum();
+        let t0 = Instant::now();
+        let exes = self.exes.borrow();
+        let exe = exes.get(name).expect("ensured above");
+        // &Literal: Borrow<Literal> — no deep copies on the hot path
+        // (weights alone are several MB per call).
+        let mut outs = exe.execute(args).with_context(|| format!("executing {name}"))?;
+        let buffer = outs
+            .pop()
+            .and_then(|mut replica| replica.pop())
+            .context("no output buffer")?;
+        let mut tuple = buffer.to_literal_sync().context("fetching output literal")?;
+        let parts = tuple.decompose_tuple().context("decomposing output tuple")?;
+        let out_bytes: usize = parts.iter().map(|l| l.size_bytes()).sum();
+        let dt = t0.elapsed().as_secs_f64();
+        {
+            let mut s = self.stats.borrow_mut();
+            s.executions += 1;
+            s.execute_secs += dt;
+            s.transfer_bytes += (in_bytes + out_bytes) as u64;
+        }
+        Ok(parts)
+    }
+
+    /// Compile an artifact ahead of first use (serving warmup).
+    pub fn precompile(&self, name: &str) -> Result<()> {
+        self.ensure_compiled(name)
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        self.stats.borrow().clone()
+    }
+
+    pub fn reset_stats(&self) {
+        *self.stats.borrow_mut() = RuntimeStats::default();
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn compiled_count(&self) -> usize {
+        self.exes.borrow().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::literals::{lit_f32, to_vec_f32};
+
+    /// End-to-end PJRT sanity without artifacts: build a computation with
+    /// the XlaBuilder and run it through the same client.
+    #[test]
+    fn pjrt_builder_roundtrip() {
+        let client = PjRtClient::cpu().unwrap();
+        let b = xla::XlaBuilder::new("t");
+        let p = b.parameter_s(0, &xla::Shape::array::<f32>(vec![2]), "p").unwrap();
+        let comp = (p.clone() + p).unwrap().build().unwrap();
+        let exe = client.compile(&comp).unwrap();
+        let x = lit_f32(&[1.5, 2.5], &[2]).unwrap();
+        let out = exe.execute::<Literal>(&[x]).unwrap()[0][0].to_literal_sync().unwrap();
+        assert_eq!(to_vec_f32(&out).unwrap(), vec![3.0, 5.0]);
+    }
+
+    #[test]
+    fn missing_artifact_errors_cleanly() {
+        let rt = Runtime::new(Path::new("/nonexistent-artifacts")).unwrap();
+        let err = match rt.execute("nope", &[]) {
+            Ok(_) => panic!("expected error"),
+            Err(e) => e.to_string(),
+        };
+        assert!(err.contains("nope"), "{err}");
+    }
+}

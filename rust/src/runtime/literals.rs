@@ -1,0 +1,118 @@
+//! Conversions between rust buffers and XLA [`Literal`]s.
+//!
+//! The HLO entry points exchange f32/i32 tensors; these helpers keep the
+//! unsafe-ish byte plumbing (`create_from_shape_and_untyped_data`) in one
+//! audited place.
+
+use anyhow::{bail, Context, Result};
+use xla::{ArrayElement, ElementType, Literal, PrimitiveType};
+
+/// Build an f32 literal with the given dims from a host slice.
+pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<Literal> {
+    let n: usize = dims.iter().product();
+    if n != data.len() {
+        bail!("lit_f32: {} elements for dims {dims:?} (need {n})", data.len());
+    }
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Literal::create_from_shape_and_untyped_data(ElementType::F32, dims, bytes)
+        .context("create f32 literal")
+}
+
+/// Build an i32 literal with the given dims from a host slice.
+pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<Literal> {
+    let n: usize = dims.iter().product();
+    if n != data.len() {
+        bail!("lit_i32: {} elements for dims {dims:?} (need {n})", data.len());
+    }
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Literal::create_from_shape_and_untyped_data(ElementType::S32, dims, bytes)
+        .context("create i32 literal")
+}
+
+pub fn scalar_f32(x: f32) -> Literal {
+    Literal::scalar(x)
+}
+
+pub fn scalar_i32(x: i32) -> Literal {
+    Literal::scalar(x)
+}
+
+/// Extract a typed host vector, converting the element type if needed
+/// (jax emits S32 for `done` flags but U8/PRED for raw bools).
+pub fn to_vec<T: ArrayElement>(lit: &Literal) -> Result<Vec<T>> {
+    match lit.to_vec::<T>() {
+        Ok(v) => Ok(v),
+        Err(_) => {
+            let conv = lit.convert(T::TY.primitive_type()).context("convert literal")?;
+            conv.to_vec::<T>().context("to_vec after convert")
+        }
+    }
+}
+
+pub fn to_vec_f32(lit: &Literal) -> Result<Vec<f32>> {
+    to_vec::<f32>(lit)
+}
+
+pub fn to_vec_i32(lit: &Literal) -> Result<Vec<i32>> {
+    to_vec::<i32>(lit)
+}
+
+/// Dims of an array literal.
+pub fn dims(lit: &Literal) -> Result<Vec<usize>> {
+    Ok(lit.array_shape()?.dims().iter().map(|&d| d as usize).collect())
+}
+
+/// True if the literal is an f32 array with the expected dims.
+pub fn expect_f32(lit: &Literal, expect: &[usize]) -> Result<()> {
+    let d = dims(lit)?;
+    if d != expect {
+        bail!("shape mismatch: got {d:?}, want {expect:?}");
+    }
+    if lit.primitive_type()? != PrimitiveType::F32 {
+        bail!("dtype mismatch: got {:?}, want F32", lit.primitive_type()?);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let data = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let lit = lit_f32(&data, &[2, 3]).unwrap();
+        assert_eq!(dims(&lit).unwrap(), vec![2, 3]);
+        assert_eq!(to_vec_f32(&lit).unwrap(), data);
+        expect_f32(&lit, &[2, 3]).unwrap();
+        assert!(expect_f32(&lit, &[3, 2]).is_err());
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let data = vec![7i32, -1, 0];
+        let lit = lit_i32(&data, &[3]).unwrap();
+        assert_eq!(to_vec_i32(&lit).unwrap(), data);
+    }
+
+    #[test]
+    fn wrong_element_count_rejected() {
+        assert!(lit_f32(&[1.0], &[2, 2]).is_err());
+        assert!(lit_i32(&[1, 2, 3], &[2]).is_err());
+    }
+
+    #[test]
+    fn scalars() {
+        assert_eq!(scalar_f32(2.5).get_first_element::<f32>().unwrap(), 2.5);
+        assert_eq!(scalar_i32(-3).get_first_element::<i32>().unwrap(), -3);
+    }
+
+    #[test]
+    fn convert_path_i32_to_f32() {
+        let lit = lit_i32(&[1, 2], &[2]).unwrap();
+        let v = to_vec_f32(&lit).unwrap();
+        assert_eq!(v, vec![1.0, 2.0]);
+    }
+}

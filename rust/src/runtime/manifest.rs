@@ -1,0 +1,305 @@
+//! `artifacts/manifest.json` — the single source of truth emitted by
+//! `python/compile/aot.py`: vocabulary ids, model dimensions, entry-point
+//! registry, strategy metadata and suite files. Rust hard-codes none of
+//! these; any L1/L2 change flows through here.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Value;
+
+#[derive(Debug, Clone)]
+pub struct Vocab {
+    pub size: usize,
+    pub pad: i32,
+    pub bos: i32,
+    pub q: i32,
+    pub sep: i32,
+    pub step: i32,
+    pub fin: i32,
+    pub eos: i32,
+    pub digit0: i32,
+    pub plus: i32,
+    pub minus: i32,
+    pub mul: i32,
+    pub lparen: i32,
+    pub rparen: i32,
+    pub eq: i32,
+    pub modulo: i32,
+    pub strat0: i32,
+    pub num_strategies: usize,
+    pub names: BTreeMap<i32, String>,
+}
+
+impl Vocab {
+    fn parse(v: &Value) -> Result<Self> {
+        let names = v
+            .get("names")?
+            .obj()?
+            .iter()
+            .map(|(k, val)| Ok((k.parse::<i32>()?, val.str()?.to_string())))
+            .collect::<Result<BTreeMap<_, _>>>()?;
+        Ok(Vocab {
+            size: v.get_usize("size")?,
+            pad: v.get_i64("pad")? as i32,
+            bos: v.get_i64("bos")? as i32,
+            q: v.get_i64("q")? as i32,
+            sep: v.get_i64("sep")? as i32,
+            step: v.get_i64("step")? as i32,
+            fin: v.get_i64("fin")? as i32,
+            eos: v.get_i64("eos")? as i32,
+            digit0: v.get_i64("digit0")? as i32,
+            plus: v.get_i64("plus")? as i32,
+            minus: v.get_i64("minus")? as i32,
+            mul: v.get_i64("mul")? as i32,
+            lparen: v.get_i64("lparen")? as i32,
+            rparen: v.get_i64("rparen")? as i32,
+            eq: v.get_i64("eq")? as i32,
+            modulo: v.get_i64("mod")? as i32,
+            strat0: v.get_i64("strat0")? as i32,
+            num_strategies: v.get_usize("num_strategies")?,
+            names,
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub vocab: usize,
+    pub s_max: usize,
+    pub n_params: u64,
+    pub flops_per_token: u64,
+    pub weights_bin: String,
+    pub weights_json: String,
+}
+
+impl ModelSpec {
+    fn parse(v: &Value) -> Result<Self> {
+        Ok(ModelSpec {
+            name: v.get_str("name")?.to_string(),
+            n_layers: v.get_usize("n_layers")?,
+            d_model: v.get_usize("d_model")?,
+            n_heads: v.get_usize("n_heads")?,
+            d_head: v.get_usize("d_head")?,
+            vocab: v.get_usize("vocab")?,
+            s_max: v.get_usize("s_max")?,
+            n_params: v.get_i64("n_params")? as u64,
+            flops_per_token: v.get_i64("flops_per_token")? as u64,
+            weights_bin: v.get_str("weights_bin")?.to_string(),
+            weights_json: v.get_str("weights_json")?.to_string(),
+        })
+    }
+
+    /// Shape of one KV cache literal: `[L, B, H, S, D]`.
+    pub fn cache_dims(&self, batch: usize) -> Vec<usize> {
+        vec![self.n_layers, batch, self.n_heads, self.s_max, self.d_head]
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EntryKind {
+    Prefill,
+    Span,
+    Ingest,
+}
+
+#[derive(Debug, Clone)]
+pub struct EntrySpec {
+    pub name: String,
+    pub kind: EntryKind,
+    pub model: String,
+    pub batch: usize,
+    pub file: String,
+}
+
+impl EntrySpec {
+    fn parse(v: &Value) -> Result<Self> {
+        let kind = match v.get_str("kind")? {
+            "prefill" => EntryKind::Prefill,
+            "span" => EntryKind::Span,
+            "ingest" => EntryKind::Ingest,
+            k => bail!("unknown entry kind `{k}`"),
+        };
+        Ok(EntrySpec {
+            name: v.get_str("name")?.to_string(),
+            kind,
+            model: v.get_str("model")?.to_string(),
+            batch: v.get_usize("batch")?,
+            file: v.get_str("file")?.to_string(),
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct StrategyMeta {
+    pub names: Vec<String>,
+    /// strategy index -> decomposition style index
+    pub styles: Vec<usize>,
+    pub style_names: Vec<String>,
+    /// style index -> per-family aptitude in [0,1]
+    pub aptitude: Vec<Vec<f64>>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub t_span: usize,
+    pub vocab: Vocab,
+    pub models: Vec<ModelSpec>,
+    pub entries: Vec<EntrySpec>,
+    pub prefill_batches: Vec<usize>,
+    pub step_batches: Vec<usize>,
+    pub alpha: f64,
+    pub strategies: StrategyMeta,
+    pub families: Vec<String>,
+    pub suites: Vec<(String, String)>, // (name, file)
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let v = Value::parse(&text).context("parsing manifest.json")?;
+
+        let models = v
+            .get("models")?
+            .arr()?
+            .iter()
+            .map(ModelSpec::parse)
+            .collect::<Result<Vec<_>>>()?;
+        let entries = v
+            .get("entries")?
+            .arr()?
+            .iter()
+            .map(EntrySpec::parse)
+            .collect::<Result<Vec<_>>>()?;
+
+        let strat = v.get("strategies")?;
+        let aptitude_obj = strat.get("aptitude")?.obj()?;
+        let mut aptitude = vec![Vec::new(); aptitude_obj.len()];
+        for (style, row) in aptitude_obj {
+            let idx: usize = style.parse()?;
+            aptitude[idx] =
+                row.arr()?.iter().map(|x| x.f64()).collect::<Result<Vec<_>>>()?;
+        }
+        let strategies = StrategyMeta {
+            names: str_vec(strat.get("names")?)?,
+            styles: strat
+                .get("styles")?
+                .arr()?
+                .iter()
+                .map(|x| x.usize())
+                .collect::<Result<Vec<_>>>()?,
+            style_names: str_vec(strat.get("style_names")?)?,
+            aptitude,
+        };
+
+        let suites = v
+            .get("suites")?
+            .arr()?
+            .iter()
+            .map(|s| Ok((s.get_str("name")?.to_string(), s.get_str("file")?.to_string())))
+            .collect::<Result<Vec<_>>>()?;
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            t_span: v.get_usize("t_span")?,
+            vocab: Vocab::parse(v.get("vocab")?)?,
+            models,
+            entries,
+            prefill_batches: usize_vec(v.get("prefill_batches")?)?,
+            step_batches: usize_vec(v.get("step_batches")?)?,
+            alpha: v.get_f64("alpha")?,
+            strategies,
+            families: str_vec(v.get("families")?)?,
+            suites,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelSpec> {
+        self.models
+            .iter()
+            .find(|m| m.name == name)
+            .with_context(|| format!("model `{name}` not in manifest"))
+    }
+
+    /// Entry-point name for (kind, model, batch); the variant must exist.
+    pub fn entry(&self, kind: EntryKind, model: &str, batch: usize) -> Result<&EntrySpec> {
+        self.entries
+            .iter()
+            .find(|e| e.kind == kind && e.model == model && e.batch == batch)
+            .with_context(|| format!("no entry {kind:?}/{model}/b{batch} in manifest"))
+    }
+
+    /// Smallest compiled batch variant that fits `n` paths.
+    pub fn fit_batch(&self, kind: EntryKind, n: usize) -> Result<usize> {
+        let list = match kind {
+            EntryKind::Prefill => &self.prefill_batches,
+            _ => &self.step_batches,
+        };
+        list.iter()
+            .copied()
+            .filter(|&b| b >= n)
+            .min()
+            .or_else(|| list.iter().copied().max())
+            .with_context(|| format!("no batch variants for {kind:?}"))
+    }
+}
+
+fn str_vec(v: &Value) -> Result<Vec<String>> {
+    v.arr()?.iter().map(|x| Ok(x.str()?.to_string())).collect()
+}
+
+fn usize_vec(v: &Value) -> Result<Vec<usize>> {
+    v.arr()?.iter().map(|x| x.usize()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn loads_real_manifest_when_built() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.models.len(), 2);
+        assert!(m.alpha > 0.0 && m.alpha < 1.0);
+        assert!(m.vocab.num_strategies >= 12);
+        let t = m.model("target").unwrap();
+        assert_eq!(t.d_model % t.n_heads, 0);
+        // every entry's file exists
+        for e in &m.entries {
+            assert!(dir.join(&e.file).exists(), "{} missing", e.file);
+        }
+        // batch fitting picks the smallest variant that fits
+        let b = m.fit_batch(EntryKind::Span, 3).unwrap();
+        assert!(b >= 3);
+        assert!(m.step_batches.contains(&b));
+    }
+
+    #[test]
+    fn fit_batch_clamps_to_largest() {
+        let Some(dir) = artifacts_dir() else {
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        let max = *m.step_batches.iter().max().unwrap();
+        assert_eq!(m.fit_batch(EntryKind::Span, 999).unwrap(), max);
+    }
+}

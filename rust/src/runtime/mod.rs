@@ -1,0 +1,14 @@
+//! Runtime layer: PJRT client + artifact/weight loading.
+//!
+//! `python/compile/aot.py` lowers the L2 models (with their L1 Pallas
+//! kernels) to HLO text under `artifacts/`; this module loads, compiles
+//! and executes them. Python is never on the request path.
+
+pub mod client;
+pub mod literals;
+pub mod manifest;
+pub mod weights;
+
+pub use client::{Runtime, RuntimeStats};
+pub use manifest::{EntryKind, EntrySpec, Manifest, ModelSpec, Vocab};
+pub use weights::Weights;

@@ -1,0 +1,114 @@
+//! Trained-parameter loading: flat little-endian f32 blob + JSON manifest
+//! (written by `python/compile/train.py::save_weights`). Parameters become
+//! one shaped [`Literal`] each, in the exact canonical order the HLO entry
+//! points expect them as leading arguments.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+use xla::Literal;
+
+use super::literals::lit_f32;
+use super::manifest::ModelSpec;
+use crate::util::json::Value;
+
+#[derive(Debug, Clone)]
+pub struct WeightEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+}
+
+pub struct Weights {
+    pub model: String,
+    pub entries: Vec<WeightEntry>,
+    pub literals: Vec<Literal>,
+    pub n_elems: usize,
+}
+
+impl Weights {
+    pub fn load(dir: &Path, spec: &ModelSpec) -> Result<Self> {
+        let jpath = dir.join(&spec.weights_json);
+        let text = std::fs::read_to_string(&jpath)
+            .with_context(|| format!("reading {jpath:?} — run `make artifacts` first"))?;
+        let v = Value::parse(&text)?;
+        let n_elems = v.get_usize("n_elems")?;
+
+        let bpath = dir.join(&spec.weights_bin);
+        let bytes = std::fs::read(&bpath).with_context(|| format!("reading {bpath:?}"))?;
+        if bytes.len() != n_elems * 4 {
+            bail!("{bpath:?}: {} bytes, manifest says {} f32s", bytes.len(), n_elems);
+        }
+        let blob: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+
+        let mut entries = Vec::new();
+        let mut literals = Vec::new();
+        for ent in v.get("params")?.arr()? {
+            let name = ent.get_str("name")?.to_string();
+            let shape: Vec<usize> = ent
+                .get("shape")?
+                .arr()?
+                .iter()
+                .map(|x| x.usize())
+                .collect::<Result<Vec<_>>>()?;
+            let offset = ent.get_usize("offset")?;
+            let size = ent.get_usize("size")?;
+            let n: usize = shape.iter().product::<usize>().max(1);
+            if n != size {
+                bail!("param {name}: shape {shape:?} product {n} != size {size}");
+            }
+            if offset + size > blob.len() {
+                bail!("param {name}: range {offset}..{} out of blob", offset + size);
+            }
+            literals.push(lit_f32(&blob[offset..offset + size], &shape)?);
+            entries.push(WeightEntry { name, shape, offset, size });
+        }
+
+        // Contiguity check: params must tile the blob exactly.
+        let covered: usize = entries.iter().map(|e| e.size).sum();
+        if covered != n_elems {
+            bail!("params cover {covered} of {n_elems} blob elements");
+        }
+
+        Ok(Weights { model: spec.name.clone(), entries, literals, n_elems })
+    }
+
+    pub fn len(&self) -> usize {
+        self.literals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.literals.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+    use std::path::PathBuf;
+
+    #[test]
+    fn loads_trained_weights_when_built() {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        for spec in &m.models {
+            let w = Weights::load(&dir, spec).unwrap();
+            assert_eq!(w.len(), w.entries.len());
+            assert!(!w.is_empty());
+            // first param is the embedding table [V, d]
+            assert_eq!(w.entries[0].name, "embed");
+            assert_eq!(w.entries[0].shape, vec![spec.vocab, spec.d_model]);
+            // total element count matches the model's advertised size
+            assert_eq!(w.n_elems as u64, spec.n_params);
+        }
+    }
+}

@@ -1,0 +1,156 @@
+//! Tiny argument parser (the offline environment has no `clap`).
+//!
+//! Supports the shapes the `ssr` binary needs: a subcommand followed by
+//! `--flag`, `--key value` and `--key=value` options, plus free
+//! positionals. Unknown options are an error (typos should not be
+//! silently ignored on a benchmark driver).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+    known: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`. The first non-option token becomes the command.
+    pub fn parse(argv: &[String]) -> Result<Self> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    out.options.insert(body.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(a.clone());
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Self> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Self::parse(&argv)
+    }
+
+    pub fn flag(&mut self, name: &str) -> bool {
+        self.known.push(name.to_string());
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&mut self, name: &str) -> Option<&str> {
+        self.known.push(name.to_string());
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_str(&mut self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn opt_usize(&mut self, name: &str, default: usize) -> Result<usize> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{name}: expected integer, got `{v}`")),
+        }
+    }
+
+    pub fn opt_u64(&mut self, name: &str, default: u64) -> Result<u64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{name}: expected integer, got `{v}`")),
+        }
+    }
+
+    pub fn opt_f64(&mut self, name: &str, default: f64) -> Result<f64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{name}: expected number, got `{v}`")),
+        }
+    }
+
+    /// Call after reading every expected option/flag: rejects leftovers.
+    pub fn finish(&self) -> Result<()> {
+        for k in self.options.keys() {
+            if !self.known.contains(k) {
+                bail!("unknown option --{k}");
+            }
+        }
+        for f in &self.flags {
+            if !self.known.contains(f) {
+                bail!("unknown flag --{f}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_command_options_flags() {
+        let mut a = Args::parse(&argv("exp fig3 --suite synth-aime --trials=6 --verbose")).unwrap();
+        assert_eq!(a.command.as_deref(), Some("exp"));
+        assert_eq!(a.positional, vec!["fig3"]);
+        assert_eq!(a.opt("suite"), Some("synth-aime"));
+        assert_eq!(a.opt_usize("trials", 1).unwrap(), 6);
+        assert!(a.flag("verbose"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn equals_and_space_forms_agree() {
+        let mut a = Args::parse(&argv("run --n 5")).unwrap();
+        let mut b = Args::parse(&argv("run --n=5")).unwrap();
+        assert_eq!(a.opt_usize("n", 0).unwrap(), b.opt_usize("n", 0).unwrap());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let mut a = Args::parse(&argv("serve")).unwrap();
+        assert_eq!(a.opt_usize("port", 7878).unwrap(), 7878);
+        assert_eq!(a.opt_str("host", "127.0.0.1"), "127.0.0.1");
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn rejects_unknown() {
+        let mut a = Args::parse(&argv("run --bogus 3")).unwrap();
+        let _ = a.opt("real");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let mut a = Args::parse(&argv("run --n abc")).unwrap();
+        assert!(a.opt_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn trailing_flag_not_eaten_as_value() {
+        let mut a = Args::parse(&argv("run --quiet --n 3")).unwrap();
+        assert!(a.flag("quiet"));
+        assert_eq!(a.opt_usize("n", 0).unwrap(), 3);
+    }
+}

@@ -1,0 +1,456 @@
+//! Minimal JSON — parser + printer over a `Value` enum.
+//!
+//! The offline build environment has no `serde`/`serde_json`, and the only
+//! JSON this system exchanges is its own build artifacts
+//! (`artifacts/manifest.json`, suite files, weight manifests) plus the TCP
+//! serving protocol — a few well-known shapes. A ~300-line recursive
+//! descent parser is the right-sized substrate; `util::prop` round-trip
+//! tests guard it.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// A parsed JSON value. Objects use `BTreeMap` for deterministic printing.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Value>),
+    Obj(BTreeMap<String, Value>),
+}
+
+impl Value {
+    pub fn parse(text: &str) -> Result<Value> {
+        let mut p = Parser { b: text.as_bytes(), i: 0 };
+        p.ws();
+        let v = p.value()?;
+        p.ws();
+        if p.i != p.b.len() {
+            bail!("trailing characters at byte {}", p.i);
+        }
+        Ok(v)
+    }
+
+    // ---- typed accessors (fail with context instead of panicking) ----
+
+    pub fn get(&self, key: &str) -> Result<&Value> {
+        match self {
+            Value::Obj(m) => m.get(key).ok_or_else(|| anyhow!("missing key `{key}`")),
+            _ => bail!("expected object while looking up `{key}`"),
+        }
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            v => bail!("expected string, got {}", v.kind()),
+        }
+    }
+
+    pub fn f64(&self) -> Result<f64> {
+        match self {
+            Value::Num(x) => Ok(*x),
+            v => bail!("expected number, got {}", v.kind()),
+        }
+    }
+
+    pub fn i64(&self) -> Result<i64> {
+        let x = self.f64()?;
+        if x.fract() != 0.0 {
+            bail!("expected integer, got {x}");
+        }
+        Ok(x as i64)
+    }
+
+    pub fn usize(&self) -> Result<usize> {
+        let x = self.i64()?;
+        usize::try_from(x).context("negative where usize expected")
+    }
+
+    pub fn bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            v => bail!("expected bool, got {}", v.kind()),
+        }
+    }
+
+    pub fn arr(&self) -> Result<&[Value]> {
+        match self {
+            Value::Arr(v) => Ok(v),
+            v => bail!("expected array, got {}", v.kind()),
+        }
+    }
+
+    pub fn obj(&self) -> Result<&BTreeMap<String, Value>> {
+        match self {
+            Value::Obj(m) => Ok(m),
+            v => bail!("expected object, got {}", v.kind()),
+        }
+    }
+
+    /// Convenience: `get(key)?.str()` etc. read better at call sites.
+    pub fn get_str(&self, key: &str) -> Result<&str> {
+        self.get(key)?.str().with_context(|| format!("key `{key}`"))
+    }
+    pub fn get_i64(&self, key: &str) -> Result<i64> {
+        self.get(key)?.i64().with_context(|| format!("key `{key}`"))
+    }
+    pub fn get_usize(&self, key: &str) -> Result<usize> {
+        self.get(key)?.usize().with_context(|| format!("key `{key}`"))
+    }
+    pub fn get_f64(&self, key: &str) -> Result<f64> {
+        self.get(key)?.f64().with_context(|| format!("key `{key}`"))
+    }
+
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Value::Null => "null",
+            Value::Bool(_) => "bool",
+            Value::Num(_) => "number",
+            Value::Str(_) => "string",
+            Value::Arr(_) => "array",
+            Value::Obj(_) => "object",
+        }
+    }
+
+    /// Compact single-line rendering.
+    pub fn print(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Value::Null => out.push_str("null"),
+            Value::Bool(true) => out.push_str("true"),
+            Value::Bool(false) => out.push_str("false"),
+            Value::Num(x) => {
+                if x.fract() == 0.0 && x.abs() < 9e15 {
+                    let _ = write!(out, "{}", *x as i64);
+                } else {
+                    let _ = write!(out, "{x}");
+                }
+            }
+            Value::Str(s) => write_escaped(out, s),
+            Value::Arr(v) => {
+                out.push('[');
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    x.write(out);
+                }
+                out.push(']');
+            }
+            Value::Obj(m) => {
+                out.push('{');
+                for (i, (k, x)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(out, k);
+                    out.push(':');
+                    x.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+/// Builders used by the serving protocol and report writers.
+pub fn obj(pairs: Vec<(&str, Value)>) -> Value {
+    Value::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+pub fn s(x: impl Into<String>) -> Value {
+    Value::Str(x.into())
+}
+pub fn n(x: f64) -> Value {
+    Value::Num(x)
+}
+pub fn i(x: i64) -> Value {
+    Value::Num(x as f64)
+}
+pub fn arr(v: Vec<Value>) -> Value {
+    Value::Arr(v)
+}
+
+fn write_escaped(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Result<u8> {
+        self.b.get(self.i).copied().ok_or_else(|| anyhow!("unexpected end of input"))
+    }
+
+    fn eat(&mut self, c: u8) -> Result<()> {
+        if self.peek()? != c {
+            bail!("expected `{}` at byte {}, got `{}`", c as char, self.i, self.peek()? as char);
+        }
+        self.i += 1;
+        Ok(())
+    }
+
+    fn lit(&mut self, word: &str, v: Value) -> Result<Value> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            bail!("invalid literal at byte {}", self.i)
+        }
+    }
+
+    fn value(&mut self) -> Result<Value> {
+        match self.peek()? {
+            b'n' => self.lit("null", Value::Null),
+            b't' => self.lit("true", Value::Bool(true)),
+            b'f' => self.lit("false", Value::Bool(false)),
+            b'"' => Ok(Value::Str(self.string()?)),
+            b'[' => self.array(),
+            b'{' => self.object(),
+            b'-' | b'0'..=b'9' => self.number(),
+            c => bail!("unexpected `{}` at byte {}", c as char, self.i),
+        }
+    }
+
+    fn array(&mut self) -> Result<Value> {
+        self.eat(b'[')?;
+        let mut v = Vec::new();
+        self.ws();
+        if self.peek()? == b']' {
+            self.i += 1;
+            return Ok(Value::Arr(v));
+        }
+        loop {
+            self.ws();
+            v.push(self.value()?);
+            self.ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b']' => {
+                    self.i += 1;
+                    return Ok(Value::Arr(v));
+                }
+                c => bail!("expected `,` or `]`, got `{}` at byte {}", c as char, self.i),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Value> {
+        self.eat(b'{')?;
+        let mut m = BTreeMap::new();
+        self.ws();
+        if self.peek()? == b'}' {
+            self.i += 1;
+            return Ok(Value::Obj(m));
+        }
+        loop {
+            self.ws();
+            let key = self.string()?;
+            self.ws();
+            self.eat(b':')?;
+            self.ws();
+            let val = self.value()?;
+            m.insert(key, val);
+            self.ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b'}' => {
+                    self.i += 1;
+                    return Ok(Value::Obj(m));
+                }
+                c => bail!("expected `,` or `}}`, got `{}` at byte {}", c as char, self.i),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            let c = self.peek()?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let e = self.peek()?;
+                    self.i += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b't' => out.push('\t'),
+                        b'r' => out.push('\r'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'u' => {
+                            if self.i + 4 > self.b.len() {
+                                bail!("truncated \\u escape");
+                            }
+                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])?;
+                            let cp = u32::from_str_radix(hex, 16)?;
+                            self.i += 4;
+                            // Surrogate pairs: parse the low half if present.
+                            let ch = if (0xD800..0xDC00).contains(&cp) {
+                                if self.b.get(self.i) == Some(&b'\\')
+                                    && self.b.get(self.i + 1) == Some(&b'u')
+                                {
+                                    let hex2 =
+                                        std::str::from_utf8(&self.b[self.i + 2..self.i + 6])?;
+                                    let lo = u32::from_str_radix(hex2, 16)?;
+                                    self.i += 6;
+                                    char::from_u32(
+                                        0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00),
+                                    )
+                                } else {
+                                    None
+                                }
+                            } else {
+                                char::from_u32(cp)
+                            };
+                            out.push(ch.ok_or_else(|| anyhow!("bad \\u escape"))?);
+                        }
+                        c => bail!("bad escape `\\{}`", c as char),
+                    }
+                }
+                c if c < 0x20 => bail!("raw control char in string"),
+                c if c < 0x80 => out.push(c as char),
+                _ => {
+                    // multi-byte utf-8: find the char boundary and copy it
+                    let start = self.i - 1;
+                    let rest = std::str::from_utf8(&self.b[start..])
+                        .map_err(|_| anyhow!("invalid utf-8 in string"))?;
+                    let ch = rest.chars().next().unwrap();
+                    out.push(ch);
+                    self.i = start + ch.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Value> {
+        let start = self.i;
+        if self.peek()? == b'-' {
+            self.i += 1;
+        }
+        while self
+            .b
+            .get(self.i)
+            .is_some_and(|c| c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-'))
+        {
+            self.i += 1;
+        }
+        let text = std::str::from_utf8(&self.b[start..self.i])?;
+        Ok(Value::Num(text.parse::<f64>().with_context(|| format!("bad number `{text}`"))?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars() {
+        assert_eq!(Value::parse("null").unwrap(), Value::Null);
+        assert_eq!(Value::parse("true").unwrap(), Value::Bool(true));
+        assert_eq!(Value::parse(" false ").unwrap(), Value::Bool(false));
+        assert_eq!(Value::parse("3.5").unwrap(), Value::Num(3.5));
+        assert_eq!(Value::parse("-17").unwrap(), Value::Num(-17.0));
+        assert_eq!(Value::parse("1e3").unwrap(), Value::Num(1000.0));
+        assert_eq!(Value::parse("\"hi\"").unwrap(), Value::Str("hi".into()));
+    }
+
+    #[test]
+    fn parses_nested() {
+        let v = Value::parse(r#"{"a": [1, 2, {"b": null}], "c": "x"}"#).unwrap();
+        assert_eq!(v.get("c").unwrap().str().unwrap(), "x");
+        assert_eq!(v.get("a").unwrap().arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn escapes_roundtrip() {
+        let cases = ["a\"b", "line\nbreak", "tab\there", "back\\slash", "unicode: ünïcødé 数学"];
+        for c in cases {
+            let v = Value::Str(c.to_string());
+            let back = Value::parse(&v.print()).unwrap();
+            assert_eq!(back, v, "case {c:?}");
+        }
+    }
+
+    #[test]
+    fn surrogate_pair() {
+        let v = Value::parse(r#""😀""#).unwrap();
+        assert_eq!(v.str().unwrap(), "😀");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        for bad in ["", "{", "[1,", "{\"a\" 1}", "tru", "\"unterminated", "1 2", "{,}"] {
+            assert!(Value::parse(bad).is_err(), "should reject {bad:?}");
+        }
+    }
+
+    #[test]
+    fn print_parse_roundtrip_structured() {
+        let v = obj(vec![
+            ("name", s("ssr")),
+            ("paths", arr(vec![i(1), i(2), i(3)])),
+            ("tau", n(0.7)),
+            ("nested", obj(vec![("ok", Value::Bool(true)), ("none", Value::Null)])),
+        ]);
+        assert_eq!(Value::parse(&v.print()).unwrap(), v);
+    }
+
+    #[test]
+    fn integers_print_without_fraction() {
+        assert_eq!(i(42).print(), "42");
+        assert_eq!(n(0.5).print(), "0.5");
+    }
+
+    #[test]
+    fn typed_accessors_report_kind() {
+        let v = Value::parse(r#"{"a": 1}"#).unwrap();
+        let err = v.get("a").unwrap().str().unwrap_err().to_string();
+        assert!(err.contains("number"), "{err}");
+        assert!(v.get("missing").is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! Infrastructure substrates built in-repo (the offline build environment
+//! caches only `xla`/`anyhow`/`thiserror`/`log`, so the usual crates —
+//! serde_json, clap, tokio, proptest, rand, criterion — are replaced by
+//! right-sized implementations here; see DESIGN.md §1).
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

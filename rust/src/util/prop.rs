@@ -1,0 +1,100 @@
+//! Property-testing harness (the offline environment has no `proptest`).
+//!
+//! Seeded case generation with failure-seed reporting: a failing property
+//! prints the exact `Rng` seed that reproduces it, so `check(seed, ...)`
+//! in a scratch test replays the case. No shrinking — cases are kept
+//! small by construction instead.
+//!
+//! ```ignore
+//! prop::check("voting permutation-invariant", 500, |rng| {
+//!     let mut answers = gen_answers(rng);
+//!     ...
+//!     ensure!(a == b, "mismatch: {a:?} vs {b:?}");
+//!     Ok(())
+//! });
+//! ```
+
+use anyhow::Result;
+
+use super::rng::Rng;
+
+/// Run `cases` random cases of `prop`. Panics (failing the enclosing
+/// `#[test]`) with the seed of the first failing case.
+pub fn check<F>(name: &str, cases: u64, prop: F)
+where
+    F: Fn(&mut Rng) -> Result<()>,
+{
+    check_seeded(name, 0x5559_7C5D_u64, cases, prop)
+}
+
+/// Like [`check`] but with an explicit base seed — use to replay failures.
+pub fn check_seeded<F>(name: &str, base_seed: u64, cases: u64, prop: F)
+where
+    F: Fn(&mut Rng) -> Result<()>,
+{
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut rng = Rng::new(seed);
+        if let Err(e) = prop(&mut rng) {
+            panic!(
+                "property `{name}` failed on case {case} (replay with \
+                 check_seeded(_, {seed:#x}, 1, ..)): {e:#}"
+            );
+        }
+    }
+}
+
+/// Generators for common shapes used across coordinator properties.
+pub mod gen {
+    use super::Rng;
+
+    /// Vec of length in `[lo, hi]` with elements from `f`.
+    pub fn vec_of<T>(rng: &mut Rng, lo: usize, hi: usize, mut f: impl FnMut(&mut Rng) -> T) -> Vec<T> {
+        let n = rng.range(lo as i64, hi as i64) as usize;
+        (0..n).map(|_| f(rng)).collect()
+    }
+
+    /// Uniform usize in `[0, n)`.
+    pub fn index(rng: &mut Rng, n: usize) -> usize {
+        rng.below(n as u64) as usize
+    }
+
+    /// f64 in `[lo, hi)`.
+    pub fn f64_in(rng: &mut Rng, lo: f64, hi: f64) -> f64 {
+        lo + rng.f64() * (hi - lo)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use anyhow::ensure;
+
+    #[test]
+    fn passing_property_passes() {
+        check("sum is commutative", 100, |rng| {
+            let a = rng.below(1000) as i64;
+            let b = rng.below(1000) as i64;
+            ensure!(a + b == b + a);
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always fails`")]
+    fn failing_property_reports_seed() {
+        check("always fails", 10, |_| anyhow::bail!("nope"));
+    }
+
+    #[test]
+    fn generators_in_bounds() {
+        check("gen bounds", 200, |rng| {
+            let v = gen::vec_of(rng, 1, 9, |r| r.below(5));
+            ensure!((1..=9).contains(&v.len()));
+            ensure!(v.iter().all(|&x| x < 5));
+            let x = gen::f64_in(rng, -2.0, 3.0);
+            ensure!((-2.0..3.0).contains(&x));
+            Ok(())
+        });
+    }
+}

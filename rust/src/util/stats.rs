@@ -1,0 +1,146 @@
+//! Small statistics helpers shared by metrics, eval and the bench harness.
+
+/// Arithmetic mean; 0.0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Sample standard deviation; 0.0 for fewer than two samples.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Percentile via linear interpolation on a copy; `q` in [0, 100].
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = (q / 100.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Online counter histogram over integer buckets `0..n` (fig5's 0..=9
+/// score distribution, batcher fill levels, ...).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub counts: Vec<u64>,
+}
+
+impl Histogram {
+    pub fn new(buckets: usize) -> Self {
+        Histogram { counts: vec![0; buckets] }
+    }
+
+    pub fn add(&mut self, bucket: usize) {
+        let b = bucket.min(self.counts.len() - 1);
+        self.counts[b] += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Per-bucket fraction of the total (empty histogram -> zeros).
+    pub fn fractions(&self) -> Vec<f64> {
+        let t = self.total().max(1) as f64;
+        self.counts.iter().map(|&c| c as f64 / t).collect()
+    }
+
+    /// Cumulative fractions (monotone, last entry 1.0 when non-empty).
+    pub fn cumulative(&self) -> Vec<f64> {
+        let mut acc = 0.0;
+        self.fractions()
+            .into_iter()
+            .map(|f| {
+                acc += f;
+                acc
+            })
+            .collect()
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        assert_eq!(self.counts.len(), other.counts.len());
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_stddev() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(mean(&[2.0, 4.0]), 3.0);
+        assert!((stddev(&[2.0, 4.0]) - std::f64::consts::SQRT_2).abs() < 1e-12);
+        assert_eq!(stddev(&[5.0]), 0.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert_eq!(median(&xs), 2.5);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn percentile_unsorted_input() {
+        let xs = [9.0, 1.0, 5.0];
+        assert_eq!(median(&xs), 5.0);
+    }
+
+    #[test]
+    fn histogram_fractions_and_cumulative() {
+        let mut h = Histogram::new(10);
+        for s in [7, 7, 9, 3] {
+            h.add(s);
+        }
+        assert_eq!(h.total(), 4);
+        let f = h.fractions();
+        assert_eq!(f[7], 0.5);
+        let c = h.cumulative();
+        assert!((c[9] - 1.0).abs() < 1e-12);
+        assert!(c.windows(2).all(|w| w[0] <= w[1] + 1e-12));
+    }
+
+    #[test]
+    fn histogram_clamps_overflow_bucket() {
+        let mut h = Histogram::new(4);
+        h.add(99);
+        assert_eq!(h.counts[3], 1);
+    }
+
+    #[test]
+    fn histogram_merge() {
+        let mut a = Histogram::new(3);
+        let mut b = Histogram::new(3);
+        a.add(0);
+        b.add(2);
+        a.merge(&b);
+        assert_eq!(a.counts, vec![1, 0, 1]);
+    }
+}

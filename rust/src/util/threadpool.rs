@@ -1,0 +1,162 @@
+//! Fixed-size thread pool (the offline environment has no `tokio`).
+//!
+//! The coordinator's concurrency needs are coarse-grained: one listener
+//! thread, a scheduler thread, and a pool that runs request handlers and
+//! experiment shards. A channel-fed pool with join support covers all of
+//! it; PJRT execution itself is synchronous per call.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    pending: AtomicUsize,
+    done_cv: Condvar,
+    done_mx: Mutex<()>,
+}
+
+/// A fixed pool of worker threads consuming a job queue.
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+    shared: Arc<Shared>,
+}
+
+impl ThreadPool {
+    pub fn new(n_threads: usize) -> Self {
+        assert!(n_threads > 0);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let shared = Arc::new(Shared {
+            pending: AtomicUsize::new(0),
+            done_cv: Condvar::new(),
+            done_mx: Mutex::new(()),
+        });
+        let workers = (0..n_threads)
+            .map(|idx| {
+                let rx = Arc::clone(&rx);
+                let shared = Arc::clone(&shared);
+                thread::Builder::new()
+                    .name(format!("ssr-worker-{idx}"))
+                    .spawn(move || loop {
+                        let job = { rx.lock().unwrap().recv() };
+                        match job {
+                            Ok(job) => {
+                                job();
+                                if shared.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+                                    let _g = shared.done_mx.lock().unwrap();
+                                    shared.done_cv.notify_all();
+                                }
+                            }
+                            Err(_) => break, // sender dropped: shutdown
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers, shared }
+    }
+
+    /// Submit a job; runs as soon as a worker is free.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.shared.pending.fetch_add(1, Ordering::AcqRel);
+        self.tx.as_ref().expect("pool alive").send(Box::new(f)).expect("workers alive");
+    }
+
+    /// Block until every submitted job has completed.
+    pub fn join(&self) {
+        let mut g = self.shared.done_mx.lock().unwrap();
+        while self.shared.pending.load(Ordering::Acquire) != 0 {
+            g = self.shared.done_cv.wait(g).unwrap();
+        }
+    }
+
+    /// Map `f` over `items` on the pool, preserving order.
+    pub fn map<T, U, F>(&self, items: Vec<T>, f: F) -> Vec<U>
+    where
+        T: Send + 'static,
+        U: Send + 'static,
+        F: Fn(T) -> U + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        let results: Arc<Mutex<Vec<Option<U>>>> =
+            Arc::new(Mutex::new((0..items.len()).map(|_| None).collect()));
+        for (i, item) in items.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let results = Arc::clone(&results);
+            self.execute(move || {
+                let out = f(item);
+                results.lock().unwrap()[i] = Some(out);
+            });
+        }
+        self.join();
+        Arc::try_unwrap(results)
+            .unwrap_or_else(|_| panic!("results still shared after join"))
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|x| x.expect("every job completed"))
+            .collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // closes the channel; workers exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.join();
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let out = pool.map((0..50).collect::<Vec<i64>>(), |x| x * x);
+        assert_eq!(out, (0..50).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn join_with_no_jobs_returns() {
+        let pool = ThreadPool::new(2);
+        pool.join();
+    }
+
+    #[test]
+    fn drop_shuts_down_cleanly() {
+        let pool = ThreadPool::new(2);
+        pool.execute(|| {});
+        drop(pool);
+    }
+
+    #[test]
+    fn reusable_after_join() {
+        let pool = ThreadPool::new(2);
+        let a = pool.map(vec![1, 2, 3], |x| x + 1);
+        let b = pool.map(vec![10, 20], |x| x + 1);
+        assert_eq!(a, vec![2, 3, 4]);
+        assert_eq!(b, vec![11, 21]);
+    }
+}

@@ -1,0 +1,11 @@
+//! Workload substrate: procedural problem generation (the stand-in for
+//! the paper's math benchmarks), the strategy pool, canonical evaluation
+//! suites, and serving traces.
+
+pub mod problems;
+pub mod strategies;
+pub mod suites;
+pub mod traces;
+
+pub use problems::{Family, Problem};
+pub use suites::Suite;

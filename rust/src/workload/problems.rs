@@ -1,0 +1,330 @@
+//! Procedural arithmetic-reasoning problems — the benchmark substrate
+//! standing in for AIME / MATH-500 / LiveMathBench (DESIGN.md §1).
+//!
+//! Mirrors `python/compile/corpus.py` (same splitmix64 stream, same
+//! families, same rendering grammar); the canonical evaluation suites are
+//! generated in python at artifact-build time (`suites.rs` loads them),
+//! while this generator feeds serving traces, fuzzing and property tests.
+
+use anyhow::Result;
+
+use crate::model::tokenizer;
+use crate::runtime::Vocab;
+use crate::util::rng::Rng;
+
+/// Problem families (indices match the python corpus).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Family {
+    AddChain = 0,
+    MulMix = 1,
+    Paren = 2,
+    Modular = 3,
+}
+
+pub const FAMILIES: [Family; 4] =
+    [Family::AddChain, Family::MulMix, Family::Paren, Family::Modular];
+
+impl Family {
+    pub fn from_index(i: usize) -> Family {
+        FAMILIES[i]
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Family::AddChain => "add_chain",
+            Family::MulMix => "mul_mix",
+            Family::Paren => "paren",
+            Family::Modular => "modular",
+        }
+    }
+}
+
+/// Expression AST (leaf value or binary op).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expr {
+    Num(i64),
+    Bin(Op, Box<Expr>, Box<Expr>),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    Add,
+    Sub,
+    Mul,
+    Mod,
+}
+
+impl Expr {
+    pub fn eval(&self) -> i64 {
+        match self {
+            Expr::Num(v) => *v,
+            Expr::Bin(op, a, b) => {
+                let (x, y) = (a.eval(), b.eval());
+                match op {
+                    Op::Add => x + y,
+                    Op::Sub => x - y,
+                    Op::Mul => x * y,
+                    Op::Mod => x.rem_euclid(y),
+                }
+            }
+        }
+    }
+
+    /// Render with minimal parentheses (matches the python renderer:
+    /// `%` binds loosest, compound `%`-lhs always parenthesized).
+    pub fn tokens(&self, v: &Vocab) -> Vec<i32> {
+        let mut out = Vec::new();
+        self.render(v, 0, &mut out);
+        out
+    }
+
+    fn prec(op: Op) -> i32 {
+        match op {
+            Op::Mod => 0,
+            Op::Add | Op::Sub => 1,
+            Op::Mul => 2,
+        }
+    }
+
+    fn render(&self, v: &Vocab, parent_prec: i32, out: &mut Vec<i32>) {
+        match self {
+            Expr::Num(x) => out.extend(tokenizer::num_tokens(v, *x)),
+            Expr::Bin(op, a, b) => {
+                let prec = Self::prec(*op);
+                let lhs_prec = if *op == Op::Mod { 3 } else { prec };
+                let need_parens = prec < parent_prec;
+                if need_parens {
+                    out.push(v.lparen);
+                }
+                a.render(v, lhs_prec, out);
+                out.push(match op {
+                    Op::Add => v.plus,
+                    Op::Sub => v.minus,
+                    Op::Mul => v.mul,
+                    Op::Mod => v.modulo,
+                });
+                b.render(v, prec + 1, out);
+                if need_parens {
+                    out.push(v.rparen);
+                }
+            }
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Problem {
+    pub family: Family,
+    pub expr: Expr,
+    pub answer: i64,
+    pub difficulty: u32,
+    /// pre-rendered expression tokens
+    pub tokens: Vec<i32>,
+}
+
+fn bin(op: Op, a: Expr, b: Expr) -> Expr {
+    Expr::Bin(op, Box::new(a), Box::new(b))
+}
+
+fn gen_add_chain(rng: &mut Rng, max_operand: i64, n_ops: usize) -> Expr {
+    let mut node = Expr::Num(rng.range(1, max_operand));
+    let mut total = node.eval();
+    for _ in 0..n_ops {
+        if total > 10 && rng.below(2) == 0 {
+            let v = rng.range(1, total.min(max_operand));
+            node = bin(Op::Sub, node, Expr::Num(v));
+            total -= v;
+        } else {
+            let v = rng.range(1, max_operand);
+            node = bin(Op::Add, node, Expr::Num(v));
+            total += v;
+        }
+    }
+    node
+}
+
+fn gen_mul_mix(rng: &mut Rng, max_operand: i64, n_ops: usize) -> Expr {
+    let small = (max_operand / 4).clamp(2, 9);
+    let prod = bin(Op::Mul, Expr::Num(rng.range(2, small)), Expr::Num(rng.range(2, small)));
+    let mut node = bin(Op::Add, Expr::Num(rng.range(1, max_operand)), prod);
+    for _ in 0..n_ops.saturating_sub(2) {
+        if rng.below(3) == 0 {
+            let prod =
+                bin(Op::Mul, Expr::Num(rng.range(2, small)), Expr::Num(rng.range(2, small)));
+            node = bin(Op::Add, node, prod);
+        } else if node.eval() > max_operand && rng.below(2) == 0 {
+            node = bin(Op::Sub, node, Expr::Num(rng.range(1, max_operand)));
+        } else {
+            node = bin(Op::Add, node, Expr::Num(rng.range(1, max_operand)));
+        }
+    }
+    node
+}
+
+fn gen_paren(rng: &mut Rng, max_operand: i64, n_ops: usize) -> Expr {
+    let half = max_operand / 2 + 1;
+    let inner = bin(Op::Add, Expr::Num(rng.range(1, half)), Expr::Num(rng.range(1, half)));
+    let mut node = bin(Op::Mul, inner, Expr::Num(rng.range(2, 5)));
+    for _ in 0..n_ops.saturating_sub(2) {
+        if node.eval() > 20 && rng.below(2) == 0 {
+            node = bin(Op::Sub, node, Expr::Num(rng.range(1, 20)));
+        } else {
+            node = bin(Op::Add, node, Expr::Num(rng.range(1, max_operand)));
+        }
+    }
+    node
+}
+
+fn gen_modular(rng: &mut Rng, max_operand: i64, n_ops: usize) -> Expr {
+    let small = (max_operand / 4).clamp(2, 9);
+    let mut base = bin(
+        Op::Add,
+        bin(Op::Mul, Expr::Num(rng.range(2, small)), Expr::Num(rng.range(2, small))),
+        Expr::Num(rng.range(1, max_operand)),
+    );
+    for _ in 0..n_ops.saturating_sub(3) {
+        base = bin(Op::Add, base, Expr::Num(rng.range(1, max_operand)));
+    }
+    bin(Op::Mod, base, Expr::Num(rng.range(3, 9)))
+}
+
+/// Generate one problem (mirrors `corpus.gen_problem`).
+pub fn gen_problem(
+    rng: &mut Rng,
+    v: &Vocab,
+    family: Family,
+    max_operand: i64,
+    n_ops: usize,
+) -> Problem {
+    let expr = match family {
+        Family::AddChain => gen_add_chain(rng, max_operand, n_ops),
+        Family::MulMix => gen_mul_mix(rng, max_operand, n_ops),
+        Family::Paren => gen_paren(rng, max_operand, n_ops),
+        Family::Modular => gen_modular(rng, max_operand, n_ops),
+    };
+    let answer = expr.eval();
+    let difficulty = (1 + n_ops as u32
+        + u32::from(max_operand > 30)
+        + u32::from(matches!(family, Family::Paren | Family::Modular)))
+    .min(5);
+    let tokens = expr.tokens(v);
+    Problem { family, expr, answer, difficulty, tokens }
+}
+
+/// Generate a problem guaranteed renderable (answer in [0, 999], short).
+pub fn gen_valid_problem(
+    rng: &mut Rng,
+    v: &Vocab,
+    family: Family,
+    max_operand: i64,
+    n_ops: usize,
+) -> Problem {
+    loop {
+        let p = gen_problem(rng, v, family, max_operand, n_ops);
+        if (0..=999).contains(&p.answer) && p.tokens.len() <= 36 {
+            return p;
+        }
+    }
+}
+
+/// Parse a user-supplied expression string into a Problem (server path).
+pub fn problem_from_text(v: &Vocab, text: &str) -> Result<Problem> {
+    let tokens = tokenizer::tokenize_expr(v, text)?;
+    let answer = tokenizer::eval_expr(v, &tokens)?;
+    let family = if tokens.contains(&v.modulo) {
+        Family::Modular
+    } else if tokens.contains(&v.lparen) {
+        Family::Paren
+    } else if tokens.contains(&v.mul) {
+        Family::MulMix
+    } else {
+        Family::AddChain
+    };
+    let n_ops = tokens
+        .iter()
+        .filter(|&&t| t == v.plus || t == v.minus || t == v.mul || t == v.modulo)
+        .count();
+    Ok(Problem {
+        family,
+        expr: Expr::Num(answer), // AST not reconstructed; tokens are canonical
+        answer,
+        difficulty: (1 + n_ops as u32).min(5),
+        tokens,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::tokenizer::builtin_vocab as test_vocab;
+    use crate::util::prop;
+
+    #[test]
+    fn generator_answers_match_token_evaluator() {
+        let v = test_vocab();
+        prop::check("gen answer == eval(tokens)", 300, |rng| {
+            let fam = FAMILIES[rng.below(4) as usize];
+            let n_ops = rng.range(2, 4) as usize;
+            let p = gen_problem(rng, &v, fam, 50, n_ops);
+            let evald = tokenizer::eval_expr(&v, &p.tokens)?;
+            anyhow::ensure!(
+                evald == p.answer,
+                "expr {} evals to {evald}, answer says {}",
+                tokenizer::detokenize(&v, &p.tokens),
+                p.answer
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn valid_problems_renderable() {
+        let v = test_vocab();
+        prop::check("valid problems in range", 100, |rng| {
+            let fam = FAMILIES[rng.below(4) as usize];
+            let p = gen_valid_problem(rng, &v, fam, 99, 4);
+            anyhow::ensure!((0..=999).contains(&p.answer));
+            anyhow::ensure!(p.tokens.len() <= 36);
+            anyhow::ensure!(p.difficulty >= 1 && p.difficulty <= 5);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn families_have_signature_ops() {
+        let v = test_vocab();
+        let mut rng = Rng::new(9);
+        let p = gen_problem(&mut rng, &v, Family::Modular, 40, 3);
+        assert!(p.tokens.contains(&v.modulo));
+        let p = gen_problem(&mut rng, &v, Family::MulMix, 40, 3);
+        assert!(p.tokens.contains(&v.mul));
+    }
+
+    #[test]
+    fn modular_answers_small() {
+        let v = test_vocab();
+        let mut rng = Rng::new(10);
+        for _ in 0..50 {
+            let p = gen_problem(&mut rng, &v, Family::Modular, 60, 3);
+            assert!((0..9).contains(&p.answer), "mod answer {}", p.answer);
+        }
+    }
+
+    #[test]
+    fn problem_from_text_roundtrip() {
+        let v = test_vocab();
+        let p = problem_from_text(&v, "(17+25)*3").unwrap();
+        assert_eq!(p.answer, 126);
+        assert_eq!(p.family, Family::Paren);
+        assert!(problem_from_text(&v, "1+").is_err());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let v = test_vocab();
+        let a = gen_problem(&mut Rng::new(77), &v, Family::AddChain, 30, 3);
+        let b = gen_problem(&mut Rng::new(77), &v, Family::AddChain, 30, 3);
+        assert_eq!(a.tokens, b.tokens);
+        assert_eq!(a.answer, b.answer);
+    }
+}

@@ -1,0 +1,119 @@
+//! The strategy pool (paper §3.1 / Appendix D): K = 12 interpretable
+//! reasoning strategies + "Unknown", each mapping to a decomposition
+//! style with a per-family aptitude. Metadata comes from the artifact
+//! manifest (single source of truth shared with the training corpus);
+//! a built-in copy backs manifest-free paths (calibrated experiments,
+//! property tests).
+
+use crate::runtime::manifest::StrategyMeta;
+use crate::workload::problems::Family;
+
+pub const NUM_STRATEGIES: usize = 13; // A..L + M(unknown)
+pub const NUM_REAL_STRATEGIES: usize = 12;
+pub const UNKNOWN_STRATEGY: usize = 12;
+
+/// Paper Appendix-D strategy names, in token order A..M.
+pub const STRATEGY_NAMES: [&str; NUM_STRATEGIES] = [
+    "algebraic_simplification",
+    "clever_substitution",
+    "coordinate_geometry",
+    "complex_numbers",
+    "number_theory",
+    "combinatorics",
+    "probability",
+    "functional_equations",
+    "recursion_invariants",
+    "geometry",
+    "casework_constructive",
+    "calculus_inequalities",
+    "unknown",
+];
+
+/// Decomposition styles (indices match `corpus.py`).
+pub const STYLE_NAMES: [&str; 6] =
+    ["l2r", "prec_first", "paren_first", "rtl", "tens", "mod_reduce"];
+
+/// strategy index -> style index (strategy M has no fixed style).
+pub const STRATEGY_STYLE: [usize; NUM_REAL_STRATEGIES] = [1, 2, 0, 3, 5, 4, 1, 0, 3, 2, 4, 5];
+
+/// style x family aptitude in [0,1] (mirrors corpus.STYLE_APTITUDE).
+pub const STYLE_APTITUDE: [[f64; 4]; 6] = [
+    [0.95, 0.35, 0.30, 0.40], // l2r
+    [0.80, 0.95, 0.55, 0.55], // prec_first
+    [0.70, 0.70, 0.95, 0.50], // paren_first
+    [0.45, 0.25, 0.25, 0.30], // rtl
+    [0.90, 0.45, 0.40, 0.35], // tens
+    [0.30, 0.30, 0.30, 0.95], // mod_reduce
+];
+
+/// Static pool used when no manifest is loaded.
+pub fn builtin_meta() -> StrategyMeta {
+    StrategyMeta {
+        names: STRATEGY_NAMES.iter().map(|s| s.to_string()).collect(),
+        styles: STRATEGY_STYLE.to_vec(),
+        style_names: STYLE_NAMES.iter().map(|s| s.to_string()).collect(),
+        aptitude: STYLE_APTITUDE.iter().map(|row| row.to_vec()).collect(),
+    }
+}
+
+/// Aptitude of `strategy` for `family` per the pool metadata.
+pub fn aptitude(meta: &StrategyMeta, strategy: usize, family: Family) -> f64 {
+    if strategy >= meta.styles.len() {
+        return 0.40; // Unknown
+    }
+    meta.aptitude[meta.styles[strategy]][family as usize]
+}
+
+/// The best-aptitude ordering of strategies for a family (ground truth
+/// the SPM selector is measured against in the ablation).
+pub fn oracle_ranking(meta: &StrategyMeta, family: Family) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..NUM_REAL_STRATEGIES).collect();
+    idx.sort_by(|&a, &b| {
+        aptitude(meta, b, family)
+            .partial_cmp(&aptitude(meta, a, family))
+            .unwrap()
+            .then(a.cmp(&b))
+    });
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_meta_consistent() {
+        let m = builtin_meta();
+        assert_eq!(m.names.len(), NUM_STRATEGIES);
+        assert_eq!(m.styles.len(), NUM_REAL_STRATEGIES);
+        assert!(m.styles.iter().all(|&s| s < m.style_names.len()));
+        for row in &m.aptitude {
+            assert_eq!(row.len(), 4);
+            assert!(row.iter().all(|&a| (0.0..=1.0).contains(&a)));
+        }
+    }
+
+    #[test]
+    fn aptitude_matches_table() {
+        let m = builtin_meta();
+        // strategy E (number_theory, idx 4) -> mod_reduce, best on Modular
+        assert_eq!(aptitude(&m, 4, Family::Modular), 0.95);
+        // unknown strategy gets the flat prior
+        assert_eq!(aptitude(&m, UNKNOWN_STRATEGY, Family::AddChain), 0.40);
+    }
+
+    #[test]
+    fn oracle_ranking_sorted() {
+        let m = builtin_meta();
+        for fam in crate::workload::problems::FAMILIES {
+            let rank = oracle_ranking(&m, fam);
+            assert_eq!(rank.len(), NUM_REAL_STRATEGIES);
+            for w in rank.windows(2) {
+                assert!(aptitude(&m, w[0], fam) >= aptitude(&m, w[1], fam));
+            }
+        }
+        // modular family ranks a mod_reduce strategy first
+        let top = oracle_ranking(&m, Family::Modular)[0];
+        assert_eq!(STRATEGY_STYLE[top], 5);
+    }
+}

@@ -1,0 +1,169 @@
+//! Benchmark suites — the canonical problem sets standing in for the
+//! paper's AIME 2024 / MATH-500 / LiveMathBench (loaded from the
+//! python-generated `artifacts/suite-*.json`, or regenerated in-process
+//! for manifest-free runs; both paths are deterministic and the
+//! integration tests assert they agree).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::Vocab;
+use crate::util::json::Value;
+use crate::util::rng::Rng;
+use crate::workload::problems::{Family, Problem, FAMILIES};
+
+#[derive(Debug, Clone)]
+pub struct Suite {
+    pub name: String,
+    pub problems: Vec<Problem>,
+}
+
+/// Suite generation profiles (mirror `corpus.SUITES`).
+#[derive(Debug, Clone)]
+pub struct SuiteSpec {
+    pub name: &'static str,
+    pub paper_name: &'static str,
+    pub n_problems: usize,
+    pub seed: u64,
+    pub family_mix: [f64; 4],
+    pub max_operand: i64,
+    pub ops_lo: usize,
+    pub ops_hi: usize,
+}
+
+pub const SUITE_SPECS: [SuiteSpec; 3] = [
+    SuiteSpec {
+        name: "synth-math500",
+        paper_name: "MATH-500",
+        n_problems: 500,
+        seed: 0x4D41_5448,
+        family_mix: [0.40, 0.30, 0.20, 0.10],
+        max_operand: 30,
+        ops_lo: 2,
+        ops_hi: 3,
+    },
+    SuiteSpec {
+        name: "synth-livemath",
+        paper_name: "LiveMathBench",
+        n_problems: 138,
+        seed: 0x4C49_5645,
+        family_mix: [0.25, 0.25, 0.25, 0.25],
+        max_operand: 50,
+        ops_lo: 2,
+        ops_hi: 4,
+    },
+    SuiteSpec {
+        name: "synth-aime",
+        paper_name: "AIME2024",
+        n_problems: 30,
+        seed: 0x4149_4D45,
+        family_mix: [0.10, 0.25, 0.35, 0.30],
+        max_operand: 99,
+        ops_lo: 3,
+        ops_hi: 4,
+    },
+];
+
+pub fn spec(name: &str) -> Result<&'static SuiteSpec> {
+    SUITE_SPECS
+        .iter()
+        .find(|s| s.name == name || s.paper_name == name)
+        .with_context(|| format!("unknown suite `{name}`"))
+}
+
+/// Load a python-generated suite file.
+pub fn load(dir: &Path, file: &str, name: &str) -> Result<Suite> {
+    let path = dir.join(file);
+    let text = std::fs::read_to_string(&path).with_context(|| format!("reading {path:?}"))?;
+    let v = Value::parse(&text)?;
+    let problems = v
+        .get("problems")?
+        .arr()?
+        .iter()
+        .map(|p| {
+            let tokens: Vec<i32> = p
+                .get("tokens")?
+                .arr()?
+                .iter()
+                .map(|t| Ok(t.i64()? as i32))
+                .collect::<Result<Vec<_>>>()?;
+            Ok(Problem {
+                family: Family::from_index(p.get_usize("family")?),
+                expr: crate::workload::problems::Expr::Num(p.get_i64("answer")?),
+                answer: p.get_i64("answer")?,
+                difficulty: p.get_i64("difficulty")? as u32,
+                tokens,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(Suite { name: name.to_string(), problems })
+}
+
+/// Regenerate a suite in-process (manifest-free paths: calibrated
+/// experiments, tests). Must match the python generator's output for the
+/// same spec — guarded by the cross-language integration test.
+pub fn generate(spec: &SuiteSpec, vocab: &Vocab) -> Suite {
+    let mut rng = Rng::new(spec.seed);
+    let mut problems = Vec::with_capacity(spec.n_problems);
+    while problems.len() < spec.n_problems {
+        let fam = FAMILIES[rng.choice_weighted(&spec.family_mix)];
+        let n_ops = rng.range(spec.ops_lo as i64, spec.ops_hi as i64) as usize;
+        // python gen_suite filters on answer range and prompt length 40
+        // (prompt = expr + 5 framing tokens); gen_valid uses 36-token exprs
+        let p = crate::workload::problems::gen_problem(&mut rng, vocab, fam, spec.max_operand, n_ops);
+        if (0..=999).contains(&p.answer) && p.tokens.len() + 4 <= 40 {
+            problems.push(p);
+        }
+    }
+    Suite { name: spec.name.to_string(), problems }
+}
+
+impl Suite {
+    /// Mean difficulty (used by the calibrated backend's difficulty model).
+    pub fn mean_difficulty(&self) -> f64 {
+        if self.problems.is_empty() {
+            return 0.0;
+        }
+        self.problems.iter().map(|p| p.difficulty as f64).sum::<f64>() / self.problems.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::tokenizer::builtin_vocab as test_vocab;
+    use crate::model::tokenizer;
+
+    #[test]
+    fn specs_resolve_by_both_names() {
+        assert_eq!(spec("synth-aime").unwrap().paper_name, "AIME2024");
+        assert_eq!(spec("MATH-500").unwrap().name, "synth-math500");
+        assert!(spec("nope").is_err());
+    }
+
+    #[test]
+    fn generated_suites_deterministic_and_valid() {
+        let v = test_vocab();
+        for s in &SUITE_SPECS {
+            let a = generate(s, &v);
+            let b = generate(s, &v);
+            assert_eq!(a.problems.len(), s.n_problems);
+            for (pa, pb) in a.problems.iter().zip(&b.problems) {
+                assert_eq!(pa.tokens, pb.tokens);
+                assert_eq!(pa.answer, pb.answer);
+            }
+            for p in &a.problems {
+                assert_eq!(tokenizer::eval_expr(&v, &p.tokens).unwrap(), p.answer);
+            }
+        }
+    }
+
+    #[test]
+    fn aime_is_hardest() {
+        let v = test_vocab();
+        let aime = generate(spec("synth-aime").unwrap(), &v);
+        let math = generate(spec("synth-math500").unwrap(), &v);
+        assert!(aime.mean_difficulty() > math.mean_difficulty());
+    }
+}

@@ -1,0 +1,102 @@
+//! Serving workload traces: request arrival processes over suite
+//! problems, used by the throughput benchmarks and the e2e example
+//! (`examples/serve_trace.rs`). Stands in for the request logs the
+//! paper's 4xA800 latency numbers were measured on.
+
+use crate::util::rng::Rng;
+use crate::workload::problems::Problem;
+use crate::workload::suites::Suite;
+
+#[derive(Debug, Clone)]
+pub struct TraceRequest {
+    pub id: u64,
+    /// offset from trace start, seconds
+    pub arrival_s: f64,
+    pub problem: Problem,
+}
+
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub requests: Vec<TraceRequest>,
+}
+
+/// Poisson arrivals at `rate_rps` over `n` requests sampled (with
+/// replacement) from the suite.
+pub fn poisson_trace(suite: &Suite, n: usize, rate_rps: f64, seed: u64) -> Trace {
+    assert!(rate_rps > 0.0);
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0;
+    let mut requests = Vec::with_capacity(n);
+    for id in 0..n {
+        // exponential inter-arrival
+        let u = rng.f64().max(1e-12);
+        t += -u.ln() / rate_rps;
+        let p = &suite.problems[rng.below(suite.problems.len() as u64) as usize];
+        requests.push(TraceRequest { id: id as u64, arrival_s: t, problem: p.clone() });
+    }
+    Trace { requests }
+}
+
+/// All requests at t=0 (offline batch evaluation shape).
+pub fn batch_trace(suite: &Suite, n: usize, seed: u64) -> Trace {
+    let mut rng = Rng::new(seed);
+    let requests = (0..n)
+        .map(|id| {
+            let p = &suite.problems[rng.below(suite.problems.len() as u64) as usize];
+            TraceRequest { id: id as u64, arrival_s: 0.0, problem: p.clone() }
+        })
+        .collect();
+    Trace { requests }
+}
+
+impl Trace {
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    pub fn duration_s(&self) -> f64 {
+        self.requests.last().map(|r| r.arrival_s).unwrap_or(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::tokenizer::builtin_vocab as test_vocab;
+    use crate::workload::suites::{generate, spec};
+
+    fn suite() -> Suite {
+        generate(spec("synth-aime").unwrap(), &test_vocab())
+    }
+
+    #[test]
+    fn poisson_arrivals_monotone_and_rate_plausible() {
+        let t = poisson_trace(&suite(), 500, 10.0, 1);
+        assert_eq!(t.len(), 500);
+        for w in t.requests.windows(2) {
+            assert!(w[0].arrival_s <= w[1].arrival_s);
+        }
+        // 500 requests at 10 rps ~ 50s; loose 3-sigma bound
+        assert!((30.0..80.0).contains(&t.duration_s()), "{}", t.duration_s());
+    }
+
+    #[test]
+    fn batch_trace_all_at_zero() {
+        let t = batch_trace(&suite(), 10, 2);
+        assert!(t.requests.iter().all(|r| r.arrival_s == 0.0));
+    }
+
+    #[test]
+    fn traces_deterministic() {
+        let a = poisson_trace(&suite(), 20, 5.0, 7);
+        let b = poisson_trace(&suite(), 20, 5.0, 7);
+        for (x, y) in a.requests.iter().zip(&b.requests) {
+            assert_eq!(x.arrival_s, y.arrival_s);
+            assert_eq!(x.problem.answer, y.problem.answer);
+        }
+    }
+}

@@ -1,0 +1,140 @@
+//! Engine-level property tests over the calibrated backend: randomized
+//! (method, config, problem) combinations must preserve the coordinator
+//! invariants regardless of sampling.
+
+use anyhow::ensure;
+use ssr::backend::calibrated::CalibratedBackend;
+use ssr::config::{Selection, SsrConfig, StopRule};
+use ssr::coordinator::engine::{Engine, Method};
+use ssr::model::tokenizer;
+use ssr::util::prop::{self, gen};
+use ssr::workload::suites;
+
+fn random_method(rng: &mut ssr::util::rng::Rng) -> Method {
+    match rng.below(4) {
+        0 => Method::Baseline,
+        1 => Method::Parallel { n: 1 + gen::index(rng, 5), spm: rng.chance(0.5) },
+        2 => Method::SpecReason { tau: rng.below(10) as u8 },
+        _ => Method::Ssr {
+            n: 1 + gen::index(rng, 5),
+            tau: rng.below(10) as u8,
+            stop: [StopRule::Full, StopRule::Fast1, StopRule::Fast2][gen::index(rng, 3)],
+        },
+    }
+}
+
+#[test]
+fn engine_invariants_hold_for_random_configurations() {
+    let v = tokenizer::builtin_vocab();
+    let suite = suites::generate(suites::spec("synth-livemath").unwrap(), &v);
+    prop::check("engine invariants", 60, |rng| {
+        let method = random_method(rng);
+        let mut cfg = SsrConfig::default();
+        cfg.max_steps = 4 + gen::index(rng, 12);
+        cfg.selection = [
+            Selection::ModelTopN,
+            Selection::ModelSample,
+            Selection::Random,
+            Selection::Oracle,
+        ][gen::index(rng, 4)];
+        let problem = &suite.problems[gen::index(rng, suite.problems.len())];
+        let seed = rng.next_u64();
+
+        let mut backend = CalibratedBackend::for_suite("synth-livemath", seed)?;
+        let mut engine = Engine::new(&mut backend, cfg.clone());
+        let r = engine.run(problem, method, seed)?;
+
+        // one vote per opened path
+        let expected_paths = match method {
+            Method::Baseline | Method::SpecReason { .. } => 1,
+            Method::Parallel { n, .. } | Method::Ssr { n, .. } => n,
+        };
+        ensure!(r.votes.len() == expected_paths, "votes {} != paths {expected_paths}", r.votes.len());
+
+        // token/step accounting sanity
+        ensure!(r.target_tokens > 0, "target did no work");
+        ensure!(r.rewrites <= r.steps, "rewrites {} > steps {}", r.rewrites, r.steps);
+        ensure!(
+            r.steps as usize <= expected_paths * cfg.max_steps,
+            "steps {} exceed cap", r.steps
+        );
+        if method.uses_draft() {
+            ensure!(r.draft_tokens > 0, "speculative run without draft work");
+            ensure!(r.score_tokens > 0, "speculative run without scoring");
+        } else {
+            ensure!(r.draft_tokens == 0, "non-speculative run used the draft");
+            ensure!(r.rewrites == 0, "non-speculative run rewrote");
+        }
+
+        // tau = 0 accepts everything
+        if let Method::Ssr { tau: 0, .. } | Method::SpecReason { tau: 0 } = method {
+            ensure!(r.rewrites == 0, "tau=0 must not rewrite");
+        }
+
+        // every per-path score is on the 0..=9 scale, and the decision's
+        // answer (if any) is one of the votes
+        for v in &r.votes {
+            ensure!(v.step_scores.iter().all(|&s| s <= 9));
+        }
+        if let Some(ans) = r.answer() {
+            ensure!(
+                r.votes.iter().any(|v| v.answer == Some(ans)),
+                "aggregated answer {ans} not among votes"
+            );
+        }
+
+        // SPM selection: distinct strategies within the pool
+        let mut sel = r.selection.clone();
+        sel.sort_unstable();
+        sel.dedup();
+        ensure!(sel.len() == r.selection.len(), "duplicate strategies selected");
+        ensure!(sel.iter().all(|&s| s < 12), "strategy outside pool");
+
+        // accounting clock is monotone
+        ensure!(r.model_secs >= 0.0 && r.wall_secs >= 0.0);
+        Ok(())
+    });
+}
+
+#[test]
+fn fast_modes_never_cost_more_tokens() {
+    let v = tokenizer::builtin_vocab();
+    let suite = suites::generate(suites::spec("synth-math500").unwrap(), &v);
+    prop::check("fast modes cheaper", 25, |rng| {
+        let problem = &suite.problems[gen::index(rng, suite.problems.len())];
+        let seed = rng.next_u64();
+        let mut cost = Vec::new();
+        for stop in [StopRule::Fast1, StopRule::Fast2, StopRule::Full] {
+            // fresh backend with same seed: identical path dynamics
+            let mut b = CalibratedBackend::for_suite("synth-math500", 0xF00D)?;
+            let mut engine = Engine::new(&mut b, SsrConfig::default());
+            let r = engine.run(problem, Method::Ssr { n: 4, tau: 7, stop }, seed)?;
+            cost.push(r.draft_tokens + r.target_tokens + r.score_tokens);
+        }
+        ensure!(cost[0] <= cost[2], "fast1 {} > full {}", cost[0], cost[2]);
+        ensure!(cost[1] <= cost[2], "fast2 {} > full {}", cost[1], cost[2]);
+        Ok(())
+    });
+}
+
+#[test]
+fn tau_monotone_in_rewrite_rate() {
+    let v = tokenizer::builtin_vocab();
+    let suite = suites::generate(suites::spec("synth-aime").unwrap(), &v);
+    prop::check("R monotone in tau", 15, |rng| {
+        let problem = &suite.problems[gen::index(rng, suite.problems.len())];
+        let seed = rng.next_u64();
+        let mut rates = Vec::new();
+        for tau in [1u8, 5, 9] {
+            let mut b = CalibratedBackend::for_suite("synth-aime", 0xAB)?;
+            let mut engine = Engine::new(&mut b, SsrConfig::default());
+            let r = engine.run(problem, Method::Ssr { n: 3, tau, stop: StopRule::Full }, seed)?;
+            rates.push(r.rewrite_rate());
+        }
+        ensure!(
+            rates[0] <= rates[1] + 0.35 && rates[1] <= rates[2] + 0.35,
+            "rates not ~monotone: {rates:?}"
+        );
+        Ok(())
+    });
+}

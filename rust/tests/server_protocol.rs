@@ -1,0 +1,117 @@
+//! TCP server protocol round-trip over the calibrated backend (no
+//! artifacts needed): solve / stats / error handling / shutdown.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use ssr::backend::calibrated::CalibratedBackend;
+use ssr::backend::Backend;
+use ssr::config::SsrConfig;
+use ssr::coordinator::server::Server;
+use ssr::model::tokenizer;
+use ssr::util::json::Value;
+use ssr::util::threadpool::ThreadPool;
+
+fn request(stream: &mut TcpStream, line: &str) -> Value {
+    stream.write_all(line.as_bytes()).unwrap();
+    stream.write_all(b"\n").unwrap();
+    stream.flush().unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut reply = String::new();
+    reader.read_line(&mut reply).unwrap();
+    Value::parse(&reply).unwrap()
+}
+
+#[test]
+fn solve_stats_shutdown_roundtrip() {
+    let cfg = SsrConfig::default();
+    let vocab = tokenizer::builtin_vocab();
+    let (server, listener) = Server::start("127.0.0.1", 0, cfg, vocab, || {
+        Ok(Box::new(CalibratedBackend::for_suite("synth-math500", 7)?) as Box<dyn Backend>)
+    })
+    .unwrap();
+    let addr = server.addr.clone();
+
+    let handle = std::thread::spawn(move || {
+        let pool = ThreadPool::new(2);
+        server.serve(listener, &pool).unwrap();
+    });
+
+    let mut stream = TcpStream::connect(&addr).unwrap();
+
+    // solve with explicit method
+    let r = request(
+        &mut stream,
+        r#"{"op":"solve","expr":"17+25*3","method":"ssr","paths":3,"seed":5}"#,
+    );
+    assert_eq!(r.get("ok").unwrap().bool().unwrap(), true, "{r:?}");
+    assert_eq!(r.get_i64("gold").unwrap(), 92);
+    assert!(r.get_i64("steps").unwrap() > 0);
+    assert!(r.get_f64("latency_s").unwrap() >= 0.0);
+
+    // baseline method
+    let r = request(&mut stream, r#"{"op":"solve","expr":"5+6","method":"baseline"}"#);
+    assert_eq!(r.get_i64("gold").unwrap(), 11);
+    assert_eq!(r.get_i64("draft_tokens").unwrap(), 0);
+
+    // malformed expression -> structured error, connection stays up
+    let r = request(&mut stream, r#"{"op":"solve","expr":"1+"}"#);
+    assert_eq!(r.get("ok").unwrap().bool().unwrap(), false);
+    assert!(r.get_str("error").unwrap().len() > 3);
+
+    // unknown op -> error
+    let r = request(&mut stream, r#"{"op":"dance"}"#);
+    assert_eq!(r.get("ok").unwrap().bool().unwrap(), false);
+
+    // garbage JSON -> error
+    let r = request(&mut stream, "not json at all");
+    assert_eq!(r.get("ok").unwrap().bool().unwrap(), false);
+
+    // stats reflect the two successful solves
+    let r = request(&mut stream, r#"{"op":"stats"}"#);
+    assert_eq!(r.get("ok").unwrap().bool().unwrap(), true);
+    assert_eq!(r.get_i64("requests").unwrap(), 2);
+    assert!(r.get_f64("mean_latency_s").unwrap() > 0.0);
+
+    // shutdown
+    let r = request(&mut stream, r#"{"op":"shutdown"}"#);
+    assert_eq!(r.get("ok").unwrap().bool().unwrap(), true);
+    handle.join().unwrap();
+}
+
+#[test]
+fn concurrent_clients_are_serialized_safely() {
+    let cfg = SsrConfig::default();
+    let vocab = tokenizer::builtin_vocab();
+    let (server, listener) = Server::start("127.0.0.1", 0, cfg, vocab, || {
+        Ok(Box::new(CalibratedBackend::for_suite("synth-math500", 9)?) as Box<dyn Backend>)
+    })
+    .unwrap();
+    let addr = server.addr.clone();
+    let srv = std::thread::spawn(move || {
+        let pool = ThreadPool::new(4);
+        server.serve(listener, &pool).unwrap();
+    });
+
+    let mut clients: Vec<_> = (0..4)
+        .map(|i| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut s = TcpStream::connect(&addr).unwrap();
+                let r = request(
+                    &mut s,
+                    &format!(r#"{{"op":"solve","expr":"{}+{}","method":"baseline"}}"#, i + 1, i + 2),
+                );
+                assert_eq!(r.get_i64("gold").unwrap(), (2 * i + 3) as i64);
+            })
+        })
+        .collect();
+    for c in clients.drain(..) {
+        c.join().unwrap();
+    }
+    let mut s = TcpStream::connect(&addr).unwrap();
+    let r = request(&mut s, r#"{"op":"stats"}"#);
+    assert_eq!(r.get_i64("requests").unwrap(), 4);
+    let _ = request(&mut s, r#"{"op":"shutdown"}"#);
+    srv.join().unwrap();
+}

@@ -1,0 +1,176 @@
+//! Serving-scheduler bench: N concurrent clients x mixed methods on the
+//! calibrated backend (no PJRT artifacts needed, so it always runs),
+//! comparing the serial-FIFO path against cross-request continuous
+//! batching.
+//!
+//! Both modes run through the SAME scheduler machinery — `max_lanes=1`
+//! admits one problem at a time, which is exactly the old blocking
+//! per-request FIFO; the scheduled mode opens the lane pool so
+//! concurrent problems share step batches. Reported throughput is in
+//! backend model-time (virtual seconds on the calibrated substrate:
+//! batched step calls cost the batch-max span, like real batched
+//! decode), which is the quantity the lane pool actually improves;
+//! wall time on this testbed is dominated by the coordinator itself.
+//!
+//! Emits one machine-readable line per mode plus a `BENCH_JSON` summary
+//! for the trajectory tracker.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use ssr::backend::calibrated::CalibratedBackend;
+use ssr::backend::Backend;
+use ssr::config::SsrConfig;
+use ssr::config::StopRule;
+use ssr::coordinator::engine::Method;
+use ssr::coordinator::metrics::Metrics;
+use ssr::coordinator::scheduler::{Scheduler, SchedulerHandle, SolveRequest};
+use ssr::model::tokenizer;
+use ssr::util::json;
+
+const CLIENTS: usize = 8;
+const JOBS_PER_CLIENT: usize = 6;
+
+fn mixed_method(i: usize) -> Method {
+    match i % 5 {
+        0 => Method::Baseline,
+        1 => Method::Ssr { n: 5, tau: 7, stop: StopRule::Full },
+        2 => Method::SpecReason { tau: 7 },
+        3 => Method::Ssr { n: 3, tau: 7, stop: StopRule::Fast2 },
+        _ => Method::Parallel { n: 4, spm: true },
+    }
+}
+
+fn expr_for(client: usize, job: usize) -> String {
+    format!("{}+{}*{}", 3 + client, 5 + job, 2 + (client + job) % 4)
+}
+
+struct ModeReport {
+    label: String,
+    wall_s: f64,
+    model_s: f64,
+    jobs: usize,
+    answered: u64,
+    p50_s: f64,
+    p99_s: f64,
+    occupancy: f64,
+    throughput_model: f64,
+}
+
+/// Run the full client load against one scheduler configuration.
+fn run_mode(label: &str, max_lanes: usize) -> anyhow::Result<ModeReport> {
+    let mut cfg = SsrConfig::default();
+    cfg.max_lanes = max_lanes;
+    let metrics = Arc::new(Mutex::new(Metrics::new()));
+    let (handle, join) = Scheduler::spawn(
+        cfg,
+        tokenizer::builtin_vocab(),
+        Arc::clone(&metrics),
+        || {
+            Ok(Box::new(CalibratedBackend::for_suite("synth-math500", 0xBE7C)?)
+                as Box<dyn Backend>)
+        },
+    )?;
+
+    let t0 = Instant::now();
+    let clients: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            let handle: SchedulerHandle = handle.clone();
+            std::thread::spawn(move || {
+                for j in 0..JOBS_PER_CLIENT {
+                    let (rtx, rrx) = mpsc::channel();
+                    handle
+                        .submit(SolveRequest {
+                            expr: expr_for(c, j),
+                            method: mixed_method(c * JOBS_PER_CLIENT + j),
+                            seed: (c * 1009 + j) as u64,
+                            reply: rtx,
+                        })
+                        .expect("scheduler alive");
+                    let v = rrx.recv().expect("reply").expect("solve ok");
+                    assert_eq!(v.get("ok").unwrap().bool().unwrap(), true);
+                }
+            })
+        })
+        .collect();
+    for c in clients {
+        c.join().unwrap();
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    drop(handle);
+    join.join().unwrap();
+
+    let m = metrics.lock().unwrap();
+    let jobs = CLIENTS * JOBS_PER_CLIENT;
+    assert_eq!(m.requests as usize, jobs, "lost requests in {label}");
+    assert_eq!(m.errors, 0, "errors in {label}");
+    Ok(ModeReport {
+        label: label.to_string(),
+        wall_s,
+        model_s: m.model_secs,
+        jobs,
+        answered: m.answered,
+        p50_s: m.p50(),
+        p99_s: m.p99(),
+        occupancy: m.mean_batch_occupancy(),
+        throughput_model: jobs as f64 / m.model_secs.max(1e-9),
+    })
+}
+
+fn print_mode(r: &ModeReport) {
+    println!(
+        "  {:<10} {:3} jobs  answered {:3}  wall {:6.2}s  model {:8.1}s  \
+         p50 {:7.2}s p99 {:7.2}s  occupancy {:5.2}  {:.4} solves/model-s",
+        r.label, r.jobs, r.answered, r.wall_s, r.model_s, r.p50_s, r.p99_s, r.occupancy,
+        r.throughput_model
+    );
+}
+
+fn main() -> anyhow::Result<()> {
+    let t_start = Instant::now();
+    println!(
+        "## serving scheduler: {CLIENTS} clients x {JOBS_PER_CLIENT} jobs, mixed methods, \
+         calibrated backend"
+    );
+    let serial = run_mode("serial", 1)?;
+    print_mode(&serial);
+    let sched = run_mode("scheduled", 32)?;
+    print_mode(&sched);
+
+    let speedup = sched.throughput_model / serial.throughput_model.max(1e-12);
+    let occ_ratio = sched.occupancy / serial.occupancy.max(1e-12);
+    println!(
+        "\n  model-time throughput x{speedup:.2}   batch occupancy x{occ_ratio:.2}  \
+         (target: >= 2x each with >= 4 concurrent clients)"
+    );
+
+    let summary = json::obj(vec![
+        ("bench", json::s("serving_scheduler")),
+        ("clients", json::i(CLIENTS as i64)),
+        ("jobs", json::i((CLIENTS * JOBS_PER_CLIENT) as i64)),
+        ("serial_model_s", json::n(serial.model_s)),
+        ("sched_model_s", json::n(sched.model_s)),
+        ("serial_occupancy", json::n(serial.occupancy)),
+        ("sched_occupancy", json::n(sched.occupancy)),
+        ("serial_p99_s", json::n(serial.p99_s)),
+        ("sched_p99_s", json::n(sched.p99_s)),
+        ("throughput_speedup", json::n(speedup)),
+        ("occupancy_ratio", json::n(occ_ratio)),
+        ("wall_serial_s", json::n(serial.wall_s)),
+        ("wall_sched_s", json::n(sched.wall_s)),
+    ]);
+    println!("\nBENCH_JSON {}", summary.print());
+
+    if speedup < 2.0 || occ_ratio < 2.0 {
+        eprintln!(
+            "[bench serving_scheduler] WARNING: below 2x target \
+             (speedup {speedup:.2}, occupancy ratio {occ_ratio:.2})"
+        );
+    }
+    println!(
+        "[bench serving_scheduler] completed in {:.2}s",
+        t_start.elapsed().as_secs_f64()
+    );
+    Ok(())
+}

@@ -15,6 +15,15 @@
 //!   open -> [draft_step -> score_step -> (accept | rewrite_step)]* -> close
 //! with `target_step` replacing the draft/score/rewrite cycle for
 //! non-speculative baselines.
+//!
+//! Batching contract: every step entry point takes a *slice* of path ids
+//! and executes them as one batch. [`BackendMeta::max_batch_lanes`] and
+//! [`BackendMeta::cross_request_batch`] advertise how far a caller may
+//! push that — the cross-request scheduler
+//! (`coordinator::scheduler`, design notes in its module docs) unions
+//! lanes from many concurrent problems into shared step calls when the
+//! backend allows it, and falls back to per-problem calls when lanes are
+//! pinned to their prefill batch group (PJRT caches).
 
 pub mod calibrated;
 pub mod pjrt;
@@ -64,6 +73,12 @@ pub struct BackendMeta {
     pub num_strategies: usize,
     /// max reasoning steps before the engine force-finishes a path
     pub max_steps: usize,
+    /// largest lane count one batched step call can carry
+    pub max_batch_lanes: usize,
+    /// whether one step call may mix lanes from different `open_paths`
+    /// groups (cross-request continuous batching); false when lanes are
+    /// physically pinned to their prefill cache batch (PJRT)
+    pub cross_request_batch: bool,
 }
 
 pub trait Backend {
@@ -160,6 +175,8 @@ mod tests {
             target_flops_per_token: 100,
             num_strategies: 13,
             max_steps: 12,
+            max_batch_lanes: 16,
+            cross_request_batch: true,
         };
         // 11 * 10 + 7 * 100 = 810
         assert!((l.total_flops(&meta) - 810.0).abs() < 1e-9);

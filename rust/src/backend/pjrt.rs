@@ -269,6 +269,10 @@ impl Backend for PjrtBackend {
             target_flops_per_token: self.target.spec.flops_per_token,
             num_strategies: self.manifest.vocab.num_strategies,
             max_steps: self.max_steps,
+            // lanes live inside their prefill cache batch: one step call
+            // serves at most one lane group, never a cross-request union
+            max_batch_lanes: 16,
+            cross_request_batch: false,
         }
     }
 

@@ -57,6 +57,27 @@ impl StopRule {
     }
 }
 
+/// How the cross-request scheduler orders the admission queue
+/// (`coordinator::scheduler`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmitPolicy {
+    /// strict arrival order — no starvation, the default
+    Fifo,
+    /// admit the job needing the fewest lanes first — maximizes batch
+    /// occupancy under mixed loads, but can starve wide requests
+    SmallestFirst,
+}
+
+impl AdmitPolicy {
+    pub fn parse(s: &str) -> Result<AdmitPolicy> {
+        Ok(match s {
+            "fifo" => AdmitPolicy::Fifo,
+            "smallest" | "smallest-first" => AdmitPolicy::SmallestFirst,
+            _ => bail!("unknown admission policy `{s}` (fifo|smallest-first)"),
+        })
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct SsrConfig {
     pub artifacts_dir: PathBuf,
@@ -73,6 +94,11 @@ pub struct SsrConfig {
     pub stop_rule: StopRule,
     pub selection: Selection,
     pub seed: u64,
+    /// scheduler lane pool: max reasoning paths in flight across ALL
+    /// concurrent problems (cross-request continuous batching)
+    pub max_lanes: usize,
+    /// admission-queue ordering of the scheduler
+    pub admission: AdmitPolicy,
 }
 
 impl Default for SsrConfig {
@@ -87,6 +113,8 @@ impl Default for SsrConfig {
             stop_rule: StopRule::Full,
             selection: Selection::ModelTopN,
             seed: 42,
+            max_lanes: 32,
+            admission: AdmitPolicy::Fifo,
         }
     }
 }
@@ -105,6 +133,8 @@ impl SsrConfig {
                 "stop_rule" => self.stop_rule = StopRule::parse(val.str()?)?,
                 "selection" => self.selection = Selection::parse(val.str()?)?,
                 "seed" => self.seed = val.i64()? as u64,
+                "max_lanes" => self.max_lanes = val.usize()?,
+                "admission" => self.admission = AdmitPolicy::parse(val.str()?)?,
                 other => bail!("unknown config key `{other}`"),
             }
         }
@@ -132,6 +162,10 @@ impl SsrConfig {
             self.selection = Selection::parse(s)?;
         }
         self.seed = args.opt_u64("seed", self.seed)?;
+        self.max_lanes = args.opt_usize("max-lanes", self.max_lanes)?;
+        if let Some(s) = args.opt("admission") {
+            self.admission = AdmitPolicy::parse(s)?;
+        }
         self.validate()
     }
 
@@ -147,6 +181,9 @@ impl SsrConfig {
         }
         if self.max_steps == 0 || self.max_steps > 64 {
             bail!("max_steps must be in 1..=64");
+        }
+        if self.max_lanes == 0 || self.max_lanes > 1024 {
+            bail!("max_lanes must be in 1..=1024, got {}", self.max_lanes);
         }
         Ok(())
     }
@@ -218,5 +255,33 @@ mod tests {
     fn selection_and_stop_parsers() {
         assert!(Selection::parse("nope").is_err());
         assert_eq!(StopRule::parse("fast-1").unwrap(), StopRule::Fast1);
+    }
+
+    #[test]
+    fn scheduler_knobs() {
+        let c = SsrConfig::default();
+        assert_eq!(c.max_lanes, 32);
+        assert_eq!(c.admission, AdmitPolicy::Fifo);
+
+        let mut c = SsrConfig::default();
+        let v = Value::parse(r#"{"max_lanes": 8, "admission": "smallest-first"}"#).unwrap();
+        c.apply_json(&v).unwrap();
+        assert_eq!(c.max_lanes, 8);
+        assert_eq!(c.admission, AdmitPolicy::SmallestFirst);
+
+        let mut c = SsrConfig::default();
+        assert!(c.apply_json(&Value::parse(r#"{"max_lanes": 0}"#).unwrap()).is_err());
+        c.max_lanes = 32;
+        assert!(c.apply_json(&Value::parse(r#"{"admission": "widest"}"#).unwrap()).is_err());
+
+        let argv: Vec<String> = ["serve", "--max-lanes", "16", "--admission", "smallest"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let mut args = Args::parse(&argv).unwrap();
+        let mut c = SsrConfig::default();
+        c.apply_args(&mut args).unwrap();
+        assert_eq!(c.max_lanes, 16);
+        assert_eq!(c.admission, AdmitPolicy::SmallestFirst);
     }
 }

@@ -3,10 +3,18 @@
 //! speculative reasoning (spec-reason), and full SSR = SPM + step-level
 //! speculative decoding + answer aggregation + fast modes.
 //!
-//! One call = one problem = one lane group; the server and the
-//! experiment runners layer batching-across-requests and trial
-//! repetition on top.
+//! The step loop lives in [`ProblemRun`], a *resumable* per-problem
+//! state machine: it owns the problem's lanes, fast-mode stop logic and
+//! accounting, and advances exactly one reasoning step each time a tick
+//! feeds it a batch of outcomes. [`step_tick`] executes one batched
+//! draft/score/accept|rewrite (or target) cycle over the union of
+//! active lanes of *any number* of in-flight runs — one run when called
+//! from [`Engine::run`] (the single-problem wrapper the eval layer
+//! uses), many when called from the cross-request scheduler
+//! (`coordinator::scheduler`), which is how lanes from different
+//! requests come to share backend batches.
 
+use std::collections::{BTreeMap, HashMap};
 use std::time::Instant;
 
 use anyhow::Result;
@@ -47,6 +55,15 @@ impl Method {
     pub fn uses_draft(&self) -> bool {
         matches!(self, Method::SpecReason { .. } | Method::Ssr { .. })
     }
+
+    /// Lanes (parallel reasoning paths) this method occupies while in
+    /// flight — the scheduler's admission currency.
+    pub fn lanes(&self) -> usize {
+        match self {
+            Method::Baseline | Method::SpecReason { .. } => 1,
+            Method::Parallel { n, .. } | Method::Ssr { n, .. } => *n,
+        }
+    }
 }
 
 /// Everything the eval layer needs from one problem run.
@@ -65,7 +82,14 @@ pub struct RunResult {
     pub selection: Vec<usize>,
     /// wall-clock of the engine loop
     pub wall_secs: f64,
-    /// backend model-time (real execute time on PJRT, virtual calibrated)
+    /// backend model-time (real execute time on PJRT, virtual
+    /// calibrated), measured as the delta of the backend-GLOBAL clock
+    /// over the run's lifetime. Exact for the single-problem
+    /// `Engine::run` path; for a `ProblemRun` driven by the scheduler
+    /// it also includes time of batches shared with (or belonging to)
+    /// concurrent runs, so it is NOT per-request attributable there —
+    /// the scheduler reports the aggregate via `Metrics::model_secs`
+    /// instead of surfacing this field per reply.
     pub model_secs: f64,
 }
 
@@ -90,22 +114,72 @@ struct LivePath {
     steps_taken: usize,
     scores: Vec<u8>,
     terminal: bool,
+    /// parsed once at the step the lane terminated (its trace is frozen
+    /// from then on), so the fast-mode checks stop re-running
+    /// `parse_answer` over every finished trace on every step
+    answer: Option<i64>,
 }
 
-pub struct Engine<'a> {
-    pub backend: &'a mut dyn Backend,
-    pub cfg: SsrConfig,
+/// One lane's outcome from a batched step cycle, routed back into
+/// [`ProblemRun::observe`].
+#[derive(Debug, Clone)]
+pub struct StepResult {
+    pub path: PathId,
+    pub outcome: StepOutcome,
+    /// accepted draft score; 9 for target-generated or rewritten steps
+    pub score: u8,
 }
 
-impl<'a> Engine<'a> {
-    pub fn new(backend: &'a mut dyn Backend, cfg: SsrConfig) -> Self {
-        Engine { backend, cfg }
+/// Lane counts of the model-executing backend calls one [`step_tick`]
+/// issued (draft/score/rewrite/target; the bookkeeping-only
+/// `accept_step` is excluded) — the batch-occupancy telemetry the
+/// serving metrics aggregate.
+#[derive(Debug, Clone, Default)]
+pub struct TickCalls {
+    pub lanes_per_call: Vec<usize>,
+}
+
+impl TickCalls {
+    fn record(&mut self, lanes: usize) {
+        self.lanes_per_call.push(lanes);
     }
+}
 
-    /// Run one problem under `method`. `seed` controls sampling (trial id).
-    pub fn run(&mut self, problem: &Problem, method: Method, seed: u64) -> Result<RunResult> {
+/// A resumable single-problem step machine. `start` selects strategies
+/// and opens the lane group; each [`step_tick`] that includes the run
+/// advances every active lane one reasoning step; `finish` closes the
+/// lanes and aggregates the vote. Between ticks the run is inert, which
+/// is what lets the scheduler multiplex many of them over one backend.
+pub struct ProblemRun {
+    speculative: bool,
+    tau: u8,
+    stop: StopRule,
+    max_steps: usize,
+    live: Vec<LivePath>,
+    /// `PathId` -> index into `live`: ids are backend-global, so routing
+    /// outcomes through this map replaces the per-step linear scan that
+    /// made the old loop O(P^2)
+    index: HashMap<PathId, usize>,
+    selection: Vec<usize>,
+    /// answer -> finished lanes voting it (Fast2 agreement tally)
+    finished_answers: BTreeMap<i64, usize>,
+    stopped: bool,
+    t0: Instant,
+    clock0: f64,
+}
+
+impl ProblemRun {
+    /// Select strategies and open the lane group for one problem.
+    /// `seed` controls sampling (trial id).
+    pub fn start(
+        backend: &mut dyn Backend,
+        cfg: &SsrConfig,
+        problem: &Problem,
+        method: Method,
+        seed: u64,
+    ) -> Result<ProblemRun> {
         let t0 = Instant::now();
-        let clock0 = self.backend.clock_secs();
+        let clock0 = backend.clock_secs();
         let mut rng = Rng::new(seed ^ 0xE46);
 
         // --- strategy selection -------------------------------------------------
@@ -114,11 +188,11 @@ impl<'a> Engine<'a> {
             Method::Parallel { n, spm: false } => (vec![None; n], vec![]),
             Method::Parallel { n, spm: true } | Method::Ssr { n, .. } => {
                 let picked = spm::select(
-                    self.backend,
+                    backend,
                     problem,
-                    self.cfg.pool_size,
+                    cfg.pool_size,
                     n,
-                    self.cfg.selection,
+                    cfg.selection,
                     &mut rng,
                 )?;
                 (picked.iter().map(|&s| Some(s)).collect(), picked)
@@ -133,105 +207,128 @@ impl<'a> Engine<'a> {
         };
 
         // --- open the lane group ------------------------------------------------
-        let ids = self.backend.open_paths(problem, &strategies, seed, speculative)?;
-        let mut live: Vec<LivePath> = ids
+        let ids = backend.open_paths(problem, &strategies, seed, speculative)?;
+        let live: Vec<LivePath> = ids
             .iter()
-            .map(|&id| LivePath { id, steps_taken: 0, scores: Vec::new(), terminal: false })
+            .map(|&id| LivePath {
+                id,
+                steps_taken: 0,
+                scores: Vec::new(),
+                terminal: false,
+                answer: None,
+            })
             .collect();
+        let index: HashMap<PathId, usize> =
+            ids.iter().enumerate().map(|(i, &id)| (id, i)).collect();
 
-        // --- the step loop ------------------------------------------------------
-        let max_steps = self.cfg.max_steps;
-        loop {
-            let active: Vec<PathId> = live
-                .iter()
-                .filter(|p| !p.terminal && p.steps_taken < max_steps)
-                .map(|p| p.id)
-                .collect();
-            if active.is_empty() {
-                break;
-            }
+        Ok(ProblemRun {
+            speculative,
+            tau,
+            stop,
+            max_steps: cfg.max_steps,
+            live,
+            index,
+            selection,
+            finished_answers: BTreeMap::new(),
+            stopped: false,
+            t0,
+            clock0,
+        })
+    }
 
-            let outcomes: Vec<(PathId, StepOutcome, u8)> = if speculative {
-                let outs = self.backend.draft_step(&active)?;
-                let scores = self.backend.score_step(&active)?;
-                let mut acc = Vec::new();
-                let mut rej = Vec::new();
-                for ((&id, o), &s) in active.iter().zip(outs).zip(&scores) {
-                    if s >= tau {
-                        acc.push((id, o, s));
-                    } else {
-                        rej.push((id, o, s));
-                    }
-                }
-                if !acc.is_empty() {
-                    let ids: Vec<PathId> = acc.iter().map(|x| x.0).collect();
-                    self.backend.accept_step(&ids)?;
-                }
-                if !rej.is_empty() {
-                    let ids: Vec<PathId> = rej.iter().map(|x| x.0).collect();
-                    let rewritten = self.backend.rewrite_step(&ids)?;
-                    // rewritten steps replace the rejected outcome and are
-                    // recorded with score 9 (paper §3.2)
-                    rej = ids
-                        .into_iter()
-                        .zip(rewritten)
-                        .map(|(id, o)| (id, o, 9u8))
-                        .collect();
-                }
-                acc.into_iter().chain(rej).collect()
-            } else {
-                let outs = self.backend.target_step(&active)?;
-                // target-generated steps carry full target confidence
-                active.iter().zip(outs).map(|(&id, o)| (id, o, 9u8)).collect()
-            };
+    /// Lanes this run holds (the scheduler's admission currency).
+    pub fn lanes(&self) -> usize {
+        self.live.len()
+    }
 
-            for (id, outcome, score) in outcomes {
-                let lp = live.iter_mut().find(|p| p.id == id).expect("live path");
-                lp.steps_taken += 1;
-                lp.scores.push(score);
-                if outcome.terminal {
-                    lp.terminal = true;
-                }
-            }
+    pub fn speculative(&self) -> bool {
+        self.speculative
+    }
 
-            // --- fast modes (paper §3.2) ---------------------------------------
-            match stop {
-                StopRule::Full => {}
-                StopRule::Fast1 => {
-                    let any_done = live.iter().any(|p| {
-                        p.terminal && self.backend.parse_answer(self.backend.trace(p.id)).is_some()
-                    });
-                    if any_done {
-                        break;
-                    }
-                }
-                StopRule::Fast2 => {
-                    let mut finished: Vec<i64> = live
-                        .iter()
-                        .filter(|p| p.terminal)
-                        .filter_map(|p| self.backend.parse_answer(self.backend.trace(p.id)))
-                        .collect();
-                    finished.sort_unstable();
-                    if finished.windows(2).any(|w| w[0] == w[1]) {
-                        break;
-                    }
+    pub fn tau(&self) -> u8 {
+        self.tau
+    }
+
+    pub fn selection(&self) -> &[usize] {
+        &self.selection
+    }
+
+    /// Lanes that still need a step this tick.
+    pub fn active(&self) -> Vec<PathId> {
+        if self.stopped {
+            return Vec::new();
+        }
+        self.live
+            .iter()
+            .filter(|p| !p.terminal && p.steps_taken < self.max_steps)
+            .map(|p| p.id)
+            .collect()
+    }
+
+    /// True once a fast mode fired or every lane terminated / hit the
+    /// step cap — the run is ready to `finish` and vote.
+    pub fn is_done(&self) -> bool {
+        self.stopped
+            || !self.live.iter().any(|p| !p.terminal && p.steps_taken < self.max_steps)
+    }
+
+    /// Record one step of outcomes, then apply the fast-mode stop rules
+    /// (paper §3.2) over the updated lane set.
+    pub fn observe(&mut self, backend: &dyn Backend, results: Vec<StepResult>) {
+        for r in results {
+            let i = *self.index.get(&r.path).expect("step result for unknown path");
+            let lp = &mut self.live[i];
+            lp.steps_taken += 1;
+            lp.scores.push(r.score);
+            if r.outcome.terminal && !lp.terminal {
+                lp.terminal = true;
+                lp.answer = backend.parse_answer(backend.trace(lp.id));
+                if let Some(a) = lp.answer {
+                    *self.finished_answers.entry(a).or_insert(0) += 1;
                 }
             }
         }
 
-        // --- close + vote -------------------------------------------------------
-        let mut votes = Vec::with_capacity(live.len());
+        // --- fast modes (paper §3.2) ---------------------------------------
+        match self.stop {
+            StopRule::Full => {}
+            StopRule::Fast1 => {
+                if self.live.iter().any(|p| p.terminal && p.answer.is_some()) {
+                    self.stopped = true;
+                }
+            }
+            StopRule::Fast2 => {
+                if self.finished_answers.values().any(|&c| c >= 2) {
+                    self.stopped = true;
+                }
+            }
+        }
+    }
+
+    /// Best-effort close of every lane without voting — the scheduler's
+    /// failure path. Releases backend lane state (trace buffers,
+    /// PJRT cache pins) when a run is dropped mid-flight; close errors
+    /// are swallowed because the backend may already be faulted.
+    pub fn abort(&mut self, backend: &mut dyn Backend) {
+        for lp in &self.live {
+            let _ = backend.close_path(lp.id);
+        }
+        self.stopped = true;
+    }
+
+    /// Close every lane, aggregate the votes, and return the result.
+    /// See [`RunResult::model_secs`] for its semantics under
+    /// concurrent scheduling.
+    pub fn finish(&mut self, backend: &mut dyn Backend) -> Result<RunResult> {
+        let mut votes = Vec::with_capacity(self.live.len());
         let (mut draft_tokens, mut target_tokens, mut score_tokens) = (0, 0, 0);
         let (mut steps, mut rewrites) = (0, 0);
-        for lp in &live {
-            let stats = self.backend.close_path(lp.id)?;
-            let answer = if lp.terminal {
-                self.backend.parse_answer(&stats.trace)
-            } else {
-                // unfinished path (fast mode cut or step cap): no vote
-                // unless the trace happens to contain a FIN answer
-                self.backend.parse_answer(&stats.trace)
-            };
+        for lp in &self.live {
+            let stats = backend.close_path(lp.id)?;
+            // the close decides the final digits (calibrated substrate)
+            // or freezes the trace (PJRT); unfinished paths cast no vote
+            // unless their trace happens to contain a FIN answer
+            let answer = backend.parse_answer(&stats.trace);
             draft_tokens += stats.draft_tokens;
             target_tokens += stats.target_tokens;
             score_tokens += stats.score_tokens;
@@ -248,10 +345,141 @@ impl<'a> Engine<'a> {
             score_tokens,
             steps,
             rewrites,
-            selection,
-            wall_secs: t0.elapsed().as_secs_f64(),
-            model_secs: self.backend.clock_secs() - clock0,
+            selection: self.selection.clone(),
+            wall_secs: self.t0.elapsed().as_secs_f64(),
+            model_secs: backend.clock_secs() - self.clock0,
         })
+    }
+}
+
+/// Split a tick's lanes into backend-call groups: one shared union
+/// (chunked to the lane capacity) when the backend batches across
+/// requests, per-run groups when lanes are pinned to their prefill
+/// batch (PJRT). Entries arrive run-by-run, so same-run lanes are
+/// contiguous.
+fn call_groups(
+    lanes: Vec<(usize, PathId)>,
+    cross_request: bool,
+    max_lanes_per_call: usize,
+) -> Vec<Vec<(usize, PathId)>> {
+    let mut groups = Vec::new();
+    if cross_request {
+        for c in lanes.chunks(max_lanes_per_call) {
+            groups.push(c.to_vec());
+        }
+    } else {
+        let mut cur: Vec<(usize, PathId)> = Vec::new();
+        for lp in lanes {
+            if !cur.is_empty() && (cur[0].0 != lp.0 || cur.len() >= max_lanes_per_call) {
+                groups.push(std::mem::take(&mut cur));
+            }
+            cur.push(lp);
+        }
+        if !cur.is_empty() {
+            groups.push(cur);
+        }
+    }
+    groups
+}
+
+/// Advance every active lane of every not-done run by exactly one
+/// reasoning step, batching lanes from different runs into shared
+/// backend calls where the backend allows it. Speculative lanes run one
+/// union draft -> score -> accept|rewrite cycle (each lane judged
+/// against its own run's tau); target-only lanes share one target_step.
+/// Outcomes are routed back per run and the stop rules applied once per
+/// tick.
+pub fn step_tick(backend: &mut dyn Backend, runs: &mut [&mut ProblemRun]) -> Result<TickCalls> {
+    let meta = backend.meta();
+    let chunk = meta.max_batch_lanes.max(1);
+    let mut calls = TickCalls::default();
+
+    let mut spec: Vec<(usize, PathId)> = Vec::new();
+    let mut tgt: Vec<(usize, PathId)> = Vec::new();
+    for (ri, run) in runs.iter().enumerate() {
+        if run.is_done() {
+            continue;
+        }
+        let bucket = if run.speculative { &mut spec } else { &mut tgt };
+        bucket.extend(run.active().into_iter().map(|id| (ri, id)));
+    }
+
+    let mut per_run: Vec<Vec<StepResult>> = runs.iter().map(|_| Vec::new()).collect();
+
+    for group in call_groups(spec, meta.cross_request_batch, chunk) {
+        let ids: Vec<PathId> = group.iter().map(|&(_, id)| id).collect();
+        let outs = backend.draft_step(&ids)?;
+        calls.record(ids.len());
+        let scores = backend.score_step(&ids)?;
+        calls.record(ids.len());
+
+        let mut acc: Vec<(usize, PathId, StepOutcome, u8)> = Vec::new();
+        let mut rej: Vec<(usize, PathId)> = Vec::new();
+        for ((&(ri, id), o), &s) in group.iter().zip(outs).zip(&scores) {
+            if s >= runs[ri].tau {
+                acc.push((ri, id, o, s));
+            } else {
+                rej.push((ri, id));
+            }
+        }
+        if !acc.is_empty() {
+            let acc_ids: Vec<PathId> = acc.iter().map(|x| x.1).collect();
+            backend.accept_step(&acc_ids)?;
+        }
+        if !rej.is_empty() {
+            let rej_ids: Vec<PathId> = rej.iter().map(|x| x.1).collect();
+            let rewritten = backend.rewrite_step(&rej_ids)?;
+            calls.record(rej_ids.len());
+            // rewritten steps replace the rejected outcome and are
+            // recorded with score 9 (paper §3.2)
+            for (&(ri, id), o) in rej.iter().zip(rewritten) {
+                per_run[ri].push(StepResult { path: id, outcome: o, score: 9 });
+            }
+        }
+        for (ri, id, o, s) in acc {
+            per_run[ri].push(StepResult { path: id, outcome: o, score: s });
+        }
+    }
+
+    for group in call_groups(tgt, meta.cross_request_batch, chunk) {
+        let ids: Vec<PathId> = group.iter().map(|&(_, id)| id).collect();
+        let outs = backend.target_step(&ids)?;
+        calls.record(ids.len());
+        // target-generated steps carry full target confidence
+        for (&(ri, id), o) in group.iter().zip(outs) {
+            per_run[ri].push(StepResult { path: id, outcome: o, score: 9 });
+        }
+    }
+
+    for (ri, results) in per_run.into_iter().enumerate() {
+        if !results.is_empty() {
+            runs[ri].observe(&*backend, results);
+        }
+    }
+    Ok(calls)
+}
+
+pub struct Engine<'a> {
+    pub backend: &'a mut dyn Backend,
+    pub cfg: SsrConfig,
+}
+
+impl<'a> Engine<'a> {
+    pub fn new(backend: &'a mut dyn Backend, cfg: SsrConfig) -> Self {
+        Engine { backend, cfg }
+    }
+
+    /// Run one problem under `method` to completion — a thin wrapper
+    /// that drives a [`ProblemRun`] with single-run ticks, preserving
+    /// the exact backend call sequence of the pre-scheduler engine.
+    /// `seed` controls sampling (trial id).
+    pub fn run(&mut self, problem: &Problem, method: Method, seed: u64) -> Result<RunResult> {
+        let mut run = ProblemRun::start(&mut *self.backend, &self.cfg, problem, method, seed)?;
+        while !run.is_done() {
+            let mut group = [&mut run];
+            step_tick(&mut *self.backend, &mut group)?;
+        }
+        run.finish(&mut *self.backend)
     }
 }
 
@@ -357,6 +585,80 @@ mod tests {
         let spm5 = accuracy("synth-livemath", Method::Parallel { n: 5, spm: true }, 40, 3);
         assert!(par5 > base, "parallel {par5} <= baseline {base}");
         assert!(spm5 > par5 - 0.02, "spm {spm5} much worse than parallel {par5}");
+    }
+
+    #[test]
+    fn interleaved_ticks_match_sequential_runs() {
+        // The batching claim in miniature: two problems advanced through
+        // SHARED step batches must produce exactly the results of two
+        // sequential Engine::run calls on an identically-seeded backend —
+        // per-path sampling streams are independent of batch composition.
+        let m = Method::Ssr { n: 3, tau: 7, stop: StopRule::Full };
+        let cfg = SsrConfig::default();
+
+        let (mut b1, problems) = setup("synth-math500", 21);
+        let mut eng = Engine::new(&mut b1, cfg.clone());
+        let ra = eng.run(&problems[0], m, 5).unwrap();
+        let rb = eng.run(&problems[1], m, 9).unwrap();
+
+        let (mut b2, problems2) = setup("synth-math500", 21);
+        let mut run_a = ProblemRun::start(&mut b2, &cfg, &problems2[0], m, 5).unwrap();
+        let mut run_b = ProblemRun::start(&mut b2, &cfg, &problems2[1], m, 9).unwrap();
+        let mut occupied = Vec::new();
+        while !(run_a.is_done() && run_b.is_done()) {
+            let mut runs = [&mut run_a, &mut run_b];
+            let tick = step_tick(&mut b2, &mut runs).unwrap();
+            occupied.extend(tick.lanes_per_call);
+        }
+        let ia = run_a.finish(&mut b2).unwrap();
+        let ib = run_b.finish(&mut b2).unwrap();
+
+        assert_eq!(ra.decision, ia.decision);
+        assert_eq!(rb.decision, ib.decision);
+        assert_eq!(ra.draft_tokens, ia.draft_tokens);
+        assert_eq!(rb.target_tokens, ib.target_tokens);
+        assert_eq!(ra.steps, ia.steps);
+        assert_eq!(rb.rewrites, ib.rewrites);
+        // and the shared batches really were shared: some call carried
+        // lanes of both problems (> 3 lanes in one call)
+        assert!(
+            occupied.iter().any(|&l| l > 3),
+            "no cross-problem batch observed: {occupied:?}"
+        );
+    }
+
+    #[test]
+    fn problem_run_reports_lanes_and_retires() {
+        let (mut b, problems) = setup("synth-aime", 8);
+        let cfg = SsrConfig::default();
+        let mut run = ProblemRun::start(
+            &mut b,
+            &cfg,
+            &problems[0],
+            Method::Parallel { n: 4, spm: false },
+            3,
+        )
+        .unwrap();
+        assert_eq!(run.lanes(), 4);
+        assert!(!run.speculative());
+        assert!(!run.is_done());
+        let mut ticks = 0;
+        while !run.is_done() {
+            let mut runs = [&mut run];
+            step_tick(&mut b, &mut runs).unwrap();
+            ticks += 1;
+            assert!(ticks <= cfg.max_steps, "run never retired");
+        }
+        let r = run.finish(&mut b).unwrap();
+        assert_eq!(r.votes.len(), 4);
+    }
+
+    #[test]
+    fn method_lane_need() {
+        assert_eq!(Method::Baseline.lanes(), 1);
+        assert_eq!(Method::SpecReason { tau: 7 }.lanes(), 1);
+        assert_eq!(Method::Parallel { n: 4, spm: true }.lanes(), 4);
+        assert_eq!(Method::Ssr { n: 5, tau: 7, stop: StopRule::Full }.lanes(), 5);
     }
 
     #[test]

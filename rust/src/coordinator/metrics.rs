@@ -1,15 +1,27 @@
 //! Serving metrics: latency recorder + counters surfaced by the server
 //! (`ssr serve` replies to a `{"op":"stats"}` request) and the bench
 //! harness.
+//!
+//! Latency and admission-wait recorders are bounded reservoirs
+//! ([`Reservoir`]): sustained traffic no longer grows an unbounded
+//! `Vec<f64>`, while p50/p99 stay exact below capacity and unbiased
+//! above it. The scheduler additionally feeds batch-occupancy (lanes
+//! per backend step call), queue-depth and admission-wait gauges — the
+//! observables that make cross-request batching wins measurable.
 
 use std::time::Instant;
 
-use crate::util::stats::{mean, percentile, Histogram};
+use crate::util::stats::{Histogram, Reservoir};
 
-#[derive(Debug, Clone, Default)]
+/// Occupancy histogram buckets (lane counts; last bucket = overflow).
+const OCCUPANCY_BUCKETS: usize = 65;
+
+#[derive(Debug, Clone)]
 pub struct Metrics {
-    /// per-request end-to-end latency, seconds
-    pub latencies: Vec<f64>,
+    /// per-request end-to-end latency, seconds (bounded reservoir)
+    latencies: Reservoir,
+    /// seconds requests spent queued before the scheduler admitted them
+    admission_waits: Reservoir,
     pub requests: u64,
     pub answered: u64,
     pub errors: u64,
@@ -19,11 +31,41 @@ pub struct Metrics {
     pub rewrites: u64,
     /// 0..=9 step-score histogram (fig5 input)
     pub scores: Option<Histogram>,
+    /// model-executing backend step calls (draft/score/rewrite/target)
+    pub backend_calls: u64,
+    /// total lanes those calls carried (mean occupancy numerator)
+    pub backend_lanes: u64,
+    /// per-call lane-count histogram
+    pub occupancy: Histogram,
+    pub queue_samples: u64,
+    pub queue_depth_sum: u64,
+    pub queue_depth_max: u64,
+    /// backend model-clock at the last scheduler tick (real PJRT
+    /// seconds, virtual seconds on the calibrated substrate)
+    pub model_secs: f64,
 }
 
 impl Metrics {
     pub fn new() -> Self {
-        Metrics { scores: Some(Histogram::new(10)), ..Default::default() }
+        Metrics {
+            latencies: Reservoir::default(),
+            admission_waits: Reservoir::default(),
+            requests: 0,
+            answered: 0,
+            errors: 0,
+            draft_tokens: 0,
+            target_tokens: 0,
+            steps: 0,
+            rewrites: 0,
+            scores: Some(Histogram::new(10)),
+            backend_calls: 0,
+            backend_lanes: 0,
+            occupancy: Histogram::new(OCCUPANCY_BUCKETS),
+            queue_samples: 0,
+            queue_depth_sum: 0,
+            queue_depth_max: 0,
+            model_secs: 0.0,
+        }
     }
 
     pub fn record_request(&mut self, latency_s: f64, answered: bool) {
@@ -41,16 +83,65 @@ impl Metrics {
         self.rewrites += rewrites;
     }
 
+    /// One batched backend step call carrying `lanes` lanes.
+    pub fn record_batch(&mut self, lanes: usize) {
+        self.backend_calls += 1;
+        self.backend_lanes += lanes as u64;
+        self.occupancy.add(lanes);
+    }
+
+    /// Scheduler queue depth after an admission pass.
+    pub fn record_queue_depth(&mut self, depth: usize) {
+        self.queue_samples += 1;
+        self.queue_depth_sum += depth as u64;
+        self.queue_depth_max = self.queue_depth_max.max(depth as u64);
+    }
+
+    /// Seconds one request waited from enqueue to lane admission.
+    pub fn record_admission_wait(&mut self, wait_s: f64) {
+        self.admission_waits.push(wait_s);
+    }
+
     pub fn p50(&self) -> f64 {
-        percentile(&self.latencies, 50.0)
+        self.latencies.percentile(50.0)
     }
 
     pub fn p99(&self) -> f64 {
-        percentile(&self.latencies, 99.0)
+        self.latencies.percentile(99.0)
     }
 
     pub fn mean_latency(&self) -> f64 {
-        mean(&self.latencies)
+        self.latencies.mean()
+    }
+
+    /// Retained latency sample (exact below the reservoir capacity).
+    pub fn latency_samples(&self) -> &[f64] {
+        self.latencies.samples()
+    }
+
+    /// Mean lanes per model-executing backend call.
+    pub fn mean_batch_occupancy(&self) -> f64 {
+        if self.backend_calls == 0 {
+            0.0
+        } else {
+            self.backend_lanes as f64 / self.backend_calls as f64
+        }
+    }
+
+    pub fn mean_queue_depth(&self) -> f64 {
+        if self.queue_samples == 0 {
+            0.0
+        } else {
+            self.queue_depth_sum as f64 / self.queue_samples as f64
+        }
+    }
+
+    pub fn mean_admission_wait(&self) -> f64 {
+        self.admission_waits.mean()
+    }
+
+    pub fn p99_admission_wait(&self) -> f64 {
+        self.admission_waits.percentile(99.0)
     }
 
     /// requests/second over the observed span (0 when < 2 requests).
@@ -83,7 +174,20 @@ impl Metrics {
             ("draft_tokens", i(self.draft_tokens as i64)),
             ("target_tokens", i(self.target_tokens as i64)),
             ("rewrite_rate", n(self.rewrite_rate())),
+            ("backend_calls", i(self.backend_calls as i64)),
+            ("mean_batch_occupancy", n(self.mean_batch_occupancy())),
+            ("queue_depth_mean", n(self.mean_queue_depth())),
+            ("queue_depth_max", i(self.queue_depth_max as i64)),
+            ("admission_wait_mean_s", n(self.mean_admission_wait())),
+            ("admission_wait_p99_s", n(self.p99_admission_wait())),
+            ("model_secs", n(self.model_secs)),
         ])
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics::new()
     }
 }
 
@@ -116,6 +220,18 @@ mod tests {
     }
 
     #[test]
+    fn latencies_stay_bounded_under_sustained_traffic() {
+        let mut m = Metrics::new();
+        for i in 0..100_000u64 {
+            m.record_request(i as f64 / 100_000.0, true);
+        }
+        assert_eq!(m.requests, 100_000);
+        assert!(m.latency_samples().len() <= 4096, "recorder grew unbounded");
+        assert!((m.p50() - 0.5).abs() < 0.05, "p50 {}", m.p50());
+        assert!(m.p99() > 0.95, "p99 {}", m.p99());
+    }
+
+    #[test]
     fn rates() {
         let mut m = Metrics::new();
         m.record_tokens(100, 50, 10, 3);
@@ -126,12 +242,37 @@ mod tests {
     }
 
     #[test]
+    fn occupancy_and_queue_gauges() {
+        let mut m = Metrics::new();
+        assert_eq!(m.mean_batch_occupancy(), 0.0);
+        m.record_batch(4);
+        m.record_batch(8);
+        assert_eq!(m.backend_calls, 2);
+        assert!((m.mean_batch_occupancy() - 6.0).abs() < 1e-12);
+        assert_eq!(m.occupancy.counts[4], 1);
+        assert_eq!(m.occupancy.counts[8], 1);
+
+        m.record_queue_depth(0);
+        m.record_queue_depth(6);
+        assert_eq!(m.queue_depth_max, 6);
+        assert!((m.mean_queue_depth() - 3.0).abs() < 1e-12);
+
+        m.record_admission_wait(0.2);
+        assert!((m.mean_admission_wait() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
     fn summary_json_parses() {
         let mut m = Metrics::new();
         m.record_request(0.2, true);
+        m.record_batch(5);
+        m.record_queue_depth(2);
         let v = m.summary_json(1.0);
         assert_eq!(v.get_i64("requests").unwrap(), 1);
         assert!(v.get_f64("mean_latency_s").unwrap() > 0.0);
+        assert_eq!(v.get_i64("backend_calls").unwrap(), 1);
+        assert!((v.get_f64("mean_batch_occupancy").unwrap() - 5.0).abs() < 1e-12);
+        assert_eq!(v.get_i64("queue_depth_max").unwrap(), 2);
     }
 
     #[test]

@@ -1,17 +1,24 @@
 //! L3 coordinator — the paper's system contribution, as a serving stack:
 //!
 //! * [`spm`] — Selective Parallel Module (strategy selection, §3.1)
-//! * [`engine`] — the SSD step loop, baselines, spec-reason, fast modes
+//! * [`engine`] — the resumable [`engine::ProblemRun`] step machine,
+//!   the shared [`engine::step_tick`] batcher, baselines, spec-reason,
+//!   fast modes, and the single-problem [`Engine`] wrapper
 //! * [`aggregation`] — majority + score-based voting (§3.2)
 //! * [`flops`] — normalized-FLOPs gamma accounting (Appendix B)
-//! * [`server`] — TCP front-end, FIFO scheduler, engine thread
-//! * [`metrics`] — latency/throughput/score instrumentation
+//! * [`scheduler`] — cross-request continuous batching: lane-pool
+//!   admission + one shared step batch per tick over every in-flight
+//!   problem (serving & scheduling design notes live in its docs)
+//! * [`server`] — TCP front-end feeding the scheduler
+//! * [`metrics`] — latency/throughput/occupancy/score instrumentation
 
 pub mod aggregation;
 pub mod engine;
 pub mod flops;
 pub mod metrics;
+pub mod scheduler;
 pub mod server;
 pub mod spm;
 
-pub use engine::{Engine, Method, RunResult};
+pub use engine::{Engine, Method, ProblemRun, RunResult};
+pub use scheduler::{Scheduler, SchedulerHandle, SolveRequest};

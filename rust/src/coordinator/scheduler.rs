@@ -1,0 +1,553 @@
+//! Cross-request continuous batching: a step-level scheduler that
+//! multiplexes concurrent solves into shared backend batches.
+//!
+//! # Serving & scheduling design notes
+//!
+//! The pre-scheduler serving path drained requests strictly FIFO: one
+//! `Engine::run` held the backend until its slowest path finished, so
+//! under concurrent load the batched `draft_step`/`score_step`/
+//! `rewrite_step` entry points ran at batch size <= n_paths of a single
+//! request. The scheduler closes that gap the way production test-time
+//! -scaling stacks do — by making the *step*, not the request, the unit
+//! of backend scheduling:
+//!
+//! * **Work items.** A [`SolveRequest`] (expression, method, seed,
+//!   reply channel) enters over an mpsc channel from any number of
+//!   connection handlers or bench clients. Intake parses the problem
+//!   (parse failures reply immediately) and places it in the admission
+//!   queue.
+//! * **Admission / lane pool.** Each method occupies `Method::lanes()`
+//!   lanes (its parallel paths; SPM methods clamped to the strategy
+//!   pool, and the wire `paths` field is bounded to 1..=16 at parse
+//!   time). The scheduler admits queued jobs —
+//!   FIFO by default, smallest-lane-need-first under
+//!   `AdmitPolicy::SmallestFirst` — while the lane pool
+//!   (`SsrConfig::max_lanes`) has room, and admits at least one job
+//!   whenever the pool is idle so an oversized request can never wedge
+//!   the queue. Admission runs again every tick, so queued problems
+//!   join mid-flight the moment lanes free up. FIFO cannot starve;
+//!   smallest-first maximizes occupancy under mixed loads but can
+//!   delay wide requests indefinitely under pressure — that trade-off
+//!   is the operator's knob.
+//! * **Tick loop.** Every tick gathers the union of active lanes across
+//!   ALL in-flight [`ProblemRun`]s and issues ONE batched
+//!   draft -> score -> accept|rewrite cycle (speculative lanes, each
+//!   scored against its own run's tau) plus one `target_step` batch
+//!   (non-speculative lanes) via `engine::step_tick`. Backends that pin
+//!   lanes to their prefill cache group (PJRT) fall back to per-problem
+//!   calls; the calibrated substrate batches lanes from any mix of
+//!   requests up to `BackendMeta::max_batch_lanes`.
+//! * **Fast-mode retirement.** A run whose stop rule fires (Fast1 /
+//!   Fast2 agreement) or whose lanes all terminate retires *at the end
+//!   of that tick*: it closes its paths, votes, replies, and releases
+//!   its lanes — which the same tick's admission pass hands to the next
+//!   queued problem. Slow requests never convoy fast ones.
+//! * **Observability.** Every batched step call records its lane count
+//!   (`Metrics::record_batch` -> mean/histogram batch occupancy), every
+//!   admission pass samples queue depth, and every admitted job records
+//!   its admission wait. `{"op":"stats"}` surfaces all of it.
+//! * **Shutdown / drain.** The scheduler thread exits once every
+//!   submitter handle is dropped AND the queue and lane pool are empty
+//!   — in-flight work always drains, mirroring the old engine-thread
+//!   contract.
+//!
+//! Determinism: with a single submitter the admission order is fixed,
+//! and per-path sampling streams are independent of batch composition
+//! (see `engine::tests::interleaved_ticks_match_sequential_runs`), so
+//! identical submission sequences reproduce identical answers.
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::engine::{step_tick, Method, ProblemRun};
+use super::metrics::Metrics;
+use crate::backend::Backend;
+use crate::config::{AdmitPolicy, SsrConfig};
+use crate::runtime::Vocab;
+use crate::util::json::{self, Value};
+use crate::workload::problems::problem_from_text;
+use crate::workload::Problem;
+
+/// One queued unit of work: a solve request and its reply slot.
+pub struct SolveRequest {
+    pub expr: String,
+    pub method: Method,
+    pub seed: u64,
+    pub reply: mpsc::Sender<Result<Value>>,
+}
+
+/// Cloneable submitter side of the scheduler. Dropping every handle
+/// lets the scheduler thread drain and exit.
+#[derive(Clone)]
+pub struct SchedulerHandle {
+    tx: mpsc::Sender<SolveRequest>,
+}
+
+impl SchedulerHandle {
+    pub fn submit(&self, req: SolveRequest) -> Result<()> {
+        self.tx.send(req).map_err(|_| anyhow!("scheduler thread gone"))
+    }
+}
+
+struct QueuedJob {
+    problem: Problem,
+    lanes: usize,
+    enqueued: Instant,
+    req: SolveRequest,
+}
+
+struct InFlight {
+    run: ProblemRun,
+    method: Method,
+    gold: i64,
+    enqueued: Instant,
+    admitted: Instant,
+    reply: mpsc::Sender<Result<Value>>,
+}
+
+pub struct Scheduler;
+
+impl Scheduler {
+    /// Spawn the scheduler thread. `backend_factory` runs on that
+    /// thread (PJRT wrapper types are not Send). Returns the submitter
+    /// handle plus the join handle (the server ignores the latter;
+    /// benches join it to flush final clock metrics).
+    pub fn spawn<F>(
+        cfg: SsrConfig,
+        vocab: Vocab,
+        metrics: Arc<Mutex<Metrics>>,
+        backend_factory: F,
+    ) -> Result<(SchedulerHandle, std::thread::JoinHandle<()>)>
+    where
+        F: FnOnce() -> Result<Box<dyn Backend>> + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<SolveRequest>();
+        let join = std::thread::Builder::new()
+            .name("ssr-sched".into())
+            .spawn(move || match backend_factory() {
+                Ok(mut backend) => run_loop(backend.as_mut(), &cfg, &vocab, rx, &metrics),
+                Err(e) => log::error!("backend init failed: {e:#}"),
+            })
+            .context("spawning scheduler thread")?;
+        Ok((SchedulerHandle { tx }, join))
+    }
+}
+
+/// Index of the next queue entry the admission policy would admit.
+fn pick_next(queue: &VecDeque<QueuedJob>, policy: AdmitPolicy) -> Option<usize> {
+    match policy {
+        _ if queue.is_empty() => None,
+        AdmitPolicy::Fifo => Some(0),
+        AdmitPolicy::SmallestFirst => queue
+            .iter()
+            .enumerate()
+            .min_by_key(|(i, j)| (j.lanes, *i))
+            .map(|(i, _)| i),
+    }
+}
+
+fn intake(
+    req: SolveRequest,
+    queue: &mut VecDeque<QueuedJob>,
+    cfg: &SsrConfig,
+    vocab: &Vocab,
+    metrics: &Arc<Mutex<Metrics>>,
+) {
+    // admission estimate = lanes the run will actually open: SPM
+    // methods clamp their path count to the strategy pool, so an
+    // unclamped estimate could overstate the need and head-of-line
+    // block the queue on capacity the job would never use
+    let lanes = match req.method {
+        Method::Parallel { n, spm: true } | Method::Ssr { n, .. } => n.min(cfg.pool_size),
+        m => m.lanes(),
+    };
+    match problem_from_text(vocab, &req.expr) {
+        Ok(problem) => {
+            queue.push_back(QueuedJob { problem, lanes, enqueued: Instant::now(), req });
+        }
+        Err(e) => {
+            metrics.lock().unwrap().errors += 1;
+            let _ = req.reply.send(Err(e));
+        }
+    }
+}
+
+/// Close a retired run and render the reply object (the wire shape the
+/// server forwards verbatim; see the protocol doc in `server.rs`).
+fn finish_job(
+    backend: &mut dyn Backend,
+    f: &mut InFlight,
+    metrics: &Arc<Mutex<Metrics>>,
+) -> Result<Value> {
+    let r = f.run.finish(backend)?;
+    let latency = f.enqueued.elapsed().as_secs_f64();
+    let queue_wait = f.admitted.duration_since(f.enqueued).as_secs_f64();
+    {
+        let mut m = metrics.lock().unwrap();
+        m.record_request(latency, r.answer().is_some());
+        m.record_tokens(r.draft_tokens, r.target_tokens, r.steps, r.rewrites);
+    }
+    Ok(json::obj(vec![
+        ("ok", Value::Bool(true)),
+        ("answer", r.answer().map(json::i).unwrap_or(Value::Null)),
+        ("gold", json::i(f.gold)),
+        ("correct", Value::Bool(r.answer() == Some(f.gold))),
+        ("method", json::s(f.method.name())),
+        ("steps", json::i(r.steps as i64)),
+        ("rewrites", json::i(r.rewrites as i64)),
+        ("draft_tokens", json::i(r.draft_tokens as i64)),
+        ("target_tokens", json::i(r.target_tokens as i64)),
+        ("latency_s", json::n(latency)),
+        ("queue_wait_s", json::n(queue_wait)),
+    ]))
+}
+
+/// The scheduler thread body: intake -> admit -> tick -> retire, until
+/// every submitter is gone and all work has drained.
+fn run_loop(
+    backend: &mut dyn Backend,
+    cfg: &SsrConfig,
+    vocab: &Vocab,
+    rx: mpsc::Receiver<SolveRequest>,
+    metrics: &Arc<Mutex<Metrics>>,
+) {
+    let mut queue: VecDeque<QueuedJob> = VecDeque::new();
+    let mut inflight: Vec<InFlight> = Vec::new();
+    let mut disconnected = false;
+    let mut seq = 0u64;
+    let max_lanes = cfg.max_lanes.max(1);
+
+    loop {
+        // --- intake ---------------------------------------------------
+        if inflight.is_empty() && queue.is_empty() {
+            if disconnected {
+                break;
+            }
+            match rx.recv() {
+                Ok(req) => intake(req, &mut queue, cfg, vocab, metrics),
+                Err(_) => break,
+            }
+        }
+        loop {
+            match rx.try_recv() {
+                Ok(req) => intake(req, &mut queue, cfg, vocab, metrics),
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    disconnected = true;
+                    break;
+                }
+            }
+        }
+
+        // --- admission ------------------------------------------------
+        let mut lanes_used: usize = inflight.iter().map(|f| f.run.lanes()).sum();
+        while let Some(pos) = pick_next(&queue, cfg.admission) {
+            let need = queue[pos].lanes;
+            // always admit into an idle pool so one oversized request
+            // cannot wedge the queue
+            if !inflight.is_empty() && lanes_used + need > max_lanes {
+                break;
+            }
+            let job = queue.remove(pos).expect("picked index in range");
+            seq += 1;
+            match ProblemRun::start(backend, cfg, &job.problem, job.req.method, job.req.seed ^ seq)
+            {
+                Ok(run) => {
+                    lanes_used += run.lanes();
+                    metrics
+                        .lock()
+                        .unwrap()
+                        .record_admission_wait(job.enqueued.elapsed().as_secs_f64());
+                    inflight.push(InFlight {
+                        run,
+                        method: job.req.method,
+                        gold: job.problem.answer,
+                        enqueued: job.enqueued,
+                        admitted: Instant::now(),
+                        reply: job.req.reply,
+                    });
+                }
+                Err(e) => {
+                    metrics.lock().unwrap().errors += 1;
+                    let _ = job.req.reply.send(Err(e));
+                }
+            }
+        }
+        metrics.lock().unwrap().record_queue_depth(queue.len());
+
+        if inflight.is_empty() {
+            continue; // queue is empty too -> back to blocking intake
+        }
+
+        // --- one shared step tick -------------------------------------
+        let tick = {
+            let mut runs: Vec<&mut ProblemRun> =
+                inflight.iter_mut().map(|f| &mut f.run).collect();
+            step_tick(backend, &mut runs)
+        };
+        match tick {
+            Ok(tick) => {
+                let mut m = metrics.lock().unwrap();
+                for lanes in tick.lanes_per_call {
+                    m.record_batch(lanes);
+                }
+                m.model_secs = backend.clock_secs();
+            }
+            Err(e) => {
+                // a backend fault mid-batch poisons every in-flight
+                // problem: fail them all rather than serve wrong lanes,
+                // and close their lanes so backend state doesn't leak
+                let msg = format!("scheduler tick failed: {e:#}");
+                log::error!("{msg}");
+                let mut m = metrics.lock().unwrap();
+                for mut f in inflight.drain(..) {
+                    f.run.abort(backend);
+                    m.errors += 1;
+                    let _ = f.reply.send(Err(anyhow!("{msg}")));
+                }
+                continue;
+            }
+        }
+
+        // --- retire finished problems ---------------------------------
+        let mut i = 0;
+        while i < inflight.len() {
+            if inflight[i].run.is_done() {
+                let mut f = inflight.swap_remove(i);
+                let result = finish_job(backend, &mut f, metrics);
+                if result.is_err() {
+                    // finish bailed mid-close: close whatever it left
+                    // open (abort swallows double-close errors)
+                    f.run.abort(backend);
+                    metrics.lock().unwrap().errors += 1;
+                }
+                let _ = f.reply.send(result);
+            } else {
+                i += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::calibrated::CalibratedBackend;
+    use crate::model::tokenizer;
+
+    /// Spawn a calibrated-backend scheduler. When `gate` is given, the
+    /// scheduler thread blocks inside the backend factory until the
+    /// test releases it — so a batch of submissions is guaranteed to be
+    /// in the intake channel together before the first tick (the
+    /// concurrency the assertions rely on, without sleeps).
+    fn spawn_test_scheduler(
+        cfg: SsrConfig,
+        gate: Option<mpsc::Receiver<()>>,
+    ) -> (SchedulerHandle, std::thread::JoinHandle<()>, Arc<Mutex<Metrics>>) {
+        let metrics = Arc::new(Mutex::new(Metrics::new()));
+        let (handle, join) = Scheduler::spawn(
+            cfg,
+            tokenizer::builtin_vocab(),
+            Arc::clone(&metrics),
+            move || {
+                if let Some(g) = gate {
+                    let _ = g.recv();
+                }
+                Ok(Box::new(CalibratedBackend::for_suite("synth-math500", 7)?)
+                    as Box<dyn Backend>)
+            },
+        )
+        .unwrap();
+        (handle, join, metrics)
+    }
+
+    fn submit(
+        handle: &SchedulerHandle,
+        expr: &str,
+        method: Method,
+        seed: u64,
+    ) -> mpsc::Receiver<Result<Value>> {
+        let (rtx, rrx) = mpsc::channel();
+        handle
+            .submit(SolveRequest { expr: expr.to_string(), method, seed, reply: rtx })
+            .unwrap();
+        rrx
+    }
+
+    #[test]
+    fn concurrent_mixed_methods_all_complete_and_share_batches() {
+        use crate::config::StopRule;
+        let (gate_tx, gate_rx) = mpsc::channel();
+        let (handle, join, metrics) =
+            spawn_test_scheduler(SsrConfig::default(), Some(gate_rx));
+        let methods = [
+            Method::Ssr { n: 5, tau: 7, stop: StopRule::Full },
+            Method::Baseline,
+            Method::Ssr { n: 3, tau: 7, stop: StopRule::Fast2 },
+            Method::SpecReason { tau: 7 },
+            Method::Parallel { n: 4, spm: true },
+            Method::Ssr { n: 5, tau: 7, stop: StopRule::Full },
+        ];
+        let replies: Vec<_> = methods
+            .iter()
+            .enumerate()
+            .map(|(i, &m)| submit(&handle, &format!("{}+{}*3", i + 1, i + 2), m, i as u64))
+            .collect();
+        gate_tx.send(()).unwrap(); // every request is queued: open the gate
+        for (i, rrx) in replies.iter().enumerate() {
+            let v = rrx.recv().unwrap().unwrap();
+            assert_eq!(v.get("ok").unwrap().bool().unwrap(), true);
+            assert_eq!(v.get_i64("gold").unwrap(), (i as i64 + 1) + (i as i64 + 2) * 3);
+            assert!(v.get_i64("steps").unwrap() > 0);
+            assert!(v.get_f64("latency_s").unwrap() >= 0.0);
+            assert!(v.get_f64("queue_wait_s").unwrap() >= 0.0);
+        }
+        drop(handle);
+        join.join().unwrap();
+
+        let m = metrics.lock().unwrap();
+        assert_eq!(m.requests, 6);
+        assert_eq!(m.errors, 0);
+        assert!(m.backend_calls > 0);
+        // submitted together -> in flight together -> shared batches
+        // wider than any single request's lane group (max n = 5)
+        assert!(
+            m.occupancy.counts[6..].iter().sum::<u64>() > 0,
+            "no cross-request batch observed: {:?}",
+            m.occupancy.counts
+        );
+        assert!(m.model_secs > 0.0);
+    }
+
+    #[test]
+    fn lane_pool_limits_concurrency_and_queues_waiters() {
+        use crate::config::StopRule;
+        let mut cfg = SsrConfig::default();
+        cfg.max_lanes = 5; // one ssr-m5 at a time
+        let (gate_tx, gate_rx) = mpsc::channel();
+        let (handle, join, metrics) = spawn_test_scheduler(cfg, Some(gate_rx));
+        let replies: Vec<_> = (0..4)
+            .map(|i| {
+                submit(
+                    &handle,
+                    "17+25*3",
+                    Method::Ssr { n: 5, tau: 7, stop: StopRule::Full },
+                    i,
+                )
+            })
+            .collect();
+        gate_tx.send(()).unwrap();
+        for rrx in &replies {
+            let v = rrx.recv().unwrap().unwrap();
+            assert_eq!(v.get("ok").unwrap().bool().unwrap(), true);
+        }
+        drop(handle);
+        join.join().unwrap();
+
+        let m = metrics.lock().unwrap();
+        assert_eq!(m.requests, 4);
+        // serialized: no step call ever exceeded one request's 5 lanes
+        assert!(
+            m.occupancy.counts[6..].iter().sum::<u64>() == 0,
+            "lane pool exceeded: {:?}",
+            m.occupancy.counts
+        );
+        // and the later arrivals really queued
+        assert!(m.queue_depth_max >= 1, "queue never formed");
+    }
+
+    #[test]
+    fn oversized_request_still_admitted_into_idle_pool() {
+        let mut cfg = SsrConfig::default();
+        cfg.max_lanes = 2;
+        let (handle, join, _metrics) = spawn_test_scheduler(cfg, None);
+        let rrx = submit(
+            &handle,
+            "5+6",
+            Method::Parallel { n: 4, spm: false }, // 4 lanes > pool of 2
+            1,
+        );
+        let v = rrx.recv().unwrap().unwrap();
+        assert_eq!(v.get("ok").unwrap().bool().unwrap(), true);
+        assert_eq!(v.get_i64("gold").unwrap(), 11);
+        drop(handle);
+        join.join().unwrap();
+    }
+
+    #[test]
+    fn smallest_first_admission_completes_mixed_load() {
+        use crate::config::StopRule;
+        let mut cfg = SsrConfig::default();
+        cfg.max_lanes = 6;
+        cfg.admission = AdmitPolicy::SmallestFirst;
+        let (handle, join, metrics) = spawn_test_scheduler(cfg, None);
+        let replies: Vec<_> = [
+            Method::Ssr { n: 5, tau: 7, stop: StopRule::Full },
+            Method::Baseline,
+            Method::Ssr { n: 5, tau: 7, stop: StopRule::Full },
+            Method::Baseline,
+        ]
+        .iter()
+        .enumerate()
+        .map(|(i, &m)| submit(&handle, "2+3", m, i as u64))
+        .collect();
+        for rrx in &replies {
+            assert!(rrx.recv().unwrap().is_ok());
+        }
+        drop(handle);
+        join.join().unwrap();
+        assert_eq!(metrics.lock().unwrap().requests, 4);
+    }
+
+    #[test]
+    fn malformed_expression_replies_error_and_counts() {
+        let (handle, join, metrics) = spawn_test_scheduler(SsrConfig::default(), None);
+        let rrx = submit(&handle, "1+", Method::Baseline, 0);
+        assert!(rrx.recv().unwrap().is_err());
+        let ok = submit(&handle, "1+1", Method::Baseline, 0);
+        assert!(ok.recv().unwrap().is_ok());
+        drop(handle);
+        join.join().unwrap();
+        let m = metrics.lock().unwrap();
+        assert_eq!(m.errors, 1);
+        assert_eq!(m.requests, 1);
+    }
+
+    #[test]
+    fn identical_submission_sequences_are_deterministic() {
+        use crate::config::StopRule;
+        let answers: Vec<Vec<Option<i64>>> = (0..2)
+            .map(|_| {
+                let (handle, join, _m) = spawn_test_scheduler(SsrConfig::default(), None);
+                let replies: Vec<_> = (0..5)
+                    .map(|i| {
+                        submit(
+                            &handle,
+                            &format!("{}+{}", 10 + i, 20 + i),
+                            Method::Ssr { n: 3, tau: 7, stop: StopRule::Full },
+                            i as u64,
+                        )
+                    })
+                    .collect();
+                let out = replies
+                    .iter()
+                    .map(|r| {
+                        let v = r.recv().unwrap().unwrap();
+                        match v.get("answer").unwrap() {
+                            Value::Null => None,
+                            x => Some(x.i64().unwrap()),
+                        }
+                    })
+                    .collect();
+                drop(handle);
+                join.join().unwrap();
+                out
+            })
+            .collect();
+        assert_eq!(answers[0], answers[1], "scheduler is not deterministic");
+    }
+}

@@ -1,16 +1,28 @@
-//! TCP serving front-end: JSON-lines protocol over a router that feeds a
-//! dedicated engine thread (PJRT wrapper types are not Send, and the
-//! testbed is single-core, so one model-executor thread is the right
-//! topology; the listener and connection handlers run on the pool).
+//! TCP serving front-end: JSON-lines protocol over a router that feeds
+//! the cross-request scheduler thread (PJRT wrapper types are not Send,
+//! so one model-executor thread owns the backend; the listener and
+//! connection handlers run on the pool and submit work items that the
+//! scheduler multiplexes into shared step batches — see
+//! `coordinator::scheduler` for the design notes).
 //!
 //! Protocol (one JSON object per line):
 //!   -> {"op":"solve", "expr":"(17+25)*3", "method":"ssr", "paths":5,
 //!       "tau":7}
 //!   <- {"ok":true, "answer":126, "method":"ssr-m5", "steps":9,
-//!       "rewrites":2, "latency_s":0.41, "trace":"Q(17+25)*3;..."}
+//!       "rewrites":2, "latency_s":0.41, "queue_wait_s":0.02}
 //!   -> {"op":"stats"}
-//!   <- {"ok":true, "requests":..., "p50_s":..., ...}
+//!   <- {"ok":true, "requests":..., "p50_s":..., "p99_s":...,
+//!       "throughput_rps":..., "backend_calls":...,
+//!       "mean_batch_occupancy":...,   // lanes per backend step call
+//!       "queue_depth_mean":..., "queue_depth_max":...,
+//!       "admission_wait_mean_s":..., "admission_wait_p99_s":...,
+//!       "model_secs":...}             // backend model-clock
 //!   -> {"op":"shutdown"}
+//!
+//! `latency_s` is enqueue-to-reply (it includes queue wait, reported
+//! separately as `queue_wait_s`). Concurrent `solve` requests from any
+//! number of connections interleave at step granularity and share
+//! backend batches.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -21,28 +33,22 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use super::engine::{Engine, Method};
+use super::engine::Method;
 use super::metrics::Metrics;
+use super::scheduler::{Scheduler, SchedulerHandle, SolveRequest};
 use crate::backend::Backend;
 use crate::config::{SsrConfig, StopRule};
 use crate::util::json::{self, Value};
 use crate::util::threadpool::ThreadPool;
-use crate::workload::problems::problem_from_text;
 
-/// A queued unit of work: one solve request and its reply slot.
-pub struct WorkItem {
-    pub expr: String,
-    pub method: Method,
-    pub seed: u64,
-    pub reply: mpsc::Sender<Result<Value>>,
-}
-
-/// Parse the request's method field (mirrors `Method::name`).
+/// Parse the request's method field (mirrors `Method::name`). The
+/// wire-supplied `paths` count is bounded like `SsrConfig::n_paths`
+/// (1..=16) so a single request cannot open an unbounded lane group.
 pub fn parse_method(v: &Value, default_paths: usize, default_tau: u8) -> Result<Method> {
     let name = v.opt("method").map(|m| m.str()).transpose()?.unwrap_or("ssr");
     let n = v.opt("paths").map(|x| x.usize()).transpose()?.unwrap_or(default_paths);
     let tau = v.opt("tau").map(|x| x.i64()).transpose()?.unwrap_or(default_tau as i64) as u8;
-    Ok(match name {
+    let method = match name {
         "baseline" => Method::Baseline,
         "parallel" => Method::Parallel { n, spm: false },
         "parallel-spm" => Method::Parallel { n, spm: true },
@@ -51,55 +57,19 @@ pub fn parse_method(v: &Value, default_paths: usize, default_tau: u8) -> Result<
         "ssr-fast1" => Method::Ssr { n, tau, stop: StopRule::Fast1 },
         "ssr-fast2" => Method::Ssr { n, tau, stop: StopRule::Fast2 },
         other => bail!("unknown method `{other}`"),
-    })
-}
-
-/// The engine thread: owns the backend, drains the queue in arrival
-/// order (FIFO scheduler), records metrics.
-fn engine_loop(
-    mut backend: Box<dyn Backend>,
-    cfg: SsrConfig,
-    rx: mpsc::Receiver<WorkItem>,
-    metrics: Arc<Mutex<Metrics>>,
-    vocab: crate::runtime::Vocab,
-) {
-    let mut seq = 0u64;
-    while let Ok(item) = rx.recv() {
-        let t0 = Instant::now();
-        seq += 1;
-        let result = (|| -> Result<Value> {
-            let problem = problem_from_text(&vocab, &item.expr)?;
-            let mut engine = Engine::new(backend.as_mut(), cfg.clone());
-            let r = engine.run(&problem, item.method, item.seed ^ seq)?;
-            let latency = t0.elapsed().as_secs_f64();
-            {
-                let mut m = metrics.lock().unwrap();
-                m.record_request(latency, r.answer().is_some());
-                m.record_tokens(r.draft_tokens, r.target_tokens, r.steps, r.rewrites);
-            }
-            Ok(json::obj(vec![
-                ("ok", Value::Bool(true)),
-                ("answer", r.answer().map(json::i).unwrap_or(Value::Null)),
-                ("gold", json::i(problem.answer)),
-                ("correct", Value::Bool(r.answer() == Some(problem.answer))),
-                ("method", json::s(item.method.name())),
-                ("steps", json::i(r.steps as i64)),
-                ("rewrites", json::i(r.rewrites as i64)),
-                ("draft_tokens", json::i(r.draft_tokens as i64)),
-                ("target_tokens", json::i(r.target_tokens as i64)),
-                ("latency_s", json::n(latency)),
-            ]))
-        })();
-        if result.is_err() {
-            metrics.lock().unwrap().errors += 1;
+    };
+    match method {
+        Method::Parallel { n, .. } | Method::Ssr { n, .. } if n == 0 || n > 16 => {
+            bail!("paths must be in 1..=16, got {n}")
         }
-        let _ = item.reply.send(result);
+        _ => {}
     }
+    Ok(method)
 }
 
 pub struct Server {
     pub addr: String,
-    tx: mpsc::Sender<WorkItem>,
+    sched: SchedulerHandle,
     metrics: Arc<Mutex<Metrics>>,
     started: Instant,
     shutdown: Arc<AtomicBool>,
@@ -107,8 +77,9 @@ pub struct Server {
 }
 
 impl Server {
-    /// Spawn the engine thread and bind the listener. `backend_factory`
-    /// runs on the engine thread (PJRT types are not Send).
+    /// Spawn the scheduler thread and bind the listener.
+    /// `backend_factory` runs on the scheduler thread (PJRT types are
+    /// not Send).
     pub fn start<F>(
         host: &str,
         port: u16,
@@ -119,17 +90,9 @@ impl Server {
     where
         F: FnOnce() -> Result<Box<dyn Backend>> + Send + 'static,
     {
-        let (tx, rx) = mpsc::channel::<WorkItem>();
         let metrics = Arc::new(Mutex::new(Metrics::new()));
-        let m2 = Arc::clone(&metrics);
-        let cfg2 = cfg.clone();
-        std::thread::Builder::new()
-            .name("ssr-engine".into())
-            .spawn(move || match backend_factory() {
-                Ok(backend) => engine_loop(backend, cfg2, rx, m2, vocab),
-                Err(e) => log::error!("backend init failed: {e:#}"),
-            })
-            .context("spawning engine thread")?;
+        let (sched, _join) =
+            Scheduler::spawn(cfg.clone(), vocab, Arc::clone(&metrics), backend_factory)?;
 
         let listener =
             TcpListener::bind((host, port)).with_context(|| format!("binding {host}:{port}"))?;
@@ -138,7 +101,7 @@ impl Server {
         Ok((
             Server {
                 addr,
-                tx,
+                sched,
                 metrics,
                 started: Instant::now(),
                 shutdown: Arc::new(AtomicBool::new(false)),
@@ -155,14 +118,14 @@ impl Server {
             match listener.accept() {
                 Ok((stream, peer)) => {
                     log::debug!("connection from {peer}");
-                    let tx = self.tx.clone();
+                    let sched = self.sched.clone();
                     let metrics = Arc::clone(&self.metrics);
                     let started = self.started;
                     let shutdown = Arc::clone(&self.shutdown);
                     let cfg = self.cfg.clone();
                     pool.execute(move || {
                         if let Err(e) =
-                            handle_conn(stream, tx, metrics, started, shutdown, cfg)
+                            handle_conn(stream, sched, metrics, started, shutdown, cfg)
                         {
                             log::warn!("connection error: {e:#}");
                         }
@@ -189,7 +152,7 @@ impl Server {
 
 fn handle_conn(
     stream: TcpStream,
-    tx: mpsc::Sender<WorkItem>,
+    sched: SchedulerHandle,
     metrics: Arc<Mutex<Metrics>>,
     started: Instant,
     shutdown: Arc<AtomicBool>,
@@ -206,7 +169,7 @@ fn handle_conn(
         if line.trim().is_empty() {
             continue;
         }
-        let reply = match process_line(&line, &tx, &metrics, started, &shutdown, &cfg) {
+        let reply = match process_line(&line, &sched, &metrics, started, &shutdown, &cfg) {
             Ok(v) => v,
             Err(e) => json::obj(vec![
                 ("ok", Value::Bool(false)),
@@ -224,7 +187,7 @@ fn handle_conn(
 
 fn process_line(
     line: &str,
-    tx: &mpsc::Sender<WorkItem>,
+    sched: &SchedulerHandle,
     metrics: &Arc<Mutex<Metrics>>,
     started: Instant,
     shutdown: &Arc<AtomicBool>,
@@ -237,9 +200,8 @@ fn process_line(
             let method = parse_method(&req, cfg.n_paths, cfg.tau)?;
             let seed = req.opt("seed").map(|s| s.i64()).transpose()?.unwrap_or(0) as u64;
             let (rtx, rrx) = mpsc::channel();
-            tx.send(WorkItem { expr, method, seed, reply: rtx })
-                .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
-            rrx.recv().context("engine reply")??.pipe_ok()
+            sched.submit(SolveRequest { expr, method, seed, reply: rtx })?;
+            rrx.recv().context("scheduler reply")?
         }
         "stats" => {
             let m = metrics.lock().unwrap();
@@ -254,16 +216,6 @@ fn process_line(
             Ok(json::obj(vec![("ok", Value::Bool(true)), ("bye", Value::Bool(true))]))
         }
         other => bail!("unknown op `{other}`"),
-    }
-}
-
-trait PipeOk {
-    fn pipe_ok(self) -> Result<Value>;
-}
-
-impl PipeOk for Value {
-    fn pipe_ok(self) -> Result<Value> {
-        Ok(self)
     }
 }
 
@@ -288,5 +240,16 @@ mod tests {
     fn parse_method_tau_override() {
         let v = Value::parse(r#"{"method":"spec-reason","tau":9}"#).unwrap();
         assert_eq!(parse_method(&v, 5, 7).unwrap(), Method::SpecReason { tau: 9 });
+    }
+
+    #[test]
+    fn parse_method_bounds_wire_paths() {
+        for bad in [r#"{"method":"parallel","paths":100000000}"#, r#"{"method":"ssr","paths":0}"#]
+        {
+            let v = Value::parse(bad).unwrap();
+            assert!(parse_method(&v, 5, 7).is_err(), "accepted {bad}");
+        }
+        let v = Value::parse(r#"{"method":"parallel","paths":16}"#).unwrap();
+        assert!(parse_method(&v, 5, 7).is_ok());
     }
 }

@@ -6,9 +6,11 @@
 //!     AOT-lowered to HLO text consumed here;
 //!   * L3 — this crate — is the serving coordinator: the Selective
 //!     Parallel Module ([`coordinator::spm`]), Step-level Speculative
-//!     Decoding ([`coordinator::ssd`]), answer aggregation, fast modes,
-//!     baselines, batching, a TCP server, and the normalized-FLOPs
-//!     accounting from the paper's Appendix B.
+//!     Decoding (the [`coordinator::engine`] step machine), answer
+//!     aggregation, fast modes, baselines, cross-request continuous
+//!     batching ([`coordinator::scheduler`] — serving & scheduling
+//!     design notes live there), a TCP server, and the
+//!     normalized-FLOPs accounting from the paper's Appendix B.
 //!
 //! The [`backend`] module is the seam between coordinator logic and model
 //! substrate: the PJRT backend runs the real draft/target transformers

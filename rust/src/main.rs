@@ -5,12 +5,18 @@
 //! ssr solve --expr "(17+25)*3" [--method ssr|baseline|parallel|parallel-spm|
 //!           spec-reason|ssr-fast1|ssr-fast2] [--backend pjrt|calibrated]
 //! ssr serve [--host 127.0.0.1] [--port 7878] [--backend ...] [--threads 4]
+//!           [--max-lanes 32] [--admission fifo|smallest-first]
 //! ssr exp   fig2|fig3|fig4|fig5|table1|gamma|all [--backend calibrated]
 //!           [--trials 6] [--problems 60]
 //! ssr selfcheck            # artifacts -> PJRT -> one SSR problem
 //! ```
 //! Shared engine flags: --paths N --tau T --temp X --stop full|fast1|fast2
 //! --selection model-top|model-sample|random|oracle --seed S --artifacts DIR
+//!
+//! `serve` runs the cross-request scheduler: concurrent solves share
+//! backend step batches inside a `--max-lanes` lane pool (see
+//! `coordinator::scheduler`); `{"op":"stats"}` reports batch occupancy,
+//! queue depth and admission waits alongside the latency percentiles.
 
 use std::path::PathBuf;
 
@@ -109,6 +115,10 @@ fn run() -> Result<()> {
             let vocab = tokenizer::builtin_vocab();
             let seed = cfg.seed;
             let factory_once = move || factory(&suite, seed);
+            println!(
+                "scheduler: max_lanes={} admission={:?}",
+                cfg.max_lanes, cfg.admission
+            );
             let (server, listener) = Server::start(&host, port, cfg, vocab, factory_once)?;
             println!("listening on {}", server.addr);
             let pool = ThreadPool::new(threads);

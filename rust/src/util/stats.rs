@@ -1,5 +1,7 @@
 //! Small statistics helpers shared by metrics, eval and the bench harness.
 
+use crate::util::rng::Rng;
+
 /// Arithmetic mean; 0.0 for an empty slice.
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
@@ -86,6 +88,72 @@ impl Histogram {
     }
 }
 
+/// Bounded uniform sample of an unbounded stream (Vitter's Algorithm R).
+///
+/// The serving metrics keep per-request latencies to answer p50/p99
+/// queries; under sustained traffic an unbounded `Vec` grows forever, so
+/// the recorder holds a fixed-capacity reservoir instead: every element
+/// of the stream ends up in the sample with probability `cap / seen`,
+/// which keeps the percentile estimates unbiased. Deterministic (own
+/// seeded [`Rng`]), so metrics snapshots are reproducible.
+#[derive(Debug, Clone)]
+pub struct Reservoir {
+    cap: usize,
+    seen: u64,
+    samples: Vec<f64>,
+    rng: Rng,
+}
+
+impl Reservoir {
+    pub const DEFAULT_CAP: usize = 4096;
+
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0, "reservoir capacity must be positive");
+        Reservoir { cap, seen: 0, samples: Vec::new(), rng: Rng::new(0x5EED_0B5E) }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.seen += 1;
+        if self.samples.len() < self.cap {
+            self.samples.push(x);
+        } else {
+            // replace a random slot with probability cap/seen
+            let j = self.rng.below(self.seen) as usize;
+            if j < self.cap {
+                self.samples[j] = x;
+            }
+        }
+    }
+
+    /// Total stream length observed (>= samples().len()).
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.seen == 0
+    }
+
+    /// The retained sample (exact stream while under capacity).
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
+    pub fn mean(&self) -> f64 {
+        mean(&self.samples)
+    }
+
+    pub fn percentile(&self, q: f64) -> f64 {
+        percentile(&self.samples, q)
+    }
+}
+
+impl Default for Reservoir {
+    fn default() -> Self {
+        Reservoir::new(Self::DEFAULT_CAP)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -132,6 +200,33 @@ mod tests {
         let mut h = Histogram::new(4);
         h.add(99);
         assert_eq!(h.counts[3], 1);
+    }
+
+    #[test]
+    fn reservoir_exact_under_capacity() {
+        let mut r = Reservoir::new(100);
+        for i in 0..50 {
+            r.push(i as f64);
+        }
+        assert_eq!(r.seen(), 50);
+        assert_eq!(r.samples().len(), 50);
+        assert_eq!(r.percentile(0.0), 0.0);
+        assert_eq!(r.percentile(100.0), 49.0);
+    }
+
+    #[test]
+    fn reservoir_bounded_and_representative() {
+        let mut r = Reservoir::new(256);
+        let n = 50_000;
+        for i in 0..n {
+            r.push(i as f64 / n as f64);
+        }
+        assert_eq!(r.seen(), n);
+        assert_eq!(r.samples().len(), 256, "reservoir must stay bounded");
+        // uniform stream -> median near 0.5, p99 near 0.99
+        assert!((r.percentile(50.0) - 0.5).abs() < 0.1, "p50 {}", r.percentile(50.0));
+        assert!(r.percentile(99.0) > 0.9, "p99 {}", r.percentile(99.0));
+        assert!((r.mean() - 0.5).abs() < 0.06, "mean {}", r.mean());
     }
 
     #[test]

@@ -67,11 +67,17 @@ fn solve_stats_shutdown_roundtrip() {
     let r = request(&mut stream, "not json at all");
     assert_eq!(r.get("ok").unwrap().bool().unwrap(), false);
 
-    // stats reflect the two successful solves
+    // stats reflect the two successful solves, including the scheduler's
+    // occupancy/queue observability fields
     let r = request(&mut stream, r#"{"op":"stats"}"#);
     assert_eq!(r.get("ok").unwrap().bool().unwrap(), true);
     assert_eq!(r.get_i64("requests").unwrap(), 2);
     assert!(r.get_f64("mean_latency_s").unwrap() > 0.0);
+    assert!(r.get_i64("backend_calls").unwrap() > 0);
+    assert!(r.get_f64("mean_batch_occupancy").unwrap() >= 1.0);
+    assert!(r.get_f64("admission_wait_mean_s").unwrap() >= 0.0);
+    assert!(r.get_i64("queue_depth_max").unwrap() >= 0);
+    assert!(r.get_f64("model_secs").unwrap() > 0.0);
 
     // shutdown
     let r = request(&mut stream, r#"{"op":"shutdown"}"#);
@@ -80,7 +86,7 @@ fn solve_stats_shutdown_roundtrip() {
 }
 
 #[test]
-fn concurrent_clients_are_serialized_safely() {
+fn concurrent_clients_interleave_through_the_scheduler() {
     let cfg = SsrConfig::default();
     let vocab = tokenizer::builtin_vocab();
     let (server, listener) = Server::start("127.0.0.1", 0, cfg, vocab, || {
@@ -89,20 +95,31 @@ fn concurrent_clients_are_serialized_safely() {
     .unwrap();
     let addr = server.addr.clone();
     let srv = std::thread::spawn(move || {
-        let pool = ThreadPool::new(4);
+        let pool = ThreadPool::new(8);
         server.serve(listener, &pool).unwrap();
     });
 
-    let mut clients: Vec<_> = (0..4)
+    // 4 baseline clients + 4 multi-path ssr clients, all in flight at
+    // once: every solve must come back correct and consistent
+    let mut clients: Vec<_> = (0..8)
         .map(|i| {
             let addr = addr.clone();
             std::thread::spawn(move || {
                 let mut s = TcpStream::connect(&addr).unwrap();
+                let method = if i % 2 == 0 { "baseline" } else { "ssr" };
                 let r = request(
                     &mut s,
-                    &format!(r#"{{"op":"solve","expr":"{}+{}","method":"baseline"}}"#, i + 1, i + 2),
+                    &format!(
+                        r#"{{"op":"solve","expr":"{}+{}","method":"{}","paths":3,"seed":{}}}"#,
+                        i + 1,
+                        i + 2,
+                        method,
+                        i
+                    ),
                 );
+                assert_eq!(r.get("ok").unwrap().bool().unwrap(), true, "{r:?}");
                 assert_eq!(r.get_i64("gold").unwrap(), (2 * i + 3) as i64);
+                assert!(r.get_f64("queue_wait_s").unwrap() >= 0.0);
             })
         })
         .collect();
@@ -111,7 +128,9 @@ fn concurrent_clients_are_serialized_safely() {
     }
     let mut s = TcpStream::connect(&addr).unwrap();
     let r = request(&mut s, r#"{"op":"stats"}"#);
-    assert_eq!(r.get_i64("requests").unwrap(), 4);
+    assert_eq!(r.get_i64("requests").unwrap(), 8);
+    assert_eq!(r.get_i64("errors").unwrap(), 0);
+    assert!(r.get_f64("mean_batch_occupancy").unwrap() >= 1.0);
     let _ = request(&mut s, r#"{"op":"shutdown"}"#);
     srv.join().unwrap();
 }

@@ -5,7 +5,6 @@
 
 use anyhow::Result;
 use ssr::backend::calibrated::CalibratedBackend;
-use ssr::backend::pjrt::PjrtBackend;
 use ssr::backend::Backend;
 use ssr::config::SsrConfig;
 use ssr::eval::experiments::ExpOpts;
@@ -16,7 +15,9 @@ pub fn calibrated_factory() -> impl FnMut(&str, u64) -> Result<Box<dyn Backend>>
     }
 }
 
+#[cfg(feature = "pjrt")]
 pub fn pjrt_factory() -> Option<impl FnMut(&str, u64) -> Result<Box<dyn Backend>>> {
+    use ssr::backend::pjrt::PjrtBackend;
     let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !dir.join("manifest.json").exists() {
         return None;
@@ -26,6 +27,12 @@ pub fn pjrt_factory() -> Option<impl FnMut(&str, u64) -> Result<Box<dyn Backend>
         b.temp = 0.5;
         Ok(Box::new(b) as Box<dyn Backend>)
     })
+}
+
+/// Without the `pjrt` feature there is never a real backend to bench.
+#[cfg(not(feature = "pjrt"))]
+pub fn pjrt_factory() -> Option<fn(&str, u64) -> Result<Box<dyn Backend>>> {
+    None
 }
 
 pub fn default_cfg() -> SsrConfig {

@@ -3,20 +3,29 @@
 //! ingest / target span), SSD cycle time, and serving throughput for
 //! baseline vs spec-reason vs SSR.
 //!
-//! Skips (exit 0) when artifacts are absent so `cargo bench` stays green
-//! on a fresh checkout.
+//! Skips (exit 0) when artifacts are absent — or when built without the
+//! `pjrt` feature — so `cargo bench` stays green on a fresh checkout.
 mod common;
 
+#[cfg(feature = "pjrt")]
 use std::time::Instant;
 
+#[cfg(feature = "pjrt")]
 use ssr::backend::pjrt::PjrtBackend;
+#[cfg(feature = "pjrt")]
 use ssr::backend::Backend;
+#[cfg(feature = "pjrt")]
 use ssr::config::{SsrConfig, StopRule};
+#[cfg(feature = "pjrt")]
 use ssr::coordinator::engine::{Engine, Method};
+#[cfg(feature = "pjrt")]
 use ssr::model::tokenizer;
+#[cfg(feature = "pjrt")]
 use ssr::util::stats;
+#[cfg(feature = "pjrt")]
 use ssr::workload::suites;
 
+#[cfg(feature = "pjrt")]
 fn timeit<T>(reps: usize, mut f: impl FnMut() -> T) -> (f64, T) {
     let mut out = f(); // warmup (includes lazy artifact compile)
     let t0 = Instant::now();
@@ -26,6 +35,13 @@ fn timeit<T>(reps: usize, mut f: impl FnMut() -> T) -> (f64, T) {
     (t0.elapsed().as_secs_f64() / reps as f64, out)
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn main() -> anyhow::Result<()> {
+    println!("[bench e2e_serving] skipped: built without the `pjrt` feature");
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
 fn main() -> anyhow::Result<()> {
     let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !dir.join("manifest.json").exists() {

@@ -1,0 +1,162 @@
+//! Prefix-reuse bench (the tentpole's acceptance numbers): prompt-
+//! prefill tokens and virtual model-time with the shared-prefix open ON
+//! vs OFF, across N ∈ {4, 8, 16} naive-parallel lanes plus one SSR row
+//! (whose SPM scoring pass rides the shared prefill). The suite runs
+//! twice, so the second pass exercises the cross-request prefix cache —
+//! the pass@k / re-run-suite shape where hits skip prompt prefill
+//! entirely. Calibrated backend (no artifacts needed, always runs);
+//! emits one BENCH_JSON line for the trajectory tracker.
+
+use std::time::Instant;
+
+use ssr::backend::calibrated::CalibratedBackend;
+use ssr::backend::Backend;
+use ssr::config::{SsrConfig, StopRule};
+use ssr::coordinator::engine::{Engine, Method};
+use ssr::coordinator::flops;
+use ssr::model::tokenizer;
+use ssr::util::json;
+use ssr::workload::suites;
+
+const PROBLEMS: usize = 8;
+const PASSES: usize = 2;
+const SUITE: &str = "synth-math500";
+
+struct Case {
+    /// target-side prompt-ingest tokens (prompts + suffixes + SPM passes)
+    prefill_tokens: u64,
+    /// draft-side prompt-ingest tokens
+    draft_prefill_tokens: u64,
+    /// backend virtual model-seconds over the whole run
+    model_s: f64,
+    /// engine prefix-cache hits (0 when prefix reuse is off)
+    hits: u64,
+    /// answers of the cold first pass (equivalence check between modes)
+    cold_answers: Vec<Option<i64>>,
+}
+
+fn run_case(method: Method, enabled: bool) -> anyhow::Result<Case> {
+    let mut cfg = SsrConfig::default();
+    cfg.prefix.enabled = enabled;
+    let vocab = tokenizer::builtin_vocab();
+    let problems = suites::generate(suites::spec(SUITE)?, &vocab).problems;
+    let mut backend = CalibratedBackend::for_suite(SUITE, 0x5EED)?;
+    let mut cold_answers = Vec::new();
+    let hits;
+    {
+        let mut engine = Engine::new(&mut backend, cfg);
+        for pass in 0..PASSES {
+            for (i, p) in problems.iter().take(PROBLEMS).enumerate() {
+                let r = engine.run(p, method, (pass * PROBLEMS + i) as u64)?;
+                if pass == 0 {
+                    cold_answers.push(r.answer());
+                }
+            }
+        }
+        hits = engine.prefix.hits;
+    }
+    let ps = backend.prefill_stats();
+    Ok(Case {
+        prefill_tokens: ps.target_prompt_tokens + ps.suffix_tokens + ps.spm_prompt_tokens,
+        draft_prefill_tokens: ps.draft_prompt_tokens,
+        model_s: backend.clock_secs(),
+        hits,
+        cold_answers,
+    })
+}
+
+/// Closed-form cold-pass expectation (flops.rs): per-lane vs shared.
+fn expected_cold(method: Method, shared: bool) -> anyhow::Result<u64> {
+    let vocab = tokenizer::builtin_vocab();
+    let problems = suites::generate(suites::spec(SUITE)?, &vocab).problems;
+    let (n, suffix, spm) = match method {
+        Method::Parallel { n, spm } => (n, spm as u64, spm),
+        Method::Ssr { n, .. } => (n, 1, true),
+        _ => (1, 0, false),
+    };
+    Ok(problems
+        .iter()
+        .take(PROBLEMS)
+        .map(|p| {
+            let bare = p.tokens.len() as u64 + 3;
+            if shared {
+                flops::prefill_tokens_shared(n, bare, suffix)
+            } else {
+                flops::prefill_tokens_per_lane(n, bare, suffix, spm)
+            }
+        })
+        .sum())
+}
+
+fn main() -> anyhow::Result<()> {
+    let t_start = Instant::now();
+    println!(
+        "## prefix reuse: {PROBLEMS} problems x {PASSES} passes of {SUITE}, \
+         shared-prefix open + cross-request prefix cache vs per-lane prefill"
+    );
+    let rows: Vec<(String, Method)> = vec![
+        ("parallel-4".into(), Method::Parallel { n: 4, spm: false }),
+        ("parallel-8".into(), Method::Parallel { n: 8, spm: false }),
+        ("parallel-16".into(), Method::Parallel { n: 16, spm: false }),
+        ("ssr-m5".into(), Method::Ssr { n: 5, tau: 7, stop: StopRule::Full }),
+    ];
+
+    // json::obj takes (&str, Value): keys are owned here and borrowed at
+    // the end, once every row has pushed its entries
+    let mut summary: Vec<(String, json::Value)> = vec![
+        ("bench".into(), json::s("prefix_reuse")),
+        ("problems".into(), json::i(PROBLEMS as i64)),
+        ("passes".into(), json::i(PASSES as i64)),
+    ];
+    let mut ratios = Vec::new();
+    for (label, method) in &rows {
+        let off = run_case(*method, false)?;
+        let on = run_case(*method, true)?;
+        assert_eq!(
+            off.cold_answers, on.cold_answers,
+            "{label}: cold-pass answers diverge between prefix modes"
+        );
+        assert!(on.hits > 0, "{label}: second pass produced no prefix-cache hits");
+        let ratio = off.prefill_tokens as f64 / on.prefill_tokens.max(1) as f64;
+        ratios.push(ratio);
+        println!(
+            "  {label:<12} prefill tok {:>6} -> {:>5}  (x{ratio:.2}; cold bound {} -> {})  \
+             draft tok {:>6} -> {:>5}  model {:.1}s -> {:.1}s  hits {}",
+            off.prefill_tokens,
+            on.prefill_tokens,
+            expected_cold(*method, false)?,
+            expected_cold(*method, true)?,
+            off.draft_prefill_tokens,
+            on.draft_prefill_tokens,
+            off.model_s,
+            on.model_s,
+            on.hits,
+        );
+        let key = label.replace('-', "_");
+        for (suffix_key, val) in [
+            ("prefill_off", json::i(off.prefill_tokens as i64)),
+            ("prefill_on", json::i(on.prefill_tokens as i64)),
+            ("ratio", json::n(ratio)),
+            ("model_s_off", json::n(off.model_s)),
+            ("model_s_on", json::n(on.model_s)),
+            ("hits", json::i(on.hits as i64)),
+        ] {
+            summary.push((format!("{key}_{suffix_key}"), val));
+        }
+    }
+    let min_ratio = ratios.iter().cloned().fold(f64::INFINITY, f64::min);
+    println!(
+        "\n  worst-case prefill-token reduction x{min_ratio:.2} \
+         (target: > 2x with repeated suites)"
+    );
+    summary.push(("min_ratio".into(), json::n(min_ratio)));
+    let pairs: Vec<(&str, json::Value)> =
+        summary.iter().map(|(k, v)| (k.as_str(), v.clone())).collect();
+    println!("\nBENCH_JSON {}", json::obj(pairs).print());
+
+    if min_ratio < 2.0 {
+        eprintln!("[bench prefix_reuse] WARNING: reduction below 2x ({min_ratio:.2})");
+    }
+    println!("[bench prefix_reuse] completed in {:.2}s", t_start.elapsed().as_secs_f64());
+    Ok(())
+}

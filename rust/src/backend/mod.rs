@@ -14,7 +14,12 @@
 //! `model/handle.rs` and DESIGN.md §2):
 //!   open -> [draft_step -> score_step -> (accept | rewrite_step)]* -> close
 //! with `target_step` replacing the draft/score/rewrite cycle for
-//! non-speculative baselines.
+//! non-speculative baselines. The *open* has two shapes: the legacy
+//! per-lane `open_paths` (every lane prefills its full prompt), and the
+//! prefix-aware `prefill_prefix` + `fork_paths` pair, which prefills the
+//! shared problem prompt once per model and forks lanes from it — same
+//! sampling streams and traces, (N+1)·|prompt| -> |prompt| + N·|suffix|
+//! prefill tokens (DESIGN.md §2, prefix-fork contract).
 //!
 //! Batching contract: every step entry point takes a *slice* of path ids
 //! and executes them as one batch. [`BackendMeta::max_batch_lanes`] and
@@ -26,6 +31,7 @@
 //! pinned to their prefill batch group (PJRT caches).
 
 pub mod calibrated;
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
 
 use anyhow::Result;
@@ -34,6 +40,41 @@ use crate::workload::Problem;
 
 /// Opaque per-path handle issued by a backend.
 pub type PathId = usize;
+
+/// Opaque handle to a prefilled shared prompt prefix (DESIGN.md §2).
+///
+/// The prefix-aware open protocol splits `open_paths` in two:
+/// `prefill_prefix` ingests the *bare problem prompt* once per model
+/// (draft and target) and `fork_paths` clones that cache state into one
+/// lane per strategy, ingesting only the short per-lane strategy suffix.
+/// The same prefill also yields the SPM selection logits
+/// (`prefix_scores`), so a full SSR open costs |prompt| + N·|suffix|
+/// prefill tokens instead of the per-lane path's (N+1)·|prompt|.
+/// Handles stay valid after forking (lanes copy what they need) until
+/// `release_prefix`, which is what lets the scheduler's cross-request
+/// prefix cache serve repeated problems without any prompt prefill.
+pub type PrefixHandle = usize;
+
+/// Cumulative prompt-ingest accounting across a backend's lifetime —
+/// the observable the `prefix_reuse` bench diffs to show the tentpole
+/// saving. All counts are tokens except `prefixes`/`forks`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PrefillStats {
+    /// prompt tokens the target prefilled (per-lane prompts via
+    /// `open_paths` plus shared bare prompts via `prefill_prefix`)
+    pub target_prompt_tokens: u64,
+    /// prompt tokens the draft prefilled
+    pub draft_prompt_tokens: u64,
+    /// per-lane strategy-suffix tokens ingested by `fork_paths`
+    pub suffix_tokens: u64,
+    /// bare-prompt tokens spent on standalone SPM scoring prefills
+    /// (`select_scores`); zero when the SPM reads a shared prefix
+    pub spm_prompt_tokens: u64,
+    /// shared prefixes prefilled
+    pub prefixes: u64,
+    /// lane groups forked from a prefix
+    pub forks: u64,
+}
 
 /// Outcome of generating one reasoning step on a path.
 #[derive(Debug, Clone)]
@@ -100,6 +141,46 @@ pub trait Backend {
         seed: u64,
         use_draft: bool,
     ) -> Result<Vec<PathId>>;
+
+    /// Prefill the problem's *bare* prompt once (target, plus draft when
+    /// `use_draft`), returning a reusable [`PrefixHandle`]. When
+    /// `want_scores` the same pass records the SPM selection logits so
+    /// no separate scoring prefill is needed (they are also computed
+    /// lazily by [`Backend::prefix_scores`] on a cached prefix).
+    fn prefill_prefix(
+        &mut self,
+        problem: &Problem,
+        use_draft: bool,
+        want_scores: bool,
+    ) -> Result<PrefixHandle>;
+
+    /// SPM strategy logits read off an existing prefix, without a model
+    /// pass. On a freshly prefilled prefix these are the numbers
+    /// `select_scores` would produce; they are memoized with the
+    /// prefix, so every fork of a cached prompt sees the same scores —
+    /// exact for the real backend (logits are a function of the
+    /// prompt), and for the calibrated substrate it means the per-solve
+    /// score noise is frozen across cache hits rather than redrawn.
+    fn prefix_scores(&mut self, handle: PrefixHandle) -> Result<Vec<f32>>;
+
+    /// Open one lane per entry in `strategies` by forking the shared
+    /// prefix: per-lane model work is only the strategy-suffix ingest.
+    /// Equivalent to `open_paths` in every observable except prefill
+    /// cost (same per-path sampling streams, traces and votes). The
+    /// handle stays valid for further forks until released.
+    fn fork_paths(
+        &mut self,
+        handle: PrefixHandle,
+        strategies: &[Option<usize>],
+        seed: u64,
+    ) -> Result<Vec<PathId>>;
+
+    /// Release a prefix handle (prefix-cache eviction / non-cached
+    /// open). Safe after forking: lanes own copies of the prefix state.
+    fn release_prefix(&mut self, handle: PrefixHandle) -> Result<()>;
+
+    /// Cumulative prompt-ingest accounting (see [`PrefillStats`]).
+    fn prefill_stats(&self) -> PrefillStats;
 
     /// Draft model proposes the next step on each path (tentative).
     fn draft_step(&mut self, paths: &[PathId]) -> Result<Vec<StepOutcome>>;

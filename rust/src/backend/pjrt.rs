@@ -16,13 +16,20 @@
 //! whole group; inactive lanes pass their real (pos, cur) so their state
 //! is untouched (span re-writes the same kv at `pos`; ingest freezes with
 //! len = 0) and their outputs are discarded.
+//!
+//! Prefix-fork open (DESIGN.md §2): `prefill_prefix` runs a batch-1
+//! prefill of the bare prompt per model; `fork_paths` broadcasts those
+//! cached K/V rows into a fresh lane-group cache (`ModelHandle::
+//! fork_cache`) and ingests only each lane's one-token strategy suffix.
+//! The prefix's last-position logits double as the SPM selection scores
+//! and as the first-token sampling distribution of suffixless lanes.
 
 use std::collections::HashMap;
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use super::{Backend, BackendMeta, PathId, PathStats, StepOutcome};
+use super::{Backend, BackendMeta, PathId, PathStats, PrefillStats, PrefixHandle, StepOutcome};
 use crate::model::{handle::KvCache, sampler, tokenizer, ModelHandle};
 use crate::runtime::{Manifest, Runtime};
 use crate::workload::Problem;
@@ -59,6 +66,20 @@ struct PathState {
     closed: bool,
 }
 
+/// A prefilled bare-prompt prefix: batch-1 prefill caches for both
+/// models plus the last-position logits, ready to fork lane groups
+/// (DESIGN.md §2). `charged` = the one-time prompt FLOPs were billed to
+/// a forked lane already.
+struct PrefixState {
+    prompt: Vec<i32>,
+    target_cache: KvCache,
+    draft_cache: Option<KvCache>,
+    next_logits_t: Vec<f32>,
+    next_logits_d: Option<Vec<f32>>,
+    scores: Option<Vec<f32>>,
+    charged: bool,
+}
+
 /// Runs the draft/target pair loaded from `artifacts/`.
 pub struct PjrtBackend {
     rt: Runtime,
@@ -67,6 +88,13 @@ pub struct PjrtBackend {
     manifest: Manifest,
     groups: Vec<LaneGroup>,
     paths: Vec<PathState>,
+    /// prefilled shared prefixes (`None` = released slot)
+    prefixes: Vec<Option<PrefixState>>,
+    /// released slots available for reuse (keeps `prefixes` bounded by
+    /// the number of LIVE prefixes under sustained traffic)
+    free_prefixes: Vec<usize>,
+    /// cumulative prompt-ingest accounting
+    prefill: PrefillStats,
     /// sampling temperature for spans (0 = greedy)
     pub temp: f32,
     pub max_steps: usize,
@@ -88,6 +116,9 @@ impl PjrtBackend {
             manifest,
             groups: Vec::new(),
             paths: Vec::new(),
+            prefixes: Vec::new(),
+            free_prefixes: Vec::new(),
+            prefill: PrefillStats::default(),
             temp: 0.7,
             max_steps: MAX_STEPS_DEFAULT,
             score_hist: crate::util::stats::Histogram::new(10),
@@ -283,11 +314,9 @@ impl Backend for PjrtBackend {
         let v = &self.manifest.vocab;
         let prompt = tokenizer::prompt(v, &problem.tokens, None);
         let out = self.target.prefill(&self.rt, &[prompt.clone()])?;
-        let logits = &out.next_logits[0];
-        let s0 = v.strat0 as usize;
-        let k = crate::workload::strategies::NUM_REAL_STRATEGIES;
-        Ok(logits[s0..s0 + k].to_vec())
         // prefill cost charged to SPM: one prompt pass
+        self.prefill.spm_prompt_tokens += prompt.len() as u64;
+        Ok(strategy_logits(&self.manifest, &out.next_logits[0]))
     }
 
     fn open_paths(
@@ -308,6 +337,11 @@ impl Backend for PjrtBackend {
         // Target prefill builds the target cache for all lanes.
         let t_out = self.target.prefill(&self.rt, &prompts)?;
         let d_out = if use_draft { Some(self.draft.prefill(&self.rt, &prompts)?) } else { None };
+        let prompt_tokens: u64 = prompts.iter().map(|p| p.len() as u64).sum();
+        self.prefill.target_prompt_tokens += prompt_tokens;
+        if use_draft {
+            self.prefill.draft_prompt_tokens += prompt_tokens;
+        }
 
         let group_id = self.groups.len();
         let batch = t_out.cache.batch;
@@ -353,6 +387,200 @@ impl Backend for PjrtBackend {
             batch,
         });
         Ok(lanes)
+    }
+
+    fn prefill_prefix(
+        &mut self,
+        problem: &Problem,
+        use_draft: bool,
+        want_scores: bool,
+    ) -> Result<PrefixHandle> {
+        // Batch-1 prefill of the BARE prompt (no strategy token) per
+        // model; fork_paths broadcasts the cached rows into lane groups.
+        let prompt = tokenizer::prompt(&self.manifest.vocab, &problem.tokens, None);
+        let t_out = self.target.prefill(&self.rt, &[prompt.clone()])?;
+        let d_out =
+            if use_draft { Some(self.draft.prefill(&self.rt, &[prompt.clone()])?) } else { None };
+        self.prefill.target_prompt_tokens += prompt.len() as u64;
+        if use_draft {
+            self.prefill.draft_prompt_tokens += prompt.len() as u64;
+        }
+        self.prefill.prefixes += 1;
+
+        let next_logits_t =
+            t_out.next_logits.into_iter().next().context("prefill returned no logits")?;
+        let (draft_cache, next_logits_d) = match d_out {
+            Some(d) => (
+                Some(d.cache),
+                Some(d.next_logits.into_iter().next().context("draft prefill logits")?),
+            ),
+            None => (None, None),
+        };
+        let scores = want_scores.then(|| strategy_logits(&self.manifest, &next_logits_t));
+        let entry = PrefixState {
+            prompt,
+            target_cache: t_out.cache,
+            draft_cache,
+            next_logits_t,
+            next_logits_d,
+            scores,
+            charged: false,
+        };
+        let id = match self.free_prefixes.pop() {
+            Some(i) => {
+                self.prefixes[i] = Some(entry);
+                i
+            }
+            None => {
+                self.prefixes.push(Some(entry));
+                self.prefixes.len() - 1
+            }
+        };
+        Ok(id)
+    }
+
+    fn prefix_scores(&mut self, handle: PrefixHandle) -> Result<Vec<f32>> {
+        let e = self
+            .prefixes
+            .get_mut(handle)
+            .and_then(|e| e.as_mut())
+            .context("prefix_scores: released or unknown prefix handle")?;
+        if e.scores.is_none() {
+            // free: the logits were produced by the prefix prefill
+            e.scores = Some(strategy_logits(&self.manifest, &e.next_logits_t));
+        }
+        Ok(e.scores.clone().unwrap())
+    }
+
+    fn fork_paths(
+        &mut self,
+        handle: PrefixHandle,
+        strategies: &[Option<usize>],
+        seed: u64,
+    ) -> Result<Vec<PathId>> {
+        let n = strategies.len();
+        if n == 0 {
+            bail!("fork_paths: empty");
+        }
+        let (prompt, use_draft, charge_prompt, next_t, next_d) = {
+            let e = self
+                .prefixes
+                .get_mut(handle)
+                .and_then(|e| e.as_mut())
+                .context("fork_paths: released or unknown prefix handle")?;
+            let charge = !e.charged;
+            e.charged = true;
+            (
+                e.prompt.clone(),
+                e.draft_cache.is_some(),
+                charge,
+                e.next_logits_t.clone(),
+                e.next_logits_d.clone(),
+            )
+        };
+        // Broadcast the prefix lane into a fresh group cache per model
+        // (the KV fork op; see ModelHandle::fork_cache).
+        let (mut t_cache, mut d_cache) = {
+            let e = self.prefixes[handle].as_ref().unwrap();
+            let t = self.target.fork_cache(&e.target_cache, 0, n)?;
+            let d = match &e.draft_cache {
+                Some(c) => Some(self.draft.fork_cache(c, 0, n)?),
+                None => None,
+            };
+            (t, d)
+        };
+
+        // Per-lane work is only the strategy-suffix ingest (empty
+        // suffix = frozen lane: naive-parallel forks cost zero tokens).
+        let p_len = prompt.len();
+        let strat0 = self.manifest.vocab.strat0;
+        let suffixes: Vec<Vec<i32>> = strategies
+            .iter()
+            .map(|s| match s {
+                Some(st) => vec![strat0 + *st as i32],
+                None => Vec::new(),
+            })
+            .collect();
+        let pos = vec![p_len as i32; n];
+        let t_in = self.target.ingest(&self.rt, &mut t_cache, &pos, &suffixes)?;
+        let d_in = match &mut d_cache {
+            Some(c) => Some(self.draft.ingest(&self.rt, c, &pos, &suffixes)?),
+            None => None,
+        };
+
+        let group_id = self.groups.len();
+        let batch = t_cache.batch;
+        let base = self.paths.len();
+        let mut lanes = Vec::with_capacity(n);
+        for (i, suffix) in suffixes.iter().enumerate() {
+            let pid = base + i;
+            // First pending token: sampled from the generating model's
+            // logits after the last prompt(+suffix) token — the suffix
+            // ingest's last_logits, or the prefix logits when there is
+            // no suffix (identical numbers to a full-prompt prefill).
+            let logits: &[f32] = if use_draft {
+                if suffix.is_empty() {
+                    next_d.as_deref().context("speculative fork off a draftless prefix")?
+                } else {
+                    &d_in.as_ref().unwrap().last_logits[i]
+                }
+            } else if suffix.is_empty() {
+                &next_t
+            } else {
+                &t_in.last_logits[i]
+            };
+            let mut rng = crate::util::rng::Rng::new(seed ^ (pid as u64) << 8);
+            let first = sampler::sample(logits, self.temp, &mut rng) as i32;
+            let mut trace = prompt.clone();
+            trace.extend_from_slice(suffix);
+            trace.push(first);
+            let prompt_len = p_len + suffix.len();
+            let suffix_cost = suffix.len() as u64;
+            // the shared prompt is billed once, to the first lane of the
+            // fork that created the prefix; cache hits pay only suffixes
+            let prompt_cost = if charge_prompt && i == 0 { p_len as u64 } else { 0 };
+            self.prefill.suffix_tokens += suffix_cost;
+            self.paths.push(PathState {
+                group: group_id,
+                lane: i,
+                prompt_len,
+                frontier_d: if use_draft { prompt_len } else { 0 },
+                frontier_t: prompt_len,
+                tentative_start: None,
+                trace,
+                use_draft,
+                seed: (seed as i32).wrapping_add(i as i32),
+                terminal: false,
+                stats: PathStats {
+                    draft_tokens: if use_draft { prompt_cost + suffix_cost } else { 0 },
+                    target_tokens: prompt_cost + suffix_cost,
+                    ..Default::default()
+                },
+                closed: false,
+            });
+            lanes.push(pid);
+        }
+        self.groups.push(LaneGroup {
+            draft_cache: d_cache,
+            target_cache: t_cache,
+            lanes: lanes.clone(),
+            batch,
+        });
+        self.prefill.forks += 1;
+        Ok(lanes)
+    }
+
+    fn release_prefix(&mut self, handle: PrefixHandle) -> Result<()> {
+        if let Some(slot) = self.prefixes.get_mut(handle) {
+            if slot.take().is_some() {
+                self.free_prefixes.push(handle);
+            }
+        }
+        Ok(())
+    }
+
+    fn prefill_stats(&self) -> PrefillStats {
+        self.prefill.clone()
     }
 
     fn draft_step(&mut self, paths: &[PathId]) -> Result<Vec<StepOutcome>> {
@@ -470,6 +698,14 @@ impl Backend for PjrtBackend {
     fn score_histogram(&self) -> crate::util::stats::Histogram {
         self.score_hist.clone()
     }
+}
+
+/// Slice the SPM selection logits (the strategy-token block) out of a
+/// last-position logit vector.
+fn strategy_logits(manifest: &Manifest, logits: &[f32]) -> Vec<f32> {
+    let s0 = manifest.vocab.strat0 as usize;
+    let k = crate::workload::strategies::NUM_REAL_STRATEGIES;
+    logits[s0..s0 + k].to_vec()
 }
 
 #[cfg(test)]

@@ -78,6 +78,45 @@ impl AdmitPolicy {
     }
 }
 
+/// Shared-prefix prefill & prefix-reuse cache knobs (DESIGN.md §2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrefixCacheCfg {
+    /// open lane groups by prefilling the problem prompt once and
+    /// forking lanes from it (off = legacy per-lane prefill, kept for
+    /// ablation and equivalence testing)
+    pub enabled: bool,
+    /// max prefilled prompts kept alive across requests (0 = no
+    /// cross-request cache; within-request sharing still applies)
+    pub capacity: usize,
+}
+
+impl Default for PrefixCacheCfg {
+    fn default() -> Self {
+        PrefixCacheCfg { enabled: true, capacity: 256 }
+    }
+}
+
+impl PrefixCacheCfg {
+    fn apply_json(&mut self, v: &Value) -> Result<()> {
+        for (k, val) in v.obj()? {
+            match k.as_str() {
+                "enabled" => self.enabled = val.bool()?,
+                "capacity" => self.capacity = val.usize()?,
+                other => bail!("unknown prefix_cache key `{other}`"),
+            }
+        }
+        Ok(())
+    }
+}
+
+fn parse_bool(s: &str) -> Result<bool> {
+    Ok(match s {
+        "on" | "true" | "1" | "yes" => true,
+        "off" | "false" | "0" | "no" => false,
+        _ => bail!("expected on|off, got `{s}`"),
+    })
+}
+
 #[derive(Debug, Clone)]
 pub struct SsrConfig {
     pub artifacts_dir: PathBuf,
@@ -99,6 +138,8 @@ pub struct SsrConfig {
     pub max_lanes: usize,
     /// admission-queue ordering of the scheduler
     pub admission: AdmitPolicy,
+    /// shared-prefix prefill + cross-request prefix cache
+    pub prefix: PrefixCacheCfg,
 }
 
 impl Default for SsrConfig {
@@ -115,6 +156,7 @@ impl Default for SsrConfig {
             seed: 42,
             max_lanes: 32,
             admission: AdmitPolicy::Fifo,
+            prefix: PrefixCacheCfg::default(),
         }
     }
 }
@@ -135,6 +177,7 @@ impl SsrConfig {
                 "seed" => self.seed = val.i64()? as u64,
                 "max_lanes" => self.max_lanes = val.usize()?,
                 "admission" => self.admission = AdmitPolicy::parse(val.str()?)?,
+                "prefix_cache" => self.prefix.apply_json(val)?,
                 other => bail!("unknown config key `{other}`"),
             }
         }
@@ -166,6 +209,10 @@ impl SsrConfig {
         if let Some(s) = args.opt("admission") {
             self.admission = AdmitPolicy::parse(s)?;
         }
+        if let Some(s) = args.opt("prefix-reuse") {
+            self.prefix.enabled = parse_bool(s)?;
+        }
+        self.prefix.capacity = args.opt_usize("prefix-cache-cap", self.prefix.capacity)?;
         self.validate()
     }
 
@@ -184,6 +231,10 @@ impl SsrConfig {
         }
         if self.max_lanes == 0 || self.max_lanes > 1024 {
             bail!("max_lanes must be in 1..=1024, got {}", self.max_lanes);
+        }
+        // bound keeps the cache's O(capacity) LRU eviction scan cheap
+        if self.prefix.capacity > 4096 {
+            bail!("prefix_cache.capacity must be <= 4096, got {}", self.prefix.capacity);
         }
         Ok(())
     }
@@ -283,5 +334,38 @@ mod tests {
         c.apply_args(&mut args).unwrap();
         assert_eq!(c.max_lanes, 16);
         assert_eq!(c.admission, AdmitPolicy::SmallestFirst);
+    }
+
+    #[test]
+    fn prefix_cache_knobs() {
+        let c = SsrConfig::default();
+        assert!(c.prefix.enabled, "prefix reuse is the default serving path");
+        assert_eq!(c.prefix.capacity, 256);
+
+        let mut c = SsrConfig::default();
+        let v = Value::parse(r#"{"prefix_cache": {"enabled": false, "capacity": 8}}"#).unwrap();
+        c.apply_json(&v).unwrap();
+        assert!(!c.prefix.enabled);
+        assert_eq!(c.prefix.capacity, 8);
+
+        let mut c = SsrConfig::default();
+        assert!(c
+            .apply_json(&Value::parse(r#"{"prefix_cache": {"bogus": 1}}"#).unwrap())
+            .is_err());
+
+        let argv: Vec<String> =
+            ["serve", "--prefix-reuse", "off", "--prefix-cache-cap", "4"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        let mut args = Args::parse(&argv).unwrap();
+        let mut c = SsrConfig::default();
+        c.apply_args(&mut args).unwrap();
+        assert!(!c.prefix.enabled);
+        assert_eq!(c.prefix.capacity, 4);
+
+        assert!(parse_bool("on").unwrap());
+        assert!(!parse_bool("false").unwrap());
+        assert!(parse_bool("maybe").is_err());
     }
 }

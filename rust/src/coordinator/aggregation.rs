@@ -6,7 +6,7 @@
 use std::collections::BTreeMap;
 
 /// One finished path's vote.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct PathVote {
     pub answer: Option<i64>,
     /// 0..=9 scores of its accepted steps (rewrites recorded as 9)

@@ -20,9 +20,10 @@ use std::time::Instant;
 use anyhow::Result;
 
 use super::aggregation::{aggregate, Decision, PathVote};
+use super::prefix::{Acquired, PrefixCache};
 use super::spm;
 use crate::backend::{Backend, PathId, StepOutcome};
-use crate::config::{SsrConfig, StopRule};
+use crate::config::{Selection, SsrConfig, StopRule};
 use crate::util::rng::Rng;
 use crate::workload::Problem;
 
@@ -170,7 +171,10 @@ pub struct ProblemRun {
 
 impl ProblemRun {
     /// Select strategies and open the lane group for one problem.
-    /// `seed` controls sampling (trial id).
+    /// `seed` controls sampling (trial id). Uses the shared-prefix open
+    /// when `cfg.prefix.enabled` (prefilling a private prefix and
+    /// releasing it after the fork); [`ProblemRun::start_with_cache`]
+    /// additionally reuses prefixes across runs.
     pub fn start(
         backend: &mut dyn Backend,
         cfg: &SsrConfig,
@@ -178,26 +182,23 @@ impl ProblemRun {
         method: Method,
         seed: u64,
     ) -> Result<ProblemRun> {
+        Self::start_with_cache(backend, cfg, problem, method, seed, None)
+    }
+
+    /// [`ProblemRun::start`] with an optional cross-request prefix
+    /// cache: repeated problems fork their lanes off an already-
+    /// prefilled prompt and skip prompt prefill entirely.
+    pub fn start_with_cache(
+        backend: &mut dyn Backend,
+        cfg: &SsrConfig,
+        problem: &Problem,
+        method: Method,
+        seed: u64,
+        mut cache: Option<&mut PrefixCache>,
+    ) -> Result<ProblemRun> {
         let t0 = Instant::now();
         let clock0 = backend.clock_secs();
         let mut rng = Rng::new(seed ^ 0xE46);
-
-        // --- strategy selection -------------------------------------------------
-        let (strategies, selection): (Vec<Option<usize>>, Vec<usize>) = match method {
-            Method::Baseline | Method::SpecReason { .. } => (vec![None], vec![]),
-            Method::Parallel { n, spm: false } => (vec![None; n], vec![]),
-            Method::Parallel { n, spm: true } | Method::Ssr { n, .. } => {
-                let picked = spm::select(
-                    backend,
-                    problem,
-                    cfg.pool_size,
-                    n,
-                    cfg.selection,
-                    &mut rng,
-                )?;
-                (picked.iter().map(|&s| Some(s)).collect(), picked)
-            }
-        };
 
         let speculative = method.uses_draft();
         let (tau, stop) = match method {
@@ -206,8 +207,48 @@ impl ProblemRun {
             _ => (0, StopRule::Full),
         };
 
-        // --- open the lane group ------------------------------------------------
-        let ids = backend.open_paths(problem, &strategies, seed, speculative)?;
+        // The shared-prefix open pays off when the prompt is shared by
+        // several lanes or can be cached for later solves; a single-lane
+        // open with no cache to warm (none passed, or capacity 0) would
+        // be pure fork overhead (on PJRT: an extra cache broadcast per
+        // model), so it stays on the legacy path.
+        let cache_usable = cache.as_deref().map_or(false, |c| c.capacity() > 0);
+        let use_prefix = cfg.prefix.enabled && (cache_usable || method.lanes() > 1);
+        let (ids, selection) = if use_prefix {
+            // --- shared-prefix open: prefill the prompt once, read the
+            // SPM logits off the same pass, fork one lane per strategy
+            let wants_scores = matches!(
+                method,
+                Method::Parallel { spm: true, .. } | Method::Ssr { .. }
+            ) && matches!(
+                cfg.selection,
+                Selection::ModelTopN | Selection::ModelSample
+            );
+            let acq = match cache.as_deref_mut() {
+                Some(c) => c.acquire(backend, problem, speculative, wants_scores)?,
+                None => Acquired::owned(backend.prefill_prefix(
+                    problem,
+                    speculative,
+                    wants_scores,
+                )?),
+            };
+            let forked = pick_strategies(backend, method, cfg, problem, &mut rng, Some(acq.handle))
+                .and_then(|(strategies, selection)| {
+                    Ok((backend.fork_paths(acq.handle, &strategies, seed)?, selection))
+                });
+            if !acq.retained {
+                // private prefix: lanes own copies now; free the prompt
+                let _ = backend.release_prefix(acq.handle);
+            }
+            forked?
+        } else {
+            // --- legacy per-lane open (single-lane no-cache opens,
+            // ablation, and the equivalence baseline)
+            let (strategies, selection) =
+                pick_strategies(backend, method, cfg, problem, &mut rng, None)?;
+            (backend.open_paths(problem, &strategies, seed, speculative)?, selection)
+        };
+
         let live: Vec<LivePath> = ids
             .iter()
             .map(|&id| LivePath {
@@ -352,6 +393,39 @@ impl ProblemRun {
     }
 }
 
+/// Strategy selection for one run: the Method decides the lane shape,
+/// and SPM-selected methods pull model scores either from a shared
+/// prefix (`prefix = Some`) or a standalone scoring prefill — the one
+/// place this Method match exists for both open shapes.
+fn pick_strategies(
+    backend: &mut dyn Backend,
+    method: Method,
+    cfg: &SsrConfig,
+    problem: &Problem,
+    rng: &mut Rng,
+    prefix: Option<crate::backend::PrefixHandle>,
+) -> Result<(Vec<Option<usize>>, Vec<usize>)> {
+    Ok(match method {
+        Method::Baseline | Method::SpecReason { .. } => (vec![None], vec![]),
+        Method::Parallel { n, spm: false } => (vec![None; n], vec![]),
+        Method::Parallel { n, spm: true } | Method::Ssr { n, .. } => {
+            let picked = match prefix {
+                Some(h) => spm::select_prefixed(
+                    backend,
+                    h,
+                    problem,
+                    cfg.pool_size,
+                    n,
+                    cfg.selection,
+                    rng,
+                )?,
+                None => spm::select(backend, problem, cfg.pool_size, n, cfg.selection, rng)?,
+            };
+            (picked.iter().map(|&s| Some(s)).collect(), picked)
+        }
+    })
+}
+
 /// Split a tick's lanes into backend-call groups: one shared union
 /// (chunked to the lane capacity) when the backend batches across
 /// requests, per-run groups when lanes are pinned to their prefill
@@ -462,11 +536,23 @@ pub fn step_tick(backend: &mut dyn Backend, runs: &mut [&mut ProblemRun]) -> Res
 pub struct Engine<'a> {
     pub backend: &'a mut dyn Backend,
     pub cfg: SsrConfig,
+    /// prefix cache shared by this engine's runs: re-solving a problem
+    /// (pass@k, tau sweeps, fast-mode comparisons) skips prompt prefill
+    pub prefix: PrefixCache,
+}
+
+impl<'a> Drop for Engine<'a> {
+    /// Release the engine's cached prefixes so a backend reused across
+    /// several `Engine` instances doesn't accumulate prefix state.
+    fn drop(&mut self) {
+        self.prefix.clear(&mut *self.backend);
+    }
 }
 
 impl<'a> Engine<'a> {
     pub fn new(backend: &'a mut dyn Backend, cfg: SsrConfig) -> Self {
-        Engine { backend, cfg }
+        let prefix = PrefixCache::new(cfg.prefix.capacity);
+        Engine { backend, cfg, prefix }
     }
 
     /// Run one problem under `method` to completion — a thin wrapper
@@ -474,7 +560,14 @@ impl<'a> Engine<'a> {
     /// the exact backend call sequence of the pre-scheduler engine.
     /// `seed` controls sampling (trial id).
     pub fn run(&mut self, problem: &Problem, method: Method, seed: u64) -> Result<RunResult> {
-        let mut run = ProblemRun::start(&mut *self.backend, &self.cfg, problem, method, seed)?;
+        let mut run = ProblemRun::start_with_cache(
+            &mut *self.backend,
+            &self.cfg,
+            problem,
+            method,
+            seed,
+            Some(&mut self.prefix),
+        )?;
         while !run.is_done() {
             let mut group = [&mut run];
             step_tick(&mut *self.backend, &mut group)?;
@@ -651,6 +744,69 @@ mod tests {
         }
         let r = run.finish(&mut b).unwrap();
         assert_eq!(r.votes.len(), 4);
+    }
+
+    #[test]
+    fn prefix_open_matches_per_lane_decisions_and_votes() {
+        // ISSUE acceptance: prefix-forked opens leave accuracy/decision
+        // outputs unchanged — engine-level half of the equivalence suite
+        // (trace-level lives in backend::calibrated::tests).
+        let methods = [
+            Method::Baseline,
+            Method::Parallel { n: 4, spm: true },
+            Method::Ssr { n: 3, tau: 7, stop: StopRule::Full },
+        ];
+        for method in methods {
+            let (mut b_on, problems) = setup("synth-math500", 77);
+            let (mut b_off, problems2) = setup("synth-math500", 77);
+            let cfg_on = SsrConfig::default();
+            assert!(cfg_on.prefix.enabled);
+            let mut cfg_off = SsrConfig::default();
+            cfg_off.prefix.enabled = false;
+            let mut e_on = Engine::new(&mut b_on, cfg_on);
+            let mut e_off = Engine::new(&mut b_off, cfg_off);
+            for (i, p) in problems.iter().take(8).enumerate() {
+                let r_on = e_on.run(p, method, 100 + i as u64).unwrap();
+                let r_off = e_off.run(&problems2[i], method, 100 + i as u64).unwrap();
+                assert_eq!(r_on.decision, r_off.decision, "{method:?} problem {i}");
+                assert_eq!(r_on.votes, r_off.votes, "{method:?} problem {i}");
+                assert_eq!(r_on.selection, r_off.selection, "{method:?} problem {i}");
+                assert_eq!(r_on.steps, r_off.steps, "{method:?} problem {i}");
+                // the fork never pays more prefill than the per-lane open
+                assert!(r_on.target_tokens <= r_off.target_tokens);
+                assert!(r_on.draft_tokens <= r_off.draft_tokens);
+            }
+        }
+    }
+
+    #[test]
+    fn engine_prefill_accounting_matches_flops_closed_form() {
+        use crate::coordinator::flops;
+        let (mut b, problems) = setup("synth-math500", 55);
+        let p = &problems[0];
+        let n = 5usize;
+        {
+            let mut eng = Engine::new(&mut b, SsrConfig::default());
+            let _ = eng.run(p, Method::Ssr { n, tau: 7, stop: StopRule::Full }, 3).unwrap();
+        }
+        let ps = b.prefill_stats();
+        let bare = p.tokens.len() as u64 + 3;
+        // |prompt| + N·|suffix|, SPM pass riding the shared prefill
+        assert_eq!(
+            ps.target_prompt_tokens + ps.suffix_tokens + ps.spm_prompt_tokens,
+            flops::prefill_tokens_shared(n, bare, 1)
+        );
+    }
+
+    #[test]
+    fn engine_prefix_cache_hits_on_resolve() {
+        let (mut b, problems) = setup("synth-aime", 66);
+        let mut eng = Engine::new(&mut b, SsrConfig::default());
+        let m = Method::Ssr { n: 3, tau: 7, stop: StopRule::Full };
+        let _ = eng.run(&problems[0], m, 1).unwrap();
+        let _ = eng.run(&problems[0], m, 2).unwrap();
+        assert_eq!(eng.prefix.misses, 1);
+        assert_eq!(eng.prefix.hits, 1, "re-solving the same problem must hit");
     }
 
     #[test]

@@ -35,6 +35,33 @@ pub fn gamma_spec_eq9(n: usize, beta: f64, r: f64, alpha: f64) -> f64 {
     n as f64 * beta * (alpha + r)
 }
 
+/// Prompt-prefill tokens one problem costs WITHOUT prefix reuse: each
+/// of the N lanes prefills the full prompt (shared prompt P plus its
+/// per-lane strategy suffix S), and SPM methods pay one extra bare-
+/// prompt scoring prefill — the (N+1)·P + N·S the prefix-reuse tentpole
+/// removes (DESIGN.md §2).
+pub fn prefill_tokens_per_lane(n: usize, prompt: u64, suffix: u64, spm_pass: bool) -> u64 {
+    let n = n as u64;
+    (n + spm_pass as u64) * prompt + n * suffix
+}
+
+/// Prompt-prefill tokens WITH the shared-prefix fork: the prompt is
+/// prefilled once (the same pass yields the SPM scores) and each lane
+/// ingests only its suffix: P + N·S. A prefix-cache hit drops even the
+/// P term; this form is the cold-start bound.
+pub fn prefill_tokens_shared(n: usize, prompt: u64, suffix: u64) -> u64 {
+    prompt + n as u64 * suffix
+}
+
+/// Fraction of per-lane prefill tokens the shared-prefix open removes.
+pub fn prefix_prefill_saving(n: usize, prompt: u64, suffix: u64, spm_pass: bool) -> f64 {
+    let per_lane = prefill_tokens_per_lane(n, prompt, suffix, spm_pass);
+    if per_lane == 0 {
+        return 0.0;
+    }
+    1.0 - prefill_tokens_shared(n, prompt, suffix) as f64 / per_lane as f64
+}
+
 /// Expected compute per step per path, C_step = C_d + R*C_t (Eq. 3),
 /// in units of C_t.
 pub fn step_cost_ratio(r: f64, alpha: f64) -> f64 {
@@ -150,5 +177,24 @@ mod tests {
     fn gamma_handles_zero_baseline() {
         let m = MeasuredGamma::new(0.1);
         assert!(m.gamma(0.0).is_nan());
+    }
+
+    #[test]
+    fn prefill_closed_forms() {
+        // ISSUE acceptance shape: (N+1)·|prompt| + N·|suffix| -> |prompt| + N·|suffix|
+        assert_eq!(prefill_tokens_per_lane(5, 20, 1, true), 6 * 20 + 5);
+        assert_eq!(prefill_tokens_per_lane(5, 20, 0, false), 5 * 20);
+        assert_eq!(prefill_tokens_shared(5, 20, 1), 20 + 5);
+        assert_eq!(prefill_tokens_shared(5, 20, 0), 20);
+        let s = prefix_prefill_saving(5, 20, 1, true);
+        assert!((s - (1.0 - 25.0 / 125.0)).abs() < 1e-12, "{s}");
+        // saving grows with N and with prompt length
+        assert!(
+            prefix_prefill_saving(8, 20, 1, true) > prefix_prefill_saving(4, 20, 1, true)
+        );
+        assert!(
+            prefix_prefill_saving(5, 200, 1, true) > prefix_prefill_saving(5, 20, 1, true)
+        );
+        assert_eq!(prefix_prefill_saving(0, 0, 0, false), 0.0);
     }
 }

@@ -40,6 +40,13 @@ pub struct Metrics {
     pub queue_samples: u64,
     pub queue_depth_sum: u64,
     pub queue_depth_max: u64,
+    /// prefix-reuse cache gauges (scheduler `PrefixCache` totals):
+    /// solves whose prompt prefill was skipped entirely
+    pub prefix_hits: u64,
+    /// solves that prefilled a fresh shared prefix
+    pub prefix_misses: u64,
+    /// cached prefixes evicted by the capacity bound
+    pub prefix_evictions: u64,
     /// backend model-clock at the last scheduler tick (real PJRT
     /// seconds, virtual seconds on the calibrated substrate)
     pub model_secs: f64,
@@ -64,6 +71,9 @@ impl Metrics {
             queue_samples: 0,
             queue_depth_sum: 0,
             queue_depth_max: 0,
+            prefix_hits: 0,
+            prefix_misses: 0,
+            prefix_evictions: 0,
             model_secs: 0.0,
         }
     }
@@ -100,6 +110,24 @@ impl Metrics {
     /// Seconds one request waited from enqueue to lane admission.
     pub fn record_admission_wait(&mut self, wait_s: f64) {
         self.admission_waits.push(wait_s);
+    }
+
+    /// Sync the prefix-cache totals (the scheduler owns the live cache
+    /// and pushes its counters here after each admission pass).
+    pub fn set_prefix_cache(&mut self, hits: u64, misses: u64, evictions: u64) {
+        self.prefix_hits = hits;
+        self.prefix_misses = misses;
+        self.prefix_evictions = evictions;
+    }
+
+    /// Fraction of solves whose prompt prefill was served from cache.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        let total = self.prefix_hits + self.prefix_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.prefix_hits as f64 / total as f64
+        }
     }
 
     pub fn p50(&self) -> f64 {
@@ -180,6 +208,10 @@ impl Metrics {
             ("queue_depth_max", i(self.queue_depth_max as i64)),
             ("admission_wait_mean_s", n(self.mean_admission_wait())),
             ("admission_wait_p99_s", n(self.p99_admission_wait())),
+            ("prefix_hits", i(self.prefix_hits as i64)),
+            ("prefix_misses", i(self.prefix_misses as i64)),
+            ("prefix_evictions", i(self.prefix_evictions as i64)),
+            ("prefix_hit_rate", n(self.prefix_hit_rate())),
             ("model_secs", n(self.model_secs)),
         ])
     }
@@ -267,12 +299,26 @@ mod tests {
         m.record_request(0.2, true);
         m.record_batch(5);
         m.record_queue_depth(2);
+        m.set_prefix_cache(3, 1, 0);
         let v = m.summary_json(1.0);
         assert_eq!(v.get_i64("requests").unwrap(), 1);
         assert!(v.get_f64("mean_latency_s").unwrap() > 0.0);
         assert_eq!(v.get_i64("backend_calls").unwrap(), 1);
         assert!((v.get_f64("mean_batch_occupancy").unwrap() - 5.0).abs() < 1e-12);
         assert_eq!(v.get_i64("queue_depth_max").unwrap(), 2);
+        assert_eq!(v.get_i64("prefix_hits").unwrap(), 3);
+        assert_eq!(v.get_i64("prefix_misses").unwrap(), 1);
+        assert!((v.get_f64("prefix_hit_rate").unwrap() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prefix_gauges() {
+        let mut m = Metrics::new();
+        assert_eq!(m.prefix_hit_rate(), 0.0);
+        m.set_prefix_cache(2, 2, 1);
+        assert_eq!(m.prefix_hits, 2);
+        assert_eq!(m.prefix_evictions, 1);
+        assert!((m.prefix_hit_rate() - 0.5).abs() < 1e-12);
     }
 
     #[test]

@@ -9,6 +9,8 @@
 //! * [`scheduler`] — cross-request continuous batching: lane-pool
 //!   admission + one shared step batch per tick over every in-flight
 //!   problem (serving & scheduling design notes live in its docs)
+//! * [`prefix`] — cross-request prefix-reuse cache: prompts prefilled
+//!   once and forked per lane; repeated problems skip prefill entirely
 //! * [`server`] — TCP front-end feeding the scheduler
 //! * [`metrics`] — latency/throughput/occupancy/score instrumentation
 
@@ -16,9 +18,11 @@ pub mod aggregation;
 pub mod engine;
 pub mod flops;
 pub mod metrics;
+pub mod prefix;
 pub mod scheduler;
 pub mod server;
 pub mod spm;
 
 pub use engine::{Engine, Method, ProblemRun, RunResult};
+pub use prefix::PrefixCache;
 pub use scheduler::{Scheduler, SchedulerHandle, SolveRequest};

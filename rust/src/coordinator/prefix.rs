@@ -1,0 +1,224 @@
+//! Cross-request prefix-reuse cache: keep prefilled problem prompts
+//! alive across solves so repeated or re-sampled problems (pass@k,
+//! ablation sweeps, benches re-running a suite) skip prompt prefill
+//! entirely (DESIGN.md §2).
+//!
+//! The cache maps a 64-bit hash of the problem's prompt tokens (plus
+//! the draft-cache flag — a speculative fork needs a draft prefix) to a
+//! live [`PrefixHandle`]. Capacity is bounded; eviction is
+//! least-recently-used and releases the backend-side prefix state.
+//! Hit / miss / eviction counters feed the serving [`Metrics`]
+//! (`prefix_hits` etc. in `{"op":"stats"}`).
+//!
+//! Ownership: a handle returned with `retained = true` belongs to the
+//! cache (released on eviction or [`PrefixCache::clear`]); with
+//! `retained = false` (capacity 0) the caller must release it after
+//! forking. Forked lanes never dangle either way — the backend contract
+//! says lanes copy what they need at fork time.
+//!
+//! [`Metrics`]: super::metrics::Metrics
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::backend::{Backend, PrefixHandle};
+use crate::workload::Problem;
+
+/// Result of [`PrefixCache::acquire`].
+pub struct Acquired {
+    pub handle: PrefixHandle,
+    /// the cache keeps the handle alive; callers must NOT release it
+    pub retained: bool,
+    /// served from cache (no prompt prefill happened)
+    pub hit: bool,
+}
+
+impl Acquired {
+    /// A handle the caller prefilled itself and must release.
+    pub fn owned(handle: PrefixHandle) -> Self {
+        Acquired { handle, retained: false, hit: false }
+    }
+}
+
+struct Entry {
+    handle: PrefixHandle,
+    last_used: u64,
+}
+
+/// Bounded LRU cache of prefilled prompt prefixes.
+pub struct PrefixCache {
+    capacity: usize,
+    map: HashMap<u64, Entry>,
+    tick: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+impl PrefixCache {
+    pub fn new(capacity: usize) -> Self {
+        PrefixCache { capacity, map: HashMap::new(), tick: 0, hits: 0, misses: 0, evictions: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Configured capacity; 0 = caching disabled (pure passthrough).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// FNV-1a over the prompt tokens, salted with the draft flag — the
+    /// same cheap keying the calibrated hardness cache uses; collisions
+    /// at 64 bits are negligible against any sane capacity.
+    fn key(tokens: &[i32], use_draft: bool) -> u64 {
+        let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+        let mut mix = |byte: u8| {
+            h ^= byte as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        };
+        for &t in tokens {
+            for b in t.to_le_bytes() {
+                mix(b);
+            }
+        }
+        mix(use_draft as u8);
+        h
+    }
+
+    /// Return a live prefix for `problem`, prefilling on miss. LRU
+    /// eviction keeps at most `capacity` prefixes alive on the backend.
+    pub fn acquire(
+        &mut self,
+        backend: &mut dyn Backend,
+        problem: &Problem,
+        use_draft: bool,
+        want_scores: bool,
+    ) -> Result<Acquired> {
+        if self.capacity == 0 {
+            // caching disabled: behave like a plain prefill the caller owns
+            self.misses += 1;
+            return Ok(Acquired::owned(backend.prefill_prefix(problem, use_draft, want_scores)?));
+        }
+        let k = Self::key(&problem.tokens, use_draft);
+        self.tick += 1;
+        if let Some(e) = self.map.get_mut(&k) {
+            e.last_used = self.tick;
+            self.hits += 1;
+            return Ok(Acquired { handle: e.handle, retained: true, hit: true });
+        }
+        self.misses += 1;
+        // evict BEFORE prefilling so live backend prefixes never exceed
+        // the capacity, even transiently. O(capacity) scan per miss at
+        // capacity — fine for the bounded caps validate() allows; an
+        // ordered LRU is a ROADMAP item if caps ever grow.
+        if self.map.len() >= self.capacity {
+            if let Some((&old_k, _)) = self.map.iter().min_by_key(|(_, e)| e.last_used) {
+                if let Some(old) = self.map.remove(&old_k) {
+                    let _ = backend.release_prefix(old.handle);
+                    self.evictions += 1;
+                }
+            }
+        }
+        let handle = backend.prefill_prefix(problem, use_draft, want_scores)?;
+        self.map.insert(k, Entry { handle, last_used: self.tick });
+        Ok(Acquired { handle, retained: true, hit: false })
+    }
+
+    /// Release every cached prefix (scheduler drain / backend teardown).
+    pub fn clear(&mut self, backend: &mut dyn Backend) {
+        for (_, e) in self.map.drain() {
+            let _ = backend.release_prefix(e.handle);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::calibrated::CalibratedBackend;
+    use crate::model::tokenizer::builtin_vocab;
+    use crate::workload::suites;
+
+    fn problems() -> Vec<Problem> {
+        let v = builtin_vocab();
+        suites::generate(suites::spec("synth-math500").unwrap(), &v).problems
+    }
+
+    #[test]
+    fn repeat_acquire_hits_and_skips_prefill() {
+        let mut b = CalibratedBackend::for_suite("synth-math500", 1).unwrap();
+        let mut c = PrefixCache::new(8);
+        let p = &problems()[0];
+        let a1 = c.acquire(&mut b, p, true, true).unwrap();
+        assert!(!a1.hit && a1.retained);
+        let a2 = c.acquire(&mut b, p, true, false).unwrap();
+        assert!(a2.hit, "second acquire of the same problem must hit");
+        assert_eq!(a1.handle, a2.handle);
+        assert_eq!((c.hits, c.misses), (1, 1));
+        // exactly one backend prefill happened
+        assert_eq!(b.prefill_stats().prefixes, 1);
+    }
+
+    #[test]
+    fn draft_flag_is_part_of_the_key() {
+        let mut b = CalibratedBackend::for_suite("synth-math500", 2).unwrap();
+        let mut c = PrefixCache::new(8);
+        let p = &problems()[0];
+        let a1 = c.acquire(&mut b, p, false, false).unwrap();
+        let a2 = c.acquire(&mut b, p, true, false).unwrap();
+        assert!(!a2.hit, "a draftless prefix must not serve a speculative fork");
+        assert_ne!(a1.handle, a2.handle);
+    }
+
+    #[test]
+    fn capacity_bound_evicts_lru_and_releases() {
+        let mut b = CalibratedBackend::for_suite("synth-math500", 3).unwrap();
+        let mut c = PrefixCache::new(2);
+        let ps = problems();
+        let a0 = c.acquire(&mut b, &ps[0], false, false).unwrap();
+        let _a1 = c.acquire(&mut b, &ps[1], false, false).unwrap();
+        // touch p0 so p1 is the LRU victim when p2 arrives
+        let _ = c.acquire(&mut b, &ps[0], false, false).unwrap();
+        let _a2 = c.acquire(&mut b, &ps[2], false, false).unwrap();
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.evictions, 1);
+        // p0 survived the eviction (recently used, still a hit) ...
+        let p0 = c.acquire(&mut b, &ps[0], false, false).unwrap();
+        assert!(p0.hit);
+        assert_eq!(p0.handle, a0.handle);
+        // ... while p1 (the LRU) was evicted: re-acquiring misses
+        let again = c.acquire(&mut b, &ps[1], false, false).unwrap();
+        assert!(!again.hit);
+    }
+
+    #[test]
+    fn zero_capacity_passthrough_is_caller_owned() {
+        let mut b = CalibratedBackend::for_suite("synth-math500", 4).unwrap();
+        let mut c = PrefixCache::new(0);
+        let p = &problems()[0];
+        let a = c.acquire(&mut b, p, false, false).unwrap();
+        assert!(!a.retained && !a.hit);
+        assert!(c.is_empty());
+        b.release_prefix(a.handle).unwrap();
+    }
+
+    #[test]
+    fn clear_releases_everything() {
+        let mut b = CalibratedBackend::for_suite("synth-math500", 5).unwrap();
+        let mut c = PrefixCache::new(8);
+        let ps = problems();
+        let a = c.acquire(&mut b, &ps[0], false, false).unwrap();
+        let _ = c.acquire(&mut b, &ps[1], false, false).unwrap();
+        c.clear(&mut b);
+        assert!(c.is_empty());
+        // released on the backend: forking the old handle now fails
+        assert!(b.fork_paths(a.handle, &[None], 1).is_err());
+    }
+}

@@ -42,6 +42,11 @@
 //!   of that tick*: it closes its paths, votes, replies, and releases
 //!   its lanes — which the same tick's admission pass hands to the next
 //!   queued problem. Slow requests never convoy fast ones.
+//! * **Prefix reuse.** Admission opens lane groups through the shared
+//!   [`PrefixCache`]: the problem prompt is prefilled once and lanes
+//!   are forked from it; a repeated problem (pass@k, re-run suites,
+//!   benchmark sweeps) skips prompt prefill entirely. Hit / miss /
+//!   eviction gauges surface through `{"op":"stats"}`.
 //! * **Observability.** Every batched step call records its lane count
 //!   (`Metrics::record_batch` -> mean/histogram batch occupancy), every
 //!   admission pass samples queue depth, and every admitted job records
@@ -65,6 +70,7 @@ use anyhow::{anyhow, Context, Result};
 
 use super::engine::{step_tick, Method, ProblemRun};
 use super::metrics::Metrics;
+use super::prefix::PrefixCache;
 use crate::backend::Backend;
 use crate::config::{AdmitPolicy, SsrConfig};
 use crate::runtime::Vocab;
@@ -220,6 +226,9 @@ fn run_loop(
     let mut disconnected = false;
     let mut seq = 0u64;
     let max_lanes = cfg.max_lanes.max(1);
+    // cross-request prefix reuse: repeated problems (pass@k, re-run
+    // suites) fork their lanes off an already-prefilled prompt
+    let mut prefix_cache = PrefixCache::new(if cfg.prefix.enabled { cfg.prefix.capacity } else { 0 });
 
     loop {
         // --- intake ---------------------------------------------------
@@ -254,8 +263,14 @@ fn run_loop(
             }
             let job = queue.remove(pos).expect("picked index in range");
             seq += 1;
-            match ProblemRun::start(backend, cfg, &job.problem, job.req.method, job.req.seed ^ seq)
-            {
+            match ProblemRun::start_with_cache(
+                backend,
+                cfg,
+                &job.problem,
+                job.req.method,
+                job.req.seed ^ seq,
+                Some(&mut prefix_cache),
+            ) {
                 Ok(run) => {
                     lanes_used += run.lanes();
                     metrics
@@ -277,7 +292,11 @@ fn run_loop(
                 }
             }
         }
-        metrics.lock().unwrap().record_queue_depth(queue.len());
+        {
+            let mut m = metrics.lock().unwrap();
+            m.record_queue_depth(queue.len());
+            m.set_prefix_cache(prefix_cache.hits, prefix_cache.misses, prefix_cache.evictions);
+        }
 
         if inflight.is_empty() {
             continue; // queue is empty too -> back to blocking intake
@@ -331,6 +350,10 @@ fn run_loop(
             }
         }
     }
+    // drain: release the cached prefixes and flush the final gauges
+    prefix_cache.clear(backend);
+    let mut m = metrics.lock().unwrap();
+    m.set_prefix_cache(prefix_cache.hits, prefix_cache.misses, prefix_cache.evictions);
 }
 
 #[cfg(test)]
@@ -501,6 +524,44 @@ mod tests {
         drop(handle);
         join.join().unwrap();
         assert_eq!(metrics.lock().unwrap().requests, 4);
+    }
+
+    #[test]
+    fn repeated_problems_hit_the_prefix_cache() {
+        use crate::config::StopRule;
+        // ISSUE acceptance: prefix-cache hit rate > 0 on a repeated
+        // suite, visible in the serving stats.
+        let (handle, join, metrics) = spawn_test_scheduler(SsrConfig::default(), None);
+        let m = Method::Ssr { n: 3, tau: 7, stop: StopRule::Full };
+        for round in 0..3u64 {
+            for expr in ["17+25*3", "4+5*6"] {
+                let rrx = submit(&handle, expr, m, round);
+                assert!(rrx.recv().unwrap().is_ok());
+            }
+        }
+        drop(handle);
+        join.join().unwrap();
+        let m = metrics.lock().unwrap();
+        assert_eq!(m.requests, 6);
+        // 2 distinct prompts, 6 solves: 2 misses, 4 hits
+        assert_eq!(m.prefix_misses, 2, "misses {}", m.prefix_misses);
+        assert_eq!(m.prefix_hits, 4, "hits {}", m.prefix_hits);
+        assert!(m.prefix_hit_rate() > 0.5);
+    }
+
+    #[test]
+    fn prefix_reuse_off_never_caches() {
+        let mut cfg = SsrConfig::default();
+        cfg.prefix.enabled = false;
+        let (handle, join, metrics) = spawn_test_scheduler(cfg, None);
+        for _ in 0..3 {
+            let rrx = submit(&handle, "2+3", Method::Baseline, 0);
+            assert!(rrx.recv().unwrap().is_ok());
+        }
+        drop(handle);
+        join.join().unwrap();
+        let m = metrics.lock().unwrap();
+        assert_eq!(m.prefix_hits, 0);
     }
 
     #[test]

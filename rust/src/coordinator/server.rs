@@ -16,6 +16,8 @@
 //!       "mean_batch_occupancy":...,   // lanes per backend step call
 //!       "queue_depth_mean":..., "queue_depth_max":...,
 //!       "admission_wait_mean_s":..., "admission_wait_p99_s":...,
+//!       "prefix_hits":..., "prefix_misses":...,   // prefix-reuse cache
+//!       "prefix_evictions":..., "prefix_hit_rate":...,
 //!       "model_secs":...}             // backend model-clock
 //!   -> {"op":"shutdown"}
 //!

@@ -10,33 +10,28 @@
 
 use anyhow::Result;
 
-use crate::backend::Backend;
+use crate::backend::{Backend, PrefixHandle};
 use crate::config::Selection;
 use crate::model::sampler;
 use crate::util::rng::Rng;
 use crate::workload::strategies::{self, NUM_REAL_STRATEGIES};
 use crate::workload::Problem;
 
-/// Pick `n` strategies from the first `pool_size` entries of the pool.
-pub fn select(
-    backend: &mut dyn Backend,
-    problem: &Problem,
+/// Pick `n` strategies from the first `pool_size` entries of the pool,
+/// fetching model scores (only when the mode needs them) via `scores`.
+fn choose(
+    mode: Selection,
     pool_size: usize,
     n: usize,
-    mode: Selection,
+    problem: &Problem,
     rng: &mut Rng,
+    scores: &mut dyn FnMut() -> Result<Vec<f32>>,
 ) -> Result<Vec<usize>> {
     let k = pool_size.min(NUM_REAL_STRATEGIES);
     let n = n.min(k);
     Ok(match mode {
-        Selection::ModelTopN => {
-            let scores = backend.select_scores(problem)?;
-            sampler::top_n(&scores[..k], n)
-        }
-        Selection::ModelSample => {
-            let scores = backend.select_scores(problem)?;
-            sampler::sample_n_distinct(&scores[..k], n, 1.0, rng)
-        }
+        Selection::ModelTopN => sampler::top_n(&scores()?[..k], n),
+        Selection::ModelSample => sampler::sample_n_distinct(&scores()?[..k], n, 1.0, rng),
         Selection::Random => {
             let mut pool: Vec<usize> = (0..k).collect();
             rng.shuffle(&mut pool);
@@ -52,6 +47,36 @@ pub fn select(
                 .collect()
         }
     })
+}
+
+/// Pick `n` strategies from the first `pool_size` entries of the pool.
+/// Model-scored modes run a standalone bare-prompt scoring prefill.
+pub fn select(
+    backend: &mut dyn Backend,
+    problem: &Problem,
+    pool_size: usize,
+    n: usize,
+    mode: Selection,
+    rng: &mut Rng,
+) -> Result<Vec<usize>> {
+    let mut get = || backend.select_scores(problem);
+    choose(mode, pool_size, n, problem, rng, &mut get)
+}
+
+/// Like [`select`], but model-scored modes read the logits off an
+/// already-prefilled shared prefix — the "SPM rides the prefix prefill"
+/// half of the prefix-reuse tentpole: zero extra model passes.
+pub fn select_prefixed(
+    backend: &mut dyn Backend,
+    handle: PrefixHandle,
+    problem: &Problem,
+    pool_size: usize,
+    n: usize,
+    mode: Selection,
+    rng: &mut Rng,
+) -> Result<Vec<usize>> {
+    let mut get = || backend.prefix_scores(handle);
+    choose(mode, pool_size, n, problem, rng, &mut get)
 }
 
 /// Quality of a selection: mean aptitude of the chosen strategies for the
@@ -127,6 +152,27 @@ mod tests {
             let so = select(&mut b, p, 12, 3, Selection::Oracle, &mut rng).unwrap();
             let sm = select(&mut b, p, 12, 3, Selection::ModelTopN, &mut rng).unwrap();
             assert!(selection_quality(&so, p) >= selection_quality(&sm, p) - 1e-9);
+        }
+    }
+
+    #[test]
+    fn prefixed_selection_matches_standalone() {
+        // The SPM logits riding a shared prefix are the very numbers a
+        // standalone scoring prefill would produce.
+        for (i, p) in problems().iter().take(6).enumerate() {
+            let mut a = CalibratedBackend::for_suite("synth-livemath", 40 + i as u64).unwrap();
+            let mut b = CalibratedBackend::for_suite("synth-livemath", 40 + i as u64).unwrap();
+            let mut rng_a = Rng::new(10);
+            let mut rng_b = Rng::new(10);
+            let sa = select(&mut a, p, 12, 5, Selection::ModelTopN, &mut rng_a).unwrap();
+            let h = b.prefill_prefix(p, false, true).unwrap();
+            let sb =
+                select_prefixed(&mut b, h, p, 12, 5, Selection::ModelTopN, &mut rng_b).unwrap();
+            b.release_prefix(h).unwrap();
+            assert_eq!(sa, sb, "problem {i}");
+            // and no standalone SPM prefill tokens were spent
+            assert_eq!(b.prefill_stats().spm_prompt_tokens, 0);
+            assert!(a.prefill_stats().spm_prompt_tokens > 0);
         }
     }
 

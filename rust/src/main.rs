@@ -12,6 +12,8 @@
 //! ```
 //! Shared engine flags: --paths N --tau T --temp X --stop full|fast1|fast2
 //! --selection model-top|model-sample|random|oracle --seed S --artifacts DIR
+//! --prefix-reuse on|off --prefix-cache-cap N   (shared-prefix prefill +
+//! cross-request prefix cache; see DESIGN.md §2)
 //!
 //! `serve` runs the cross-request scheduler: concurrent solves share
 //! backend step batches inside a `--max-lanes` lane pool (see
@@ -23,10 +25,9 @@ use std::path::PathBuf;
 use anyhow::{bail, Context, Result};
 
 use ssr::backend::calibrated::CalibratedBackend;
-use ssr::backend::pjrt::PjrtBackend;
 use ssr::backend::Backend;
-use ssr::config::{SsrConfig, StopRule};
-use ssr::coordinator::engine::{Engine, Method};
+use ssr::config::SsrConfig;
+use ssr::coordinator::engine::Engine;
 use ssr::coordinator::server::{parse_method, Server};
 use ssr::eval::experiments::{self, ExpOpts};
 use ssr::model::tokenizer;
@@ -59,22 +60,38 @@ fn make_factory(
             "calibrated" => {
                 Ok(Box::new(CalibratedBackend::for_suite(suite, seed)?) as Box<dyn Backend>)
             }
-            "pjrt" => {
-                let mut b = PjrtBackend::load(&dir)?;
-                b.temp = temp;
-                b.max_steps = max_steps;
-                Ok(Box::new(b) as Box<dyn Backend>)
-            }
+            "pjrt" => load_pjrt(&dir, temp, max_steps),
             other => bail!("unknown backend `{other}` (pjrt|calibrated)"),
         }
     }
+}
+
+#[cfg(feature = "pjrt")]
+fn load_pjrt(dir: &std::path::Path, temp: f32, max_steps: usize) -> Result<Box<dyn Backend>> {
+    let mut b = ssr::backend::pjrt::PjrtBackend::load(dir)?;
+    b.temp = temp;
+    b.max_steps = max_steps;
+    Ok(Box::new(b) as Box<dyn Backend>)
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn load_pjrt(_dir: &std::path::Path, _temp: f32, _max_steps: usize) -> Result<Box<dyn Backend>> {
+    bail!(
+        "this binary was built without the `pjrt` feature. Enabling it needs \
+         the vendored `xla` crate: add `xla = {{ path = ... }}` to \
+         rust/Cargo.toml (see the note there), then rebuild with \
+         `--features pjrt` — or use `--backend calibrated`"
+    )
 }
 
 fn run() -> Result<()> {
     let mut args = Args::from_env()?;
     let mut cfg = SsrConfig::default();
     cfg.apply_args(&mut args)?;
-    let backend_kind = args.opt_str("backend", "pjrt");
+    // default to the backend this build actually ships: pjrt when the
+    // feature is compiled in, the calibrated substrate otherwise
+    let default_backend = if cfg!(feature = "pjrt") { "pjrt" } else { "calibrated" };
+    let backend_kind = args.opt_str("backend", default_backend);
 
     match args.command.clone().as_deref() {
         Some("solve") => {
@@ -116,8 +133,8 @@ fn run() -> Result<()> {
             let seed = cfg.seed;
             let factory_once = move || factory(&suite, seed);
             println!(
-                "scheduler: max_lanes={} admission={:?}",
-                cfg.max_lanes, cfg.admission
+                "scheduler: max_lanes={} admission={:?} prefix_reuse={} prefix_cache_cap={}",
+                cfg.max_lanes, cfg.admission, cfg.prefix.enabled, cfg.prefix.capacity
             );
             let (server, listener) = Server::start(&host, port, cfg, vocab, factory_once)?;
             println!("listening on {}", server.addr);
@@ -186,7 +203,12 @@ fn run_experiment(
 
 /// Load artifacts, run one SSR problem end-to-end on the PJRT backend,
 /// print timing — the fastest way to verify an installation.
+#[cfg(feature = "pjrt")]
 fn selfcheck(cfg: &SsrConfig) -> Result<()> {
+    use ssr::backend::pjrt::PjrtBackend;
+    use ssr::config::StopRule;
+    use ssr::coordinator::engine::Method;
+
     let dir = artifacts_dir(cfg);
     println!("artifacts: {dir:?}");
     let mut b = PjrtBackend::load(&dir)?;
@@ -213,4 +235,12 @@ fn selfcheck(cfg: &SsrConfig) -> Result<()> {
     );
     println!("selfcheck OK");
     Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn selfcheck(_cfg: &SsrConfig) -> Result<()> {
+    bail!(
+        "selfcheck drives the real PJRT backend; vendor the `xla` crate \
+         (see rust/Cargo.toml) and rebuild with `--features pjrt`"
+    )
 }

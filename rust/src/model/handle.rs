@@ -266,6 +266,57 @@ impl ModelHandle {
     pub fn flops_per_token(&self) -> u64 {
         self.spec.flops_per_token
     }
+
+    /// Fork a prefilled prompt prefix into a fresh lane-group cache:
+    /// gather lane `src_lane`'s K/V rows and broadcast them across a
+    /// `[L, B', H, S, D]` cache whose batch B' is the compiled prefill
+    /// variant fitting `n` lanes — the device-layout op behind
+    /// `PjrtBackend::fork_paths` (DESIGN.md §2). Host-side relayout:
+    /// one gather + one upload per model, amortized over the whole lane
+    /// group and every subsequent fork of the same prefix.
+    pub fn fork_cache(&self, src: &KvCache, src_lane: usize, n: usize) -> Result<KvCache> {
+        let b_new = self.pick_batch(EntryKind::Prefill, n)?;
+        let k = broadcast_lane_literal(&src.k, src_lane, b_new)?;
+        let v = broadcast_lane_literal(&src.v, src_lane, b_new)?;
+        Ok(KvCache { k, v, batch: b_new })
+    }
+}
+
+/// Broadcast one lane of a `[L, B, ...]` cache literal into a fresh
+/// `[L, B', ...]` literal with every lane a copy of `lane`.
+fn broadcast_lane_literal(lit: &Literal, lane: usize, b_new: usize) -> Result<Literal> {
+    let d = crate::runtime::literals::dims(lit)?;
+    if d.len() != 5 {
+        bail!("cache literal must be [L, B, H, S, D], got {d:?}");
+    }
+    let (l, b) = (d[0], d[1]);
+    if lane >= b {
+        bail!("fork source lane {lane} out of batch {b}");
+    }
+    let row = d[2] * d[3] * d[4];
+    let src = crate::runtime::literals::to_vec_f32(lit)?;
+    let out = broadcast_lane(&src, l, b, lane, b_new, row);
+    crate::runtime::literals::lit_f32(&out, &[l, b_new, d[2], d[3], d[4]])
+}
+
+/// Pure relayout behind [`broadcast_lane_literal`]: `row` is the
+/// flattened per-lane element count (H·S·D for a KV cache).
+fn broadcast_lane(
+    src: &[f32],
+    l: usize,
+    b: usize,
+    lane: usize,
+    b_new: usize,
+    row: usize,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; l * b_new * row];
+    for li in 0..l {
+        let s = &src[(li * b + lane) * row..(li * b + lane + 1) * row];
+        for bi in 0..b_new {
+            out[(li * b_new + bi) * row..(li * b_new + bi + 1) * row].copy_from_slice(s);
+        }
+    }
+    out
 }
 
 fn pad_to(xs: &[i32], b: usize, fill: i32) -> Vec<i32> {
@@ -305,5 +356,32 @@ mod tests {
     fn pad_to_extends_and_preserves() {
         assert_eq!(pad_to(&[1, 2], 4, 0), vec![1, 2, 0, 0]);
         assert_eq!(pad_to(&[1, 2, 3], 3, 9), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn broadcast_lane_copies_source_row_everywhere() {
+        // L=2, B=2, row=3 (H·S·D flattened); broadcast lane 1 into B'=3
+        let src: Vec<f32> = (0..12).map(|x| x as f32).collect();
+        let out = broadcast_lane(&src, 2, 2, 1, 3, 3);
+        assert_eq!(out.len(), 2 * 3 * 3);
+        // layer 0: lane 1 of src is elements 3..6
+        for bi in 0..3 {
+            assert_eq!(&out[bi * 3..bi * 3 + 3], &src[3..6], "layer 0 lane {bi}");
+        }
+        // layer 1: lane 1 of src is elements 9..12
+        for bi in 0..3 {
+            assert_eq!(
+                &out[(3 + bi) * 3..(3 + bi) * 3 + 3],
+                &src[9..12],
+                "layer 1 lane {bi}"
+            );
+        }
+    }
+
+    #[test]
+    fn broadcast_lane_shrinks_too() {
+        let src: Vec<f32> = (0..8).map(|x| x as f32).collect(); // L=1,B=4,row=2
+        let out = broadcast_lane(&src, 1, 4, 0, 1, 2);
+        assert_eq!(out, vec![0.0, 1.0]);
     }
 }

@@ -2,8 +2,10 @@
 //! transformers (handles + KV caches), the shared tokenizer/grammar, and
 //! host-side sampling.
 
+#[cfg(feature = "pjrt")]
 pub mod handle;
 pub mod sampler;
 pub mod tokenizer;
 
+#[cfg(feature = "pjrt")]
 pub use handle::{IngestOut, KvCache, ModelHandle, PrefillOut, SpanOut};

@@ -4,11 +4,19 @@
 //! kernels) to HLO text under `artifacts/`; this module loads, compiles
 //! and executes them. Python is never on the request path.
 
+// The PJRT execution layer needs the `xla` crate, which the default
+// (calibrated-only) build does not link; `manifest` is dependency-free
+// and always available (suites, vocab, strategy metadata).
+#[cfg(feature = "pjrt")]
 pub mod client;
+#[cfg(feature = "pjrt")]
 pub mod literals;
 pub mod manifest;
+#[cfg(feature = "pjrt")]
 pub mod weights;
 
+#[cfg(feature = "pjrt")]
 pub use client::{Runtime, RuntimeStats};
 pub use manifest::{EntryKind, EntrySpec, Manifest, ModelSpec, Vocab};
+#[cfg(feature = "pjrt")]
 pub use weights::Weights;

@@ -1,17 +1,13 @@
 //! Integration tests across runtime + model + coordinator.
 //!
-//! PJRT tests require `make artifacts` to have run; they skip (with a
-//! note) when artifacts are absent so `cargo test` stays green on a
-//! fresh checkout.
+//! PJRT tests require the `pjrt` feature AND `make artifacts` to have
+//! run; they are compiled out / skip (with a note) otherwise so
+//! `cargo test` stays green on a fresh checkout.
 
 use std::path::PathBuf;
 
-use ssr::backend::pjrt::PjrtBackend;
-use ssr::backend::Backend;
-use ssr::config::{SsrConfig, StopRule};
-use ssr::coordinator::engine::{Engine, Method};
 use ssr::model::tokenizer;
-use ssr::workload::{problems, suites};
+use ssr::workload::suites;
 
 fn artifacts() -> Option<PathBuf> {
     let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -62,121 +58,133 @@ fn python_suites_match_rust_generator() {
     }
 }
 
-#[test]
-fn pjrt_baseline_generates_valid_trace() {
-    let dir = require_artifacts!();
-    let mut b = PjrtBackend::load(&dir).unwrap();
-    b.temp = 0.0; // greedy: deterministic
-    let vocab = b.manifest().vocab.clone();
-    let problem = problems::problem_from_text(&vocab, "23+4+9").unwrap();
-    let mut engine = Engine::new(&mut b, SsrConfig::default());
-    let r = engine.run(&problem, Method::Baseline, 1).unwrap();
-    assert_eq!(r.votes.len(), 1);
-    assert_eq!(r.draft_tokens, 0);
-    assert!(r.target_tokens > 10, "target did no work: {}", r.target_tokens);
-    // trained target solves easy add-chains greedily
-    assert_eq!(r.answer(), Some(36), "trained target should solve 23+4+9");
-}
 
-#[test]
-fn pjrt_ssr_full_cycle() {
-    let dir = require_artifacts!();
-    let mut b = PjrtBackend::load(&dir).unwrap();
-    b.temp = 0.6;
-    let vocab = b.manifest().vocab.clone();
-    let problem = problems::problem_from_text(&vocab, "17+25*3").unwrap();
-    let mut engine = Engine::new(&mut b, SsrConfig::default());
-    let r = engine
-        .run(&problem, Method::Ssr { n: 3, tau: 7, stop: StopRule::Full }, 11)
-        .unwrap();
-    assert_eq!(r.votes.len(), 3);
-    assert_eq!(r.selection.len(), 3);
-    assert!(r.draft_tokens > 0, "draft did no work");
-    assert!(r.score_tokens > 0, "nothing was scored");
-    assert!(r.steps >= 3, "suspiciously few steps: {}", r.steps);
-    // every vote that produced an answer must be a parseable number
-    for v in &r.votes {
-        if let Some(a) = v.answer {
-            assert!((0..=10_000).contains(&a), "absurd answer {a}");
-        }
-    }
-}
+#[cfg(feature = "pjrt")]
+mod pjrt_tests {
+    use super::{artifacts, tokenizer};
 
-#[test]
-fn pjrt_deterministic_under_greedy() {
-    let dir = require_artifacts!();
-    let vocab = tokenizer::builtin_vocab();
-    let problem = problems::problem_from_text(&vocab, "12+34").unwrap();
-    let run = |seed: u64| {
+    use ssr::backend::pjrt::PjrtBackend;
+    use ssr::backend::Backend;
+    use ssr::config::{SsrConfig, StopRule};
+    use ssr::coordinator::engine::{Engine, Method};
+    use ssr::workload::problems;
+
+    #[test]
+    fn pjrt_baseline_generates_valid_trace() {
+        let dir = require_artifacts!();
         let mut b = PjrtBackend::load(&dir).unwrap();
-        b.temp = 0.0;
+        b.temp = 0.0; // greedy: deterministic
+        let vocab = b.manifest().vocab.clone();
+        let problem = problems::problem_from_text(&vocab, "23+4+9").unwrap();
         let mut engine = Engine::new(&mut b, SsrConfig::default());
-        engine.run(&problem, Method::Baseline, seed).unwrap().answer()
-    };
-    assert_eq!(run(1), run(2), "greedy baseline must not depend on seed");
-}
-
-#[test]
-fn pjrt_spec_reason_rewrites_when_tau_high() {
-    let dir = require_artifacts!();
-    let mut b = PjrtBackend::load(&dir).unwrap();
-    b.temp = 0.7;
-    let vocab = b.manifest().vocab.clone();
-    let problem = problems::problem_from_text(&vocab, "(31+17)*2-5").unwrap();
-    let mut engine = Engine::new(&mut b, SsrConfig::default());
-    let r = engine.run(&problem, Method::SpecReason { tau: 9 }, 3).unwrap();
-    // tau=9 accepts only near-certain steps; the 28%-accuracy draft
-    // cannot be near-certain everywhere
-    assert!(r.rewrites > 0, "tau=9 should trigger rewrites");
-    let r0 = engine.run(&problem, Method::SpecReason { tau: 0 }, 3).unwrap();
-    assert_eq!(r0.rewrites, 0, "tau=0 accepts everything");
-}
-
-#[test]
-fn pjrt_score_histogram_populates() {
-    let dir = require_artifacts!();
-    let mut b = PjrtBackend::load(&dir).unwrap();
-    let vocab = b.manifest().vocab.clone();
-    let problem = problems::problem_from_text(&vocab, "8+15+22").unwrap();
-    {
-        let mut engine = Engine::new(&mut b, SsrConfig::default());
-        let _ = engine
-            .run(&problem, Method::Ssr { n: 2, tau: 7, stop: StopRule::Full }, 5)
-            .unwrap();
+        let r = engine.run(&problem, Method::Baseline, 1).unwrap();
+        assert_eq!(r.votes.len(), 1);
+        assert_eq!(r.draft_tokens, 0);
+        assert!(r.target_tokens > 10, "target did no work: {}", r.target_tokens);
+        // trained target solves easy add-chains greedily
+        assert_eq!(r.answer(), Some(36), "trained target should solve 23+4+9");
     }
-    assert!(b.score_histogram().total() > 0);
-}
 
-#[test]
-fn step_grader_on_real_traces() {
-    // The target's greedy traces on easy problems should have mostly
-    // arithmetically-correct steps.
-    let dir = require_artifacts!();
-    let mut b = PjrtBackend::load(&dir).unwrap();
-    b.temp = 0.0;
-    let vocab = b.manifest().vocab.clone();
-    let mut graded = 0;
-    let mut total_correctness = 0.0;
-    for expr in ["23+4+9", "12+7", "5+6+8"] {
-        let problem = problems::problem_from_text(&vocab, expr).unwrap();
-        let ids = b.open_paths(&problem, &[None], 1, false).unwrap();
-        for _ in 0..10 {
-            let o = b.target_step(&ids).unwrap();
-            if o[0].terminal {
-                break;
+    #[test]
+    fn pjrt_ssr_full_cycle() {
+        let dir = require_artifacts!();
+        let mut b = PjrtBackend::load(&dir).unwrap();
+        b.temp = 0.6;
+        let vocab = b.manifest().vocab.clone();
+        let problem = problems::problem_from_text(&vocab, "17+25*3").unwrap();
+        let mut engine = Engine::new(&mut b, SsrConfig::default());
+        let r = engine
+            .run(&problem, Method::Ssr { n: 3, tau: 7, stop: StopRule::Full }, 11)
+            .unwrap();
+        assert_eq!(r.votes.len(), 3);
+        assert_eq!(r.selection.len(), 3);
+        assert!(r.draft_tokens > 0, "draft did no work");
+        assert!(r.score_tokens > 0, "nothing was scored");
+        assert!(r.steps >= 3, "suspiciously few steps: {}", r.steps);
+        // every vote that produced an answer must be a parseable number
+        for v in &r.votes {
+            if let Some(a) = v.answer {
+                assert!((0..=10_000).contains(&a), "absurd answer {a}");
             }
         }
-        let trace = b.trace(ids[0]).to_vec();
-        b.close_path(ids[0]).unwrap();
-        if let Some(c) = tokenizer::step_correctness(&vocab, &trace) {
-            graded += 1;
-            total_correctness += c;
-        }
     }
-    assert!(graded >= 2, "traces had no gradable steps");
-    assert!(
-        total_correctness / graded as f64 > 0.5,
-        "trained target's steps mostly wrong: {}",
-        total_correctness / graded as f64
-    );
+
+    #[test]
+    fn pjrt_deterministic_under_greedy() {
+        let dir = require_artifacts!();
+        let vocab = tokenizer::builtin_vocab();
+        let problem = problems::problem_from_text(&vocab, "12+34").unwrap();
+        let run = |seed: u64| {
+            let mut b = PjrtBackend::load(&dir).unwrap();
+            b.temp = 0.0;
+            let mut engine = Engine::new(&mut b, SsrConfig::default());
+            engine.run(&problem, Method::Baseline, seed).unwrap().answer()
+        };
+        assert_eq!(run(1), run(2), "greedy baseline must not depend on seed");
+    }
+
+    #[test]
+    fn pjrt_spec_reason_rewrites_when_tau_high() {
+        let dir = require_artifacts!();
+        let mut b = PjrtBackend::load(&dir).unwrap();
+        b.temp = 0.7;
+        let vocab = b.manifest().vocab.clone();
+        let problem = problems::problem_from_text(&vocab, "(31+17)*2-5").unwrap();
+        let mut engine = Engine::new(&mut b, SsrConfig::default());
+        let r = engine.run(&problem, Method::SpecReason { tau: 9 }, 3).unwrap();
+        // tau=9 accepts only near-certain steps; the 28%-accuracy draft
+        // cannot be near-certain everywhere
+        assert!(r.rewrites > 0, "tau=9 should trigger rewrites");
+        let r0 = engine.run(&problem, Method::SpecReason { tau: 0 }, 3).unwrap();
+        assert_eq!(r0.rewrites, 0, "tau=0 accepts everything");
+    }
+
+    #[test]
+    fn pjrt_score_histogram_populates() {
+        let dir = require_artifacts!();
+        let mut b = PjrtBackend::load(&dir).unwrap();
+        let vocab = b.manifest().vocab.clone();
+        let problem = problems::problem_from_text(&vocab, "8+15+22").unwrap();
+        {
+            let mut engine = Engine::new(&mut b, SsrConfig::default());
+            let _ = engine
+                .run(&problem, Method::Ssr { n: 2, tau: 7, stop: StopRule::Full }, 5)
+                .unwrap();
+        }
+        assert!(b.score_histogram().total() > 0);
+    }
+
+    #[test]
+    fn step_grader_on_real_traces() {
+        // The target's greedy traces on easy problems should have mostly
+        // arithmetically-correct steps.
+        let dir = require_artifacts!();
+        let mut b = PjrtBackend::load(&dir).unwrap();
+        b.temp = 0.0;
+        let vocab = b.manifest().vocab.clone();
+        let mut graded = 0;
+        let mut total_correctness = 0.0;
+        for expr in ["23+4+9", "12+7", "5+6+8"] {
+            let problem = problems::problem_from_text(&vocab, expr).unwrap();
+            let ids = b.open_paths(&problem, &[None], 1, false).unwrap();
+            for _ in 0..10 {
+                let o = b.target_step(&ids).unwrap();
+                if o[0].terminal {
+                    break;
+                }
+            }
+            let trace = b.trace(ids[0]).to_vec();
+            b.close_path(ids[0]).unwrap();
+            if let Some(c) = tokenizer::step_correctness(&vocab, &trace) {
+                graded += 1;
+                total_correctness += c;
+            }
+        }
+        assert!(graded >= 2, "traces had no gradable steps");
+        assert!(
+            total_correctness / graded as f64 > 0.5,
+            "trained target's steps mostly wrong: {}",
+            total_correctness / graded as f64
+        );
+    }
 }

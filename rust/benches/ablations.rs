@@ -1,10 +1,13 @@
 //! Design-choice ablations (DESIGN.md §7): the rewrite-threshold sweep
 //! behind the paper's Appendix-C tau=7 choice, and the SPM
-//! selection-mode ablation (random vs model-internal vs oracle).
+//! selection-mode ablation (random vs model-internal vs oracle). Emits
+//! a BENCH_JSON line for the tracker.
 mod common;
 use ssr::eval::experiments;
+use ssr::util::json;
 
 fn main() {
+    let t0 = std::time::Instant::now();
     common::run_timed("ablations", || {
         let mut f = common::calibrated_factory();
         let mut out =
@@ -16,4 +19,5 @@ fn main() {
         )?);
         Ok(out)
     });
+    common::bench_json("ablations", vec![("wall_s", json::n(t0.elapsed().as_secs_f64()))]);
 }

@@ -58,3 +58,29 @@ pub fn run_timed(name: &str, f: impl FnOnce() -> Result<String>) {
         }
     }
 }
+
+/// Emit the one-line machine-readable summary the trajectory tracker
+/// scrapes (same format as `serving_scheduler` / `prefix_reuse`): the
+/// bench name plus whatever scalars characterize the run.
+pub fn bench_json(name: &str, mut pairs: Vec<(&str, ssr::util::json::Value)>) {
+    let mut all = vec![("bench", ssr::util::json::s(name))];
+    all.append(&mut pairs);
+    println!("\nBENCH_JSON {}", ssr::util::json::obj(all).print());
+}
+
+/// Mean pass@1 (and gamma) across suites for one method name out of a
+/// `MethodRow` table — the headline scalars the fig/table benches track.
+pub fn mean_row(
+    rows: &[ssr::eval::experiments::MethodRow],
+    method: &str,
+) -> (f64, f64) {
+    let sel: Vec<_> = rows.iter().filter(|r| r.method == method).collect();
+    if sel.is_empty() {
+        return (0.0, 0.0);
+    }
+    let n = sel.len() as f64;
+    (
+        sel.iter().map(|r| r.pass1).sum::<f64>() / n,
+        sel.iter().map(|r| r.gamma).sum::<f64>() / n,
+    )
+}

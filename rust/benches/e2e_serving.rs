@@ -38,6 +38,10 @@ fn timeit<T>(reps: usize, mut f: impl FnMut() -> T) -> (f64, T) {
 #[cfg(not(feature = "pjrt"))]
 fn main() -> anyhow::Result<()> {
     println!("[bench e2e_serving] skipped: built without the `pjrt` feature");
+    common::bench_json(
+        "e2e_serving",
+        vec![("skipped", ssr::util::json::Value::Bool(true))],
+    );
     Ok(())
 }
 
@@ -46,6 +50,10 @@ fn main() -> anyhow::Result<()> {
     let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !dir.join("manifest.json").exists() {
         println!("[bench e2e_serving] skipped: run `make artifacts` first");
+        common::bench_json(
+            "e2e_serving",
+            vec![("skipped", ssr::util::json::Value::Bool(true))],
+        );
         return Ok(());
     }
     let t_start = Instant::now();
@@ -128,6 +136,13 @@ fn main() -> anyhow::Result<()> {
     }
 
     let _ = tokenizer::builtin_vocab();
+    common::bench_json(
+        "e2e_serving",
+        vec![
+            ("skipped", ssr::util::json::Value::Bool(false)),
+            ("wall_s", ssr::util::json::n(t_start.elapsed().as_secs_f64())),
+        ],
+    );
     println!("\n[bench e2e_serving] completed in {:.1}s", t_start.elapsed().as_secs_f64());
     Ok(())
 }

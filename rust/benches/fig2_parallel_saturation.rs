@@ -1,11 +1,44 @@
 //! Regenerates Fig. 2: pass@1 vs number of parallel paths (1..10) on the
-//! three suites — the diminishing-returns study motivating SPM.
+//! three suites — the diminishing-returns study motivating SPM. Emits a
+//! BENCH_JSON line (n=1/5/10 pass@1 per suite) for the tracker.
 mod common;
 use ssr::eval::experiments;
+use ssr::util::json;
 
 fn main() {
-    common::run_timed("fig2", || {
-        let mut f = common::calibrated_factory();
-        experiments::fig2(&mut f, &common::default_cfg(), &common::bench_opts())
-    });
+    let t0 = std::time::Instant::now();
+    let mut f = common::calibrated_factory();
+    let (points, text) =
+        match experiments::fig2(&mut f, &common::default_cfg(), &common::bench_opts()) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("[bench fig2] error: {e:#}");
+                std::process::exit(1);
+            }
+        };
+    println!("{text}");
+
+    let at = |suite: &str, n: usize| {
+        points
+            .iter()
+            .find(|p| p.suite == suite && p.n == n)
+            .map(|p| p.pass1)
+            .unwrap_or(0.0)
+    };
+    common::bench_json(
+        "fig2",
+        vec![
+            ("aime_n1", json::n(at("synth-aime", 1))),
+            ("aime_n5", json::n(at("synth-aime", 5))),
+            ("aime_n10", json::n(at("synth-aime", 10))),
+            ("math500_n1", json::n(at("synth-math500", 1))),
+            ("math500_n5", json::n(at("synth-math500", 5))),
+            ("math500_n10", json::n(at("synth-math500", 10))),
+            ("livemath_n1", json::n(at("synth-livemath", 1))),
+            ("livemath_n5", json::n(at("synth-livemath", 5))),
+            ("livemath_n10", json::n(at("synth-livemath", 10))),
+            ("wall_s", json::n(t0.elapsed().as_secs_f64())),
+        ],
+    );
+    println!("[bench fig2] completed in {:.2}s", t0.elapsed().as_secs_f64());
 }

@@ -1,11 +1,42 @@
 //! Regenerates Fig. 3: pass@1 vs computational efficiency (1/gamma) for
 //! Baseline / Parallel / Parallel-SPM / SSR-m3 / SSR-m5 on each suite.
+//! Emits a BENCH_JSON line (cross-suite mean pass@1 + gamma per method).
 mod common;
 use ssr::eval::experiments;
+use ssr::util::json;
 
 fn main() {
-    common::run_timed("fig3", || {
-        let mut f = common::calibrated_factory();
-        Ok(experiments::fig3(&mut f, &common::default_cfg(), &common::bench_opts())?.1)
-    });
+    let t0 = std::time::Instant::now();
+    let mut f = common::calibrated_factory();
+    let (rows, text) =
+        match experiments::fig3(&mut f, &common::default_cfg(), &common::bench_opts()) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("[bench fig3] error: {e:#}");
+                std::process::exit(1);
+            }
+        };
+    println!("{text}");
+
+    let (base_p1, _) = common::mean_row(&rows, "baseline");
+    let (par_p1, par_g) = common::mean_row(&rows, "parallel-5");
+    let (spm_p1, spm_g) = common::mean_row(&rows, "parallel-spm-5");
+    let (ssr3_p1, ssr3_g) = common::mean_row(&rows, "ssr-m3");
+    let (ssr5_p1, ssr5_g) = common::mean_row(&rows, "ssr-m5");
+    common::bench_json(
+        "fig3",
+        vec![
+            ("baseline_pass1", json::n(base_p1)),
+            ("parallel5_pass1", json::n(par_p1)),
+            ("parallel5_gamma", json::n(par_g)),
+            ("spm5_pass1", json::n(spm_p1)),
+            ("spm5_gamma", json::n(spm_g)),
+            ("ssr3_pass1", json::n(ssr3_p1)),
+            ("ssr3_gamma", json::n(ssr3_g)),
+            ("ssr5_pass1", json::n(ssr5_p1)),
+            ("ssr5_gamma", json::n(ssr5_g)),
+            ("wall_s", json::n(t0.elapsed().as_secs_f64())),
+        ],
+    );
+    println!("[bench fig3] completed in {:.2}s", t0.elapsed().as_secs_f64());
 }

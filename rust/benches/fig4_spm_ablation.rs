@@ -1,11 +1,35 @@
 //! Regenerates Fig. 4: the SPM ablation (Baseline vs Parallel vs
-//! Parallel-SPM at N=5, SSD disabled).
+//! Parallel-SPM at N=5, SSD disabled). Emits a BENCH_JSON line with the
+//! cross-suite means (the SPM delta is the tracked number).
 mod common;
 use ssr::eval::experiments;
+use ssr::util::json;
 
 fn main() {
-    common::run_timed("fig4", || {
-        let mut f = common::calibrated_factory();
-        Ok(experiments::fig4(&mut f, &common::default_cfg(), &common::bench_opts())?.1)
-    });
+    let t0 = std::time::Instant::now();
+    let mut f = common::calibrated_factory();
+    let (rows, text) =
+        match experiments::fig4(&mut f, &common::default_cfg(), &common::bench_opts()) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("[bench fig4] error: {e:#}");
+                std::process::exit(1);
+            }
+        };
+    println!("{text}");
+
+    let (base_p1, _) = common::mean_row(&rows, "baseline");
+    let (par_p1, _) = common::mean_row(&rows, "parallel-5");
+    let (spm_p1, _) = common::mean_row(&rows, "parallel-spm-5");
+    common::bench_json(
+        "fig4",
+        vec![
+            ("baseline_pass1", json::n(base_p1)),
+            ("parallel5_pass1", json::n(par_p1)),
+            ("spm5_pass1", json::n(spm_p1)),
+            ("spm_delta", json::n(spm_p1 - par_p1)),
+            ("wall_s", json::n(t0.elapsed().as_secs_f64())),
+        ],
+    );
+    println!("[bench fig4] completed in {:.2}s", t0.elapsed().as_secs_f64());
 }

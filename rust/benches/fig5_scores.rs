@@ -1,20 +1,46 @@
 //! Regenerates Fig. 5: the 0..9 step-score distribution + cumulative
 //! curve justifying tau = 7. Uses the REAL PJRT backend when artifacts
 //! are built (actual target-model scores of actual draft steps), else
-//! the calibrated distribution.
+//! the calibrated distribution. Emits a BENCH_JSON line (below-tau
+//! fraction + sample count).
 mod common;
 use ssr::eval::experiments::{self, ExpOpts};
+use ssr::util::json;
 
 fn main() {
-    common::run_timed("fig5", || {
+    let t0 = std::time::Instant::now();
+    let run = || -> anyhow::Result<(ssr::util::stats::Histogram, String, bool)> {
         let opts = ExpOpts { trials: 1, max_problems: 8 };
         if let Some(mut f) = common::pjrt_factory() {
             println!("(real PJRT backend)");
-            Ok(experiments::fig5(&mut f, &common::default_cfg(), &opts)?.1)
+            let (h, t) = experiments::fig5(&mut f, &common::default_cfg(), &opts)?;
+            Ok((h, t, true))
         } else {
             println!("(calibrated backend — run `make artifacts` for real scores)");
             let mut f = common::calibrated_factory();
-            Ok(experiments::fig5(&mut f, &common::default_cfg(), &common::bench_opts())?.1)
+            let (h, t) = experiments::fig5(&mut f, &common::default_cfg(), &common::bench_opts())?;
+            Ok((h, t, false))
         }
-    });
+    };
+    let (hist, text, real) = match run() {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("[bench fig5] error: {e:#}");
+            std::process::exit(1);
+        }
+    };
+    println!("{text}");
+
+    // cumulative()[6] = fraction of scores <= 6, i.e. below tau = 7
+    let below_tau = hist.cumulative().get(6).copied().unwrap_or(0.0);
+    common::bench_json(
+        "fig5",
+        vec![
+            ("below_tau_frac", json::n(below_tau)),
+            ("samples", json::i(hist.total() as i64)),
+            ("real_backend", ssr::util::json::Value::Bool(real)),
+            ("wall_s", json::n(t0.elapsed().as_secs_f64())),
+        ],
+    );
+    println!("[bench fig5] completed in {:.2}s", t0.elapsed().as_secs_f64());
 }

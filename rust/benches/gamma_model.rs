@@ -1,11 +1,16 @@
 //! Appendix B check: analytic gamma (Eqs. 6/8/11 and the Eq. 9 variant)
-//! vs the measured token ledger.
+//! vs the measured token ledger. Emits a BENCH_JSON line for the
+//! tracker (presence + wall time; the analytic-vs-measured assertions
+//! live in `eval::experiments::tests`).
 mod common;
 use ssr::eval::experiments;
+use ssr::util::json;
 
 fn main() {
+    let t0 = std::time::Instant::now();
     common::run_timed("gamma", || {
         let mut f = common::calibrated_factory();
         experiments::gamma_check(&mut f, &common::default_cfg(), &common::bench_opts())
     });
+    common::bench_json("gamma", vec![("wall_s", json::n(t0.elapsed().as_secs_f64()))]);
 }

@@ -1,11 +1,36 @@
 //! Regenerates Table 1: baseline / spec-reason(7,9) / SSR-Fast-1 /
-//! SSR-Fast-2 / SSR with pass@1, pass@3 and time on each suite.
+//! SSR-Fast-2 / SSR with pass@1, pass@3 and time on each suite. Emits a
+//! BENCH_JSON line (cross-suite mean pass@1 per headline method).
 mod common;
 use ssr::eval::experiments;
+use ssr::util::json;
 
 fn main() {
-    common::run_timed("table1", || {
-        let mut f = common::calibrated_factory();
-        Ok(experiments::table1(&mut f, &common::default_cfg(), &common::bench_opts())?.1)
-    });
+    let t0 = std::time::Instant::now();
+    let mut f = common::calibrated_factory();
+    let (rows, text) =
+        match experiments::table1(&mut f, &common::default_cfg(), &common::bench_opts()) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("[bench table1] error: {e:#}");
+                std::process::exit(1);
+            }
+        };
+    println!("{text}");
+
+    let (base_p1, _) = common::mean_row(&rows, "baseline");
+    let (ssr5_p1, _) = common::mean_row(&rows, "ssr-m5");
+    let (fast1_p1, _) = common::mean_row(&rows, "ssr-m5-fast1");
+    let (fast2_p1, _) = common::mean_row(&rows, "ssr-m5-fast2");
+    common::bench_json(
+        "table1",
+        vec![
+            ("baseline_pass1", json::n(base_p1)),
+            ("ssr5_pass1", json::n(ssr5_p1)),
+            ("ssr5_fast1_pass1", json::n(fast1_p1)),
+            ("ssr5_fast2_pass1", json::n(fast2_p1)),
+            ("wall_s", json::n(t0.elapsed().as_secs_f64())),
+        ],
+    );
+    println!("[bench table1] completed in {:.2}s", t0.elapsed().as_secs_f64());
 }

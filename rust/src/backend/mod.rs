@@ -33,6 +33,7 @@
 pub mod calibrated;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
+pub mod slotmap;
 
 use anyhow::Result;
 
@@ -42,6 +43,14 @@ use crate::workload::Problem;
 pub type PathId = usize;
 
 /// Opaque handle to a prefilled shared prompt prefix (DESIGN.md §2).
+///
+/// Handles are generation-counted ([`slotmap::SlotMap`]): releasing a
+/// prefix permanently invalidates its handle, so a stale or
+/// double-released handle is rejected at the next `fork_paths` /
+/// `prefix_scores` instead of silently aliasing a re-used slot. Handles
+/// are only meaningful on the backend that issued them — the sharded
+/// serving path keeps a per-backend handle map in its shared prefix
+/// tier (`coordinator::prefix::SharedPrefixTier`, DESIGN.md §10).
 ///
 /// The prefix-aware open protocol splits `open_paths` in two:
 /// `prefill_prefix` ingests the *bare problem prompt* once per model
@@ -178,6 +187,11 @@ pub trait Backend {
     /// Release a prefix handle (prefix-cache eviction / non-cached
     /// open). Safe after forking: lanes own copies of the prefix state.
     fn release_prefix(&mut self, handle: PrefixHandle) -> Result<()>;
+
+    /// Approximate host bytes a live prefix retains (cached K/V
+    /// literals, memoized logits, prompt copy) — the input to the
+    /// prefix cache's byte bound. 0 for released/unknown handles.
+    fn prefix_bytes(&self, handle: PrefixHandle) -> u64;
 
     /// Cumulative prompt-ingest accounting (see [`PrefillStats`]).
     fn prefill_stats(&self) -> PrefillStats;

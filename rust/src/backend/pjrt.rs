@@ -29,6 +29,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use super::slotmap::SlotMap;
 use super::{Backend, BackendMeta, PathId, PathStats, PrefillStats, PrefixHandle, StepOutcome};
 use crate::model::{handle::KvCache, sampler, tokenizer, ModelHandle};
 use crate::runtime::{Manifest, Runtime};
@@ -66,10 +67,13 @@ struct PathState {
     closed: bool,
 }
 
-/// A prefilled bare-prompt prefix: batch-1 prefill caches for both
-/// models plus the last-position logits, ready to fork lane groups
-/// (DESIGN.md §2). `charged` = the one-time prompt FLOPs were billed to
-/// a forked lane already.
+/// A prefilled bare-prompt prefix: the prompt's own K/V rows per model
+/// — sliced to lane 0 / `prompt_len` at prefill time, NOT the full
+/// padded `[L, B, H, S_MAX, D]` prefill literal (which made cached
+/// prefixes dominate host memory on long prompts; ROADMAP item) — plus
+/// the last-position logits, ready to fork lane groups (DESIGN.md §2).
+/// `charged` = the one-time prompt FLOPs were billed to a forked lane
+/// already.
 struct PrefixState {
     prompt: Vec<i32>,
     target_cache: KvCache,
@@ -88,11 +92,9 @@ pub struct PjrtBackend {
     manifest: Manifest,
     groups: Vec<LaneGroup>,
     paths: Vec<PathState>,
-    /// prefilled shared prefixes (`None` = released slot)
-    prefixes: Vec<Option<PrefixState>>,
-    /// released slots available for reuse (keeps `prefixes` bounded by
-    /// the number of LIVE prefixes under sustained traffic)
-    free_prefixes: Vec<usize>,
+    /// prefilled shared prefixes, generation-counted so released/stale
+    /// handles are rejected instead of aliasing a re-used slot
+    prefixes: SlotMap<PrefixState>,
     /// cumulative prompt-ingest accounting
     prefill: PrefillStats,
     /// sampling temperature for spans (0 = greedy)
@@ -116,8 +118,7 @@ impl PjrtBackend {
             manifest,
             groups: Vec::new(),
             paths: Vec::new(),
-            prefixes: Vec::new(),
-            free_prefixes: Vec::new(),
+            prefixes: SlotMap::new(),
             prefill: PrefillStats::default(),
             temp: 0.7,
             max_steps: MAX_STEPS_DEFAULT,
@@ -409,42 +410,33 @@ impl Backend for PjrtBackend {
 
         let next_logits_t =
             t_out.next_logits.into_iter().next().context("prefill returned no logits")?;
+        // Retain only lane 0 / prompt_len of the prefill K/V — the part
+        // a fork actually reads. fork_cache zero-pads back to S_MAX.
+        let target_cache = self.target.slice_prefix(&t_out.cache, 0, prompt.len())?;
         let (draft_cache, next_logits_d) = match d_out {
             Some(d) => (
-                Some(d.cache),
+                Some(self.draft.slice_prefix(&d.cache, 0, prompt.len())?),
                 Some(d.next_logits.into_iter().next().context("draft prefill logits")?),
             ),
             None => (None, None),
         };
         let scores = want_scores.then(|| strategy_logits(&self.manifest, &next_logits_t));
-        let entry = PrefixState {
+        Ok(self.prefixes.insert(PrefixState {
             prompt,
-            target_cache: t_out.cache,
+            target_cache,
             draft_cache,
             next_logits_t,
             next_logits_d,
             scores,
             charged: false,
-        };
-        let id = match self.free_prefixes.pop() {
-            Some(i) => {
-                self.prefixes[i] = Some(entry);
-                i
-            }
-            None => {
-                self.prefixes.push(Some(entry));
-                self.prefixes.len() - 1
-            }
-        };
-        Ok(id)
+        }))
     }
 
     fn prefix_scores(&mut self, handle: PrefixHandle) -> Result<Vec<f32>> {
         let e = self
             .prefixes
             .get_mut(handle)
-            .and_then(|e| e.as_mut())
-            .context("prefix_scores: released or unknown prefix handle")?;
+            .context("prefix_scores: released, stale, or unknown prefix handle")?;
         if e.scores.is_none() {
             // free: the logits were produced by the prefix prefill
             e.scores = Some(strategy_logits(&self.manifest, &e.next_logits_t));
@@ -466,8 +458,7 @@ impl Backend for PjrtBackend {
             let e = self
                 .prefixes
                 .get_mut(handle)
-                .and_then(|e| e.as_mut())
-                .context("fork_paths: released or unknown prefix handle")?;
+                .context("fork_paths: released, stale, or unknown prefix handle")?;
             let charge = !e.charged;
             e.charged = true;
             (
@@ -481,7 +472,7 @@ impl Backend for PjrtBackend {
         // Broadcast the prefix lane into a fresh group cache per model
         // (the KV fork op; see ModelHandle::fork_cache).
         let (mut t_cache, mut d_cache) = {
-            let e = self.prefixes[handle].as_ref().unwrap();
+            let e = self.prefixes.get(handle).expect("validated above");
             let t = self.target.fork_cache(&e.target_cache, 0, n)?;
             let d = match &e.draft_cache {
                 Some(c) => Some(self.draft.fork_cache(c, 0, n)?),
@@ -571,12 +562,35 @@ impl Backend for PjrtBackend {
     }
 
     fn release_prefix(&mut self, handle: PrefixHandle) -> Result<()> {
-        if let Some(slot) = self.prefixes.get_mut(handle) {
-            if slot.take().is_some() {
-                self.free_prefixes.push(handle);
-            }
-        }
+        // stale/double release is inert: the generation counter makes
+        // the second release miss, never free someone else's slot
+        let _ = self.prefixes.remove(handle);
         Ok(())
+    }
+
+    fn prefix_bytes(&self, handle: PrefixHandle) -> u64 {
+        fn lit_f32_bytes(l: &xla::Literal) -> u64 {
+            crate::runtime::literals::dims(l)
+                .map(|d| d.iter().product::<usize>() as u64 * 4)
+                .unwrap_or(0)
+        }
+        fn cache_bytes(c: &KvCache) -> u64 {
+            lit_f32_bytes(&c.k) + lit_f32_bytes(&c.v)
+        }
+        match self.prefixes.get(handle) {
+            Some(e) => {
+                let logits = (e.next_logits_t.len()
+                    + e.next_logits_d.as_ref().map_or(0, |v| v.len())
+                    + e.scores.as_ref().map_or(0, |v| v.len()))
+                    as u64
+                    * 4;
+                cache_bytes(&e.target_cache)
+                    + e.draft_cache.as_ref().map_or(0, cache_bytes)
+                    + logits
+                    + e.prompt.len() as u64 * 4
+            }
+            None => 0,
+        }
     }
 
     fn prefill_stats(&self) -> PrefillStats {

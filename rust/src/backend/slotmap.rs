@@ -1,0 +1,184 @@
+//! Generation-counted slot table for backend-issued handles.
+//!
+//! Both backends used to hand-roll the same `Vec<Option<T>>` +
+//! free-list pair for their prefilled-prefix tables; the failure mode
+//! of that shape is silent handle aliasing — a caller holding a
+//! released handle whose slot was re-used would read *someone else's*
+//! prefix. `SlotMap` packs a 32-bit generation counter into the high
+//! half of the `usize` handle (`PrefixHandle` stays a plain `usize` on
+//! the trait), bumps the slot's generation on every removal, and
+//! rejects any handle whose generation no longer matches — stale and
+//! double-released handles become errors at the lookup, not corruption
+//! at the fork.
+//!
+//! Handles are only meaningful on the `SlotMap` that issued them (the
+//! shared prefix tier keeps per-shard handle maps for exactly this
+//! reason — see `coordinator::prefix::SharedPrefixTier`).
+
+const INDEX_BITS: u32 = 32;
+const INDEX_MASK: usize = (1 << INDEX_BITS) - 1;
+
+fn pack(index: usize, gen: u32) -> usize {
+    debug_assert!(index <= INDEX_MASK);
+    ((gen as usize) << INDEX_BITS) | index
+}
+
+fn unpack(handle: usize) -> (usize, u32) {
+    (handle & INDEX_MASK, (handle >> INDEX_BITS) as u32)
+}
+
+struct Slot<T> {
+    /// bumped on every removal; a handle matches only its birth gen
+    gen: u32,
+    val: Option<T>,
+}
+
+/// Bounded-reuse slot table: released slot *indices* are recycled (the
+/// table stays sized to the live peak under sustained traffic) while
+/// released *handles* are permanently invalidated by the generation
+/// counter.
+pub struct SlotMap<T> {
+    slots: Vec<Slot<T>>,
+    free: Vec<usize>,
+    live: usize,
+}
+
+impl<T> Default for SlotMap<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> SlotMap<T> {
+    pub fn new() -> Self {
+        SlotMap { slots: Vec::new(), free: Vec::new(), live: 0 }
+    }
+
+    /// Live entries.
+    pub fn len(&self) -> usize {
+        self.live
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    /// Physical slots ever allocated (>= len; bounded by the live peak).
+    pub fn slot_count(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Insert a value and return its handle (index + generation packed
+    /// into one `usize`).
+    pub fn insert(&mut self, val: T) -> usize {
+        self.live += 1;
+        match self.free.pop() {
+            Some(i) => {
+                debug_assert!(self.slots[i].val.is_none());
+                self.slots[i].val = Some(val);
+                pack(i, self.slots[i].gen)
+            }
+            None => {
+                self.slots.push(Slot { gen: 0, val: Some(val) });
+                pack(self.slots.len() - 1, 0)
+            }
+        }
+    }
+
+    fn slot_of(&self, handle: usize) -> Option<usize> {
+        let (i, gen) = unpack(handle);
+        match self.slots.get(i) {
+            Some(s) if s.gen == gen && s.val.is_some() => Some(i),
+            _ => None,
+        }
+    }
+
+    /// `None` for released, stale, or never-issued handles.
+    pub fn get(&self, handle: usize) -> Option<&T> {
+        self.slot_of(handle).and_then(|i| self.slots[i].val.as_ref())
+    }
+
+    pub fn get_mut(&mut self, handle: usize) -> Option<&mut T> {
+        match self.slot_of(handle) {
+            Some(i) => self.slots[i].val.as_mut(),
+            None => None,
+        }
+    }
+
+    /// Remove and return the value; bumps the slot generation so the
+    /// handle (and any copy of it) is dead forever. Stale/double
+    /// removal returns `None` and disturbs nothing.
+    pub fn remove(&mut self, handle: usize) -> Option<T> {
+        let i = self.slot_of(handle)?;
+        let val = self.slots[i].val.take();
+        self.slots[i].gen = self.slots[i].gen.wrapping_add(1);
+        self.free.push(i);
+        self.live -= 1;
+        val
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_get_remove_roundtrip() {
+        let mut m: SlotMap<String> = SlotMap::new();
+        let h = m.insert("a".into());
+        assert_eq!(m.get(h).map(|s| s.as_str()), Some("a"));
+        assert_eq!(m.len(), 1);
+        assert_eq!(m.remove(h).as_deref(), Some("a"));
+        assert_eq!(m.len(), 0);
+        assert!(m.get(h).is_none());
+    }
+
+    #[test]
+    fn stale_handle_rejected_after_slot_reuse() {
+        let mut m: SlotMap<u32> = SlotMap::new();
+        let h1 = m.insert(1);
+        m.remove(h1);
+        let h2 = m.insert(2);
+        // the slot index is recycled, the handle is not
+        assert_eq!(m.slot_count(), 1);
+        assert_ne!(h1, h2);
+        assert!(m.get(h1).is_none(), "stale handle resolved to a live slot");
+        assert_eq!(m.get(h2), Some(&2));
+    }
+
+    #[test]
+    fn double_remove_is_inert() {
+        let mut m: SlotMap<u32> = SlotMap::new();
+        let h = m.insert(9);
+        assert!(m.remove(h).is_some());
+        assert!(m.remove(h).is_none());
+        let h2 = m.insert(10);
+        let h3 = m.insert(11);
+        // double remove freed the slot once, not twice
+        assert_ne!(h2, h3);
+        assert_eq!((m.get(h2), m.get(h3)), (Some(&10), Some(&11)));
+        assert_eq!(m.slot_count(), 2);
+    }
+
+    #[test]
+    fn table_stays_bounded_by_live_peak() {
+        let mut m: SlotMap<usize> = SlotMap::new();
+        for round in 0..100 {
+            let hs: Vec<usize> = (0..4).map(|i| m.insert(round * 4 + i)).collect();
+            for h in hs {
+                assert!(m.remove(h).is_some());
+            }
+        }
+        assert!(m.slot_count() <= 4, "slot table grew to {}", m.slot_count());
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn get_mut_edits_in_place() {
+        let mut m: SlotMap<u32> = SlotMap::new();
+        let h = m.insert(5);
+        *m.get_mut(h).unwrap() += 1;
+        assert_eq!(m.get(h), Some(&6));
+        assert!(m.get_mut(usize::MAX).is_none());
+    }
+}

@@ -78,7 +78,31 @@ impl AdmitPolicy {
     }
 }
 
-/// Shared-prefix prefill & prefix-reuse cache knobs (DESIGN.md §2).
+/// How the pool routes a request to a backend shard
+/// (`coordinator::pool`, DESIGN.md §10).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacePolicy {
+    /// argmin over outstanding-lane gauges — balances mixed loads
+    LeastLoaded,
+    /// hash(expr) mod shards — repeats of a prompt land on the shard
+    /// holding its prefilled prefix (max tier hits, skew-sensitive)
+    Affinity,
+    /// strict rotation (load-blind baseline)
+    RoundRobin,
+}
+
+impl PlacePolicy {
+    pub fn parse(s: &str) -> Result<PlacePolicy> {
+        Ok(match s {
+            "least-loaded" | "least" => PlacePolicy::LeastLoaded,
+            "affinity" => PlacePolicy::Affinity,
+            "round-robin" | "rr" => PlacePolicy::RoundRobin,
+            _ => bail!("unknown placement policy `{s}` (least-loaded|affinity|round-robin)"),
+        })
+    }
+}
+
+/// Shared-prefix prefill & prefix-reuse cache knobs (DESIGN.md §2, §10).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct PrefixCacheCfg {
     /// open lane groups by prefilling the problem prompt once and
@@ -88,11 +112,16 @@ pub struct PrefixCacheCfg {
     /// max prefilled prompts kept alive across requests (0 = no
     /// cross-request cache; within-request sharing still applies)
     pub capacity: usize,
+    /// byte budget over retained prefix state (`Backend::prefix_bytes`,
+    /// summed across shards in the shared tier; 0 = entry cap only)
+    pub max_bytes: u64,
 }
 
 impl Default for PrefixCacheCfg {
     fn default() -> Self {
-        PrefixCacheCfg { enabled: true, capacity: 256 }
+        // 1 GiB default budget: irrelevant for the calibrated substrate
+        // (entries are ~100 bytes) but caps PJRT prompt K/V retention
+        PrefixCacheCfg { enabled: true, capacity: 256, max_bytes: 1 << 30 }
     }
 }
 
@@ -102,6 +131,13 @@ impl PrefixCacheCfg {
             match k.as_str() {
                 "enabled" => self.enabled = val.bool()?,
                 "capacity" => self.capacity = val.usize()?,
+                "max_bytes" => {
+                    let b = val.i64()?;
+                    if b < 0 {
+                        bail!("prefix_cache.max_bytes must be >= 0, got {b}");
+                    }
+                    self.max_bytes = b as u64;
+                }
                 other => bail!("unknown prefix_cache key `{other}`"),
             }
         }
@@ -133,12 +169,18 @@ pub struct SsrConfig {
     pub stop_rule: StopRule,
     pub selection: Selection,
     pub seed: u64,
-    /// scheduler lane pool: max reasoning paths in flight across ALL
-    /// concurrent problems (cross-request continuous batching)
+    /// scheduler lane pool: max reasoning paths in flight across all
+    /// concurrent problems OF ONE SHARD (total capacity = shards x
+    /// max_lanes)
     pub max_lanes: usize,
-    /// admission-queue ordering of the scheduler
+    /// admission-queue ordering of each shard's scheduler
     pub admission: AdmitPolicy,
-    /// shared-prefix prefill + cross-request prefix cache
+    /// backend shards: scheduler threads each owning one backend
+    /// (`coordinator::pool`); throughput scales with this
+    pub shards: usize,
+    /// how requests are routed to shards
+    pub placement: PlacePolicy,
+    /// shared-prefix prefill + cross-request prefix cache / shared tier
     pub prefix: PrefixCacheCfg,
 }
 
@@ -156,6 +198,8 @@ impl Default for SsrConfig {
             seed: 42,
             max_lanes: 32,
             admission: AdmitPolicy::Fifo,
+            shards: 1,
+            placement: PlacePolicy::LeastLoaded,
             prefix: PrefixCacheCfg::default(),
         }
     }
@@ -177,6 +221,8 @@ impl SsrConfig {
                 "seed" => self.seed = val.i64()? as u64,
                 "max_lanes" => self.max_lanes = val.usize()?,
                 "admission" => self.admission = AdmitPolicy::parse(val.str()?)?,
+                "shards" => self.shards = val.usize()?,
+                "placement" => self.placement = PlacePolicy::parse(val.str()?)?,
                 "prefix_cache" => self.prefix.apply_json(val)?,
                 other => bail!("unknown config key `{other}`"),
             }
@@ -209,10 +255,15 @@ impl SsrConfig {
         if let Some(s) = args.opt("admission") {
             self.admission = AdmitPolicy::parse(s)?;
         }
+        self.shards = args.opt_usize("shards", self.shards)?;
+        if let Some(s) = args.opt("placement") {
+            self.placement = PlacePolicy::parse(s)?;
+        }
         if let Some(s) = args.opt("prefix-reuse") {
             self.prefix.enabled = parse_bool(s)?;
         }
         self.prefix.capacity = args.opt_usize("prefix-cache-cap", self.prefix.capacity)?;
+        self.prefix.max_bytes = args.opt_u64("prefix-cache-bytes", self.prefix.max_bytes)?;
         self.validate()
     }
 
@@ -231,6 +282,9 @@ impl SsrConfig {
         }
         if self.max_lanes == 0 || self.max_lanes > 1024 {
             bail!("max_lanes must be in 1..=1024, got {}", self.max_lanes);
+        }
+        if self.shards == 0 || self.shards > 64 {
+            bail!("shards must be in 1..=64, got {}", self.shards);
         }
         // bound keeps the cache's O(capacity) LRU eviction scan cheap
         if self.prefix.capacity > 4096 {
@@ -334,6 +388,65 @@ mod tests {
         c.apply_args(&mut args).unwrap();
         assert_eq!(c.max_lanes, 16);
         assert_eq!(c.admission, AdmitPolicy::SmallestFirst);
+    }
+
+    #[test]
+    fn shard_knobs() {
+        let c = SsrConfig::default();
+        assert_eq!(c.shards, 1);
+        assert_eq!(c.placement, PlacePolicy::LeastLoaded);
+
+        let mut c = SsrConfig::default();
+        let v = Value::parse(r#"{"shards": 4, "placement": "affinity"}"#).unwrap();
+        c.apply_json(&v).unwrap();
+        assert_eq!(c.shards, 4);
+        assert_eq!(c.placement, PlacePolicy::Affinity);
+
+        let mut c = SsrConfig::default();
+        assert!(c.apply_json(&Value::parse(r#"{"shards": 0}"#).unwrap()).is_err());
+        c.shards = 1;
+        assert!(c.apply_json(&Value::parse(r#"{"shards": 100}"#).unwrap()).is_err());
+        c.shards = 1;
+        assert!(c.apply_json(&Value::parse(r#"{"placement": "widest"}"#).unwrap()).is_err());
+
+        let argv: Vec<String> = ["serve", "--shards", "2", "--placement", "rr"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let mut args = Args::parse(&argv).unwrap();
+        let mut c = SsrConfig::default();
+        c.apply_args(&mut args).unwrap();
+        assert_eq!(c.shards, 2);
+        assert_eq!(c.placement, PlacePolicy::RoundRobin);
+
+        assert_eq!(PlacePolicy::parse("least").unwrap(), PlacePolicy::LeastLoaded);
+        assert!(PlacePolicy::parse("nope").is_err());
+    }
+
+    #[test]
+    fn prefix_byte_budget_knob() {
+        let c = SsrConfig::default();
+        assert_eq!(c.prefix.max_bytes, 1 << 30);
+
+        let mut c = SsrConfig::default();
+        let v = Value::parse(r#"{"prefix_cache": {"max_bytes": 4096}}"#).unwrap();
+        c.apply_json(&v).unwrap();
+        assert_eq!(c.prefix.max_bytes, 4096);
+
+        // a negative budget must be rejected, not wrapped into u64::MAX
+        let mut c = SsrConfig::default();
+        assert!(c
+            .apply_json(&Value::parse(r#"{"prefix_cache": {"max_bytes": -1}}"#).unwrap())
+            .is_err());
+
+        let argv: Vec<String> = ["serve", "--prefix-cache-bytes", "1024"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let mut args = Args::parse(&argv).unwrap();
+        let mut c = SsrConfig::default();
+        c.apply_args(&mut args).unwrap();
+        assert_eq!(c.prefix.max_bytes, 1024);
     }
 
     #[test]

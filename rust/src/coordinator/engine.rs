@@ -20,7 +20,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use super::aggregation::{aggregate, Decision, PathVote};
-use super::prefix::{Acquired, PrefixCache};
+use super::prefix::{Acquired, PrefixCache, PrefixProvider};
 use super::spm;
 use crate::backend::{Backend, PathId, StepOutcome};
 use crate::config::{Selection, SsrConfig, StopRule};
@@ -186,15 +186,16 @@ impl ProblemRun {
     }
 
     /// [`ProblemRun::start`] with an optional cross-request prefix
-    /// cache: repeated problems fork their lanes off an already-
-    /// prefilled prompt and skip prompt prefill entirely.
+    /// provider (the single-backend [`PrefixCache`] or a shard's view
+    /// of the shared tier): repeated problems fork their lanes off an
+    /// already-prefilled prompt and skip prompt prefill entirely.
     pub fn start_with_cache(
         backend: &mut dyn Backend,
         cfg: &SsrConfig,
         problem: &Problem,
         method: Method,
         seed: u64,
-        mut cache: Option<&mut PrefixCache>,
+        mut cache: Option<&mut dyn PrefixProvider>,
     ) -> Result<ProblemRun> {
         let t0 = Instant::now();
         let clock0 = backend.clock_secs();
@@ -551,7 +552,7 @@ impl<'a> Drop for Engine<'a> {
 
 impl<'a> Engine<'a> {
     pub fn new(backend: &'a mut dyn Backend, cfg: SsrConfig) -> Self {
-        let prefix = PrefixCache::new(cfg.prefix.capacity);
+        let prefix = PrefixCache::with_limits(cfg.prefix.capacity, cfg.prefix.max_bytes);
         Engine { backend, cfg, prefix }
     }
 
@@ -566,7 +567,7 @@ impl<'a> Engine<'a> {
             problem,
             method,
             seed,
-            Some(&mut self.prefix),
+            Some(&mut self.prefix as &mut dyn PrefixProvider),
         )?;
         while !run.is_done() {
             let mut group = [&mut run];

@@ -40,16 +40,28 @@ pub struct Metrics {
     pub queue_samples: u64,
     pub queue_depth_sum: u64,
     pub queue_depth_max: u64,
-    /// prefix-reuse cache gauges (scheduler `PrefixCache` totals):
-    /// solves whose prompt prefill was skipped entirely
+    /// prefix-reuse gauges (scheduler `PrefixCache` / shared-tier
+    /// totals): tier-LOGICAL hits — the prompt was already known. On a
+    /// single shard this equals "prompt prefill skipped entirely"; in a
+    /// sharded pool it includes first-touch shard fills (which do
+    /// prefill once): `prefix_hits - prefix_shard_fills` is the
+    /// prefill-skipped count
     pub prefix_hits: u64,
     /// solves that prefilled a fresh shared prefix
     pub prefix_misses: u64,
-    /// cached prefixes evicted by the capacity bound
+    /// cached prefixes evicted by the capacity/byte bounds
     pub prefix_evictions: u64,
-    /// backend model-clock at the last scheduler tick (real PJRT
-    /// seconds, virtual seconds on the calibrated substrate)
+    /// tier hits that still prefilled because the serving shard had no
+    /// handle yet (sharded serving only; 0 on a single shard)
+    pub prefix_shard_fills: u64,
+    /// sum of the per-shard backend model-clocks (real PJRT seconds,
+    /// virtual seconds on the calibrated substrate) — total model COST
     pub model_secs: f64,
+    /// per-shard model-clocks; `model_secs_makespan()` (the max) is the
+    /// virtual wall-clock of the pool, the number shard scaling improves
+    pub shard_clocks: Vec<f64>,
+    /// requests admitted per shard (placement telemetry)
+    pub shard_requests: Vec<u64>,
 }
 
 impl Metrics {
@@ -74,8 +86,46 @@ impl Metrics {
             prefix_hits: 0,
             prefix_misses: 0,
             prefix_evictions: 0,
+            prefix_shard_fills: 0,
             model_secs: 0.0,
+            shard_clocks: Vec::new(),
+            shard_requests: Vec::new(),
         }
+    }
+
+    /// Size the per-shard gauges (pool spawn).
+    pub fn init_shards(&mut self, shards: usize) {
+        self.shard_clocks.resize(shards.max(1), 0.0);
+        self.shard_requests.resize(shards.max(1), 0);
+    }
+
+    /// One shard's cumulative backend clock; `model_secs` becomes the
+    /// sum across shards (total cost).
+    pub fn set_shard_clock(&mut self, shard: usize, secs: f64) {
+        if shard >= self.shard_clocks.len() {
+            self.shard_clocks.resize(shard + 1, 0.0);
+        }
+        self.shard_clocks[shard] = secs;
+        self.model_secs = self.shard_clocks.iter().sum();
+    }
+
+    /// Virtual wall-clock of the pool: the slowest shard's model time
+    /// (shards run concurrently, so throughput divides by this, not by
+    /// the summed cost).
+    pub fn model_secs_makespan(&self) -> f64 {
+        if self.shard_clocks.is_empty() {
+            self.model_secs
+        } else {
+            self.shard_clocks.iter().cloned().fold(0.0, f64::max)
+        }
+    }
+
+    /// One request admitted on `shard`.
+    pub fn record_shard_request(&mut self, shard: usize) {
+        if shard >= self.shard_requests.len() {
+            self.shard_requests.resize(shard + 1, 0);
+        }
+        self.shard_requests[shard] += 1;
     }
 
     pub fn record_request(&mut self, latency_s: f64, answered: bool) {
@@ -118,6 +168,11 @@ impl Metrics {
         self.prefix_hits = hits;
         self.prefix_misses = misses;
         self.prefix_evictions = evictions;
+    }
+
+    /// Shared-tier shard-fill total (re-prefills on a second shard).
+    pub fn set_prefix_shard_fills(&mut self, fills: u64) {
+        self.prefix_shard_fills = fills;
     }
 
     /// Fraction of solves whose prompt prefill was served from cache.
@@ -190,7 +245,9 @@ impl Metrics {
     }
 
     pub fn summary_json(&self, elapsed_s: f64) -> crate::util::json::Value {
-        use crate::util::json::{i, n, obj};
+        use crate::util::json::{arr, i, n, obj, Value};
+        let shard_requests: Vec<Value> =
+            self.shard_requests.iter().map(|&r| i(r as i64)).collect();
         obj(vec![
             ("requests", i(self.requests as i64)),
             ("answered", i(self.answered as i64)),
@@ -211,8 +268,12 @@ impl Metrics {
             ("prefix_hits", i(self.prefix_hits as i64)),
             ("prefix_misses", i(self.prefix_misses as i64)),
             ("prefix_evictions", i(self.prefix_evictions as i64)),
+            ("prefix_shard_fills", i(self.prefix_shard_fills as i64)),
             ("prefix_hit_rate", n(self.prefix_hit_rate())),
             ("model_secs", n(self.model_secs)),
+            ("model_secs_makespan", n(self.model_secs_makespan())),
+            ("shards", i(self.shard_clocks.len().max(1) as i64)),
+            ("shard_requests", arr(shard_requests)),
         ])
     }
 }
@@ -309,6 +370,29 @@ mod tests {
         assert_eq!(v.get_i64("prefix_hits").unwrap(), 3);
         assert_eq!(v.get_i64("prefix_misses").unwrap(), 1);
         assert!((v.get_f64("prefix_hit_rate").unwrap() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shard_gauges_sum_and_makespan() {
+        let mut m = Metrics::new();
+        // no shards configured: model_secs is whatever was set directly
+        m.model_secs = 3.0;
+        assert_eq!(m.model_secs_makespan(), 3.0);
+        m.init_shards(2);
+        m.set_shard_clock(0, 4.0);
+        m.set_shard_clock(1, 6.0);
+        assert!((m.model_secs - 10.0).abs() < 1e-12, "sum is the cost");
+        assert!((m.model_secs_makespan() - 6.0).abs() < 1e-12, "max is the makespan");
+        m.record_shard_request(0);
+        m.record_shard_request(1);
+        m.record_shard_request(1);
+        assert_eq!(m.shard_requests, vec![1, 2]);
+        m.set_prefix_shard_fills(3);
+        let v = m.summary_json(1.0);
+        assert_eq!(v.get_i64("shards").unwrap(), 2);
+        assert!((v.get_f64("model_secs_makespan").unwrap() - 6.0).abs() < 1e-12);
+        assert_eq!(v.get_i64("prefix_shard_fills").unwrap(), 3);
+        assert_eq!(v.get("shard_requests").unwrap().arr().unwrap().len(), 2);
     }
 
     #[test]

@@ -9,20 +9,26 @@
 //! * [`scheduler`] — cross-request continuous batching: lane-pool
 //!   admission + one shared step batch per tick over every in-flight
 //!   problem (serving & scheduling design notes live in its docs)
-//! * [`prefix`] — cross-request prefix-reuse cache: prompts prefilled
-//!   once and forked per lane; repeated problems skip prefill entirely
-//! * [`server`] — TCP front-end feeding the scheduler
-//! * [`metrics`] — latency/throughput/occupancy/score instrumentation
+//! * [`pool`] — the sharded execution layer: one scheduler thread per
+//!   backend shard, least-loaded/affinity/round-robin placement at
+//!   submit, drain-on-shutdown across shards (DESIGN.md §10)
+//! * [`prefix`] — prefix reuse: the single-backend `PrefixCache` and
+//!   the pool's `SharedPrefixTier` (one logical cache, per-shard handle
+//!   maps); repeated problems skip prompt prefill entirely
+//! * [`server`] — TCP front-end feeding the pool
+//! * [`metrics`] — latency/throughput/occupancy/shard instrumentation
 
 pub mod aggregation;
 pub mod engine;
 pub mod flops;
 pub mod metrics;
+pub mod pool;
 pub mod prefix;
 pub mod scheduler;
 pub mod server;
 pub mod spm;
 
 pub use engine::{Engine, Method, ProblemRun, RunResult};
-pub use prefix::PrefixCache;
+pub use pool::{BackendPool, PoolHandle};
+pub use prefix::{PrefixCache, SharedPrefixTier};
 pub use scheduler::{Scheduler, SchedulerHandle, SolveRequest};

@@ -1,0 +1,324 @@
+//! `BackendPool`: the sharded execution layer (DESIGN.md §10).
+//!
+//! One scheduler thread per backend shard, each owning its own
+//! `Box<dyn Backend>` (PJRT wrapper types are not Send, so a backend
+//! never leaves the thread that built it), its own lane pool and
+//! admission queue, and its own step-tick loop
+//! (`coordinator::scheduler::run_loop`). Work is routed at submit time
+//! by a placement policy:
+//!
+//! * **least-loaded** (default) — argmin over the pool-wide load
+//!   gauges (outstanding lane estimates, incremented at submit and
+//!   returned on the terminal reply). Balances mixed loads; ties break
+//!   to the lowest shard id so single-stream traffic stays put.
+//! * **affinity** — hash of the request expression mod shards: every
+//!   repeat of a prompt lands on the shard that already holds its
+//!   prefilled prefix, maximizing tier hits at the cost of balance
+//!   under skewed prompt distributions.
+//! * **round-robin** — strict rotation (load-blind; the bench
+//!   baseline).
+//!
+//! The shards share ONE logical prefix cache
+//! ([`SharedPrefixTier`](super::prefix::SharedPrefixTier)): a prompt
+//! prefilled on shard A is admitted as a tier hit everywhere and
+//! re-prefilled at most once per shard that serves it. Throughput
+//! scales with shard count because each shard's backend clock advances
+//! independently — `Metrics::model_secs_makespan` (max over shards) is
+//! the virtual wall-clock the `serving_scheduler` bench divides by.
+//!
+//! Shutdown / drain: dropping every [`PoolHandle`] clone closes every
+//! shard's channel; each shard finishes its queued and in-flight work,
+//! releases its tier handles, flushes its clock gauge, and exits —
+//! `BackendPool::spawn`'s join handles complete in any order.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::metrics::Metrics;
+use super::prefix::SharedPrefixTier;
+use super::scheduler::{self, lane_estimate, ShardCtx, SolveRequest};
+use crate::backend::Backend;
+use crate::config::{PlacePolicy, SsrConfig};
+use crate::runtime::Vocab;
+use crate::util::hash;
+
+/// Cloneable submitter side of the pool: routes each request to a
+/// shard and tracks outstanding load. Dropping every clone lets every
+/// shard drain and exit.
+#[derive(Clone)]
+pub struct PoolHandle {
+    txs: Vec<mpsc::Sender<SolveRequest>>,
+    loads: Arc<Vec<AtomicU64>>,
+    placement: PlacePolicy,
+    rr: Arc<AtomicUsize>,
+    pool_size: usize,
+}
+
+impl PoolHandle {
+    pub fn shards(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Pick the shard for one request (see the module docs for the
+    /// policies).
+    fn place(&self, expr: &str) -> usize {
+        let n = self.txs.len();
+        if n == 1 {
+            return 0;
+        }
+        match self.placement {
+            PlacePolicy::RoundRobin => self.rr.fetch_add(1, Ordering::Relaxed) % n,
+            PlacePolicy::Affinity => (hash::fnv1a_str(expr) % n as u64) as usize,
+            PlacePolicy::LeastLoaded => {
+                let mut best = 0;
+                let mut best_load = u64::MAX;
+                for (i, l) in self.loads.iter().enumerate() {
+                    let v = l.load(Ordering::Relaxed);
+                    if v < best_load {
+                        best = i;
+                        best_load = v;
+                    }
+                }
+                best
+            }
+        }
+    }
+
+    /// Route and enqueue one request. The lane estimate joins the load
+    /// gauge immediately (so a burst of submissions spreads before any
+    /// shard has even started) and is returned by the shard on the
+    /// terminal reply. A shard whose thread died (backend init failure)
+    /// has a closed channel; submission falls back to the remaining
+    /// shards in rotation before giving up, so one dead shard degrades
+    /// capacity instead of failing a fraction of all traffic.
+    pub fn submit(&self, req: SolveRequest) -> Result<()> {
+        let first = self.place(&req.expr);
+        let n = self.txs.len();
+        let est = lane_estimate(req.method, self.pool_size) as u64;
+        let mut req = req;
+        for attempt in 0..n {
+            let shard = (first + attempt) % n;
+            self.loads[shard].fetch_add(est, Ordering::Relaxed);
+            match self.txs[shard].send(req) {
+                Ok(()) => return Ok(()),
+                Err(mpsc::SendError(returned)) => {
+                    self.loads[shard].fetch_sub(est, Ordering::Relaxed);
+                    req = returned;
+                }
+            }
+        }
+        Err(anyhow!("all {n} scheduler shards gone"))
+    }
+
+    /// Current outstanding lane estimate on one shard (telemetry).
+    pub fn load_of(&self, shard: usize) -> u64 {
+        self.loads[shard].load(Ordering::Relaxed)
+    }
+}
+
+pub struct BackendPool;
+
+impl BackendPool {
+    /// Spawn `cfg.shards` scheduler threads, each owning one backend
+    /// built by `factory(shard)` ON that shard's thread. Returns the
+    /// routing handle plus one join handle per shard (the server
+    /// ignores them; benches join them to flush final clock metrics).
+    pub fn spawn<F>(
+        cfg: SsrConfig,
+        vocab: Vocab,
+        metrics: Arc<Mutex<Metrics>>,
+        factory: F,
+    ) -> Result<(PoolHandle, Vec<std::thread::JoinHandle<()>>)>
+    where
+        F: Fn(usize) -> Result<Box<dyn Backend>> + Send + Sync + 'static,
+    {
+        let shards = cfg.shards.max(1);
+        let tier = Arc::new(SharedPrefixTier::new(
+            shards,
+            if cfg.prefix.enabled { cfg.prefix.capacity } else { 0 },
+            cfg.prefix.max_bytes,
+        ));
+        let loads: Arc<Vec<AtomicU64>> =
+            Arc::new((0..shards).map(|_| AtomicU64::new(0)).collect());
+        metrics.lock().unwrap().init_shards(shards);
+        let factory = Arc::new(factory);
+
+        let mut txs = Vec::with_capacity(shards);
+        let mut joins = Vec::with_capacity(shards);
+        for shard in 0..shards {
+            let (tx, rx) = mpsc::channel::<SolveRequest>();
+            let cfg = cfg.clone();
+            let vocab = vocab.clone();
+            let metrics = Arc::clone(&metrics);
+            let ctx = ShardCtx { shard, tier: Arc::clone(&tier), loads: Arc::clone(&loads) };
+            let factory = Arc::clone(&factory);
+            let join = std::thread::Builder::new()
+                .name(format!("ssr-shard-{shard}"))
+                .spawn(move || match (factory.as_ref())(shard) {
+                    Ok(mut backend) => {
+                        scheduler::run_loop(backend.as_mut(), &cfg, &vocab, rx, &metrics, &ctx)
+                    }
+                    Err(e) => log::error!("shard {shard} backend init failed: {e:#}"),
+                })
+                .with_context(|| format!("spawning scheduler shard {shard}"))?;
+            txs.push(tx);
+            joins.push(join);
+        }
+        Ok((
+            PoolHandle {
+                txs,
+                loads,
+                placement: cfg.placement,
+                rr: Arc::new(AtomicUsize::new(0)),
+                pool_size: cfg.pool_size,
+            },
+            joins,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::calibrated::CalibratedBackend;
+    use crate::config::StopRule;
+    use crate::coordinator::engine::Method;
+    use crate::model::tokenizer;
+
+    fn spawn_pool(
+        shards: usize,
+        placement: PlacePolicy,
+    ) -> (PoolHandle, Vec<std::thread::JoinHandle<()>>, Arc<Mutex<Metrics>>) {
+        let mut cfg = SsrConfig::default();
+        cfg.shards = shards;
+        cfg.placement = placement;
+        let metrics = Arc::new(Mutex::new(Metrics::new()));
+        let (handle, joins) =
+            BackendPool::spawn(cfg, tokenizer::builtin_vocab(), Arc::clone(&metrics), |_s| {
+                Ok(Box::new(CalibratedBackend::for_suite("synth-math500", 7)?)
+                    as Box<dyn Backend>)
+            })
+            .unwrap();
+        (handle, joins, metrics)
+    }
+
+    fn solve(
+        handle: &PoolHandle,
+        expr: &str,
+        seed: u64,
+    ) -> mpsc::Receiver<Result<crate::util::json::Value>> {
+        let (rtx, rrx) = mpsc::channel();
+        handle
+            .submit(SolveRequest {
+                expr: expr.to_string(),
+                method: Method::Ssr { n: 3, tau: 7, stop: StopRule::Full },
+                seed,
+                reply: rtx,
+            })
+            .unwrap();
+        rrx
+    }
+
+    #[test]
+    fn pool_completes_work_across_shards_and_drains() {
+        // gate the shard backends so every submission lands (and the
+        // load gauges fill) before any shard starts — the least-loaded
+        // alternation the assertions rely on, without sleeps
+        let (gate_tx, gate_rx) = mpsc::channel::<()>();
+        let gate = Arc::new(Mutex::new(gate_rx));
+        let mut cfg = SsrConfig::default();
+        cfg.shards = 2;
+        cfg.placement = PlacePolicy::LeastLoaded;
+        let metrics = Arc::new(Mutex::new(Metrics::new()));
+        let (handle, joins) = BackendPool::spawn(
+            cfg,
+            tokenizer::builtin_vocab(),
+            Arc::clone(&metrics),
+            move |_s| {
+                let _ = gate.lock().unwrap().recv();
+                Ok(Box::new(CalibratedBackend::for_suite("synth-math500", 7)?)
+                    as Box<dyn Backend>)
+            },
+        )
+        .unwrap();
+        let replies: Vec<_> =
+            (0..8).map(|i| solve(&handle, &format!("{}+{}", i + 1, i + 2), i as u64)).collect();
+        gate_tx.send(()).unwrap();
+        gate_tx.send(()).unwrap();
+        for (i, r) in replies.iter().enumerate() {
+            let v = r.recv().unwrap().unwrap();
+            assert_eq!(v.get_i64("gold").unwrap(), (2 * i + 3) as i64);
+        }
+        drop(handle);
+        for j in joins {
+            j.join().unwrap();
+        }
+        let m = metrics.lock().unwrap();
+        assert_eq!(m.requests, 8);
+        assert_eq!(m.errors, 0);
+        assert_eq!(m.shard_requests.iter().sum::<u64>(), 8);
+        // least-loaded spreads an 8-burst of equal jobs across 2 shards
+        assert!(
+            m.shard_requests.iter().all(|&r| r >= 2),
+            "placement starved a shard: {:?}",
+            m.shard_requests
+        );
+        assert_eq!(m.shard_clocks.len(), 2);
+        assert!(m.model_secs_makespan() > 0.0);
+        assert!(m.model_secs >= m.model_secs_makespan());
+    }
+
+    #[test]
+    fn loads_return_to_zero_after_drain() {
+        let (handle, joins, _metrics) = spawn_pool(2, PlacePolicy::RoundRobin);
+        let replies: Vec<_> = (0..6).map(|i| solve(&handle, "3+4*2", i as u64)).collect();
+        for r in &replies {
+            assert!(r.recv().unwrap().is_ok());
+        }
+        assert_eq!(handle.load_of(0) + handle.load_of(1), 0, "load gauge leaked");
+        drop(handle);
+        for j in joins {
+            j.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn affinity_pins_repeat_prompts_to_one_shard() {
+        let (handle, joins, metrics) = spawn_pool(2, PlacePolicy::Affinity);
+        for round in 0..3u64 {
+            for expr in ["17+25*3", "4+5*6", "9+1*2", "8+8*8"] {
+                let r = solve(&handle, expr, round);
+                assert!(r.recv().unwrap().is_ok());
+            }
+        }
+        drop(handle);
+        for j in joins {
+            j.join().unwrap();
+        }
+        let m = metrics.lock().unwrap();
+        assert_eq!(m.requests, 12);
+        // affinity: a prompt only ever visits one shard, so the tier
+        // never has to re-prefill a known prompt on a second shard
+        assert_eq!(m.prefix_misses, 4, "one miss per distinct prompt");
+        assert_eq!(m.prefix_shard_fills, 0, "affinity re-prefilled a prompt");
+        assert_eq!(m.prefix_hits, 8);
+    }
+
+    #[test]
+    fn handle_clones_keep_the_pool_alive() {
+        let (handle, joins, _metrics) = spawn_pool(1, PlacePolicy::LeastLoaded);
+        let h2 = handle.clone();
+        drop(handle);
+        // a surviving clone still submits; shards only drain when the
+        // last clone drops
+        let r = solve(&h2, "1+2", 0);
+        assert!(r.recv().unwrap().is_ok());
+        drop(h2);
+        for j in joins {
+            j.join().unwrap();
+        }
+    }
+}

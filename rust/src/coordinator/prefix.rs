@@ -1,31 +1,44 @@
-//! Cross-request prefix-reuse cache: keep prefilled problem prompts
-//! alive across solves so repeated or re-sampled problems (pass@k,
-//! ablation sweeps, benches re-running a suite) skip prompt prefill
-//! entirely (DESIGN.md §2).
+//! Cross-request prefix reuse: keep prefilled problem prompts alive
+//! across solves so repeated or re-sampled problems (pass@k, ablation
+//! sweeps, benches re-running a suite) skip prompt prefill entirely
+//! (DESIGN.md §2), in two tiers:
 //!
-//! The cache maps a 64-bit hash of the problem's prompt tokens (plus
-//! the draft-cache flag — a speculative fork needs a draft prefix) to a
-//! live [`PrefixHandle`]. Capacity is bounded; eviction is
-//! least-recently-used and releases the backend-side prefix state.
-//! Hit / miss / eviction counters feed the serving [`Metrics`]
-//! (`prefix_hits` etc. in `{"op":"stats"}`).
+//! * [`PrefixCache`] — the single-backend cache (one engine, one
+//!   backend): prompt-hash -> live [`PrefixHandle`], LRU-bounded by an
+//!   entry cap AND a byte budget (`Backend::prefix_bytes`), so long
+//!   prompts can't silently dominate host memory.
+//! * [`SharedPrefixTier`] — the sharded serving path's ONE logical
+//!   cache (DESIGN.md §10): a prompt has a single tier entry holding a
+//!   *per-shard handle map*, because handles are only meaningful on the
+//!   backend that issued them. A prompt prefilled on shard A is
+//!   admitted as a tier hit everywhere and re-prefilled at most once
+//!   per shard that actually serves it (`shard_fills` counts those).
+//!   Eviction is LRU over logical entries; handles owned by other
+//!   shards cannot be released from this thread (backends are
+//!   thread-owned), so they are parked on per-shard release queues each
+//!   shard drains at its next tier interaction.
 //!
 //! Ownership: a handle returned with `retained = true` belongs to the
-//! cache (released on eviction or [`PrefixCache::clear`]); with
-//! `retained = false` (capacity 0) the caller must release it after
-//! forking. Forked lanes never dangle either way — the backend contract
-//! says lanes copy what they need at fork time.
+//! cache/tier (released on eviction or clear); with `retained = false`
+//! (capacity 0 passthrough) the caller must release it after forking.
+//! Forked lanes never dangle either way — the backend contract says
+//! lanes copy what they need at fork time. Hit / miss / eviction /
+//! shard-fill counters feed the serving [`Metrics`] (`prefix_hits` etc.
+//! in `{"op":"stats"}`).
 //!
 //! [`Metrics`]: super::metrics::Metrics
 
 use std::collections::HashMap;
+use std::sync::Mutex;
 
 use anyhow::Result;
 
 use crate::backend::{Backend, PrefixHandle};
+use crate::util::hash;
 use crate::workload::Problem;
 
-/// Result of [`PrefixCache::acquire`].
+/// Result of a prefix acquisition ([`PrefixCache::acquire`] /
+/// [`SharedPrefixTier::acquire_for_shard`]).
 pub struct Acquired {
     pub handle: PrefixHandle,
     /// the cache keeps the handle alive; callers must NOT release it
@@ -41,14 +54,42 @@ impl Acquired {
     }
 }
 
+/// The engine/scheduler-facing seam over "give me a live prefix for
+/// this problem": implemented by the single-backend [`PrefixCache`] and
+/// by a shard's view of the [`SharedPrefixTier`] ([`ShardPrefix`]), so
+/// `ProblemRun::start_with_cache` is tier-agnostic.
+pub trait PrefixProvider {
+    fn acquire(
+        &mut self,
+        backend: &mut dyn Backend,
+        problem: &Problem,
+        use_draft: bool,
+        want_scores: bool,
+    ) -> Result<Acquired>;
+
+    /// Configured entry capacity; 0 = caching disabled (passthrough).
+    fn capacity(&self) -> usize;
+}
+
+/// Prompt-token cache key, salted with the draft-cache flag — a
+/// speculative fork needs a draft prefix, so draftless and speculative
+/// prefixes of one prompt are distinct entries.
+fn prefix_key(tokens: &[i32], use_draft: bool) -> u64 {
+    hash::fnv1a_i32(tokens) ^ (use_draft as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
 struct Entry {
     handle: PrefixHandle,
+    bytes: u64,
     last_used: u64,
 }
 
-/// Bounded LRU cache of prefilled prompt prefixes.
+/// Bounded LRU cache of prefilled prompt prefixes (single backend).
 pub struct PrefixCache {
     capacity: usize,
+    /// byte budget across live entries (0 = entry cap only)
+    max_bytes: u64,
+    bytes: u64,
     map: HashMap<u64, Entry>,
     tick: u64,
     pub hits: u64,
@@ -58,7 +99,25 @@ pub struct PrefixCache {
 
 impl PrefixCache {
     pub fn new(capacity: usize) -> Self {
-        PrefixCache { capacity, map: HashMap::new(), tick: 0, hits: 0, misses: 0, evictions: 0 }
+        Self::with_limits(capacity, 0)
+    }
+
+    /// Entry cap plus a byte budget fed by [`Backend::prefix_bytes`].
+    /// The budget bounds the *retained set*: the most recently touched
+    /// entry is always admitted (a single over-budget prefix evicts
+    /// everything else and lives alone, mirroring the lane pool's
+    /// always-admit-into-idle rule).
+    pub fn with_limits(capacity: usize, max_bytes: u64) -> Self {
+        PrefixCache {
+            capacity,
+            max_bytes,
+            bytes: 0,
+            map: HashMap::new(),
+            tick: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -70,30 +129,39 @@ impl PrefixCache {
         self.capacity
     }
 
+    /// Bytes currently retained (as reported by the backend).
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
     }
 
-    /// FNV-1a over the prompt tokens, salted with the draft flag — the
-    /// same cheap keying the calibrated hardness cache uses; collisions
-    /// at 64 bits are negligible against any sane capacity.
-    fn key(tokens: &[i32], use_draft: bool) -> u64 {
-        let mut h: u64 = 0xCBF2_9CE4_8422_2325;
-        let mut mix = |byte: u8| {
-            h ^= byte as u64;
-            h = h.wrapping_mul(0x0000_0100_0000_01B3);
-        };
-        for &t in tokens {
-            for b in t.to_le_bytes() {
-                mix(b);
+    /// Evict the LRU entry, skipping `protect`. Returns false when
+    /// nothing evictable remains.
+    fn evict_lru(&mut self, backend: &mut dyn Backend, protect: Option<u64>) -> bool {
+        let victim = self
+            .map
+            .iter()
+            .filter(|(k, _)| Some(**k) != protect)
+            .min_by_key(|(_, e)| e.last_used)
+            .map(|(&k, _)| k);
+        match victim {
+            Some(k) => {
+                let e = self.map.remove(&k).expect("victim key present");
+                self.bytes = self.bytes.saturating_sub(e.bytes);
+                let _ = backend.release_prefix(e.handle);
+                self.evictions += 1;
+                true
             }
+            None => false,
         }
-        mix(use_draft as u8);
-        h
     }
 
     /// Return a live prefix for `problem`, prefilling on miss. LRU
-    /// eviction keeps at most `capacity` prefixes alive on the backend.
+    /// eviction keeps at most `capacity` prefixes (and at most
+    /// `max_bytes` retained bytes) alive on the backend.
     pub fn acquire(
         &mut self,
         backend: &mut dyn Backend,
@@ -106,7 +174,7 @@ impl PrefixCache {
             self.misses += 1;
             return Ok(Acquired::owned(backend.prefill_prefix(problem, use_draft, want_scores)?));
         }
-        let k = Self::key(&problem.tokens, use_draft);
+        let k = prefix_key(&problem.tokens, use_draft);
         self.tick += 1;
         if let Some(e) = self.map.get_mut(&k) {
             e.last_used = self.tick;
@@ -115,19 +183,25 @@ impl PrefixCache {
         }
         self.misses += 1;
         // evict BEFORE prefilling so live backend prefixes never exceed
-        // the capacity, even transiently. O(capacity) scan per miss at
+        // the entry cap, even transiently. O(capacity) scan per miss at
         // capacity — fine for the bounded caps validate() allows; an
         // ordered LRU is a ROADMAP item if caps ever grow.
-        if self.map.len() >= self.capacity {
-            if let Some((&old_k, _)) = self.map.iter().min_by_key(|(_, e)| e.last_used) {
-                if let Some(old) = self.map.remove(&old_k) {
-                    let _ = backend.release_prefix(old.handle);
-                    self.evictions += 1;
-                }
+        while self.map.len() >= self.capacity {
+            if !self.evict_lru(backend, None) {
+                break;
             }
         }
         let handle = backend.prefill_prefix(problem, use_draft, want_scores)?;
-        self.map.insert(k, Entry { handle, last_used: self.tick });
+        let cost = backend.prefix_bytes(handle);
+        self.bytes += cost;
+        self.map.insert(k, Entry { handle, bytes: cost, last_used: self.tick });
+        // byte budget second (the cost is only known post-prefill):
+        // shed LRU entries until under budget, keeping the newcomer
+        while self.max_bytes > 0 && self.bytes > self.max_bytes && self.map.len() > 1 {
+            if !self.evict_lru(backend, Some(k)) {
+                break;
+            }
+        }
         Ok(Acquired { handle, retained: true, hit: false })
     }
 
@@ -136,6 +210,273 @@ impl PrefixCache {
         for (_, e) in self.map.drain() {
             let _ = backend.release_prefix(e.handle);
         }
+        self.bytes = 0;
+    }
+}
+
+impl PrefixProvider for PrefixCache {
+    fn acquire(
+        &mut self,
+        backend: &mut dyn Backend,
+        problem: &Problem,
+        use_draft: bool,
+        want_scores: bool,
+    ) -> Result<Acquired> {
+        PrefixCache::acquire(self, backend, problem, use_draft, want_scores)
+    }
+
+    fn capacity(&self) -> usize {
+        PrefixCache::capacity(self)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared tier: one logical cache, per-shard handle maps (DESIGN.md §10)
+// ---------------------------------------------------------------------------
+
+/// Tier-level counters (totals across every shard).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TierStats {
+    /// acquisitions whose prompt was already a tier entry (the logical
+    /// hit rate — includes first-touch-on-this-shard fills)
+    pub hits: u64,
+    /// acquisitions that created a new tier entry (one prompt prefill)
+    pub misses: u64,
+    /// hits that still had to prefill because THIS shard had no handle
+    /// yet — bounded by (shards - 1) per entry, the re-prefill cost of
+    /// non-affine placement
+    pub shard_fills: u64,
+    /// logical entries evicted by the capacity/byte bounds
+    pub evictions: u64,
+}
+
+struct ShardHandle {
+    handle: PrefixHandle,
+    bytes: u64,
+}
+
+struct TierEntry {
+    /// `per_shard[s]` = the prompt's live handle on shard s's backend
+    per_shard: Vec<Option<ShardHandle>>,
+    last_used: u64,
+}
+
+struct TierInner {
+    shards: usize,
+    capacity: usize,
+    max_bytes: u64,
+    bytes: u64,
+    tick: u64,
+    map: HashMap<u64, TierEntry>,
+    /// handles evicted while their owning shard wasn't the caller:
+    /// release must run on the owning shard's thread (backends are
+    /// thread-owned), so they park here until that shard next calls in
+    pending_release: Vec<Vec<PrefixHandle>>,
+    stats: TierStats,
+}
+
+impl TierInner {
+    /// Evict the LRU logical entry (skipping `protect`): this shard's
+    /// handle is released inline on `backend`; other shards' handles
+    /// park on their pending queues. Returns false when nothing
+    /// evictable remains.
+    fn evict_lru(
+        &mut self,
+        backend: &mut dyn Backend,
+        cur_shard: usize,
+        protect: Option<u64>,
+    ) -> bool {
+        let victim = self
+            .map
+            .iter()
+            .filter(|(k, _)| Some(**k) != protect)
+            .min_by_key(|(_, e)| e.last_used)
+            .map(|(&k, _)| k);
+        let Some(k) = victim else { return false };
+        let e = self.map.remove(&k).expect("victim key present");
+        for (s, h) in e.per_shard.into_iter().enumerate() {
+            if let Some(sh) = h {
+                self.bytes = self.bytes.saturating_sub(sh.bytes);
+                if s == cur_shard {
+                    let _ = backend.release_prefix(sh.handle);
+                } else {
+                    self.pending_release[s].push(sh.handle);
+                }
+            }
+        }
+        self.stats.evictions += 1;
+        true
+    }
+}
+
+/// The sharded serving path's shared prefix cache: one logical entry
+/// per prompt, one live handle per shard that serves it. All state sits
+/// behind one mutex; misses prefill *under the lock*, which serializes
+/// cross-shard prefills of the same instant but guarantees each prompt
+/// is prefilled at most once per shard — hits (the steady state) only
+/// pay a map lookup.
+pub struct SharedPrefixTier {
+    inner: Mutex<TierInner>,
+}
+
+impl SharedPrefixTier {
+    /// `capacity` = logical entry cap (0 disables caching); `max_bytes`
+    /// = byte budget summed over every shard's retained handles (0 =
+    /// entry cap only).
+    pub fn new(shards: usize, capacity: usize, max_bytes: u64) -> Self {
+        SharedPrefixTier {
+            inner: Mutex::new(TierInner {
+                shards: shards.max(1),
+                capacity,
+                max_bytes,
+                bytes: 0,
+                tick: 0,
+                map: HashMap::new(),
+                pending_release: (0..shards.max(1)).map(|_| Vec::new()).collect(),
+                stats: TierStats::default(),
+            }),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.inner.lock().unwrap().capacity
+    }
+
+    /// Live logical entries.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Bytes retained across all shards.
+    pub fn bytes(&self) -> u64 {
+        self.inner.lock().unwrap().bytes
+    }
+
+    pub fn stats(&self) -> TierStats {
+        self.inner.lock().unwrap().stats.clone()
+    }
+
+    /// Return a live prefix for `problem` on `shard`'s backend,
+    /// prefilling at most once per (prompt, shard). Also drains this
+    /// shard's pending release queue — the only thread that may touch
+    /// this backend is the one calling in.
+    pub fn acquire_for_shard(
+        &self,
+        shard: usize,
+        backend: &mut dyn Backend,
+        problem: &Problem,
+        use_draft: bool,
+        want_scores: bool,
+    ) -> Result<Acquired> {
+        let mut guard = self.inner.lock().unwrap();
+        // plain &mut so field borrows below are disjoint (guard derefs
+        // would otherwise re-borrow the whole struct per access)
+        let inner = &mut *guard;
+        assert!(shard < inner.shards, "shard {shard} out of {}", inner.shards);
+        for h in std::mem::take(&mut inner.pending_release[shard]) {
+            let _ = backend.release_prefix(h);
+        }
+        if inner.capacity == 0 {
+            inner.stats.misses += 1;
+            return Ok(Acquired::owned(backend.prefill_prefix(problem, use_draft, want_scores)?));
+        }
+        let k = prefix_key(&problem.tokens, use_draft);
+        inner.tick += 1;
+        let tick = inner.tick;
+
+        if let Some(e) = inner.map.get_mut(&k) {
+            e.last_used = tick;
+            if let Some(sh) = &e.per_shard[shard] {
+                let handle = sh.handle;
+                inner.stats.hits += 1;
+                return Ok(Acquired { handle, retained: true, hit: true });
+            }
+            // known prompt, first service on this shard: prefill once
+            // here and record the shard-local handle
+            let handle = backend.prefill_prefix(problem, use_draft, want_scores)?;
+            let cost = backend.prefix_bytes(handle);
+            let e = inner.map.get_mut(&k).expect("entry just seen");
+            e.per_shard[shard] = Some(ShardHandle { handle, bytes: cost });
+            inner.bytes += cost;
+            inner.stats.hits += 1;
+            inner.stats.shard_fills += 1;
+            while inner.max_bytes > 0 && inner.bytes > inner.max_bytes && inner.map.len() > 1 {
+                if !inner.evict_lru(backend, shard, Some(k)) {
+                    break;
+                }
+            }
+            // a tier hit, but a prefill happened: report hit = false so
+            // per-call semantics stay "hit == no prefill occurred"
+            return Ok(Acquired { handle, retained: true, hit: false });
+        }
+
+        // logical miss: make room, prefill, insert
+        inner.stats.misses += 1;
+        while inner.map.len() >= inner.capacity {
+            if !inner.evict_lru(backend, shard, None) {
+                break;
+            }
+        }
+        let handle = backend.prefill_prefix(problem, use_draft, want_scores)?;
+        let cost = backend.prefix_bytes(handle);
+        let shards = inner.shards;
+        let mut per_shard: Vec<Option<ShardHandle>> = (0..shards).map(|_| None).collect();
+        per_shard[shard] = Some(ShardHandle { handle, bytes: cost });
+        inner.bytes += cost;
+        inner.map.insert(k, TierEntry { per_shard, last_used: tick });
+        while inner.max_bytes > 0 && inner.bytes > inner.max_bytes && inner.map.len() > 1 {
+            if !inner.evict_lru(backend, shard, Some(k)) {
+                break;
+            }
+        }
+        Ok(Acquired { handle, retained: true, hit: false })
+    }
+
+    /// Release every handle `shard` owns (drain/teardown of that
+    /// shard). Logical entries survive while any other shard still
+    /// holds a handle; empty entries are dropped.
+    pub fn clear_shard(&self, shard: usize, backend: &mut dyn Backend) {
+        let mut guard = self.inner.lock().unwrap();
+        let inner = &mut *guard;
+        for h in std::mem::take(&mut inner.pending_release[shard]) {
+            let _ = backend.release_prefix(h);
+        }
+        let mut freed = 0u64;
+        for e in inner.map.values_mut() {
+            if let Some(sh) = e.per_shard[shard].take() {
+                freed += sh.bytes;
+                let _ = backend.release_prefix(sh.handle);
+            }
+        }
+        inner.bytes = inner.bytes.saturating_sub(freed);
+        inner.map.retain(|_, e| e.per_shard.iter().any(|h| h.is_some()));
+    }
+}
+
+/// One shard's view of the tier — the [`PrefixProvider`] the scheduler
+/// threads hand to `ProblemRun::start_with_cache`.
+pub struct ShardPrefix<'a> {
+    pub tier: &'a SharedPrefixTier,
+    pub shard: usize,
+}
+
+impl PrefixProvider for ShardPrefix<'_> {
+    fn acquire(
+        &mut self,
+        backend: &mut dyn Backend,
+        problem: &Problem,
+        use_draft: bool,
+        want_scores: bool,
+    ) -> Result<Acquired> {
+        self.tier.acquire_for_shard(self.shard, backend, problem, use_draft, want_scores)
+    }
+
+    fn capacity(&self) -> usize {
+        self.tier.capacity()
     }
 }
 
@@ -199,6 +540,32 @@ mod tests {
     }
 
     #[test]
+    fn byte_bound_evicts_alongside_entry_cap() {
+        let mut b = CalibratedBackend::for_suite("synth-math500", 11).unwrap();
+        let ps = problems();
+        // budget that fits roughly one calibrated prefix (~tokens*4+116)
+        let one = {
+            let mut probe = CalibratedBackend::for_suite("synth-math500", 11).unwrap();
+            let h = probe.prefill_prefix(&ps[0], false, false).unwrap();
+            probe.prefix_bytes(h)
+        };
+        let mut c = PrefixCache::with_limits(8, one + one / 2);
+        let _ = c.acquire(&mut b, &ps[0], false, false).unwrap();
+        assert_eq!(c.evictions, 0);
+        let a1 = c.acquire(&mut b, &ps[1], false, false).unwrap();
+        // over budget: the older entry was shed, the newcomer retained
+        assert_eq!(c.evictions, 1, "byte budget never evicted");
+        assert_eq!(c.len(), 1);
+        assert!(c.bytes() <= one + one / 2);
+        let again = c.acquire(&mut b, &ps[1], false, false).unwrap();
+        assert!(again.hit);
+        assert_eq!(again.handle, a1.handle);
+        // the shed prefix really was released on the backend
+        let back = c.acquire(&mut b, &ps[0], false, false).unwrap();
+        assert!(!back.hit);
+    }
+
+    #[test]
     fn zero_capacity_passthrough_is_caller_owned() {
         let mut b = CalibratedBackend::for_suite("synth-math500", 4).unwrap();
         let mut c = PrefixCache::new(0);
@@ -218,7 +585,126 @@ mod tests {
         let _ = c.acquire(&mut b, &ps[1], false, false).unwrap();
         c.clear(&mut b);
         assert!(c.is_empty());
+        assert_eq!(c.bytes(), 0);
         // released on the backend: forking the old handle now fails
         assert!(b.fork_paths(a.handle, &[None], 1).is_err());
+    }
+
+    // --- shared tier -------------------------------------------------------
+    //
+    // The tier is exercised here with ONE backend playing every shard:
+    // handle bookkeeping is per-shard-index, and the calibrated backend
+    // issues process-unique handles, so the per-shard map semantics are
+    // fully observable without threads.
+
+    #[test]
+    fn tier_refills_once_per_shard_then_hits() {
+        let mut b = CalibratedBackend::for_suite("synth-math500", 6).unwrap();
+        let t = SharedPrefixTier::new(2, 8, 0);
+        let p = &problems()[0];
+        let a0 = t.acquire_for_shard(0, &mut b, p, true, true).unwrap();
+        assert!(!a0.hit && a0.retained);
+        // same prompt, other shard: logical hit, one shard-local prefill
+        let a1 = t.acquire_for_shard(1, &mut b, p, true, false).unwrap();
+        assert!(!a1.hit, "a shard fill still prefills");
+        assert_ne!(a0.handle, a1.handle, "shards must not share handles");
+        // steady state: both shards hit their own handle
+        let b0 = t.acquire_for_shard(0, &mut b, p, true, false).unwrap();
+        let b1 = t.acquire_for_shard(1, &mut b, p, true, false).unwrap();
+        assert!(b0.hit && b1.hit);
+        assert_eq!(b0.handle, a0.handle);
+        assert_eq!(b1.handle, a1.handle);
+        let s = t.stats();
+        assert_eq!((s.misses, s.shard_fills, s.hits), (1, 1, 3));
+        assert_eq!(t.len(), 1, "one logical entry for one prompt");
+        assert_eq!(b.prefill_stats().prefixes, 2, "exactly once per shard");
+    }
+
+    #[test]
+    fn tier_eviction_parks_foreign_handles_until_owner_drains() {
+        let mut b = CalibratedBackend::for_suite("synth-math500", 7).unwrap();
+        let t = SharedPrefixTier::new(2, 1, 0);
+        let ps = problems();
+        let a0 = t.acquire_for_shard(0, &mut b, &ps[0], false, false).unwrap();
+        let a1 = t.acquire_for_shard(1, &mut b, &ps[0], false, false).unwrap();
+        // shard 0 brings a second prompt: capacity 1 evicts prompt 0 —
+        // shard 0's handle released inline, shard 1's parked
+        let _ = t.acquire_for_shard(0, &mut b, &ps[1], false, false).unwrap();
+        assert_eq!(t.stats().evictions, 1);
+        assert!(b.fork_paths(a0.handle, &[None], 1).is_err(), "own-shard handle not released");
+        assert!(b.fork_paths(a1.handle, &[None], 1).is_ok(), "parked handle released early");
+        // shard 1's next call drains its pending queue
+        let _ = t.acquire_for_shard(1, &mut b, &ps[1], false, false).unwrap();
+        assert!(b.fork_paths(a1.handle, &[None], 1).is_err(), "pending release not drained");
+    }
+
+    #[test]
+    fn tier_byte_budget_counts_all_shards() {
+        let ps = problems();
+        let one = {
+            let mut probe = CalibratedBackend::for_suite("synth-math500", 8).unwrap();
+            let h = probe.prefill_prefix(&ps[0], false, false).unwrap();
+            probe.prefix_bytes(h)
+        };
+        let mut b = CalibratedBackend::for_suite("synth-math500", 8).unwrap();
+        // budget fits one prompt on both shards, not two prompts
+        let t = SharedPrefixTier::new(2, 8, 2 * one + one / 2);
+        let _ = t.acquire_for_shard(0, &mut b, &ps[0], false, false).unwrap();
+        let _ = t.acquire_for_shard(1, &mut b, &ps[0], false, false).unwrap();
+        assert_eq!(t.stats().evictions, 0);
+        let _ = t.acquire_for_shard(0, &mut b, &ps[1], false, false).unwrap();
+        assert_eq!(t.stats().evictions, 1, "byte budget never evicted");
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn tier_zero_capacity_passthrough() {
+        let mut b = CalibratedBackend::for_suite("synth-math500", 9).unwrap();
+        let t = SharedPrefixTier::new(2, 0, 0);
+        let p = &problems()[0];
+        let a = t.acquire_for_shard(1, &mut b, p, false, false).unwrap();
+        assert!(!a.retained && !a.hit);
+        assert!(t.is_empty());
+        b.release_prefix(a.handle).unwrap();
+    }
+
+    #[test]
+    fn tier_clear_shard_keeps_other_shards_entries() {
+        let mut b = CalibratedBackend::for_suite("synth-math500", 10).unwrap();
+        let t = SharedPrefixTier::new(2, 8, 0);
+        let ps = problems();
+        let a0 = t.acquire_for_shard(0, &mut b, &ps[0], false, false).unwrap();
+        let a1 = t.acquire_for_shard(1, &mut b, &ps[0], false, false).unwrap();
+        let b0 = t.acquire_for_shard(0, &mut b, &ps[1], false, false).unwrap();
+        t.clear_shard(0, &mut b);
+        // shard 0's handles are gone from the backend
+        assert!(b.fork_paths(a0.handle, &[None], 1).is_err());
+        assert!(b.fork_paths(b0.handle, &[None], 1).is_err());
+        // the prompt shard 1 also served survives as a logical entry...
+        assert_eq!(t.len(), 1);
+        let r1 = t.acquire_for_shard(1, &mut b, &ps[0], false, false).unwrap();
+        assert!(r1.hit);
+        assert_eq!(r1.handle, a1.handle);
+        t.clear_shard(1, &mut b);
+        assert!(t.is_empty());
+        assert_eq!(t.bytes(), 0);
+    }
+
+    #[test]
+    fn shard_prefix_provider_routes_to_its_shard() {
+        let mut b = CalibratedBackend::for_suite("synth-math500", 12).unwrap();
+        let t = SharedPrefixTier::new(2, 8, 0);
+        let p = &problems()[0];
+        let a = {
+            let mut v0 = ShardPrefix { tier: &t, shard: 0 };
+            assert_eq!(v0.capacity(), 8);
+            PrefixProvider::acquire(&mut v0, &mut b, p, false, false).unwrap()
+        };
+        let c = {
+            let mut v1 = ShardPrefix { tier: &t, shard: 1 };
+            PrefixProvider::acquire(&mut v1, &mut b, p, false, false).unwrap()
+        };
+        assert_ne!(a.handle, c.handle);
+        assert_eq!(t.stats().shard_fills, 1);
     }
 }

@@ -1,5 +1,7 @@
-//! Cross-request continuous batching: a step-level scheduler that
-//! multiplexes concurrent solves into shared backend batches.
+//! Cross-request continuous batching: the per-shard step-level
+//! scheduling loop that multiplexes concurrent solves into shared
+//! backend batches, plus the single-shard [`Scheduler::spawn`]
+//! convenience wrapper over [`BackendPool`].
 //!
 //! # Serving & scheduling design notes
 //!
@@ -13,24 +15,25 @@
 //!
 //! * **Work items.** A [`SolveRequest`] (expression, method, seed,
 //!   reply channel) enters over an mpsc channel from any number of
-//!   connection handlers or bench clients. Intake parses the problem
-//!   (parse failures reply immediately) and places it in the admission
-//!   queue.
+//!   connection handlers or bench clients — routed to one shard's
+//!   channel by the pool's placement policy (`coordinator::pool`).
+//!   Intake parses the problem (parse failures reply immediately) and
+//!   places it in the shard's admission queue.
 //! * **Admission / lane pool.** Each method occupies `Method::lanes()`
 //!   lanes (its parallel paths; SPM methods clamped to the strategy
 //!   pool, and the wire `paths` field is bounded to 1..=16 at parse
 //!   time). The scheduler admits queued jobs —
 //!   FIFO by default, smallest-lane-need-first under
 //!   `AdmitPolicy::SmallestFirst` — while the lane pool
-//!   (`SsrConfig::max_lanes`) has room, and admits at least one job
-//!   whenever the pool is idle so an oversized request can never wedge
-//!   the queue. Admission runs again every tick, so queued problems
-//!   join mid-flight the moment lanes free up. FIFO cannot starve;
-//!   smallest-first maximizes occupancy under mixed loads but can
-//!   delay wide requests indefinitely under pressure — that trade-off
-//!   is the operator's knob.
+//!   (`SsrConfig::max_lanes`, PER SHARD) has room, and admits at least
+//!   one job whenever the pool is idle so an oversized request can
+//!   never wedge the queue. Admission runs again every tick, so queued
+//!   problems join mid-flight the moment lanes free up. FIFO cannot
+//!   starve; smallest-first maximizes occupancy under mixed loads but
+//!   can delay wide requests indefinitely under pressure — that
+//!   trade-off is the operator's knob.
 //! * **Tick loop.** Every tick gathers the union of active lanes across
-//!   ALL in-flight [`ProblemRun`]s and issues ONE batched
+//!   ALL in-flight [`ProblemRun`]s of this shard and issues ONE batched
 //!   draft -> score -> accept|rewrite cycle (speculative lanes, each
 //!   scored against its own run's tau) plus one `target_step` batch
 //!   (non-speculative lanes) via `engine::step_tick`. Backends that pin
@@ -43,40 +46,50 @@
 //!   its lanes — which the same tick's admission pass hands to the next
 //!   queued problem. Slow requests never convoy fast ones.
 //! * **Prefix reuse.** Admission opens lane groups through the shared
-//!   [`PrefixCache`]: the problem prompt is prefilled once and lanes
-//!   are forked from it; a repeated problem (pass@k, re-run suites,
+//!   prefix tier ([`SharedPrefixTier`], DESIGN.md §10): the problem
+//!   prompt is prefilled once per shard that serves it and lanes are
+//!   forked from it; a repeated problem (pass@k, re-run suites,
 //!   benchmark sweeps) skips prompt prefill entirely. Hit / miss /
-//!   eviction gauges surface through `{"op":"stats"}`.
+//!   shard-fill / eviction gauges surface through `{"op":"stats"}`.
 //! * **Observability.** Every batched step call records its lane count
 //!   (`Metrics::record_batch` -> mean/histogram batch occupancy), every
 //!   admission pass samples queue depth, and every admitted job records
-//!   its admission wait. `{"op":"stats"}` surfaces all of it.
-//! * **Shutdown / drain.** The scheduler thread exits once every
-//!   submitter handle is dropped AND the queue and lane pool are empty
-//!   — in-flight work always drains, mirroring the old engine-thread
-//!   contract.
+//!   its admission wait and shard. `{"op":"stats"}` surfaces all of it.
+//! * **Shutdown / drain.** A shard's loop exits once every submitter
+//!   handle is dropped AND its queue and lane pool are empty — in-
+//!   flight work always drains, and the drain releases the shard's
+//!   handles in the shared tier.
 //!
-//! Determinism: with a single submitter the admission order is fixed,
-//! and per-path sampling streams are independent of batch composition
-//! (see `engine::tests::interleaved_ticks_match_sequential_runs`), so
-//! identical submission sequences reproduce identical answers.
+//! Determinism: the run seed is a pure function of (request seed,
+//! prompt) — NOT of admission order or shard placement — and the
+//! calibrated substrate's per-problem draws are derived streams
+//! (`backend::calibrated`), so identical requests reproduce identical
+//! answers on any shard of any pool size (the sharded-vs-single-shard
+//! equivalence tests pin this).
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, Result};
 
 use super::engine::{step_tick, Method, ProblemRun};
 use super::metrics::Metrics;
-use super::prefix::PrefixCache;
+use super::pool::BackendPool;
+use super::prefix::{PrefixProvider, ShardPrefix, SharedPrefixTier};
 use crate::backend::Backend;
 use crate::config::{AdmitPolicy, SsrConfig};
 use crate::runtime::Vocab;
+use crate::util::hash;
 use crate::util::json::{self, Value};
 use crate::workload::problems::problem_from_text;
 use crate::workload::Problem;
+
+/// The submitter side of the pool — kept under its historical name;
+/// see [`coordinator::pool::PoolHandle`](super::pool::PoolHandle).
+pub use super::pool::PoolHandle as SchedulerHandle;
 
 /// One queued unit of work: a solve request and its reply slot.
 pub struct SolveRequest {
@@ -86,21 +99,38 @@ pub struct SolveRequest {
     pub reply: mpsc::Sender<Result<Value>>,
 }
 
-/// Cloneable submitter side of the scheduler. Dropping every handle
-/// lets the scheduler thread drain and exit.
-#[derive(Clone)]
-pub struct SchedulerHandle {
-    tx: mpsc::Sender<SolveRequest>,
+/// Lanes a method will occupy once admitted — the admission and
+/// placement currency. SPM methods clamp their path count to the
+/// strategy pool, so an unclamped estimate could overstate the need and
+/// head-of-line block the queue on capacity the job would never use.
+pub(crate) fn lane_estimate(method: Method, pool_size: usize) -> usize {
+    match method {
+        Method::Parallel { n, spm: true } | Method::Ssr { n, .. } => n.min(pool_size),
+        m => m.lanes(),
+    }
 }
 
-impl SchedulerHandle {
-    pub fn submit(&self, req: SolveRequest) -> Result<()> {
-        self.tx.send(req).map_err(|_| anyhow!("scheduler thread gone"))
+/// Everything one shard's loop needs besides its backend: its identity,
+/// the shared prefix tier, and the pool-wide load gauges (incremented
+/// by `PoolHandle::submit`, decremented here on terminal replies).
+pub(crate) struct ShardCtx {
+    pub shard: usize,
+    pub tier: Arc<SharedPrefixTier>,
+    pub loads: Arc<Vec<AtomicU64>>,
+}
+
+impl ShardCtx {
+    /// One request reached a terminal reply: return its lane estimate
+    /// to the load gauge (advisory placement signal — Relaxed is fine).
+    fn done(&self, est: usize) {
+        self.loads[self.shard].fetch_sub(est as u64, Ordering::Relaxed);
     }
 }
 
 struct QueuedJob {
     problem: Problem,
+    /// submit-side lane estimate (admission weight AND the exact amount
+    /// to return to the load gauge on the terminal reply)
     lanes: usize,
     enqueued: Instant,
     req: SolveRequest,
@@ -110,6 +140,7 @@ struct InFlight {
     run: ProblemRun,
     method: Method,
     gold: i64,
+    est: usize,
     enqueued: Instant,
     admitted: Instant,
     reply: mpsc::Sender<Result<Value>>,
@@ -118,10 +149,12 @@ struct InFlight {
 pub struct Scheduler;
 
 impl Scheduler {
-    /// Spawn the scheduler thread. `backend_factory` runs on that
-    /// thread (PJRT wrapper types are not Send). Returns the submitter
-    /// handle plus the join handle (the server ignores the latter;
-    /// benches join it to flush final clock metrics).
+    /// Spawn a single-shard scheduler (the historical entry point;
+    /// multi-shard serving goes through [`BackendPool::spawn`]).
+    /// `backend_factory` runs on the shard thread (PJRT wrapper types
+    /// are not Send). Returns the submitter handle plus the join handle
+    /// (the server ignores the latter; benches join it to flush final
+    /// clock metrics).
     pub fn spawn<F>(
         cfg: SsrConfig,
         vocab: Vocab,
@@ -131,15 +164,19 @@ impl Scheduler {
     where
         F: FnOnce() -> Result<Box<dyn Backend>> + Send + 'static,
     {
-        let (tx, rx) = mpsc::channel::<SolveRequest>();
-        let join = std::thread::Builder::new()
-            .name("ssr-sched".into())
-            .spawn(move || match backend_factory() {
-                Ok(mut backend) => run_loop(backend.as_mut(), &cfg, &vocab, rx, &metrics),
-                Err(e) => log::error!("backend init failed: {e:#}"),
-            })
-            .context("spawning scheduler thread")?;
-        Ok((SchedulerHandle { tx }, join))
+        let mut cfg = cfg;
+        cfg.shards = 1;
+        let cell = Mutex::new(Some(backend_factory));
+        let (handle, mut joins) = BackendPool::spawn(cfg, vocab, metrics, move |_shard| {
+            let f = cell
+                .lock()
+                .unwrap()
+                .take()
+                .ok_or_else(|| anyhow!("single-shard factory already consumed"))?;
+            f()
+        })?;
+        let join = joins.pop().expect("one shard spawns one thread");
+        Ok((handle, join))
     }
 }
 
@@ -162,21 +199,16 @@ fn intake(
     cfg: &SsrConfig,
     vocab: &Vocab,
     metrics: &Arc<Mutex<Metrics>>,
+    ctx: &ShardCtx,
 ) {
-    // admission estimate = lanes the run will actually open: SPM
-    // methods clamp their path count to the strategy pool, so an
-    // unclamped estimate could overstate the need and head-of-line
-    // block the queue on capacity the job would never use
-    let lanes = match req.method {
-        Method::Parallel { n, spm: true } | Method::Ssr { n, .. } => n.min(cfg.pool_size),
-        m => m.lanes(),
-    };
+    let lanes = lane_estimate(req.method, cfg.pool_size);
     match problem_from_text(vocab, &req.expr) {
         Ok(problem) => {
             queue.push_back(QueuedJob { problem, lanes, enqueued: Instant::now(), req });
         }
         Err(e) => {
             metrics.lock().unwrap().errors += 1;
+            ctx.done(lanes);
             let _ = req.reply.send(Err(e));
         }
     }
@@ -212,23 +244,20 @@ fn finish_job(
     ]))
 }
 
-/// The scheduler thread body: intake -> admit -> tick -> retire, until
-/// every submitter is gone and all work has drained.
-fn run_loop(
+/// One shard's thread body: intake -> admit -> tick -> retire, until
+/// every submitter is gone and all of this shard's work has drained.
+pub(crate) fn run_loop(
     backend: &mut dyn Backend,
     cfg: &SsrConfig,
     vocab: &Vocab,
     rx: mpsc::Receiver<SolveRequest>,
     metrics: &Arc<Mutex<Metrics>>,
+    ctx: &ShardCtx,
 ) {
     let mut queue: VecDeque<QueuedJob> = VecDeque::new();
     let mut inflight: Vec<InFlight> = Vec::new();
     let mut disconnected = false;
-    let mut seq = 0u64;
     let max_lanes = cfg.max_lanes.max(1);
-    // cross-request prefix reuse: repeated problems (pass@k, re-run
-    // suites) fork their lanes off an already-prefilled prompt
-    let mut prefix_cache = PrefixCache::new(if cfg.prefix.enabled { cfg.prefix.capacity } else { 0 });
 
     loop {
         // --- intake ---------------------------------------------------
@@ -237,13 +266,13 @@ fn run_loop(
                 break;
             }
             match rx.recv() {
-                Ok(req) => intake(req, &mut queue, cfg, vocab, metrics),
+                Ok(req) => intake(req, &mut queue, cfg, vocab, metrics, ctx),
                 Err(_) => break,
             }
         }
         loop {
             match rx.try_recv() {
-                Ok(req) => intake(req, &mut queue, cfg, vocab, metrics),
+                Ok(req) => intake(req, &mut queue, cfg, vocab, metrics, ctx),
                 Err(mpsc::TryRecvError::Empty) => break,
                 Err(mpsc::TryRecvError::Disconnected) => {
                     disconnected = true;
@@ -262,25 +291,31 @@ fn run_loop(
                 break;
             }
             let job = queue.remove(pos).expect("picked index in range");
-            seq += 1;
+            // run seed = f(request seed, prompt): decorrelates distinct
+            // problems sharing a wire seed while staying independent of
+            // admission order AND shard placement (equivalence tests)
+            let seed = job.req.seed ^ hash::fnv1a_i32(&job.problem.tokens);
+            let mut provider = ShardPrefix { tier: ctx.tier.as_ref(), shard: ctx.shard };
             match ProblemRun::start_with_cache(
                 backend,
                 cfg,
                 &job.problem,
                 job.req.method,
-                job.req.seed ^ seq,
-                Some(&mut prefix_cache),
+                seed,
+                Some(&mut provider as &mut dyn PrefixProvider),
             ) {
                 Ok(run) => {
                     lanes_used += run.lanes();
-                    metrics
-                        .lock()
-                        .unwrap()
-                        .record_admission_wait(job.enqueued.elapsed().as_secs_f64());
+                    {
+                        let mut m = metrics.lock().unwrap();
+                        m.record_admission_wait(job.enqueued.elapsed().as_secs_f64());
+                        m.record_shard_request(ctx.shard);
+                    }
                     inflight.push(InFlight {
                         run,
                         method: job.req.method,
                         gold: job.problem.answer,
+                        est: job.lanes,
                         enqueued: job.enqueued,
                         admitted: Instant::now(),
                         reply: job.req.reply,
@@ -288,14 +323,17 @@ fn run_loop(
                 }
                 Err(e) => {
                     metrics.lock().unwrap().errors += 1;
+                    ctx.done(job.lanes);
                     let _ = job.req.reply.send(Err(e));
                 }
             }
         }
         {
+            let ts = ctx.tier.stats();
             let mut m = metrics.lock().unwrap();
             m.record_queue_depth(queue.len());
-            m.set_prefix_cache(prefix_cache.hits, prefix_cache.misses, prefix_cache.evictions);
+            m.set_prefix_cache(ts.hits, ts.misses, ts.evictions);
+            m.set_prefix_shard_fills(ts.shard_fills);
         }
 
         if inflight.is_empty() {
@@ -314,18 +352,20 @@ fn run_loop(
                 for lanes in tick.lanes_per_call {
                     m.record_batch(lanes);
                 }
-                m.model_secs = backend.clock_secs();
+                m.set_shard_clock(ctx.shard, backend.clock_secs());
             }
             Err(e) => {
                 // a backend fault mid-batch poisons every in-flight
-                // problem: fail them all rather than serve wrong lanes,
-                // and close their lanes so backend state doesn't leak
+                // problem of this shard: fail them all rather than serve
+                // wrong lanes, and close their lanes so backend state
+                // doesn't leak
                 let msg = format!("scheduler tick failed: {e:#}");
-                log::error!("{msg}");
+                log::error!("shard {}: {msg}", ctx.shard);
                 let mut m = metrics.lock().unwrap();
                 for mut f in inflight.drain(..) {
                     f.run.abort(backend);
                     m.errors += 1;
+                    ctx.done(f.est);
                     let _ = f.reply.send(Err(anyhow!("{msg}")));
                 }
                 continue;
@@ -344,16 +384,20 @@ fn run_loop(
                     f.run.abort(backend);
                     metrics.lock().unwrap().errors += 1;
                 }
+                ctx.done(f.est);
                 let _ = f.reply.send(result);
             } else {
                 i += 1;
             }
         }
     }
-    // drain: release the cached prefixes and flush the final gauges
-    prefix_cache.clear(backend);
+    // drain: release this shard's tier handles and flush final gauges
+    ctx.tier.clear_shard(ctx.shard, backend);
+    let ts = ctx.tier.stats();
     let mut m = metrics.lock().unwrap();
-    m.set_prefix_cache(prefix_cache.hits, prefix_cache.misses, prefix_cache.evictions);
+    m.set_prefix_cache(ts.hits, ts.misses, ts.evictions);
+    m.set_prefix_shard_fills(ts.shard_fills);
+    m.set_shard_clock(ctx.shard, backend.clock_secs());
 }
 
 #[cfg(test)]
@@ -547,6 +591,8 @@ mod tests {
         assert_eq!(m.prefix_misses, 2, "misses {}", m.prefix_misses);
         assert_eq!(m.prefix_hits, 4, "hits {}", m.prefix_hits);
         assert!(m.prefix_hit_rate() > 0.5);
+        // single shard: the tier never re-prefills anywhere else
+        assert_eq!(m.prefix_shard_fills, 0);
     }
 
     #[test]
@@ -610,5 +656,16 @@ mod tests {
             })
             .collect();
         assert_eq!(answers[0], answers[1], "scheduler is not deterministic");
+    }
+
+    #[test]
+    fn lane_estimates_match_admission_currency() {
+        use crate::config::StopRule;
+        assert_eq!(lane_estimate(Method::Baseline, 12), 1);
+        assert_eq!(lane_estimate(Method::SpecReason { tau: 7 }, 12), 1);
+        assert_eq!(lane_estimate(Method::Parallel { n: 4, spm: false }, 12), 4);
+        // SPM methods clamp to the strategy pool
+        assert_eq!(lane_estimate(Method::Parallel { n: 9, spm: true }, 5), 5);
+        assert_eq!(lane_estimate(Method::Ssr { n: 9, tau: 7, stop: StopRule::Full }, 5), 5);
     }
 }

@@ -1,9 +1,13 @@
 //! TCP serving front-end: JSON-lines protocol over a router that feeds
-//! the cross-request scheduler thread (PJRT wrapper types are not Send,
-//! so one model-executor thread owns the backend; the listener and
-//! connection handlers run on the pool and submit work items that the
+//! the sharded backend pool (PJRT wrapper types are not Send, so each
+//! model-executor thread owns its shard's backend; the listener and
+//! connection handlers run on the thread pool and submit work items
+//! that the placement policy routes to a shard and each shard's
 //! scheduler multiplexes into shared step batches — see
-//! `coordinator::scheduler` for the design notes).
+//! `coordinator::pool` and `coordinator::scheduler` for the design
+//! notes). `--shards N` scales throughput with backend count;
+//! `{"op":"stats"}` adds `shards`, `shard_requests`,
+//! `model_secs_makespan` and `prefix_shard_fills` gauges.
 //!
 //! Protocol (one JSON object per line):
 //!   -> {"op":"solve", "expr":"(17+25)*3", "method":"ssr", "paths":5,
@@ -25,6 +29,12 @@
 //! separately as `queue_wait_s`). Concurrent `solve` requests from any
 //! number of connections interleave at step granularity and share
 //! backend batches.
+//!
+//! Serving is deterministic: identical (expr, method, seed) requests
+//! return identical answers regardless of arrival order or shard
+//! placement (DESIGN.md §10). Independent resamples of one problem
+//! (pass@k) must therefore vary the wire `seed` field — repeats with
+//! one seed are replays, not fresh samples.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -37,7 +47,8 @@ use anyhow::{bail, Context, Result};
 
 use super::engine::Method;
 use super::metrics::Metrics;
-use super::scheduler::{Scheduler, SchedulerHandle, SolveRequest};
+use super::pool::{BackendPool, PoolHandle};
+use super::scheduler::SolveRequest;
 use crate::backend::Backend;
 use crate::config::{SsrConfig, StopRule};
 use crate::util::json::{self, Value};
@@ -71,7 +82,7 @@ pub fn parse_method(v: &Value, default_paths: usize, default_tau: u8) -> Result<
 
 pub struct Server {
     pub addr: String,
-    sched: SchedulerHandle,
+    sched: PoolHandle,
     metrics: Arc<Mutex<Metrics>>,
     started: Instant,
     shutdown: Arc<AtomicBool>,
@@ -79,9 +90,9 @@ pub struct Server {
 }
 
 impl Server {
-    /// Spawn the scheduler thread and bind the listener.
-    /// `backend_factory` runs on the scheduler thread (PJRT types are
-    /// not Send).
+    /// Spawn the backend pool (`cfg.shards` scheduler threads) and bind
+    /// the listener. `backend_factory(shard)` runs ON that shard's
+    /// thread (PJRT types are not Send) — once per shard.
     pub fn start<F>(
         host: &str,
         port: u16,
@@ -90,16 +101,16 @@ impl Server {
         backend_factory: F,
     ) -> Result<(Server, TcpListener)>
     where
-        F: FnOnce() -> Result<Box<dyn Backend>> + Send + 'static,
+        F: Fn(usize) -> Result<Box<dyn Backend>> + Send + Sync + 'static,
     {
         let metrics = Arc::new(Mutex::new(Metrics::new()));
-        let (sched, _join) =
-            Scheduler::spawn(cfg.clone(), vocab, Arc::clone(&metrics), backend_factory)?;
+        let (sched, _joins) =
+            BackendPool::spawn(cfg.clone(), vocab, Arc::clone(&metrics), backend_factory)?;
 
         let listener =
             TcpListener::bind((host, port)).with_context(|| format!("binding {host}:{port}"))?;
         let addr = listener.local_addr()?.to_string();
-        log::info!("ssr server listening on {addr}");
+        log::info!("ssr server listening on {addr} ({} shard(s))", sched.shards());
         Ok((
             Server {
                 addr,
@@ -154,7 +165,7 @@ impl Server {
 
 fn handle_conn(
     stream: TcpStream,
-    sched: SchedulerHandle,
+    sched: PoolHandle,
     metrics: Arc<Mutex<Metrics>>,
     started: Instant,
     shutdown: Arc<AtomicBool>,
@@ -189,7 +200,7 @@ fn handle_conn(
 
 fn process_line(
     line: &str,
-    sched: &SchedulerHandle,
+    sched: &PoolHandle,
     metrics: &Arc<Mutex<Metrics>>,
     started: Instant,
     shutdown: &Arc<AtomicBool>,

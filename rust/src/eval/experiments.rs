@@ -124,7 +124,16 @@ pub fn baseline_cost(
 // Fig. 2 — accuracy vs number of parallel paths (saturation study).
 // ---------------------------------------------------------------------------
 
-pub fn fig2(factory: Factory, cfg: &SsrConfig, opts: &ExpOpts) -> Result<String> {
+/// One (suite, n, pass@1) point of the Fig. 2 saturation study.
+#[derive(Debug, Clone)]
+pub struct Fig2Point {
+    pub suite: String,
+    pub n: usize,
+    pub pass1: f64,
+}
+
+pub fn fig2(factory: Factory, cfg: &SsrConfig, opts: &ExpOpts) -> Result<(Vec<Fig2Point>, String)> {
+    let mut rows = Vec::new();
     let mut out = String::new();
     for suite in SUITES {
         let mut points = Vec::new();
@@ -133,6 +142,7 @@ pub fn fig2(factory: Factory, cfg: &SsrConfig, opts: &ExpOpts) -> Result<String>
                 if n == 1 { Method::Baseline } else { Method::Parallel { n, spm: false } };
             let row = run_method(factory, suite, method, cfg, opts, None)?;
             points.push((n as f64, row.pass1));
+            rows.push(Fig2Point { suite: suite.to_string(), n, pass1: row.pass1 });
         }
         out.push_str(&report::series(
             &format!("Fig.2 {suite}: pass@1 vs parallel paths"),
@@ -142,7 +152,7 @@ pub fn fig2(factory: Factory, cfg: &SsrConfig, opts: &ExpOpts) -> Result<String>
         ));
         out.push('\n');
     }
-    Ok(out)
+    Ok((rows, out))
 }
 
 // ---------------------------------------------------------------------------

@@ -6,19 +6,23 @@
 //!           spec-reason|ssr-fast1|ssr-fast2] [--backend pjrt|calibrated]
 //! ssr serve [--host 127.0.0.1] [--port 7878] [--backend ...] [--threads 4]
 //!           [--max-lanes 32] [--admission fifo|smallest-first]
+//!           [--shards N] [--placement least-loaded|affinity|round-robin]
 //! ssr exp   fig2|fig3|fig4|fig5|table1|gamma|all [--backend calibrated]
 //!           [--trials 6] [--problems 60]
 //! ssr selfcheck            # artifacts -> PJRT -> one SSR problem
 //! ```
 //! Shared engine flags: --paths N --tau T --temp X --stop full|fast1|fast2
 //! --selection model-top|model-sample|random|oracle --seed S --artifacts DIR
-//! --prefix-reuse on|off --prefix-cache-cap N   (shared-prefix prefill +
-//! cross-request prefix cache; see DESIGN.md §2)
+//! --prefix-reuse on|off --prefix-cache-cap N --prefix-cache-bytes B
+//! (shared-prefix prefill + cross-request prefix cache; DESIGN.md §2, §10)
 //!
-//! `serve` runs the cross-request scheduler: concurrent solves share
-//! backend step batches inside a `--max-lanes` lane pool (see
-//! `coordinator::scheduler`); `{"op":"stats"}` reports batch occupancy,
-//! queue depth and admission waits alongside the latency percentiles.
+//! `serve` runs the sharded backend pool: `--shards N` scheduler
+//! threads each own one backend and a `--max-lanes` lane pool;
+//! concurrent solves are routed by `--placement` and share backend step
+//! batches per shard (see `coordinator::pool`); `{"op":"stats"}`
+//! reports batch occupancy, queue depth, admission waits, per-shard
+//! request counts and the model-time makespan alongside the latency
+//! percentiles.
 
 use std::path::PathBuf;
 
@@ -128,15 +132,30 @@ fn run() -> Result<()> {
             let threads = args.opt_usize("threads", 4)?;
             let suite = args.opt_str("suite", "synth-livemath");
             args.finish()?;
-            let mut factory = make_factory(backend_kind, &cfg);
+            let factory = make_factory(backend_kind, &cfg);
             let vocab = tokenizer::builtin_vocab();
             let seed = cfg.seed;
-            let factory_once = move || factory(&suite, seed);
+            // one factory serves every shard (called once per shard, on
+            // that shard's thread); all shards share one backend seed so
+            // the calibrated substrate's derived streams make placement
+            // decision-neutral (DESIGN.md §10)
+            let factory = std::sync::Mutex::new(factory);
+            let shard_factory = move |_shard: usize| {
+                let mut f = factory.lock().unwrap();
+                (*f)(&suite, seed)
+            };
             println!(
-                "scheduler: max_lanes={} admission={:?} prefix_reuse={} prefix_cache_cap={}",
-                cfg.max_lanes, cfg.admission, cfg.prefix.enabled, cfg.prefix.capacity
+                "pool: shards={} placement={:?} max_lanes={}/shard admission={:?} \
+                 prefix_reuse={} prefix_cache_cap={} prefix_cache_bytes={}",
+                cfg.shards,
+                cfg.placement,
+                cfg.max_lanes,
+                cfg.admission,
+                cfg.prefix.enabled,
+                cfg.prefix.capacity,
+                cfg.prefix.max_bytes
             );
-            let (server, listener) = Server::start(&host, port, cfg, vocab, factory_once)?;
+            let (server, listener) = Server::start(&host, port, cfg, vocab, shard_factory)?;
             println!("listening on {}", server.addr);
             let pool = ThreadPool::new(threads);
             server.serve(listener, &pool)
@@ -181,7 +200,7 @@ fn run_experiment(
     opts: &ExpOpts,
 ) -> Result<String> {
     Ok(match which {
-        "fig2" => experiments::fig2(factory, cfg, opts)?,
+        "fig2" => experiments::fig2(factory, cfg, opts)?.1,
         "fig3" => experiments::fig3(factory, cfg, opts)?.1,
         "fig4" => experiments::fig4(factory, cfg, opts)?.1,
         "fig5" => experiments::fig5(factory, cfg, opts)?.1,

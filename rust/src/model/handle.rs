@@ -267,53 +267,127 @@ impl ModelHandle {
         self.spec.flops_per_token
     }
 
+    /// Slice a prefilled cache down to one lane and the first `s_len`
+    /// positions: `[L, B, H, S_MAX, D] -> [L, 1, H, s_len, D]`. This is
+    /// what a cached prompt prefix actually needs to retain — the
+    /// prompt's own K/V rows — instead of the full padded prefill
+    /// literal (which dominates host memory on long prompts; ROADMAP
+    /// item, DESIGN.md §10). `fork_cache` re-pads to the compiled
+    /// S_MAX on the way back out.
+    pub fn slice_prefix(&self, src: &KvCache, lane: usize, s_len: usize) -> Result<KvCache> {
+        let k = slice_lane_literal(&src.k, lane, s_len)?;
+        let v = slice_lane_literal(&src.v, lane, s_len)?;
+        Ok(KvCache { k, v, batch: 1 })
+    }
+
     /// Fork a prefilled prompt prefix into a fresh lane-group cache:
     /// gather lane `src_lane`'s K/V rows and broadcast them across a
-    /// `[L, B', H, S, D]` cache whose batch B' is the compiled prefill
-    /// variant fitting `n` lanes — the device-layout op behind
-    /// `PjrtBackend::fork_paths` (DESIGN.md §2). Host-side relayout:
-    /// one gather + one upload per model, amortized over the whole lane
-    /// group and every subsequent fork of the same prefix.
+    /// `[L, B', H, S_MAX, D]` cache whose batch B' is the compiled
+    /// prefill variant fitting `n` lanes — the device-layout op behind
+    /// `PjrtBackend::fork_paths` (DESIGN.md §2). The source may be a
+    /// sliced prefix (S < S_MAX): positions past the source length are
+    /// zero-filled, which is exactly the garbage-past-the-frontier
+    /// state the attention length mask already ignores. Host-side
+    /// relayout: one gather + one upload per model, amortized over the
+    /// whole lane group and every subsequent fork of the same prefix.
     pub fn fork_cache(&self, src: &KvCache, src_lane: usize, n: usize) -> Result<KvCache> {
         let b_new = self.pick_batch(EntryKind::Prefill, n)?;
-        let k = broadcast_lane_literal(&src.k, src_lane, b_new)?;
-        let v = broadcast_lane_literal(&src.v, src_lane, b_new)?;
+        let k = broadcast_lane_literal(&src.k, src_lane, b_new, self.spec.s_max)?;
+        let v = broadcast_lane_literal(&src.v, src_lane, b_new, self.spec.s_max)?;
         Ok(KvCache { k, v, batch: b_new })
     }
 }
 
-/// Broadcast one lane of a `[L, B, ...]` cache literal into a fresh
-/// `[L, B', ...]` literal with every lane a copy of `lane`.
-fn broadcast_lane_literal(lit: &Literal, lane: usize, b_new: usize) -> Result<Literal> {
+/// Slice one lane's first `s_len` positions out of a `[L, B, H, S, D]`
+/// cache literal into a fresh `[L, 1, H, s_len, D]` literal.
+fn slice_lane_literal(lit: &Literal, lane: usize, s_len: usize) -> Result<Literal> {
     let d = crate::runtime::literals::dims(lit)?;
     if d.len() != 5 {
         bail!("cache literal must be [L, B, H, S, D], got {d:?}");
     }
-    let (l, b) = (d[0], d[1]);
+    let (l, b, h, s, dd) = (d[0], d[1], d[2], d[3], d[4]);
+    if lane >= b {
+        bail!("slice source lane {lane} out of batch {b}");
+    }
+    if s_len > s {
+        bail!("slice length {s_len} exceeds cache S {s}");
+    }
+    let src = crate::runtime::literals::to_vec_f32(lit)?;
+    let out = slice_lane(&src, l, b, h, s, dd, lane, s_len);
+    crate::runtime::literals::lit_f32(&out, &[l, 1, h, s_len, dd])
+}
+
+/// Pure relayout behind [`slice_lane_literal`].
+#[allow(clippy::too_many_arguments)]
+fn slice_lane(
+    src: &[f32],
+    l: usize,
+    b: usize,
+    h: usize,
+    s: usize,
+    d: usize,
+    lane: usize,
+    s_len: usize,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; l * h * s_len * d];
+    for li in 0..l {
+        for hi in 0..h {
+            let src_off = (((li * b + lane) * h + hi) * s) * d;
+            let dst_off = ((li * h + hi) * s_len) * d;
+            out[dst_off..dst_off + s_len * d]
+                .copy_from_slice(&src[src_off..src_off + s_len * d]);
+        }
+    }
+    out
+}
+
+/// Broadcast one lane of a `[L, B, H, S, D]` cache literal into a fresh
+/// `[L, B', H, s_out, D]` literal with every lane a copy of `lane`,
+/// zero-padding positions S..s_out (sliced-prefix sources).
+fn broadcast_lane_literal(
+    lit: &Literal,
+    lane: usize,
+    b_new: usize,
+    s_out: usize,
+) -> Result<Literal> {
+    let d = crate::runtime::literals::dims(lit)?;
+    if d.len() != 5 {
+        bail!("cache literal must be [L, B, H, S, D], got {d:?}");
+    }
+    let (l, b, h, s, dd) = (d[0], d[1], d[2], d[3], d[4]);
     if lane >= b {
         bail!("fork source lane {lane} out of batch {b}");
     }
-    let row = d[2] * d[3] * d[4];
+    if s > s_out {
+        bail!("source S {s} exceeds target S {s_out}");
+    }
     let src = crate::runtime::literals::to_vec_f32(lit)?;
-    let out = broadcast_lane(&src, l, b, lane, b_new, row);
-    crate::runtime::literals::lit_f32(&out, &[l, b_new, d[2], d[3], d[4]])
+    let out = broadcast_lane(&src, l, b, h, s, dd, lane, b_new, s_out);
+    crate::runtime::literals::lit_f32(&out, &[l, b_new, h, s_out, dd])
 }
 
-/// Pure relayout behind [`broadcast_lane_literal`]: `row` is the
-/// flattened per-lane element count (H·S·D for a KV cache).
+/// Pure relayout behind [`broadcast_lane_literal`].
+#[allow(clippy::too_many_arguments)]
 fn broadcast_lane(
     src: &[f32],
     l: usize,
     b: usize,
+    h: usize,
+    s: usize,
+    d: usize,
     lane: usize,
     b_new: usize,
-    row: usize,
+    s_out: usize,
 ) -> Vec<f32> {
-    let mut out = vec![0.0f32; l * b_new * row];
+    let mut out = vec![0.0f32; l * b_new * h * s_out * d];
     for li in 0..l {
-        let s = &src[(li * b + lane) * row..(li * b + lane + 1) * row];
-        for bi in 0..b_new {
-            out[(li * b_new + bi) * row..(li * b_new + bi + 1) * row].copy_from_slice(s);
+        for hi in 0..h {
+            let src_off = (((li * b + lane) * h + hi) * s) * d;
+            let row = &src[src_off..src_off + s * d];
+            for bi in 0..b_new {
+                let dst_off = (((li * b_new + bi) * h + hi) * s_out) * d;
+                out[dst_off..dst_off + s * d].copy_from_slice(row);
+            }
         }
     }
     out
@@ -360,9 +434,9 @@ mod tests {
 
     #[test]
     fn broadcast_lane_copies_source_row_everywhere() {
-        // L=2, B=2, row=3 (H·S·D flattened); broadcast lane 1 into B'=3
+        // L=2, B=2, H=1, S=3, D=1; broadcast lane 1 into B'=3 at s_out=3
         let src: Vec<f32> = (0..12).map(|x| x as f32).collect();
-        let out = broadcast_lane(&src, 2, 2, 1, 3, 3);
+        let out = broadcast_lane(&src, 2, 2, 1, 3, 1, 1, 3, 3);
         assert_eq!(out.len(), 2 * 3 * 3);
         // layer 0: lane 1 of src is elements 3..6
         for bi in 0..3 {
@@ -380,8 +454,29 @@ mod tests {
 
     #[test]
     fn broadcast_lane_shrinks_too() {
-        let src: Vec<f32> = (0..8).map(|x| x as f32).collect(); // L=1,B=4,row=2
-        let out = broadcast_lane(&src, 1, 4, 0, 1, 2);
+        let src: Vec<f32> = (0..8).map(|x| x as f32).collect(); // L=1,B=4,H=1,S=2,D=1
+        let out = broadcast_lane(&src, 1, 4, 1, 2, 1, 0, 1, 2);
         assert_eq!(out, vec![0.0, 1.0]);
+    }
+
+    #[test]
+    fn broadcast_pads_sliced_source_with_zeros() {
+        // a sliced prefix (S=2) forked into a compiled cache (s_out=4):
+        // positions past the prompt are zero (masked garbage territory)
+        let src: Vec<f32> = vec![1.0, 2.0]; // L=1,B=1,H=1,S=2,D=1
+        let out = broadcast_lane(&src, 1, 1, 1, 2, 1, 0, 2, 4);
+        assert_eq!(out, vec![1.0, 2.0, 0.0, 0.0, 1.0, 2.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn slice_then_broadcast_roundtrips_prompt_rows() {
+        // L=1, B=2, H=2, S=3, D=1: slice lane 1 to s_len=2, broadcast
+        // back to B'=1, s_out=3 — prompt rows identical, tail zeroed
+        let src: Vec<f32> = (0..12).map(|x| x as f32).collect();
+        let sliced = slice_lane(&src, 1, 2, 2, 3, 1, 1, 2);
+        // lane 1, head 0 holds positions [6,7,(8)]; head 1 holds [9,10,(11)]
+        assert_eq!(sliced, vec![6.0, 7.0, 9.0, 10.0]);
+        let back = broadcast_lane(&sliced, 1, 1, 2, 2, 1, 0, 1, 3);
+        assert_eq!(back, vec![6.0, 7.0, 0.0, 9.0, 10.0, 0.0]);
     }
 }

@@ -1,0 +1,72 @@
+//! FNV-1a hashing, shared by every subsystem that keys on a prompt:
+//! the prefix cache / shared prefix tier (prompt-token keys), the
+//! shard placement policy (affinity on the request expression), and the
+//! calibrated backend's derived RNG streams (per-problem hardness and
+//! SPM score noise are pure functions of the problem key, which is what
+//! makes sharded and single-shard runs decision-equivalent — see
+//! DESIGN.md §10).
+//!
+//! 64-bit FNV-1a: collisions are negligible against any sane cache
+//! capacity, and the key is 8 bytes instead of a cloned token vector.
+
+pub const FNV_OFFSET: u64 = 0xCBF2_9CE4_8422_2325;
+pub const FNV_PRIME: u64 = 0x0000_0100_0000_01B3;
+
+/// FNV-1a over raw bytes.
+pub fn fnv1a_bytes(bytes: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// FNV-1a over a token stream (little-endian byte expansion, matching
+/// the historical per-module implementations this util replaced).
+pub fn fnv1a_i32(xs: &[i32]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &x in xs {
+        for b in x.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+    }
+    h
+}
+
+/// FNV-1a over a string (placement affinity on the wire expression).
+pub fn fnv1a_str(s: &str) -> u64 {
+    fnv1a_bytes(s.as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_input_sensitive() {
+        assert_eq!(fnv1a_i32(&[1, 2, 3]), fnv1a_i32(&[1, 2, 3]));
+        assert_ne!(fnv1a_i32(&[1, 2, 3]), fnv1a_i32(&[1, 2, 4]));
+        assert_ne!(fnv1a_i32(&[1, 2]), fnv1a_i32(&[2, 1]));
+        assert_ne!(fnv1a_i32(&[]), 0);
+    }
+
+    #[test]
+    fn str_and_bytes_agree() {
+        assert_eq!(fnv1a_str("17+25*3"), fnv1a_bytes(b"17+25*3"));
+        assert_ne!(fnv1a_str("17+25*3"), fnv1a_str("17+25*4"));
+    }
+
+    #[test]
+    fn i32_matches_byte_expansion() {
+        // the i32 variant hashes little-endian bytes, so it must agree
+        // with hashing the expanded byte stream directly
+        let xs = [7i32, -1, 1 << 20];
+        let mut bytes = Vec::new();
+        for x in xs {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        assert_eq!(fnv1a_i32(&xs), fnv1a_bytes(&bytes));
+    }
+}

@@ -4,6 +4,7 @@
 //! right-sized implementations here; see DESIGN.md §1).
 
 pub mod cli;
+pub mod hash;
 pub mod json;
 pub mod logging;
 pub mod prop;

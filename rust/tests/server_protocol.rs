@@ -26,7 +26,7 @@ fn request(stream: &mut TcpStream, line: &str) -> Value {
 fn solve_stats_shutdown_roundtrip() {
     let cfg = SsrConfig::default();
     let vocab = tokenizer::builtin_vocab();
-    let (server, listener) = Server::start("127.0.0.1", 0, cfg, vocab, || {
+    let (server, listener) = Server::start("127.0.0.1", 0, cfg, vocab, |_shard| {
         Ok(Box::new(CalibratedBackend::for_suite("synth-math500", 7)?) as Box<dyn Backend>)
     })
     .unwrap();
@@ -89,7 +89,7 @@ fn solve_stats_shutdown_roundtrip() {
 fn concurrent_clients_interleave_through_the_scheduler() {
     let cfg = SsrConfig::default();
     let vocab = tokenizer::builtin_vocab();
-    let (server, listener) = Server::start("127.0.0.1", 0, cfg, vocab, || {
+    let (server, listener) = Server::start("127.0.0.1", 0, cfg, vocab, |_shard| {
         Ok(Box::new(CalibratedBackend::for_suite("synth-math500", 9)?) as Box<dyn Backend>)
     })
     .unwrap();
@@ -131,6 +131,60 @@ fn concurrent_clients_interleave_through_the_scheduler() {
     assert_eq!(r.get_i64("requests").unwrap(), 8);
     assert_eq!(r.get_i64("errors").unwrap(), 0);
     assert!(r.get_f64("mean_batch_occupancy").unwrap() >= 1.0);
+    let _ = request(&mut s, r#"{"op":"shutdown"}"#);
+    srv.join().unwrap();
+}
+
+#[test]
+fn sharded_server_round_trip_and_shard_stats() {
+    let mut cfg = SsrConfig::default();
+    cfg.shards = 2;
+    let vocab = tokenizer::builtin_vocab();
+    let (server, listener) = Server::start("127.0.0.1", 0, cfg, vocab, |_shard| {
+        Ok(Box::new(CalibratedBackend::for_suite("synth-math500", 11)?) as Box<dyn Backend>)
+    })
+    .unwrap();
+    let addr = server.addr.clone();
+    let srv = std::thread::spawn(move || {
+        let pool = ThreadPool::new(8);
+        server.serve(listener, &pool).unwrap();
+    });
+
+    let mut clients: Vec<_> = (0..6)
+        .map(|i| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut s = TcpStream::connect(&addr).unwrap();
+                let r = request(
+                    &mut s,
+                    &format!(
+                        r#"{{"op":"solve","expr":"{}+{}*2","method":"ssr","paths":3,"seed":{}}}"#,
+                        i + 1,
+                        i + 2,
+                        i
+                    ),
+                );
+                assert_eq!(r.get("ok").unwrap().bool().unwrap(), true, "{r:?}");
+                assert_eq!(r.get_i64("gold").unwrap(), (i + 1 + (i + 2) * 2) as i64);
+            })
+        })
+        .collect();
+    for c in clients.drain(..) {
+        c.join().unwrap();
+    }
+    let mut s = TcpStream::connect(&addr).unwrap();
+    let r = request(&mut s, r#"{"op":"stats"}"#);
+    assert_eq!(r.get_i64("requests").unwrap(), 6);
+    assert_eq!(r.get_i64("errors").unwrap(), 0);
+    assert_eq!(r.get_i64("shards").unwrap(), 2);
+    let per_shard = r.get("shard_requests").unwrap().arr().unwrap();
+    assert_eq!(per_shard.len(), 2);
+    let total: i64 = per_shard.iter().map(|v| v.i64().unwrap()).sum();
+    assert_eq!(total, 6, "shard request counts don't add up");
+    assert!(r.get_f64("model_secs_makespan").unwrap() > 0.0);
+    assert!(
+        r.get_f64("model_secs").unwrap() >= r.get_f64("model_secs_makespan").unwrap() - 1e-9
+    );
     let _ = request(&mut s, r#"{"op":"shutdown"}"#);
     srv.join().unwrap();
 }

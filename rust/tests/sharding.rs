@@ -1,0 +1,221 @@
+//! Sharded execution layer, end to end on the calibrated backend (no
+//! artifacts needed): placement policies, shared-tier semantics,
+//! generation-counted handle safety, and the ISSUE acceptance that a
+//! sharded run is vote/decision-equivalent to a single-shard run on the
+//! same workload.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+use ssr::backend::calibrated::CalibratedBackend;
+use ssr::backend::Backend;
+use ssr::config::{PlacePolicy, SsrConfig, StopRule};
+use ssr::coordinator::engine::Method;
+use ssr::coordinator::metrics::Metrics;
+use ssr::coordinator::pool::{BackendPool, PoolHandle};
+use ssr::coordinator::scheduler::SolveRequest;
+use ssr::model::tokenizer;
+use ssr::util::json::Value;
+
+/// Spawn an N-shard pool; every shard's backend gets the SAME seed, so
+/// the calibrated substrate's derived per-problem streams make results
+/// independent of placement (DESIGN.md §10).
+fn spawn(
+    shards: usize,
+    placement: PlacePolicy,
+    backend_seed: u64,
+) -> (PoolHandle, Vec<std::thread::JoinHandle<()>>, Arc<Mutex<Metrics>>) {
+    let mut cfg = SsrConfig::default();
+    cfg.shards = shards;
+    cfg.placement = placement;
+    let metrics = Arc::new(Mutex::new(Metrics::new()));
+    let (handle, joins) =
+        BackendPool::spawn(cfg, tokenizer::builtin_vocab(), Arc::clone(&metrics), move |_s| {
+            Ok(Box::new(CalibratedBackend::for_suite("synth-math500", backend_seed)?)
+                as Box<dyn Backend>)
+        })
+        .unwrap();
+    (handle, joins, metrics)
+}
+
+fn submit(
+    handle: &PoolHandle,
+    expr: &str,
+    method: Method,
+    seed: u64,
+) -> mpsc::Receiver<anyhow::Result<Value>> {
+    let (rtx, rrx) = mpsc::channel();
+    handle
+        .submit(SolveRequest { expr: expr.to_string(), method, seed, reply: rtx })
+        .unwrap();
+    rrx
+}
+
+/// The mixed workload every equivalence comparison runs: distinct
+/// prompts so token accounting is placement-independent too (a repeated
+/// prompt pays its one-time fork billing on each shard that first
+/// serves it, which is cost- but not decision-visible).
+fn workload() -> Vec<(String, Method, u64)> {
+    let mut jobs = Vec::new();
+    for i in 0..10u64 {
+        let method = match i % 3 {
+            0 => Method::Ssr { n: 3, tau: 7, stop: StopRule::Full },
+            1 => Method::Baseline,
+            _ => Method::Parallel { n: 4, spm: true },
+        };
+        jobs.push((format!("{}+{}*{}", i + 2, i + 3, 2 + i % 3), method, i));
+    }
+    jobs
+}
+
+/// Run the workload through a pool and collect, per job, the reply
+/// fields that must be placement-invariant.
+fn run_workload(
+    shards: usize,
+    placement: PlacePolicy,
+) -> Vec<BTreeMap<String, String>> {
+    let (handle, joins, metrics) = spawn(shards, placement, 0xD15C);
+    let replies: Vec<_> = workload()
+        .into_iter()
+        .map(|(expr, method, seed)| submit(&handle, &expr, method, seed))
+        .collect();
+    let out: Vec<BTreeMap<String, String>> = replies
+        .iter()
+        .map(|r| {
+            let v = r.recv().unwrap().unwrap();
+            ["answer", "correct", "gold", "method", "steps", "rewrites", "draft_tokens",
+                "target_tokens"]
+                .iter()
+                .map(|k| (k.to_string(), format!("{:?}", v.get(k).unwrap())))
+                .collect()
+        })
+        .collect();
+    drop(handle);
+    for j in joins {
+        j.join().unwrap();
+    }
+    assert_eq!(metrics.lock().unwrap().errors, 0);
+    out
+}
+
+#[test]
+fn sharded_run_is_decision_equivalent_to_single_shard() {
+    // ISSUE acceptance: identical answers, vote-visible step counts and
+    // token ledgers for 1 shard vs 2 shards vs 3 shards, across every
+    // placement policy — the placement layer must be invisible to
+    // decisions.
+    let baseline = run_workload(1, PlacePolicy::LeastLoaded);
+    for (shards, placement) in [
+        (2, PlacePolicy::LeastLoaded),
+        (2, PlacePolicy::Affinity),
+        (2, PlacePolicy::RoundRobin),
+        (3, PlacePolicy::LeastLoaded),
+    ] {
+        let sharded = run_workload(shards, placement);
+        assert_eq!(
+            baseline, sharded,
+            "results diverge at shards={shards} placement={placement:?}"
+        );
+    }
+}
+
+#[test]
+fn least_loaded_spreads_round_robin_rotates() {
+    for placement in [PlacePolicy::LeastLoaded, PlacePolicy::RoundRobin] {
+        let (handle, joins, metrics) = spawn(2, placement, 1);
+        let replies: Vec<_> = (0..8)
+            .map(|i| {
+                submit(
+                    &handle,
+                    &format!("{}+{}", i + 1, i + 5),
+                    Method::Ssr { n: 3, tau: 7, stop: StopRule::Full },
+                    i,
+                )
+            })
+            .collect();
+        for r in &replies {
+            assert!(r.recv().unwrap().is_ok());
+        }
+        drop(handle);
+        for j in joins {
+            j.join().unwrap();
+        }
+        let m = metrics.lock().unwrap();
+        assert_eq!(m.requests, 8);
+        assert_eq!(m.shard_requests.iter().sum::<u64>(), 8);
+        assert!(
+            m.shard_requests.iter().all(|&r| r >= 1),
+            "{placement:?} starved a shard: {:?}",
+            m.shard_requests
+        );
+    }
+}
+
+#[test]
+fn shared_tier_admits_known_prompts_and_refills_once_per_shard() {
+    // Round-robin the SAME prompt across 2 shards: one logical miss,
+    // exactly one re-prefill on the second shard, hits thereafter.
+    let (handle, joins, metrics) = spawn(2, PlacePolicy::RoundRobin, 2);
+    let m = Method::Ssr { n: 3, tau: 7, stop: StopRule::Full };
+    for seed in 0..6u64 {
+        let r = submit(&handle, "17+25*3", m, seed);
+        assert!(r.recv().unwrap().is_ok());
+    }
+    drop(handle);
+    for j in joins {
+        j.join().unwrap();
+    }
+    let mm = metrics.lock().unwrap();
+    assert_eq!(mm.requests, 6);
+    assert_eq!(mm.prefix_misses, 1, "one logical miss for one prompt");
+    assert_eq!(
+        mm.prefix_shard_fills, 1,
+        "a prompt must be re-prefilled at most once per extra shard"
+    );
+    assert_eq!(mm.prefix_hits, 5, "every acquisition after the miss is a tier hit");
+}
+
+#[test]
+fn stale_prefix_handles_rejected_at_type_level() {
+    // The SlotMap generation counter: a released handle stays dead even
+    // after its slot is recycled — fork/score on it error instead of
+    // silently reading the new occupant.
+    let v = tokenizer::builtin_vocab();
+    let p1 = ssr::workload::problems::problem_from_text(&v, "17+25*3").unwrap();
+    let p2 = ssr::workload::problems::problem_from_text(&v, "4+5*6").unwrap();
+    let mut b = CalibratedBackend::for_suite("synth-math500", 3).unwrap();
+    let h1 = b.prefill_prefix(&p1, true, true).unwrap();
+    b.release_prefix(h1).unwrap();
+    // slot is recycled by the NEXT prefix…
+    let h2 = b.prefill_prefix(&p2, true, true).unwrap();
+    assert_ne!(h1, h2);
+    // …yet the stale handle cannot touch it
+    assert!(b.fork_paths(h1, &[Some(0)], 1).is_err());
+    assert!(b.prefix_scores(h1).is_err());
+    assert_eq!(b.prefix_bytes(h1), 0);
+    // and the live handle works
+    let ids = b.fork_paths(h2, &[Some(0)], 1).unwrap();
+    assert_eq!(ids.len(), 1);
+}
+
+#[test]
+fn pool_survives_malformed_requests_across_shards() {
+    let (handle, joins, metrics) = spawn(2, PlacePolicy::RoundRobin, 5);
+    let bad = submit(&handle, "1+", Method::Baseline, 0);
+    assert!(bad.recv().unwrap().is_err());
+    let good: Vec<_> =
+        (0..4).map(|i| submit(&handle, "2+3", Method::Baseline, i)).collect();
+    for r in &good {
+        assert!(r.recv().unwrap().is_ok());
+    }
+    // the failed parse returned its load estimate: gauges drain to zero
+    assert_eq!(handle.load_of(0) + handle.load_of(1), 0);
+    drop(handle);
+    for j in joins {
+        j.join().unwrap();
+    }
+    let m = metrics.lock().unwrap();
+    assert_eq!(m.errors, 1);
+    assert_eq!(m.requests, 4);
+}

@@ -1,23 +1,71 @@
 //! Design-choice ablations (DESIGN.md §7): the rewrite-threshold sweep
 //! behind the paper's Appendix-C tau=7 choice, and the SPM
-//! selection-mode ablation (random vs model-internal vs oracle). Emits
-//! a BENCH_JSON line for the tracker.
+//! selection-mode ablation (random vs model-internal vs oracle).
+//!
+//! Both now return structured rows (the fig2 treatment), so the
+//! BENCH_JSON line carries per-tau and per-mode scalars the tracker can
+//! watch — in particular the tau=7 plateau (`tau7_minus_tau5_pass1`
+//! should hover near zero while `tau9_minus_tau7_gamma` stays positive:
+//! accuracy has saturated but cost keeps climbing past 7).
 mod common;
-use ssr::eval::experiments;
+use ssr::eval::experiments::{self, TAU_GRID};
 use ssr::util::json;
 
 fn main() {
     let t0 = std::time::Instant::now();
+    let mut taus = Vec::new();
+    let mut sels = Vec::new();
     common::run_timed("ablations", || {
         let mut f = common::calibrated_factory();
-        let mut out =
+        let (tau_rows, mut out) =
             experiments::tau_sweep(&mut f, &common::default_cfg(), &common::bench_opts())?;
-        out.push_str(&experiments::selection_ablation(
+        let (sel_rows, sel_out) = experiments::selection_ablation(
             &mut f,
             &common::default_cfg(),
             &common::bench_opts(),
-        )?);
+        )?;
+        out.push_str(&sel_out);
+        taus = tau_rows;
+        sels = sel_rows;
         Ok(out)
     });
-    common::bench_json("ablations", vec![("wall_s", json::n(t0.elapsed().as_secs_f64()))]);
+
+    // mean across suites per tau / per selection mode
+    let tau_mean = |tau: u8, f: &dyn Fn(&experiments::TauPoint) -> f64| -> f64 {
+        let pts: Vec<f64> = taus.iter().filter(|p| p.tau == tau).map(f).collect();
+        pts.iter().sum::<f64>() / pts.len().max(1) as f64
+    };
+    let sel_mean = |mode: &str| -> f64 {
+        let pts: Vec<f64> =
+            sels.iter().filter(|p| p.selection == mode).map(|p| p.pass1).collect();
+        pts.iter().sum::<f64>() / pts.len().max(1) as f64
+    };
+
+    let tau_keys: [(&str, &str); 5] = [
+        ("tau0_pass1", "tau0_gamma"),
+        ("tau3_pass1", "tau3_gamma"),
+        ("tau5_pass1", "tau5_gamma"),
+        ("tau7_pass1", "tau7_gamma"),
+        ("tau9_pass1", "tau9_gamma"),
+    ];
+    let mut pairs: Vec<(&str, json::Value)> = Vec::new();
+    for (&tau, (pass_key, gamma_key)) in TAU_GRID.iter().zip(tau_keys) {
+        pairs.push((pass_key, json::n(tau_mean(tau, &|p| p.pass1))));
+        pairs.push((gamma_key, json::n(tau_mean(tau, &|p| p.gamma))));
+    }
+    // the plateau scalars the tracker watches (ROADMAP item)
+    pairs.push((
+        "tau7_minus_tau5_pass1",
+        json::n(tau_mean(7, &|p| p.pass1) - tau_mean(5, &|p| p.pass1)),
+    ));
+    pairs.push((
+        "tau9_minus_tau7_gamma",
+        json::n(tau_mean(9, &|p| p.gamma) - tau_mean(7, &|p| p.gamma)),
+    ));
+    pairs.push(("sel_random_pass1", json::n(sel_mean("random"))));
+    pairs.push(("sel_model_sample_pass1", json::n(sel_mean("model-sample"))));
+    pairs.push(("sel_model_top_pass1", json::n(sel_mean("model-top"))));
+    pairs.push(("sel_oracle_pass1", json::n(sel_mean("oracle"))));
+    pairs.push(("wall_s", json::n(t0.elapsed().as_secs_f64())));
+    common::bench_json("ablations", pairs);
 }

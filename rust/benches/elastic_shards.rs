@@ -1,0 +1,295 @@
+//! Elastic-shard bench (calibrated backend, no artifacts needed):
+//!
+//! 1. **Skewed-load stealing** — one hot prompt under affinity
+//!    placement pins every job to a single shard of an N-shard pool
+//!    (`--shards`, default 2). With `steal_threshold = 0` the other
+//!    shards idle and the makespan is the loaded shard's full clock;
+//!    with stealing on, idle shards pull queued jobs and the makespan
+//!    drops. Acceptance: steal-enabled throughput (solves per virtual
+//!    makespan second) >= steal-disabled, with identical decisions.
+//! 2. **Drain/grow under load** — client threads hammer a 3-shard pool
+//!    while one shard is hot-removed (drain-while-serving) and a fresh
+//!    shard is hot-added. Every reply must be ok and decisions must
+//!    match a static single-shard run of the same workload.
+//!
+//! Emits one BENCH_JSON line for the tracker.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use ssr::backend::calibrated::CalibratedBackend;
+use ssr::backend::Backend;
+use ssr::config::{PlacePolicy, SsrConfig, StopRule};
+use ssr::coordinator::engine::Method;
+use ssr::coordinator::metrics::Metrics;
+use ssr::coordinator::pool::{BackendPool, PoolHandle};
+use ssr::coordinator::scheduler::SolveRequest;
+use ssr::model::tokenizer;
+use ssr::util::json;
+
+const SKEW_JOBS: usize = 32;
+const DRAIN_CLIENTS: usize = 4;
+const DRAIN_JOBS_PER_CLIENT: usize = 8;
+
+fn submit(
+    handle: &PoolHandle,
+    expr: &str,
+    method: Method,
+    seed: u64,
+) -> mpsc::Receiver<anyhow::Result<ssr::util::json::Value>> {
+    let (rtx, rrx) = mpsc::channel();
+    handle
+        .submit(SolveRequest { expr: expr.to_string(), method, seed, reply: rtx })
+        .expect("pool alive");
+    rrx
+}
+
+struct SkewReport {
+    makespan_s: f64,
+    model_s: f64,
+    steals: u64,
+    /// solves per virtual makespan second
+    throughput: f64,
+    answers: Vec<Option<i64>>,
+}
+
+/// One hot prompt x `SKEW_JOBS` ssr-m5 jobs on an affinity-placed pool:
+/// every job lands on one shard; the rest of the pool only works if it
+/// steals. Backends are gated so the whole burst is queued before any
+/// shard starts.
+fn run_skewed(shards: usize, steal_threshold: usize) -> anyhow::Result<SkewReport> {
+    let (gate_tx, gate_rx) = mpsc::channel::<()>();
+    let gate = Arc::new(Mutex::new(gate_rx));
+    let mut cfg = SsrConfig::default();
+    cfg.shards = shards;
+    cfg.placement = PlacePolicy::Affinity;
+    cfg.max_lanes = 5; // one ssr-m5 at a time: the hot shard saturates
+    cfg.steal_threshold = steal_threshold;
+    let metrics = Arc::new(Mutex::new(Metrics::new()));
+    let (handle, joins) = BackendPool::spawn(
+        cfg,
+        tokenizer::builtin_vocab(),
+        Arc::clone(&metrics),
+        move |_s| {
+            let _ = gate.lock().unwrap().recv();
+            Ok(Box::new(CalibratedBackend::for_suite("synth-math500", 0xE1A)?)
+                as Box<dyn Backend>)
+        },
+    )?;
+    let m = Method::Ssr { n: 5, tau: 7, stop: StopRule::Full };
+    let replies: Vec<_> =
+        (0..SKEW_JOBS).map(|i| submit(&handle, "17+25*3", m, i as u64)).collect();
+    for _ in 0..shards {
+        gate_tx.send(()).unwrap();
+    }
+    let answers: Vec<Option<i64>> = replies
+        .iter()
+        .map(|r| {
+            let v = r.recv().expect("reply").expect("solve ok");
+            v.get_i64("answer").ok()
+        })
+        .collect();
+    drop(handle);
+    for j in joins {
+        j.join().unwrap();
+    }
+    let mm = metrics.lock().unwrap();
+    assert_eq!(mm.errors, 0, "errors under skewed load");
+    assert_eq!(mm.requests as usize, SKEW_JOBS);
+    let makespan_s = mm.model_secs_makespan();
+    Ok(SkewReport {
+        makespan_s,
+        model_s: mm.model_secs,
+        steals: mm.steals,
+        throughput: SKEW_JOBS as f64 / makespan_s.max(1e-9),
+        answers,
+    })
+}
+
+fn drain_expr(client: usize, job: usize) -> (String, u64) {
+    (format!("{}+{}*{}", 2 + client, 3 + job, 2 + (client + job) % 3), (client * 131 + job) as u64)
+}
+
+/// The drain-scenario workload on a static single-shard pool — the
+/// decision-equivalence baseline.
+fn run_drain_baseline() -> anyhow::Result<Vec<Option<i64>>> {
+    let cfg = SsrConfig::default();
+    let metrics = Arc::new(Mutex::new(Metrics::new()));
+    let (handle, joins) =
+        BackendPool::spawn(cfg, tokenizer::builtin_vocab(), Arc::clone(&metrics), |_s| {
+            Ok(Box::new(CalibratedBackend::for_suite("synth-math500", 0xD0A)?)
+                as Box<dyn Backend>)
+        })?;
+    let m = Method::Ssr { n: 3, tau: 7, stop: StopRule::Full };
+    let mut answers = Vec::new();
+    for c in 0..DRAIN_CLIENTS {
+        for j in 0..DRAIN_JOBS_PER_CLIENT {
+            let (expr, seed) = drain_expr(c, j);
+            let v = submit(&handle, &expr, m, seed).recv().expect("reply").expect("solve ok");
+            answers.push(v.get_i64("answer").ok());
+        }
+    }
+    drop(handle);
+    for j in joins {
+        j.join().unwrap();
+    }
+    Ok(answers)
+}
+
+struct DrainReport {
+    drain_s: f64,
+    wall_s: f64,
+    answers: Vec<Option<i64>>,
+    shards_end: usize,
+}
+
+/// Hammer a 3-shard pool from client threads while one shard is
+/// drained out and a fresh one is added — serving never stops.
+fn run_drain_under_load() -> anyhow::Result<DrainReport> {
+    let mut cfg = SsrConfig::default();
+    cfg.shards = 3;
+    cfg.placement = PlacePolicy::LeastLoaded;
+    let metrics = Arc::new(Mutex::new(Metrics::new()));
+    let (handle, joins) = BackendPool::spawn(
+        cfg,
+        tokenizer::builtin_vocab(),
+        Arc::clone(&metrics),
+        |_s| {
+            Ok(Box::new(CalibratedBackend::for_suite("synth-math500", 0xD0A)?)
+                as Box<dyn Backend>)
+        },
+    )?;
+    let t0 = Instant::now();
+    let m = Method::Ssr { n: 3, tau: 7, stop: StopRule::Full };
+    let clients: Vec<_> = (0..DRAIN_CLIENTS)
+        .map(|c| {
+            let handle = handle.clone();
+            std::thread::spawn(move || {
+                let mut answers = Vec::with_capacity(DRAIN_JOBS_PER_CLIENT);
+                for j in 0..DRAIN_JOBS_PER_CLIENT {
+                    let (expr, seed) = drain_expr(c, j);
+                    let v =
+                        submit(&handle, &expr, m, seed).recv().expect("reply").expect("ok");
+                    answers.push(v.get_i64("answer").ok());
+                }
+                answers
+            })
+        })
+        .collect();
+    // shrink and regrow mid-load: the drain blocks until shard 2 has
+    // finished its in-flight runs, while shards 0/1 keep serving
+    let drain_s = handle.remove_shard(2)?;
+    let added = handle.add_shard()?;
+    assert!(added > 2, "hot-added shard must get a fresh id");
+    let mut answers = Vec::with_capacity(DRAIN_CLIENTS * DRAIN_JOBS_PER_CLIENT);
+    for c in clients {
+        answers.extend(c.join().unwrap());
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let shards_end = handle.shards();
+    drop(handle);
+    for j in joins {
+        j.join().unwrap();
+    }
+    let mm = metrics.lock().unwrap();
+    assert_eq!(mm.errors, 0, "errors during drain-under-load");
+    assert_eq!(mm.requests as usize, DRAIN_CLIENTS * DRAIN_JOBS_PER_CLIENT);
+    assert_eq!(mm.shards_removed, 1);
+    assert_eq!(mm.shards_added, 1);
+    Ok(DrainReport { drain_s, wall_s, answers, shards_end })
+}
+
+/// `--shards N` (default 2) for the skew scenario; tolerant of extra
+/// cargo-bench arguments.
+fn shard_arg() -> usize {
+    let args: Vec<String> = std::env::args().collect();
+    for w in args.windows(2) {
+        if w[0] == "--shards" {
+            if let Ok(n) = w[1].parse::<usize>() {
+                return n.clamp(2, 8);
+            }
+        }
+    }
+    2
+}
+
+fn main() -> anyhow::Result<()> {
+    let t_start = Instant::now();
+    let shards = shard_arg();
+    println!(
+        "## elastic shards: {SKEW_JOBS} hot-prompt jobs on {shards} shard(s) \
+         (steal off/on), then drain-under-load on 3 shards"
+    );
+
+    let solo = run_skewed(1, 0)?;
+    let off = run_skewed(shards, 0)?;
+    let on = run_skewed(shards, 4)?;
+    // decision equivalence across pool size AND work stealing (ISSUE
+    // acceptance: stolen runs re-derive state from the
+    // placement-invariant run seed)
+    assert_eq!(solo.answers, off.answers, "sharded answers diverge from single shard");
+    assert_eq!(solo.answers, on.answers, "stolen runs changed decisions");
+    assert_eq!(off.steals, 0);
+    assert!(on.steals > 0, "skewed load never triggered a steal");
+    let steal_ratio = on.throughput / off.throughput.max(1e-12);
+    println!(
+        "  skew: no-steal makespan {:8.1}s ({:.4} solves/virtual-s)  \
+         steal makespan {:8.1}s ({:.4} solves/virtual-s)  x{:.2}  steals {}",
+        off.makespan_s, off.throughput, on.makespan_s, on.throughput, steal_ratio, on.steals
+    );
+    // acceptance: stealing must not lose throughput on skewed load
+    // (tiny tolerance for the one-time prefill the thief pays)
+    assert!(
+        on.throughput >= off.throughput * 0.999,
+        "stealing lost throughput: {} vs {}",
+        on.throughput,
+        off.throughput
+    );
+
+    let base = run_drain_baseline()?;
+    let drain = run_drain_under_load()?;
+    assert_eq!(
+        base, drain.answers,
+        "decisions changed under shard remove/add while serving"
+    );
+    assert_eq!(drain.shards_end, 3, "3 spawned - 1 drained + 1 added");
+    println!(
+        "  drain-under-load: {} jobs served across a remove+add, drain took {:.3}s \
+         (wall {:.2}s)",
+        DRAIN_CLIENTS * DRAIN_JOBS_PER_CLIENT,
+        drain.drain_s,
+        drain.wall_s
+    );
+
+    let summary = json::obj(vec![
+        ("bench", json::s("elastic_shards")),
+        ("shards", json::i(shards as i64)),
+        ("skew_jobs", json::i(SKEW_JOBS as i64)),
+        ("nosteal_makespan_s", json::n(off.makespan_s)),
+        ("steal_makespan_s", json::n(on.makespan_s)),
+        ("nosteal_model_s", json::n(off.model_s)),
+        ("steal_model_s", json::n(on.model_s)),
+        ("nosteal_throughput", json::n(off.throughput)),
+        ("steal_throughput", json::n(on.throughput)),
+        ("steal_ratio", json::n(steal_ratio)),
+        ("steals", json::i(on.steals as i64)),
+        ("drain_jobs", json::i((DRAIN_CLIENTS * DRAIN_JOBS_PER_CLIENT) as i64)),
+        ("drain_s", json::n(drain.drain_s)),
+        ("elastic_equivalent", ssr::util::json::Value::Bool(true)),
+        ("wall_s", json::n(t_start.elapsed().as_secs_f64())),
+    ]);
+    println!("\nBENCH_JSON {}", summary.print());
+
+    if steal_ratio < 1.2 {
+        eprintln!(
+            "[bench elastic_shards] WARNING: stealing gained only x{steal_ratio:.2} \
+             on the skewed load (expected well above 1x on >= 2 shards)"
+        );
+    }
+    println!(
+        "[bench elastic_shards] completed in {:.2}s",
+        t_start.elapsed().as_secs_f64()
+    );
+    Ok(())
+}

@@ -107,7 +107,7 @@ fn run_mode(label: &str, max_lanes: usize, shards: usize) -> anyhow::Result<Mode
                         })
                         .expect("pool alive");
                     let v = rrx.recv().expect("reply").expect("solve ok");
-                    assert_eq!(v.get("ok").unwrap().bool().unwrap(), true);
+                    assert!(v.get("ok").unwrap().bool().unwrap());
                     answers.push(v.get_i64("answer").ok());
                 }
                 answers

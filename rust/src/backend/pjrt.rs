@@ -236,7 +236,8 @@ impl PjrtBackend {
                 st.stats.draft_tokens += toks.len() as u64 + 1;
             }
             let terminal = toks.last() == Some(&eos)
-                || !out.done[li] && st.trace.len() + self.manifest.t_span + 2 >= self.target.spec.s_max;
+                || !out.done[li]
+                    && st.trace.len() + self.manifest.t_span + 2 >= self.target.spec.s_max;
             results.push(StepOutcome { tokens: toks, terminal });
         }
         Ok(results)

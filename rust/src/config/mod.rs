@@ -176,10 +176,20 @@ pub struct SsrConfig {
     /// admission-queue ordering of each shard's scheduler
     pub admission: AdmitPolicy,
     /// backend shards: scheduler threads each owning one backend
-    /// (`coordinator::pool`); throughput scales with this
+    /// (`coordinator::pool`); throughput scales with this. The pool is
+    /// elastic at runtime (`PoolHandle::add_shard` / `remove_shard`);
+    /// this is the spawn-time count
     pub shards: usize,
     /// how requests are routed to shards
     pub placement: PlacePolicy,
+    /// cross-shard work stealing: a shard whose occupancy stays below
+    /// this many lanes for a full tick (and whose own queue is empty)
+    /// pulls queued-but-unstarted requests from the most-loaded shard.
+    /// 0 disables stealing (the default — placement-only routing)
+    pub steal_threshold: usize,
+    /// `remove_shard` refuses to drain the pool below this many live
+    /// shards
+    pub min_shards: usize,
     /// shared-prefix prefill + cross-request prefix cache / shared tier
     pub prefix: PrefixCacheCfg,
 }
@@ -200,6 +210,8 @@ impl Default for SsrConfig {
             admission: AdmitPolicy::Fifo,
             shards: 1,
             placement: PlacePolicy::LeastLoaded,
+            steal_threshold: 0,
+            min_shards: 1,
             prefix: PrefixCacheCfg::default(),
         }
     }
@@ -223,6 +235,8 @@ impl SsrConfig {
                 "admission" => self.admission = AdmitPolicy::parse(val.str()?)?,
                 "shards" => self.shards = val.usize()?,
                 "placement" => self.placement = PlacePolicy::parse(val.str()?)?,
+                "steal_threshold" => self.steal_threshold = val.usize()?,
+                "min_shards" => self.min_shards = val.usize()?,
                 "prefix_cache" => self.prefix.apply_json(val)?,
                 other => bail!("unknown config key `{other}`"),
             }
@@ -259,6 +273,8 @@ impl SsrConfig {
         if let Some(s) = args.opt("placement") {
             self.placement = PlacePolicy::parse(s)?;
         }
+        self.steal_threshold = args.opt_usize("steal-threshold", self.steal_threshold)?;
+        self.min_shards = args.opt_usize("min-shards", self.min_shards)?;
         if let Some(s) = args.opt("prefix-reuse") {
             self.prefix.enabled = parse_bool(s)?;
         }
@@ -285,6 +301,20 @@ impl SsrConfig {
         }
         if self.shards == 0 || self.shards > 64 {
             bail!("shards must be in 1..=64, got {}", self.shards);
+        }
+        if self.steal_threshold > 1024 {
+            bail!("steal_threshold must be <= 1024, got {}", self.steal_threshold);
+        }
+        if self.min_shards == 0 || self.min_shards > 64 {
+            bail!("min_shards must be in 1..=64, got {}", self.min_shards);
+        }
+        if self.min_shards > self.shards {
+            bail!(
+                "min_shards ({}) must not exceed shards ({}): the pool would start \
+                 permanently below its own removal floor",
+                self.min_shards,
+                self.shards
+            );
         }
         // bound keeps the cache's O(capacity) LRU eviction scan cheap
         if self.prefix.capacity > 4096 {
@@ -421,6 +451,38 @@ mod tests {
 
         assert_eq!(PlacePolicy::parse("least").unwrap(), PlacePolicy::LeastLoaded);
         assert!(PlacePolicy::parse("nope").is_err());
+    }
+
+    #[test]
+    fn elastic_knobs() {
+        let c = SsrConfig::default();
+        assert_eq!(c.steal_threshold, 0, "stealing is opt-in");
+        assert_eq!(c.min_shards, 1);
+
+        let mut c = SsrConfig::default();
+        let v = Value::parse(r#"{"shards": 2, "steal_threshold": 4, "min_shards": 2}"#).unwrap();
+        c.apply_json(&v).unwrap();
+        assert_eq!(c.steal_threshold, 4);
+        assert_eq!(c.min_shards, 2);
+
+        let mut c = SsrConfig::default();
+        assert!(c.apply_json(&Value::parse(r#"{"min_shards": 0}"#).unwrap()).is_err());
+        c.min_shards = 1;
+        assert!(c.apply_json(&Value::parse(r#"{"steal_threshold": 2000}"#).unwrap()).is_err());
+        c.steal_threshold = 0;
+        // a removal floor above the spawn count can never be satisfied
+        assert!(c.apply_json(&Value::parse(r#"{"min_shards": 4}"#).unwrap()).is_err());
+
+        let argv: Vec<String> =
+            ["serve", "--shards", "2", "--steal-threshold", "8", "--min-shards", "2"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        let mut args = Args::parse(&argv).unwrap();
+        let mut c = SsrConfig::default();
+        c.apply_args(&mut args).unwrap();
+        assert_eq!(c.steal_threshold, 8);
+        assert_eq!(c.min_shards, 2);
     }
 
     #[test]

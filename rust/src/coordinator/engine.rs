@@ -213,7 +213,7 @@ impl ProblemRun {
         // open with no cache to warm (none passed, or capacity 0) would
         // be pure fork overhead (on PJRT: an extra cache broadcast per
         // model), so it stays on the legacy path.
-        let cache_usable = cache.as_deref().map_or(false, |c| c.capacity() > 0);
+        let cache_usable = cache.as_deref().is_some_and(|c| c.capacity() > 0);
         let use_prefix = cfg.prefix.enabled && (cache_usable || method.lanes() > 1);
         let (ids, selection) = if use_prefix {
             // --- shared-prefix open: prefill the prompt once, read the

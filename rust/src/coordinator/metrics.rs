@@ -62,6 +62,16 @@ pub struct Metrics {
     pub shard_clocks: Vec<f64>,
     /// requests admitted per shard (placement telemetry)
     pub shard_requests: Vec<u64>,
+    /// queued jobs moved by cross-shard work stealing
+    pub steals: u64,
+    /// shard lifecycle events (`PoolHandle::add_shard` / `remove_shard`)
+    pub shards_added: u64,
+    pub shards_removed: u64,
+    /// completed shard drains and their durations (remove_shard's
+    /// mark-draining -> joined span)
+    pub drains: u64,
+    pub drain_secs_sum: f64,
+    pub drain_secs_max: f64,
 }
 
 impl Metrics {
@@ -90,6 +100,12 @@ impl Metrics {
             model_secs: 0.0,
             shard_clocks: Vec::new(),
             shard_requests: Vec::new(),
+            steals: 0,
+            shards_added: 0,
+            shards_removed: 0,
+            drains: 0,
+            drain_secs_sum: 0.0,
+            drain_secs_max: 0.0,
         }
     }
 
@@ -117,6 +133,34 @@ impl Metrics {
             self.model_secs
         } else {
             self.shard_clocks.iter().cloned().fold(0.0, f64::max)
+        }
+    }
+
+    /// `n` queued jobs stolen by an under-occupied shard.
+    pub fn record_steals(&mut self, n: u64) {
+        self.steals += n;
+    }
+
+    /// One shard hot-added at runtime.
+    pub fn record_shard_added(&mut self) {
+        self.shards_added += 1;
+    }
+
+    /// One shard drained and removed; `drain_secs` is the mark-draining
+    /// -> joined span.
+    pub fn record_shard_removed(&mut self, drain_secs: f64) {
+        self.shards_removed += 1;
+        self.drains += 1;
+        self.drain_secs_sum += drain_secs;
+        self.drain_secs_max = self.drain_secs_max.max(drain_secs);
+    }
+
+    /// Mean shard-drain duration (0 before any drain).
+    pub fn mean_drain_secs(&self) -> f64 {
+        if self.drains == 0 {
+            0.0
+        } else {
+            self.drain_secs_sum / self.drains as f64
         }
     }
 
@@ -274,6 +318,11 @@ impl Metrics {
             ("model_secs_makespan", n(self.model_secs_makespan())),
             ("shards", i(self.shard_clocks.len().max(1) as i64)),
             ("shard_requests", arr(shard_requests)),
+            ("steals", i(self.steals as i64)),
+            ("shards_added", i(self.shards_added as i64)),
+            ("shards_removed", i(self.shards_removed as i64)),
+            ("drain_mean_s", n(self.mean_drain_secs())),
+            ("drain_max_s", n(self.drain_secs_max)),
         ])
     }
 }
@@ -393,6 +442,27 @@ mod tests {
         assert!((v.get_f64("model_secs_makespan").unwrap() - 6.0).abs() < 1e-12);
         assert_eq!(v.get_i64("prefix_shard_fills").unwrap(), 3);
         assert_eq!(v.get("shard_requests").unwrap().arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn lifecycle_gauges() {
+        let mut m = Metrics::new();
+        assert_eq!(m.mean_drain_secs(), 0.0);
+        m.record_steals(3);
+        m.record_steals(2);
+        m.record_shard_added();
+        m.record_shard_removed(0.2);
+        m.record_shard_removed(0.4);
+        assert_eq!(m.steals, 5);
+        assert_eq!((m.shards_added, m.shards_removed, m.drains), (1, 2, 2));
+        assert!((m.mean_drain_secs() - 0.3).abs() < 1e-12);
+        assert!((m.drain_secs_max - 0.4).abs() < 1e-12);
+        let v = m.summary_json(1.0);
+        assert_eq!(v.get_i64("steals").unwrap(), 5);
+        assert_eq!(v.get_i64("shards_added").unwrap(), 1);
+        assert_eq!(v.get_i64("shards_removed").unwrap(), 2);
+        assert!((v.get_f64("drain_mean_s").unwrap() - 0.3).abs() < 1e-12);
+        assert!((v.get_f64("drain_max_s").unwrap() - 0.4).abs() < 1e-12);
     }
 
     #[test]

@@ -1,22 +1,44 @@
-//! `BackendPool`: the sharded execution layer (DESIGN.md §10).
+//! `BackendPool`: the elastic sharded execution layer (DESIGN.md §10,
+//! §11).
 //!
 //! One scheduler thread per backend shard, each owning its own
 //! `Box<dyn Backend>` (PJRT wrapper types are not Send, so a backend
-//! never leaves the thread that built it), its own lane pool and
-//! admission queue, and its own step-tick loop
-//! (`coordinator::scheduler::run_loop`). Work is routed at submit time
-//! by a placement policy:
+//! never leaves the thread that built it), its own lane pool, and a
+//! *shared* admission queue slot (so idle shards can steal from it),
+//! running the step-tick loop (`coordinator::scheduler::run_loop`).
+//! Work is routed at submit time by a placement policy:
 //!
 //! * **least-loaded** (default) — argmin over the pool-wide load
 //!   gauges (outstanding lane estimates, incremented at submit and
 //!   returned on the terminal reply). Balances mixed loads; ties break
-//!   to the lowest shard id so single-stream traffic stays put.
-//! * **affinity** — hash of the request expression mod shards: every
-//!   repeat of a prompt lands on the shard that already holds its
+//!   to the lowest slot so single-stream traffic stays put.
+//! * **affinity** — hash of the request expression mod live shards:
+//!   every repeat of a prompt lands on the shard that already holds its
 //!   prefilled prefix, maximizing tier hits at the cost of balance
 //!   under skewed prompt distributions.
 //! * **round-robin** — strict rotation (load-blind; the bench
 //!   baseline).
+//!
+//! The shard set is **elastic** at runtime:
+//!
+//! * [`PoolHandle::add_shard`] spawns a new scheduler thread (its
+//!   backend built by the pool's stored factory ON that thread),
+//!   registers it with the placement table, and lets the shared prefix
+//!   tier grow its per-shard tables on the shard's first acquisition.
+//! * [`PoolHandle::remove_shard`] marks the shard draining and removes
+//!   it from the placement table (no new placements, no stealing), re-
+//!   places its queued-but-unstarted jobs onto the survivors, closes
+//!   its channel, and blocks until the shard has finished its in-flight
+//!   runs, released its prefix-tier handles, and flushed its clock
+//!   gauges — all while the other shards keep serving. `min_shards`
+//!   bounds how far the pool can drain.
+//! * **Work stealing** (`steal_threshold > 0`): a shard whose occupancy
+//!   stays below the threshold for a full tick pulls queued jobs from
+//!   the most-loaded shard's admission queue ([`ShardRegistry::
+//!   steal_into`]). Stolen runs re-derive their state from the
+//!   placement-invariant run seed, so decisions are identical wherever
+//!   a job lands (asserted in `tests/sharding.rs` and
+//!   `benches/elastic_shards.rs`).
 //!
 //! The shards share ONE logical prefix cache
 //! ([`SharedPrefixTier`](super::prefix::SharedPrefixTier)): a prompt
@@ -24,59 +46,216 @@
 //! re-prefilled at most once per shard that serves it. Throughput
 //! scales with shard count because each shard's backend clock advances
 //! independently — `Metrics::model_secs_makespan` (max over shards) is
-//! the virtual wall-clock the `serving_scheduler` bench divides by.
+//! the virtual wall-clock the serving benches divide by.
 //!
 //! Shutdown / drain: dropping every [`PoolHandle`] clone closes every
 //! shard's channel; each shard finishes its queued and in-flight work,
 //! releases its tier handles, flushes its clock gauge, and exits —
-//! `BackendPool::spawn`'s join handles complete in any order.
+//! `BackendPool::spawn`'s join handles complete in any order. Shard
+//! threads hold only a `Weak` registry reference, so they never keep
+//! their own channels alive.
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use super::metrics::Metrics;
 use super::prefix::SharedPrefixTier;
-use super::scheduler::{self, lane_estimate, ShardCtx, SolveRequest};
+use super::scheduler::{self, lane_estimate, QueuedJob, ShardCtx, SolveRequest};
 use crate::backend::Backend;
 use crate::config::{PlacePolicy, SsrConfig};
 use crate::runtime::Vocab;
 use crate::util::hash;
 
-/// Cloneable submitter side of the pool: routes each request to a
-/// shard and tracks outstanding load. Dropping every clone lets every
+/// Hard cap on concurrently live shards (matches `SsrConfig::validate`).
+const MAX_SHARDS: usize = 64;
+
+/// Try to hand `req` to the slot at `first`, rotating past dead shards
+/// (closed channels) and moving `est` onto the accepting shard's load
+/// gauge. Shared by `PoolHandle::submit` and the drain's job
+/// re-placement so the fallback semantics cannot diverge. Returns false
+/// when every slot's channel is gone.
+fn send_with_fallback(slots: &[ShardSlot], first: usize, est: u64, req: SolveRequest) -> bool {
+    let n = slots.len();
+    let mut req = req;
+    for attempt in 0..n {
+        let s = &slots[(first + attempt) % n];
+        s.load.fetch_add(est, Ordering::Relaxed);
+        match s.tx.send(req) {
+            Ok(()) => return true,
+            Err(mpsc::SendError(returned)) => {
+                s.load.fetch_sub(est, Ordering::Relaxed);
+                req = returned;
+            }
+        }
+    }
+    false
+}
+
+type BackendFactory = dyn Fn(usize) -> Result<Box<dyn Backend>> + Send + Sync;
+
+/// One live shard's registry entry. The queue / load / draining cells
+/// are shared with the shard's own `ShardCtx`, which is what lets
+/// submit, steal, and drain coordinate with the running loop.
+pub(crate) struct ShardSlot {
+    pub(crate) id: usize,
+    tx: mpsc::Sender<SolveRequest>,
+    pub(crate) queue: Arc<Mutex<VecDeque<QueuedJob>>>,
+    pub(crate) load: Arc<AtomicU64>,
+    draining: Arc<AtomicBool>,
+    /// closed (recv errors) when the shard thread has fully exited —
+    /// after its drain flushed the final clock/tier gauges
+    done_rx: mpsc::Receiver<()>,
+    /// retained for hot-added shards so `remove_shard` can reap the
+    /// thread after the done signal; initial shards hand their join
+    /// handles to `BackendPool::spawn`'s caller instead
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Shared pool state: the live shard table plus everything needed to
+/// spawn a new shard at runtime. Shard threads hold this only weakly.
+pub(crate) struct ShardRegistry {
+    cfg: SsrConfig,
+    vocab: Vocab,
+    metrics: Arc<Mutex<Metrics>>,
+    tier: Arc<SharedPrefixTier>,
+    factory: Box<BackendFactory>,
+    next_id: AtomicUsize,
+    pub(crate) slots: Mutex<Vec<ShardSlot>>,
+}
+
+impl ShardRegistry {
+    /// Spawn one shard thread for `id` and return its registry slot —
+    /// the caller inserts it into `slots`. The backend is built by the
+    /// stored factory ON the new thread.
+    fn spawn_shard(
+        self: &Arc<Self>,
+        id: usize,
+    ) -> Result<(ShardSlot, std::thread::JoinHandle<()>)> {
+        let (tx, rx) = mpsc::channel::<SolveRequest>();
+        let (done_tx, done_rx) = mpsc::channel::<()>();
+        let queue = Arc::new(Mutex::new(VecDeque::new()));
+        let load = Arc::new(AtomicU64::new(0));
+        let draining = Arc::new(AtomicBool::new(false));
+        let ctx = ShardCtx {
+            shard: id,
+            tier: Arc::clone(&self.tier),
+            load: Arc::clone(&load),
+            queue: Arc::clone(&queue),
+            draining: Arc::clone(&draining),
+            registry: Arc::downgrade(self),
+        };
+        let cfg = self.cfg.clone();
+        let vocab = self.vocab.clone();
+        let metrics = Arc::clone(&self.metrics);
+        let join = std::thread::Builder::new()
+            .name(format!("ssr-shard-{id}"))
+            .spawn(move || {
+                // dropped when the thread exits — the drain signal
+                let _done = done_tx;
+                // build the backend via a briefly-upgraded registry ref,
+                // then drop the strong ref before serving: a shard that
+                // kept the registry alive would keep its own channel
+                // sender alive and the pool could never drain
+                let backend = match ctx.registry.upgrade() {
+                    Some(reg) => (reg.factory)(id),
+                    None => return,
+                };
+                match backend {
+                    Ok(mut b) => {
+                        scheduler::run_loop(b.as_mut(), &cfg, &vocab, rx, &metrics, &ctx)
+                    }
+                    Err(e) => log::error!("shard {id} backend init failed: {e:#}"),
+                }
+            })
+            .with_context(|| format!("spawning scheduler shard {id}"))?;
+        Ok((ShardSlot { id, tx, queue, load, draining, done_rx, join: None }, join))
+    }
+
+    /// Move queued-but-unstarted jobs from the most-loaded other shard
+    /// into `ctx`'s queue, up to `room` lanes' worth. The thief steals
+    /// from the back of the victim's deque (the owner admits from the
+    /// front), and the jobs' lane estimates move between the load
+    /// gauges with them. Returns the number of jobs moved.
+    pub(crate) fn steal_into(&self, ctx: &ShardCtx, room: usize) -> usize {
+        if room == 0 {
+            return 0;
+        }
+        let slots = self.slots.lock().unwrap();
+        // re-check under the lock: remove_shard flips the flag while
+        // holding it, so a thief that raced past its loop's check must
+        // not pull work into a shard that is already draining
+        if ctx.draining.load(Ordering::Relaxed) {
+            return 0;
+        }
+        let victim = slots
+            .iter()
+            .filter(|s| s.id != ctx.shard && !s.queue.lock().unwrap().is_empty())
+            .max_by_key(|s| s.load.load(Ordering::Relaxed));
+        let Some(victim) = victim else { return 0 };
+        let mut vq = victim.queue.lock().unwrap();
+        let mut moved = 0usize;
+        let mut gained = 0usize;
+        while gained < room {
+            let Some(job) = vq.pop_back() else { break };
+            victim.load.fetch_sub(job.lanes as u64, Ordering::Relaxed);
+            ctx.load.fetch_add(job.lanes as u64, Ordering::Relaxed);
+            gained += job.lanes.max(1);
+            moved += 1;
+            ctx.queue.lock().unwrap().push_back(job);
+        }
+        moved
+    }
+}
+
+/// Cloneable submitter side of the pool: routes each request to a live
+/// shard, tracks outstanding load, and manages the shard lifecycle
+/// (`add_shard` / `remove_shard`). Dropping every clone lets every
 /// shard drain and exit.
 #[derive(Clone)]
 pub struct PoolHandle {
-    txs: Vec<mpsc::Sender<SolveRequest>>,
-    loads: Arc<Vec<AtomicU64>>,
-    placement: PlacePolicy,
+    reg: Arc<ShardRegistry>,
     rr: Arc<AtomicUsize>,
-    pool_size: usize,
 }
 
 impl PoolHandle {
+    /// Live (non-draining) shards.
     pub fn shards(&self) -> usize {
-        self.txs.len()
+        self.reg.slots.lock().unwrap().len()
     }
 
-    /// Pick the shard for one request (see the module docs for the
-    /// policies).
-    fn place(&self, expr: &str) -> usize {
-        let n = self.txs.len();
+    /// Current outstanding lane estimate on shard `id` (telemetry);
+    /// 0 for removed shards.
+    pub fn load_of(&self, id: usize) -> u64 {
+        self.reg
+            .slots
+            .lock()
+            .unwrap()
+            .iter()
+            .find(|s| s.id == id)
+            .map(|s| s.load.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    /// Pick the slot position for one request (see the module docs for
+    /// the policies). Caller holds the slots lock.
+    fn place(&self, slots: &[ShardSlot], expr: &str) -> usize {
+        let n = slots.len();
         if n == 1 {
             return 0;
         }
-        match self.placement {
+        match self.reg.cfg.placement {
             PlacePolicy::RoundRobin => self.rr.fetch_add(1, Ordering::Relaxed) % n,
             PlacePolicy::Affinity => (hash::fnv1a_str(expr) % n as u64) as usize,
             PlacePolicy::LeastLoaded => {
                 let mut best = 0;
                 let mut best_load = u64::MAX;
-                for (i, l) in self.loads.iter().enumerate() {
-                    let v = l.load(Ordering::Relaxed);
+                for (i, s) in slots.iter().enumerate() {
+                    let v = s.load.load(Ordering::Relaxed);
                     if v < best_load {
                         best = i;
                         best_load = v;
@@ -89,33 +268,103 @@ impl PoolHandle {
 
     /// Route and enqueue one request. The lane estimate joins the load
     /// gauge immediately (so a burst of submissions spreads before any
-    /// shard has even started) and is returned by the shard on the
-    /// terminal reply. A shard whose thread died (backend init failure)
-    /// has a closed channel; submission falls back to the remaining
-    /// shards in rotation before giving up, so one dead shard degrades
-    /// capacity instead of failing a fraction of all traffic.
+    /// shard has even started) and is returned by the owning shard on
+    /// the terminal reply. A shard whose thread died (backend init
+    /// failure) has a closed channel; submission falls back to the
+    /// remaining shards in rotation before giving up, so one dead shard
+    /// degrades capacity instead of failing a fraction of all traffic.
     pub fn submit(&self, req: SolveRequest) -> Result<()> {
-        let first = self.place(&req.expr);
-        let n = self.txs.len();
-        let est = lane_estimate(req.method, self.pool_size) as u64;
-        let mut req = req;
-        for attempt in 0..n {
-            let shard = (first + attempt) % n;
-            self.loads[shard].fetch_add(est, Ordering::Relaxed);
-            match self.txs[shard].send(req) {
-                Ok(()) => return Ok(()),
-                Err(mpsc::SendError(returned)) => {
-                    self.loads[shard].fetch_sub(est, Ordering::Relaxed);
-                    req = returned;
-                }
-            }
+        let slots = self.reg.slots.lock().unwrap();
+        let n = slots.len();
+        if n == 0 {
+            bail!("no live scheduler shards");
         }
-        Err(anyhow!("all {n} scheduler shards gone"))
+        let first = self.place(&slots, &req.expr);
+        let est = lane_estimate(req.method, self.reg.cfg.pool_size) as u64;
+        if send_with_fallback(&slots, first, est, req) {
+            Ok(())
+        } else {
+            Err(anyhow!("all {n} scheduler shards gone"))
+        }
     }
 
-    /// Current outstanding lane estimate on one shard (telemetry).
-    pub fn load_of(&self, shard: usize) -> u64 {
-        self.loads[shard].load(Ordering::Relaxed)
+    /// Hot-add one shard: spawn its scheduler thread (backend built by
+    /// the pool's stored factory on that thread) and register it with
+    /// the placement table. Returns the new shard id. The shared prefix
+    /// tier grows its per-shard tables on the shard's first
+    /// acquisition.
+    pub fn add_shard(&self) -> Result<usize> {
+        let id = {
+            // cap check and insertion under ONE lock acquisition, so
+            // concurrent add_shard calls cannot race past the cap; the
+            // brief spawn-under-lock only stalls submitters during the
+            // rare lifecycle op
+            let mut slots = self.reg.slots.lock().unwrap();
+            if slots.len() >= MAX_SHARDS {
+                bail!("shard cap ({MAX_SHARDS}) reached");
+            }
+            let id = self.reg.next_id.fetch_add(1, Ordering::Relaxed);
+            let (mut slot, join) = self.reg.spawn_shard(id)?;
+            // retain the join handle so remove_shard can reap the
+            // thread after its done signal (initial shards are joined
+            // by BackendPool::spawn's caller instead)
+            slot.join = Some(join);
+            slots.push(slot);
+            id
+        };
+        self.reg.metrics.lock().unwrap().record_shard_added();
+        Ok(id)
+    }
+
+    /// Hot-remove shard `id`: mark it draining and take it out of the
+    /// placement table (no new placements, no stealing), re-place its
+    /// queued-but-unstarted jobs onto the survivors, close its channel,
+    /// and block until it has finished its in-flight runs, released its
+    /// prefix-tier handles, and flushed its final gauges. Other shards
+    /// keep serving throughout. Returns the drain duration in seconds.
+    pub fn remove_shard(&self, id: usize) -> Result<f64> {
+        let t0 = Instant::now();
+        let slot = {
+            let mut slots = self.reg.slots.lock().unwrap();
+            let pos = slots
+                .iter()
+                .position(|s| s.id == id)
+                .ok_or_else(|| anyhow!("no live shard {id}"))?;
+            let min = self.reg.cfg.min_shards.max(1);
+            if slots.len() <= min {
+                bail!("cannot drain shard {id}: pool is at min_shards={min}");
+            }
+            let slot = slots.remove(pos);
+            slot.draining.store(true, Ordering::Relaxed);
+            // re-place queued-but-unstarted jobs by re-submitting them
+            // through the survivors' channels (a parked shard wakes on
+            // its channel, not on its queue); gauges move with the jobs
+            let moved: Vec<QueuedJob> = slot.queue.lock().unwrap().drain(..).collect();
+            for (i, job) in moved.into_iter().enumerate() {
+                let est = job.lanes as u64;
+                slot.load.fetch_sub(est, Ordering::Relaxed);
+                if !send_with_fallback(&slots, i % slots.len(), est, job.req) {
+                    // every survivor is dead: the reply sender drops and
+                    // the client sees a disconnect
+                    log::error!("drain of shard {id}: no survivor accepted a queued job");
+                }
+            }
+            slot
+        };
+        // closing the channel is the drain signal: the shard finishes
+        // its in-flight runs, releases its tier handles, flushes its
+        // clock gauges, and drops its done sender
+        let ShardSlot { tx, done_rx, join, .. } = slot;
+        drop(tx);
+        let _ = done_rx.recv();
+        if let Some(j) = join {
+            // hot-added shard: reap the thread so its final flush is
+            // fully ordered before remove_shard returns
+            let _ = j.join();
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        self.reg.metrics.lock().unwrap().record_shard_removed(secs);
+        Ok(secs)
     }
 }
 
@@ -124,8 +373,10 @@ pub struct BackendPool;
 impl BackendPool {
     /// Spawn `cfg.shards` scheduler threads, each owning one backend
     /// built by `factory(shard)` ON that shard's thread. Returns the
-    /// routing handle plus one join handle per shard (the server
-    /// ignores them; benches join them to flush final clock metrics).
+    /// routing handle plus one join handle per initial shard (the
+    /// server ignores them; benches join them to flush final clock
+    /// metrics). The factory is retained by the pool so
+    /// [`PoolHandle::add_shard`] can spawn more shards at runtime.
     pub fn spawn<F>(
         cfg: SsrConfig,
         vocab: Vocab,
@@ -141,42 +392,24 @@ impl BackendPool {
             if cfg.prefix.enabled { cfg.prefix.capacity } else { 0 },
             cfg.prefix.max_bytes,
         ));
-        let loads: Arc<Vec<AtomicU64>> =
-            Arc::new((0..shards).map(|_| AtomicU64::new(0)).collect());
         metrics.lock().unwrap().init_shards(shards);
-        let factory = Arc::new(factory);
-
-        let mut txs = Vec::with_capacity(shards);
+        let reg = Arc::new(ShardRegistry {
+            cfg,
+            vocab,
+            metrics,
+            tier,
+            factory: Box::new(factory),
+            next_id: AtomicUsize::new(0),
+            slots: Mutex::new(Vec::with_capacity(shards)),
+        });
         let mut joins = Vec::with_capacity(shards);
-        for shard in 0..shards {
-            let (tx, rx) = mpsc::channel::<SolveRequest>();
-            let cfg = cfg.clone();
-            let vocab = vocab.clone();
-            let metrics = Arc::clone(&metrics);
-            let ctx = ShardCtx { shard, tier: Arc::clone(&tier), loads: Arc::clone(&loads) };
-            let factory = Arc::clone(&factory);
-            let join = std::thread::Builder::new()
-                .name(format!("ssr-shard-{shard}"))
-                .spawn(move || match (factory.as_ref())(shard) {
-                    Ok(mut backend) => {
-                        scheduler::run_loop(backend.as_mut(), &cfg, &vocab, rx, &metrics, &ctx)
-                    }
-                    Err(e) => log::error!("shard {shard} backend init failed: {e:#}"),
-                })
-                .with_context(|| format!("spawning scheduler shard {shard}"))?;
-            txs.push(tx);
+        for _ in 0..shards {
+            let id = reg.next_id.fetch_add(1, Ordering::Relaxed);
+            let (slot, join) = reg.spawn_shard(id)?;
+            reg.slots.lock().unwrap().push(slot);
             joins.push(join);
         }
-        Ok((
-            PoolHandle {
-                txs,
-                loads,
-                placement: cfg.placement,
-                rr: Arc::new(AtomicUsize::new(0)),
-                pool_size: cfg.pool_size,
-            },
-            joins,
-        ))
+        Ok((PoolHandle { reg, rr: Arc::new(AtomicUsize::new(0)) }, joins))
     }
 }
 
@@ -317,6 +550,49 @@ mod tests {
         let r = solve(&h2, "1+2", 0);
         assert!(r.recv().unwrap().is_ok());
         drop(h2);
+        for j in joins {
+            j.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn add_shard_serves_and_remove_shard_respects_min() {
+        let (handle, joins, metrics) = spawn_pool(1, PlacePolicy::RoundRobin);
+        assert_eq!(handle.shards(), 1);
+        let id = handle.add_shard().unwrap();
+        assert_eq!(id, 1);
+        assert_eq!(handle.shards(), 2);
+        // round-robin over 2 live shards: both serve
+        let replies: Vec<_> = (0..6).map(|i| solve(&handle, "5+6*2", i as u64)).collect();
+        for r in &replies {
+            assert!(r.recv().unwrap().is_ok());
+        }
+        {
+            let m = metrics.lock().unwrap();
+            assert_eq!(m.shards_added, 1);
+            assert!(
+                m.shard_requests.len() >= 2 && m.shard_requests[1] > 0,
+                "hot-added shard never served: {:?}",
+                m.shard_requests
+            );
+        }
+        // drain the added shard while the original keeps serving
+        let secs = handle.remove_shard(id).unwrap();
+        assert!(secs >= 0.0);
+        assert_eq!(handle.shards(), 1);
+        let r = solve(&handle, "2+2", 9);
+        assert!(r.recv().unwrap().is_ok());
+        // min_shards floor: the last shard cannot be drained
+        assert!(handle.remove_shard(0).is_err());
+        // removing a removed shard errors cleanly
+        assert!(handle.remove_shard(id).is_err());
+        {
+            let m = metrics.lock().unwrap();
+            assert_eq!(m.shards_removed, 1);
+            assert_eq!(m.drains, 1);
+            assert!(m.drain_secs_max >= 0.0);
+        }
+        drop(handle);
         for j in joins {
             j.join().unwrap();
         }

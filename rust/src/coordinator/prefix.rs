@@ -8,15 +8,22 @@
 //!   entry cap AND a byte budget (`Backend::prefix_bytes`), so long
 //!   prompts can't silently dominate host memory.
 //! * [`SharedPrefixTier`] — the sharded serving path's ONE logical
-//!   cache (DESIGN.md §10): a prompt has a single tier entry holding a
-//!   *per-shard handle map*, because handles are only meaningful on the
-//!   backend that issued them. A prompt prefilled on shard A is
-//!   admitted as a tier hit everywhere and re-prefilled at most once
-//!   per shard that actually serves it (`shard_fills` counts those).
-//!   Eviction is LRU over logical entries; handles owned by other
-//!   shards cannot be released from this thread (backends are
-//!   thread-owned), so they are parked on per-shard release queues each
-//!   shard drains at its next tier interaction.
+//!   cache (DESIGN.md §10, §11): a prompt has a single tier entry
+//!   holding a *per-shard handle map*, because handles are only
+//!   meaningful on the backend that issued them. A prompt prefilled on
+//!   shard A is admitted as a tier hit everywhere and re-prefilled at
+//!   most once per shard that actually serves it (`shard_fills` counts
+//!   those). Prefills run OUTSIDE the tier lock behind a per-(entry,
+//!   shard) in-flight latch (`Pending` -> `Ready` + condvar), so
+//!   different prompts prefill on different shards concurrently while
+//!   the once-per-shard guarantee holds — the lock only covers map
+//!   bookkeeping. Eviction is LRU over logical entries (entries with an
+//!   in-flight fill are pinned); handles owned by other shards cannot
+//!   be released from the evicting thread (backends are thread-owned),
+//!   so they are parked on per-shard release queues each shard drains
+//!   at its next tier interaction. The per-shard tables grow on demand:
+//!   hot-added shards (`PoolHandle::add_shard`) have ids beyond the
+//!   spawn-time count.
 //!
 //! Ownership: a handle returned with `retained = true` belongs to the
 //! cache/tier (released on eviction or clear); with `retained = false`
@@ -29,7 +36,7 @@
 //! [`Metrics`]: super::metrics::Metrics
 
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::{Condvar, Mutex};
 
 use anyhow::Result;
 
@@ -250,15 +257,27 @@ pub struct TierStats {
     pub evictions: u64,
 }
 
-struct ShardHandle {
-    handle: PrefixHandle,
-    bytes: u64,
+/// One (entry, shard) slot of the tier: the in-flight latch. `Pending`
+/// marks a prefill running outside the tier lock on the owning shard's
+/// backend; waiters block on the tier condvar until it flips to `Ready`
+/// (or back to `Empty` on prefill failure).
+#[derive(Clone, Copy)]
+enum SlotState {
+    Empty,
+    Pending,
+    Ready { handle: PrefixHandle, bytes: u64 },
 }
 
 struct TierEntry {
-    /// `per_shard[s]` = the prompt's live handle on shard s's backend
-    per_shard: Vec<Option<ShardHandle>>,
+    /// `per_shard[s]` = the prompt's slot on shard s's backend
+    per_shard: Vec<SlotState>,
     last_used: u64,
+}
+
+impl TierEntry {
+    fn has_pending(&self) -> bool {
+        self.per_shard.iter().any(|s| matches!(s, SlotState::Pending))
+    }
 }
 
 struct TierInner {
@@ -276,10 +295,24 @@ struct TierInner {
 }
 
 impl TierInner {
-    /// Evict the LRU logical entry (skipping `protect`): this shard's
-    /// handle is released inline on `backend`; other shards' handles
-    /// park on their pending queues. Returns false when nothing
-    /// evictable remains.
+    /// Grow the per-shard tables to cover `shards` — hot-added shards
+    /// (`PoolHandle::add_shard`) have ids beyond the spawn-time count.
+    fn grow(&mut self, shards: usize) {
+        if shards <= self.shards {
+            return;
+        }
+        self.shards = shards;
+        self.pending_release.resize_with(shards, Vec::new);
+        for e in self.map.values_mut() {
+            e.per_shard.resize_with(shards, || SlotState::Empty);
+        }
+    }
+
+    /// Evict the LRU logical entry (skipping `protect` and any entry
+    /// with an in-flight fill — a `Pending` slot has no handle to
+    /// release yet): this shard's handle is released inline on
+    /// `backend`; other shards' handles park on their pending queues.
+    /// Returns false when nothing evictable remains.
     fn evict_lru(
         &mut self,
         backend: &mut dyn Backend,
@@ -289,18 +322,18 @@ impl TierInner {
         let victim = self
             .map
             .iter()
-            .filter(|(k, _)| Some(**k) != protect)
+            .filter(|(k, e)| Some(**k) != protect && !e.has_pending())
             .min_by_key(|(_, e)| e.last_used)
             .map(|(&k, _)| k);
         let Some(k) = victim else { return false };
         let e = self.map.remove(&k).expect("victim key present");
-        for (s, h) in e.per_shard.into_iter().enumerate() {
-            if let Some(sh) = h {
-                self.bytes = self.bytes.saturating_sub(sh.bytes);
+        for (s, slot) in e.per_shard.into_iter().enumerate() {
+            if let SlotState::Ready { handle, bytes } = slot {
+                self.bytes = self.bytes.saturating_sub(bytes);
                 if s == cur_shard {
-                    let _ = backend.release_prefix(sh.handle);
+                    let _ = backend.release_prefix(handle);
                 } else {
-                    self.pending_release[s].push(sh.handle);
+                    self.pending_release[s].push(handle);
                 }
             }
         }
@@ -310,13 +343,18 @@ impl TierInner {
 }
 
 /// The sharded serving path's shared prefix cache: one logical entry
-/// per prompt, one live handle per shard that serves it. All state sits
-/// behind one mutex; misses prefill *under the lock*, which serializes
-/// cross-shard prefills of the same instant but guarantees each prompt
-/// is prefilled at most once per shard — hits (the steady state) only
-/// pay a map lookup.
+/// per prompt, one live handle per shard that serves it. The mutex only
+/// covers map bookkeeping: a miss (or first-touch shard fill) marks its
+/// slot `Pending`, drops the lock, prefills on the caller's backend,
+/// then re-locks to publish `Ready` and wake any latch waiter — so
+/// different prompts prefill on different shards concurrently while
+/// each prompt is still prefilled at most once per shard. Hits (the
+/// steady state) pay one map lookup.
 pub struct SharedPrefixTier {
     inner: Mutex<TierInner>,
+    /// signalled whenever a `Pending` slot resolves (to `Ready` or,
+    /// on prefill failure, back to `Empty`)
+    filled: Condvar,
 }
 
 impl SharedPrefixTier {
@@ -335,6 +373,7 @@ impl SharedPrefixTier {
                 pending_release: (0..shards.max(1)).map(|_| Vec::new()).collect(),
                 stats: TierStats::default(),
             }),
+            filled: Condvar::new(),
         }
     }
 
@@ -361,9 +400,10 @@ impl SharedPrefixTier {
     }
 
     /// Return a live prefix for `problem` on `shard`'s backend,
-    /// prefilling at most once per (prompt, shard). Also drains this
-    /// shard's pending release queue — the only thread that may touch
-    /// this backend is the one calling in.
+    /// prefilling at most once per (prompt, shard) — the prefill itself
+    /// runs OUTSIDE the tier lock behind the entry's `Pending` latch.
+    /// Also drains this shard's pending release queue — the only thread
+    /// that may touch this backend is the one calling in.
     pub fn acquire_for_shard(
         &self,
         shard: usize,
@@ -372,88 +412,162 @@ impl SharedPrefixTier {
         use_draft: bool,
         want_scores: bool,
     ) -> Result<Acquired> {
-        let mut guard = self.inner.lock().unwrap();
-        // plain &mut so field borrows below are disjoint (guard derefs
-        // would otherwise re-borrow the whole struct per access)
-        let inner = &mut *guard;
-        assert!(shard < inner.shards, "shard {shard} out of {}", inner.shards);
-        for h in std::mem::take(&mut inner.pending_release[shard]) {
+        // pending releases are taken under the lock but released on the
+        // backend outside it (release cost is the owning shard's alone)
+        let (pending, passthrough) = {
+            let mut guard = self.inner.lock().unwrap();
+            guard.grow(shard + 1);
+            (std::mem::take(&mut guard.pending_release[shard]), guard.capacity == 0)
+        };
+        for h in pending {
             let _ = backend.release_prefix(h);
         }
-        if inner.capacity == 0 {
-            inner.stats.misses += 1;
+        if passthrough {
+            self.inner.lock().unwrap().stats.misses += 1;
             return Ok(Acquired::owned(backend.prefill_prefix(problem, use_draft, want_scores)?));
         }
-        let k = prefix_key(&problem.tokens, use_draft);
-        inner.tick += 1;
-        let tick = inner.tick;
 
-        if let Some(e) = inner.map.get_mut(&k) {
-            e.last_used = tick;
-            if let Some(sh) = &e.per_shard[shard] {
-                let handle = sh.handle;
-                inner.stats.hits += 1;
-                return Ok(Acquired { handle, retained: true, hit: true });
+        let k = prefix_key(&problem.tokens, use_draft);
+        let mut guard = self.inner.lock().unwrap();
+        loop {
+            // plain &mut so field borrows below are disjoint (guard
+            // derefs would otherwise re-borrow the whole struct)
+            let inner = &mut *guard;
+            inner.tick += 1;
+            let tick = inner.tick;
+            if let Some(e) = inner.map.get_mut(&k) {
+                e.last_used = tick;
+                match e.per_shard[shard] {
+                    SlotState::Ready { handle, .. } => {
+                        inner.stats.hits += 1;
+                        return Ok(Acquired { handle, retained: true, hit: true });
+                    }
+                    SlotState::Pending => {
+                        // another caller is prefilling this (prompt,
+                        // shard) outside the lock: wait for the latch.
+                        // (With one scheduler thread per shard this arm
+                        // is unreachable in serving; the tier does not
+                        // assume that threading model.)
+                        guard = self.filled.wait(guard).unwrap();
+                        continue;
+                    }
+                    SlotState::Empty => {
+                        // known prompt, first service on this shard:
+                        // latch, then prefill once outside the lock
+                        // (the hit/shard-fill counters are bumped on
+                        // success, inside fill — a failed prefill must
+                        // not inflate the cache-effectiveness stats)
+                        e.per_shard[shard] = SlotState::Pending;
+                        drop(guard);
+                        return self
+                            .fill(shard, backend, problem, use_draft, want_scores, k, true);
+                    }
+                }
             }
-            // known prompt, first service on this shard: prefill once
-            // here and record the shard-local handle
-            let handle = backend.prefill_prefix(problem, use_draft, want_scores)?;
-            let cost = backend.prefix_bytes(handle);
-            let e = inner.map.get_mut(&k).expect("entry just seen");
-            e.per_shard[shard] = Some(ShardHandle { handle, bytes: cost });
-            inner.bytes += cost;
-            inner.stats.hits += 1;
-            inner.stats.shard_fills += 1;
-            while inner.max_bytes > 0 && inner.bytes > inner.max_bytes && inner.map.len() > 1 {
-                if !inner.evict_lru(backend, shard, Some(k)) {
+            // logical miss: make room, insert the latched entry, then
+            // prefill outside the lock
+            inner.stats.misses += 1;
+            while inner.map.len() >= inner.capacity {
+                if !inner.evict_lru(backend, shard, None) {
                     break;
                 }
             }
-            // a tier hit, but a prefill happened: report hit = false so
-            // per-call semantics stay "hit == no prefill occurred"
-            return Ok(Acquired { handle, retained: true, hit: false });
+            let mut per_shard: Vec<SlotState> = Vec::new();
+            per_shard.resize_with(inner.shards, || SlotState::Empty);
+            per_shard[shard] = SlotState::Pending;
+            inner.map.insert(k, TierEntry { per_shard, last_used: tick });
+            drop(guard);
+            return self.fill(shard, backend, problem, use_draft, want_scores, k, false);
         }
+    }
 
-        // logical miss: make room, prefill, insert
-        inner.stats.misses += 1;
-        while inner.map.len() >= inner.capacity {
-            if !inner.evict_lru(backend, shard, None) {
-                break;
+    /// Resolve a `Pending` latch this caller holds for (`k`, `shard`):
+    /// prefill on the caller's backend with the tier unlocked, then
+    /// publish the handle (or roll the slot back on failure) and wake
+    /// latch waiters. `shard_fill` marks a first-touch fill of a known
+    /// prompt — its hit/shard-fill counters are recorded only once the
+    /// prefill has actually succeeded.
+    #[allow(clippy::too_many_arguments)]
+    fn fill(
+        &self,
+        shard: usize,
+        backend: &mut dyn Backend,
+        problem: &Problem,
+        use_draft: bool,
+        want_scores: bool,
+        k: u64,
+        shard_fill: bool,
+    ) -> Result<Acquired> {
+        let res = backend.prefill_prefix(problem, use_draft, want_scores);
+        let mut guard = self.inner.lock().unwrap();
+        let inner = &mut *guard;
+        match res {
+            Ok(handle) => {
+                if shard_fill {
+                    inner.stats.hits += 1;
+                    inner.stats.shard_fills += 1;
+                }
+                let cost = backend.prefix_bytes(handle);
+                // the entry is pinned by its Pending slot (eviction
+                // skips it), so it is still present unless a concurrent
+                // clear dropped the whole tier state; then the caller
+                // simply owns the prefix
+                let retained = match inner.map.get_mut(&k) {
+                    Some(e) => {
+                        e.per_shard[shard] = SlotState::Ready { handle, bytes: cost };
+                        inner.bytes += cost;
+                        true
+                    }
+                    None => false,
+                };
+                if retained {
+                    while inner.max_bytes > 0
+                        && inner.bytes > inner.max_bytes
+                        && inner.map.len() > 1
+                    {
+                        if !inner.evict_lru(backend, shard, Some(k)) {
+                            break;
+                        }
+                    }
+                }
+                self.filled.notify_all();
+                Ok(Acquired { handle, retained, hit: false })
+            }
+            Err(e) => {
+                if let Some(entry) = inner.map.get_mut(&k) {
+                    entry.per_shard[shard] = SlotState::Empty;
+                    if entry.per_shard.iter().all(|s| matches!(s, SlotState::Empty)) {
+                        inner.map.remove(&k);
+                    }
+                }
+                self.filled.notify_all();
+                Err(e)
             }
         }
-        let handle = backend.prefill_prefix(problem, use_draft, want_scores)?;
-        let cost = backend.prefix_bytes(handle);
-        let shards = inner.shards;
-        let mut per_shard: Vec<Option<ShardHandle>> = (0..shards).map(|_| None).collect();
-        per_shard[shard] = Some(ShardHandle { handle, bytes: cost });
-        inner.bytes += cost;
-        inner.map.insert(k, TierEntry { per_shard, last_used: tick });
-        while inner.max_bytes > 0 && inner.bytes > inner.max_bytes && inner.map.len() > 1 {
-            if !inner.evict_lru(backend, shard, Some(k)) {
-                break;
-            }
-        }
-        Ok(Acquired { handle, retained: true, hit: false })
     }
 
     /// Release every handle `shard` owns (drain/teardown of that
     /// shard). Logical entries survive while any other shard still
-    /// holds a handle; empty entries are dropped.
+    /// holds (or is filling) a handle; fully-empty entries are dropped.
+    /// Called by the shard's own thread, so none of this shard's slots
+    /// can be `Pending` here.
     pub fn clear_shard(&self, shard: usize, backend: &mut dyn Backend) {
         let mut guard = self.inner.lock().unwrap();
         let inner = &mut *guard;
+        inner.grow(shard + 1);
         for h in std::mem::take(&mut inner.pending_release[shard]) {
             let _ = backend.release_prefix(h);
         }
         let mut freed = 0u64;
         for e in inner.map.values_mut() {
-            if let Some(sh) = e.per_shard[shard].take() {
-                freed += sh.bytes;
-                let _ = backend.release_prefix(sh.handle);
+            if let SlotState::Ready { handle, bytes } = e.per_shard[shard] {
+                e.per_shard[shard] = SlotState::Empty;
+                freed += bytes;
+                let _ = backend.release_prefix(handle);
             }
         }
         inner.bytes = inner.bytes.saturating_sub(freed);
-        inner.map.retain(|_, e| e.per_shard.iter().any(|h| h.is_some()));
+        inner.map.retain(|_, e| e.per_shard.iter().any(|s| !matches!(s, SlotState::Empty)));
     }
 }
 

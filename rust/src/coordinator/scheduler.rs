@@ -55,29 +55,38 @@
 //!   (`Metrics::record_batch` -> mean/histogram batch occupancy), every
 //!   admission pass samples queue depth, and every admitted job records
 //!   its admission wait and shard. `{"op":"stats"}` surfaces all of it.
+//! * **Work stealing.** With `steal_threshold > 0`, a shard whose
+//!   occupancy sat below the threshold for a full tick (and whose own
+//!   queue is empty) pulls queued-but-unstarted jobs from the
+//!   most-loaded shard's admission queue — the queues are shared cells
+//!   in the pool registry for exactly this (`coordinator::pool`,
+//!   DESIGN.md §11). Idle shards then poll their channel instead of
+//!   parking so they can keep scanning for victims.
 //! * **Shutdown / drain.** A shard's loop exits once every submitter
 //!   handle is dropped AND its queue and lane pool are empty — in-
 //!   flight work always drains, and the drain releases the shard's
-//!   handles in the shared tier.
+//!   handles in the shared tier. `PoolHandle::remove_shard` drains one
+//!   shard this same way (its channel closes) while the rest of the
+//!   pool keeps serving.
 //!
 //! Determinism: the run seed is a pure function of (request seed,
-//! prompt) — NOT of admission order or shard placement — and the
-//! calibrated substrate's per-problem draws are derived streams
-//! (`backend::calibrated`), so identical requests reproduce identical
-//! answers on any shard of any pool size (the sharded-vs-single-shard
-//! equivalence tests pin this).
+//! prompt) — NOT of admission order, shard placement, or work stealing
+//! — and the calibrated substrate's per-problem draws are derived
+//! streams (`backend::calibrated`), so identical requests reproduce
+//! identical answers on any shard of any pool size (the
+//! sharded-vs-single-shard equivalence tests pin this).
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::sync::{Arc, Mutex, Weak};
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
 use super::engine::{step_tick, Method, ProblemRun};
 use super::metrics::Metrics;
-use super::pool::BackendPool;
+use super::pool::{BackendPool, ShardRegistry};
 use super::prefix::{PrefixProvider, ShardPrefix, SharedPrefixTier};
 use crate::backend::Backend;
 use crate::config::{AdmitPolicy, SsrConfig};
@@ -86,6 +95,15 @@ use crate::util::hash;
 use crate::util::json::{self, Value};
 use crate::workload::problems::problem_from_text;
 use crate::workload::Problem;
+
+/// How often an idle shard wakes to scan for steal victims (and to
+/// notice jobs re-placed into its queue by a draining shard). Only the
+/// work-stealing path polls; with `steal_threshold = 0` an idle shard
+/// parks on its channel exactly as before. After several consecutive
+/// dry passes the poll backs off to [`STEAL_POLL_IDLE`] so a fully
+/// idle pool costs ~100 wakeups/s per shard instead of 2000.
+const STEAL_POLL: Duration = Duration::from_micros(500);
+const STEAL_POLL_IDLE: Duration = Duration::from_millis(10);
 
 /// The submitter side of the pool — kept under its historical name;
 /// see [`coordinator::pool::PoolHandle`](super::pool::PoolHandle).
@@ -111,29 +129,41 @@ pub(crate) fn lane_estimate(method: Method, pool_size: usize) -> usize {
 }
 
 /// Everything one shard's loop needs besides its backend: its identity,
-/// the shared prefix tier, and the pool-wide load gauges (incremented
-/// by `PoolHandle::submit`, decremented here on terminal replies).
+/// the shared prefix tier, its own load gauge / admission queue /
+/// draining flag (shared with the pool registry so submit, steal and
+/// drain can see them), and a weak registry reference for picking steal
+/// victims. Weak, because a strong reference from the shard thread
+/// would keep every shard's channel sender alive and the pool could
+/// never drain by dropping its handles.
 pub(crate) struct ShardCtx {
     pub shard: usize,
     pub tier: Arc<SharedPrefixTier>,
-    pub loads: Arc<Vec<AtomicU64>>,
+    pub load: Arc<AtomicU64>,
+    pub queue: Arc<Mutex<VecDeque<QueuedJob>>>,
+    pub draining: Arc<AtomicBool>,
+    pub registry: Weak<ShardRegistry>,
 }
 
 impl ShardCtx {
     /// One request reached a terminal reply: return its lane estimate
     /// to the load gauge (advisory placement signal — Relaxed is fine).
     fn done(&self, est: usize) {
-        self.loads[self.shard].fetch_sub(est as u64, Ordering::Relaxed);
+        self.load.fetch_sub(est as u64, Ordering::Relaxed);
     }
 }
 
-struct QueuedJob {
-    problem: Problem,
+/// One parsed, admitted-but-unstarted unit of work. Lives in a shard's
+/// *shared* admission queue so an idle shard can steal it; a stolen job
+/// re-derives its run state from the placement-invariant run seed at
+/// admission, so decisions are identical wherever it lands.
+pub(crate) struct QueuedJob {
+    pub(crate) problem: Problem,
     /// submit-side lane estimate (admission weight AND the exact amount
-    /// to return to the load gauge on the terminal reply)
-    lanes: usize,
-    enqueued: Instant,
-    req: SolveRequest,
+    /// to return to the owning shard's load gauge on the terminal
+    /// reply; work stealing moves it between gauges with the job)
+    pub(crate) lanes: usize,
+    pub(crate) enqueued: Instant,
+    pub(crate) req: SolveRequest,
 }
 
 struct InFlight {
@@ -195,7 +225,6 @@ fn pick_next(queue: &VecDeque<QueuedJob>, policy: AdmitPolicy) -> Option<usize> 
 
 fn intake(
     req: SolveRequest,
-    queue: &mut VecDeque<QueuedJob>,
     cfg: &SsrConfig,
     vocab: &Vocab,
     metrics: &Arc<Mutex<Metrics>>,
@@ -204,7 +233,12 @@ fn intake(
     let lanes = lane_estimate(req.method, cfg.pool_size);
     match problem_from_text(vocab, &req.expr) {
         Ok(problem) => {
-            queue.push_back(QueuedJob { problem, lanes, enqueued: Instant::now(), req });
+            ctx.queue.lock().unwrap().push_back(QueuedJob {
+                problem,
+                lanes,
+                enqueued: Instant::now(),
+                req,
+            });
         }
         Err(e) => {
             metrics.lock().unwrap().errors += 1;
@@ -244,8 +278,9 @@ fn finish_job(
     ]))
 }
 
-/// One shard's thread body: intake -> admit -> tick -> retire, until
-/// every submitter is gone and all of this shard's work has drained.
+/// One shard's thread body: intake -> steal -> admit -> tick -> retire,
+/// until every submitter is gone (channel disconnected — pool shutdown
+/// or `remove_shard` drain) and all of this shard's work has finished.
 pub(crate) fn run_loop(
     backend: &mut dyn Backend,
     cfg: &SsrConfig,
@@ -254,25 +289,41 @@ pub(crate) fn run_loop(
     metrics: &Arc<Mutex<Metrics>>,
     ctx: &ShardCtx,
 ) {
-    let mut queue: VecDeque<QueuedJob> = VecDeque::new();
     let mut inflight: Vec<InFlight> = Vec::new();
     let mut disconnected = false;
     let max_lanes = cfg.max_lanes.max(1);
+    let steal_at = cfg.steal_threshold;
+    // consecutive passes this shard sat under the steal threshold with
+    // an empty queue: stealing requires a full idle tick first, so a
+    // shard that is merely between admissions doesn't raid its peers
+    let mut hungry_ticks = 0usize;
 
     loop {
         // --- intake ---------------------------------------------------
-        if inflight.is_empty() && queue.is_empty() {
+        if inflight.is_empty() && ctx.queue.lock().unwrap().is_empty() {
             if disconnected {
                 break;
             }
-            match rx.recv() {
-                Ok(req) => intake(req, &mut queue, cfg, vocab, metrics, ctx),
-                Err(_) => break,
+            if steal_at == 0 {
+                match rx.recv() {
+                    Ok(req) => intake(req, cfg, vocab, metrics, ctx),
+                    Err(_) => disconnected = true,
+                }
+            } else {
+                // stealing enabled: wake periodically to scan victims,
+                // backing off once the pool has stayed dry so a fully
+                // idle shard doesn't spin at the fast poll forever
+                let poll = if hungry_ticks > 8 { STEAL_POLL_IDLE } else { STEAL_POLL };
+                match rx.recv_timeout(poll) {
+                    Ok(req) => intake(req, cfg, vocab, metrics, ctx),
+                    Err(mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(mpsc::RecvTimeoutError::Disconnected) => disconnected = true,
+                }
             }
         }
         loop {
             match rx.try_recv() {
-                Ok(req) => intake(req, &mut queue, cfg, vocab, metrics, ctx),
+                Ok(req) => intake(req, cfg, vocab, metrics, ctx),
                 Err(mpsc::TryRecvError::Empty) => break,
                 Err(mpsc::TryRecvError::Disconnected) => {
                     disconnected = true;
@@ -281,19 +332,40 @@ pub(crate) fn run_loop(
             }
         }
 
-        // --- admission ------------------------------------------------
+        // --- work stealing --------------------------------------------
         let mut lanes_used: usize = inflight.iter().map(|f| f.run.lanes()).sum();
-        while let Some(pos) = pick_next(&queue, cfg.admission) {
-            let need = queue[pos].lanes;
-            // always admit into an idle pool so one oversized request
-            // cannot wedge the queue
-            if !inflight.is_empty() && lanes_used + need > max_lanes {
-                break;
+        if steal_at > 0 && !ctx.draining.load(Ordering::Relaxed) {
+            let hungry = lanes_used < steal_at && ctx.queue.lock().unwrap().is_empty();
+            hungry_ticks = if hungry { hungry_ticks + 1 } else { 0 };
+            if hungry && hungry_ticks > 1 {
+                if let Some(reg) = ctx.registry.upgrade() {
+                    let stolen = reg.steal_into(ctx, max_lanes.saturating_sub(lanes_used));
+                    if stolen > 0 {
+                        hungry_ticks = 0;
+                        metrics.lock().unwrap().record_steals(stolen as u64);
+                    }
+                }
             }
-            let job = queue.remove(pos).expect("picked index in range");
+        }
+
+        // --- admission ------------------------------------------------
+        let mut admitted = 0usize;
+        loop {
+            let job = {
+                let mut q = ctx.queue.lock().unwrap();
+                let Some(pos) = pick_next(&q, cfg.admission) else { break };
+                let need = q[pos].lanes;
+                // always admit into an idle pool so one oversized
+                // request cannot wedge the queue
+                if !inflight.is_empty() && lanes_used + need > max_lanes {
+                    break;
+                }
+                q.remove(pos).expect("picked index in range")
+            };
             // run seed = f(request seed, prompt): decorrelates distinct
             // problems sharing a wire seed while staying independent of
-            // admission order AND shard placement (equivalence tests)
+            // admission order, shard placement AND work stealing
+            // (equivalence tests)
             let seed = job.req.seed ^ hash::fnv1a_i32(&job.problem.tokens);
             let mut provider = ShardPrefix { tier: ctx.tier.as_ref(), shard: ctx.shard };
             match ProblemRun::start_with_cache(
@@ -306,6 +378,7 @@ pub(crate) fn run_loop(
             ) {
                 Ok(run) => {
                     lanes_used += run.lanes();
+                    admitted += 1;
                     {
                         let mut m = metrics.lock().unwrap();
                         m.record_admission_wait(job.enqueued.elapsed().as_secs_f64());
@@ -328,10 +401,13 @@ pub(crate) fn run_loop(
                 }
             }
         }
-        {
+        // record observability gauges only on passes that carry work, so
+        // an idle steal-poll loop doesn't flood the queue-depth samples
+        if admitted > 0 || !inflight.is_empty() {
             let ts = ctx.tier.stats();
+            let depth = ctx.queue.lock().unwrap().len();
             let mut m = metrics.lock().unwrap();
-            m.record_queue_depth(queue.len());
+            m.record_queue_depth(depth);
             m.set_prefix_cache(ts.hits, ts.misses, ts.evictions);
             m.set_prefix_shard_fills(ts.shard_fills);
         }
@@ -467,7 +543,7 @@ mod tests {
         gate_tx.send(()).unwrap(); // every request is queued: open the gate
         for (i, rrx) in replies.iter().enumerate() {
             let v = rrx.recv().unwrap().unwrap();
-            assert_eq!(v.get("ok").unwrap().bool().unwrap(), true);
+            assert!(v.get("ok").unwrap().bool().unwrap());
             assert_eq!(v.get_i64("gold").unwrap(), (i as i64 + 1) + (i as i64 + 2) * 3);
             assert!(v.get_i64("steps").unwrap() > 0);
             assert!(v.get_f64("latency_s").unwrap() >= 0.0);
@@ -510,7 +586,7 @@ mod tests {
         gate_tx.send(()).unwrap();
         for rrx in &replies {
             let v = rrx.recv().unwrap().unwrap();
-            assert_eq!(v.get("ok").unwrap().bool().unwrap(), true);
+            assert!(v.get("ok").unwrap().bool().unwrap());
         }
         drop(handle);
         join.join().unwrap();
@@ -539,7 +615,7 @@ mod tests {
             1,
         );
         let v = rrx.recv().unwrap().unwrap();
-        assert_eq!(v.get("ok").unwrap().bool().unwrap(), true);
+        assert!(v.get("ok").unwrap().bool().unwrap());
         assert_eq!(v.get_i64("gold").unwrap(), 11);
         drop(handle);
         join.join().unwrap();

@@ -22,7 +22,14 @@
 //!       "admission_wait_mean_s":..., "admission_wait_p99_s":...,
 //!       "prefix_hits":..., "prefix_misses":...,   // prefix-reuse cache
 //!       "prefix_evictions":..., "prefix_hit_rate":...,
+//!       "steals":..., "shards_added":..., "shards_removed":...,
+//!       "drain_mean_s":..., "drain_max_s":...,    // shard lifecycle
+//!       "shards_live":...,
 //!       "model_secs":...}             // backend model-clock
+//!   -> {"op":"add_shard"}             // hot-add one backend shard
+//!   <- {"ok":true, "shard":2, "shards_live":3}
+//!   -> {"op":"remove_shard", "shard":2}   // drain + remove at runtime
+//!   <- {"ok":true, "drained":2, "drain_s":0.18, "shards_live":2}
 //!   -> {"op":"shutdown"}
 //!
 //! `latency_s` is enqueue-to-reply (it includes queue wait, reported
@@ -217,12 +224,38 @@ fn process_line(
             rrx.recv().context("scheduler reply")?
         }
         "stats" => {
-            let m = metrics.lock().unwrap();
-            let mut v = m.summary_json(started.elapsed().as_secs_f64());
+            let mut v = {
+                let m = metrics.lock().unwrap();
+                m.summary_json(started.elapsed().as_secs_f64())
+            };
             if let Value::Obj(ref mut map) = v {
                 map.insert("ok".into(), Value::Bool(true));
+                map.insert("shards_live".into(), json::i(sched.shards() as i64));
             }
             Ok(v)
+        }
+        "add_shard" => {
+            let id = sched.add_shard()?;
+            log::info!("hot-added shard {id} ({} live)", sched.shards());
+            Ok(json::obj(vec![
+                ("ok", Value::Bool(true)),
+                ("shard", json::i(id as i64)),
+                ("shards_live", json::i(sched.shards() as i64)),
+            ]))
+        }
+        "remove_shard" => {
+            let id = req.get("shard").context("remove_shard needs a `shard` id")?.usize()?;
+            // blocks this connection handler until the shard has
+            // finished its in-flight runs; other connections keep
+            // solving on the surviving shards meanwhile
+            let drain_s = sched.remove_shard(id)?;
+            log::info!("drained shard {id} in {drain_s:.3}s ({} live)", sched.shards());
+            Ok(json::obj(vec![
+                ("ok", Value::Bool(true)),
+                ("drained", json::i(id as i64)),
+                ("drain_s", json::n(drain_s)),
+                ("shards_live", json::i(sched.shards() as i64)),
+            ]))
         }
         "shutdown" => {
             shutdown.store(true, Ordering::Release);

@@ -226,7 +226,11 @@ pub fn fig4(factory: Factory, cfg: &SsrConfig, opts: &ExpOpts) -> Result<(Vec<Me
 // Table 1 — baseline / spec-reason(7,9) / SSR-Fast-1/2 / SSR.
 // ---------------------------------------------------------------------------
 
-pub fn table1(factory: Factory, cfg: &SsrConfig, opts: &ExpOpts) -> Result<(Vec<MethodRow>, String)> {
+pub fn table1(
+    factory: Factory,
+    cfg: &SsrConfig,
+    opts: &ExpOpts,
+) -> Result<(Vec<MethodRow>, String)> {
     let mut rows = Vec::new();
     let mut out = String::new();
     for suite in SUITES {
@@ -350,14 +354,36 @@ pub fn gamma_check(factory: Factory, cfg: &SsrConfig, opts: &ExpOpts) -> Result<
 // selection-mode ablation (model-internal vs random vs oracle).
 // ---------------------------------------------------------------------------
 
+/// The taus the sweep visits (Appendix C grid).
+pub const TAU_GRID: [u8; 5] = [0, 3, 5, 7, 9];
+
+/// One (suite, tau) point of the rewrite-threshold sweep — structured
+/// like [`Fig2Point`] so the bench tracker can watch the tau=7 plateau
+/// as scalars instead of scraping tables.
+#[derive(Debug, Clone)]
+pub struct TauPoint {
+    pub suite: String,
+    pub tau: u8,
+    pub pass1: f64,
+    pub gamma: f64,
+    pub rewrite_rate: f64,
+    pub mean_time_s: f64,
+}
+
 /// Appendix-C-style threshold sweep: SSR-m3 accuracy and cost as tau
 /// moves from accept-everything (0) to rewrite-almost-everything (9).
-pub fn tau_sweep(factory: Factory, cfg: &SsrConfig, opts: &ExpOpts) -> Result<String> {
+/// Returns structured points plus the rendered table.
+pub fn tau_sweep(
+    factory: Factory,
+    cfg: &SsrConfig,
+    opts: &ExpOpts,
+) -> Result<(Vec<TauPoint>, String)> {
+    let mut points = Vec::new();
     let mut out = String::new();
     for suite in ["synth-aime", "synth-livemath"] {
         let base = baseline_cost(factory, suite, cfg, opts)?;
         let mut rows = Vec::new();
-        for tau in [0u8, 3, 5, 7, 9] {
+        for tau in TAU_GRID {
             let row = run_method(
                 factory,
                 suite,
@@ -373,6 +399,14 @@ pub fn tau_sweep(factory: Factory, cfg: &SsrConfig, opts: &ExpOpts) -> Result<St
                 report::f2(row.rewrite_rate),
                 report::f2(row.mean_time_s),
             ]);
+            points.push(TauPoint {
+                suite: suite.to_string(),
+                tau,
+                pass1: row.pass1,
+                gamma: row.gamma,
+                rewrite_rate: row.rewrite_rate,
+                mean_time_s: row.mean_time_s,
+            });
         }
         out.push_str(&report::table(
             &format!("Appendix C {suite}: rewrite-threshold sweep (SSR-m3)"),
@@ -381,16 +415,26 @@ pub fn tau_sweep(factory: Factory, cfg: &SsrConfig, opts: &ExpOpts) -> Result<St
         ));
         out.push('\n');
     }
-    Ok(out)
+    Ok((points, out))
+}
+
+/// One (suite, selection-mode) point of the SPM selection ablation.
+#[derive(Debug, Clone)]
+pub struct SelectionPoint {
+    pub suite: String,
+    pub selection: String,
+    pub pass1: f64,
 }
 
 /// SPM selection-mode ablation at N=5 (SSD off, isolating selection).
+/// Returns structured points plus the rendered table.
 pub fn selection_ablation(
     factory: Factory,
     cfg: &SsrConfig,
     opts: &ExpOpts,
-) -> Result<String> {
+) -> Result<(Vec<SelectionPoint>, String)> {
     use crate::config::Selection;
+    let mut points = Vec::new();
     let mut out = String::new();
     for suite in SUITES {
         let mut rows = Vec::new();
@@ -411,6 +455,11 @@ pub fn selection_ablation(
                 None,
             )?;
             rows.push(vec![label.to_string(), report::pct(row.pass1)]);
+            points.push(SelectionPoint {
+                suite: suite.to_string(),
+                selection: label.to_string(),
+                pass1: row.pass1,
+            });
         }
         out.push_str(&report::table(
             &format!("Selection ablation {suite} (Parallel-SPM, N=5)"),
@@ -419,7 +468,7 @@ pub fn selection_ablation(
         ));
         out.push('\n');
     }
-    Ok(out)
+    Ok((points, out))
 }
 
 #[cfg(test)]
@@ -497,6 +546,25 @@ mod tests {
             "below-7 fraction {} out of range\n{text}",
             cum[6]
         );
+    }
+
+    #[test]
+    fn tau_sweep_and_selection_emit_structured_rows() {
+        let mut f = cal_factory();
+        let opts = ExpOpts { trials: 1, max_problems: 8 };
+        let (taus, text) = tau_sweep(&mut f, &SsrConfig::default(), &opts).unwrap();
+        assert_eq!(taus.len(), 2 * TAU_GRID.len(), "2 suites x 5 taus");
+        for p in &taus {
+            assert!(TAU_GRID.contains(&p.tau));
+            assert!((0.0..=1.0).contains(&p.pass1), "{p:?}");
+            assert!(p.gamma > 0.0, "{p:?}");
+        }
+        assert!(text.contains("rewrite-threshold sweep"));
+
+        let (sels, text) = selection_ablation(&mut f, &SsrConfig::default(), &opts).unwrap();
+        assert_eq!(sels.len(), SUITES.len() * 4, "3 suites x 4 modes");
+        assert!(sels.iter().any(|p| p.selection == "oracle"));
+        assert!(text.contains("Selection ablation"));
     }
 
     #[test]

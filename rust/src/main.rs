@@ -7,6 +7,7 @@
 //! ssr serve [--host 127.0.0.1] [--port 7878] [--backend ...] [--threads 4]
 //!           [--max-lanes 32] [--admission fifo|smallest-first]
 //!           [--shards N] [--placement least-loaded|affinity|round-robin]
+//!           [--steal-threshold L] [--min-shards N]
 //! ssr exp   fig2|fig3|fig4|fig5|table1|gamma|all [--backend calibrated]
 //!           [--trials 6] [--problems 60]
 //! ssr selfcheck            # artifacts -> PJRT -> one SSR problem
@@ -19,10 +20,14 @@
 //! `serve` runs the sharded backend pool: `--shards N` scheduler
 //! threads each own one backend and a `--max-lanes` lane pool;
 //! concurrent solves are routed by `--placement` and share backend step
-//! batches per shard (see `coordinator::pool`); `{"op":"stats"}`
-//! reports batch occupancy, queue depth, admission waits, per-shard
-//! request counts and the model-time makespan alongside the latency
-//! percentiles.
+//! batches per shard (see `coordinator::pool`). The pool is elastic:
+//! `{"op":"add_shard"}` / `{"op":"remove_shard","shard":i}` grow and
+//! drain it at runtime (bounded below by `--min-shards`), and
+//! `--steal-threshold L` lets under-occupied shards steal queued work
+//! from the most-loaded shard. `{"op":"stats"}` reports batch
+//! occupancy, queue depth, admission waits, per-shard request counts,
+//! steal/lifecycle/drain gauges and the model-time makespan alongside
+//! the latency percentiles.
 
 use std::path::PathBuf;
 
@@ -145,11 +150,14 @@ fn run() -> Result<()> {
                 (*f)(&suite, seed)
             };
             println!(
-                "pool: shards={} placement={:?} max_lanes={}/shard admission={:?} \
-                 prefix_reuse={} prefix_cache_cap={} prefix_cache_bytes={}",
+                "pool: shards={} (min {}) placement={:?} max_lanes={}/shard \
+                 steal_threshold={} admission={:?} prefix_reuse={} \
+                 prefix_cache_cap={} prefix_cache_bytes={}",
                 cfg.shards,
+                cfg.min_shards,
                 cfg.placement,
                 cfg.max_lanes,
+                cfg.steal_threshold,
                 cfg.admission,
                 cfg.prefix.enabled,
                 cfg.prefix.capacity,
@@ -206,8 +214,8 @@ fn run_experiment(
         "fig5" => experiments::fig5(factory, cfg, opts)?.1,
         "table1" => experiments::table1(factory, cfg, opts)?.1,
         "gamma" => experiments::gamma_check(factory, cfg, opts)?,
-        "tau" => experiments::tau_sweep(factory, cfg, opts)?,
-        "selection" => experiments::selection_ablation(factory, cfg, opts)?,
+        "tau" => experiments::tau_sweep(factory, cfg, opts)?.1,
+        "selection" => experiments::selection_ablation(factory, cfg, opts)?.1,
         "all" => {
             let mut text = String::new();
             for name in ["fig2", "fig3", "fig4", "fig5", "table1", "gamma", "tau", "selection"] {

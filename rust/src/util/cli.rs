@@ -66,21 +66,27 @@ impl Args {
     pub fn opt_usize(&mut self, name: &str, default: usize) -> Result<usize> {
         match self.opt(name) {
             None => Ok(default),
-            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{name}: expected integer, got `{v}`")),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name}: expected integer, got `{v}`")),
         }
     }
 
     pub fn opt_u64(&mut self, name: &str, default: u64) -> Result<u64> {
         match self.opt(name) {
             None => Ok(default),
-            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{name}: expected integer, got `{v}`")),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name}: expected integer, got `{v}`")),
         }
     }
 
     pub fn opt_f64(&mut self, name: &str, default: f64) -> Result<f64> {
         match self.opt(name) {
             None => Ok(default),
-            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{name}: expected number, got `{v}`")),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name}: expected number, got `{v}`")),
         }
     }
 

@@ -408,7 +408,8 @@ mod tests {
 
     #[test]
     fn escapes_roundtrip() {
-        let cases = ["a\"b", "line\nbreak", "tab\there", "back\\slash", "unicode: ünïcødé 数学"];
+        let cases =
+            ["a\"b", "line\nbreak", "tab\there", "back\\slash", "unicode: ünïcødé 数学"];
         for c in cases {
             let v = Value::Str(c.to_string());
             let back = Value::parse(&v.print()).unwrap();

@@ -49,7 +49,12 @@ pub mod gen {
     use super::Rng;
 
     /// Vec of length in `[lo, hi]` with elements from `f`.
-    pub fn vec_of<T>(rng: &mut Rng, lo: usize, hi: usize, mut f: impl FnMut(&mut Rng) -> T) -> Vec<T> {
+    pub fn vec_of<T>(
+        rng: &mut Rng,
+        lo: usize,
+        hi: usize,
+        mut f: impl FnMut(&mut Rng) -> T,
+    ) -> Vec<T> {
         let n = rng.range(lo as i64, hi as i64) as usize;
         (0..n).map(|_| f(rng)).collect()
     }

@@ -111,7 +111,8 @@ pub fn generate(spec: &SuiteSpec, vocab: &Vocab) -> Suite {
         let n_ops = rng.range(spec.ops_lo as i64, spec.ops_hi as i64) as usize;
         // python gen_suite filters on answer range and prompt length 40
         // (prompt = expr + 5 framing tokens); gen_valid uses 36-token exprs
-        let p = crate::workload::problems::gen_problem(&mut rng, vocab, fam, spec.max_operand, n_ops);
+        let p =
+            crate::workload::problems::gen_problem(&mut rng, vocab, fam, spec.max_operand, n_ops);
         if (0..=999).contains(&p.answer) && p.tokens.len() + 4 <= 40 {
             problems.push(p);
         }

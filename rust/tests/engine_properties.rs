@@ -49,7 +49,11 @@ fn engine_invariants_hold_for_random_configurations() {
             Method::Baseline | Method::SpecReason { .. } => 1,
             Method::Parallel { n, .. } | Method::Ssr { n, .. } => n,
         };
-        ensure!(r.votes.len() == expected_paths, "votes {} != paths {expected_paths}", r.votes.len());
+        ensure!(
+            r.votes.len() == expected_paths,
+            "votes {} != paths {expected_paths}",
+            r.votes.len()
+        );
 
         // token/step accounting sanity
         ensure!(r.target_tokens > 0, "target did no work");

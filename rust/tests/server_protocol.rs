@@ -56,21 +56,21 @@ fn solve_stats_shutdown_roundtrip() {
 
     // malformed expression -> structured error, connection stays up
     let r = request(&mut stream, r#"{"op":"solve","expr":"1+"}"#);
-    assert_eq!(r.get("ok").unwrap().bool().unwrap(), false);
+    assert!(!r.get("ok").unwrap().bool().unwrap());
     assert!(r.get_str("error").unwrap().len() > 3);
 
     // unknown op -> error
     let r = request(&mut stream, r#"{"op":"dance"}"#);
-    assert_eq!(r.get("ok").unwrap().bool().unwrap(), false);
+    assert!(!r.get("ok").unwrap().bool().unwrap());
 
     // garbage JSON -> error
     let r = request(&mut stream, "not json at all");
-    assert_eq!(r.get("ok").unwrap().bool().unwrap(), false);
+    assert!(!r.get("ok").unwrap().bool().unwrap());
 
     // stats reflect the two successful solves, including the scheduler's
     // occupancy/queue observability fields
     let r = request(&mut stream, r#"{"op":"stats"}"#);
-    assert_eq!(r.get("ok").unwrap().bool().unwrap(), true);
+    assert!(r.get("ok").unwrap().bool().unwrap());
     assert_eq!(r.get_i64("requests").unwrap(), 2);
     assert!(r.get_f64("mean_latency_s").unwrap() > 0.0);
     assert!(r.get_i64("backend_calls").unwrap() > 0);
@@ -81,7 +81,7 @@ fn solve_stats_shutdown_roundtrip() {
 
     // shutdown
     let r = request(&mut stream, r#"{"op":"shutdown"}"#);
-    assert_eq!(r.get("ok").unwrap().bool().unwrap(), true);
+    assert!(r.get("ok").unwrap().bool().unwrap());
     handle.join().unwrap();
 }
 
@@ -131,6 +131,56 @@ fn concurrent_clients_interleave_through_the_scheduler() {
     assert_eq!(r.get_i64("requests").unwrap(), 8);
     assert_eq!(r.get_i64("errors").unwrap(), 0);
     assert!(r.get_f64("mean_batch_occupancy").unwrap() >= 1.0);
+    let _ = request(&mut s, r#"{"op":"shutdown"}"#);
+    srv.join().unwrap();
+}
+
+#[test]
+fn elastic_shard_ops_over_the_wire() {
+    let cfg = SsrConfig::default();
+    let vocab = tokenizer::builtin_vocab();
+    let (server, listener) = Server::start("127.0.0.1", 0, cfg, vocab, |_shard| {
+        Ok(Box::new(CalibratedBackend::for_suite("synth-math500", 13)?) as Box<dyn Backend>)
+    })
+    .unwrap();
+    let addr = server.addr.clone();
+    let srv = std::thread::spawn(move || {
+        let pool = ThreadPool::new(4);
+        server.serve(listener, &pool).unwrap();
+    });
+    let mut s = TcpStream::connect(&addr).unwrap();
+
+    // hot-add a shard at runtime
+    let r = request(&mut s, r#"{"op":"add_shard"}"#);
+    assert!(r.get("ok").unwrap().bool().unwrap(), "{r:?}");
+    assert_eq!(r.get_i64("shard").unwrap(), 1);
+    assert_eq!(r.get_i64("shards_live").unwrap(), 2);
+
+    // the grown pool still solves
+    let r = request(&mut s, r#"{"op":"solve","expr":"3+4","seed":1}"#);
+    assert!(r.get("ok").unwrap().bool().unwrap(), "{r:?}");
+    assert_eq!(r.get_i64("gold").unwrap(), 7);
+
+    // drain the added shard while the listener stays up
+    let r = request(&mut s, r#"{"op":"remove_shard","shard":1}"#);
+    assert!(r.get("ok").unwrap().bool().unwrap(), "{r:?}");
+    assert_eq!(r.get_i64("drained").unwrap(), 1);
+    assert_eq!(r.get_i64("shards_live").unwrap(), 1);
+    assert!(r.get_f64("drain_s").unwrap() >= 0.0);
+
+    // min_shards floor -> structured error, connection stays up
+    let r = request(&mut s, r#"{"op":"remove_shard","shard":0}"#);
+    assert!(!r.get("ok").unwrap().bool().unwrap());
+    assert!(r.get_str("error").unwrap().contains("min_shards"));
+
+    // lifecycle gauges surface in stats
+    let r = request(&mut s, r#"{"op":"stats"}"#);
+    assert_eq!(r.get_i64("shards_added").unwrap(), 1);
+    assert_eq!(r.get_i64("shards_removed").unwrap(), 1);
+    assert_eq!(r.get_i64("shards_live").unwrap(), 1);
+    assert_eq!(r.get_i64("requests").unwrap(), 1);
+    assert!(r.get_f64("drain_max_s").unwrap() >= 0.0);
+
     let _ = request(&mut s, r#"{"op":"shutdown"}"#);
     srv.join().unwrap();
 }

@@ -1,22 +1,32 @@
 //! Sharded execution layer, end to end on the calibrated backend (no
 //! artifacts needed): placement policies, shared-tier semantics,
-//! generation-counted handle safety, and the ISSUE acceptance that a
-//! sharded run is vote/decision-equivalent to a single-shard run on the
-//! same workload.
+//! generation-counted handle safety, the elastic shard lifecycle
+//! (hot-add/remove, drain-while-serving, cross-shard work stealing,
+//! concurrent prefill latch), and the ISSUE acceptance that a sharded
+//! run is vote/decision-equivalent to a single-shard run on the same
+//! workload — including after add/remove/steal.
 
 use std::collections::BTreeMap;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::Result;
 
 use ssr::backend::calibrated::CalibratedBackend;
-use ssr::backend::Backend;
+use ssr::backend::{
+    Backend, BackendMeta, PathId, PathStats, PrefillStats, PrefixHandle, StepOutcome,
+};
 use ssr::config::{PlacePolicy, SsrConfig, StopRule};
 use ssr::coordinator::engine::Method;
 use ssr::coordinator::metrics::Metrics;
 use ssr::coordinator::pool::{BackendPool, PoolHandle};
+use ssr::coordinator::prefix::SharedPrefixTier;
 use ssr::coordinator::scheduler::SolveRequest;
 use ssr::model::tokenizer;
 use ssr::util::json::Value;
+use ssr::workload::problems::problem_from_text;
+use ssr::workload::Problem;
 
 /// Spawn an N-shard pool; every shard's backend gets the SAME seed, so
 /// the calibrated substrate's derived per-problem streams make results
@@ -197,6 +207,396 @@ fn stale_prefix_handles_rejected_at_type_level() {
     // and the live handle works
     let ids = b.fork_paths(h2, &[Some(0)], 1).unwrap();
     assert_eq!(ids.len(), 1);
+}
+
+// ---------------------------------------------------------------------------
+// Elastic lifecycle: stealing, drain-while-serving, concurrent prefill
+// ---------------------------------------------------------------------------
+
+/// Delegating backend wrapper with test gates: `prefill` mode signals
+/// entry into `prefill_prefix` and blocks there until released (the
+/// concurrent-prefill latch probe); `step` mode does the same for the
+/// FIRST `target_step` (the drain-ordering probe). All other calls pass
+/// straight through to the calibrated substrate.
+struct GatedBackend {
+    inner: CalibratedBackend,
+    entered: mpsc::Sender<()>,
+    prefill_gate: Option<mpsc::Receiver<()>>,
+    step_gate: Option<mpsc::Receiver<()>>,
+}
+
+impl GatedBackend {
+    fn prefill_gated(
+        inner: CalibratedBackend,
+        entered: mpsc::Sender<()>,
+        gate: mpsc::Receiver<()>,
+    ) -> Self {
+        GatedBackend { inner, entered, prefill_gate: Some(gate), step_gate: None }
+    }
+
+    fn step_gated(
+        inner: CalibratedBackend,
+        entered: mpsc::Sender<()>,
+        gate: mpsc::Receiver<()>,
+    ) -> Self {
+        GatedBackend { inner, entered, prefill_gate: None, step_gate: Some(gate) }
+    }
+}
+
+impl Backend for GatedBackend {
+    fn meta(&self) -> BackendMeta {
+        self.inner.meta()
+    }
+
+    fn select_scores(&mut self, problem: &Problem) -> Result<Vec<f32>> {
+        self.inner.select_scores(problem)
+    }
+
+    fn open_paths(
+        &mut self,
+        problem: &Problem,
+        strategies: &[Option<usize>],
+        seed: u64,
+        use_draft: bool,
+    ) -> Result<Vec<PathId>> {
+        self.inner.open_paths(problem, strategies, seed, use_draft)
+    }
+
+    fn prefill_prefix(
+        &mut self,
+        problem: &Problem,
+        use_draft: bool,
+        want_scores: bool,
+    ) -> Result<PrefixHandle> {
+        if let Some(gate) = self.prefill_gate.take() {
+            let _ = self.entered.send(());
+            let _ = gate.recv();
+        }
+        self.inner.prefill_prefix(problem, use_draft, want_scores)
+    }
+
+    fn prefix_scores(&mut self, handle: PrefixHandle) -> Result<Vec<f32>> {
+        self.inner.prefix_scores(handle)
+    }
+
+    fn fork_paths(
+        &mut self,
+        handle: PrefixHandle,
+        strategies: &[Option<usize>],
+        seed: u64,
+    ) -> Result<Vec<PathId>> {
+        self.inner.fork_paths(handle, strategies, seed)
+    }
+
+    fn release_prefix(&mut self, handle: PrefixHandle) -> Result<()> {
+        self.inner.release_prefix(handle)
+    }
+
+    fn prefix_bytes(&self, handle: PrefixHandle) -> u64 {
+        self.inner.prefix_bytes(handle)
+    }
+
+    fn prefill_stats(&self) -> PrefillStats {
+        self.inner.prefill_stats()
+    }
+
+    fn draft_step(&mut self, paths: &[PathId]) -> Result<Vec<StepOutcome>> {
+        self.inner.draft_step(paths)
+    }
+
+    fn score_step(&mut self, paths: &[PathId]) -> Result<Vec<u8>> {
+        self.inner.score_step(paths)
+    }
+
+    fn rewrite_step(&mut self, paths: &[PathId]) -> Result<Vec<StepOutcome>> {
+        self.inner.rewrite_step(paths)
+    }
+
+    fn accept_step(&mut self, paths: &[PathId]) -> Result<()> {
+        self.inner.accept_step(paths)
+    }
+
+    fn target_step(&mut self, paths: &[PathId]) -> Result<Vec<StepOutcome>> {
+        if let Some(gate) = self.step_gate.take() {
+            let _ = self.entered.send(());
+            let _ = gate.recv();
+        }
+        self.inner.target_step(paths)
+    }
+
+    fn trace(&self, path: PathId) -> &[i32] {
+        self.inner.trace(path)
+    }
+
+    fn close_path(&mut self, path: PathId) -> Result<PathStats> {
+        self.inner.close_path(path)
+    }
+
+    fn parse_answer(&self, trace: &[i32]) -> Option<i64> {
+        self.inner.parse_answer(trace)
+    }
+
+    fn clock_secs(&self) -> f64 {
+        self.inner.clock_secs()
+    }
+
+    fn score_histogram(&self) -> ssr::util::stats::Histogram {
+        self.inner.score_histogram()
+    }
+}
+
+/// Run a skewed workload (one hot prompt, affinity placement -> every
+/// job lands on one shard) and collect the decision-visible reply
+/// fields. Token ledgers are excluded on purpose: a repeated prompt
+/// pays its one-time prefill per serving shard, which is cost- but not
+/// decision-visible (DESIGN.md §10).
+fn run_skewed(
+    shards: usize,
+    steal_threshold: usize,
+) -> (Vec<BTreeMap<String, String>>, u64, Vec<u64>) {
+    let (gate_tx, gate_rx) = mpsc::channel::<()>();
+    let gate = Arc::new(Mutex::new(gate_rx));
+    let mut cfg = SsrConfig::default();
+    cfg.shards = shards;
+    cfg.placement = PlacePolicy::Affinity;
+    cfg.max_lanes = 5;
+    cfg.steal_threshold = steal_threshold;
+    let metrics = Arc::new(Mutex::new(Metrics::new()));
+    let (handle, joins) = BackendPool::spawn(
+        cfg,
+        tokenizer::builtin_vocab(),
+        Arc::clone(&metrics),
+        move |_s| {
+            let _ = gate.lock().unwrap().recv();
+            Ok(Box::new(CalibratedBackend::for_suite("synth-math500", 0xE1A)?)
+                as Box<dyn Backend>)
+        },
+    )
+    .unwrap();
+    let m = Method::Ssr { n: 5, tau: 7, stop: StopRule::Full };
+    // queue everything before any backend exists, then open the gates:
+    // the victim's queue is full when the thief wakes up
+    let replies: Vec<_> = (0..32).map(|i| submit(&handle, "17+25*3", m, i)).collect();
+    for _ in 0..shards {
+        gate_tx.send(()).unwrap();
+    }
+    let out: Vec<BTreeMap<String, String>> = replies
+        .iter()
+        .map(|r| {
+            let v = r.recv().unwrap().unwrap();
+            ["answer", "correct", "gold", "steps", "rewrites"]
+                .iter()
+                .map(|k| (k.to_string(), format!("{:?}", v.get(k).unwrap())))
+                .collect()
+        })
+        .collect();
+    drop(handle);
+    for j in joins {
+        j.join().unwrap();
+    }
+    let mm = metrics.lock().unwrap();
+    assert_eq!(mm.errors, 0);
+    (out, mm.steals, mm.shard_requests.clone())
+}
+
+#[test]
+fn work_stealing_rebalances_skew_and_preserves_decisions() {
+    let (base, steals_base, _) = run_skewed(1, 0);
+    let (off, steals_off, req_off) = run_skewed(2, 0);
+    let (on, steals_on, req_on) = run_skewed(2, 4);
+    // stolen runs re-derive state from the placement-invariant run
+    // seed, so every decision-visible field matches the single-shard
+    // and no-steal runs (ISSUE acceptance)
+    assert_eq!(base, off, "no-steal sharded run diverged from single shard");
+    assert_eq!(base, on, "stolen runs changed decisions");
+    assert_eq!(steals_base, 0);
+    assert_eq!(steals_off, 0, "stealing happened with steal_threshold=0");
+    assert!(steals_on > 0, "skewed load never triggered a steal");
+    // without stealing, affinity starves the second shard...
+    assert_eq!(req_off.iter().filter(|&&r| r > 0).count(), 1, "{req_off:?}");
+    // ...with stealing, both shards end up serving
+    assert!(
+        req_on.len() >= 2 && req_on.iter().filter(|&&r| r > 0).count() == 2,
+        "thief never served stolen work: {req_on:?}"
+    );
+}
+
+#[test]
+fn remove_shard_waits_for_inflight_and_pool_keeps_serving() {
+    // shard 1's backend blocks inside its first target_step, so its
+    // Baseline job is guaranteed mid-flight when the drain starts
+    let (enter_tx, enter_rx) = mpsc::channel();
+    let (go_tx, go_rx) = mpsc::channel();
+    let gates = Arc::new(Mutex::new(Some((enter_tx, go_rx))));
+    let mut cfg = SsrConfig::default();
+    cfg.shards = 2;
+    cfg.placement = PlacePolicy::RoundRobin;
+    let metrics = Arc::new(Mutex::new(Metrics::new()));
+    let (handle, joins) = BackendPool::spawn(
+        cfg,
+        tokenizer::builtin_vocab(),
+        Arc::clone(&metrics),
+        move |shard| {
+            let inner = CalibratedBackend::for_suite("synth-math500", 4)?;
+            if shard == 1 {
+                let (etx, grx) = gates.lock().unwrap().take().expect("one gated shard");
+                Ok(Box::new(GatedBackend::step_gated(inner, etx, grx)) as Box<dyn Backend>)
+            } else {
+                Ok(Box::new(inner) as Box<dyn Backend>)
+            }
+        },
+    )
+    .unwrap();
+    let r0 = submit(&handle, "2+3", Method::Baseline, 0);
+    let r1 = submit(&handle, "4+5", Method::Baseline, 1);
+    enter_rx.recv().unwrap(); // shard 1 is now mid-step on its job
+    let remover = {
+        let h = handle.clone();
+        std::thread::spawn(move || h.remove_shard(1).unwrap())
+    };
+    // the drain must not complete while shard 1's run is in flight
+    std::thread::sleep(Duration::from_millis(50));
+    assert!(!remover.is_finished(), "remove_shard returned before in-flight runs finished");
+    // the surviving shard keeps serving mid-drain
+    assert!(r0.recv().unwrap().is_ok());
+    let r2 = submit(&handle, "6+7", Method::Baseline, 2);
+    assert!(r2.recv().unwrap().is_ok());
+    go_tx.send(()).unwrap();
+    let drain_s = remover.join().unwrap();
+    assert!(drain_s >= 0.0);
+    assert!(r1.recv().unwrap().is_ok(), "the drained shard's in-flight job was lost");
+    assert_eq!(handle.shards(), 1);
+    assert_eq!(handle.load_of(0), 0);
+    assert_eq!(handle.load_of(1), 0, "removed shard's gauge must read 0");
+    drop(handle);
+    for j in joins {
+        j.join().unwrap();
+    }
+    let m = metrics.lock().unwrap();
+    assert_eq!(m.errors, 0);
+    assert_eq!(m.requests, 3);
+    assert_eq!(m.shards_removed, 1);
+    assert!(m.drain_secs_max > 0.0, "gated drain must have measurable duration");
+}
+
+#[test]
+fn add_and_remove_shards_preserve_decision_equivalence() {
+    // the same workload solved on a static 1-shard pool and on a pool
+    // that grows to 3 and shrinks back mid-stream must decide
+    // identically (ISSUE acceptance: equivalence after add/remove)
+    let jobs = workload();
+    let solo: Vec<_> = {
+        let (handle, joins, _m) = spawn(1, PlacePolicy::RoundRobin, 0xADD);
+        let replies: Vec<_> = jobs
+            .iter()
+            .map(|(e, m, s)| submit(&handle, e, *m, *s))
+            .collect();
+        let out = replies.iter().map(|r| {
+            let v = r.recv().unwrap().unwrap();
+            (format!("{:?}", v.get("answer").unwrap()), v.get_i64("steps").unwrap())
+        });
+        let out: Vec<_> = out.collect();
+        drop(handle);
+        for j in joins {
+            j.join().unwrap();
+        }
+        out
+    };
+    let (handle, joins, metrics) = spawn(1, PlacePolicy::RoundRobin, 0xADD);
+    let mut elastic = Vec::new();
+    for (i, (e, m, s)) in jobs.iter().enumerate() {
+        if i == 3 {
+            handle.add_shard().unwrap();
+            handle.add_shard().unwrap();
+        }
+        if i == 7 {
+            let removable = handle.shards() > 1;
+            assert!(removable);
+            handle.remove_shard(1).unwrap();
+        }
+        let r = submit(&handle, e, *m, *s);
+        let v = r.recv().unwrap().unwrap();
+        elastic.push((format!("{:?}", v.get("answer").unwrap()), v.get_i64("steps").unwrap()));
+    }
+    assert_eq!(solo, elastic, "elastic lifecycle changed decisions");
+    assert_eq!(handle.shards(), 2);
+    drop(handle);
+    for j in joins {
+        j.join().unwrap();
+    }
+    let m = metrics.lock().unwrap();
+    assert_eq!((m.shards_added, m.shards_removed), (2, 1));
+    assert_eq!(m.errors, 0);
+}
+
+#[test]
+fn tier_prefill_runs_outside_the_lock() {
+    // shard 0 blocks INSIDE prefill_prefix; under the old
+    // prefill-under-lock tier, shard 1's acquisition of a different
+    // prompt would deadlock here instead of completing
+    let v = tokenizer::builtin_vocab();
+    let p0 = problem_from_text(&v, "17+25*3").unwrap();
+    let p1 = problem_from_text(&v, "4+5*6").unwrap();
+    let tier = Arc::new(SharedPrefixTier::new(2, 8, 0));
+    let (enter_tx, enter_rx) = mpsc::channel();
+    let (go_tx, go_rx) = mpsc::channel();
+    let filler = {
+        let tier = Arc::clone(&tier);
+        let p0 = p0.clone();
+        std::thread::spawn(move || {
+            let inner = CalibratedBackend::for_suite("synth-math500", 3).unwrap();
+            let mut b0 = GatedBackend::prefill_gated(inner, enter_tx, go_rx);
+            let a = tier.acquire_for_shard(0, &mut b0, &p0, false, false).unwrap();
+            (a.hit, b0.prefill_stats().prefixes)
+        })
+    };
+    enter_rx.recv().unwrap(); // shard 0 is inside prefill, tier unlocked
+    let mut b1 = CalibratedBackend::for_suite("synth-math500", 3).unwrap();
+    let a1 = tier.acquire_for_shard(1, &mut b1, &p1, false, false).unwrap();
+    assert!(!a1.hit && a1.retained, "concurrent prefill on another shard must proceed");
+    go_tx.send(()).unwrap();
+    let (hit0, prefills0) = filler.join().unwrap();
+    assert!(!hit0);
+    assert_eq!(prefills0, 1);
+    // steady state after the latch resolves: both shards hit
+    let r1 = tier.acquire_for_shard(1, &mut b1, &p1, false, false).unwrap();
+    assert!(r1.hit);
+    let s = tier.stats();
+    assert_eq!((s.misses, s.shard_fills), (2, 0));
+}
+
+#[test]
+fn concurrent_shards_prefill_each_prompt_once_per_shard() {
+    // two shard threads hammer the same prompt set through the latch:
+    // each backend must prefill each prompt exactly once, and the tier
+    // totals must be exact regardless of interleaving
+    let v = tokenizer::builtin_vocab();
+    let prompts: Vec<Problem> = (0..4)
+        .map(|i| problem_from_text(&v, &format!("{}+{}*2", i + 3, i + 4)).unwrap())
+        .collect();
+    let tier = Arc::new(SharedPrefixTier::new(2, 16, 0));
+    let threads: Vec<_> = (0..2)
+        .map(|shard| {
+            let tier = Arc::clone(&tier);
+            let prompts = prompts.clone();
+            std::thread::spawn(move || {
+                let mut b = CalibratedBackend::for_suite("synth-math500", 9).unwrap();
+                for _round in 0..3 {
+                    for p in &prompts {
+                        let a = tier.acquire_for_shard(shard, &mut b, p, true, false).unwrap();
+                        assert!(a.retained);
+                    }
+                }
+                b.prefill_stats().prefixes
+            })
+        })
+        .collect();
+    let counts: Vec<u64> = threads.into_iter().map(|t| t.join().unwrap()).collect();
+    assert_eq!(counts, vec![4, 4], "a shard prefilled a prompt more than once");
+    let s = tier.stats();
+    assert_eq!(s.misses, 4, "one logical miss per prompt");
+    assert_eq!(s.shard_fills, 4, "one shard fill per prompt on the second shard");
+    assert_eq!(s.hits, 20, "2 shards x 3 rounds x 4 prompts - 4 misses");
 }
 
 #[test]

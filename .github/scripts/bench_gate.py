@@ -1,0 +1,88 @@
+#!/usr/bin/env python3
+"""Bench regression gate: diff two bench-report.json files (JSON lines,
+one BENCH_JSON record per bench) and fail on a >10% drop of any shared
+higher-is-better scalar.
+
+Usage: bench_gate.py <previous-report> <current-report>
+
+Records are matched on their "bench" field. A scalar is gated when its
+key contains "throughput" — the convention the benches follow for
+per-virtual-second rates, which are deterministic on the calibrated
+substrate. Wall-clock-derived scalars (drain times, speedup ratios)
+and workload-shaped counts are reported by the benches but never
+gated: CI machine jitter would make a 10% bound on them flaky.
+
+Exit codes: 0 = pass (or nothing comparable), 1 = regression.
+"""
+
+import json
+import sys
+
+THRESHOLD = 0.10  # fail when current < (1 - THRESHOLD) * previous
+
+
+def load(path):
+    out = {}
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            name = rec.get("bench")
+            if isinstance(name, str):
+                out[name] = rec
+    return out
+
+
+def gated_key(key):
+    return "throughput" in key
+
+
+def main():
+    if len(sys.argv) != 3:
+        print(__doc__)
+        return 1
+    prev, cur = load(sys.argv[1]), load(sys.argv[2])
+    shared = sorted(set(prev) & set(cur))
+    if not shared:
+        print("bench gate: no shared bench records; nothing to compare")
+        return 0
+    failures = []
+    compared = 0
+    for bench in shared:
+        for key, old in sorted(prev[bench].items()):
+            if not gated_key(key):
+                continue
+            new = cur[bench].get(key)
+            if not isinstance(old, (int, float)) or not isinstance(new, (int, float)):
+                continue
+            if old <= 0:
+                continue  # degenerate baseline: nothing meaningful to gate
+            compared += 1
+            change = (new - old) / old
+            status = "OK"
+            if new < (1.0 - THRESHOLD) * old:
+                status = "FAIL"
+                failures.append((bench, key, old, new, change))
+            print(
+                f"  [{status}] {bench}.{key}: {old:.4g} -> {new:.4g} "
+                f"({change:+.1%})"
+            )
+    if not compared:
+        print("bench gate: no comparable throughput scalars found")
+        return 0
+    if failures:
+        print(f"\nbench gate: {len(failures)} regression(s) beyond {THRESHOLD:.0%}:")
+        for bench, key, old, new, change in failures:
+            print(f"  {bench}.{key}: {old:.4g} -> {new:.4g} ({change:+.1%})")
+        return 1
+    print(f"\nbench gate: {compared} scalar(s) within {THRESHOLD:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,428 @@
+//! Autoscale + live-migration bench (calibrated backend, no artifacts
+//! needed):
+//!
+//! 1. **Bursty-load autoscaling** — square-wave traffic (bursts of
+//!    concurrent solves separated by idle gaps) against a pool that
+//!    starts at 1 shard with the queue-driven autoscaler on
+//!    (`max_shards` ceiling). Acceptance: the pool scales up under
+//!    each burst (bounded events — no flapping), never exceeds
+//!    `max_shards`, shrinks back when idle, and every answer matches a
+//!    static single-shard run of the same workload.
+//! 2. **Drain time: migration vs wait-out** — a shard with a solve
+//!    mid-flight is hot-removed with live run migration on and off.
+//!    Acceptance: the migrating drain completes in O(one step) — i.e.
+//!    measurably faster than waiting out the remaining solve — with
+//!    identical decisions (the ISSUE's decision-equivalence assert).
+//!
+//! Steps cost real wall time here (a throttled backend wrapper), so
+//! queue pressure and drain durations are measurable; decisions are
+//! untouched. Emits one BENCH_JSON line for the tracker.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use ssr::backend::calibrated::CalibratedBackend;
+use ssr::backend::{
+    Backend, BackendMeta, LaneSnapshot, PathId, PathStats, PrefillStats, PrefixHandle,
+    StepOutcome,
+};
+use ssr::config::{PlacePolicy, SsrConfig, StopRule};
+use ssr::coordinator::autoscaler::Autoscaler;
+use ssr::coordinator::engine::Method;
+use ssr::coordinator::metrics::Metrics;
+use ssr::coordinator::pool::{BackendPool, PoolHandle};
+use ssr::coordinator::scheduler::SolveRequest;
+use ssr::model::tokenizer;
+use ssr::util::json;
+use ssr::workload::Problem;
+
+const BURSTS: usize = 3;
+const BURST_JOBS: usize = 16;
+const IDLE_GAP: Duration = Duration::from_millis(600);
+const STEP_COST: Duration = Duration::from_millis(5);
+
+/// Delegating wrapper that makes each generation step cost real wall
+/// time; decisions are driven by the inner calibrated substrate.
+struct ThrottledBackend {
+    inner: CalibratedBackend,
+    step_sleep: Duration,
+    started: Option<mpsc::Sender<()>>,
+}
+
+impl ThrottledBackend {
+    fn note_step(&mut self) {
+        if let Some(tx) = self.started.take() {
+            let _ = tx.send(());
+        }
+        std::thread::sleep(self.step_sleep);
+    }
+}
+
+impl Backend for ThrottledBackend {
+    fn meta(&self) -> BackendMeta {
+        self.inner.meta()
+    }
+
+    fn select_scores(&mut self, problem: &Problem) -> anyhow::Result<Vec<f32>> {
+        self.inner.select_scores(problem)
+    }
+
+    fn open_paths(
+        &mut self,
+        problem: &Problem,
+        strategies: &[Option<usize>],
+        seed: u64,
+        use_draft: bool,
+    ) -> anyhow::Result<Vec<PathId>> {
+        self.inner.open_paths(problem, strategies, seed, use_draft)
+    }
+
+    fn prefill_prefix(
+        &mut self,
+        problem: &Problem,
+        use_draft: bool,
+        want_scores: bool,
+    ) -> anyhow::Result<PrefixHandle> {
+        self.inner.prefill_prefix(problem, use_draft, want_scores)
+    }
+
+    fn prefix_scores(&mut self, handle: PrefixHandle) -> anyhow::Result<Vec<f32>> {
+        self.inner.prefix_scores(handle)
+    }
+
+    fn fork_paths(
+        &mut self,
+        handle: PrefixHandle,
+        strategies: &[Option<usize>],
+        seed: u64,
+    ) -> anyhow::Result<Vec<PathId>> {
+        self.inner.fork_paths(handle, strategies, seed)
+    }
+
+    fn release_prefix(&mut self, handle: PrefixHandle) -> anyhow::Result<()> {
+        self.inner.release_prefix(handle)
+    }
+
+    fn prefix_bytes(&self, handle: PrefixHandle) -> u64 {
+        self.inner.prefix_bytes(handle)
+    }
+
+    fn prefill_stats(&self) -> PrefillStats {
+        self.inner.prefill_stats()
+    }
+
+    fn draft_step(&mut self, paths: &[PathId]) -> anyhow::Result<Vec<StepOutcome>> {
+        self.note_step();
+        self.inner.draft_step(paths)
+    }
+
+    fn score_step(&mut self, paths: &[PathId]) -> anyhow::Result<Vec<u8>> {
+        self.inner.score_step(paths)
+    }
+
+    fn rewrite_step(&mut self, paths: &[PathId]) -> anyhow::Result<Vec<StepOutcome>> {
+        self.inner.rewrite_step(paths)
+    }
+
+    fn accept_step(&mut self, paths: &[PathId]) -> anyhow::Result<()> {
+        self.inner.accept_step(paths)
+    }
+
+    fn target_step(&mut self, paths: &[PathId]) -> anyhow::Result<Vec<StepOutcome>> {
+        self.note_step();
+        self.inner.target_step(paths)
+    }
+
+    fn export_lane_state(&mut self, path: PathId) -> anyhow::Result<LaneSnapshot> {
+        self.inner.export_lane_state(path)
+    }
+
+    fn import_lane_state(&mut self, snapshot: LaneSnapshot) -> anyhow::Result<PathId> {
+        self.inner.import_lane_state(snapshot)
+    }
+
+    fn trace(&self, path: PathId) -> &[i32] {
+        self.inner.trace(path)
+    }
+
+    fn close_path(&mut self, path: PathId) -> anyhow::Result<PathStats> {
+        self.inner.close_path(path)
+    }
+
+    fn parse_answer(&self, trace: &[i32]) -> Option<i64> {
+        self.inner.parse_answer(trace)
+    }
+
+    fn clock_secs(&self) -> f64 {
+        self.inner.clock_secs()
+    }
+
+    fn score_histogram(&self) -> ssr::util::stats::Histogram {
+        self.inner.score_histogram()
+    }
+}
+
+fn submit(
+    handle: &PoolHandle,
+    expr: &str,
+    method: Method,
+    seed: u64,
+) -> mpsc::Receiver<anyhow::Result<ssr::util::json::Value>> {
+    let (rtx, rrx) = mpsc::channel();
+    handle
+        .submit(SolveRequest { expr: expr.to_string(), method, seed, reply: rtx })
+        .expect("pool alive");
+    rrx
+}
+
+fn burst_jobs() -> Vec<(String, Method, u64)> {
+    let m = Method::Ssr { n: 3, tau: 7, stop: StopRule::Full };
+    let mut jobs = Vec::new();
+    for b in 0..BURSTS {
+        for i in 0..BURST_JOBS {
+            jobs.push((
+                format!("{}+{}*{}", i % 7 + 2, (i + b) % 9 + 3, b % 3 + 2),
+                m,
+                (b * 1000 + i) as u64,
+            ));
+        }
+    }
+    jobs
+}
+
+/// The full bursty workload on one static, unthrottled shard — the
+/// decision-equivalence reference.
+fn single_shard_answers(jobs: &[(String, Method, u64)]) -> anyhow::Result<Vec<Option<i64>>> {
+    let cfg = SsrConfig::default();
+    let metrics = Arc::new(Mutex::new(Metrics::new()));
+    let (handle, joins) =
+        BackendPool::spawn(cfg, tokenizer::builtin_vocab(), Arc::clone(&metrics), |_s| {
+            Ok(Box::new(CalibratedBackend::for_suite("synth-math500", 0xA57)?)
+                as Box<dyn Backend>)
+        })?;
+    let mut out = Vec::new();
+    for (expr, m, seed) in jobs {
+        let v = submit(&handle, expr, *m, *seed).recv().expect("reply").expect("ok");
+        out.push(v.get_i64("answer").ok());
+    }
+    drop(handle);
+    for j in joins {
+        j.join().unwrap();
+    }
+    Ok(out)
+}
+
+struct BurstReport {
+    answers: Vec<Option<i64>>,
+    scale_ups: u64,
+    scale_downs: u64,
+    peak_shards: usize,
+    final_shards: usize,
+    migrations: u64,
+    migration_bytes: u64,
+    wait_p99_s: f64,
+    wall_s: f64,
+}
+
+fn run_bursty_autoscaled() -> anyhow::Result<BurstReport> {
+    let mut cfg = SsrConfig::default();
+    cfg.shards = 1;
+    cfg.min_shards = 1;
+    cfg.migration = true;
+    // stealing lets hot-added shards pull the burst's already-queued
+    // jobs (and shed requests rebalance in-flight runs) — without it a
+    // scale-up only helps future placements
+    cfg.steal_threshold = 8;
+    cfg.autoscale.enabled = true;
+    cfg.autoscale.max_shards = 4;
+    cfg.autoscale.scale_up_wait_s = 0.03;
+    cfg.autoscale.scale_up_queue = 1.0;
+    cfg.autoscale.scale_down_occupancy = 0.3;
+    cfg.autoscale.interval_ms = 10;
+    cfg.autoscale.cooldown_ms = 80;
+    cfg.autoscale.hysteresis = 2;
+    let metrics = Arc::new(Mutex::new(Metrics::new()));
+    let (handle, joins) = BackendPool::spawn(
+        cfg.clone(),
+        tokenizer::builtin_vocab(),
+        Arc::clone(&metrics),
+        |_s| {
+            let inner = CalibratedBackend::for_suite("synth-math500", 0xA57)?;
+            Ok(Box::new(ThrottledBackend {
+                inner,
+                step_sleep: STEP_COST,
+                started: None,
+            }) as Box<dyn Backend>)
+        },
+    )?;
+    let mut autoscaler = Autoscaler::spawn(handle.clone(), Arc::clone(&metrics), &cfg);
+
+    let t0 = Instant::now();
+    let jobs = burst_jobs();
+    let mut answers = Vec::with_capacity(jobs.len());
+    let mut peak_shards = handle.shards();
+    for b in 0..BURSTS {
+        let burst = &jobs[b * BURST_JOBS..(b + 1) * BURST_JOBS];
+        let replies: Vec<_> =
+            burst.iter().map(|(e, m, s)| submit(&handle, e, *m, *s)).collect();
+        for r in &replies {
+            peak_shards = peak_shards.max(handle.shards());
+            let v = r.recv().expect("reply").expect("solve ok");
+            answers.push(v.get_i64("answer").ok());
+        }
+        // idle gap: give the policy room to scale back down
+        let gap_end = Instant::now() + IDLE_GAP;
+        while Instant::now() < gap_end {
+            peak_shards = peak_shards.max(handle.shards());
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    }
+    // let the pool settle, then stop the policy loop
+    let settle = Instant::now();
+    while handle.shards() > 1 && settle.elapsed() < Duration::from_secs(10) {
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    let final_shards = handle.shards();
+    autoscaler.stop();
+    let wall_s = t0.elapsed().as_secs_f64();
+    drop(handle);
+    for j in joins {
+        j.join().unwrap();
+    }
+    let m = metrics.lock().unwrap();
+    assert_eq!(m.errors, 0, "errors under bursty autoscaled load");
+    assert_eq!(m.requests as usize, BURSTS * BURST_JOBS);
+    Ok(BurstReport {
+        answers,
+        scale_ups: m.scale_ups,
+        scale_downs: m.scale_downs,
+        peak_shards,
+        final_shards,
+        migrations: m.migrations,
+        migration_bytes: m.migration_bytes,
+        wait_p99_s: m.p99_admission_wait(),
+        wall_s,
+    })
+}
+
+/// Hot-remove a shard whose solve is mid-flight; returns (drain
+/// seconds, answers, migrations).
+fn run_drain(migration: bool) -> anyhow::Result<(f64, Vec<Option<i64>>, u64)> {
+    let step = Duration::from_millis(10);
+    let (start_tx, start_rx) = mpsc::channel::<()>();
+    let starts = Arc::new(Mutex::new(start_tx));
+    let mut cfg = SsrConfig::default();
+    cfg.shards = 2;
+    cfg.placement = PlacePolicy::RoundRobin;
+    cfg.migration = migration;
+    let metrics = Arc::new(Mutex::new(Metrics::new()));
+    let (handle, joins) = BackendPool::spawn(
+        cfg,
+        tokenizer::builtin_vocab(),
+        Arc::clone(&metrics),
+        move |_s| {
+            let inner = CalibratedBackend::for_suite("synth-math500", 0xDA1)?;
+            let tx = starts.lock().unwrap().clone();
+            Ok(Box::new(ThrottledBackend { inner, step_sleep: step, started: Some(tx) })
+                as Box<dyn Backend>)
+        },
+    )?;
+    let m = Method::Ssr { n: 5, tau: 7, stop: StopRule::Full };
+    let r0 = submit(&handle, "17+25*3", m, 1);
+    let r1 = submit(&handle, "4+5*6", m, 2);
+    start_rx.recv().unwrap();
+    start_rx.recv().unwrap();
+    let drain_s = handle.remove_shard(1)?;
+    let a0 = r0.recv().expect("reply").expect("ok").get_i64("answer").ok();
+    let a1 = r1.recv().expect("reply").expect("ok").get_i64("answer").ok();
+    drop(handle);
+    for j in joins {
+        j.join().unwrap();
+    }
+    let mm = metrics.lock().unwrap();
+    assert_eq!(mm.errors, 0);
+    Ok((drain_s, vec![a0, a1], mm.migrations))
+}
+
+fn main() -> anyhow::Result<()> {
+    let t_start = Instant::now();
+    println!(
+        "## autoscale: {BURSTS} bursts x {BURST_JOBS} ssr-m3 jobs, pool 1..4 shards \
+         (queue-driven policy), then drain migrate-vs-wait"
+    );
+
+    let reference = single_shard_answers(&burst_jobs())?;
+    let report = run_bursty_autoscaled()?;
+    // ISSUE acceptance: bit-identical decisions on the autoscaled pool
+    assert_eq!(
+        report.answers, reference,
+        "autoscaled answers diverge from the single-shard run"
+    );
+    // the policy actually scaled, stayed in band, and did not flap
+    assert!(report.scale_ups >= 1, "burst load never scaled up");
+    assert!(report.peak_shards <= 4, "exceeded max_shards: {}", report.peak_shards);
+    // ramping 1 -> max_shards is at most 3 ups; anything well beyond
+    // one ramp per burst is flapping
+    assert!(
+        report.scale_ups as usize <= BURSTS * 3,
+        "flapping: {} scale-ups across {BURSTS} bursts",
+        report.scale_ups
+    );
+    assert_eq!(report.final_shards, 1, "pool never shrank back to min_shards");
+    println!(
+        "  bursts: peak {} shards, {} up / {} down events, {} migrations \
+         ({} bytes), admission p99 {:.3}s, wall {:.2}s",
+        report.peak_shards,
+        report.scale_ups,
+        report.scale_downs,
+        report.migrations,
+        report.migration_bytes,
+        report.wait_p99_s,
+        report.wall_s
+    );
+
+    let (drain_mig_s, answers_mig, migrations) = run_drain(true)?;
+    let (drain_wait_s, answers_wait, _) = run_drain(false)?;
+    assert_eq!(answers_mig, answers_wait, "migration changed decisions");
+    assert!(migrations >= 1, "migrating drain never migrated");
+    // ISSUE acceptance: drain is O(one step) with migration — strictly
+    // faster than waiting out the remaining solve
+    assert!(
+        drain_mig_s < drain_wait_s,
+        "migration did not shorten the drain: {drain_mig_s:.3}s vs {drain_wait_s:.3}s"
+    );
+    let drain_speedup = drain_wait_s / drain_mig_s.max(1e-9);
+    println!(
+        "  drain: migrate {drain_mig_s:.3}s vs wait-out {drain_wait_s:.3}s \
+         (x{drain_speedup:.1})"
+    );
+
+    let summary = json::obj(vec![
+        ("bench", json::s("autoscale")),
+        ("bursts", json::i(BURSTS as i64)),
+        ("burst_jobs", json::i(BURST_JOBS as i64)),
+        ("scale_ups", json::i(report.scale_ups as i64)),
+        ("scale_downs", json::i(report.scale_downs as i64)),
+        ("peak_shards", json::i(report.peak_shards as i64)),
+        ("migrations", json::i(report.migrations as i64)),
+        ("migration_bytes", json::i(report.migration_bytes as i64)),
+        ("admission_wait_p99_s", json::n(report.wait_p99_s)),
+        ("burst_wall_s", json::n(report.wall_s)),
+        ("drain_migrate_s", json::n(drain_mig_s)),
+        ("drain_wait_s", json::n(drain_wait_s)),
+        ("drain_speedup", json::n(drain_speedup)),
+        ("autoscale_equivalent", ssr::util::json::Value::Bool(true)),
+        ("wall_s", json::n(t_start.elapsed().as_secs_f64())),
+    ]);
+    println!("\nBENCH_JSON {}", summary.print());
+
+    if drain_speedup < 1.5 {
+        eprintln!(
+            "[bench autoscale] WARNING: drain speedup only x{drain_speedup:.2} \
+             (expected well above 1x with live migration)"
+        );
+    }
+    println!("[bench autoscale] completed in {:.2}s", t_start.elapsed().as_secs_f64());
+    Ok(())
+}

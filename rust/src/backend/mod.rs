@@ -37,7 +37,7 @@ pub mod slotmap;
 
 use anyhow::Result;
 
-use crate::workload::Problem;
+use crate::workload::{Family, Problem};
 
 /// Opaque per-path handle issued by a backend.
 pub type PathId = usize;
@@ -111,6 +111,94 @@ pub struct PathStats {
     pub rewrites: u64,
     /// final trace (prompt + reasoning)
     pub trace: Vec<i32>,
+}
+
+/// Serializable state of one in-flight lane — the unit of live run
+/// migration (DESIGN.md §12). A snapshot is plain host data (`Send`),
+/// so it can cross shard-thread boundaries; importing it on an
+/// identically-seeded backend of the same kind resumes the lane with
+/// bit-identical future decisions. What must round-trip exactly: the
+/// accepted path text (`trace`), the per-lane sampling-stream position,
+/// and the cumulative token ledger. What may be recomputed at import:
+/// lane/group placement, device residency (PJRT re-uploads the K/V),
+/// and anything derivable from (backend seed, problem key).
+#[derive(Debug, Clone)]
+pub struct LaneSnapshot {
+    /// prompt + accepted reasoning so far (the frozen path text)
+    pub trace: Vec<i32>,
+    pub use_draft: bool,
+    pub terminal: bool,
+    /// cumulative ledger; migration must not re-bill prefill
+    pub stats: PathStats,
+    pub payload: LanePayload,
+}
+
+impl LaneSnapshot {
+    /// Approximate serialized size — the `migration_bytes` gauge.
+    pub fn approx_bytes(&self) -> u64 {
+        let payload = match &self.payload {
+            LanePayload::Calibrated(_) => 128,
+            LanePayload::Pjrt(p) => {
+                let kv = |h: &HostKv| (h.k.len() + h.v.len()) as u64 * 4;
+                kv(&p.target_kv) + p.draft_kv.as_ref().map_or(0, kv) + 64
+            }
+        };
+        (self.trace.len() + self.stats.trace.len()) as u64 * 4 + 96 + payload
+    }
+}
+
+/// Backend-specific half of a [`LaneSnapshot`]. Both variants are plain
+/// host data so the enum is `Send` regardless of compiled features; a
+/// backend rejects a payload of the wrong kind at import.
+#[derive(Debug, Clone)]
+pub enum LanePayload {
+    /// calibrated substrate: the derived-stream state — a cheap struct
+    /// capture (RNG stream position, hardness key, SSD shift)
+    Calibrated(CalLaneState),
+    /// PJRT: host-side K/V download of the lane's cache rows up to each
+    /// model's frontier, re-uploaded (and re-padded) at import
+    Pjrt(PjrtLaneState),
+}
+
+/// Calibrated lane state (see `backend::calibrated::CalPath` — these
+/// are exactly its placement-independent fields).
+#[derive(Debug, Clone)]
+pub struct CalLaneState {
+    pub strategy: Option<usize>,
+    pub family: Family,
+    pub difficulty: f64,
+    /// shared hardness draw of the parent problem
+    pub h: f64,
+    pub z: f64,
+    pub on_track: bool,
+    pub steps_done: usize,
+    pub total_steps: usize,
+    pub ssd_shift: f64,
+    pub answer: i64,
+    /// per-path sampling-stream position ([`crate::util::rng::Rng::state`])
+    pub rng_state: u64,
+}
+
+/// One model's K/V rows on the host: the flattened literal plus its
+/// dims (`[L, 1, H, frontier, D]` — the sliced-prefix layout of
+/// DESIGN.md §10, reused for migration).
+#[derive(Debug, Clone)]
+pub struct HostKv {
+    pub k: Vec<f32>,
+    pub k_dims: Vec<usize>,
+    pub v: Vec<f32>,
+    pub v_dims: Vec<usize>,
+}
+
+/// PJRT lane state: cache pointers plus the downloaded K/V.
+#[derive(Debug, Clone)]
+pub struct PjrtLaneState {
+    pub prompt_len: usize,
+    pub frontier_d: usize,
+    pub frontier_t: usize,
+    pub seed: i32,
+    pub target_kv: HostKv,
+    pub draft_kv: Option<HostKv>,
 }
 
 /// Static facts the engine needs from a backend.
@@ -213,6 +301,21 @@ pub trait Backend {
 
     /// Target-only generation of the next step (baselines; no draft).
     fn target_step(&mut self, paths: &[PathId]) -> Result<Vec<StepOutcome>>;
+
+    /// Detach one lane into a serializable [`LaneSnapshot`] (live run
+    /// migration, DESIGN.md §12). The local lane is closed by the
+    /// export — its id must not be stepped or closed again — and the
+    /// snapshot resumes it via [`Backend::import_lane_state`] on any
+    /// identically-configured backend of the same kind with
+    /// bit-identical future decisions. Only legal at a step boundary
+    /// (no tentative step pending).
+    fn export_lane_state(&mut self, path: PathId) -> Result<LaneSnapshot>;
+
+    /// Re-home a lane exported by [`Backend::export_lane_state`],
+    /// returning its new local [`PathId`]. Token ledgers carry over
+    /// (no re-billed prefill); on PJRT the K/V rows are re-uploaded
+    /// into a fresh single-lane group.
+    fn import_lane_state(&mut self, snapshot: LaneSnapshot) -> Result<PathId>;
 
     /// Current full trace (prompt + accepted reasoning) of a path.
     fn trace(&self, path: PathId) -> &[i32];

@@ -30,7 +30,10 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use super::slotmap::SlotMap;
-use super::{Backend, BackendMeta, PathId, PathStats, PrefillStats, PrefixHandle, StepOutcome};
+use super::{
+    Backend, BackendMeta, HostKv, LanePayload, LaneSnapshot, PathId, PathStats, PjrtLaneState,
+    PrefillStats, PrefixHandle, StepOutcome,
+};
 use crate::model::{handle::KvCache, sampler, tokenizer, ModelHandle};
 use crate::runtime::{Manifest, Runtime};
 use crate::workload::Problem;
@@ -685,6 +688,102 @@ impl Backend for PjrtBackend {
             }
         }
         Ok(out)
+    }
+
+    fn export_lane_state(&mut self, path: PathId) -> Result<LaneSnapshot> {
+        // Download the lane's K/V rows up to each model's frontier via
+        // the sliced-prefix path (DESIGN.md §10): [L, B, H, S_MAX, D]
+        // -> [L, 1, H, frontier, D] on the host. Everything past the
+        // frontier is masked garbage and is NOT shipped.
+        let (group, lane, frontier_t, frontier_d, use_draft) = {
+            let st = &self.paths[path];
+            if st.closed {
+                bail!("export_lane_state: path {path} already closed");
+            }
+            if st.tentative_start.is_some() {
+                bail!("export_lane_state: path {path} has a tentative step (mid-cycle)");
+            }
+            (st.group, st.lane, st.frontier_t, st.frontier_d, st.use_draft)
+        };
+        let host_kv = |c: &KvCache| -> Result<HostKv> {
+            Ok(HostKv {
+                k: crate::runtime::literals::to_vec_f32(&c.k)?,
+                k_dims: crate::runtime::literals::dims(&c.k)?,
+                v: crate::runtime::literals::to_vec_f32(&c.v)?,
+                v_dims: crate::runtime::literals::dims(&c.v)?,
+            })
+        };
+        let g = &self.groups[group];
+        let target_kv = host_kv(&self.target.slice_prefix(&g.target_cache, lane, frontier_t)?)?;
+        let draft_kv = if use_draft {
+            let c = g.draft_cache.as_ref().context("speculative lane without draft cache")?;
+            Some(host_kv(&self.draft.slice_prefix(c, lane, frontier_d)?)?)
+        } else {
+            None
+        };
+        let st = &mut self.paths[path];
+        st.closed = true;
+        let stats = std::mem::take(&mut st.stats);
+        let trace = std::mem::take(&mut st.trace);
+        Ok(LaneSnapshot {
+            trace,
+            use_draft,
+            terminal: st.terminal,
+            stats,
+            payload: LanePayload::Pjrt(PjrtLaneState {
+                prompt_len: st.prompt_len,
+                frontier_d,
+                frontier_t,
+                seed: st.seed,
+                target_kv,
+                draft_kv,
+            }),
+        })
+    }
+
+    fn import_lane_state(&mut self, snap: LaneSnapshot) -> Result<PathId> {
+        let LanePayload::Pjrt(s) = snap.payload else {
+            bail!("import_lane_state: snapshot is not from a PJRT backend");
+        };
+        // Re-upload the downloaded rows and re-pad to the compiled
+        // S_MAX via the fork path: the imported lane gets its own
+        // single-lane group (PJRT lanes stay pinned to a cache batch).
+        let upload = |h: &HostKv| -> Result<KvCache> {
+            Ok(KvCache {
+                k: crate::runtime::literals::lit_f32(&h.k, &h.k_dims)?,
+                v: crate::runtime::literals::lit_f32(&h.v, &h.v_dims)?,
+                batch: 1,
+            })
+        };
+        let target_cache = self.target.fork_cache(&upload(&s.target_kv)?, 0, 1)?;
+        let draft_cache = match &s.draft_kv {
+            Some(h) => Some(self.draft.fork_cache(&upload(h)?, 0, 1)?),
+            None => None,
+        };
+        let group_id = self.groups.len();
+        let batch = target_cache.batch;
+        let pid = self.paths.len();
+        self.paths.push(PathState {
+            group: group_id,
+            lane: 0,
+            trace: snap.trace,
+            prompt_len: s.prompt_len,
+            frontier_d: s.frontier_d,
+            frontier_t: s.frontier_t,
+            tentative_start: None,
+            use_draft: snap.use_draft,
+            seed: s.seed,
+            terminal: snap.terminal,
+            stats: snap.stats,
+            closed: false,
+        });
+        self.groups.push(LaneGroup {
+            draft_cache,
+            target_cache,
+            lanes: vec![pid],
+            batch,
+        });
+        Ok(pid)
     }
 
     fn trace(&self, path: PathId) -> &[i32] {

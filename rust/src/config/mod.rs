@@ -145,6 +145,67 @@ impl PrefixCacheCfg {
     }
 }
 
+/// Queue-driven autoscaler knobs (`coordinator::autoscaler`,
+/// DESIGN.md §12). The policy samples queue depth and head-of-line
+/// admission wait into EWMAs and calls `add_shard` / `remove_shard`
+/// within `[min_shards, max_shards]`, with hysteresis (consecutive
+/// breaches required) and a cooldown between applied events so a
+/// bursty load cannot make the pool flap.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AutoscaleCfg {
+    /// run the policy loop (off = manual add_shard/remove_shard only)
+    pub enabled: bool,
+    /// hard ceiling on live shards the policy may reach
+    pub max_shards: usize,
+    /// scale up when the head-of-line admission-wait EWMA exceeds this
+    pub scale_up_wait_s: f64,
+    /// ...or when the queued-jobs-per-live-shard EWMA exceeds this
+    pub scale_up_queue: f64,
+    /// scale down when the lane-occupancy EWMA (outstanding lanes /
+    /// (shards x max_lanes)) stays below this fraction with empty queues
+    pub scale_down_occupancy: f64,
+    /// policy evaluation period
+    pub interval_ms: u64,
+    /// minimum gap between applied scale events
+    pub cooldown_ms: u64,
+    /// consecutive breached evaluations required before acting
+    pub hysteresis: u32,
+}
+
+impl Default for AutoscaleCfg {
+    fn default() -> Self {
+        AutoscaleCfg {
+            enabled: false,
+            max_shards: 8,
+            scale_up_wait_s: 0.25,
+            scale_up_queue: 2.0,
+            scale_down_occupancy: 0.25,
+            interval_ms: 50,
+            cooldown_ms: 500,
+            hysteresis: 3,
+        }
+    }
+}
+
+impl AutoscaleCfg {
+    fn apply_json(&mut self, v: &Value) -> Result<()> {
+        for (k, val) in v.obj()? {
+            match k.as_str() {
+                "enabled" => self.enabled = val.bool()?,
+                "max_shards" => self.max_shards = val.usize()?,
+                "scale_up_wait_s" => self.scale_up_wait_s = val.f64()?,
+                "scale_up_queue" => self.scale_up_queue = val.f64()?,
+                "scale_down_occupancy" => self.scale_down_occupancy = val.f64()?,
+                "interval_ms" => self.interval_ms = val.i64()? as u64,
+                "cooldown_ms" => self.cooldown_ms = val.i64()? as u64,
+                "hysteresis" => self.hysteresis = val.i64()? as u32,
+                other => bail!("unknown autoscale key `{other}`"),
+            }
+        }
+        Ok(())
+    }
+}
+
 fn parse_bool(s: &str) -> Result<bool> {
     Ok(match s {
         "on" | "true" | "1" | "yes" => true,
@@ -190,6 +251,14 @@ pub struct SsrConfig {
     /// `remove_shard` refuses to drain the pool below this many live
     /// shards
     pub min_shards: usize,
+    /// live run migration: a draining shard detaches its in-flight runs
+    /// at the next step boundary and re-homes them on the survivors
+    /// (drain = O(one step)), and loaded shards shed whole runs to
+    /// idle thieves' shed requests. Off = PR-4 semantics (drains wait
+    /// out their in-flight solves; stealing moves queued jobs only)
+    pub migration: bool,
+    /// queue-driven autoscaler policy (off by default)
+    pub autoscale: AutoscaleCfg,
     /// shared-prefix prefill + cross-request prefix cache / shared tier
     pub prefix: PrefixCacheCfg,
 }
@@ -212,6 +281,8 @@ impl Default for SsrConfig {
             placement: PlacePolicy::LeastLoaded,
             steal_threshold: 0,
             min_shards: 1,
+            migration: true,
+            autoscale: AutoscaleCfg::default(),
             prefix: PrefixCacheCfg::default(),
         }
     }
@@ -237,6 +308,8 @@ impl SsrConfig {
                 "placement" => self.placement = PlacePolicy::parse(val.str()?)?,
                 "steal_threshold" => self.steal_threshold = val.usize()?,
                 "min_shards" => self.min_shards = val.usize()?,
+                "migration" => self.migration = val.bool()?,
+                "autoscale" => self.autoscale.apply_json(val)?,
                 "prefix_cache" => self.prefix.apply_json(val)?,
                 other => bail!("unknown config key `{other}`"),
             }
@@ -275,6 +348,23 @@ impl SsrConfig {
         }
         self.steal_threshold = args.opt_usize("steal-threshold", self.steal_threshold)?;
         self.min_shards = args.opt_usize("min-shards", self.min_shards)?;
+        if let Some(s) = args.opt("migrate") {
+            self.migration = parse_bool(s)?;
+        }
+        if let Some(s) = args.opt("autoscale") {
+            self.autoscale.enabled = parse_bool(s)?;
+        }
+        self.autoscale.max_shards = args.opt_usize("max-shards", self.autoscale.max_shards)?;
+        self.autoscale.scale_up_wait_s =
+            args.opt_f64("scale-up-wait", self.autoscale.scale_up_wait_s)?;
+        self.autoscale.scale_up_queue =
+            args.opt_f64("scale-up-queue", self.autoscale.scale_up_queue)?;
+        self.autoscale.scale_down_occupancy =
+            args.opt_f64("scale-down-occupancy", self.autoscale.scale_down_occupancy)?;
+        self.autoscale.interval_ms =
+            args.opt_u64("scale-interval-ms", self.autoscale.interval_ms)?;
+        self.autoscale.cooldown_ms =
+            args.opt_u64("scale-cooldown-ms", self.autoscale.cooldown_ms)?;
         if let Some(s) = args.opt("prefix-reuse") {
             self.prefix.enabled = parse_bool(s)?;
         }
@@ -315,6 +405,40 @@ impl SsrConfig {
                 self.min_shards,
                 self.shards
             );
+        }
+        let a = &self.autoscale;
+        if a.max_shards == 0 || a.max_shards > 64 {
+            bail!("autoscale.max_shards must be in 1..=64, got {}", a.max_shards);
+        }
+        if a.max_shards < self.min_shards {
+            bail!(
+                "autoscale.max_shards ({}) must be >= min_shards ({})",
+                a.max_shards,
+                self.min_shards
+            );
+        }
+        if a.enabled && self.shards > a.max_shards {
+            bail!(
+                "shards ({}) must not exceed autoscale.max_shards ({}): the pool would \
+                 start above the policy's hard ceiling and scale-down cannot be forced",
+                self.shards,
+                a.max_shards
+            );
+        }
+        if !(0.0..=1.0).contains(&a.scale_down_occupancy) {
+            bail!(
+                "autoscale.scale_down_occupancy must be in [0, 1], got {}",
+                a.scale_down_occupancy
+            );
+        }
+        if a.scale_up_wait_s < 0.0 || a.scale_up_queue < 0.0 {
+            bail!("autoscale scale-up thresholds must be >= 0");
+        }
+        if a.interval_ms == 0 {
+            bail!("autoscale.interval_ms must be > 0");
+        }
+        if a.hysteresis == 0 {
+            bail!("autoscale.hysteresis must be >= 1");
         }
         // bound keeps the cache's O(capacity) LRU eviction scan cheap
         if self.prefix.capacity > 4096 {
@@ -483,6 +607,100 @@ mod tests {
         c.apply_args(&mut args).unwrap();
         assert_eq!(c.steal_threshold, 8);
         assert_eq!(c.min_shards, 2);
+    }
+
+    #[test]
+    fn migration_and_autoscale_knobs() {
+        let c = SsrConfig::default();
+        assert!(c.migration, "migration is the default drain/steal mode");
+        assert!(!c.autoscale.enabled, "autoscaling is opt-in");
+        assert_eq!(c.autoscale.max_shards, 8);
+
+        let mut c = SsrConfig::default();
+        let v = Value::parse(
+            r#"{"migration": false, "autoscale": {"enabled": true, "max_shards": 4,
+                "scale_up_wait_s": 0.1, "scale_up_queue": 3.5,
+                "scale_down_occupancy": 0.5, "interval_ms": 10,
+                "cooldown_ms": 100, "hysteresis": 2}}"#,
+        )
+        .unwrap();
+        c.apply_json(&v).unwrap();
+        assert!(!c.migration);
+        assert!(c.autoscale.enabled);
+        assert_eq!(c.autoscale.max_shards, 4);
+        assert!((c.autoscale.scale_up_wait_s - 0.1).abs() < 1e-12);
+        assert!((c.autoscale.scale_up_queue - 3.5).abs() < 1e-12);
+        assert!((c.autoscale.scale_down_occupancy - 0.5).abs() < 1e-12);
+        assert_eq!(c.autoscale.interval_ms, 10);
+        assert_eq!(c.autoscale.cooldown_ms, 100);
+        assert_eq!(c.autoscale.hysteresis, 2);
+
+        // invalid values rejected
+        let mut c = SsrConfig::default();
+        assert!(c
+            .apply_json(&Value::parse(r#"{"autoscale": {"max_shards": 0}}"#).unwrap())
+            .is_err());
+        let mut c = SsrConfig::default();
+        assert!(c
+            .apply_json(
+                &Value::parse(r#"{"autoscale": {"scale_down_occupancy": 1.5}}"#).unwrap()
+            )
+            .is_err());
+        let mut c = SsrConfig::default();
+        assert!(c
+            .apply_json(&Value::parse(r#"{"autoscale": {"hysteresis": 0}}"#).unwrap())
+            .is_err());
+        let mut c = SsrConfig::default();
+        assert!(c
+            .apply_json(&Value::parse(r#"{"autoscale": {"bogus": 1}}"#).unwrap())
+            .is_err());
+        // the ceiling cannot sit below the removal floor
+        let mut c = SsrConfig::default();
+        c.shards = 4;
+        c.min_shards = 4;
+        assert!(c
+            .apply_json(&Value::parse(r#"{"autoscale": {"max_shards": 2}}"#).unwrap())
+            .is_err());
+        // ...and an enabled policy cannot start above its own ceiling
+        let mut c = SsrConfig::default();
+        c.shards = 6;
+        assert!(c
+            .apply_json(
+                &Value::parse(r#"{"autoscale": {"enabled": true, "max_shards": 4}}"#)
+                    .unwrap()
+            )
+            .is_err());
+
+        let argv: Vec<String> = [
+            "serve",
+            "--autoscale",
+            "on",
+            "--migrate",
+            "off",
+            "--max-shards",
+            "6",
+            "--scale-up-wait",
+            "0.05",
+            "--scale-down-occupancy",
+            "0.3",
+            "--scale-interval-ms",
+            "20",
+            "--scale-cooldown-ms",
+            "200",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let mut args = Args::parse(&argv).unwrap();
+        let mut c = SsrConfig::default();
+        c.apply_args(&mut args).unwrap();
+        assert!(c.autoscale.enabled);
+        assert!(!c.migration);
+        assert_eq!(c.autoscale.max_shards, 6);
+        assert!((c.autoscale.scale_up_wait_s - 0.05).abs() < 1e-12);
+        assert!((c.autoscale.scale_down_occupancy - 0.3).abs() < 1e-12);
+        assert_eq!(c.autoscale.interval_ms, 20);
+        assert_eq!(c.autoscale.cooldown_ms, 200);
     }
 
     #[test]

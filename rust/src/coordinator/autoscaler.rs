@@ -1,0 +1,428 @@
+//! Queue-driven autoscaler: a policy loop over the elastic pool
+//! (DESIGN.md §12).
+//!
+//! PR 4 made the shard set elastic but manual (`{"op":"add_shard"}` /
+//! `{"op":"remove_shard"}`); this module closes the loop. A small
+//! thread samples the pool's live signals every `interval_ms`:
+//!
+//! * **queue depth** — queued-but-unstarted jobs across all shards,
+//! * **admission wait** — how long the oldest queued job has been
+//!   waiting (the head-of-line wait a new arrival is about to inherit),
+//! * **occupancy** — outstanding lane estimates / (shards x max_lanes),
+//!
+//! smooths them into EWMAs, and applies a [`Policy`]: scale UP when the
+//! wait or per-shard queue EWMAs breach their thresholds, scale DOWN
+//! when occupancy stays low with empty queues. Two guards keep it from
+//! thrashing the lifecycle primitives:
+//!
+//! * **hysteresis** — a threshold must be breached on `hysteresis`
+//!   *consecutive* evaluations before the policy acts, so one bursty
+//!   sample can't flap the pool;
+//! * **cooldown** — at least `cooldown_ms` between applied events, so
+//!   the pool observes the effect of one decision before the next.
+//!
+//! Scale-down picks the least-loaded shard (newest on ties) and drains
+//! it through `PoolHandle::remove_shard` — with live run migration
+//! enabled (`migration`, the default) that drain re-homes in-flight
+//! runs at the next step boundary and completes in O(one step), which
+//! is what makes an autoscaler on these primitives viable at all
+//! (ROADMAP item: "design migration before autoscaling policies land").
+//!
+//! The policy core ([`Policy::observe`]) is a pure function of the
+//! sampled signals so the hysteresis/cooldown behavior is unit-testable
+//! without threads; the [`Autoscaler`] wrapper owns the sampling thread
+//! and stops promptly on drop (condvar, not sleep).
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use super::metrics::Metrics;
+use super::pool::PoolHandle;
+use crate::config::{AutoscaleCfg, SsrConfig};
+
+/// One evaluation's worth of pool signals.
+#[derive(Debug, Clone, Copy)]
+pub struct Signals {
+    /// live shards
+    pub shards: usize,
+    /// queued-but-unstarted jobs across all shards
+    pub queued_jobs: usize,
+    /// seconds the oldest queued job has waited (0.0 if none)
+    pub oldest_wait_s: f64,
+    /// outstanding lane estimates across all shards
+    pub outstanding_lanes: u64,
+}
+
+/// A policy decision the loop should apply.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Action {
+    Up,
+    Down,
+}
+
+/// EWMA smoothing factor per evaluation (fixed; the operator tunes the
+/// evaluation interval instead).
+const EWMA_ALPHA: f64 = 0.3;
+
+/// The pure policy core: EWMAs + hysteresis counters + cooldown clock,
+/// advanced one `interval_ms` per [`Policy::observe`] call.
+pub struct Policy {
+    cfg: AutoscaleCfg,
+    min_shards: usize,
+    max_lanes: usize,
+    wait_ewma: f64,
+    queue_ewma: f64,
+    occ_ewma: f64,
+    up_breaches: u32,
+    down_breaches: u32,
+    /// virtual milliseconds since the last applied event (starts at
+    /// cooldown so the first decision only waits out the hysteresis)
+    since_event_ms: u64,
+}
+
+impl Policy {
+    pub fn new(cfg: &SsrConfig) -> Policy {
+        Policy {
+            cfg: cfg.autoscale,
+            min_shards: cfg.min_shards.max(1),
+            max_lanes: cfg.max_lanes.max(1),
+            wait_ewma: 0.0,
+            queue_ewma: 0.0,
+            occ_ewma: 0.0,
+            up_breaches: 0,
+            down_breaches: 0,
+            since_event_ms: cfg.autoscale.cooldown_ms,
+        }
+    }
+
+    /// Feed one interval's signals; returns the action to apply (the
+    /// caller is expected to apply it — the cooldown clock resets).
+    pub fn observe(&mut self, s: &Signals) -> Option<Action> {
+        self.since_event_ms = self.since_event_ms.saturating_add(self.cfg.interval_ms);
+        let a = EWMA_ALPHA;
+        self.wait_ewma = a * s.oldest_wait_s + (1.0 - a) * self.wait_ewma;
+        self.queue_ewma = a * s.queued_jobs as f64 + (1.0 - a) * self.queue_ewma;
+        let capacity = (s.shards.max(1) * self.max_lanes) as f64;
+        let occ = s.outstanding_lanes as f64 / capacity;
+        self.occ_ewma = a * occ + (1.0 - a) * self.occ_ewma;
+
+        let per_shard_queue = self.queue_ewma / s.shards.max(1) as f64;
+        let pressured = self.wait_ewma > self.cfg.scale_up_wait_s
+            || per_shard_queue > self.cfg.scale_up_queue;
+        // scale-down wants sustained slack: low occupancy AND nothing
+        // queued right now AND no meaningful head-of-line wait building
+        let slack = self.occ_ewma < self.cfg.scale_down_occupancy
+            && s.queued_jobs == 0
+            && self.wait_ewma < self.cfg.scale_up_wait_s * 0.5;
+        if pressured {
+            self.up_breaches += 1;
+            self.down_breaches = 0;
+        } else if slack {
+            self.down_breaches += 1;
+            self.up_breaches = 0;
+        } else {
+            self.up_breaches = 0;
+            self.down_breaches = 0;
+        }
+
+        if self.since_event_ms < self.cfg.cooldown_ms {
+            return None;
+        }
+        if self.up_breaches >= self.cfg.hysteresis && s.shards < self.cfg.max_shards {
+            self.up_breaches = 0;
+            self.down_breaches = 0;
+            self.since_event_ms = 0;
+            return Some(Action::Up);
+        }
+        if self.down_breaches >= self.cfg.hysteresis && s.shards > self.min_shards {
+            self.up_breaches = 0;
+            self.down_breaches = 0;
+            self.since_event_ms = 0;
+            return Some(Action::Down);
+        }
+        None
+    }
+}
+
+/// The sampling thread wrapper: owns a [`PoolHandle`] clone and applies
+/// [`Policy`] decisions via `add_shard` / `remove_shard`. Stop it (or
+/// drop it) before expecting the pool to drain — its handle keeps the
+/// pool alive.
+pub struct Autoscaler {
+    stop: Arc<(Mutex<bool>, Condvar)>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Autoscaler {
+    /// Start the policy loop. No-op loop body until signals warrant a
+    /// scale event; the thread wakes every `autoscale.interval_ms`.
+    pub fn spawn(
+        handle: PoolHandle,
+        metrics: Arc<Mutex<Metrics>>,
+        cfg: &SsrConfig,
+    ) -> Autoscaler {
+        let mut policy = Policy::new(cfg);
+        let interval = Duration::from_millis(cfg.autoscale.interval_ms.max(1));
+        let stop = Arc::new((Mutex::new(false), Condvar::new()));
+        let stop2 = Arc::clone(&stop);
+        let join = std::thread::Builder::new()
+            .name("ssr-autoscaler".into())
+            .spawn(move || {
+                loop {
+                    {
+                        let (lock, cv) = &*stop2;
+                        let guard = lock.lock().unwrap();
+                        let (guard, _) =
+                            cv.wait_timeout_while(guard, interval, |s| !*s).unwrap();
+                        if *guard {
+                            break;
+                        }
+                    }
+                    // one consistent sample, one lock pass per shard
+                    let (shards, queued_jobs, oldest_wait_s, outstanding_lanes) =
+                        handle.sample_signals();
+                    if shards == 0 {
+                        continue;
+                    }
+                    let s = Signals {
+                        shards,
+                        queued_jobs,
+                        oldest_wait_s,
+                        outstanding_lanes,
+                    };
+                    match policy.observe(&s) {
+                        Some(Action::Up) => match handle.add_shard() {
+                            Ok(id) => {
+                                metrics.lock().unwrap().record_scale_event(true);
+                                log::info!(
+                                    "autoscaler: +shard {id} ({} live; wait ewma breach)",
+                                    handle.shards()
+                                );
+                            }
+                            Err(e) => log::debug!("autoscaler: add_shard refused: {e:#}"),
+                        },
+                        Some(Action::Down) => {
+                            // least-loaded victim; newest shard on ties
+                            let victim = handle
+                                .shard_loads()
+                                .into_iter()
+                                .min_by_key(|&(id, load)| (load, std::cmp::Reverse(id)))
+                                .map(|(id, _)| id);
+                            if let Some(id) = victim {
+                                match handle.remove_shard(id) {
+                                    Ok(drain_s) => {
+                                        metrics.lock().unwrap().record_scale_event(false);
+                                        log::info!(
+                                            "autoscaler: -shard {id} (drained {drain_s:.3}s, \
+                                             {} live)",
+                                            handle.shards()
+                                        );
+                                    }
+                                    Err(e) => {
+                                        log::debug!("autoscaler: remove_shard refused: {e:#}")
+                                    }
+                                }
+                            }
+                        }
+                        None => {}
+                    }
+                }
+                // handle drops here: the autoscaler no longer keeps the
+                // pool alive once stopped
+            })
+            .expect("spawning autoscaler thread");
+        Autoscaler { stop, join: Some(join) }
+    }
+
+    /// Stop the policy loop and join its thread (idempotent).
+    pub fn stop(&mut self) {
+        {
+            let (lock, cv) = &*self.stop;
+            *lock.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for Autoscaler {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SsrConfig;
+
+    fn test_cfg() -> SsrConfig {
+        let mut cfg = SsrConfig::default();
+        cfg.autoscale.enabled = true;
+        cfg.autoscale.max_shards = 4;
+        cfg.autoscale.scale_up_wait_s = 0.1;
+        cfg.autoscale.scale_up_queue = 2.0;
+        cfg.autoscale.scale_down_occupancy = 0.25;
+        cfg.autoscale.interval_ms = 10;
+        cfg.autoscale.cooldown_ms = 50;
+        cfg.autoscale.hysteresis = 3;
+        cfg.max_lanes = 8;
+        cfg
+    }
+
+    fn pressured(shards: usize) -> Signals {
+        Signals {
+            shards,
+            queued_jobs: 20,
+            oldest_wait_s: 1.0,
+            outstanding_lanes: (shards * 8) as u64,
+        }
+    }
+
+    fn idle(shards: usize) -> Signals {
+        Signals { shards, queued_jobs: 0, oldest_wait_s: 0.0, outstanding_lanes: 0 }
+    }
+
+    #[test]
+    fn scale_up_requires_hysteresis_and_respects_max() {
+        let cfg = test_cfg();
+        let mut p = Policy::new(&cfg);
+        // breaches 1 and 2: no action yet
+        assert_eq!(p.observe(&pressured(1)), None);
+        assert_eq!(p.observe(&pressured(1)), None);
+        // breach 3: up
+        assert_eq!(p.observe(&pressured(1)), Some(Action::Up));
+        // at the ceiling the policy never fires Up
+        for _ in 0..50 {
+            assert_eq!(p.observe(&pressured(4)), None, "scaled past max_shards");
+        }
+    }
+
+    #[test]
+    fn cooldown_spaces_consecutive_events() {
+        let cfg = test_cfg(); // cooldown 50ms = 5 intervals
+        let mut p = Policy::new(&cfg);
+        let mut ups = 0;
+        let mut gap = 0usize;
+        let mut gaps = Vec::new();
+        for _ in 0..40 {
+            gap += 1;
+            if p.observe(&pressured(1)) == Some(Action::Up) {
+                ups += 1;
+                gaps.push(gap);
+                gap = 0;
+            }
+        }
+        assert!(ups >= 2, "sustained pressure produced {ups} events");
+        // every event after the first waited out the cooldown
+        for g in &gaps[1..] {
+            assert!(*g >= 5, "events only {g} intervals apart (cooldown is 5)");
+        }
+    }
+
+    #[test]
+    fn scale_down_needs_sustained_slack_and_respects_min() {
+        let cfg = test_cfg();
+        let mut p = Policy::new(&cfg);
+        // min_shards = 1: an idle 1-shard pool must never scale down
+        for _ in 0..20 {
+            assert_eq!(p.observe(&idle(1)), None);
+        }
+        // 3 shards fully idle: down after hysteresis
+        let mut p = Policy::new(&cfg);
+        assert_eq!(p.observe(&idle(3)), None);
+        assert_eq!(p.observe(&idle(3)), None);
+        assert_eq!(p.observe(&idle(3)), Some(Action::Down));
+        // queued work vetoes slack even at low occupancy
+        let mut p = Policy::new(&cfg);
+        let queued = Signals {
+            shards: 3,
+            queued_jobs: 1,
+            oldest_wait_s: 0.0,
+            outstanding_lanes: 0,
+        };
+        for _ in 0..20 {
+            assert_eq!(p.observe(&queued), None, "scaled down with queued work");
+        }
+    }
+
+    #[test]
+    fn square_wave_load_does_not_flap() {
+        // ISSUE acceptance: a square-wave load (bursts separated by idle
+        // gaps shorter than the hysteresis window) produces a bounded
+        // number of scale events, not one per flip.
+        let cfg = test_cfg(); // hysteresis 3, cooldown 5 intervals
+        let mut p = Policy::new(&cfg);
+        let mut shards = 1usize;
+        let mut events = 0usize;
+        // 10 cycles of [2 pressured, 2 idle] intervals: neither side
+        // ever holds for 3 consecutive evaluations
+        for _ in 0..10 {
+            for _ in 0..2 {
+                if let Some(a) = p.observe(&pressured(shards)) {
+                    events += 1;
+                    shards = match a {
+                        Action::Up => shards + 1,
+                        Action::Down => shards.saturating_sub(1).max(1),
+                    };
+                }
+            }
+            for _ in 0..2 {
+                if let Some(a) = p.observe(&idle(shards)) {
+                    events += 1;
+                    shards = match a {
+                        Action::Up => shards + 1,
+                        Action::Down => shards.saturating_sub(1).max(1),
+                    };
+                }
+            }
+        }
+        assert_eq!(events, 0, "hysteresis failed: {events} events on a fast square wave");
+
+        // a SLOW square wave (each phase longer than hysteresis +
+        // cooldown) may scale, but at most one event per phase
+        let mut p = Policy::new(&cfg);
+        let mut shards = 1usize;
+        for cycle in 0..4 {
+            let mut phase_events = 0;
+            for _ in 0..10 {
+                if let Some(a) = p.observe(&pressured(shards)) {
+                    phase_events += 1;
+                    shards = match a {
+                        Action::Up => (shards + 1).min(4),
+                        Action::Down => shards.saturating_sub(1).max(1),
+                    };
+                }
+            }
+            assert!(phase_events <= 2, "cycle {cycle}: {phase_events} up-events in one burst");
+            let mut phase_events = 0;
+            for _ in 0..10 {
+                if let Some(a) = p.observe(&idle(shards)) {
+                    phase_events += 1;
+                    shards = match a {
+                        Action::Up => (shards + 1).min(4),
+                        Action::Down => shards.saturating_sub(1).max(1),
+                    };
+                }
+            }
+            assert!(phase_events <= 2, "cycle {cycle}: {phase_events} down-events in one lull");
+        }
+        assert!(shards >= 1 && shards <= 4, "shards left the [min, max] band: {shards}");
+    }
+
+    #[test]
+    fn ewmas_discount_stale_pressure() {
+        let cfg = test_cfg();
+        let mut p = Policy::new(&cfg);
+        let _ = p.observe(&pressured(1));
+        let _ = p.observe(&pressured(1));
+        // pressure vanishes before the third breach: counters reset
+        for _ in 0..30 {
+            let act = p.observe(&idle(1));
+            assert_eq!(act, None);
+        }
+        assert_eq!(p.up_breaches, 0);
+    }
+}

@@ -22,7 +22,7 @@ use anyhow::Result;
 use super::aggregation::{aggregate, Decision, PathVote};
 use super::prefix::{Acquired, PrefixCache, PrefixProvider};
 use super::spm;
-use crate::backend::{Backend, PathId, StepOutcome};
+use crate::backend::{Backend, LaneSnapshot, PathId, StepOutcome};
 use crate::config::{Selection, SsrConfig, StopRule};
 use crate::util::rng::Rng;
 use crate::workload::Problem;
@@ -110,8 +110,12 @@ impl RunResult {
     }
 }
 
-struct LivePath {
-    id: PathId,
+/// Placement-invariant decision state of one lane: what the run has
+/// decided about this path so far, with NO backend handle in it — the
+/// half of a lane that travels verbatim when a run migrates between
+/// shards (DESIGN.md §12).
+#[derive(Debug, Clone)]
+struct LaneDecisions {
     steps_taken: usize,
     scores: Vec<u8>,
     terminal: bool,
@@ -146,27 +150,76 @@ impl TickCalls {
     }
 }
 
-/// A resumable single-problem step machine. `start` selects strategies
-/// and opens the lane group; each [`step_tick`] that includes the run
-/// advances every active lane one reasoning step; `finish` closes the
-/// lanes and aggregates the vote. Between ticks the run is inert, which
-/// is what lets the scheduler multiplex many of them over one backend.
-pub struct ProblemRun {
+/// The placement-invariant half of a [`ProblemRun`]: every input to
+/// future decisions (stop rules, votes, per-lane score histories) and
+/// nothing shard-local. Plain `Send` data — it crosses shard-thread
+/// boundaries inside a [`DetachedRun`] unchanged, which is what makes a
+/// migrated run's remaining decisions bit-identical (DESIGN.md §12).
+#[derive(Debug, Clone)]
+struct RunCore {
     speculative: bool,
     tau: u8,
     stop: StopRule,
     max_steps: usize,
-    live: Vec<LivePath>,
-    /// `PathId` -> index into `live`: ids are backend-global, so routing
-    /// outcomes through this map replaces the per-step linear scan that
-    /// made the old loop O(P^2)
-    index: HashMap<PathId, usize>,
+    lanes: Vec<LaneDecisions>,
     selection: Vec<usize>,
     /// answer -> finished lanes voting it (Fast2 agreement tally)
     finished_answers: BTreeMap<i64, usize>,
     stopped: bool,
     t0: Instant,
+}
+
+/// A resumable single-problem step machine. `start` selects strategies
+/// and opens the lane group; each [`step_tick`] that includes the run
+/// advances every active lane one reasoning step; `finish` closes the
+/// lanes and aggregates the vote. Between ticks the run is inert, which
+/// is what lets the scheduler multiplex many of them over one backend —
+/// and, since the decision state ([`RunCore`]) is split from the
+/// shard-local backend handles below, a run can [`ProblemRun::detach`]
+/// from one shard at any step boundary and [`ProblemRun::attach`] on
+/// another mid-solve.
+pub struct ProblemRun {
+    core: RunCore,
+    /// shard-local: `ids[i]` is the backend handle driving
+    /// `core.lanes[i]`; rebuilt wholesale when the run migrates
+    ids: Vec<PathId>,
+    /// `PathId` -> lane index: ids are backend-global, so routing
+    /// outcomes through this map replaces the per-step linear scan that
+    /// made the old loop O(P^2)
+    index: HashMap<PathId, usize>,
+    /// this shard's backend clock at attach (shard-local baseline)
     clock0: f64,
+    /// model-seconds accumulated on shards this run already left
+    clock_carry: f64,
+}
+
+/// A mid-solve run detached from its shard: the decision core plus one
+/// exported [`LaneSnapshot`] per lane. `Send` — it is the unit that
+/// travels when a drain or a steal migrates in-flight work
+/// (`coordinator::pool`, DESIGN.md §12).
+pub struct DetachedRun {
+    core: RunCore,
+    lanes: Vec<LaneSnapshot>,
+    clock_carry: f64,
+}
+
+impl DetachedRun {
+    /// Lanes the run will occupy once re-attached (admission currency).
+    pub fn lanes(&self) -> usize {
+        self.core.lanes.len()
+    }
+
+    /// Approximate serialized size — the `migration_bytes` gauge.
+    pub fn approx_bytes(&self) -> u64 {
+        let core: u64 = self
+            .core
+            .lanes
+            .iter()
+            .map(|l| l.scores.len() as u64 + 32)
+            .sum::<u64>()
+            + 128;
+        core + self.lanes.iter().map(|s| s.approx_bytes()).sum::<u64>()
+    }
 }
 
 impl ProblemRun {
@@ -250,10 +303,9 @@ impl ProblemRun {
             (backend.open_paths(problem, &strategies, seed, speculative)?, selection)
         };
 
-        let live: Vec<LivePath> = ids
+        let lanes: Vec<LaneDecisions> = ids
             .iter()
-            .map(|&id| LivePath {
-                id,
+            .map(|_| LaneDecisions {
                 steps_taken: 0,
                 scores: Vec::new(),
                 terminal: false,
@@ -264,54 +316,64 @@ impl ProblemRun {
             ids.iter().enumerate().map(|(i, &id)| (id, i)).collect();
 
         Ok(ProblemRun {
-            speculative,
-            tau,
-            stop,
-            max_steps: cfg.max_steps,
-            live,
+            core: RunCore {
+                speculative,
+                tau,
+                stop,
+                max_steps: cfg.max_steps,
+                lanes,
+                selection,
+                finished_answers: BTreeMap::new(),
+                stopped: false,
+                t0,
+            },
+            ids,
             index,
-            selection,
-            finished_answers: BTreeMap::new(),
-            stopped: false,
-            t0,
             clock0,
+            clock_carry: 0.0,
         })
     }
 
     /// Lanes this run holds (the scheduler's admission currency).
     pub fn lanes(&self) -> usize {
-        self.live.len()
+        self.core.lanes.len()
     }
 
     pub fn speculative(&self) -> bool {
-        self.speculative
+        self.core.speculative
     }
 
     pub fn tau(&self) -> u8 {
-        self.tau
+        self.core.tau
     }
 
     pub fn selection(&self) -> &[usize] {
-        &self.selection
+        &self.core.selection
     }
 
     /// Lanes that still need a step this tick.
     pub fn active(&self) -> Vec<PathId> {
-        if self.stopped {
+        if self.core.stopped {
             return Vec::new();
         }
-        self.live
+        self.core
+            .lanes
             .iter()
-            .filter(|p| !p.terminal && p.steps_taken < self.max_steps)
-            .map(|p| p.id)
+            .zip(&self.ids)
+            .filter(|(l, _)| !l.terminal && l.steps_taken < self.core.max_steps)
+            .map(|(_, &id)| id)
             .collect()
     }
 
     /// True once a fast mode fired or every lane terminated / hit the
     /// step cap — the run is ready to `finish` and vote.
     pub fn is_done(&self) -> bool {
-        self.stopped
-            || !self.live.iter().any(|p| !p.terminal && p.steps_taken < self.max_steps)
+        self.core.stopped
+            || !self
+                .core
+                .lanes
+                .iter()
+                .any(|l| !l.terminal && l.steps_taken < self.core.max_steps)
     }
 
     /// Record one step of outcomes, then apply the fast-mode stop rules
@@ -319,29 +381,29 @@ impl ProblemRun {
     pub fn observe(&mut self, backend: &dyn Backend, results: Vec<StepResult>) {
         for r in results {
             let i = *self.index.get(&r.path).expect("step result for unknown path");
-            let lp = &mut self.live[i];
+            let lp = &mut self.core.lanes[i];
             lp.steps_taken += 1;
             lp.scores.push(r.score);
             if r.outcome.terminal && !lp.terminal {
                 lp.terminal = true;
-                lp.answer = backend.parse_answer(backend.trace(lp.id));
+                lp.answer = backend.parse_answer(backend.trace(r.path));
                 if let Some(a) = lp.answer {
-                    *self.finished_answers.entry(a).or_insert(0) += 1;
+                    *self.core.finished_answers.entry(a).or_insert(0) += 1;
                 }
             }
         }
 
         // --- fast modes (paper §3.2) ---------------------------------------
-        match self.stop {
+        match self.core.stop {
             StopRule::Full => {}
             StopRule::Fast1 => {
-                if self.live.iter().any(|p| p.terminal && p.answer.is_some()) {
-                    self.stopped = true;
+                if self.core.lanes.iter().any(|l| l.terminal && l.answer.is_some()) {
+                    self.core.stopped = true;
                 }
             }
             StopRule::Fast2 => {
-                if self.finished_answers.values().any(|&c| c >= 2) {
-                    self.stopped = true;
+                if self.core.finished_answers.values().any(|&c| c >= 2) {
+                    self.core.stopped = true;
                 }
             }
         }
@@ -352,21 +414,67 @@ impl ProblemRun {
     /// PJRT cache pins) when a run is dropped mid-flight; close errors
     /// are swallowed because the backend may already be faulted.
     pub fn abort(&mut self, backend: &mut dyn Backend) {
-        for lp in &self.live {
-            let _ = backend.close_path(lp.id);
+        for &id in &self.ids {
+            let _ = backend.close_path(id);
         }
-        self.stopped = true;
+        self.core.stopped = true;
+    }
+
+    /// Detach this run from its shard at a step boundary: every lane is
+    /// exported into a [`LaneSnapshot`] (closing the local lane) and the
+    /// decision core travels with them. The result is `Send`;
+    /// [`ProblemRun::attach`] resumes it on any identically-configured
+    /// backend with bit-identical remaining decisions. On export
+    /// failure the not-yet-exported lanes are closed so no backend
+    /// state leaks (the caller fails the request).
+    pub fn detach(self, backend: &mut dyn Backend) -> Result<DetachedRun> {
+        let clock_carry = self.clock_carry + (backend.clock_secs() - self.clock0);
+        let mut lanes = Vec::with_capacity(self.ids.len());
+        for (k, &id) in self.ids.iter().enumerate() {
+            match backend.export_lane_state(id) {
+                Ok(s) => lanes.push(s),
+                Err(e) => {
+                    for &rest in &self.ids[k..] {
+                        let _ = backend.close_path(rest);
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        Ok(DetachedRun { core: self.core, lanes, clock_carry })
+    }
+
+    /// Resume a [`DetachedRun`] on `backend`: lanes are imported (fresh
+    /// shard-local ids, re-uploaded device state on PJRT) and the
+    /// decision core continues untouched. On import failure the lanes
+    /// already imported are closed before the error propagates.
+    pub fn attach(d: DetachedRun, backend: &mut dyn Backend) -> Result<ProblemRun> {
+        let clock0 = backend.clock_secs();
+        let mut ids = Vec::with_capacity(d.lanes.len());
+        for snap in d.lanes {
+            match backend.import_lane_state(snap) {
+                Ok(id) => ids.push(id),
+                Err(e) => {
+                    for &done in &ids {
+                        let _ = backend.close_path(done);
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        let index = ids.iter().enumerate().map(|(i, &id)| (id, i)).collect();
+        Ok(ProblemRun { core: d.core, ids, index, clock0, clock_carry: d.clock_carry })
     }
 
     /// Close every lane, aggregate the votes, and return the result.
     /// See [`RunResult::model_secs`] for its semantics under
     /// concurrent scheduling.
     pub fn finish(&mut self, backend: &mut dyn Backend) -> Result<RunResult> {
-        let mut votes = Vec::with_capacity(self.live.len());
+        let mut votes = Vec::with_capacity(self.core.lanes.len());
         let (mut draft_tokens, mut target_tokens, mut score_tokens) = (0, 0, 0);
         let (mut steps, mut rewrites) = (0, 0);
-        for lp in &self.live {
-            let stats = backend.close_path(lp.id)?;
+        for (lp, &id) in self.core.lanes.iter().zip(&self.ids) {
+            let stats = backend.close_path(id)?;
             // the close decides the final digits (calibrated substrate)
             // or freezes the trace (PJRT); unfinished paths cast no vote
             // unless their trace happens to contain a FIN answer
@@ -387,9 +495,9 @@ impl ProblemRun {
             score_tokens,
             steps,
             rewrites,
-            selection: self.selection.clone(),
-            wall_secs: self.t0.elapsed().as_secs_f64(),
-            model_secs: backend.clock_secs() - self.clock0,
+            selection: self.core.selection.clone(),
+            wall_secs: self.core.t0.elapsed().as_secs_f64(),
+            model_secs: self.clock_carry + (backend.clock_secs() - self.clock0),
         })
     }
 }
@@ -475,7 +583,7 @@ pub fn step_tick(backend: &mut dyn Backend, runs: &mut [&mut ProblemRun]) -> Res
         if run.is_done() {
             continue;
         }
-        let bucket = if run.speculative { &mut spec } else { &mut tgt };
+        let bucket = if run.core.speculative { &mut spec } else { &mut tgt };
         bucket.extend(run.active().into_iter().map(|id| (ri, id)));
     }
 
@@ -491,7 +599,7 @@ pub fn step_tick(backend: &mut dyn Backend, runs: &mut [&mut ProblemRun]) -> Res
         let mut acc: Vec<(usize, PathId, StepOutcome, u8)> = Vec::new();
         let mut rej: Vec<(usize, PathId)> = Vec::new();
         for ((&(ri, id), o), &s) in group.iter().zip(outs).zip(&scores) {
-            if s >= runs[ri].tau {
+            if s >= runs[ri].core.tau {
                 acc.push((ri, id, o, s));
             } else {
                 rej.push((ri, id));
@@ -718,6 +826,82 @@ mod tests {
         assert!(
             occupied.iter().any(|&l| l > 3),
             "no cross-problem batch observed: {occupied:?}"
+        );
+    }
+
+    #[test]
+    fn migrated_run_matches_unmigrated_at_every_step_boundary() {
+        // ISSUE acceptance: a run detached after k ticks and re-attached
+        // on a fresh identically-seeded backend must produce the exact
+        // trace/vote/answer of the unmigrated run, for EVERY k.
+        let m = Method::Ssr { n: 3, tau: 7, stop: StopRule::Full };
+        let cfg = SsrConfig::default();
+
+        let (mut b_ref, problems) = setup("synth-math500", 41);
+        let mut run = ProblemRun::start(&mut b_ref, &cfg, &problems[0], m, 13).unwrap();
+        let mut ref_ticks = 0usize;
+        while !run.is_done() {
+            let mut group = [&mut run];
+            step_tick(&mut b_ref, &mut group).unwrap();
+            ref_ticks += 1;
+        }
+        let r_ref = run.finish(&mut b_ref).unwrap();
+
+        for k in 0..=ref_ticks {
+            let (mut b_src, problems_s) = setup("synth-math500", 41);
+            let (mut b_dst, _) = setup("synth-math500", 41);
+            let mut run =
+                ProblemRun::start(&mut b_src, &cfg, &problems_s[0], m, 13).unwrap();
+            for _ in 0..k {
+                let mut group = [&mut run];
+                step_tick(&mut b_src, &mut group).unwrap();
+            }
+            let detached = run.detach(&mut b_src).unwrap();
+            assert_eq!(detached.lanes(), 3);
+            assert!(detached.approx_bytes() > 0);
+            let mut run = ProblemRun::attach(detached, &mut b_dst).unwrap();
+            while !run.is_done() {
+                let mut group = [&mut run];
+                step_tick(&mut b_dst, &mut group).unwrap();
+            }
+            let r = run.finish(&mut b_dst).unwrap();
+            assert_eq!(r.decision, r_ref.decision, "k={k}: decision diverged");
+            assert_eq!(r.votes, r_ref.votes, "k={k}: votes diverged");
+            assert_eq!(r.steps, r_ref.steps, "k={k}: steps diverged");
+            assert_eq!(r.rewrites, r_ref.rewrites, "k={k}: rewrites diverged");
+            assert_eq!(r.draft_tokens, r_ref.draft_tokens, "k={k}: draft ledger");
+            assert_eq!(r.target_tokens, r_ref.target_tokens, "k={k}: target ledger");
+        }
+    }
+
+    #[test]
+    fn detached_run_model_secs_spans_both_shards() {
+        // clock accounting across a migration: the run's model_secs is
+        // carry (source shard) + delta (destination shard), so it keeps
+        // covering the whole solve rather than resetting at attach.
+        let m = Method::Ssr { n: 3, tau: 7, stop: StopRule::Full };
+        let cfg = SsrConfig::default();
+        let (mut b_src, problems) = setup("synth-math500", 43);
+        let (mut b_dst, _) = setup("synth-math500", 43);
+        let mut run = ProblemRun::start(&mut b_src, &cfg, &problems[0], m, 5).unwrap();
+        let mut group = [&mut run];
+        step_tick(&mut b_src, &mut group).unwrap();
+        let d = run.detach(&mut b_src).unwrap();
+        let mut run = ProblemRun::attach(d, &mut b_dst).unwrap();
+        while !run.is_done() {
+            let mut group = [&mut run];
+            step_tick(&mut b_dst, &mut group).unwrap();
+        }
+        let r = run.finish(&mut b_dst).unwrap();
+        let src_secs = b_src.clock_secs();
+        let dst_secs = b_dst.clock_secs();
+        assert!(src_secs > 0.0 && dst_secs > 0.0);
+        assert!(
+            (r.model_secs - (src_secs + dst_secs)).abs() < 1e-9,
+            "model_secs {} != src {} + dst {}",
+            r.model_secs,
+            src_secs,
+            dst_secs
         );
     }
 

@@ -9,6 +9,7 @@
 //! per backend step call), queue-depth and admission-wait gauges — the
 //! observables that make cross-request batching wins measurable.
 
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 use crate::util::stats::{Histogram, Reservoir};
@@ -57,16 +58,34 @@ pub struct Metrics {
     /// sum of the per-shard backend model-clocks (real PJRT seconds,
     /// virtual seconds on the calibrated substrate) — total model COST
     pub model_secs: f64,
-    /// per-shard model-clocks; `model_secs_makespan()` (the max) is the
+    /// per-LIVE-shard model-clocks keyed by shard id (ids are monotonic
+    /// and never reused, so dead ids are folded into
+    /// `retired_model_secs` on removal instead of growing a column
+    /// forever under autoscale churn); `model_secs_makespan()` is the
     /// virtual wall-clock of the pool, the number shard scaling improves
-    pub shard_clocks: Vec<f64>,
-    /// requests admitted per shard (placement telemetry)
-    pub shard_requests: Vec<u64>,
+    pub shard_clocks: BTreeMap<usize, f64>,
+    /// requests admitted per live shard (placement telemetry); dead
+    /// ids fold into `retired_requests`
+    pub shard_requests: BTreeMap<usize, u64>,
+    /// model-seconds of shards since removed (still part of the COST)
+    pub retired_model_secs: f64,
+    /// makespan floor contributed by removed shards (their final clock
+    /// still bounds the pool's virtual wall-clock from below)
+    pub retired_makespan: f64,
+    /// requests served by shards since removed
+    pub retired_requests: u64,
     /// queued jobs moved by cross-shard work stealing
     pub steals: u64,
+    /// in-flight runs migrated between shards (drain or steal), and the
+    /// approximate bytes their snapshots carried
+    pub migrations: u64,
+    pub migration_bytes: u64,
     /// shard lifecycle events (`PoolHandle::add_shard` / `remove_shard`)
     pub shards_added: u64,
     pub shards_removed: u64,
+    /// autoscaler policy decisions (subset of the lifecycle events)
+    pub scale_ups: u64,
+    pub scale_downs: u64,
     /// completed shard drains and their durations (remove_shard's
     /// mark-draining -> joined span)
     pub drains: u64,
@@ -98,41 +117,66 @@ impl Metrics {
             prefix_evictions: 0,
             prefix_shard_fills: 0,
             model_secs: 0.0,
-            shard_clocks: Vec::new(),
-            shard_requests: Vec::new(),
+            shard_clocks: BTreeMap::new(),
+            shard_requests: BTreeMap::new(),
+            retired_model_secs: 0.0,
+            retired_makespan: 0.0,
+            retired_requests: 0,
             steals: 0,
+            migrations: 0,
+            migration_bytes: 0,
             shards_added: 0,
             shards_removed: 0,
+            scale_ups: 0,
+            scale_downs: 0,
             drains: 0,
             drain_secs_sum: 0.0,
             drain_secs_max: 0.0,
         }
     }
 
-    /// Size the per-shard gauges (pool spawn).
+    /// Seed the per-shard gauges for the spawn-time shard set (hot-added
+    /// shards insert their own entries on first use).
     pub fn init_shards(&mut self, shards: usize) {
-        self.shard_clocks.resize(shards.max(1), 0.0);
-        self.shard_requests.resize(shards.max(1), 0);
+        for s in 0..shards.max(1) {
+            self.shard_clocks.entry(s).or_insert(0.0);
+            self.shard_requests.entry(s).or_insert(0);
+        }
     }
 
     /// One shard's cumulative backend clock; `model_secs` becomes the
-    /// sum across shards (total cost).
+    /// retired total plus the sum across live shards (total cost).
     pub fn set_shard_clock(&mut self, shard: usize, secs: f64) {
-        if shard >= self.shard_clocks.len() {
-            self.shard_clocks.resize(shard + 1, 0.0);
+        self.shard_clocks.insert(shard, secs);
+        self.model_secs = self.retired_model_secs + self.shard_clocks.values().sum::<f64>();
+    }
+
+    /// Fold a removed shard's per-id gauges into the retired
+    /// accumulators and drop its columns, so week-long autoscale churn
+    /// (monotonic ids, never reused) cannot grow memory without bound.
+    pub fn retire_shard(&mut self, shard: usize) {
+        if let Some(clock) = self.shard_clocks.remove(&shard) {
+            self.retired_model_secs += clock;
+            self.retired_makespan = self.retired_makespan.max(clock);
         }
-        self.shard_clocks[shard] = secs;
-        self.model_secs = self.shard_clocks.iter().sum();
+        if let Some(reqs) = self.shard_requests.remove(&shard) {
+            self.retired_requests += reqs;
+        }
+        self.model_secs = self.retired_model_secs + self.shard_clocks.values().sum::<f64>();
     }
 
     /// Virtual wall-clock of the pool: the slowest shard's model time
     /// (shards run concurrently, so throughput divides by this, not by
-    /// the summed cost).
+    /// the summed cost). Removed shards keep contributing their final
+    /// clock as a floor.
     pub fn model_secs_makespan(&self) -> f64 {
-        if self.shard_clocks.is_empty() {
+        if self.shard_clocks.is_empty() && self.retired_makespan == 0.0 {
             self.model_secs
         } else {
-            self.shard_clocks.iter().cloned().fold(0.0, f64::max)
+            self.shard_clocks
+                .values()
+                .cloned()
+                .fold(self.retired_makespan, f64::max)
         }
     }
 
@@ -141,9 +185,25 @@ impl Metrics {
         self.steals += n;
     }
 
+    /// One in-flight run migrated between shards (drain or steal);
+    /// `bytes` is its snapshot's approximate size.
+    pub fn record_migration(&mut self, bytes: u64) {
+        self.migrations += 1;
+        self.migration_bytes += bytes;
+    }
+
     /// One shard hot-added at runtime.
     pub fn record_shard_added(&mut self) {
         self.shards_added += 1;
+    }
+
+    /// One autoscaler decision applied (up = add_shard succeeded).
+    pub fn record_scale_event(&mut self, up: bool) {
+        if up {
+            self.scale_ups += 1;
+        } else {
+            self.scale_downs += 1;
+        }
     }
 
     /// One shard drained and removed; `drain_secs` is the mark-draining
@@ -166,10 +226,12 @@ impl Metrics {
 
     /// One request admitted on `shard`.
     pub fn record_shard_request(&mut self, shard: usize) {
-        if shard >= self.shard_requests.len() {
-            self.shard_requests.resize(shard + 1, 0);
-        }
-        self.shard_requests[shard] += 1;
+        *self.shard_requests.entry(shard).or_insert(0) += 1;
+    }
+
+    /// Requests admitted across live and retired shards.
+    pub fn total_shard_requests(&self) -> u64 {
+        self.retired_requests + self.shard_requests.values().sum::<u64>()
     }
 
     pub fn record_request(&mut self, latency_s: f64, answered: bool) {
@@ -291,7 +353,7 @@ impl Metrics {
     pub fn summary_json(&self, elapsed_s: f64) -> crate::util::json::Value {
         use crate::util::json::{arr, i, n, obj, Value};
         let shard_requests: Vec<Value> =
-            self.shard_requests.iter().map(|&r| i(r as i64)).collect();
+            self.shard_requests.values().map(|&r| i(r as i64)).collect();
         obj(vec![
             ("requests", i(self.requests as i64)),
             ("answered", i(self.answered as i64)),
@@ -319,8 +381,12 @@ impl Metrics {
             ("shards", i(self.shard_clocks.len().max(1) as i64)),
             ("shard_requests", arr(shard_requests)),
             ("steals", i(self.steals as i64)),
+            ("migrations", i(self.migrations as i64)),
+            ("migration_bytes", i(self.migration_bytes as i64)),
             ("shards_added", i(self.shards_added as i64)),
             ("shards_removed", i(self.shards_removed as i64)),
+            ("scale_ups", i(self.scale_ups as i64)),
+            ("scale_downs", i(self.scale_downs as i64)),
             ("drain_mean_s", n(self.mean_drain_secs())),
             ("drain_max_s", n(self.drain_secs_max)),
         ])
@@ -435,7 +501,8 @@ mod tests {
         m.record_shard_request(0);
         m.record_shard_request(1);
         m.record_shard_request(1);
-        assert_eq!(m.shard_requests, vec![1, 2]);
+        assert_eq!(m.shard_requests, BTreeMap::from([(0, 1), (1, 2)]));
+        assert_eq!(m.total_shard_requests(), 3);
         m.set_prefix_shard_fills(3);
         let v = m.summary_json(1.0);
         assert_eq!(v.get_i64("shards").unwrap(), 2);
@@ -453,16 +520,54 @@ mod tests {
         m.record_shard_added();
         m.record_shard_removed(0.2);
         m.record_shard_removed(0.4);
+        m.record_migration(1024);
+        m.record_migration(512);
+        m.record_scale_event(true);
+        m.record_scale_event(false);
         assert_eq!(m.steals, 5);
         assert_eq!((m.shards_added, m.shards_removed, m.drains), (1, 2, 2));
+        assert_eq!((m.migrations, m.migration_bytes), (2, 1536));
+        assert_eq!((m.scale_ups, m.scale_downs), (1, 1));
         assert!((m.mean_drain_secs() - 0.3).abs() < 1e-12);
         assert!((m.drain_secs_max - 0.4).abs() < 1e-12);
         let v = m.summary_json(1.0);
         assert_eq!(v.get_i64("steals").unwrap(), 5);
         assert_eq!(v.get_i64("shards_added").unwrap(), 1);
         assert_eq!(v.get_i64("shards_removed").unwrap(), 2);
+        assert_eq!(v.get_i64("migrations").unwrap(), 2);
+        assert_eq!(v.get_i64("migration_bytes").unwrap(), 1536);
+        assert_eq!(v.get_i64("scale_ups").unwrap(), 1);
+        assert_eq!(v.get_i64("scale_downs").unwrap(), 1);
         assert!((v.get_f64("drain_mean_s").unwrap() - 0.3).abs() < 1e-12);
         assert!((v.get_f64("drain_max_s").unwrap() - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn retired_shards_fold_into_accumulators_and_free_their_columns() {
+        // week-long autoscale churn: per-id state must stay bounded by
+        // the LIVE shard count while the cost/makespan gauges keep
+        // counting the retired shards' work
+        let mut m = Metrics::new();
+        m.init_shards(1);
+        m.set_shard_clock(0, 2.0);
+        m.record_shard_request(0);
+        for id in 1..=100usize {
+            m.set_shard_clock(id, id as f64 * 0.01);
+            m.record_shard_request(id);
+            m.retire_shard(id);
+        }
+        assert_eq!(m.shard_clocks.len(), 1, "dead-id columns were retained");
+        assert_eq!(m.shard_requests.len(), 1);
+        assert_eq!(m.total_shard_requests(), 101);
+        // cost = live 2.0 + sum of retired clocks
+        let retired: f64 = (1..=100).map(|i| i as f64 * 0.01).sum();
+        assert!((m.model_secs - (2.0 + retired)).abs() < 1e-9);
+        // makespan = max(live, retired floor) = 2.0 here
+        assert!((m.model_secs_makespan() - 2.0).abs() < 1e-12);
+        // a slow retired shard keeps flooring the makespan
+        m.set_shard_clock(7, 9.0);
+        m.retire_shard(7);
+        assert!((m.model_secs_makespan() - 9.0).abs() < 1e-12);
     }
 
     #[test]

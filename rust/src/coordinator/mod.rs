@@ -10,8 +10,12 @@
 //!   admission + one shared step batch per tick over every in-flight
 //!   problem (serving & scheduling design notes live in its docs)
 //! * [`pool`] — the sharded execution layer: one scheduler thread per
-//!   backend shard, least-loaded/affinity/round-robin placement at
-//!   submit, drain-on-shutdown across shards (DESIGN.md §10)
+//!   backend shard, least-loaded/affinity/round-robin placement over an
+//!   immutable snapshot at submit, drain-on-shutdown across shards,
+//!   live run migration on drain/steal (DESIGN.md §10, §12)
+//! * [`autoscaler`] — queue-driven scale policy over the elastic pool:
+//!   admission-wait/queue-depth EWMAs with hysteresis and cooldown
+//!   drive `add_shard`/`remove_shard` within `[min, max]` (§12)
 //! * [`prefix`] — prefix reuse: the single-backend `PrefixCache` and
 //!   the pool's `SharedPrefixTier` (one logical cache, per-shard handle
 //!   maps); repeated problems skip prompt prefill entirely
@@ -19,6 +23,7 @@
 //! * [`metrics`] — latency/throughput/occupancy/shard instrumentation
 
 pub mod aggregation;
+pub mod autoscaler;
 pub mod engine;
 pub mod flops;
 pub mod metrics;
@@ -28,7 +33,8 @@ pub mod scheduler;
 pub mod server;
 pub mod spm;
 
-pub use engine::{Engine, Method, ProblemRun, RunResult};
+pub use autoscaler::Autoscaler;
+pub use engine::{DetachedRun, Engine, Method, ProblemRun, RunResult};
 pub use pool::{BackendPool, PoolHandle};
 pub use prefix::{PrefixCache, SharedPrefixTier};
 pub use scheduler::{Scheduler, SchedulerHandle, SolveRequest};

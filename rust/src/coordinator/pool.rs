@@ -1,5 +1,5 @@
 //! `BackendPool`: the elastic sharded execution layer (DESIGN.md §10,
-//! §11).
+//! §11, §12).
 //!
 //! One scheduler thread per backend shard, each owning its own
 //! `Box<dyn Backend>` (PJRT wrapper types are not Send, so a backend
@@ -19,26 +19,44 @@
 //! * **round-robin** — strict rotation (load-blind; the bench
 //!   baseline).
 //!
+//! **Lock-free submit hot path.** The placement table is an immutable
+//! snapshot (`RwLock<Arc<Vec<ShardSlot>>>`): `submit` clones the `Arc`
+//! under an uncontended read lock and routes over the frozen slice —
+//! submitters never serialize against each other. Only the rare
+//! lifecycle ops (`add_shard` / `remove_shard`) rebuild the snapshot,
+//! serialized by the lifecycle mutex. A submitter racing a removal may
+//! still send into the draining shard's channel; the draining loop
+//! migrates (or finishes) such stragglers, so nothing is lost.
+//!
 //! The shard set is **elastic** at runtime:
 //!
 //! * [`PoolHandle::add_shard`] spawns a new scheduler thread (its
 //!   backend built by the pool's stored factory ON that thread),
-//!   registers it with the placement table, and lets the shared prefix
+//!   publishes a new placement snapshot, and lets the shared prefix
 //!   tier grow its per-shard tables on the shard's first acquisition.
-//! * [`PoolHandle::remove_shard`] marks the shard draining and removes
-//!   it from the placement table (no new placements, no stealing), re-
-//!   places its queued-but-unstarted jobs onto the survivors, closes
-//!   its channel, and blocks until the shard has finished its in-flight
-//!   runs, released its prefix-tier handles, and flushed its clock
-//!   gauges — all while the other shards keep serving. `min_shards`
-//!   bounds how far the pool can drain.
+//! * [`PoolHandle::remove_shard`] publishes a snapshot without the
+//!   shard and marks it draining (no new placements, no stealing),
+//!   re-places its queued-but-unstarted jobs onto the survivors, closes
+//!   its channel, and blocks until the shard has quiesced. With
+//!   `migration` enabled (default) the draining shard detaches its
+//!   in-flight runs at the next step boundary and hands them to the
+//!   survivors as `DetachedRun`s — drain time is O(one step), not
+//!   O(one solve). `min_shards` bounds how far the pool can drain.
 //! * **Work stealing** (`steal_threshold > 0`): a shard whose occupancy
-//!   stays below the threshold for a full tick pulls queued jobs from
-//!   the most-loaded shard's admission queue ([`ShardRegistry::
-//!   steal_into`]). Stolen runs re-derive their state from the
-//!   placement-invariant run seed, so decisions are identical wherever
-//!   a job lands (asserted in `tests/sharding.rs` and
-//!   `benches/elastic_shards.rs`).
+//!   stays below the threshold pulls queued jobs from the most-loaded
+//!   shard's admission queue ([`ShardRegistry::steal_into`]); when the
+//!   victim's queue is empty but its lanes are saturated, the thief
+//!   posts a *shed request* and the victim migrates whole in-flight
+//!   runs to it at its next step boundary. Stolen and migrated runs
+//!   stay decision-equivalent (placement-invariant run seed + the
+//!   LaneSnapshot contract, DESIGN.md §12), asserted in
+//!   `tests/sharding.rs`, `tests/migration.rs` and the benches.
+//!
+//! **Idle wakeups.** Idle steal-mode shards park on the pool-wide
+//! [`WorkSignal`] condvar; every enqueue (submit, re-placement, shed
+//! handoff) bumps it, so an idle pool burns no CPU instead of polling
+//! every 500 µs (ROADMAP item). A long safety timeout bounds shutdown
+//! latency.
 //!
 //! The shards share ONE logical prefix cache
 //! ([`SharedPrefixTier`](super::prefix::SharedPrefixTier)): a prompt
@@ -55,17 +73,17 @@
 //! threads hold only a `Weak` registry reference, so they never keep
 //! their own channels alive.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use super::metrics::Metrics;
 use super::prefix::SharedPrefixTier;
-use super::scheduler::{self, lane_estimate, QueuedJob, ShardCtx, SolveRequest};
+use super::scheduler::{self, lane_estimate, QueuedJob, ShardCtx, ShardMsg, SolveRequest};
 use crate::backend::Backend;
 use crate::config::{PlacePolicy, SsrConfig};
 use crate::runtime::Vocab;
@@ -74,50 +92,138 @@ use crate::util::hash;
 /// Hard cap on concurrently live shards (matches `SsrConfig::validate`).
 const MAX_SHARDS: usize = 64;
 
-/// Try to hand `req` to the slot at `first`, rotating past dead shards
-/// (closed channels) and moving `est` onto the accepting shard's load
-/// gauge. Shared by `PoolHandle::submit` and the drain's job
-/// re-placement so the fallback semantics cannot diverge. Returns false
-/// when every slot's channel is gone.
-fn send_with_fallback(slots: &[ShardSlot], first: usize, est: u64, req: SolveRequest) -> bool {
-    let n = slots.len();
-    let mut req = req;
-    for attempt in 0..n {
-        let s = &slots[(first + attempt) % n];
-        s.load.fetch_add(est, Ordering::Relaxed);
-        match s.tx.send(req) {
-            Ok(()) => return true,
-            Err(mpsc::SendError(returned)) => {
-                s.load.fetch_sub(est, Ordering::Relaxed);
-                req = returned;
-            }
+/// Pool-wide enqueue signal: idle steal-mode shards park here instead
+/// of polling. The epoch counter closes the lost-wakeup race — a
+/// sleeper records the epoch *before* scanning its wake sources and
+/// parks only while the epoch is unchanged. The bump side is a single
+/// atomic add when nobody is parked (the submit hot path must not take
+/// a shared mutex — with `steal_threshold = 0` nothing ever parks, so
+/// submits pay one uncontended atomic and nothing else).
+pub(crate) struct WorkSignal {
+    epoch: AtomicU64,
+    waiters: AtomicUsize,
+    lock: Mutex<()>,
+    cv: Condvar,
+}
+
+impl WorkSignal {
+    fn new() -> Self {
+        WorkSignal {
+            epoch: AtomicU64::new(0),
+            waiters: AtomicUsize::new(0),
+            lock: Mutex::new(()),
+            cv: Condvar::new(),
         }
     }
-    false
+
+    /// Something was enqueued somewhere: wake every parked shard.
+    /// SeqCst ordering makes the waiter==0 fast path sound: a waiter
+    /// this bump misses registered after the epoch moved, and its
+    /// registration (under the lock) precedes its epoch re-check, so
+    /// it observes the new epoch and never sleeps on it.
+    pub(crate) fn bump(&self) {
+        self.epoch.fetch_add(1, Ordering::SeqCst);
+        if self.waiters.load(Ordering::SeqCst) > 0 {
+            // enter/exit the lock so a waiter between its epoch check
+            // and cv.wait cannot miss the notify
+            drop(self.lock.lock().unwrap());
+            self.cv.notify_all();
+        }
+    }
+
+    pub(crate) fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::SeqCst)
+    }
+
+    /// Park until the epoch moves past `seen` (or the safety timeout).
+    pub(crate) fn wait_past(&self, seen: u64, timeout: Duration) {
+        let deadline = Instant::now() + timeout;
+        let mut guard = self.lock.lock().unwrap();
+        self.waiters.fetch_add(1, Ordering::SeqCst);
+        while self.epoch.load(Ordering::SeqCst) == seen {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (g, _) = self.cv.wait_timeout(guard, deadline - now).unwrap();
+            guard = g;
+        }
+        self.waiters.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// A thief's request that a loaded shard migrate some in-flight lanes
+/// to it (work stealing past the queue; DESIGN.md §12).
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct ShedRequest {
+    /// requesting shard id (the migration target)
+    pub(crate) thief: usize,
+    /// free lane capacity the thief had when it asked
+    pub(crate) lanes: usize,
+}
+
+/// Cap on queued shed requests per shard: one slow victim must not
+/// accumulate an unbounded backlog of stale thief requests.
+const MAX_SHED_REQUESTS: usize = 4;
+
+/// One live shard's entry in the placement snapshot. Cloned wholesale
+/// when the snapshot is rebuilt; the queue / load / draining / shed
+/// cells are shared with the shard's own `ShardCtx`, which is what lets
+/// submit, steal, shed and drain coordinate with the running loop.
+/// Deliberately `Sync`-only state (the done-channel and join handle
+/// live in the registry's lifecycle table instead).
+#[derive(Clone)]
+pub(crate) struct ShardSlot {
+    pub(crate) id: usize,
+    tx: mpsc::Sender<ShardMsg>,
+    pub(crate) queue: Arc<Mutex<VecDeque<QueuedJob>>>,
+    pub(crate) load: Arc<AtomicU64>,
+    draining: Arc<AtomicBool>,
+    pub(crate) shed: Arc<Mutex<Vec<ShedRequest>>>,
+}
+
+/// Per-shard teardown state, kept out of the (Sync) placement snapshot:
+/// the done channel closes when the shard thread has fully exited, and
+/// hot-added shards retain their join handle so `remove_shard` can reap
+/// the thread (initial shards hand theirs to `BackendPool::spawn`'s
+/// caller instead).
+struct ShardHook {
+    done_rx: mpsc::Receiver<()>,
+    join: Option<std::thread::JoinHandle<()>>,
 }
 
 type BackendFactory = dyn Fn(usize) -> Result<Box<dyn Backend>> + Send + Sync;
 
-/// One live shard's registry entry. The queue / load / draining cells
-/// are shared with the shard's own `ShardCtx`, which is what lets
-/// submit, steal, and drain coordinate with the running loop.
-pub(crate) struct ShardSlot {
-    pub(crate) id: usize,
-    tx: mpsc::Sender<SolveRequest>,
-    pub(crate) queue: Arc<Mutex<VecDeque<QueuedJob>>>,
-    pub(crate) load: Arc<AtomicU64>,
-    draining: Arc<AtomicBool>,
-    /// closed (recv errors) when the shard thread has fully exited —
-    /// after its drain flushed the final clock/tier gauges
-    done_rx: mpsc::Receiver<()>,
-    /// retained for hot-added shards so `remove_shard` can reap the
-    /// thread after the done signal; initial shards hand their join
-    /// handles to `BackendPool::spawn`'s caller instead
-    join: Option<std::thread::JoinHandle<()>>,
+/// Try to hand `msg` to the slot at `first`, rotating past dead shards
+/// (closed channels) and moving `est` onto the accepting shard's load
+/// gauge. Shared by `PoolHandle::submit`, the drain's job re-placement
+/// and in-flight migration so the fallback semantics cannot diverge.
+/// Returns the message back when every slot's channel is gone.
+fn send_with_fallback(
+    slots: &[ShardSlot],
+    first: usize,
+    est: u64,
+    msg: ShardMsg,
+) -> std::result::Result<(), ShardMsg> {
+    let n = slots.len();
+    let mut msg = msg;
+    for attempt in 0..n {
+        let s = &slots[(first + attempt) % n];
+        s.load.fetch_add(est, Ordering::Relaxed);
+        match s.tx.send(msg) {
+            Ok(()) => return Ok(()),
+            Err(mpsc::SendError(returned)) => {
+                s.load.fetch_sub(est, Ordering::Relaxed);
+                msg = returned;
+            }
+        }
+    }
+    Err(msg)
 }
 
-/// Shared pool state: the live shard table plus everything needed to
-/// spawn a new shard at runtime. Shard threads hold this only weakly.
+/// Shared pool state: the immutable placement snapshot plus everything
+/// needed to spawn a new shard at runtime. Shard threads hold this only
+/// weakly.
 pub(crate) struct ShardRegistry {
     cfg: SsrConfig,
     vocab: Vocab,
@@ -125,28 +231,43 @@ pub(crate) struct ShardRegistry {
     tier: Arc<SharedPrefixTier>,
     factory: Box<BackendFactory>,
     next_id: AtomicUsize,
-    pub(crate) slots: Mutex<Vec<ShardSlot>>,
+    rr: AtomicUsize,
+    /// the placement snapshot: readers clone the Arc (uncontended read
+    /// lock) and route over the frozen slice; only add/remove/drain
+    /// rebuild it under the lifecycle mutex
+    slots: RwLock<Arc<Vec<ShardSlot>>>,
+    /// serializes lifecycle ops and owns each shard's teardown state
+    lifecycle: Mutex<HashMap<usize, ShardHook>>,
+    pub(crate) signal: Arc<WorkSignal>,
 }
 
 impl ShardRegistry {
-    /// Spawn one shard thread for `id` and return its registry slot —
-    /// the caller inserts it into `slots`. The backend is built by the
-    /// stored factory ON the new thread.
+    /// The current immutable placement snapshot.
+    pub(crate) fn snapshot(&self) -> Arc<Vec<ShardSlot>> {
+        Arc::clone(&self.slots.read().unwrap())
+    }
+
+    /// Spawn one shard thread for `id` and return its snapshot slot +
+    /// teardown hook — the caller publishes the slot. The backend is
+    /// built by the stored factory ON the new thread.
     fn spawn_shard(
         self: &Arc<Self>,
         id: usize,
-    ) -> Result<(ShardSlot, std::thread::JoinHandle<()>)> {
-        let (tx, rx) = mpsc::channel::<SolveRequest>();
+    ) -> Result<(ShardSlot, ShardHook, std::thread::JoinHandle<()>)> {
+        let (tx, rx) = mpsc::channel::<ShardMsg>();
         let (done_tx, done_rx) = mpsc::channel::<()>();
         let queue = Arc::new(Mutex::new(VecDeque::new()));
         let load = Arc::new(AtomicU64::new(0));
         let draining = Arc::new(AtomicBool::new(false));
+        let shed = Arc::new(Mutex::new(Vec::new()));
         let ctx = ShardCtx {
             shard: id,
             tier: Arc::clone(&self.tier),
             load: Arc::clone(&load),
             queue: Arc::clone(&queue),
             draining: Arc::clone(&draining),
+            shed: Arc::clone(&shed),
+            signal: Arc::clone(&self.signal),
             registry: Arc::downgrade(self),
         };
         let cfg = self.cfg.clone();
@@ -173,83 +294,242 @@ impl ShardRegistry {
                 }
             })
             .with_context(|| format!("spawning scheduler shard {id}"))?;
-        Ok((ShardSlot { id, tx, queue, load, draining, done_rx, join: None }, join))
+        let slot = ShardSlot { id, tx, queue, load, draining, shed };
+        Ok((slot, ShardHook { done_rx, join: None }, join))
     }
 
     /// Move queued-but-unstarted jobs from the most-loaded other shard
     /// into `ctx`'s queue, up to `room` lanes' worth. The thief steals
     /// from the back of the victim's deque (the owner admits from the
     /// front), and the jobs' lane estimates move between the load
-    /// gauges with them. Returns the number of jobs moved.
+    /// gauges with them. When nothing is queued anywhere but a loaded
+    /// shard has its lanes saturated, a shed request is posted instead:
+    /// the victim migrates in-flight runs to the thief at its next step
+    /// boundary (`migration` enabled). Returns the number of jobs
+    /// moved (shed handoffs arrive later through the thief's channel).
     pub(crate) fn steal_into(&self, ctx: &ShardCtx, room: usize) -> usize {
         if room == 0 {
             return 0;
         }
-        let slots = self.slots.lock().unwrap();
-        // re-check under the lock: remove_shard flips the flag while
-        // holding it, so a thief that raced past its loop's check must
-        // not pull work into a shard that is already draining
+        // a thief that raced past its loop's check must not pull work
+        // into a shard that is already draining
         if ctx.draining.load(Ordering::Relaxed) {
             return 0;
         }
+        let slots = self.snapshot();
         let victim = slots
             .iter()
             .filter(|s| s.id != ctx.shard && !s.queue.lock().unwrap().is_empty())
             .max_by_key(|s| s.load.load(Ordering::Relaxed));
-        let Some(victim) = victim else { return 0 };
-        let mut vq = victim.queue.lock().unwrap();
-        let mut moved = 0usize;
-        let mut gained = 0usize;
-        while gained < room {
-            let Some(job) = vq.pop_back() else { break };
-            victim.load.fetch_sub(job.lanes as u64, Ordering::Relaxed);
-            ctx.load.fetch_add(job.lanes as u64, Ordering::Relaxed);
-            gained += job.lanes.max(1);
-            moved += 1;
-            ctx.queue.lock().unwrap().push_back(job);
+        if let Some(victim) = victim {
+            let mut vq = victim.queue.lock().unwrap();
+            let mut moved = 0usize;
+            let mut gained = 0usize;
+            while gained < room {
+                let Some(job) = vq.pop_back() else { break };
+                victim.load.fetch_sub(job.lanes as u64, Ordering::Relaxed);
+                ctx.load.fetch_add(job.lanes as u64, Ordering::Relaxed);
+                gained += job.lanes.max(1);
+                moved += 1;
+                ctx.queue.lock().unwrap().push_back(job);
+            }
+            if moved > 0 {
+                return moved;
+            }
         }
-        moved
+        // no queue to raid: ask the most-loaded busy shard to shed an
+        // in-flight run our way (live migration, DESIGN.md §12). Only
+        // when the imbalance is real — the victim at least twice as
+        // loaded as the thief — so two lightly-loaded shards cannot
+        // ping-pong runs between themselves; the victim additionally
+        // caps its grant at half its lanes (see `shed_to_thieves`), so
+        // one handoff converges toward balance instead of inverting it.
+        if self.cfg.migration {
+            let my_load = ctx.load.load(Ordering::Relaxed);
+            let busy = slots
+                .iter()
+                .filter(|s| {
+                    s.id != ctx.shard
+                        && !s.draining.load(Ordering::Relaxed)
+                        && s.load.load(Ordering::Relaxed) >= 2 * (my_load + 1)
+                })
+                .max_by_key(|s| s.load.load(Ordering::Relaxed));
+            if let Some(victim) = busy {
+                let mut shed = victim.shed.lock().unwrap();
+                let already = shed.iter().any(|r| r.thief == ctx.shard);
+                if !already && shed.len() < MAX_SHED_REQUESTS {
+                    shed.push(ShedRequest { thief: ctx.shard, lanes: room });
+                }
+            }
+        }
+        0
+    }
+
+    /// Hand a queued/detached job to any live shard except the caller's
+    /// (drain-via-migration re-placement). Returns the job back when no
+    /// survivor accepted it.
+    pub(crate) fn resubmit(&self, job: QueuedJob) -> std::result::Result<(), QueuedJob> {
+        let slots = self.snapshot();
+        if slots.is_empty() {
+            return Err(job);
+        }
+        let est = job.lanes as u64;
+        let first = self.rr.fetch_add(1, Ordering::Relaxed) % slots.len();
+        match send_with_fallback(&slots, first, est, ShardMsg::Job(job)) {
+            Ok(()) => {
+                self.signal.bump();
+                Ok(())
+            }
+            Err(ShardMsg::Job(job)) => Err(job),
+            Err(_) => unreachable!("resubmit sent a Job"),
+        }
+    }
+
+    /// Hand a detached job directly to shard `thief` (shed handoff).
+    /// Returns the job back when the thief is gone or draining.
+    pub(crate) fn send_to(
+        &self,
+        thief: usize,
+        job: QueuedJob,
+    ) -> std::result::Result<(), QueuedJob> {
+        let slots = self.snapshot();
+        let Some(slot) = slots.iter().find(|s| s.id == thief) else {
+            return Err(job);
+        };
+        if slot.draining.load(Ordering::Relaxed) {
+            return Err(job);
+        }
+        let est = job.lanes as u64;
+        slot.load.fetch_add(est, Ordering::Relaxed);
+        match slot.tx.send(ShardMsg::Job(job)) {
+            Ok(()) => {
+                self.signal.bump();
+                Ok(())
+            }
+            Err(mpsc::SendError(ShardMsg::Job(job))) => {
+                slot.load.fetch_sub(est, Ordering::Relaxed);
+                Err(job)
+            }
+            Err(_) => unreachable!("send_to sent a Job"),
+        }
     }
 }
 
 /// Cloneable submitter side of the pool: routes each request to a live
-/// shard, tracks outstanding load, and manages the shard lifecycle
-/// (`add_shard` / `remove_shard`). Dropping every clone lets every
-/// shard drain and exit.
+/// shard over the immutable placement snapshot, tracks outstanding
+/// load, and manages the shard lifecycle (`add_shard` /
+/// `remove_shard`). Dropping every clone lets every shard drain and
+/// exit.
 #[derive(Clone)]
 pub struct PoolHandle {
     reg: Arc<ShardRegistry>,
-    rr: Arc<AtomicUsize>,
+}
+
+impl Drop for PoolHandle {
+    fn drop(&mut self) {
+        // wake parked shards so a dropped last handle (whose registry —
+        // and thus every channel sender — is about to die) is noticed
+        // without waiting out the park timeout
+        self.reg.signal.bump();
+    }
 }
 
 impl PoolHandle {
     /// Live (non-draining) shards.
     pub fn shards(&self) -> usize {
-        self.reg.slots.lock().unwrap().len()
+        self.reg.snapshot().len()
     }
 
     /// Current outstanding lane estimate on shard `id` (telemetry);
     /// 0 for removed shards.
     pub fn load_of(&self, id: usize) -> u64 {
         self.reg
-            .slots
-            .lock()
-            .unwrap()
+            .snapshot()
             .iter()
             .find(|s| s.id == id)
             .map(|s| s.load.load(Ordering::Relaxed))
             .unwrap_or(0)
     }
 
+    /// (shard id, outstanding lane estimate) per live shard — the
+    /// autoscaler's scale-down victim input.
+    pub fn shard_loads(&self) -> Vec<(usize, u64)> {
+        self.reg
+            .snapshot()
+            .iter()
+            .map(|s| (s.id, s.load.load(Ordering::Relaxed)))
+            .collect()
+    }
+
+    /// Queued-but-unstarted jobs across all live shards (autoscaler
+    /// queue-depth signal).
+    pub fn queued_jobs(&self) -> usize {
+        self.reg.snapshot().iter().map(|s| s.queue.lock().unwrap().len()).sum()
+    }
+
+    /// Outstanding lane estimate across all live shards.
+    pub fn outstanding_lanes(&self) -> u64 {
+        self.reg
+            .snapshot()
+            .iter()
+            .map(|s| s.load.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Seconds the oldest queued-but-unstarted job has been waiting in
+    /// its current queue — the live head-of-line admission-wait signal
+    /// the autoscaler tracks (0.0 with empty queues). Uses the
+    /// per-queue stamp, not the original submit time, so a migrated
+    /// mid-solve run doesn't read as a huge admission backlog.
+    pub fn oldest_queue_wait_s(&self) -> f64 {
+        let mut oldest: Option<Instant> = None;
+        for s in self.reg.snapshot().iter() {
+            if let Some(job) = s.queue.lock().unwrap().front() {
+                oldest = Some(match oldest {
+                    Some(t) if t <= job.queued_at => t,
+                    _ => job.queued_at,
+                });
+            }
+        }
+        oldest.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0)
+    }
+
+    /// One internally-consistent sample of the autoscaler's signals —
+    /// `(live shards, queued jobs, oldest head-of-line wait seconds,
+    /// outstanding lanes)` — from a single placement snapshot and ONE
+    /// pass over each shard's queue mutex, so depth and wait cannot
+    /// disagree and the per-interval lock traffic on the hot scheduler
+    /// queues stays at one acquisition per shard.
+    pub fn sample_signals(&self) -> (usize, usize, f64, u64) {
+        let slots = self.reg.snapshot();
+        let mut queued = 0usize;
+        let mut oldest: Option<Instant> = None;
+        let mut lanes = 0u64;
+        for s in slots.iter() {
+            let q = s.queue.lock().unwrap();
+            queued += q.len();
+            if let Some(job) = q.front() {
+                oldest = Some(match oldest {
+                    Some(t) if t <= job.queued_at => t,
+                    _ => job.queued_at,
+                });
+            }
+            drop(q);
+            lanes += s.load.load(Ordering::Relaxed);
+        }
+        let wait = oldest.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
+        (slots.len(), queued, wait, lanes)
+    }
+
     /// Pick the slot position for one request (see the module docs for
-    /// the policies). Caller holds the slots lock.
+    /// the policies) over a frozen snapshot.
     fn place(&self, slots: &[ShardSlot], expr: &str) -> usize {
         let n = slots.len();
         if n == 1 {
             return 0;
         }
         match self.reg.cfg.placement {
-            PlacePolicy::RoundRobin => self.rr.fetch_add(1, Ordering::Relaxed) % n,
+            PlacePolicy::RoundRobin => self.reg.rr.fetch_add(1, Ordering::Relaxed) % n,
             PlacePolicy::Affinity => (hash::fnv1a_str(expr) % n as u64) as usize,
             PlacePolicy::LeastLoaded => {
                 let mut best = 0;
@@ -266,96 +546,116 @@ impl PoolHandle {
         }
     }
 
-    /// Route and enqueue one request. The lane estimate joins the load
-    /// gauge immediately (so a burst of submissions spreads before any
-    /// shard has even started) and is returned by the owning shard on
-    /// the terminal reply. A shard whose thread died (backend init
-    /// failure) has a closed channel; submission falls back to the
+    /// Route and enqueue one request over the immutable placement
+    /// snapshot — no lock is shared with other submitters (ROADMAP
+    /// item: the hot path is back to atomics). The lane estimate joins
+    /// the load gauge immediately (so a burst of submissions spreads
+    /// before any shard has even started) and is returned by the owning
+    /// shard on the terminal reply. A shard whose thread died (backend
+    /// init failure) has a closed channel; submission falls back to the
     /// remaining shards in rotation before giving up, so one dead shard
     /// degrades capacity instead of failing a fraction of all traffic.
     pub fn submit(&self, req: SolveRequest) -> Result<()> {
-        let slots = self.reg.slots.lock().unwrap();
+        let slots = self.reg.snapshot();
         let n = slots.len();
         if n == 0 {
             bail!("no live scheduler shards");
         }
         let first = self.place(&slots, &req.expr);
         let est = lane_estimate(req.method, self.reg.cfg.pool_size) as u64;
-        if send_with_fallback(&slots, first, est, req) {
-            Ok(())
-        } else {
-            Err(anyhow!("all {n} scheduler shards gone"))
+        match send_with_fallback(&slots, first, est, ShardMsg::Solve(req)) {
+            Ok(()) => {
+                // wake parked steal-mode shards: intake goes through the
+                // channel, which a signal-parked shard is not watching
+                self.reg.signal.bump();
+                Ok(())
+            }
+            Err(_) => Err(anyhow!("all {n} scheduler shards gone")),
         }
     }
 
     /// Hot-add one shard: spawn its scheduler thread (backend built by
-    /// the pool's stored factory on that thread) and register it with
-    /// the placement table. Returns the new shard id. The shared prefix
-    /// tier grows its per-shard tables on the shard's first
-    /// acquisition.
+    /// the pool's stored factory on that thread) and publish a new
+    /// placement snapshot including it. Returns the new shard id. The
+    /// shared prefix tier grows its per-shard tables on the shard's
+    /// first acquisition.
     pub fn add_shard(&self) -> Result<usize> {
         let id = {
-            // cap check and insertion under ONE lock acquisition, so
-            // concurrent add_shard calls cannot race past the cap; the
-            // brief spawn-under-lock only stalls submitters during the
-            // rare lifecycle op
-            let mut slots = self.reg.slots.lock().unwrap();
-            if slots.len() >= MAX_SHARDS {
+            // lifecycle ops are serialized; submitters never block here
+            let mut lc = self.reg.lifecycle.lock().unwrap();
+            let cur = self.reg.snapshot();
+            if cur.len() >= MAX_SHARDS {
                 bail!("shard cap ({MAX_SHARDS}) reached");
             }
             let id = self.reg.next_id.fetch_add(1, Ordering::Relaxed);
-            let (mut slot, join) = self.reg.spawn_shard(id)?;
+            let (slot, mut hook, join) = self.reg.spawn_shard(id)?;
             // retain the join handle so remove_shard can reap the
             // thread after its done signal (initial shards are joined
             // by BackendPool::spawn's caller instead)
-            slot.join = Some(join);
-            slots.push(slot);
+            hook.join = Some(join);
+            lc.insert(id, hook);
+            let mut v: Vec<ShardSlot> = cur.iter().cloned().collect();
+            v.push(slot);
+            *self.reg.slots.write().unwrap() = Arc::new(v);
             id
         };
         self.reg.metrics.lock().unwrap().record_shard_added();
         Ok(id)
     }
 
-    /// Hot-remove shard `id`: mark it draining and take it out of the
-    /// placement table (no new placements, no stealing), re-place its
+    /// Hot-remove shard `id`: publish a snapshot without it and mark it
+    /// draining (no new placements, no stealing), re-place its
     /// queued-but-unstarted jobs onto the survivors, close its channel,
-    /// and block until it has finished its in-flight runs, released its
-    /// prefix-tier handles, and flushed its final gauges. Other shards
+    /// and block until it has quiesced. With `migration` enabled the
+    /// shard detaches its in-flight runs at the next step boundary and
+    /// re-homes them on the survivors, so the wait is O(one step);
+    /// otherwise it finishes them locally (O(one solve)). Other shards
     /// keep serving throughout. Returns the drain duration in seconds.
     pub fn remove_shard(&self, id: usize) -> Result<f64> {
         let t0 = Instant::now();
-        let slot = {
-            let mut slots = self.reg.slots.lock().unwrap();
-            let pos = slots
+        let (slot, hook) = {
+            let mut lc = self.reg.lifecycle.lock().unwrap();
+            let cur = self.reg.snapshot();
+            let pos = cur
                 .iter()
                 .position(|s| s.id == id)
                 .ok_or_else(|| anyhow!("no live shard {id}"))?;
             let min = self.reg.cfg.min_shards.max(1);
-            if slots.len() <= min {
+            if cur.len() <= min {
                 bail!("cannot drain shard {id}: pool is at min_shards={min}");
             }
-            let slot = slots.remove(pos);
-            slot.draining.store(true, Ordering::Relaxed);
-            // re-place queued-but-unstarted jobs by re-submitting them
-            // through the survivors' channels (a parked shard wakes on
-            // its channel, not on its queue); gauges move with the jobs
-            let moved: Vec<QueuedJob> = slot.queue.lock().unwrap().drain(..).collect();
-            for (i, job) in moved.into_iter().enumerate() {
-                let est = job.lanes as u64;
-                slot.load.fetch_sub(est, Ordering::Relaxed);
-                if !send_with_fallback(&slots, i % slots.len(), est, job.req) {
-                    // every survivor is dead: the reply sender drops and
-                    // the client sees a disconnect
-                    log::error!("drain of shard {id}: no survivor accepted a queued job");
-                }
-            }
-            slot
+            let mut v: Vec<ShardSlot> = cur.iter().cloned().collect();
+            let slot = v.remove(pos);
+            *self.reg.slots.write().unwrap() = Arc::new(v);
+            slot.draining.store(true, Ordering::SeqCst);
+            let hook = lc.remove(&id).expect("every live shard has a lifecycle hook");
+            (slot, hook)
         };
-        // closing the channel is the drain signal: the shard finishes
-        // its in-flight runs, releases its tier handles, flushes its
-        // clock gauges, and drops its done sender
-        let ShardSlot { tx, done_rx, join, .. } = slot;
-        drop(tx);
+        // re-place queued-but-unstarted jobs by re-submitting them
+        // through the survivors' channels (a parked shard wakes on its
+        // channel or the signal); gauges move with the jobs. In-flight
+        // runs are migrated by the shard's own loop when it observes
+        // the draining flag (it owns the backend).
+        let survivors = self.reg.snapshot();
+        let moved: Vec<QueuedJob> = slot.queue.lock().unwrap().drain(..).collect();
+        for (i, job) in moved.into_iter().enumerate() {
+            let est = job.lanes as u64;
+            slot.load.fetch_sub(est, Ordering::Relaxed);
+            if send_with_fallback(&survivors, i % survivors.len(), est, ShardMsg::Job(job))
+                .is_err()
+            {
+                // every survivor is dead: the reply sender drops and
+                // the client sees a disconnect
+                log::error!("drain of shard {id}: no survivor accepted a queued job");
+            }
+        }
+        self.reg.signal.bump();
+        // closing the channel is the quiesce signal: the shard migrates
+        // (or finishes) its in-flight runs, releases its tier handles,
+        // flushes its clock gauges, and drops its done sender
+        drop(slot);
+        self.reg.signal.bump();
+        let ShardHook { done_rx, join } = hook;
         let _ = done_rx.recv();
         if let Some(j) = join {
             // hot-added shard: reap the thread so its final flush is
@@ -363,7 +663,13 @@ impl PoolHandle {
             let _ = j.join();
         }
         let secs = t0.elapsed().as_secs_f64();
-        self.reg.metrics.lock().unwrap().record_shard_removed(secs);
+        {
+            let mut m = self.reg.metrics.lock().unwrap();
+            m.record_shard_removed(secs);
+            // fold the dead id's gauge columns into the retired
+            // accumulators (autoscale churn must not grow them forever)
+            m.retire_shard(id);
+        }
         Ok(secs)
     }
 }
@@ -388,7 +694,6 @@ impl BackendPool {
     {
         let shards = cfg.shards.max(1);
         let tier = Arc::new(SharedPrefixTier::new(
-            shards,
             if cfg.prefix.enabled { cfg.prefix.capacity } else { 0 },
             cfg.prefix.max_bytes,
         ));
@@ -400,16 +705,22 @@ impl BackendPool {
             tier,
             factory: Box::new(factory),
             next_id: AtomicUsize::new(0),
-            slots: Mutex::new(Vec::with_capacity(shards)),
+            rr: AtomicUsize::new(0),
+            slots: RwLock::new(Arc::new(Vec::new())),
+            lifecycle: Mutex::new(HashMap::new()),
+            signal: Arc::new(WorkSignal::new()),
         });
         let mut joins = Vec::with_capacity(shards);
+        let mut v = Vec::with_capacity(shards);
         for _ in 0..shards {
             let id = reg.next_id.fetch_add(1, Ordering::Relaxed);
-            let (slot, join) = reg.spawn_shard(id)?;
-            reg.slots.lock().unwrap().push(slot);
+            let (slot, hook, join) = reg.spawn_shard(id)?;
+            reg.lifecycle.lock().unwrap().insert(id, hook);
+            v.push(slot);
             joins.push(join);
         }
-        Ok((PoolHandle { reg, rr: Arc::new(AtomicUsize::new(0)) }, joins))
+        *reg.slots.write().unwrap() = Arc::new(v);
+        Ok((PoolHandle { reg }, joins))
     }
 }
 
@@ -492,10 +803,10 @@ mod tests {
         let m = metrics.lock().unwrap();
         assert_eq!(m.requests, 8);
         assert_eq!(m.errors, 0);
-        assert_eq!(m.shard_requests.iter().sum::<u64>(), 8);
+        assert_eq!(m.total_shard_requests(), 8);
         // least-loaded spreads an 8-burst of equal jobs across 2 shards
         assert!(
-            m.shard_requests.iter().all(|&r| r >= 2),
+            m.shard_requests.values().all(|&r| r >= 2),
             "placement starved a shard: {:?}",
             m.shard_requests
         );
@@ -512,6 +823,12 @@ mod tests {
             assert!(r.recv().unwrap().is_ok());
         }
         assert_eq!(handle.load_of(0) + handle.load_of(1), 0, "load gauge leaked");
+        assert_eq!(handle.outstanding_lanes(), 0);
+        assert_eq!(handle.queued_jobs(), 0);
+        assert_eq!(handle.oldest_queue_wait_s(), 0.0);
+        let (shards, queued, wait, lanes) = handle.sample_signals();
+        assert_eq!((shards, queued, lanes), (2, 0, 0));
+        assert_eq!(wait, 0.0);
         drop(handle);
         for j in joins {
             j.join().unwrap();
@@ -571,7 +888,7 @@ mod tests {
             let m = metrics.lock().unwrap();
             assert_eq!(m.shards_added, 1);
             assert!(
-                m.shard_requests.len() >= 2 && m.shard_requests[1] > 0,
+                m.shard_requests.get(&1).copied().unwrap_or(0) > 0,
                 "hot-added shard never served: {:?}",
                 m.shard_requests
             );
@@ -591,10 +908,30 @@ mod tests {
             assert_eq!(m.shards_removed, 1);
             assert_eq!(m.drains, 1);
             assert!(m.drain_secs_max >= 0.0);
+            // the dead id's gauge columns were folded away (compaction)
+            assert!(!m.shard_requests.contains_key(&1), "dead-id column retained");
+            assert!(!m.shard_clocks.contains_key(&1), "dead-id clock retained");
+            assert_eq!(m.total_shard_requests(), 7, "retired requests lost");
         }
         drop(handle);
         for j in joins {
             j.join().unwrap();
         }
+    }
+
+    #[test]
+    fn work_signal_epoch_round_trip() {
+        let s = WorkSignal::new();
+        let e0 = s.epoch();
+        s.bump();
+        assert_eq!(s.epoch(), e0 + 1);
+        // a stale epoch returns immediately (no timeout wait)
+        let t0 = Instant::now();
+        s.wait_past(e0, Duration::from_secs(5));
+        assert!(t0.elapsed() < Duration::from_secs(1));
+        // a current epoch waits out the (short) timeout
+        let t0 = Instant::now();
+        s.wait_past(s.epoch(), Duration::from_millis(20));
+        assert!(t0.elapsed() >= Duration::from_millis(15));
     }
 }

@@ -21,9 +21,11 @@
 //!   in-flight fill are pinned); handles owned by other shards cannot
 //!   be released from the evicting thread (backends are thread-owned),
 //!   so they are parked on per-shard release queues each shard drains
-//!   at its next tier interaction. The per-shard tables grow on demand:
-//!   hot-added shards (`PoolHandle::add_shard`) have ids beyond the
-//!   spawn-time count.
+//!   at its next tier interaction. All per-shard state is keyed by
+//!   LIVE shard id (maps, not columns): hot-added shards
+//!   (`PoolHandle::add_shard`, monotonic ids) insert their own slots
+//!   on first use and `clear_shard` leaves no dead-id residue, so
+//!   sustained autoscale churn cannot grow the tables (DESIGN.md §12).
 //!
 //! Ownership: a handle returned with `retained = true` belongs to the
 //! cache/tier (released on eviction or clear); with `retained = false`
@@ -260,28 +262,31 @@ pub struct TierStats {
 /// One (entry, shard) slot of the tier: the in-flight latch. `Pending`
 /// marks a prefill running outside the tier lock on the owning shard's
 /// backend; waiters block on the tier condvar until it flips to `Ready`
-/// (or back to `Empty` on prefill failure).
+/// (or is removed again on prefill failure). A shard with no slot in an
+/// entry's map simply hasn't served that prompt (the old `Empty`
+/// state) — absence IS empty, which is what keeps per-shard state keyed
+/// by LIVE shard ids only (monotonic ids under autoscale churn would
+/// otherwise grow every entry's column vector forever).
 #[derive(Clone, Copy)]
 enum SlotState {
-    Empty,
     Pending,
     Ready { handle: PrefixHandle, bytes: u64 },
 }
 
 struct TierEntry {
-    /// `per_shard[s]` = the prompt's slot on shard s's backend
-    per_shard: Vec<SlotState>,
+    /// shard id -> the prompt's slot on that shard's backend (absent =
+    /// the shard never served this prompt)
+    per_shard: HashMap<usize, SlotState>,
     last_used: u64,
 }
 
 impl TierEntry {
     fn has_pending(&self) -> bool {
-        self.per_shard.iter().any(|s| matches!(s, SlotState::Pending))
+        self.per_shard.values().any(|s| matches!(s, SlotState::Pending))
     }
 }
 
 struct TierInner {
-    shards: usize,
     capacity: usize,
     max_bytes: u64,
     bytes: u64,
@@ -289,25 +294,13 @@ struct TierInner {
     map: HashMap<u64, TierEntry>,
     /// handles evicted while their owning shard wasn't the caller:
     /// release must run on the owning shard's thread (backends are
-    /// thread-owned), so they park here until that shard next calls in
-    pending_release: Vec<Vec<PrefixHandle>>,
+    /// thread-owned), so they park here until that shard next calls in.
+    /// Keyed by live shard id; a drained shard's queue leaves with it.
+    pending_release: HashMap<usize, Vec<PrefixHandle>>,
     stats: TierStats,
 }
 
 impl TierInner {
-    /// Grow the per-shard tables to cover `shards` — hot-added shards
-    /// (`PoolHandle::add_shard`) have ids beyond the spawn-time count.
-    fn grow(&mut self, shards: usize) {
-        if shards <= self.shards {
-            return;
-        }
-        self.shards = shards;
-        self.pending_release.resize_with(shards, Vec::new);
-        for e in self.map.values_mut() {
-            e.per_shard.resize_with(shards, || SlotState::Empty);
-        }
-    }
-
     /// Evict the LRU logical entry (skipping `protect` and any entry
     /// with an in-flight fill — a `Pending` slot has no handle to
     /// release yet): this shard's handle is released inline on
@@ -327,13 +320,13 @@ impl TierInner {
             .map(|(&k, _)| k);
         let Some(k) = victim else { return false };
         let e = self.map.remove(&k).expect("victim key present");
-        for (s, slot) in e.per_shard.into_iter().enumerate() {
+        for (s, slot) in e.per_shard {
             if let SlotState::Ready { handle, bytes } = slot {
                 self.bytes = self.bytes.saturating_sub(bytes);
                 if s == cur_shard {
                     let _ = backend.release_prefix(handle);
                 } else {
-                    self.pending_release[s].push(handle);
+                    self.pending_release.entry(s).or_default().push(handle);
                 }
             }
         }
@@ -360,17 +353,20 @@ pub struct SharedPrefixTier {
 impl SharedPrefixTier {
     /// `capacity` = logical entry cap (0 disables caching); `max_bytes`
     /// = byte budget summed over every shard's retained handles (0 =
-    /// entry cap only).
-    pub fn new(shards: usize, capacity: usize, max_bytes: u64) -> Self {
+    /// entry cap only). The per-shard tables are maps keyed by live
+    /// shard id — any shard (spawn-time or hot-added, ids are
+    /// monotonic) inserts its own slots on first use and a drained
+    /// shard leaves no residue, so no shard count is declared up
+    /// front.
+    pub fn new(capacity: usize, max_bytes: u64) -> Self {
         SharedPrefixTier {
             inner: Mutex::new(TierInner {
-                shards: shards.max(1),
                 capacity,
                 max_bytes,
                 bytes: 0,
                 tick: 0,
                 map: HashMap::new(),
-                pending_release: (0..shards.max(1)).map(|_| Vec::new()).collect(),
+                pending_release: HashMap::new(),
                 stats: TierStats::default(),
             }),
             filled: Condvar::new(),
@@ -416,8 +412,10 @@ impl SharedPrefixTier {
         // backend outside it (release cost is the owning shard's alone)
         let (pending, passthrough) = {
             let mut guard = self.inner.lock().unwrap();
-            guard.grow(shard + 1);
-            (std::mem::take(&mut guard.pending_release[shard]), guard.capacity == 0)
+            (
+                guard.pending_release.remove(&shard).unwrap_or_default(),
+                guard.capacity == 0,
+            )
         };
         for h in pending {
             let _ = backend.release_prefix(h);
@@ -437,12 +435,13 @@ impl SharedPrefixTier {
             let tick = inner.tick;
             if let Some(e) = inner.map.get_mut(&k) {
                 e.last_used = tick;
-                match e.per_shard[shard] {
-                    SlotState::Ready { handle, .. } => {
+                match e.per_shard.get(&shard) {
+                    Some(SlotState::Ready { handle, .. }) => {
+                        let handle = *handle;
                         inner.stats.hits += 1;
                         return Ok(Acquired { handle, retained: true, hit: true });
                     }
-                    SlotState::Pending => {
+                    Some(SlotState::Pending) => {
                         // another caller is prefilling this (prompt,
                         // shard) outside the lock: wait for the latch.
                         // (With one scheduler thread per shard this arm
@@ -451,13 +450,13 @@ impl SharedPrefixTier {
                         guard = self.filled.wait(guard).unwrap();
                         continue;
                     }
-                    SlotState::Empty => {
+                    None => {
                         // known prompt, first service on this shard:
                         // latch, then prefill once outside the lock
                         // (the hit/shard-fill counters are bumped on
                         // success, inside fill — a failed prefill must
                         // not inflate the cache-effectiveness stats)
-                        e.per_shard[shard] = SlotState::Pending;
+                        e.per_shard.insert(shard, SlotState::Pending);
                         drop(guard);
                         return self
                             .fill(shard, backend, problem, use_draft, want_scores, k, true);
@@ -472,9 +471,7 @@ impl SharedPrefixTier {
                     break;
                 }
             }
-            let mut per_shard: Vec<SlotState> = Vec::new();
-            per_shard.resize_with(inner.shards, || SlotState::Empty);
-            per_shard[shard] = SlotState::Pending;
+            let per_shard = HashMap::from([(shard, SlotState::Pending)]);
             inner.map.insert(k, TierEntry { per_shard, last_used: tick });
             drop(guard);
             return self.fill(shard, backend, problem, use_draft, want_scores, k, false);
@@ -514,7 +511,7 @@ impl SharedPrefixTier {
                 // simply owns the prefix
                 let retained = match inner.map.get_mut(&k) {
                     Some(e) => {
-                        e.per_shard[shard] = SlotState::Ready { handle, bytes: cost };
+                        e.per_shard.insert(shard, SlotState::Ready { handle, bytes: cost });
                         inner.bytes += cost;
                         true
                     }
@@ -535,8 +532,8 @@ impl SharedPrefixTier {
             }
             Err(e) => {
                 if let Some(entry) = inner.map.get_mut(&k) {
-                    entry.per_shard[shard] = SlotState::Empty;
-                    if entry.per_shard.iter().all(|s| matches!(s, SlotState::Empty)) {
+                    entry.per_shard.remove(&shard);
+                    if entry.per_shard.is_empty() {
                         inner.map.remove(&k);
                     }
                 }
@@ -550,24 +547,32 @@ impl SharedPrefixTier {
     /// shard). Logical entries survive while any other shard still
     /// holds (or is filling) a handle; fully-empty entries are dropped.
     /// Called by the shard's own thread, so none of this shard's slots
-    /// can be `Pending` here.
+    /// can be `Pending` here. After this the tier holds NO state keyed
+    /// by the dead shard id — the compaction that keeps week-long
+    /// autoscale churn from growing the per-shard tables.
     pub fn clear_shard(&self, shard: usize, backend: &mut dyn Backend) {
         let mut guard = self.inner.lock().unwrap();
         let inner = &mut *guard;
-        inner.grow(shard + 1);
-        for h in std::mem::take(&mut inner.pending_release[shard]) {
+        for h in inner.pending_release.remove(&shard).unwrap_or_default() {
             let _ = backend.release_prefix(h);
         }
         let mut freed = 0u64;
         for e in inner.map.values_mut() {
-            if let SlotState::Ready { handle, bytes } = e.per_shard[shard] {
-                e.per_shard[shard] = SlotState::Empty;
+            if let Some(SlotState::Ready { handle, bytes }) = e.per_shard.remove(&shard) {
                 freed += bytes;
                 let _ = backend.release_prefix(handle);
             }
         }
         inner.bytes = inner.bytes.saturating_sub(freed);
-        inner.map.retain(|_, e| e.per_shard.iter().any(|s| !matches!(s, SlotState::Empty)));
+        inner.map.retain(|_, e| !e.per_shard.is_empty());
+    }
+
+    /// Live per-shard slots keyed by a given shard id — 0 once the
+    /// shard has been cleared (compaction observable for tests).
+    pub fn shard_slot_count(&self, shard: usize) -> usize {
+        let inner = self.inner.lock().unwrap();
+        inner.map.values().filter(|e| e.per_shard.contains_key(&shard)).count()
+            + inner.pending_release.get(&shard).map_or(0, |v| v.len())
     }
 }
 
@@ -714,7 +719,7 @@ mod tests {
     #[test]
     fn tier_refills_once_per_shard_then_hits() {
         let mut b = CalibratedBackend::for_suite("synth-math500", 6).unwrap();
-        let t = SharedPrefixTier::new(2, 8, 0);
+        let t = SharedPrefixTier::new(8, 0);
         let p = &problems()[0];
         let a0 = t.acquire_for_shard(0, &mut b, p, true, true).unwrap();
         assert!(!a0.hit && a0.retained);
@@ -737,7 +742,7 @@ mod tests {
     #[test]
     fn tier_eviction_parks_foreign_handles_until_owner_drains() {
         let mut b = CalibratedBackend::for_suite("synth-math500", 7).unwrap();
-        let t = SharedPrefixTier::new(2, 1, 0);
+        let t = SharedPrefixTier::new(1, 0);
         let ps = problems();
         let a0 = t.acquire_for_shard(0, &mut b, &ps[0], false, false).unwrap();
         let a1 = t.acquire_for_shard(1, &mut b, &ps[0], false, false).unwrap();
@@ -762,7 +767,7 @@ mod tests {
         };
         let mut b = CalibratedBackend::for_suite("synth-math500", 8).unwrap();
         // budget fits one prompt on both shards, not two prompts
-        let t = SharedPrefixTier::new(2, 8, 2 * one + one / 2);
+        let t = SharedPrefixTier::new(8, 2 * one + one / 2);
         let _ = t.acquire_for_shard(0, &mut b, &ps[0], false, false).unwrap();
         let _ = t.acquire_for_shard(1, &mut b, &ps[0], false, false).unwrap();
         assert_eq!(t.stats().evictions, 0);
@@ -774,7 +779,7 @@ mod tests {
     #[test]
     fn tier_zero_capacity_passthrough() {
         let mut b = CalibratedBackend::for_suite("synth-math500", 9).unwrap();
-        let t = SharedPrefixTier::new(2, 0, 0);
+        let t = SharedPrefixTier::new(0, 0);
         let p = &problems()[0];
         let a = t.acquire_for_shard(1, &mut b, p, false, false).unwrap();
         assert!(!a.retained && !a.hit);
@@ -785,7 +790,7 @@ mod tests {
     #[test]
     fn tier_clear_shard_keeps_other_shards_entries() {
         let mut b = CalibratedBackend::for_suite("synth-math500", 10).unwrap();
-        let t = SharedPrefixTier::new(2, 8, 0);
+        let t = SharedPrefixTier::new(8, 0);
         let ps = problems();
         let a0 = t.acquire_for_shard(0, &mut b, &ps[0], false, false).unwrap();
         let a1 = t.acquire_for_shard(1, &mut b, &ps[0], false, false).unwrap();
@@ -805,9 +810,28 @@ mod tests {
     }
 
     #[test]
+    fn tier_holds_no_state_for_cleared_shard_ids() {
+        // autoscale churn: shard ids are monotonic and never reused, so
+        // cycling through 50 of them must leave NO per-id residue — the
+        // dead-id compaction (ROADMAP item)
+        let mut b = CalibratedBackend::for_suite("synth-math500", 14).unwrap();
+        let t = SharedPrefixTier::new(8, 0);
+        let ps = problems();
+        for shard in 0..50usize {
+            let a = t.acquire_for_shard(shard, &mut b, &ps[0], false, false).unwrap();
+            assert!(a.retained);
+            assert_eq!(t.shard_slot_count(shard), 1);
+            t.clear_shard(shard, &mut b);
+            assert_eq!(t.shard_slot_count(shard), 0, "shard {shard} left residue");
+        }
+        assert!(t.is_empty());
+        assert_eq!(t.bytes(), 0);
+    }
+
+    #[test]
     fn shard_prefix_provider_routes_to_its_shard() {
         let mut b = CalibratedBackend::for_suite("synth-math500", 12).unwrap();
-        let t = SharedPrefixTier::new(2, 8, 0);
+        let t = SharedPrefixTier::new(8, 0);
         let p = &problems()[0];
         let a = {
             let mut v0 = ShardPrefix { tier: &t, shard: 0 };

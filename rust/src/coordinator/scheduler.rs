@@ -18,7 +18,9 @@
 //!   connection handlers or bench clients — routed to one shard's
 //!   channel by the pool's placement policy (`coordinator::pool`).
 //!   Intake parses the problem (parse failures reply immediately) and
-//!   places it in the shard's admission queue.
+//!   places it in the shard's admission queue. The channel also
+//!   carries already-queued or mid-solve work re-homed by drains and
+//!   steals ([`ShardMsg::Job`]).
 //! * **Admission / lane pool.** Each method occupies `Method::lanes()`
 //!   lanes (its parallel paths; SPM methods clamped to the strategy
 //!   pool, and the wire `paths` field is bounded to 1..=16 at parse
@@ -28,10 +30,9 @@
 //!   (`SsrConfig::max_lanes`, PER SHARD) has room, and admits at least
 //!   one job whenever the pool is idle so an oversized request can
 //!   never wedge the queue. Admission runs again every tick, so queued
-//!   problems join mid-flight the moment lanes free up. FIFO cannot
-//!   starve; smallest-first maximizes occupancy under mixed loads but
-//!   can delay wide requests indefinitely under pressure — that
-//!   trade-off is the operator's knob.
+//!   problems join mid-flight the moment lanes free up. A
+//!   [`Work::Resume`] job re-attaches a [`DetachedRun`] instead of
+//!   starting fresh — bit-identical decisions, no re-counted request.
 //! * **Tick loop.** Every tick gathers the union of active lanes across
 //!   ALL in-flight [`ProblemRun`]s of this shard and issues ONE batched
 //!   draft -> score -> accept|rewrite cycle (speculative lanes, each
@@ -55,26 +56,36 @@
 //!   (`Metrics::record_batch` -> mean/histogram batch occupancy), every
 //!   admission pass samples queue depth, and every admitted job records
 //!   its admission wait and shard. `{"op":"stats"}` surfaces all of it.
-//! * **Work stealing.** With `steal_threshold > 0`, a shard whose
-//!   occupancy sat below the threshold for a full tick (and whose own
-//!   queue is empty) pulls queued-but-unstarted jobs from the
-//!   most-loaded shard's admission queue — the queues are shared cells
-//!   in the pool registry for exactly this (`coordinator::pool`,
-//!   DESIGN.md §11). Idle shards then poll their channel instead of
-//!   parking so they can keep scanning for victims.
+//! * **Work stealing & live migration.** With `steal_threshold > 0`, a
+//!   shard whose occupancy sat below the threshold (for a full tick,
+//!   or instantly when fully idle) and whose own queue is empty pulls
+//!   queued-but-unstarted jobs from the most-loaded shard's admission
+//!   queue. When nothing is queued anywhere but a peer's lanes are
+//!   saturated, the thief posts a *shed request* and the victim
+//!   detaches whole in-flight runs ([`ProblemRun::detach`]) at its
+//!   next step boundary and hands them over — run migration, not just
+//!   queue rebalancing (DESIGN.md §12). Idle steal-mode shards park on
+//!   the pool's [`WorkSignal`] condvar (woken by every enqueue)
+//!   instead of polling, so an idle pool burns no CPU.
 //! * **Shutdown / drain.** A shard's loop exits once every submitter
 //!   handle is dropped AND its queue and lane pool are empty — in-
 //!   flight work always drains, and the drain releases the shard's
 //!   handles in the shared tier. `PoolHandle::remove_shard` drains one
 //!   shard this same way (its channel closes) while the rest of the
-//!   pool keeps serving.
+//!   pool keeps serving; with `migration` enabled the draining shard
+//!   re-homes its in-flight runs on the survivors at the next step
+//!   boundary, so the drain completes in O(one step) instead of O(one
+//!   solve).
 //!
 //! Determinism: the run seed is a pure function of (request seed,
-//! prompt) — NOT of admission order, shard placement, or work stealing
-//! — and the calibrated substrate's per-problem draws are derived
-//! streams (`backend::calibrated`), so identical requests reproduce
-//! identical answers on any shard of any pool size (the
-//! sharded-vs-single-shard equivalence tests pin this).
+//! prompt) — NOT of admission order, shard placement, work stealing, or
+//! migration — and the calibrated substrate's per-problem draws are
+//! derived streams (`backend::calibrated`) while migrated lanes carry
+//! their sampling-stream positions with them (`LaneSnapshot`), so
+//! identical requests reproduce identical answers on any shard of any
+//! pool size, even mid-solve re-homed (the equivalence tests pin this).
+//!
+//! [`WorkSignal`]: super::pool::WorkSignal
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -84,9 +95,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use super::engine::{step_tick, Method, ProblemRun};
+use super::engine::{step_tick, DetachedRun, Method, ProblemRun};
 use super::metrics::Metrics;
-use super::pool::{BackendPool, ShardRegistry};
+use super::pool::{BackendPool, ShardRegistry, ShedRequest, WorkSignal};
 use super::prefix::{PrefixProvider, ShardPrefix, SharedPrefixTier};
 use crate::backend::Backend;
 use crate::config::{AdmitPolicy, SsrConfig};
@@ -96,14 +107,11 @@ use crate::util::json::{self, Value};
 use crate::workload::problems::problem_from_text;
 use crate::workload::Problem;
 
-/// How often an idle shard wakes to scan for steal victims (and to
-/// notice jobs re-placed into its queue by a draining shard). Only the
-/// work-stealing path polls; with `steal_threshold = 0` an idle shard
-/// parks on its channel exactly as before. After several consecutive
-/// dry passes the poll backs off to [`STEAL_POLL_IDLE`] so a fully
-/// idle pool costs ~100 wakeups/s per shard instead of 2000.
-const STEAL_POLL: Duration = Duration::from_micros(500);
-const STEAL_POLL_IDLE: Duration = Duration::from_millis(10);
+/// Safety timeout for an idle steal-mode shard parked on the pool's
+/// enqueue signal: normally it wakes on the condvar the moment anything
+/// is enqueued anywhere; the timeout only bounds shutdown latency (and
+/// pathological lost-wakeup bugs). ~20 wakeups/s when truly idle.
+const IDLE_PARK: Duration = Duration::from_millis(50);
 
 /// The submitter side of the pool — kept under its historical name;
 /// see [`coordinator::pool::PoolHandle`](super::pool::PoolHandle).
@@ -115,6 +123,14 @@ pub struct SolveRequest {
     pub method: Method,
     pub seed: u64,
     pub reply: mpsc::Sender<Result<Value>>,
+}
+
+/// What travels over a shard's channel: a wire request to parse, or an
+/// already-parsed (possibly mid-solve) job re-homed by a drain or a
+/// shed handoff.
+pub(crate) enum ShardMsg {
+    Solve(SolveRequest),
+    Job(QueuedJob),
 }
 
 /// Lanes a method will occupy once admitted — the admission and
@@ -130,17 +146,20 @@ pub(crate) fn lane_estimate(method: Method, pool_size: usize) -> usize {
 
 /// Everything one shard's loop needs besides its backend: its identity,
 /// the shared prefix tier, its own load gauge / admission queue /
-/// draining flag (shared with the pool registry so submit, steal and
-/// drain can see them), and a weak registry reference for picking steal
-/// victims. Weak, because a strong reference from the shard thread
-/// would keep every shard's channel sender alive and the pool could
-/// never drain by dropping its handles.
+/// draining flag / shed inbox (shared with the pool registry so submit,
+/// steal, shed and drain can see them), the pool-wide enqueue signal,
+/// and a weak registry reference for picking steal victims and
+/// migration targets. Weak, because a strong reference from the shard
+/// thread would keep every shard's channel sender alive and the pool
+/// could never drain by dropping its handles.
 pub(crate) struct ShardCtx {
     pub shard: usize,
     pub tier: Arc<SharedPrefixTier>,
     pub load: Arc<AtomicU64>,
     pub queue: Arc<Mutex<VecDeque<QueuedJob>>>,
     pub draining: Arc<AtomicBool>,
+    pub shed: Arc<Mutex<Vec<ShedRequest>>>,
+    pub signal: Arc<WorkSignal>,
     pub registry: Weak<ShardRegistry>,
 }
 
@@ -153,17 +172,41 @@ impl ShardCtx {
 }
 
 /// One parsed, admitted-but-unstarted unit of work. Lives in a shard's
-/// *shared* admission queue so an idle shard can steal it; a stolen job
-/// re-derives its run state from the placement-invariant run seed at
-/// admission, so decisions are identical wherever it lands.
+/// *shared* admission queue so an idle shard can steal it; a stolen
+/// fresh job re-derives its run state from the placement-invariant run
+/// seed at admission, and a migrated job carries its mid-solve state
+/// with it — decisions are identical wherever either lands.
 pub(crate) struct QueuedJob {
-    pub(crate) problem: Problem,
     /// submit-side lane estimate (admission weight AND the exact amount
     /// to return to the owning shard's load gauge on the terminal
-    /// reply; work stealing moves it between gauges with the job)
+    /// reply; stealing and migration move it between gauges)
     pub(crate) lanes: usize,
+    /// original submission time — the reply's `latency_s`/`queue_wait_s`
+    /// baseline; survives steals and migrations unchanged
     pub(crate) enqueued: Instant,
-    pub(crate) req: SolveRequest,
+    /// when this job (re-)entered a queue — the head-of-line wait the
+    /// autoscaler samples. Re-stamped when a detached run is re-queued,
+    /// so a migrated long-running solve doesn't masquerade as a
+    /// 30-second admission backlog and flap the policy
+    pub(crate) queued_at: Instant,
+    pub(crate) work: Work,
+}
+
+/// The two kinds of queued work: a not-yet-started solve, and a
+/// mid-solve run detached from another shard (live migration).
+pub(crate) enum Work {
+    Fresh {
+        problem: Problem,
+        method: Method,
+        seed: u64,
+        reply: mpsc::Sender<Result<Value>>,
+    },
+    Resume {
+        run: DetachedRun,
+        method: Method,
+        gold: i64,
+        reply: mpsc::Sender<Result<Value>>,
+    },
 }
 
 struct InFlight {
@@ -224,27 +267,40 @@ fn pick_next(queue: &VecDeque<QueuedJob>, policy: AdmitPolicy) -> Option<usize> 
 }
 
 fn intake(
-    req: SolveRequest,
+    msg: ShardMsg,
     cfg: &SsrConfig,
     vocab: &Vocab,
     metrics: &Arc<Mutex<Metrics>>,
     ctx: &ShardCtx,
 ) {
-    let lanes = lane_estimate(req.method, cfg.pool_size);
-    match problem_from_text(vocab, &req.expr) {
-        Ok(problem) => {
-            ctx.queue.lock().unwrap().push_back(QueuedJob {
-                problem,
-                lanes,
-                enqueued: Instant::now(),
-                req,
-            });
+    match msg {
+        ShardMsg::Solve(req) => {
+            let lanes = lane_estimate(req.method, cfg.pool_size);
+            match problem_from_text(vocab, &req.expr) {
+                Ok(problem) => {
+                    let now = Instant::now();
+                    ctx.queue.lock().unwrap().push_back(QueuedJob {
+                        lanes,
+                        enqueued: now,
+                        queued_at: now,
+                        work: Work::Fresh {
+                            problem,
+                            method: req.method,
+                            seed: req.seed,
+                            reply: req.reply,
+                        },
+                    });
+                }
+                Err(e) => {
+                    metrics.lock().unwrap().errors += 1;
+                    ctx.done(lanes);
+                    let _ = req.reply.send(Err(e));
+                }
+            }
         }
-        Err(e) => {
-            metrics.lock().unwrap().errors += 1;
-            ctx.done(lanes);
-            let _ = req.reply.send(Err(e));
-        }
+        // already parsed (drain re-placement) or mid-solve (migration):
+        // straight into the admission queue
+        ShardMsg::Job(job) => ctx.queue.lock().unwrap().push_back(job),
     }
 }
 
@@ -278,14 +334,186 @@ fn finish_job(
     ]))
 }
 
-/// One shard's thread body: intake -> steal -> admit -> tick -> retire,
-/// until every submitter is gone (channel disconnected — pool shutdown
-/// or `remove_shard` drain) and all of this shard's work has finished.
+/// Detach one in-flight run into a migratable Resume job. On export
+/// failure the request is failed (its lanes were closed by the failed
+/// detach) — never silently dropped.
+fn detach_job(
+    backend: &mut dyn Backend,
+    f: InFlight,
+    metrics: &Arc<Mutex<Metrics>>,
+    ctx: &ShardCtx,
+) -> Option<(QueuedJob, u64)> {
+    let InFlight { run, method, gold, est, enqueued, reply, .. } = f;
+    match run.detach(backend) {
+        Ok(d) => {
+            let bytes = d.approx_bytes();
+            let job = QueuedJob {
+                lanes: est,
+                enqueued,
+                queued_at: Instant::now(),
+                work: Work::Resume { run: d, method, gold, reply },
+            };
+            Some((job, bytes))
+        }
+        Err(e) => {
+            metrics.lock().unwrap().errors += 1;
+            ctx.done(est);
+            let _ = reply.send(Err(e));
+            None
+        }
+    }
+}
+
+/// Re-admit a job this shard failed to hand off (no survivor / thief
+/// gone): Resume jobs re-attach immediately, Fresh jobs re-queue.
+fn take_back(
+    backend: &mut dyn Backend,
+    job: QueuedJob,
+    inflight: &mut Vec<InFlight>,
+    metrics: &Arc<Mutex<Metrics>>,
+    ctx: &ShardCtx,
+) {
+    let QueuedJob { lanes, enqueued, work, .. } = job;
+    match work {
+        Work::Resume { run, method, gold, reply } => {
+            match ProblemRun::attach(run, backend) {
+                Ok(run) => inflight.push(InFlight {
+                    run,
+                    method,
+                    gold,
+                    est: lanes,
+                    enqueued,
+                    admitted: Instant::now(),
+                    reply,
+                }),
+                Err(e) => {
+                    metrics.lock().unwrap().errors += 1;
+                    ctx.done(lanes);
+                    let _ = reply.send(Err(e));
+                }
+            }
+        }
+        work @ Work::Fresh { .. } => {
+            ctx.queue.lock().unwrap().push_back(QueuedJob {
+                lanes,
+                enqueued,
+                queued_at: Instant::now(),
+                work,
+            });
+        }
+    }
+}
+
+/// Drain-via-migration: detach every in-flight run at this step
+/// boundary and re-home it on the survivors. Queued stragglers that
+/// raced into the closing channel are re-placed too. Falls back to
+/// local completion when no survivor accepts (full pool shutdown).
+fn migrate_out(
+    backend: &mut dyn Backend,
+    inflight: &mut Vec<InFlight>,
+    reg: &Arc<ShardRegistry>,
+    metrics: &Arc<Mutex<Metrics>>,
+    ctx: &ShardCtx,
+) {
+    let runs: Vec<InFlight> = inflight.drain(..).collect();
+    for f in runs {
+        let est = f.est;
+        let Some((job, bytes)) = detach_job(backend, f, metrics, ctx) else { continue };
+        ctx.load.fetch_sub(est as u64, Ordering::Relaxed);
+        match reg.resubmit(job) {
+            Ok(()) => {
+                metrics.lock().unwrap().record_migration(bytes);
+            }
+            Err(job) => {
+                ctx.load.fetch_add(est as u64, Ordering::Relaxed);
+                take_back(backend, job, inflight, metrics, ctx);
+            }
+        }
+    }
+    let mut queued: VecDeque<QueuedJob> = {
+        let mut q = ctx.queue.lock().unwrap();
+        std::mem::take(&mut *q)
+    };
+    while let Some(job) = queued.pop_front() {
+        let est = job.lanes as u64;
+        ctx.load.fetch_sub(est, Ordering::Relaxed);
+        if let Err(job) = reg.resubmit(job) {
+            // no survivors: serve this and the rest ourselves after all
+            ctx.load.fetch_add(est, Ordering::Relaxed);
+            let mut q = ctx.queue.lock().unwrap();
+            q.push_back(job);
+            q.append(&mut queued);
+            break;
+        }
+    }
+}
+
+/// Serve thieves' shed requests: detach the most recently admitted
+/// unfinished runs (least sunk context on this shard) and hand them
+/// directly to the requesting shard. Two convergence guards: the
+/// victim always keeps at least one run (the pool cannot ping-pong its
+/// last job around), and it grants at most HALF its current lanes per
+/// request, so one handoff moves toward balance instead of inverting
+/// the imbalance and bouncing back.
+fn shed_to_thieves(
+    backend: &mut dyn Backend,
+    inflight: &mut Vec<InFlight>,
+    reg: &Arc<ShardRegistry>,
+    metrics: &Arc<Mutex<Metrics>>,
+    ctx: &ShardCtx,
+) {
+    let reqs: Vec<ShedRequest> = {
+        let mut s = ctx.shed.lock().unwrap();
+        if s.is_empty() {
+            return;
+        }
+        s.drain(..).collect()
+    };
+    for r in reqs {
+        let total_lanes: usize = inflight.iter().map(|f| f.run.lanes()).sum();
+        let budget = r.lanes.min(total_lanes / 2);
+        let mut granted = 0usize;
+        while inflight.len() > 1 {
+            let Some(pos) = inflight.iter().rposition(|f| !f.run.is_done()) else {
+                break;
+            };
+            // the cap is checked BEFORE detaching: a whole-run grant
+            // that would overshoot the half-lanes budget is refused,
+            // never rounded up (overshooting would invert the
+            // imbalance and bounce the run back)
+            let lanes = inflight[pos].run.lanes();
+            if granted + lanes.max(1) > budget {
+                break;
+            }
+            let f = inflight.remove(pos);
+            let est = f.est;
+            let Some((job, bytes)) = detach_job(backend, f, metrics, ctx) else { continue };
+            ctx.load.fetch_sub(est as u64, Ordering::Relaxed);
+            match reg.send_to(r.thief, job) {
+                Ok(()) => {
+                    granted += lanes.max(1);
+                    metrics.lock().unwrap().record_migration(bytes);
+                }
+                Err(job) => {
+                    // thief is gone or draining: take the run back
+                    ctx.load.fetch_add(est as u64, Ordering::Relaxed);
+                    take_back(backend, job, inflight, metrics, ctx);
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// One shard's thread body: intake -> migrate/steal -> admit -> tick ->
+/// retire -> shed, until every submitter is gone (channel disconnected
+/// — pool shutdown or `remove_shard` drain) and all of this shard's
+/// work has finished or been re-homed.
 pub(crate) fn run_loop(
     backend: &mut dyn Backend,
     cfg: &SsrConfig,
     vocab: &Vocab,
-    rx: mpsc::Receiver<SolveRequest>,
+    rx: mpsc::Receiver<ShardMsg>,
     metrics: &Arc<Mutex<Metrics>>,
     ctx: &ShardCtx,
 ) {
@@ -293,10 +521,15 @@ pub(crate) fn run_loop(
     let mut disconnected = false;
     let max_lanes = cfg.max_lanes.max(1);
     let steal_at = cfg.steal_threshold;
+    let migration = cfg.migration;
     // consecutive passes this shard sat under the steal threshold with
-    // an empty queue: stealing requires a full idle tick first, so a
-    // shard that is merely between admissions doesn't raid its peers
+    // an empty queue: a partially-occupied shard must be hungry for a
+    // full tick before raiding its peers (a fully idle one may steal
+    // immediately — there is nothing it could be between)
     let mut hungry_ticks = 0usize;
+    // park epoch: read before each pass scans its wake sources, so an
+    // enqueue signaled during/after the scan wakes the next park
+    let mut seen = ctx.signal.epoch();
 
     loop {
         // --- intake ---------------------------------------------------
@@ -306,24 +539,24 @@ pub(crate) fn run_loop(
             }
             if steal_at == 0 {
                 match rx.recv() {
-                    Ok(req) => intake(req, cfg, vocab, metrics, ctx),
+                    Ok(msg) => intake(msg, cfg, vocab, metrics, ctx),
                     Err(_) => disconnected = true,
                 }
             } else {
-                // stealing enabled: wake periodically to scan victims,
-                // backing off once the pool has stayed dry so a fully
-                // idle shard doesn't spin at the fast poll forever
-                let poll = if hungry_ticks > 8 { STEAL_POLL_IDLE } else { STEAL_POLL };
-                match rx.recv_timeout(poll) {
-                    Ok(req) => intake(req, cfg, vocab, metrics, ctx),
-                    Err(mpsc::RecvTimeoutError::Timeout) => {}
-                    Err(mpsc::RecvTimeoutError::Disconnected) => disconnected = true,
+                // stealing enabled: park on the pool-wide enqueue
+                // signal (no CPU burned while idle; ROADMAP item —
+                // this replaced a 500 µs poll loop)
+                match rx.try_recv() {
+                    Ok(msg) => intake(msg, cfg, vocab, metrics, ctx),
+                    Err(mpsc::TryRecvError::Empty) => ctx.signal.wait_past(seen, IDLE_PARK),
+                    Err(mpsc::TryRecvError::Disconnected) => disconnected = true,
                 }
             }
         }
+        seen = ctx.signal.epoch();
         loop {
             match rx.try_recv() {
-                Ok(req) => intake(req, cfg, vocab, metrics, ctx),
+                Ok(msg) => intake(msg, cfg, vocab, metrics, ctx),
                 Err(mpsc::TryRecvError::Empty) => break,
                 Err(mpsc::TryRecvError::Disconnected) => {
                     disconnected = true;
@@ -332,12 +565,19 @@ pub(crate) fn run_loop(
             }
         }
 
+        // --- drain via migration --------------------------------------
+        if migration && ctx.draining.load(Ordering::Relaxed) {
+            if let Some(reg) = ctx.registry.upgrade() {
+                migrate_out(backend, &mut inflight, &reg, metrics, ctx);
+            }
+        }
+
         // --- work stealing --------------------------------------------
         let mut lanes_used: usize = inflight.iter().map(|f| f.run.lanes()).sum();
         if steal_at > 0 && !ctx.draining.load(Ordering::Relaxed) {
             let hungry = lanes_used < steal_at && ctx.queue.lock().unwrap().is_empty();
             hungry_ticks = if hungry { hungry_ticks + 1 } else { 0 };
-            if hungry && hungry_ticks > 1 {
+            if hungry && (hungry_ticks > 1 || lanes_used == 0) {
                 if let Some(reg) = ctx.registry.upgrade() {
                     let stolen = reg.steal_into(ctx, max_lanes.saturating_sub(lanes_used));
                     if stolen > 0 {
@@ -362,47 +602,79 @@ pub(crate) fn run_loop(
                 }
                 q.remove(pos).expect("picked index in range")
             };
-            // run seed = f(request seed, prompt): decorrelates distinct
-            // problems sharing a wire seed while staying independent of
-            // admission order, shard placement AND work stealing
-            // (equivalence tests)
-            let seed = job.req.seed ^ hash::fnv1a_i32(&job.problem.tokens);
-            let mut provider = ShardPrefix { tier: ctx.tier.as_ref(), shard: ctx.shard };
-            match ProblemRun::start_with_cache(
-                backend,
-                cfg,
-                &job.problem,
-                job.req.method,
-                seed,
-                Some(&mut provider as &mut dyn PrefixProvider),
-            ) {
-                Ok(run) => {
-                    lanes_used += run.lanes();
-                    admitted += 1;
-                    {
-                        let mut m = metrics.lock().unwrap();
-                        m.record_admission_wait(job.enqueued.elapsed().as_secs_f64());
-                        m.record_shard_request(ctx.shard);
+            let QueuedJob { lanes: est, enqueued, work, .. } = job;
+            match work {
+                Work::Fresh { problem, method, seed: wire_seed, reply } => {
+                    // run seed = f(request seed, prompt): decorrelates
+                    // distinct problems sharing a wire seed while
+                    // staying independent of admission order, shard
+                    // placement AND work stealing (equivalence tests)
+                    let seed = wire_seed ^ hash::fnv1a_i32(&problem.tokens);
+                    let mut provider =
+                        ShardPrefix { tier: ctx.tier.as_ref(), shard: ctx.shard };
+                    match ProblemRun::start_with_cache(
+                        backend,
+                        cfg,
+                        &problem,
+                        method,
+                        seed,
+                        Some(&mut provider as &mut dyn PrefixProvider),
+                    ) {
+                        Ok(run) => {
+                            lanes_used += run.lanes();
+                            admitted += 1;
+                            {
+                                let mut m = metrics.lock().unwrap();
+                                m.record_admission_wait(enqueued.elapsed().as_secs_f64());
+                                m.record_shard_request(ctx.shard);
+                            }
+                            inflight.push(InFlight {
+                                run,
+                                method,
+                                gold: problem.answer,
+                                est,
+                                enqueued,
+                                admitted: Instant::now(),
+                                reply,
+                            });
+                        }
+                        Err(e) => {
+                            metrics.lock().unwrap().errors += 1;
+                            ctx.done(est);
+                            let _ = reply.send(Err(e));
+                        }
                     }
-                    inflight.push(InFlight {
-                        run,
-                        method: job.req.method,
-                        gold: job.problem.answer,
-                        est: job.lanes,
-                        enqueued: job.enqueued,
-                        admitted: Instant::now(),
-                        reply: job.req.reply,
-                    });
                 }
-                Err(e) => {
-                    metrics.lock().unwrap().errors += 1;
-                    ctx.done(job.lanes);
-                    let _ = job.req.reply.send(Err(e));
+                Work::Resume { run, method, gold, reply } => {
+                    // a migrated run: re-attach its lanes and continue
+                    // mid-solve. Its request was admitted (and counted)
+                    // on the original shard — no re-recorded admission
+                    // wait or shard-request here.
+                    match ProblemRun::attach(run, backend) {
+                        Ok(run) => {
+                            lanes_used += run.lanes();
+                            admitted += 1;
+                            inflight.push(InFlight {
+                                run,
+                                method,
+                                gold,
+                                est,
+                                enqueued,
+                                admitted: Instant::now(),
+                                reply,
+                            });
+                        }
+                        Err(e) => {
+                            metrics.lock().unwrap().errors += 1;
+                            ctx.done(est);
+                            let _ = reply.send(Err(e));
+                        }
+                    }
                 }
             }
         }
         // record observability gauges only on passes that carry work, so
-        // an idle steal-poll loop doesn't flood the queue-depth samples
+        // an idle loop doesn't flood the queue-depth samples
         if admitted > 0 || !inflight.is_empty() {
             let ts = ctx.tier.stats();
             let depth = ctx.queue.lock().unwrap().len();
@@ -466,6 +738,13 @@ pub(crate) fn run_loop(
                 i += 1;
             }
         }
+
+        // --- shed in-flight runs to requesting thieves ----------------
+        if migration && !ctx.draining.load(Ordering::Relaxed) {
+            if let Some(reg) = ctx.registry.upgrade() {
+                shed_to_thieves(backend, &mut inflight, &reg, metrics, ctx);
+            }
+        }
     }
     // drain: release this shard's tier handles and flush final gauges
     ctx.tier.clear_shard(ctx.shard, backend);
@@ -480,6 +759,7 @@ pub(crate) fn run_loop(
 mod tests {
     use super::*;
     use crate::backend::calibrated::CalibratedBackend;
+    use crate::config::StopRule;
     use crate::model::tokenizer;
 
     /// Spawn a calibrated-backend scheduler. When `gate` is given, the
@@ -743,5 +1023,12 @@ mod tests {
         // SPM methods clamp to the strategy pool
         assert_eq!(lane_estimate(Method::Parallel { n: 9, spm: true }, 5), 5);
         assert_eq!(lane_estimate(Method::Ssr { n: 9, tau: 7, stop: StopRule::Full }, 5), 5);
+    }
+
+    #[test]
+    fn pick_next_empty_queue() {
+        let q: VecDeque<QueuedJob> = VecDeque::new();
+        assert_eq!(pick_next(&q, AdmitPolicy::Fifo), None);
+        assert_eq!(pick_next(&q, AdmitPolicy::SmallestFirst), None);
     }
 }

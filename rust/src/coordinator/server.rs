@@ -32,6 +32,13 @@
 //!   <- {"ok":true, "drained":2, "drain_s":0.18, "shards_live":2}
 //!   -> {"op":"shutdown"}
 //!
+//! With `--autoscale on` a policy loop (`coordinator::autoscaler`)
+//! drives add/remove automatically from queue-depth and admission-wait
+//! EWMAs within `[--min-shards, --max-shards]`; its decisions surface
+//! as `scale_ups`/`scale_downs` in `{"op":"stats"}`, and live run
+//! migration (`--migrate`, default on) keeps its scale-down drains
+//! O(one step) (`migrations`/`migration_bytes` gauges).
+//!
 //! `latency_s` is enqueue-to-reply (it includes queue wait, reported
 //! separately as `queue_wait_s`). Concurrent `solve` requests from any
 //! number of connections interleave at step granularity and share
@@ -52,6 +59,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
+use super::autoscaler::Autoscaler;
 use super::engine::Method;
 use super::metrics::Metrics;
 use super::pool::{BackendPool, PoolHandle};
@@ -94,6 +102,9 @@ pub struct Server {
     started: Instant,
     shutdown: Arc<AtomicBool>,
     cfg: SsrConfig,
+    /// the policy loop when `--autoscale on`; stopped (and its pool
+    /// handle released) when the server shuts down
+    autoscaler: Option<Autoscaler>,
 }
 
 impl Server {
@@ -113,11 +124,19 @@ impl Server {
         let metrics = Arc::new(Mutex::new(Metrics::new()));
         let (sched, _joins) =
             BackendPool::spawn(cfg.clone(), vocab, Arc::clone(&metrics), backend_factory)?;
+        let autoscaler = cfg
+            .autoscale
+            .enabled
+            .then(|| Autoscaler::spawn(sched.clone(), Arc::clone(&metrics), &cfg));
 
         let listener =
             TcpListener::bind((host, port)).with_context(|| format!("binding {host}:{port}"))?;
         let addr = listener.local_addr()?.to_string();
-        log::info!("ssr server listening on {addr} ({} shard(s))", sched.shards());
+        log::info!(
+            "ssr server listening on {addr} ({} shard(s), autoscale={})",
+            sched.shards(),
+            cfg.autoscale.enabled
+        );
         Ok((
             Server {
                 addr,
@@ -126,6 +145,7 @@ impl Server {
                 started: Instant::now(),
                 shutdown: Arc::new(AtomicBool::new(false)),
                 cfg,
+                autoscaler,
             },
             listener,
         ))
@@ -159,6 +179,14 @@ impl Server {
         }
         pool.join();
         Ok(())
+    }
+
+    /// Stop the autoscaler loop (releases its pool handle). Called on
+    /// shutdown; also runs on drop.
+    pub fn stop_autoscaler(&mut self) {
+        if let Some(mut a) = self.autoscaler.take() {
+            a.stop();
+        }
     }
 
     pub fn metrics(&self) -> Arc<Mutex<Metrics>> {

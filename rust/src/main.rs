@@ -7,7 +7,10 @@
 //! ssr serve [--host 127.0.0.1] [--port 7878] [--backend ...] [--threads 4]
 //!           [--max-lanes 32] [--admission fifo|smallest-first]
 //!           [--shards N] [--placement least-loaded|affinity|round-robin]
-//!           [--steal-threshold L] [--min-shards N]
+//!           [--steal-threshold L] [--min-shards N] [--migrate on|off]
+//!           [--autoscale on|off] [--max-shards N] [--scale-up-wait S]
+//!           [--scale-up-queue Q] [--scale-down-occupancy F]
+//!           [--scale-interval-ms MS] [--scale-cooldown-ms MS]
 //! ssr exp   fig2|fig3|fig4|fig5|table1|gamma|all [--backend calibrated]
 //!           [--trials 6] [--problems 60]
 //! ssr selfcheck            # artifacts -> PJRT -> one SSR problem
@@ -24,10 +27,15 @@
 //! `{"op":"add_shard"}` / `{"op":"remove_shard","shard":i}` grow and
 //! drain it at runtime (bounded below by `--min-shards`), and
 //! `--steal-threshold L` lets under-occupied shards steal queued work
-//! from the most-loaded shard. `{"op":"stats"}` reports batch
+//! from the most-loaded shard. With `--migrate on` (the default),
+//! drains and steals move *in-flight* runs between shards at step
+//! boundaries (lane-state serialization on the Backend trait; drain =
+//! O(one step)), and `--autoscale on` runs the queue-driven policy loop
+//! (`coordinator::autoscaler`) that grows/shrinks the pool within
+//! `[--min-shards, --max-shards]`. `{"op":"stats"}` reports batch
 //! occupancy, queue depth, admission waits, per-shard request counts,
-//! steal/lifecycle/drain gauges and the model-time makespan alongside
-//! the latency percentiles.
+//! steal/migration/lifecycle/drain/scale gauges and the model-time
+//! makespan alongside the latency percentiles.
 
 use std::path::PathBuf;
 
@@ -150,14 +158,17 @@ fn run() -> Result<()> {
                 (*f)(&suite, seed)
             };
             println!(
-                "pool: shards={} (min {}) placement={:?} max_lanes={}/shard \
-                 steal_threshold={} admission={:?} prefix_reuse={} \
-                 prefix_cache_cap={} prefix_cache_bytes={}",
+                "pool: shards={} (min {} max {}) placement={:?} max_lanes={}/shard \
+                 steal_threshold={} migration={} autoscale={} admission={:?} \
+                 prefix_reuse={} prefix_cache_cap={} prefix_cache_bytes={}",
                 cfg.shards,
                 cfg.min_shards,
+                cfg.autoscale.max_shards,
                 cfg.placement,
                 cfg.max_lanes,
                 cfg.steal_threshold,
+                cfg.migration,
+                cfg.autoscale.enabled,
                 cfg.admission,
                 cfg.prefix.enabled,
                 cfg.prefix.capacity,

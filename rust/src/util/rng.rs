@@ -72,6 +72,19 @@ impl Rng {
         Rng::new(self.next_u64())
     }
 
+    /// The raw stream position. Together with [`Rng::from_state`] this
+    /// is the serialization seam lane migration uses: a stream restored
+    /// from a captured state continues with exactly the draws the
+    /// original would have made (splitmix64 state IS the position).
+    pub fn state(&self) -> u64 {
+        self.state
+    }
+
+    /// Resume a stream captured by [`Rng::state`].
+    pub fn from_state(state: u64) -> Rng {
+        Rng { state }
+    }
+
     /// Standard normal via Box–Muller (used by the calibrated backend's
     /// latency jitter).
     pub fn normal(&mut self) -> f64 {
@@ -156,6 +169,17 @@ mod tests {
         let mut sorted = xs.clone();
         sorted.sort_unstable();
         assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn state_roundtrip_resumes_the_stream() {
+        let mut a = Rng::new(17);
+        let _ = a.next_u64();
+        let _ = a.normal();
+        let mut b = Rng::from_state(a.state());
+        assert_eq!(a.next_u64(), b.next_u64());
+        assert_eq!(a.f64(), b.f64());
+        assert_eq!(a.normal(), b.normal());
     }
 
     #[test]

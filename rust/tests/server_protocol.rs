@@ -78,6 +78,12 @@ fn solve_stats_shutdown_roundtrip() {
     assert!(r.get_f64("admission_wait_mean_s").unwrap() >= 0.0);
     assert!(r.get_i64("queue_depth_max").unwrap() >= 0);
     assert!(r.get_f64("model_secs").unwrap() > 0.0);
+    // migration / autoscaler gauges are present (zero on a quiet
+    // single-shard pool with the policy off)
+    assert_eq!(r.get_i64("migrations").unwrap(), 0);
+    assert_eq!(r.get_i64("migration_bytes").unwrap(), 0);
+    assert_eq!(r.get_i64("scale_ups").unwrap(), 0);
+    assert_eq!(r.get_i64("scale_downs").unwrap(), 0);
 
     // shutdown
     let r = request(&mut stream, r#"{"op":"shutdown"}"#);

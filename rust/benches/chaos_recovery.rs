@@ -1,0 +1,231 @@
+//! Chaos-recovery bench (calibrated backend, no artifacts needed):
+//! the same seeded workload is served twice on a 2-shard pool — once
+//! fault-free, once under a deterministic fault schedule whose default
+//! (`panic_rate: 1.0, max_faults: 2`) panics the first two budgeted
+//! step calls, forcing two shard crashes with runs in flight. The
+//! supervisor respawns the shards and re-admits the lost runs
+//! (checkpoint resume or seed replay), and the bench asserts every
+//! request still completes with decisions identical to the fault-free
+//! pass. Throughput is solves per *virtual* model-second makespan, so
+//! the recovery tax (replayed step work) is deterministic and
+//! host-speed independent.
+//!
+//! `--fault-spec '<json>'` swaps in a custom schedule (same keys as
+//! the serve flag). Schedules with no lane-fatal faults and a fault
+//! budget within the bench's retry headroom keep the hard asserts
+//! (every request ok, decisions identical); unbounded or lane-fatal
+//! schedules only report, since quarantines and structured failures
+//! are then legitimate outcomes.
+//!
+//! Emits one BENCH_JSON line with `recovered_throughput` for the
+//! tracker and regression gate.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use ssr::backend::calibrated::CalibratedBackend;
+use ssr::backend::faulty::FaultInjector;
+use ssr::backend::Backend;
+use ssr::config::{FaultSpec, SsrConfig, StopRule};
+use ssr::coordinator::engine::Method;
+use ssr::coordinator::metrics::Metrics;
+use ssr::coordinator::pool::{BackendPool, PoolHandle};
+use ssr::coordinator::scheduler::SolveRequest;
+use ssr::model::tokenizer;
+use ssr::util::json;
+
+const JOBS: usize = 24;
+const SHARDS: usize = 2;
+const BACKEND_SEED: u64 = 0xC0DE;
+
+fn job(i: usize) -> (String, u64) {
+    (format!("{}+{}*{}", 2 + i % 5, 3 + i % 4, 2 + i % 3), (i * 97) as u64)
+}
+
+fn submit(
+    handle: &PoolHandle,
+    expr: &str,
+    seed: u64,
+) -> mpsc::Receiver<anyhow::Result<ssr::util::json::Value>> {
+    let (rtx, rrx) = mpsc::channel();
+    let method = Method::Ssr { n: 3, tau: 7, stop: StopRule::Full };
+    handle
+        .submit(SolveRequest { expr: expr.to_string(), method, seed, deadline_ms: 0, reply: rtx })
+        .expect("pool alive");
+    rrx
+}
+
+struct Report {
+    answers: Vec<Option<i64>>,
+    ok: usize,
+    makespan_s: f64,
+    throughput: f64,
+    wall_s: f64,
+    crashes: u64,
+    recovered: u64,
+    replayed: u64,
+    retries: u64,
+}
+
+/// Serve the whole workload concurrently; `spec: None` is the clean
+/// reference pass.
+fn run(spec: Option<FaultSpec>) -> anyhow::Result<Report> {
+    let mut cfg = SsrConfig::default();
+    cfg.shards = SHARDS;
+    // headroom so a bounded default schedule can never quarantine a run
+    cfg.recover_retries = 8;
+    if let Some(f) = spec {
+        cfg.fault = f;
+    }
+    let fault = cfg.fault;
+    let budget = FaultInjector::shared_budget(&fault);
+    let metrics = Arc::new(Mutex::new(Metrics::new()));
+    let (handle, joins) = BackendPool::spawn(
+        cfg,
+        tokenizer::builtin_vocab(),
+        Arc::clone(&metrics),
+        move |shard| {
+            let inner = Box::new(CalibratedBackend::for_suite("synth-math500", BACKEND_SEED)?)
+                as Box<dyn Backend>;
+            Ok(if fault.is_active() {
+                Box::new(FaultInjector::new(inner, fault, shard, budget.clone()))
+                    as Box<dyn Backend>
+            } else {
+                inner
+            })
+        },
+    )?;
+    let t0 = Instant::now();
+    let replies: Vec<_> = (0..JOBS)
+        .map(|i| {
+            let (expr, seed) = job(i);
+            submit(&handle, &expr, seed)
+        })
+        .collect();
+    let mut answers = Vec::with_capacity(JOBS);
+    let mut ok = 0usize;
+    for r in replies {
+        match r.recv().expect("reply") {
+            Ok(v) => {
+                ok += 1;
+                answers.push(v.get_i64("answer").ok());
+            }
+            Err(_) => answers.push(None),
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    drop(handle);
+    for j in joins {
+        j.join().unwrap();
+    }
+    let mm = metrics.lock().unwrap();
+    let makespan_s = mm.model_secs_makespan();
+    Ok(Report {
+        answers,
+        ok,
+        makespan_s,
+        throughput: JOBS as f64 / makespan_s.max(1e-9),
+        wall_s,
+        crashes: mm.shard_crashes,
+        recovered: mm.runs_recovered,
+        replayed: mm.runs_replayed,
+        retries: mm.retries,
+    })
+}
+
+/// `--fault-spec '<json>'` override; tolerant of extra cargo-bench args.
+fn fault_arg() -> anyhow::Result<Option<FaultSpec>> {
+    let args: Vec<String> = std::env::args().collect();
+    for w in args.windows(2) {
+        if w[0] == "--fault-spec" {
+            let mut f = FaultSpec::default();
+            f.apply_json(&json::Value::parse(&w[1])?)?;
+            return Ok(Some(f));
+        }
+    }
+    Ok(None)
+}
+
+fn main() -> anyhow::Result<()> {
+    let t_start = Instant::now();
+    let custom = fault_arg()?;
+    let spec = custom.unwrap_or_else(|| FaultSpec {
+        seed: 0xC0DE,
+        panic_rate: 1.0,
+        max_faults: 2,
+        ..FaultSpec::default()
+    });
+    println!(
+        "## chaos recovery: {JOBS} ssr-m3 jobs on {SHARDS} shards, clean vs faulted \
+         ({spec:?})"
+    );
+
+    let clean = run(None)?;
+    assert_eq!(clean.ok, JOBS, "clean pass must solve every job");
+    assert_eq!(clean.crashes, 0);
+
+    let faulted = run(Some(spec))?;
+    // No lane-fatal faults and a budget within the bench's retry
+    // headroom (recover_retries = 8) means no run can legitimately
+    // fail or be quarantined: every request must come back ok with
+    // decisions identical to the fault-free pass. A step call implies
+    // in-flight work, so any forced panic also implies recovery.
+    let strict = spec.lane_fatal_rate == 0.0 && spec.max_faults <= 8;
+    if strict {
+        assert_eq!(faulted.ok, JOBS, "a recovered pool must answer every request");
+        if spec.panic_rate > 0.0 || spec.resume_panic {
+            assert!(faulted.crashes >= 1, "the panic schedule never fired");
+            assert!(faulted.recovered >= 1, "crashed shards had runs in flight");
+        }
+        assert_eq!(
+            clean.answers, faulted.answers,
+            "recovered runs changed decisions vs the fault-free pass"
+        );
+    } else if clean.answers != faulted.answers {
+        eprintln!(
+            "[bench chaos_recovery] note: schedule changed outcomes \
+             ({} of {} ok) — expected for lane-fatal or unbounded schedules",
+            faulted.ok, JOBS
+        );
+    }
+
+    let ratio = faulted.throughput / clean.throughput.max(1e-12);
+    println!(
+        "  clean:   makespan {:8.2}s  {:.4} solves/virtual-s",
+        clean.makespan_s, clean.throughput
+    );
+    println!(
+        "  faulted: makespan {:8.2}s  {:.4} solves/virtual-s  x{:.3}  \
+         crashes {}  recovered {}  replayed {}  retries {}",
+        faulted.makespan_s,
+        faulted.throughput,
+        ratio,
+        faulted.crashes,
+        faulted.recovered,
+        faulted.replayed,
+        faulted.retries
+    );
+
+    let summary = json::obj(vec![
+        ("bench", json::s("chaos_recovery")),
+        ("jobs", json::i(JOBS as i64)),
+        ("shards", json::i(SHARDS as i64)),
+        ("clean_throughput", json::n(clean.throughput)),
+        ("recovered_throughput", json::n(faulted.throughput)),
+        ("recovery_ratio", json::n(ratio)),
+        ("shard_crashes", json::i(faulted.crashes as i64)),
+        ("runs_recovered", json::i(faulted.recovered as i64)),
+        ("runs_replayed", json::i(faulted.replayed as i64)),
+        ("retries", json::i(faulted.retries as i64)),
+        ("ok_replies", json::i(faulted.ok as i64)),
+        ("chaos_equivalent", ssr::util::json::Value::Bool(clean.answers == faulted.answers)),
+        ("wall_s", json::n(clean.wall_s + faulted.wall_s)),
+    ]);
+    println!("\nBENCH_JSON {}", summary.print());
+    println!(
+        "[bench chaos_recovery] completed in {:.2}s",
+        t_start.elapsed().as_secs_f64()
+    );
+    Ok(())
+}

@@ -40,7 +40,7 @@ fn submit(
 ) -> mpsc::Receiver<anyhow::Result<ssr::util::json::Value>> {
     let (rtx, rrx) = mpsc::channel();
     handle
-        .submit(SolveRequest { expr: expr.to_string(), method, seed, reply: rtx })
+        .submit(SolveRequest { expr: expr.to_string(), method, seed, deadline_ms: 0, reply: rtx })
         .expect("pool alive");
     rrx
 }

@@ -103,6 +103,7 @@ fn run_mode(label: &str, max_lanes: usize, shards: usize) -> anyhow::Result<Mode
                             expr: expr_for(c, j),
                             method: mixed_method(c * JOBS_PER_CLIENT + j),
                             seed: (c * 1009 + j) as u64,
+                            deadline_ms: 0,
                             reply: rtx,
                         })
                         .expect("pool alive");

@@ -1,0 +1,222 @@
+//! Deterministic fault injection — the chaos harness (DESIGN.md §13).
+//!
+//! [`FaultInjector`] wraps any [`Backend`] and injects failures into the
+//! hot step methods (`draft_step` / `score_step` / `rewrite_step` /
+//! `accept_step` / `target_step`) according to a seeded
+//! [`FaultSpec`](crate::config::FaultSpec) schedule:
+//!
+//! * **transient errors** — classified [`BackendError::transient`],
+//!   raised *before* the inner call so a retry re-executes the real
+//!   step exactly once (no decision drift);
+//! * **lane-fatal errors** — classified [`BackendError::lane_fatal`];
+//! * **stalls** — a bounded `thread::sleep`, for deadline/degradation
+//!   drills;
+//! * **panics** — a real `panic!` on the shard thread, exercising the
+//!   pool supervisor's catch-unwind / respawn / re-admission path;
+//! * **resume panics** — panic on the first step call after an
+//!   `import_lane_state`, targeting the crash-during-migration window.
+//!
+//! Determinism: each injector draws from its own splitmix64 stream
+//! seeded by `spec.seed ^ mix(shard)`, and every injection consumes one
+//! unit from a shared fault *budget* (`Arc<AtomicU64>`), so a test can
+//! say "exactly one panic, ever, pool-wide" and get the same schedule
+//! on every run — respawned shards receive fresh injectors but share
+//! the budget, so an exhausted budget stays exhausted.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::FaultSpec;
+use crate::util::rng::Rng;
+use crate::workload::Problem;
+
+use super::{
+    Backend, BackendError, BackendMeta, LaneSnapshot, PathId, PathStats, PrefillStats,
+    PrefixHandle, StepOutcome,
+};
+
+/// A [`Backend`] decorator injecting seeded faults into step calls.
+pub struct FaultInjector {
+    inner: Box<dyn Backend>,
+    spec: FaultSpec,
+    rng: Rng,
+    budget: Arc<AtomicU64>,
+    /// an `import_lane_state` succeeded and `resume_panic` is armed
+    armed_resume: bool,
+    calls: u64,
+}
+
+impl FaultInjector {
+    /// Build the shared fault budget for a spec — create it once and
+    /// clone the `Arc` into every injector (including respawns).
+    pub fn shared_budget(spec: &FaultSpec) -> Arc<AtomicU64> {
+        Arc::new(AtomicU64::new(spec.max_faults))
+    }
+
+    pub fn new(
+        inner: Box<dyn Backend>,
+        spec: FaultSpec,
+        shard: usize,
+        budget: Arc<AtomicU64>,
+    ) -> Self {
+        let salt = (shard as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let rng = Rng::new(spec.seed ^ salt);
+        FaultInjector { inner, spec, rng, budget, armed_resume: false, calls: 0 }
+    }
+
+    /// Consume one unit of the shared budget; injection only fires
+    /// while the budget is positive.
+    fn take_budget(&self) -> bool {
+        self.budget
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |b| b.checked_sub(1))
+            .is_ok()
+    }
+
+    /// Run the fault schedule for one step call. Raised errors happen
+    /// *before* the inner call, so a failed call has no side effects
+    /// and an in-place retry is sound.
+    fn before_step(&mut self, what: &str) -> Result<()> {
+        self.calls += 1;
+        let n = self.calls;
+        if self.armed_resume && self.spec.resume_panic && self.take_budget() {
+            self.armed_resume = false;
+            panic!("injected fault: panic on first {what} after lane import");
+        }
+        if self.spec.stall_rate > 0.0 && self.rng.chance(self.spec.stall_rate) && self.take_budget()
+        {
+            std::thread::sleep(std::time::Duration::from_millis(self.spec.stall_ms));
+        }
+        if self.spec.panic_rate > 0.0 && self.rng.chance(self.spec.panic_rate) && self.take_budget()
+        {
+            panic!("injected fault: shard panic ({what} call #{n})");
+        }
+        if self.spec.transient_rate > 0.0
+            && self.rng.chance(self.spec.transient_rate)
+            && self.take_budget()
+        {
+            return Err(anyhow::Error::new(BackendError::transient(format!(
+                "injected transient fault ({what} call #{n})"
+            ))));
+        }
+        if self.spec.lane_fatal_rate > 0.0
+            && self.rng.chance(self.spec.lane_fatal_rate)
+            && self.take_budget()
+        {
+            return Err(anyhow::Error::new(BackendError::lane_fatal(format!(
+                "injected lane-fatal fault ({what} call #{n})"
+            ))));
+        }
+        Ok(())
+    }
+}
+
+impl Backend for FaultInjector {
+    fn meta(&self) -> BackendMeta {
+        self.inner.meta()
+    }
+
+    fn select_scores(&mut self, problem: &Problem) -> Result<Vec<f32>> {
+        self.inner.select_scores(problem)
+    }
+
+    fn open_paths(
+        &mut self,
+        problem: &Problem,
+        strategies: &[Option<usize>],
+        seed: u64,
+        use_draft: bool,
+    ) -> Result<Vec<PathId>> {
+        self.inner.open_paths(problem, strategies, seed, use_draft)
+    }
+
+    fn prefill_prefix(
+        &mut self,
+        problem: &Problem,
+        use_draft: bool,
+        want_scores: bool,
+    ) -> Result<PrefixHandle> {
+        self.inner.prefill_prefix(problem, use_draft, want_scores)
+    }
+
+    fn prefix_scores(&mut self, handle: PrefixHandle) -> Result<Vec<f32>> {
+        self.inner.prefix_scores(handle)
+    }
+
+    fn fork_paths(
+        &mut self,
+        handle: PrefixHandle,
+        strategies: &[Option<usize>],
+        seed: u64,
+    ) -> Result<Vec<PathId>> {
+        self.inner.fork_paths(handle, strategies, seed)
+    }
+
+    fn release_prefix(&mut self, handle: PrefixHandle) -> Result<()> {
+        self.inner.release_prefix(handle)
+    }
+
+    fn prefix_bytes(&self, handle: PrefixHandle) -> u64 {
+        self.inner.prefix_bytes(handle)
+    }
+
+    fn prefill_stats(&self) -> PrefillStats {
+        self.inner.prefill_stats()
+    }
+
+    fn draft_step(&mut self, paths: &[PathId]) -> Result<Vec<StepOutcome>> {
+        self.before_step("draft_step")?;
+        self.inner.draft_step(paths)
+    }
+
+    fn score_step(&mut self, paths: &[PathId]) -> Result<Vec<u8>> {
+        self.before_step("score_step")?;
+        self.inner.score_step(paths)
+    }
+
+    fn rewrite_step(&mut self, paths: &[PathId]) -> Result<Vec<StepOutcome>> {
+        self.before_step("rewrite_step")?;
+        self.inner.rewrite_step(paths)
+    }
+
+    fn accept_step(&mut self, paths: &[PathId]) -> Result<()> {
+        self.before_step("accept_step")?;
+        self.inner.accept_step(paths)
+    }
+
+    fn target_step(&mut self, paths: &[PathId]) -> Result<Vec<StepOutcome>> {
+        self.before_step("target_step")?;
+        self.inner.target_step(paths)
+    }
+
+    fn export_lane_state(&mut self, path: PathId) -> Result<LaneSnapshot> {
+        self.inner.export_lane_state(path)
+    }
+
+    fn import_lane_state(&mut self, snapshot: LaneSnapshot) -> Result<PathId> {
+        let id = self.inner.import_lane_state(snapshot)?;
+        self.armed_resume = true;
+        Ok(id)
+    }
+
+    fn trace(&self, path: PathId) -> &[i32] {
+        self.inner.trace(path)
+    }
+
+    fn close_path(&mut self, path: PathId) -> Result<PathStats> {
+        self.inner.close_path(path)
+    }
+
+    fn parse_answer(&self, trace: &[i32]) -> Option<i64> {
+        self.inner.parse_answer(trace)
+    }
+
+    fn clock_secs(&self) -> f64 {
+        self.inner.clock_secs()
+    }
+
+    fn score_histogram(&self) -> crate::util::stats::Histogram {
+        self.inner.score_histogram()
+    }
+}

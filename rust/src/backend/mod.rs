@@ -31,6 +31,7 @@
 //! pinned to their prefill batch group (PJRT caches).
 
 pub mod calibrated;
+pub mod faulty;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 pub mod slotmap;
@@ -38,6 +39,81 @@ pub mod slotmap;
 use anyhow::Result;
 
 use crate::workload::{Family, Problem};
+
+/// Severity taxonomy for backend failures (DESIGN.md §13).
+///
+/// Every fallible `Backend` method keeps returning `anyhow::Result`;
+/// a backend that can say *how bad* a failure is attaches a
+/// [`BackendError`] as the error's root cause and the serving layer
+/// recovers accordingly. Errors with no `BackendError` in their chain
+/// are treated as [`FaultSeverity::LaneFatal`] — the conservative
+/// middle: the affected runs fail with a structured reply, the shard
+/// survives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSeverity {
+    /// The call had no side effects and may be retried in place
+    /// (engine retries a bounded number of times, then escalates to
+    /// lane-fatal). Think: transient allocator pressure, a dropped
+    /// device stream.
+    Transient,
+    /// The lanes touched by the call are unrecoverable but the backend
+    /// itself is still sound: the scheduler aborts the affected runs
+    /// and replies `{"ok":false,...}`; the shard keeps serving.
+    LaneFatal,
+    /// The backend's internal state can no longer be trusted. The
+    /// scheduler escalates to a shard panic so the pool supervisor
+    /// tears the shard down, respawns it from the stored factory, and
+    /// re-admits its runs elsewhere (DESIGN.md §13).
+    ShardFatal,
+}
+
+/// A classified backend failure. Construct via the severity helpers and
+/// return through `anyhow` as usual: `bail!(BackendError::transient("..."))`
+/// works because `BackendError: std::error::Error`.
+#[derive(Debug, Clone)]
+pub struct BackendError {
+    pub severity: FaultSeverity,
+    pub what: String,
+}
+
+impl BackendError {
+    pub fn new(severity: FaultSeverity, what: impl Into<String>) -> Self {
+        BackendError { severity, what: what.into() }
+    }
+    pub fn transient(what: impl Into<String>) -> Self {
+        Self::new(FaultSeverity::Transient, what)
+    }
+    pub fn lane_fatal(what: impl Into<String>) -> Self {
+        Self::new(FaultSeverity::LaneFatal, what)
+    }
+    pub fn shard_fatal(what: impl Into<String>) -> Self {
+        Self::new(FaultSeverity::ShardFatal, what)
+    }
+}
+
+impl std::fmt::Display for BackendError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let sev = match self.severity {
+            FaultSeverity::Transient => "transient",
+            FaultSeverity::LaneFatal => "lane-fatal",
+            FaultSeverity::ShardFatal => "shard-fatal",
+        };
+        write!(f, "{sev} backend error: {}", self.what)
+    }
+}
+
+impl std::error::Error for BackendError {}
+
+/// Classify an `anyhow` error by walking its chain for a
+/// [`BackendError`]; unclassified errors default to lane-fatal.
+pub fn severity_of(err: &anyhow::Error) -> FaultSeverity {
+    for cause in err.chain() {
+        if let Some(be) = cause.downcast_ref::<BackendError>() {
+            return be.severity;
+        }
+    }
+    FaultSeverity::LaneFatal
+}
 
 /// Opaque per-path handle issued by a backend.
 pub type PathId = usize;

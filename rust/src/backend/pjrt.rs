@@ -49,7 +49,7 @@ struct LaneGroup {
     batch: usize,
 }
 
-#[allow(dead_code)] // lane/prompt_len/seed kept for diagnostics
+#[allow(dead_code)] // lane/prompt_len kept for diagnostics
 struct PathState {
     group: usize,
     lane: usize,
@@ -105,7 +105,6 @@ pub struct PjrtBackend {
     pub max_steps: usize,
     /// 0..=9 score histogram across all scored steps (fig5)
     pub score_hist: crate::util::stats::Histogram,
-    seed_counter: i32,
 }
 
 impl PjrtBackend {
@@ -126,7 +125,6 @@ impl PjrtBackend {
             temp: 0.7,
             max_steps: MAX_STEPS_DEFAULT,
             score_hist: crate::util::stats::Histogram::new(10),
-            seed_counter: 1,
         })
     }
 
@@ -157,9 +155,25 @@ impl PjrtBackend {
         Ok(())
     }
 
-    fn next_seed(&mut self) -> i32 {
-        self.seed_counter = self.seed_counter.wrapping_add(0x9E37);
-        self.seed_counter
+    /// Span-sampling seed for one step call, derived purely from the
+    /// participating lanes' own state (per-lane seed x position) — NOT
+    /// from a backend-global counter. A lane whose `LaneSnapshot` is
+    /// exported and re-imported on another backend (migration, crash
+    /// recovery; DESIGN.md §13) therefore samples the same tokens the
+    /// original would have: the compiled span entry takes one scalar
+    /// seed per call, and this makes that scalar a function of state
+    /// the snapshot carries rather than of backend call history.
+    fn span_seed(&self, paths: &[PathId], use_target: bool) -> i32 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for &p in paths {
+            let st = &self.paths[p];
+            let f = if use_target { st.frontier_t } else { st.frontier_d };
+            for w in [st.seed as u64, st.trace.len() as u64, f as u64] {
+                h ^= w;
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        }
+        h as i32
     }
 
     /// Map mean token log-prob to the paper's 0..9 scale:
@@ -207,7 +221,7 @@ impl PjrtBackend {
             }
         }
         let (pos, cur) = self.group_inputs(group, !use_target);
-        let seed = self.next_seed();
+        let seed = self.span_seed(paths, use_target);
         let g = &mut self.groups[group];
         let out = if use_target {
             self.target.span(&self.rt, &mut g.target_cache, &pos, &cur, self.temp, seed)?

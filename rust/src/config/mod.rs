@@ -206,6 +206,80 @@ impl AutoscaleCfg {
     }
 }
 
+/// Deterministic fault-injection schedule (`backend::faulty`,
+/// DESIGN.md §13). All rates are per *step call* probabilities drawn
+/// from a splitmix64 stream seeded by `seed` (mixed with the shard id),
+/// and every injected fault consumes one unit of a pool-wide budget
+/// (`max_faults`), so chaos schedules are reproducible down to the
+/// individual call. Inactive (all-zero) by default; enable via the
+/// `fault` config block or the `--fault-spec '<json>'` flag.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultSpec {
+    /// seed of the injection schedule stream
+    pub seed: u64,
+    /// probability a step call raises a retryable transient error
+    pub transient_rate: f64,
+    /// probability a step call raises a lane-fatal error (the affected
+    /// runs fail with a structured reply; the shard survives)
+    pub lane_fatal_rate: f64,
+    /// probability a step call panics the shard thread (exercises
+    /// supervision, respawn, and run re-admission)
+    pub panic_rate: f64,
+    /// probability a step call stalls for `stall_ms` (deadline drills)
+    pub stall_rate: f64,
+    /// stall duration in milliseconds
+    pub stall_ms: u64,
+    /// panic on the first step call after an `import_lane_state` —
+    /// targets the crash-during-migration / crash-during-recovery window
+    pub resume_panic: bool,
+    /// pool-wide cap on injected faults (shared across shards and
+    /// respawns); `u64::MAX` = unbounded
+    pub max_faults: u64,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec {
+            seed: 0,
+            transient_rate: 0.0,
+            lane_fatal_rate: 0.0,
+            panic_rate: 0.0,
+            stall_rate: 0.0,
+            stall_ms: 0,
+            resume_panic: false,
+            max_faults: u64::MAX,
+        }
+    }
+}
+
+impl FaultSpec {
+    /// Whether any fault can ever fire — gates the `FaultInjector` wrap.
+    pub fn is_active(&self) -> bool {
+        self.transient_rate > 0.0
+            || self.lane_fatal_rate > 0.0
+            || self.panic_rate > 0.0
+            || self.stall_rate > 0.0
+            || self.resume_panic
+    }
+
+    pub fn apply_json(&mut self, v: &Value) -> Result<()> {
+        for (k, val) in v.obj()? {
+            match k.as_str() {
+                "seed" => self.seed = val.i64()? as u64,
+                "transient_rate" => self.transient_rate = val.f64()?,
+                "lane_fatal_rate" => self.lane_fatal_rate = val.f64()?,
+                "panic_rate" => self.panic_rate = val.f64()?,
+                "stall_rate" => self.stall_rate = val.f64()?,
+                "stall_ms" => self.stall_ms = val.i64()? as u64,
+                "resume_panic" => self.resume_panic = val.bool()?,
+                "max_faults" => self.max_faults = val.i64()? as u64,
+                other => bail!("unknown fault key `{other}`"),
+            }
+        }
+        Ok(())
+    }
+}
+
 fn parse_bool(s: &str) -> Result<bool> {
     Ok(match s {
         "on" | "true" | "1" | "yes" => true,
@@ -261,6 +335,17 @@ pub struct SsrConfig {
     pub autoscale: AutoscaleCfg,
     /// shared-prefix prefill + cross-request prefix cache / shared tier
     pub prefix: PrefixCacheCfg,
+    /// default per-request deadline in milliseconds, enforced at step
+    /// boundaries; on expiry the run finalizes from the votes collected
+    /// so far and replies `degraded:true`. 0 = no deadline. Overridable
+    /// per request via the `deadline_ms` wire field (DESIGN.md §13)
+    pub deadline_ms: u64,
+    /// per-run crash-recovery retry budget: how many times a run lost
+    /// to a shard crash is re-admitted before it is quarantined and
+    /// failed with a structured reply (DESIGN.md §13)
+    pub recover_retries: u32,
+    /// deterministic fault-injection schedule (inactive by default)
+    pub fault: FaultSpec,
 }
 
 impl Default for SsrConfig {
@@ -284,6 +369,9 @@ impl Default for SsrConfig {
             migration: true,
             autoscale: AutoscaleCfg::default(),
             prefix: PrefixCacheCfg::default(),
+            deadline_ms: 0,
+            recover_retries: 2,
+            fault: FaultSpec::default(),
         }
     }
 }
@@ -311,6 +399,9 @@ impl SsrConfig {
                 "migration" => self.migration = val.bool()?,
                 "autoscale" => self.autoscale.apply_json(val)?,
                 "prefix_cache" => self.prefix.apply_json(val)?,
+                "deadline_ms" => self.deadline_ms = val.i64()? as u64,
+                "recover_retries" => self.recover_retries = val.i64()? as u32,
+                "fault" => self.fault.apply_json(val)?,
                 other => bail!("unknown config key `{other}`"),
             }
         }
@@ -370,6 +461,12 @@ impl SsrConfig {
         }
         self.prefix.capacity = args.opt_usize("prefix-cache-cap", self.prefix.capacity)?;
         self.prefix.max_bytes = args.opt_u64("prefix-cache-bytes", self.prefix.max_bytes)?;
+        self.deadline_ms = args.opt_u64("deadline-ms", self.deadline_ms)?;
+        self.recover_retries = args.opt_u64("recover-retries", self.recover_retries as u64)? as u32;
+        if let Some(s) = args.opt("fault-spec") {
+            let v = Value::parse(s).with_context(|| format!("parsing --fault-spec `{s}`"))?;
+            self.fault.apply_json(&v)?;
+        }
         self.validate()
     }
 
@@ -443,6 +540,23 @@ impl SsrConfig {
         // bound keeps the cache's O(capacity) LRU eviction scan cheap
         if self.prefix.capacity > 4096 {
             bail!("prefix_cache.capacity must be <= 4096, got {}", self.prefix.capacity);
+        }
+        if self.recover_retries > 16 {
+            bail!("recover_retries must be <= 16, got {}", self.recover_retries);
+        }
+        let f = &self.fault;
+        for (name, rate) in [
+            ("transient_rate", f.transient_rate),
+            ("lane_fatal_rate", f.lane_fatal_rate),
+            ("panic_rate", f.panic_rate),
+            ("stall_rate", f.stall_rate),
+        ] {
+            if !(0.0..=1.0).contains(&rate) {
+                bail!("fault.{name} must be in [0, 1], got {rate}");
+            }
+        }
+        if f.stall_ms > 60_000 {
+            bail!("fault.stall_ms must be <= 60000, got {}", f.stall_ms);
         }
         Ok(())
     }

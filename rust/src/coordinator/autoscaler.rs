@@ -32,6 +32,14 @@
 //! sampled signals so the hysteresis/cooldown behavior is unit-testable
 //! without threads; the [`Autoscaler`] wrapper owns the sampling thread
 //! and stops promptly on drop (condvar, not sleep).
+//!
+//! Fault interaction (DESIGN.md §13): every signal the policy consumes
+//! comes from `PoolHandle::sample_signals` / `shard_loads`, which count
+//! only *healthy* shards — a crashed shard mid-respawn is invisible to
+//! the policy (it can neither inflate capacity nor be picked as a
+//! scale-down victim), and `remove_shard`'s `min_shards` floor is
+//! likewise clamped against healthy shards, so supervision and
+//! autoscaling never fight over the same slot.
 
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
@@ -39,6 +47,7 @@ use std::time::Duration;
 use super::metrics::Metrics;
 use super::pool::PoolHandle;
 use crate::config::{AutoscaleCfg, SsrConfig};
+use crate::util::sync::lock_ok;
 
 /// One evaluation's worth of pool signals.
 #[derive(Debug, Clone, Copy)]
@@ -171,9 +180,10 @@ impl Autoscaler {
                 loop {
                     {
                         let (lock, cv) = &*stop2;
-                        let guard = lock.lock().unwrap();
-                        let (guard, _) =
-                            cv.wait_timeout_while(guard, interval, |s| !*s).unwrap();
+                        let guard = lock_ok(lock);
+                        let (guard, _) = cv
+                            .wait_timeout_while(guard, interval, |s| !*s)
+                            .unwrap_or_else(|e| e.into_inner());
                         if *guard {
                             break;
                         }
@@ -193,7 +203,7 @@ impl Autoscaler {
                     match policy.observe(&s) {
                         Some(Action::Up) => match handle.add_shard() {
                             Ok(id) => {
-                                metrics.lock().unwrap().record_scale_event(true);
+                                lock_ok(&metrics).record_scale_event(true);
                                 log::info!(
                                     "autoscaler: +shard {id} ({} live; wait ewma breach)",
                                     handle.shards()
@@ -211,7 +221,7 @@ impl Autoscaler {
                             if let Some(id) = victim {
                                 match handle.remove_shard(id) {
                                     Ok(drain_s) => {
-                                        metrics.lock().unwrap().record_scale_event(false);
+                                        lock_ok(&metrics).record_scale_event(false);
                                         log::info!(
                                             "autoscaler: -shard {id} (drained {drain_s:.3}s, \
                                              {} live)",
@@ -238,7 +248,7 @@ impl Autoscaler {
     pub fn stop(&mut self) {
         {
             let (lock, cv) = &*self.stop;
-            *lock.lock().unwrap() = true;
+            *lock_ok(lock) = true;
             cv.notify_all();
         }
         if let Some(j) = self.join.take() {

@@ -22,7 +22,7 @@ use anyhow::Result;
 use super::aggregation::{aggregate, Decision, PathVote};
 use super::prefix::{Acquired, PrefixCache, PrefixProvider};
 use super::spm;
-use crate::backend::{Backend, LaneSnapshot, PathId, StepOutcome};
+use crate::backend::{severity_of, Backend, FaultSeverity, LaneSnapshot, PathId, StepOutcome};
 use crate::config::{Selection, SsrConfig, StopRule};
 use crate::util::rng::Rng;
 use crate::workload::Problem;
@@ -142,11 +142,39 @@ pub struct StepResult {
 #[derive(Debug, Clone, Default)]
 pub struct TickCalls {
     pub lanes_per_call: Vec<usize>,
+    /// transient backend errors absorbed by in-place retry this tick
+    pub retries: u64,
 }
 
 impl TickCalls {
     fn record(&mut self, lanes: usize) {
         self.lanes_per_call.push(lanes);
+    }
+}
+
+/// In-place retry budget for [`FaultSeverity::Transient`] backend
+/// errors within one step call. Transient errors are raised *before*
+/// the backend mutates lane state (that is the contract that makes
+/// them transient), so re-issuing the identical call is sound and the
+/// run's decisions are unchanged. A transient that survives the budget
+/// escalates to the caller as-is and is handled like a lane-fatal
+/// error (DESIGN.md §13).
+const TRANSIENT_RETRIES: u32 = 3;
+
+fn with_transient_retry<T>(retries: &mut u64, mut call: impl FnMut() -> Result<T>) -> Result<T> {
+    let mut attempts = 0u32;
+    loop {
+        match call() {
+            Ok(v) => return Ok(v),
+            Err(e)
+                if attempts < TRANSIENT_RETRIES
+                    && severity_of(&e) == FaultSeverity::Transient =>
+            {
+                attempts += 1;
+                *retries += 1;
+            }
+            Err(e) => return Err(e),
+        }
     }
 }
 
@@ -196,7 +224,10 @@ pub struct ProblemRun {
 /// A mid-solve run detached from its shard: the decision core plus one
 /// exported [`LaneSnapshot`] per lane. `Send` — it is the unit that
 /// travels when a drain or a steal migrates in-flight work
-/// (`coordinator::pool`, DESIGN.md §12).
+/// (`coordinator::pool`, DESIGN.md §12). `Clone` — the recovery layer
+/// keeps a copy as a step-boundary checkpoint so a crash on the
+/// receiving shard can re-admit the run elsewhere (DESIGN.md §13).
+#[derive(Clone)]
 pub struct DetachedRun {
     core: RunCore,
     lanes: Vec<LaneSnapshot>,
@@ -409,6 +440,14 @@ impl ProblemRun {
         }
     }
 
+    /// Stop the run at the current step boundary regardless of lane
+    /// state — deadline-expiry degradation (DESIGN.md §13). A later
+    /// [`ProblemRun::finish`] closes the lanes and votes from whatever
+    /// answers were collected so far (possibly none).
+    pub fn force_stop(&mut self) {
+        self.core.stopped = true;
+    }
+
     /// Best-effort close of every lane without voting — the scheduler's
     /// failure path. Releases backend lane state (trace buffers,
     /// PJRT cache pins) when a run is dropped mid-flight; close errors
@@ -591,9 +630,9 @@ pub fn step_tick(backend: &mut dyn Backend, runs: &mut [&mut ProblemRun]) -> Res
 
     for group in call_groups(spec, meta.cross_request_batch, chunk) {
         let ids: Vec<PathId> = group.iter().map(|&(_, id)| id).collect();
-        let outs = backend.draft_step(&ids)?;
+        let outs = with_transient_retry(&mut calls.retries, || backend.draft_step(&ids))?;
         calls.record(ids.len());
-        let scores = backend.score_step(&ids)?;
+        let scores = with_transient_retry(&mut calls.retries, || backend.score_step(&ids))?;
         calls.record(ids.len());
 
         let mut acc: Vec<(usize, PathId, StepOutcome, u8)> = Vec::new();
@@ -607,11 +646,12 @@ pub fn step_tick(backend: &mut dyn Backend, runs: &mut [&mut ProblemRun]) -> Res
         }
         if !acc.is_empty() {
             let acc_ids: Vec<PathId> = acc.iter().map(|x| x.1).collect();
-            backend.accept_step(&acc_ids)?;
+            with_transient_retry(&mut calls.retries, || backend.accept_step(&acc_ids))?;
         }
         if !rej.is_empty() {
             let rej_ids: Vec<PathId> = rej.iter().map(|x| x.1).collect();
-            let rewritten = backend.rewrite_step(&rej_ids)?;
+            let rewritten =
+                with_transient_retry(&mut calls.retries, || backend.rewrite_step(&rej_ids))?;
             calls.record(rej_ids.len());
             // rewritten steps replace the rejected outcome and are
             // recorded with score 9 (paper §3.2)
@@ -626,7 +666,7 @@ pub fn step_tick(backend: &mut dyn Backend, runs: &mut [&mut ProblemRun]) -> Res
 
     for group in call_groups(tgt, meta.cross_request_batch, chunk) {
         let ids: Vec<PathId> = group.iter().map(|&(_, id)| id).collect();
-        let outs = backend.target_step(&ids)?;
+        let outs = with_transient_retry(&mut calls.retries, || backend.target_step(&ids))?;
         calls.record(ids.len());
         // target-generated steps carry full target confidence
         for (&(ri, id), o) in group.iter().zip(outs) {

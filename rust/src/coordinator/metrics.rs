@@ -91,6 +91,22 @@ pub struct Metrics {
     pub drains: u64,
     pub drain_secs_sum: f64,
     pub drain_secs_max: f64,
+    /// fault-tolerance counters (DESIGN.md §13)
+    /// shard threads that panicked and were caught by the supervisor
+    pub shard_crashes: u64,
+    /// admitted runs re-homed after a crash (checkpoint or replay)
+    pub runs_recovered: u64,
+    /// subset of `runs_recovered` replayed from scratch via the
+    /// placement-invariant run seed (no checkpoint was available)
+    pub runs_replayed: u64,
+    /// transient backend errors absorbed by in-place step retries
+    pub retries: u64,
+    /// poison runs refused after exhausting their crash-retry budget
+    pub quarantined: u64,
+    /// per-request deadlines that expired at a step boundary
+    pub deadline_expirations: u64,
+    /// replies finalized early from partial votes (`degraded:true`)
+    pub degraded_replies: u64,
 }
 
 impl Metrics {
@@ -132,6 +148,13 @@ impl Metrics {
             drains: 0,
             drain_secs_sum: 0.0,
             drain_secs_max: 0.0,
+            shard_crashes: 0,
+            runs_recovered: 0,
+            runs_replayed: 0,
+            retries: 0,
+            quarantined: 0,
+            deadline_expirations: 0,
+            degraded_replies: 0,
         }
     }
 
@@ -389,6 +412,13 @@ impl Metrics {
             ("scale_downs", i(self.scale_downs as i64)),
             ("drain_mean_s", n(self.mean_drain_secs())),
             ("drain_max_s", n(self.drain_secs_max)),
+            ("shard_crashes", i(self.shard_crashes as i64)),
+            ("runs_recovered", i(self.runs_recovered as i64)),
+            ("runs_replayed", i(self.runs_replayed as i64)),
+            ("retries", i(self.retries as i64)),
+            ("quarantined", i(self.quarantined as i64)),
+            ("deadline_expirations", i(self.deadline_expirations as i64)),
+            ("degraded_replies", i(self.degraded_replies as i64)),
         ])
     }
 }
@@ -568,6 +598,26 @@ mod tests {
         m.set_shard_clock(7, 9.0);
         m.retire_shard(7);
         assert!((m.model_secs_makespan() - 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fault_tolerance_counters_surface_in_summary() {
+        let mut m = Metrics::new();
+        m.shard_crashes += 1;
+        m.runs_recovered += 2;
+        m.runs_replayed += 1;
+        m.retries += 3;
+        m.quarantined += 1;
+        m.deadline_expirations += 2;
+        m.degraded_replies += 2;
+        let v = m.summary_json(1.0);
+        assert_eq!(v.get_i64("shard_crashes").unwrap(), 1);
+        assert_eq!(v.get_i64("runs_recovered").unwrap(), 2);
+        assert_eq!(v.get_i64("runs_replayed").unwrap(), 1);
+        assert_eq!(v.get_i64("retries").unwrap(), 3);
+        assert_eq!(v.get_i64("quarantined").unwrap(), 1);
+        assert_eq!(v.get_i64("deadline_expirations").unwrap(), 2);
+        assert_eq!(v.get_i64("degraded_replies").unwrap(), 2);
     }
 
     #[test]

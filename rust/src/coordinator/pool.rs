@@ -73,7 +73,8 @@
 //! threads hold only a `Weak` registry reference, so they never keep
 //! their own channels alive.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex, RwLock};
@@ -83,11 +84,14 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use super::metrics::Metrics;
 use super::prefix::SharedPrefixTier;
-use super::scheduler::{self, lane_estimate, QueuedJob, ShardCtx, ShardMsg, SolveRequest};
+use super::scheduler::{
+    self, lane_estimate, QueuedJob, RunTicket, ShardCtx, ShardMsg, SolveRequest, TicketMap, Work,
+};
 use crate::backend::Backend;
 use crate::config::{PlacePolicy, SsrConfig};
 use crate::runtime::Vocab;
 use crate::util::hash;
+use crate::util::sync::{lock_ok, read_ok, write_ok};
 
 /// Hard cap on concurrently live shards (matches `SsrConfig::validate`).
 const MAX_SHARDS: usize = 64;
@@ -126,7 +130,7 @@ impl WorkSignal {
         if self.waiters.load(Ordering::SeqCst) > 0 {
             // enter/exit the lock so a waiter between its epoch check
             // and cv.wait cannot miss the notify
-            drop(self.lock.lock().unwrap());
+            drop(lock_ok(&self.lock));
             self.cv.notify_all();
         }
     }
@@ -138,14 +142,17 @@ impl WorkSignal {
     /// Park until the epoch moves past `seen` (or the safety timeout).
     pub(crate) fn wait_past(&self, seen: u64, timeout: Duration) {
         let deadline = Instant::now() + timeout;
-        let mut guard = self.lock.lock().unwrap();
+        let mut guard = lock_ok(&self.lock);
         self.waiters.fetch_add(1, Ordering::SeqCst);
         while self.epoch.load(Ordering::SeqCst) == seen {
             let now = Instant::now();
             if now >= deadline {
                 break;
             }
-            let (g, _) = self.cv.wait_timeout(guard, deadline - now).unwrap();
+            let (g, _) = self
+                .cv
+                .wait_timeout(guard, deadline - now)
+                .unwrap_or_else(|e| e.into_inner());
             guard = g;
         }
         self.waiters.fetch_sub(1, Ordering::SeqCst);
@@ -180,6 +187,20 @@ pub(crate) struct ShardSlot {
     pub(crate) load: Arc<AtomicU64>,
     draining: Arc<AtomicBool>,
     pub(crate) shed: Arc<Mutex<Vec<ShedRequest>>>,
+    /// the shard's admitted-run re-admission tickets (crash recovery,
+    /// DESIGN.md §13)
+    tickets: TicketMap,
+    /// set the instant the shard thread panics, before recovery
+    /// unpublishes the slot: placement, routing fallback and the
+    /// autoscaler's signals all skip dead slots, so the crash window
+    /// degrades capacity instead of routing into a corpse
+    dead: Arc<AtomicBool>,
+}
+
+impl ShardSlot {
+    fn healthy(&self) -> bool {
+        !self.dead.load(Ordering::SeqCst)
+    }
 }
 
 /// Per-shard teardown state, kept out of the (Sync) placement snapshot:
@@ -209,6 +230,11 @@ fn send_with_fallback(
     let mut msg = msg;
     for attempt in 0..n {
         let s = &slots[(first + attempt) % n];
+        // a crashed shard's channel may still accept sends (its rx
+        // outlives the panic for recovery draining) — skip it outright
+        if !s.healthy() {
+            continue;
+        }
         s.load.fetch_add(est, Ordering::Relaxed);
         match s.tx.send(msg) {
             Ok(()) => return Ok(()),
@@ -238,13 +264,22 @@ pub(crate) struct ShardRegistry {
     slots: RwLock<Arc<Vec<ShardSlot>>>,
     /// serializes lifecycle ops and owns each shard's teardown state
     lifecycle: Mutex<HashMap<usize, ShardHook>>,
+    /// placement-invariant run seeds of poison runs: work that crashed
+    /// its shard more than `recover_retries` times is refused at
+    /// admission instead of taking down another shard (DESIGN.md §13)
+    quarantine: Mutex<HashSet<u64>>,
     pub(crate) signal: Arc<WorkSignal>,
 }
 
 impl ShardRegistry {
     /// The current immutable placement snapshot.
     pub(crate) fn snapshot(&self) -> Arc<Vec<ShardSlot>> {
-        Arc::clone(&self.slots.read().unwrap())
+        Arc::clone(&read_ok(&self.slots))
+    }
+
+    /// Is this placement-invariant run seed on the poison list?
+    pub(crate) fn is_quarantined(&self, run_seed: u64) -> bool {
+        lock_ok(&self.quarantine).contains(&run_seed)
     }
 
     /// Spawn one shard thread for `id` and return its snapshot slot +
@@ -260,6 +295,8 @@ impl ShardRegistry {
         let load = Arc::new(AtomicU64::new(0));
         let draining = Arc::new(AtomicBool::new(false));
         let shed = Arc::new(Mutex::new(Vec::new()));
+        let tickets: TicketMap = Arc::new(Mutex::new(HashMap::new()));
+        let dead = Arc::new(AtomicBool::new(false));
         let ctx = ShardCtx {
             shard: id,
             tier: Arc::clone(&self.tier),
@@ -267,16 +304,21 @@ impl ShardRegistry {
             queue: Arc::clone(&queue),
             draining: Arc::clone(&draining),
             shed: Arc::clone(&shed),
+            tickets: Arc::clone(&tickets),
             signal: Arc::clone(&self.signal),
             registry: Arc::downgrade(self),
         };
         let cfg = self.cfg.clone();
         let vocab = self.vocab.clone();
         let metrics = Arc::clone(&self.metrics);
+        let dead_flag = Arc::clone(&dead);
         let join = std::thread::Builder::new()
             .name(format!("ssr-shard-{id}"))
             .spawn(move || {
-                // dropped when the thread exits — the drain signal
+                // dropped when the thread exits — the drain signal.
+                // Held through crash recovery too, so a concurrent
+                // remove_shard keeps blocking until the dead shard's
+                // work has been re-homed.
                 let _done = done_tx;
                 // build the backend via a briefly-upgraded registry ref,
                 // then drop the strong ref before serving: a shard that
@@ -286,16 +328,195 @@ impl ShardRegistry {
                     Some(reg) => (reg.factory)(id),
                     None => return,
                 };
-                match backend {
-                    Ok(mut b) => {
-                        scheduler::run_loop(b.as_mut(), &cfg, &vocab, rx, &metrics, &ctx)
+                let mut b = match backend {
+                    Ok(b) => b,
+                    Err(e) => {
+                        log::error!("shard {id} backend init failed: {e:#}");
+                        dead_flag.store(true, Ordering::SeqCst);
+                        return;
                     }
-                    Err(e) => log::error!("shard {id} backend init failed: {e:#}"),
+                };
+                // supervision (DESIGN.md §13): a panic on the shard
+                // thread — injected, shard-fatal escalation, or a plain
+                // bug — is caught here and recovery runs on this same
+                // thread: mark dead, respawn a replacement, re-admit
+                // the lost work onto the survivors
+                let crashed = catch_unwind(AssertUnwindSafe(|| {
+                    scheduler::run_loop(b.as_mut(), &cfg, &vocab, &rx, &metrics, &ctx);
+                }))
+                .is_err();
+                if crashed {
+                    dead_flag.store(true, Ordering::SeqCst);
+                    drop(b); // the backend's state is suspect: discard
+                    if let Some(reg) = ctx.registry.upgrade() {
+                        reg.recover_shard(id, &ctx, &rx);
+                    }
                 }
             })
             .with_context(|| format!("spawning scheduler shard {id}"))?;
-        let slot = ShardSlot { id, tx, queue, load, draining, shed };
+        let slot = ShardSlot { id, tx, queue, load, draining, shed, tickets, dead };
         Ok((slot, ShardHook { done_rx, join: None }, join))
+    }
+
+    /// Crash recovery, run ON the dying shard's own thread after
+    /// `catch_unwind` caught its panic (DESIGN.md §13):
+    ///
+    /// 1. unpublish the dead slot and drop its lifecycle hook;
+    /// 2. respawn a replacement shard via the stored factory (skipped
+    ///    when the shard was draining on purpose, or at the shard cap);
+    /// 3. re-home everything the dead shard held: messages trapped in
+    ///    its channel, queued-but-unstarted jobs, and admitted runs
+    ///    rebuilt from their re-admission tickets — checkpointed runs
+    ///    resume bit-identically, the rest replay from the placement-
+    ///    invariant run seed. A run that has already crashed
+    ///    `recover_retries` shards is poison: its seed joins the
+    ///    quarantine list and its client gets an error reply.
+    fn recover_shard(self: &Arc<Self>, id: usize, ctx: &ShardCtx, rx: &mpsc::Receiver<ShardMsg>) {
+        log::error!("shard {id}: thread panicked; recovering its work");
+        {
+            let mut m = lock_ok(&self.metrics);
+            m.shard_crashes += 1;
+            // fold the dead id's gauge columns into the retired
+            // accumulators, as remove_shard does
+            m.retire_shard(id);
+        }
+        // the dead shard's backend Box was dropped with the panic, so
+        // its tier handles are unreleasable: forget them (and wake any
+        // waiter latched on one of its mid-fill Pending slots)
+        self.tier.drop_shard(id);
+        let draining = ctx.draining.load(Ordering::SeqCst);
+        {
+            let mut lc = lock_ok(&self.lifecycle);
+            let cur = self.snapshot();
+            if cur.iter().any(|s| s.id == id) {
+                let v: Vec<ShardSlot> =
+                    cur.iter().filter(|s| s.id != id).cloned().collect();
+                *write_ok(&self.slots) = Arc::new(v);
+            }
+            // drop the dead shard's teardown hook (a no-op when a
+            // concurrent remove_shard already claimed it — that caller
+            // holds done_rx and keeps blocking until this thread exits)
+            lc.remove(&id);
+            if !draining {
+                match self.respawn_locked(&mut lc) {
+                    Ok(nid) => log::warn!("shard {id}: respawned as shard {nid}"),
+                    Err(e) => log::error!("shard {id}: respawn failed: {e:#}"),
+                }
+            }
+        }
+        // re-route the dead shard's work; the replacement (and every
+        // survivor) is published by now, so nothing re-lands here
+        let mut stranded = 0usize;
+        let slots = self.snapshot();
+        while let Ok(msg) = rx.try_recv() {
+            match msg {
+                ShardMsg::Solve(req) => {
+                    let est = lane_estimate(req.method, self.cfg.pool_size) as u64;
+                    let first = self.rr.fetch_add(1, Ordering::Relaxed) % slots.len().max(1);
+                    if send_with_fallback(&slots, first, est, ShardMsg::Solve(req)).is_err() {
+                        stranded += 1;
+                    }
+                }
+                ShardMsg::Job(job) => {
+                    if self.resubmit(job).is_err() {
+                        stranded += 1;
+                    }
+                }
+            }
+        }
+        let queued: Vec<QueuedJob> = lock_ok(&ctx.queue).drain(..).collect();
+        for job in queued {
+            if self.resubmit(job).is_err() {
+                stranded += 1;
+            }
+        }
+        let tickets: Vec<RunTicket> = lock_ok(&ctx.tickets).drain().map(|(_, t)| t).collect();
+        for t in tickets {
+            let RunTicket {
+                problem,
+                method,
+                wire_seed,
+                gold,
+                est,
+                enqueued,
+                deadline,
+                retries,
+                checkpoint,
+                reply,
+            } = t;
+            if retries >= self.cfg.recover_retries {
+                if let Some(p) = &problem {
+                    let seed = wire_seed ^ hash::fnv1a_i32(&p.tokens);
+                    lock_ok(&self.quarantine).insert(seed);
+                }
+                let mut m = lock_ok(&self.metrics);
+                m.quarantined += 1;
+                m.errors += 1;
+                drop(m);
+                let _ = reply.send(Err(anyhow!(
+                    "run quarantined after crashing {} shards",
+                    retries + 1
+                )));
+                continue;
+            }
+            let work = match (checkpoint, problem) {
+                (Some(run), _) => {
+                    lock_ok(&self.metrics).runs_recovered += 1;
+                    Work::Resume { run, method, gold, reply }
+                }
+                (None, Some(problem)) => {
+                    let mut m = lock_ok(&self.metrics);
+                    m.runs_recovered += 1;
+                    m.runs_replayed += 1;
+                    drop(m);
+                    Work::Fresh { problem, method, seed: wire_seed, reply }
+                }
+                (None, None) => {
+                    // can't happen by construction; never drop a reply
+                    let _ = reply
+                        .send(Err(anyhow!("shard {id} crashed; run state unrecoverable")));
+                    continue;
+                }
+            };
+            let job = QueuedJob {
+                lanes: est,
+                enqueued,
+                queued_at: Instant::now(),
+                deadline,
+                retries: retries + 1,
+                work,
+            };
+            if self.resubmit(job).is_err() {
+                stranded += 1;
+            }
+        }
+        if stranded > 0 {
+            // no survivor accepted (respawn failed AND the pool is
+            // empty): the dropped reply senders surface as disconnects
+            log::error!("shard {id}: {stranded} work item(s) lost — no live shard left");
+            lock_ok(&self.metrics).errors += stranded as u64;
+        }
+        self.signal.bump();
+    }
+
+    /// `add_shard` minus the handle: spawn and publish a replacement
+    /// shard under the already-held lifecycle lock.
+    fn respawn_locked(
+        self: &Arc<Self>,
+        lc: &mut HashMap<usize, ShardHook>,
+    ) -> Result<usize> {
+        let cur = self.snapshot();
+        if cur.len() >= MAX_SHARDS {
+            bail!("shard cap ({MAX_SHARDS}) reached");
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (slot, mut hook, join) = self.spawn_shard(id)?;
+        hook.join = Some(join);
+        lc.insert(id, hook);
+        let mut v: Vec<ShardSlot> = cur.iter().cloned().collect();
+        v.push(slot);
+        *write_ok(&self.slots) = Arc::new(v);
+        Ok(id)
     }
 
     /// Move queued-but-unstarted jobs from the most-loaded other shard
@@ -319,10 +540,12 @@ impl ShardRegistry {
         let slots = self.snapshot();
         let victim = slots
             .iter()
-            .filter(|s| s.id != ctx.shard && !s.queue.lock().unwrap().is_empty())
+            .filter(|s| {
+                s.id != ctx.shard && s.healthy() && !lock_ok(&s.queue).is_empty()
+            })
             .max_by_key(|s| s.load.load(Ordering::Relaxed));
         if let Some(victim) = victim {
-            let mut vq = victim.queue.lock().unwrap();
+            let mut vq = lock_ok(&victim.queue);
             let mut moved = 0usize;
             let mut gained = 0usize;
             while gained < room {
@@ -331,7 +554,7 @@ impl ShardRegistry {
                 ctx.load.fetch_add(job.lanes as u64, Ordering::Relaxed);
                 gained += job.lanes.max(1);
                 moved += 1;
-                ctx.queue.lock().unwrap().push_back(job);
+                lock_ok(&ctx.queue).push_back(job);
             }
             if moved > 0 {
                 return moved;
@@ -350,12 +573,13 @@ impl ShardRegistry {
                 .iter()
                 .filter(|s| {
                     s.id != ctx.shard
+                        && s.healthy()
                         && !s.draining.load(Ordering::Relaxed)
                         && s.load.load(Ordering::Relaxed) >= 2 * (my_load + 1)
                 })
                 .max_by_key(|s| s.load.load(Ordering::Relaxed));
             if let Some(victim) = busy {
-                let mut shed = victim.shed.lock().unwrap();
+                let mut shed = lock_ok(&victim.shed);
                 let already = shed.iter().any(|r| r.thief == ctx.shard);
                 if !already && shed.len() < MAX_SHED_REQUESTS {
                     shed.push(ShedRequest { thief: ctx.shard, lanes: room });
@@ -435,9 +659,10 @@ impl Drop for PoolHandle {
 }
 
 impl PoolHandle {
-    /// Live (non-draining) shards.
+    /// Live healthy shards (dead-but-not-yet-recovered slots excluded —
+    /// the autoscaler must not count a corpse as capacity).
     pub fn shards(&self) -> usize {
-        self.reg.snapshot().len()
+        self.reg.snapshot().iter().filter(|s| s.healthy()).count()
     }
 
     /// Current outstanding lane estimate on shard `id` (telemetry);
@@ -451,27 +676,35 @@ impl PoolHandle {
             .unwrap_or(0)
     }
 
-    /// (shard id, outstanding lane estimate) per live shard — the
-    /// autoscaler's scale-down victim input.
+    /// (shard id, outstanding lane estimate) per live healthy shard —
+    /// the autoscaler's scale-down victim input (a dead shard must
+    /// never be picked as a drain victim).
     pub fn shard_loads(&self) -> Vec<(usize, u64)> {
         self.reg
             .snapshot()
             .iter()
+            .filter(|s| s.healthy())
             .map(|s| (s.id, s.load.load(Ordering::Relaxed)))
             .collect()
     }
 
-    /// Queued-but-unstarted jobs across all live shards (autoscaler
-    /// queue-depth signal).
+    /// Queued-but-unstarted jobs across all live healthy shards
+    /// (autoscaler queue-depth signal).
     pub fn queued_jobs(&self) -> usize {
-        self.reg.snapshot().iter().map(|s| s.queue.lock().unwrap().len()).sum()
+        self.reg
+            .snapshot()
+            .iter()
+            .filter(|s| s.healthy())
+            .map(|s| lock_ok(&s.queue).len())
+            .sum()
     }
 
-    /// Outstanding lane estimate across all live shards.
+    /// Outstanding lane estimate across all live healthy shards.
     pub fn outstanding_lanes(&self) -> u64 {
         self.reg
             .snapshot()
             .iter()
+            .filter(|s| s.healthy())
             .map(|s| s.load.load(Ordering::Relaxed))
             .sum()
     }
@@ -483,8 +716,8 @@ impl PoolHandle {
     /// mid-solve run doesn't read as a huge admission backlog.
     pub fn oldest_queue_wait_s(&self) -> f64 {
         let mut oldest: Option<Instant> = None;
-        for s in self.reg.snapshot().iter() {
-            if let Some(job) = s.queue.lock().unwrap().front() {
+        for s in self.reg.snapshot().iter().filter(|s| s.healthy()) {
+            if let Some(job) = lock_ok(&s.queue).front() {
                 oldest = Some(match oldest {
                     Some(t) if t <= job.queued_at => t,
                     _ => job.queued_at,
@@ -495,18 +728,25 @@ impl PoolHandle {
     }
 
     /// One internally-consistent sample of the autoscaler's signals —
-    /// `(live shards, queued jobs, oldest head-of-line wait seconds,
-    /// outstanding lanes)` — from a single placement snapshot and ONE
-    /// pass over each shard's queue mutex, so depth and wait cannot
-    /// disagree and the per-interval lock traffic on the hot scheduler
-    /// queues stays at one acquisition per shard.
+    /// `(live healthy shards, queued jobs, oldest head-of-line wait
+    /// seconds, outstanding lanes)` — from a single placement snapshot
+    /// and ONE pass over each shard's queue mutex, so depth and wait
+    /// cannot disagree and the per-interval lock traffic on the hot
+    /// scheduler queues stays at one acquisition per shard. Dead /
+    /// respawning shards are excluded from every component: the policy
+    /// must neither count a corpse as capacity nor read its queue.
     pub fn sample_signals(&self) -> (usize, usize, f64, u64) {
         let slots = self.reg.snapshot();
+        let mut healthy = 0usize;
         let mut queued = 0usize;
         let mut oldest: Option<Instant> = None;
         let mut lanes = 0u64;
         for s in slots.iter() {
-            let q = s.queue.lock().unwrap();
+            if !s.healthy() {
+                continue;
+            }
+            healthy += 1;
+            let q = lock_ok(&s.queue);
             queued += q.len();
             if let Some(job) = q.front() {
                 oldest = Some(match oldest {
@@ -518,7 +758,7 @@ impl PoolHandle {
             lanes += s.load.load(Ordering::Relaxed);
         }
         let wait = oldest.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
-        (slots.len(), queued, wait, lanes)
+        (healthy, queued, wait, lanes)
     }
 
     /// Pick the slot position for one request (see the module docs for
@@ -581,25 +821,14 @@ impl PoolHandle {
     /// first acquisition.
     pub fn add_shard(&self) -> Result<usize> {
         let id = {
-            // lifecycle ops are serialized; submitters never block here
-            let mut lc = self.reg.lifecycle.lock().unwrap();
-            let cur = self.reg.snapshot();
-            if cur.len() >= MAX_SHARDS {
-                bail!("shard cap ({MAX_SHARDS}) reached");
-            }
-            let id = self.reg.next_id.fetch_add(1, Ordering::Relaxed);
-            let (slot, mut hook, join) = self.reg.spawn_shard(id)?;
-            // retain the join handle so remove_shard can reap the
-            // thread after its done signal (initial shards are joined
-            // by BackendPool::spawn's caller instead)
-            hook.join = Some(join);
-            lc.insert(id, hook);
-            let mut v: Vec<ShardSlot> = cur.iter().cloned().collect();
-            v.push(slot);
-            *self.reg.slots.write().unwrap() = Arc::new(v);
-            id
+            // lifecycle ops are serialized; submitters never block here.
+            // respawn_locked retains the join handle so remove_shard can
+            // reap the thread after its done signal (initial shards are
+            // joined by BackendPool::spawn's caller instead)
+            let mut lc = lock_ok(&self.reg.lifecycle);
+            self.reg.respawn_locked(&mut lc)?
         };
-        self.reg.metrics.lock().unwrap().record_shard_added();
+        lock_ok(&self.reg.metrics).record_shard_added();
         Ok(id)
     }
 
@@ -614,19 +843,24 @@ impl PoolHandle {
     pub fn remove_shard(&self, id: usize) -> Result<f64> {
         let t0 = Instant::now();
         let (slot, hook) = {
-            let mut lc = self.reg.lifecycle.lock().unwrap();
+            let mut lc = lock_ok(&self.reg.lifecycle);
             let cur = self.reg.snapshot();
             let pos = cur
                 .iter()
                 .position(|s| s.id == id)
                 .ok_or_else(|| anyhow!("no live shard {id}"))?;
             let min = self.reg.cfg.min_shards.max(1);
-            if cur.len() <= min {
+            // the floor is on HEALTHY shards: with a crashed slot still
+            // in the snapshot, draining a healthy one could leave the
+            // pool serving on corpses alone
+            let healthy = cur.iter().filter(|s| s.healthy()).count();
+            let victim_healthy = cur[pos].healthy();
+            if victim_healthy && healthy <= min {
                 bail!("cannot drain shard {id}: pool is at min_shards={min}");
             }
             let mut v: Vec<ShardSlot> = cur.iter().cloned().collect();
             let slot = v.remove(pos);
-            *self.reg.slots.write().unwrap() = Arc::new(v);
+            *write_ok(&self.reg.slots) = Arc::new(v);
             slot.draining.store(true, Ordering::SeqCst);
             let hook = lc.remove(&id).expect("every live shard has a lifecycle hook");
             (slot, hook)
@@ -637,7 +871,7 @@ impl PoolHandle {
         // runs are migrated by the shard's own loop when it observes
         // the draining flag (it owns the backend).
         let survivors = self.reg.snapshot();
-        let moved: Vec<QueuedJob> = slot.queue.lock().unwrap().drain(..).collect();
+        let moved: Vec<QueuedJob> = lock_ok(&slot.queue).drain(..).collect();
         for (i, job) in moved.into_iter().enumerate() {
             let est = job.lanes as u64;
             slot.load.fetch_sub(est, Ordering::Relaxed);
@@ -664,7 +898,7 @@ impl PoolHandle {
         }
         let secs = t0.elapsed().as_secs_f64();
         {
-            let mut m = self.reg.metrics.lock().unwrap();
+            let mut m = lock_ok(&self.reg.metrics);
             m.record_shard_removed(secs);
             // fold the dead id's gauge columns into the retired
             // accumulators (autoscale churn must not grow them forever)
@@ -697,7 +931,7 @@ impl BackendPool {
             if cfg.prefix.enabled { cfg.prefix.capacity } else { 0 },
             cfg.prefix.max_bytes,
         ));
-        metrics.lock().unwrap().init_shards(shards);
+        lock_ok(&metrics).init_shards(shards);
         let reg = Arc::new(ShardRegistry {
             cfg,
             vocab,
@@ -708,6 +942,7 @@ impl BackendPool {
             rr: AtomicUsize::new(0),
             slots: RwLock::new(Arc::new(Vec::new())),
             lifecycle: Mutex::new(HashMap::new()),
+            quarantine: Mutex::new(HashSet::new()),
             signal: Arc::new(WorkSignal::new()),
         });
         let mut joins = Vec::with_capacity(shards);
@@ -715,11 +950,11 @@ impl BackendPool {
         for _ in 0..shards {
             let id = reg.next_id.fetch_add(1, Ordering::Relaxed);
             let (slot, hook, join) = reg.spawn_shard(id)?;
-            reg.lifecycle.lock().unwrap().insert(id, hook);
+            lock_ok(&reg.lifecycle).insert(id, hook);
             v.push(slot);
             joins.push(join);
         }
-        *reg.slots.write().unwrap() = Arc::new(v);
+        *write_ok(&reg.slots) = Arc::new(v);
         Ok((PoolHandle { reg }, joins))
     }
 }
@@ -760,6 +995,7 @@ mod tests {
                 expr: expr.to_string(),
                 method: Method::Ssr { n: 3, tau: 7, stop: StopRule::Full },
                 seed,
+                deadline_ms: 0,
                 reply: rtx,
             })
             .unwrap();

@@ -44,6 +44,7 @@ use anyhow::Result;
 
 use crate::backend::{Backend, PrefixHandle};
 use crate::util::hash;
+use crate::util::sync::lock_ok;
 use crate::workload::Problem;
 
 /// Result of a prefix acquisition ([`PrefixCache::acquire`] /
@@ -374,12 +375,12 @@ impl SharedPrefixTier {
     }
 
     pub fn capacity(&self) -> usize {
-        self.inner.lock().unwrap().capacity
+        lock_ok(&self.inner).capacity
     }
 
     /// Live logical entries.
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().map.len()
+        lock_ok(&self.inner).map.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -388,11 +389,11 @@ impl SharedPrefixTier {
 
     /// Bytes retained across all shards.
     pub fn bytes(&self) -> u64 {
-        self.inner.lock().unwrap().bytes
+        lock_ok(&self.inner).bytes
     }
 
     pub fn stats(&self) -> TierStats {
-        self.inner.lock().unwrap().stats.clone()
+        lock_ok(&self.inner).stats.clone()
     }
 
     /// Return a live prefix for `problem` on `shard`'s backend,
@@ -411,7 +412,7 @@ impl SharedPrefixTier {
         // pending releases are taken under the lock but released on the
         // backend outside it (release cost is the owning shard's alone)
         let (pending, passthrough) = {
-            let mut guard = self.inner.lock().unwrap();
+            let mut guard = lock_ok(&self.inner);
             (
                 guard.pending_release.remove(&shard).unwrap_or_default(),
                 guard.capacity == 0,
@@ -421,12 +422,12 @@ impl SharedPrefixTier {
             let _ = backend.release_prefix(h);
         }
         if passthrough {
-            self.inner.lock().unwrap().stats.misses += 1;
+            lock_ok(&self.inner).stats.misses += 1;
             return Ok(Acquired::owned(backend.prefill_prefix(problem, use_draft, want_scores)?));
         }
 
         let k = prefix_key(&problem.tokens, use_draft);
-        let mut guard = self.inner.lock().unwrap();
+        let mut guard = lock_ok(&self.inner);
         loop {
             // plain &mut so field borrows below are disjoint (guard
             // derefs would otherwise re-borrow the whole struct)
@@ -447,7 +448,10 @@ impl SharedPrefixTier {
                         // (With one scheduler thread per shard this arm
                         // is unreachable in serving; the tier does not
                         // assume that threading model.)
-                        guard = self.filled.wait(guard).unwrap();
+                        guard = self
+                            .filled
+                            .wait(guard)
+                            .unwrap_or_else(|e| e.into_inner());
                         continue;
                     }
                     None => {
@@ -496,7 +500,7 @@ impl SharedPrefixTier {
         shard_fill: bool,
     ) -> Result<Acquired> {
         let res = backend.prefill_prefix(problem, use_draft, want_scores);
-        let mut guard = self.inner.lock().unwrap();
+        let mut guard = lock_ok(&self.inner);
         let inner = &mut *guard;
         match res {
             Ok(handle) => {
@@ -551,7 +555,7 @@ impl SharedPrefixTier {
     /// by the dead shard id — the compaction that keeps week-long
     /// autoscale churn from growing the per-shard tables.
     pub fn clear_shard(&self, shard: usize, backend: &mut dyn Backend) {
-        let mut guard = self.inner.lock().unwrap();
+        let mut guard = lock_ok(&self.inner);
         let inner = &mut *guard;
         for h in inner.pending_release.remove(&shard).unwrap_or_default() {
             let _ = backend.release_prefix(h);
@@ -565,12 +569,36 @@ impl SharedPrefixTier {
         }
         inner.bytes = inner.bytes.saturating_sub(freed);
         inner.map.retain(|_, e| !e.per_shard.is_empty());
+        // a crashed shard may have died mid-fill: waiters latched on one
+        // of its Pending slots (now removed) must re-check, not sleep on
+        // a latch nobody will ever resolve
+        self.filled.notify_all();
+    }
+
+    /// [`clear_shard`](Self::clear_shard) for a shard whose backend no
+    /// longer exists (crash recovery, DESIGN.md §13): the handles died
+    /// with the backend, so they are *forgotten* rather than released —
+    /// including any `Pending` latch the shard held mid-fill, whose
+    /// waiters are woken to re-check.
+    pub fn drop_shard(&self, shard: usize) {
+        let mut guard = lock_ok(&self.inner);
+        let inner = &mut *guard;
+        inner.pending_release.remove(&shard);
+        let mut freed = 0u64;
+        for e in inner.map.values_mut() {
+            if let Some(SlotState::Ready { bytes, .. }) = e.per_shard.remove(&shard) {
+                freed += bytes;
+            }
+        }
+        inner.bytes = inner.bytes.saturating_sub(freed);
+        inner.map.retain(|_, e| !e.per_shard.is_empty());
+        self.filled.notify_all();
     }
 
     /// Live per-shard slots keyed by a given shard id — 0 once the
     /// shard has been cleared (compaction observable for tests).
     pub fn shard_slot_count(&self, shard: usize) -> usize {
-        let inner = self.inner.lock().unwrap();
+        let inner = lock_ok(&self.inner);
         inner.map.values().filter(|e| e.per_shard.contains_key(&shard)).count()
             + inner.pending_release.get(&shard).map_or(0, |v| v.len())
     }

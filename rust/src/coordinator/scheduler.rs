@@ -87,7 +87,7 @@
 //!
 //! [`WorkSignal`]: super::pool::WorkSignal
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex, Weak};
@@ -99,11 +99,12 @@ use super::engine::{step_tick, DetachedRun, Method, ProblemRun};
 use super::metrics::Metrics;
 use super::pool::{BackendPool, ShardRegistry, ShedRequest, WorkSignal};
 use super::prefix::{PrefixProvider, ShardPrefix, SharedPrefixTier};
-use crate::backend::Backend;
+use crate::backend::{severity_of, Backend, FaultSeverity};
 use crate::config::{AdmitPolicy, SsrConfig};
 use crate::runtime::Vocab;
 use crate::util::hash;
 use crate::util::json::{self, Value};
+use crate::util::sync::lock_ok;
 use crate::workload::problems::problem_from_text;
 use crate::workload::Problem;
 
@@ -122,6 +123,11 @@ pub struct SolveRequest {
     pub expr: String,
     pub method: Method,
     pub seed: u64,
+    /// per-request deadline in milliseconds, enforced at step
+    /// boundaries; 0 = use the config default (`SsrConfig::deadline_ms`,
+    /// itself 0 = none). On expiry the run finalizes from the votes
+    /// collected so far and the reply carries `degraded:true`
+    pub deadline_ms: u64,
     pub reply: mpsc::Sender<Result<Value>>,
 }
 
@@ -159,6 +165,9 @@ pub(crate) struct ShardCtx {
     pub queue: Arc<Mutex<VecDeque<QueuedJob>>>,
     pub draining: Arc<AtomicBool>,
     pub shed: Arc<Mutex<Vec<ShedRequest>>>,
+    /// admitted-run re-admission records, shared with the pool
+    /// supervisor for crash recovery (see [`RunTicket`])
+    pub tickets: TicketMap,
     pub signal: Arc<WorkSignal>,
     pub registry: Weak<ShardRegistry>,
 }
@@ -168,6 +177,20 @@ impl ShardCtx {
     /// to the load gauge (advisory placement signal — Relaxed is fine).
     fn done(&self, est: usize) {
         self.load.fetch_sub(est as u64, Ordering::Relaxed);
+    }
+
+    /// Stage a re-admission ticket for a newly admitted run; returns
+    /// its pool-unique id.
+    fn stage_ticket(&self, ticket: RunTicket) -> u64 {
+        let id = NEXT_TICKET.fetch_add(1, Ordering::Relaxed);
+        lock_ok(&self.tickets).insert(id, ticket);
+        id
+    }
+
+    /// A run reached a terminal reply or left this shard (detach):
+    /// drop its re-admission ticket.
+    fn clear_ticket(&self, id: u64) {
+        lock_ok(&self.tickets).remove(&id);
     }
 }
 
@@ -189,6 +212,12 @@ pub(crate) struct QueuedJob {
     /// so a migrated long-running solve doesn't masquerade as a
     /// 30-second admission backlog and flap the policy
     pub(crate) queued_at: Instant,
+    /// absolute deadline (derived once at intake from the wire field /
+    /// config default); survives steals, migrations and crash recovery
+    pub(crate) deadline: Option<Instant>,
+    /// shard crashes this work has already survived (crash-recovery
+    /// retry budget, DESIGN.md §13); 0 for never-crashed work
+    pub(crate) retries: u32,
     pub(crate) work: Work,
 }
 
@@ -216,8 +245,52 @@ struct InFlight {
     est: usize,
     enqueued: Instant,
     admitted: Instant,
+    /// key of this run's [`RunTicket`] in the shard's ticket map;
+    /// removed on every terminal reply and on detach
+    ticket: u64,
+    deadline: Option<Instant>,
+    retries: u32,
+    /// the deadline expired and the run was force-stopped: the reply
+    /// carries `degraded:true`
+    degraded: bool,
     reply: mpsc::Sender<Result<Value>>,
 }
+
+/// Re-admission record for one *admitted* run — the state the pool
+/// supervisor needs to rebuild the request if this shard's thread dies
+/// (DESIGN.md §13). Queued-but-unstarted jobs survive a crash in the
+/// slot's shared queue; admitted runs live on the panicking stack, so
+/// everything needed to re-admit them is staged here, in an `Arc` map
+/// shared with the pool, *before* the run takes its first step:
+///
+/// * `checkpoint` — a step-boundary [`DetachedRun`] when one is
+///   available (a migrated-in run re-admits bit-identically from it);
+/// * otherwise `problem` + `wire_seed` — the placement-invariant run
+///   seed replays the whole run from scratch with identical decisions
+///   (the same determinism contract work stealing relies on).
+///
+/// The reply sender is a clone, so the supervisor can still answer the
+/// client after the original sender died with the shard thread.
+pub(crate) struct RunTicket {
+    pub(crate) problem: Option<Problem>,
+    pub(crate) method: Method,
+    pub(crate) wire_seed: u64,
+    pub(crate) gold: i64,
+    pub(crate) est: usize,
+    pub(crate) enqueued: Instant,
+    pub(crate) deadline: Option<Instant>,
+    pub(crate) retries: u32,
+    pub(crate) checkpoint: Option<DetachedRun>,
+    pub(crate) reply: mpsc::Sender<Result<Value>>,
+}
+
+/// Per-shard map of admitted-run tickets, shared between the shard's
+/// loop (insert/remove) and the pool supervisor (drain on crash).
+pub(crate) type TicketMap = Arc<Mutex<HashMap<u64, RunTicket>>>;
+
+/// Pool-wide unique ticket ids (uniqueness must survive re-admission
+/// onto other shards).
+static NEXT_TICKET: AtomicU64 = AtomicU64::new(1);
 
 pub struct Scheduler;
 
@@ -279,10 +352,19 @@ fn intake(
             match problem_from_text(vocab, &req.expr) {
                 Ok(problem) => {
                     let now = Instant::now();
-                    ctx.queue.lock().unwrap().push_back(QueuedJob {
+                    // wire deadline wins over the config default; both
+                    // 0 = no deadline. Resolved to an absolute instant
+                    // once, so steals / migrations / crash recovery
+                    // can't extend it
+                    let dl_ms =
+                        if req.deadline_ms > 0 { req.deadline_ms } else { cfg.deadline_ms };
+                    let deadline = (dl_ms > 0).then(|| now + Duration::from_millis(dl_ms));
+                    lock_ok(&ctx.queue).push_back(QueuedJob {
                         lanes,
                         enqueued: now,
                         queued_at: now,
+                        deadline,
+                        retries: 0,
                         work: Work::Fresh {
                             problem,
                             method: req.method,
@@ -292,7 +374,7 @@ fn intake(
                     });
                 }
                 Err(e) => {
-                    metrics.lock().unwrap().errors += 1;
+                    lock_ok(metrics).errors += 1;
                     ctx.done(lanes);
                     let _ = req.reply.send(Err(e));
                 }
@@ -300,7 +382,7 @@ fn intake(
         }
         // already parsed (drain re-placement) or mid-solve (migration):
         // straight into the admission queue
-        ShardMsg::Job(job) => ctx.queue.lock().unwrap().push_back(job),
+        ShardMsg::Job(job) => lock_ok(&ctx.queue).push_back(job),
     }
 }
 
@@ -315,12 +397,19 @@ fn finish_job(
     let latency = f.enqueued.elapsed().as_secs_f64();
     let queue_wait = f.admitted.duration_since(f.enqueued).as_secs_f64();
     {
-        let mut m = metrics.lock().unwrap();
+        let mut m = lock_ok(metrics);
         m.record_request(latency, r.answer().is_some());
         m.record_tokens(r.draft_tokens, r.target_tokens, r.steps, r.rewrites);
+        if f.degraded {
+            m.degraded_replies += 1;
+        }
     }
     Ok(json::obj(vec![
         ("ok", Value::Bool(true)),
+        // deadline expired mid-solve: the answer is the vote over
+        // whatever paths had finished (possibly null) — degraded, not
+        // an error (DESIGN.md §13)
+        ("degraded", Value::Bool(f.degraded)),
         ("answer", r.answer().map(json::i).unwrap_or(Value::Null)),
         ("gold", json::i(f.gold)),
         ("correct", Value::Bool(r.answer() == Some(f.gold))),
@@ -343,7 +432,8 @@ fn detach_job(
     metrics: &Arc<Mutex<Metrics>>,
     ctx: &ShardCtx,
 ) -> Option<(QueuedJob, u64)> {
-    let InFlight { run, method, gold, est, enqueued, reply, .. } = f;
+    let InFlight { run, method, gold, est, enqueued, ticket, deadline, retries, reply, .. } = f;
+    ctx.clear_ticket(ticket);
     match run.detach(backend) {
         Ok(d) => {
             let bytes = d.approx_bytes();
@@ -351,12 +441,14 @@ fn detach_job(
                 lanes: est,
                 enqueued,
                 queued_at: Instant::now(),
+                deadline,
+                retries,
                 work: Work::Resume { run: d, method, gold, reply },
             };
             Some((job, bytes))
         }
         Err(e) => {
-            metrics.lock().unwrap().errors += 1;
+            lock_ok(metrics).errors += 1;
             ctx.done(est);
             let _ = reply.send(Err(e));
             None
@@ -373,31 +465,52 @@ fn take_back(
     metrics: &Arc<Mutex<Metrics>>,
     ctx: &ShardCtx,
 ) {
-    let QueuedJob { lanes, enqueued, work, .. } = job;
+    let QueuedJob { lanes, enqueued, deadline, retries, work, .. } = job;
     match work {
         Work::Resume { run, method, gold, reply } => {
+            let checkpoint = run.clone();
             match ProblemRun::attach(run, backend) {
-                Ok(run) => inflight.push(InFlight {
-                    run,
-                    method,
-                    gold,
-                    est: lanes,
-                    enqueued,
-                    admitted: Instant::now(),
-                    reply,
-                }),
+                Ok(run) => {
+                    let ticket = ctx.stage_ticket(RunTicket {
+                        problem: None,
+                        method,
+                        wire_seed: 0,
+                        gold,
+                        est: lanes,
+                        enqueued,
+                        deadline,
+                        retries,
+                        checkpoint: Some(checkpoint),
+                        reply: reply.clone(),
+                    });
+                    inflight.push(InFlight {
+                        run,
+                        method,
+                        gold,
+                        est: lanes,
+                        enqueued,
+                        admitted: Instant::now(),
+                        ticket,
+                        deadline,
+                        retries,
+                        degraded: false,
+                        reply,
+                    });
+                }
                 Err(e) => {
-                    metrics.lock().unwrap().errors += 1;
+                    lock_ok(metrics).errors += 1;
                     ctx.done(lanes);
                     let _ = reply.send(Err(e));
                 }
             }
         }
         work @ Work::Fresh { .. } => {
-            ctx.queue.lock().unwrap().push_back(QueuedJob {
+            lock_ok(&ctx.queue).push_back(QueuedJob {
                 lanes,
                 enqueued,
                 queued_at: Instant::now(),
+                deadline,
+                retries,
                 work,
             });
         }
@@ -422,7 +535,7 @@ fn migrate_out(
         ctx.load.fetch_sub(est as u64, Ordering::Relaxed);
         match reg.resubmit(job) {
             Ok(()) => {
-                metrics.lock().unwrap().record_migration(bytes);
+                lock_ok(metrics).record_migration(bytes);
             }
             Err(job) => {
                 ctx.load.fetch_add(est as u64, Ordering::Relaxed);
@@ -431,7 +544,7 @@ fn migrate_out(
         }
     }
     let mut queued: VecDeque<QueuedJob> = {
-        let mut q = ctx.queue.lock().unwrap();
+        let mut q = lock_ok(&ctx.queue);
         std::mem::take(&mut *q)
     };
     while let Some(job) = queued.pop_front() {
@@ -440,7 +553,7 @@ fn migrate_out(
         if let Err(job) = reg.resubmit(job) {
             // no survivors: serve this and the rest ourselves after all
             ctx.load.fetch_add(est, Ordering::Relaxed);
-            let mut q = ctx.queue.lock().unwrap();
+            let mut q = lock_ok(&ctx.queue);
             q.push_back(job);
             q.append(&mut queued);
             break;
@@ -463,7 +576,7 @@ fn shed_to_thieves(
     ctx: &ShardCtx,
 ) {
     let reqs: Vec<ShedRequest> = {
-        let mut s = ctx.shed.lock().unwrap();
+        let mut s = lock_ok(&ctx.shed);
         if s.is_empty() {
             return;
         }
@@ -492,7 +605,7 @@ fn shed_to_thieves(
             match reg.send_to(r.thief, job) {
                 Ok(()) => {
                     granted += lanes.max(1);
-                    metrics.lock().unwrap().record_migration(bytes);
+                    lock_ok(metrics).record_migration(bytes);
                 }
                 Err(job) => {
                     // thief is gone or draining: take the run back
@@ -513,7 +626,7 @@ pub(crate) fn run_loop(
     backend: &mut dyn Backend,
     cfg: &SsrConfig,
     vocab: &Vocab,
-    rx: mpsc::Receiver<ShardMsg>,
+    rx: &mpsc::Receiver<ShardMsg>,
     metrics: &Arc<Mutex<Metrics>>,
     ctx: &ShardCtx,
 ) {
@@ -533,7 +646,7 @@ pub(crate) fn run_loop(
 
     loop {
         // --- intake ---------------------------------------------------
-        if inflight.is_empty() && ctx.queue.lock().unwrap().is_empty() {
+        if inflight.is_empty() && lock_ok(&ctx.queue).is_empty() {
             if disconnected {
                 break;
             }
@@ -575,14 +688,14 @@ pub(crate) fn run_loop(
         // --- work stealing --------------------------------------------
         let mut lanes_used: usize = inflight.iter().map(|f| f.run.lanes()).sum();
         if steal_at > 0 && !ctx.draining.load(Ordering::Relaxed) {
-            let hungry = lanes_used < steal_at && ctx.queue.lock().unwrap().is_empty();
+            let hungry = lanes_used < steal_at && lock_ok(&ctx.queue).is_empty();
             hungry_ticks = if hungry { hungry_ticks + 1 } else { 0 };
             if hungry && (hungry_ticks > 1 || lanes_used == 0) {
                 if let Some(reg) = ctx.registry.upgrade() {
                     let stolen = reg.steal_into(ctx, max_lanes.saturating_sub(lanes_used));
                     if stolen > 0 {
                         hungry_ticks = 0;
-                        metrics.lock().unwrap().record_steals(stolen as u64);
+                        lock_ok(metrics).record_steals(stolen as u64);
                     }
                 }
             }
@@ -592,7 +705,7 @@ pub(crate) fn run_loop(
         let mut admitted = 0usize;
         loop {
             let job = {
-                let mut q = ctx.queue.lock().unwrap();
+                let mut q = lock_ok(&ctx.queue);
                 let Some(pos) = pick_next(&q, cfg.admission) else { break };
                 let need = q[pos].lanes;
                 // always admit into an idle pool so one oversized
@@ -602,7 +715,7 @@ pub(crate) fn run_loop(
                 }
                 q.remove(pos).expect("picked index in range")
             };
-            let QueuedJob { lanes: est, enqueued, work, .. } = job;
+            let QueuedJob { lanes: est, enqueued, deadline, retries, work, .. } = job;
             match work {
                 Work::Fresh { problem, method, seed: wire_seed, reply } => {
                     // run seed = f(request seed, prompt): decorrelates
@@ -610,6 +723,19 @@ pub(crate) fn run_loop(
                     // staying independent of admission order, shard
                     // placement AND work stealing (equivalence tests)
                     let seed = wire_seed ^ hash::fnv1a_i32(&problem.tokens);
+                    // poison runs (crashed shards past their recovery
+                    // budget) are refused before touching the backend
+                    if ctx
+                        .registry
+                        .upgrade()
+                        .is_some_and(|reg| reg.is_quarantined(seed))
+                    {
+                        lock_ok(metrics).errors += 1;
+                        ctx.done(est);
+                        let _ = reply
+                            .send(Err(anyhow!("run is quarantined (crashed too many shards)")));
+                        continue;
+                    }
                     let mut provider =
                         ShardPrefix { tier: ctx.tier.as_ref(), shard: ctx.shard };
                     match ProblemRun::start_with_cache(
@@ -624,22 +750,39 @@ pub(crate) fn run_loop(
                             lanes_used += run.lanes();
                             admitted += 1;
                             {
-                                let mut m = metrics.lock().unwrap();
+                                let mut m = lock_ok(metrics);
                                 m.record_admission_wait(enqueued.elapsed().as_secs_f64());
                                 m.record_shard_request(ctx.shard);
                             }
+                            let gold = problem.answer;
+                            let ticket = ctx.stage_ticket(RunTicket {
+                                problem: Some(problem),
+                                method,
+                                wire_seed,
+                                gold,
+                                est,
+                                enqueued,
+                                deadline,
+                                retries,
+                                checkpoint: None,
+                                reply: reply.clone(),
+                            });
                             inflight.push(InFlight {
                                 run,
                                 method,
-                                gold: problem.answer,
+                                gold,
                                 est,
                                 enqueued,
                                 admitted: Instant::now(),
+                                ticket,
+                                deadline,
+                                retries,
+                                degraded: false,
                                 reply,
                             });
                         }
                         Err(e) => {
-                            metrics.lock().unwrap().errors += 1;
+                            lock_ok(metrics).errors += 1;
                             ctx.done(est);
                             let _ = reply.send(Err(e));
                         }
@@ -649,11 +792,26 @@ pub(crate) fn run_loop(
                     // a migrated run: re-attach its lanes and continue
                     // mid-solve. Its request was admitted (and counted)
                     // on the original shard — no re-recorded admission
-                    // wait or shard-request here.
+                    // wait or shard-request here. The pre-attach clone
+                    // is the crash-recovery checkpoint: re-admission
+                    // from it is bit-identical to continuing here.
+                    let checkpoint = run.clone();
                     match ProblemRun::attach(run, backend) {
                         Ok(run) => {
                             lanes_used += run.lanes();
                             admitted += 1;
+                            let ticket = ctx.stage_ticket(RunTicket {
+                                problem: None,
+                                method,
+                                wire_seed: 0,
+                                gold,
+                                est,
+                                enqueued,
+                                deadline,
+                                retries,
+                                checkpoint: Some(checkpoint),
+                                reply: reply.clone(),
+                            });
                             inflight.push(InFlight {
                                 run,
                                 method,
@@ -661,11 +819,15 @@ pub(crate) fn run_loop(
                                 est,
                                 enqueued,
                                 admitted: Instant::now(),
+                                ticket,
+                                deadline,
+                                retries,
+                                degraded: false,
                                 reply,
                             });
                         }
                         Err(e) => {
-                            metrics.lock().unwrap().errors += 1;
+                            lock_ok(metrics).errors += 1;
                             ctx.done(est);
                             let _ = reply.send(Err(e));
                         }
@@ -677,8 +839,8 @@ pub(crate) fn run_loop(
         // an idle loop doesn't flood the queue-depth samples
         if admitted > 0 || !inflight.is_empty() {
             let ts = ctx.tier.stats();
-            let depth = ctx.queue.lock().unwrap().len();
-            let mut m = metrics.lock().unwrap();
+            let depth = lock_ok(&ctx.queue).len();
+            let mut m = lock_ok(metrics);
             m.record_queue_depth(depth);
             m.set_prefix_cache(ts.hits, ts.misses, ts.evictions);
             m.set_prefix_shard_fills(ts.shard_fills);
@@ -686,6 +848,19 @@ pub(crate) fn run_loop(
 
         if inflight.is_empty() {
             continue; // queue is empty too -> back to blocking intake
+        }
+
+        // --- deadline enforcement (step-boundary granularity) ---------
+        let now = Instant::now();
+        for f in inflight.iter_mut() {
+            if !f.degraded && f.deadline.is_some_and(|d| now >= d) {
+                // graceful degradation: stop drafting; the retire pass
+                // below finalizes from the votes collected so far and
+                // the reply carries degraded:true (DESIGN.md §13)
+                f.run.force_stop();
+                f.degraded = true;
+                lock_ok(metrics).deadline_expirations += 1;
+            }
         }
 
         // --- one shared step tick -------------------------------------
@@ -696,21 +871,37 @@ pub(crate) fn run_loop(
         };
         match tick {
             Ok(tick) => {
-                let mut m = metrics.lock().unwrap();
+                let mut m = lock_ok(metrics);
                 for lanes in tick.lanes_per_call {
                     m.record_batch(lanes);
                 }
+                m.retries += tick.retries;
                 m.set_shard_clock(ctx.shard, backend.clock_secs());
             }
             Err(e) => {
-                // a backend fault mid-batch poisons every in-flight
-                // problem of this shard: fail them all rather than serve
-                // wrong lanes, and close their lanes so backend state
-                // doesn't leak
+                // shard-fatal faults (substrate gone, device wedged)
+                // can't be handled by failing requests: escalate to the
+                // pool supervisor (catch_unwind in spawn_shard), which
+                // respawns this shard and re-admits its runs from their
+                // tickets on the survivors
+                if severity_of(&e) == FaultSeverity::ShardFatal {
+                    log::error!(
+                        "shard {}: shard-fatal backend error: {e:#}",
+                        ctx.shard
+                    );
+                    panic!("shard-fatal backend error: {e:#}");
+                }
+                // a lane-fatal fault mid-batch poisons every in-flight
+                // problem of this shard (batched calls lose per-run
+                // attribution): fail them all rather than serve wrong
+                // lanes, and close their lanes so backend state doesn't
+                // leak. Transient faults never reach here — step_tick
+                // retries them in place.
                 let msg = format!("scheduler tick failed: {e:#}");
                 log::error!("shard {}: {msg}", ctx.shard);
-                let mut m = metrics.lock().unwrap();
+                let mut m = lock_ok(metrics);
                 for mut f in inflight.drain(..) {
+                    ctx.clear_ticket(f.ticket);
                     f.run.abort(backend);
                     m.errors += 1;
                     ctx.done(f.est);
@@ -725,12 +916,13 @@ pub(crate) fn run_loop(
         while i < inflight.len() {
             if inflight[i].run.is_done() {
                 let mut f = inflight.swap_remove(i);
+                ctx.clear_ticket(f.ticket);
                 let result = finish_job(backend, &mut f, metrics);
                 if result.is_err() {
                     // finish bailed mid-close: close whatever it left
                     // open (abort swallows double-close errors)
                     f.run.abort(backend);
-                    metrics.lock().unwrap().errors += 1;
+                    lock_ok(metrics).errors += 1;
                 }
                 ctx.done(f.est);
                 let _ = f.reply.send(result);
@@ -749,7 +941,7 @@ pub(crate) fn run_loop(
     // drain: release this shard's tier handles and flush final gauges
     ctx.tier.clear_shard(ctx.shard, backend);
     let ts = ctx.tier.stats();
-    let mut m = metrics.lock().unwrap();
+    let mut m = lock_ok(metrics);
     m.set_prefix_cache(ts.hits, ts.misses, ts.evictions);
     m.set_prefix_shard_fills(ts.shard_fills);
     m.set_shard_clock(ctx.shard, backend.clock_secs());
@@ -796,7 +988,13 @@ mod tests {
     ) -> mpsc::Receiver<Result<Value>> {
         let (rtx, rrx) = mpsc::channel();
         handle
-            .submit(SolveRequest { expr: expr.to_string(), method, seed, reply: rtx })
+            .submit(SolveRequest {
+                expr: expr.to_string(),
+                method,
+                seed,
+                deadline_ms: 0,
+                reply: rtx,
+            })
             .unwrap();
         rrx
     }

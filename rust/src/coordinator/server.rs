@@ -11,9 +11,9 @@
 //!
 //! Protocol (one JSON object per line):
 //!   -> {"op":"solve", "expr":"(17+25)*3", "method":"ssr", "paths":5,
-//!       "tau":7}
-//!   <- {"ok":true, "answer":126, "method":"ssr-m5", "steps":9,
-//!       "rewrites":2, "latency_s":0.41, "queue_wait_s":0.02}
+//!       "tau":7}                      // optional: "seed", "deadline_ms"
+//!   <- {"ok":true, "degraded":false, "answer":126, "method":"ssr-m5",
+//!       "steps":9, "rewrites":2, "latency_s":0.41, "queue_wait_s":0.02}
 //!   -> {"op":"stats"}
 //!   <- {"ok":true, "requests":..., "p50_s":..., "p99_s":...,
 //!       "throughput_rps":..., "backend_calls":...,
@@ -25,6 +25,9 @@
 //!       "steals":..., "shards_added":..., "shards_removed":...,
 //!       "drain_mean_s":..., "drain_max_s":...,    // shard lifecycle
 //!       "shards_live":...,
+//!       "shard_crashes":..., "runs_recovered":...,  // fault tolerance
+//!       "runs_replayed":..., "retries":..., "quarantined":...,
+//!       "deadline_expirations":..., "degraded_replies":...,
 //!       "model_secs":...}             // backend model-clock
 //!   -> {"op":"add_shard"}             // hot-add one backend shard
 //!   <- {"ok":true, "shard":2, "shards_live":3}
@@ -49,9 +52,22 @@
 //! placement (DESIGN.md §10). Independent resamples of one problem
 //! (pass@k) must therefore vary the wire `seed` field — repeats with
 //! one seed are replays, not fresh samples.
+//!
+//! Fault tolerance (DESIGN.md §13): a `solve` may carry `deadline_ms`
+//! (overriding `--deadline-ms`; 0 = none). On expiry the run is
+//! finalized from the votes accumulated so far and the reply carries
+//! `"degraded":true` — still `"ok":true`. Shard crashes are recovered
+//! transparently (re-admission on survivors); a run that crashes more
+//! than `--recover-retries` shards is quarantined and answered with
+//! `"ok":false`. The connection handler never drops the line protocol
+//! on bad input: a malformed or oversized (> 1 MiB) request line gets
+//! an `{"ok":false,"error":...}` reply and the connection stays open,
+//! and a panic while serving one request is caught and answered the
+//! same way rather than killing the handler thread.
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -67,7 +83,12 @@ use super::scheduler::SolveRequest;
 use crate::backend::Backend;
 use crate::config::{SsrConfig, StopRule};
 use crate::util::json::{self, Value};
+use crate::util::sync::lock_ok;
 use crate::util::threadpool::ThreadPool;
+
+/// Hard cap on one request line; anything longer is drained and
+/// answered with an error instead of buffering without bound.
+const MAX_LINE_BYTES: u64 = 1 << 20;
 
 /// Parse the request's method field (mirrors `Method::name`). The
 /// wire-supplied `paths` count is bounded like `SsrConfig::n_paths`
@@ -211,25 +232,75 @@ fn handle_conn(
     let mut line = String::new();
     loop {
         line.clear();
-        if reader.read_line(&mut line)? == 0 {
+        // bounded read: a line that never ends cannot grow the buffer
+        // past MAX_LINE_BYTES (the remainder is discarded below)
+        let n = match reader.by_ref().take(MAX_LINE_BYTES).read_line(&mut line) {
+            Ok(n) => n,
+            Err(e) if e.kind() == std::io::ErrorKind::InvalidData => {
+                // non-UTF-8 bytes: the offending line was consumed, so
+                // answer and keep serving
+                write_reply(&mut out, &error_reply("request line is not valid UTF-8"))?;
+                continue;
+            }
+            Err(e) => return Err(e.into()),
+        };
+        if n == 0 {
             return Ok(()); // client closed
+        }
+        if n as u64 == MAX_LINE_BYTES && !line.ends_with('\n') {
+            let eof = !drain_line(&mut reader)?;
+            write_reply(
+                &mut out,
+                &error_reply(format!("request line exceeds {MAX_LINE_BYTES} bytes")),
+            )?;
+            if eof {
+                return Ok(());
+            }
+            continue;
         }
         if line.trim().is_empty() {
             continue;
         }
-        let reply = match process_line(&line, &sched, &metrics, started, &shutdown, &cfg) {
-            Ok(v) => v,
-            Err(e) => json::obj(vec![
-                ("ok", Value::Bool(false)),
-                ("error", json::s(format!("{e:#}"))),
-            ]),
+        // a panic while serving one request must not kill the handler
+        // thread (and with it every queued line on this connection)
+        let reply = match catch_unwind(AssertUnwindSafe(|| {
+            process_line(&line, &sched, &metrics, started, &shutdown, &cfg)
+        })) {
+            Ok(Ok(v)) => v,
+            Ok(Err(e)) => error_reply(format!("{e:#}")),
+            Err(_) => error_reply("internal error serving request"),
         };
-        out.write_all(reply.print().as_bytes())?;
-        out.write_all(b"\n")?;
-        out.flush()?;
+        write_reply(&mut out, &reply)?;
         if shutdown.load(Ordering::Acquire) {
             return Ok(());
         }
+    }
+}
+
+fn error_reply(msg: impl std::fmt::Display) -> Value {
+    json::obj(vec![("ok", Value::Bool(false)), ("error", json::s(msg.to_string()))])
+}
+
+fn write_reply(out: &mut TcpStream, reply: &Value) -> Result<()> {
+    out.write_all(reply.print().as_bytes())?;
+    out.write_all(b"\n")?;
+    out.flush()?;
+    Ok(())
+}
+
+/// Discard bytes up to and including the next newline; `false` on EOF.
+fn drain_line(reader: &mut impl BufRead) -> std::io::Result<bool> {
+    loop {
+        let buf = reader.fill_buf()?;
+        if buf.is_empty() {
+            return Ok(false);
+        }
+        if let Some(pos) = buf.iter().position(|&b| b == b'\n') {
+            reader.consume(pos + 1);
+            return Ok(true);
+        }
+        let n = buf.len();
+        reader.consume(n);
     }
 }
 
@@ -247,13 +318,15 @@ fn process_line(
             let expr = req.get_str("expr")?.to_string();
             let method = parse_method(&req, cfg.n_paths, cfg.tau)?;
             let seed = req.opt("seed").map(|s| s.i64()).transpose()?.unwrap_or(0) as u64;
+            let deadline_ms =
+                req.opt("deadline_ms").map(|x| x.i64()).transpose()?.unwrap_or(0).max(0) as u64;
             let (rtx, rrx) = mpsc::channel();
-            sched.submit(SolveRequest { expr, method, seed, reply: rtx })?;
+            sched.submit(SolveRequest { expr, method, seed, deadline_ms, reply: rtx })?;
             rrx.recv().context("scheduler reply")?
         }
         "stats" => {
             let mut v = {
-                let m = metrics.lock().unwrap();
+                let m = lock_ok(metrics);
                 m.summary_json(started.elapsed().as_secs_f64())
             };
             if let Value::Obj(ref mut map) = v {

@@ -11,6 +11,8 @@
 //!           [--autoscale on|off] [--max-shards N] [--scale-up-wait S]
 //!           [--scale-up-queue Q] [--scale-down-occupancy F]
 //!           [--scale-interval-ms MS] [--scale-cooldown-ms MS]
+//!           [--deadline-ms MS] [--recover-retries N]
+//!           [--fault-spec '{"seed":7,"panic_rate":0.01,...}']
 //! ssr exp   fig2|fig3|fig4|fig5|table1|gamma|all [--backend calibrated]
 //!           [--trials 6] [--problems 60]
 //! ssr selfcheck            # artifacts -> PJRT -> one SSR problem
@@ -36,12 +38,22 @@
 //! occupancy, queue depth, admission waits, per-shard request counts,
 //! steal/migration/lifecycle/drain/scale gauges and the model-time
 //! makespan alongside the latency percentiles.
+//!
+//! Serving is fault-tolerant (DESIGN.md §13): shard panics are caught,
+//! the shard is respawned and its in-flight runs are re-admitted on the
+//! survivors; `--deadline-ms` (or a per-request `deadline_ms` field)
+//! bounds solve latency with a degraded best-effort reply; and
+//! `--fault-spec` wraps every shard's backend in a deterministic,
+//! seeded fault injector (step errors, stalls, panics) for chaos
+//! testing — see `{"op":"stats"}` keys `shard_crashes`,
+//! `runs_recovered`, `quarantined`, `degraded_replies`.
 
 use std::path::PathBuf;
 
 use anyhow::{bail, Context, Result};
 
 use ssr::backend::calibrated::CalibratedBackend;
+use ssr::backend::faulty::FaultInjector;
 use ssr::backend::Backend;
 use ssr::config::SsrConfig;
 use ssr::coordinator::engine::Engine;
@@ -153,9 +165,23 @@ fn run() -> Result<()> {
             // the calibrated substrate's derived streams make placement
             // decision-neutral (DESIGN.md §10)
             let factory = std::sync::Mutex::new(factory);
-            let shard_factory = move |_shard: usize| {
+            // --fault-spec: wrap every shard's backend in the seeded
+            // injector; one shared budget caps faults pool-wide and
+            // survives respawns (DESIGN.md §13)
+            let fault = cfg.fault;
+            let budget = FaultInjector::shared_budget(&fault);
+            if fault.is_active() {
+                println!("fault injection ACTIVE: {fault:?}");
+            }
+            let shard_factory = move |shard: usize| {
                 let mut f = factory.lock().unwrap();
-                (*f)(&suite, seed)
+                let b = (*f)(&suite, seed)?;
+                Ok(if fault.is_active() {
+                    Box::new(FaultInjector::new(b, fault, shard, budget.clone()))
+                        as Box<dyn Backend>
+                } else {
+                    b
+                })
             };
             println!(
                 "pool: shards={} (min {} max {}) placement={:?} max_lanes={}/shard \

@@ -1,0 +1,65 @@
+//! Poison-tolerant lock helpers (DESIGN.md §13).
+//!
+//! A panicking shard thread poisons every mutex it holds. The std
+//! behaviour — every later `lock().unwrap()` panics too — turns one
+//! crashed shard into a wedged pool: `stats` hangs, submits hang, the
+//! supervisor cannot respawn. For the serving layer's shared state
+//! (placement snapshot, metrics, prefix tier, recovery tickets) the
+//! protected values are either plain counters or collections that the
+//! supervisor re-validates anyway, so the right recovery is to take the
+//! guard out of the poison wrapper and keep serving.
+//!
+//! Use these helpers instead of bare `lock().unwrap()` anywhere a
+//! panicked peer thread must not take the lock down with it.
+
+use std::sync::{Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+/// Lock a mutex, recovering the guard if a previous holder panicked.
+pub fn lock_ok<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Read-lock an `RwLock`, recovering from poison.
+pub fn read_ok<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Write-lock an `RwLock`, recovering from poison.
+pub fn write_ok<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex, RwLock};
+
+    #[test]
+    fn lock_ok_recovers_from_poison() {
+        let m = Arc::new(Mutex::new(7u64));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.lock().is_err(), "mutex should be poisoned");
+        assert_eq!(*lock_ok(&m), 7);
+        *lock_ok(&m) = 8;
+        assert_eq!(*lock_ok(&m), 8);
+    }
+
+    #[test]
+    fn rwlock_helpers_recover_from_poison() {
+        let l = Arc::new(RwLock::new(vec![1, 2, 3]));
+        let l2 = Arc::clone(&l);
+        let _ = std::thread::spawn(move || {
+            let _g = l2.write().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert_eq!(read_ok(&l).len(), 3);
+        write_ok(&l).push(4);
+        assert_eq!(read_ok(&l).len(), 4);
+    }
+}

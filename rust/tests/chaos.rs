@@ -1,0 +1,463 @@
+//! Chaos suite: seeded fault schedules against the sharded pool
+//! (DESIGN.md §13). Covers transient step errors absorbed by in-place
+//! retries, a forced shard panic mid-solve with crash recovery via run
+//! re-admission, a panic during migration recovered from the
+//! step-boundary checkpoint, and poison-run quarantine after the
+//! crash-retry budget.
+//!
+//! Determinism: every schedule is seeded (`FaultSpec.seed`) or forced
+//! by an explicit shared counter/gate — correctness never depends on a
+//! wall-clock-timing sleep. The only waits are event waits (channel
+//! recv, condvar) and state polls with a liveness timeout.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use ssr::backend::calibrated::CalibratedBackend;
+use ssr::backend::faulty::FaultInjector;
+use ssr::backend::{
+    Backend, BackendMeta, LaneSnapshot, PathId, PathStats, PrefillStats, PrefixHandle,
+    StepOutcome,
+};
+use ssr::config::{FaultSpec, PlacePolicy, SsrConfig};
+use ssr::coordinator::engine::Method;
+use ssr::coordinator::metrics::Metrics;
+use ssr::coordinator::pool::{BackendPool, PoolHandle};
+use ssr::coordinator::scheduler::SolveRequest;
+use ssr::model::tokenizer;
+use ssr::util::json::Value;
+
+const SUITE: &str = "synth-math500";
+
+/// Delegating wrapper that runs a test-controlled hook before every
+/// generation step (draft/target span). The hook may block (gate) or
+/// panic (forced crash); decisions are untouched — the inner backend
+/// drives them.
+struct Hooked {
+    inner: Box<dyn Backend>,
+    on_step: Box<dyn FnMut() + Send>,
+}
+
+impl Backend for Hooked {
+    fn meta(&self) -> BackendMeta {
+        self.inner.meta()
+    }
+
+    fn select_scores(&mut self, problem: &ssr::workload::Problem) -> Result<Vec<f32>> {
+        self.inner.select_scores(problem)
+    }
+
+    fn open_paths(
+        &mut self,
+        problem: &ssr::workload::Problem,
+        strategies: &[Option<usize>],
+        seed: u64,
+        use_draft: bool,
+    ) -> Result<Vec<PathId>> {
+        self.inner.open_paths(problem, strategies, seed, use_draft)
+    }
+
+    fn prefill_prefix(
+        &mut self,
+        problem: &ssr::workload::Problem,
+        use_draft: bool,
+        want_scores: bool,
+    ) -> Result<PrefixHandle> {
+        self.inner.prefill_prefix(problem, use_draft, want_scores)
+    }
+
+    fn prefix_scores(&mut self, handle: PrefixHandle) -> Result<Vec<f32>> {
+        self.inner.prefix_scores(handle)
+    }
+
+    fn fork_paths(
+        &mut self,
+        handle: PrefixHandle,
+        strategies: &[Option<usize>],
+        seed: u64,
+    ) -> Result<Vec<PathId>> {
+        self.inner.fork_paths(handle, strategies, seed)
+    }
+
+    fn release_prefix(&mut self, handle: PrefixHandle) -> Result<()> {
+        self.inner.release_prefix(handle)
+    }
+
+    fn prefix_bytes(&self, handle: PrefixHandle) -> u64 {
+        self.inner.prefix_bytes(handle)
+    }
+
+    fn prefill_stats(&self) -> PrefillStats {
+        self.inner.prefill_stats()
+    }
+
+    fn draft_step(&mut self, paths: &[PathId]) -> Result<Vec<StepOutcome>> {
+        (self.on_step)();
+        self.inner.draft_step(paths)
+    }
+
+    fn score_step(&mut self, paths: &[PathId]) -> Result<Vec<u8>> {
+        self.inner.score_step(paths)
+    }
+
+    fn rewrite_step(&mut self, paths: &[PathId]) -> Result<Vec<StepOutcome>> {
+        self.inner.rewrite_step(paths)
+    }
+
+    fn accept_step(&mut self, paths: &[PathId]) -> Result<()> {
+        self.inner.accept_step(paths)
+    }
+
+    fn target_step(&mut self, paths: &[PathId]) -> Result<Vec<StepOutcome>> {
+        (self.on_step)();
+        self.inner.target_step(paths)
+    }
+
+    fn export_lane_state(&mut self, path: PathId) -> Result<LaneSnapshot> {
+        self.inner.export_lane_state(path)
+    }
+
+    fn import_lane_state(&mut self, snapshot: LaneSnapshot) -> Result<PathId> {
+        self.inner.import_lane_state(snapshot)
+    }
+
+    fn trace(&self, path: PathId) -> &[i32] {
+        self.inner.trace(path)
+    }
+
+    fn close_path(&mut self, path: PathId) -> Result<PathStats> {
+        self.inner.close_path(path)
+    }
+
+    fn parse_answer(&self, trace: &[i32]) -> Option<i64> {
+        self.inner.parse_answer(trace)
+    }
+
+    fn clock_secs(&self) -> f64 {
+        self.inner.clock_secs()
+    }
+
+    fn score_histogram(&self) -> ssr::util::stats::Histogram {
+        self.inner.score_histogram()
+    }
+}
+
+fn submit(
+    handle: &PoolHandle,
+    expr: &str,
+    method: Method,
+    seed: u64,
+) -> mpsc::Receiver<Result<Value>> {
+    let (rtx, rrx) = mpsc::channel();
+    handle
+        .submit(SolveRequest {
+            expr: expr.to_string(),
+            method,
+            seed,
+            deadline_ms: 0,
+            reply: rtx,
+        })
+        .unwrap();
+    rrx
+}
+
+fn answer_of(v: &Value) -> Option<i64> {
+    v.get_i64("answer").ok()
+}
+
+/// Reference answers: the same jobs on one untouched fault-free shard.
+fn fault_free_answers(jobs: &[(String, Method, u64)], backend_seed: u64) -> Vec<Option<i64>> {
+    let cfg = SsrConfig::default();
+    let metrics = Arc::new(Mutex::new(Metrics::new()));
+    let (handle, joins) =
+        BackendPool::spawn(cfg, tokenizer::builtin_vocab(), Arc::clone(&metrics), move |_s| {
+            Ok(Box::new(CalibratedBackend::for_suite(SUITE, backend_seed)?) as Box<dyn Backend>)
+        })
+        .unwrap();
+    let mut out = Vec::new();
+    for (expr, m, seed) in jobs {
+        let v = submit(&handle, expr, *m, *seed).recv().unwrap().unwrap();
+        out.push(answer_of(&v));
+    }
+    drop(handle);
+    for j in joins {
+        j.join().unwrap();
+    }
+    out
+}
+
+fn mixed_jobs(n: usize) -> Vec<(String, Method, u64)> {
+    (0..n)
+        .map(|i| {
+            let method = if i % 2 == 0 {
+                Method::Baseline
+            } else {
+                Method::Ssr { n: 3, tau: 7, stop: ssr::config::StopRule::Full }
+            };
+            (format!("{}+{}*3", i % 7 + 2, i % 5 + 4), method, i as u64)
+        })
+        .collect()
+}
+
+#[test]
+fn transient_faults_are_retried_without_changing_answers() {
+    // Seeded 5% per-step transient errors, unlimited budget: every
+    // injection is raised BEFORE the real step executes, so the
+    // in-place retry replays the exact same decision sequence.
+    let backend_seed = 0xFA01;
+    let spec = FaultSpec { seed: 0xC4A0, transient_rate: 0.05, ..FaultSpec::default() };
+    let budget = FaultInjector::shared_budget(&spec);
+    let mut cfg = SsrConfig::default();
+    cfg.shards = 2;
+    cfg.placement = PlacePolicy::RoundRobin;
+    let metrics = Arc::new(Mutex::new(Metrics::new()));
+    let (handle, joins) = BackendPool::spawn(
+        cfg,
+        tokenizer::builtin_vocab(),
+        Arc::clone(&metrics),
+        move |shard| {
+            let inner = Box::new(CalibratedBackend::for_suite(SUITE, backend_seed)?);
+            Ok(Box::new(FaultInjector::new(inner, spec, shard, budget.clone()))
+                as Box<dyn Backend>)
+        },
+    )
+    .unwrap();
+
+    let jobs = mixed_jobs(8);
+    let replies: Vec<_> = jobs.iter().map(|(e, m, s)| submit(&handle, e, *m, *s)).collect();
+    let answers: Vec<Option<i64>> =
+        replies.iter().map(|r| answer_of(&r.recv().unwrap().unwrap())).collect();
+    assert_eq!(handle.shards(), 2);
+    drop(handle);
+    for j in joins {
+        j.join().unwrap();
+    }
+
+    let m = metrics.lock().unwrap();
+    assert_eq!(m.errors, 0, "a transient fault leaked to a client");
+    assert_eq!(m.requests, 8);
+    assert!(m.retries > 0, "the 5% schedule never injected a transient");
+    assert_eq!(m.shard_crashes, 0);
+    drop(m);
+    assert_eq!(
+        answers,
+        fault_free_answers(&jobs, backend_seed),
+        "transient retries changed decisions"
+    );
+}
+
+#[test]
+fn forced_shard_panic_recovers_in_flight_runs() {
+    // ISSUE acceptance: a seeded 1% step-fault schedule PLUS one forced
+    // shard panic mid-solve. Every request must still get a reply, the
+    // answers must match a fault-free run (replay is seeded by the
+    // placement-invariant run seed), and the pool must end with its
+    // full healthy shard count and nonzero crash/recovery counters.
+    let backend_seed = 0xFA02;
+    let spec = FaultSpec { seed: 0xC4A2, transient_rate: 0.01, ..FaultSpec::default() };
+    let budget = FaultInjector::shared_budget(&spec);
+    // pool-wide step-call counter: call #5 panics, exactly once
+    let calls = Arc::new(AtomicU64::new(0));
+    let mut cfg = SsrConfig::default();
+    cfg.shards = 2;
+    cfg.placement = PlacePolicy::RoundRobin;
+    let metrics = Arc::new(Mutex::new(Metrics::new()));
+    let (handle, joins) = BackendPool::spawn(
+        cfg,
+        tokenizer::builtin_vocab(),
+        Arc::clone(&metrics),
+        move |shard| {
+            let inner = Box::new(CalibratedBackend::for_suite(SUITE, backend_seed)?);
+            let faulty =
+                Box::new(FaultInjector::new(inner, spec, shard, budget.clone()));
+            let calls = Arc::clone(&calls);
+            Ok(Box::new(Hooked {
+                inner: faulty,
+                on_step: Box::new(move || {
+                    if calls.fetch_add(1, Ordering::SeqCst) + 1 == 5 {
+                        panic!("chaos: forced shard panic on step call #5");
+                    }
+                }),
+            }) as Box<dyn Backend>)
+        },
+    )
+    .unwrap();
+
+    let jobs = mixed_jobs(8);
+    let replies: Vec<_> = jobs.iter().map(|(e, m, s)| submit(&handle, e, *m, *s)).collect();
+    let answers: Vec<Option<i64>> =
+        replies.iter().map(|r| answer_of(&r.recv().unwrap().unwrap())).collect();
+    // asserted BEFORE dropping the handle: the respawned shard's thread
+    // is detached, so post-drop gauges race its teardown flush
+    assert_eq!(handle.shards(), 2, "pool did not end at its healthy shard count");
+    drop(handle);
+    for j in joins {
+        j.join().unwrap();
+    }
+
+    let m = metrics.lock().unwrap();
+    assert_eq!(m.errors, 0, "a crash leaked an error to a client");
+    assert_eq!(m.requests, 8);
+    assert_eq!(m.shard_crashes, 1, "the forced panic must crash exactly one shard");
+    assert!(m.runs_recovered >= 1, "the dead shard's in-flight runs were not re-admitted");
+    drop(m);
+    assert_eq!(
+        answers,
+        fault_free_answers(&jobs, backend_seed),
+        "recovered runs diverge from the fault-free reference"
+    );
+}
+
+#[test]
+fn panic_during_migration_recovers_from_checkpoint() {
+    // Crash in the crash-recovery window: a drain migrates an in-flight
+    // run to the survivor; the survivor's injector panics on the first
+    // step after `import_lane_state` (resume_panic, budget 1). The
+    // supervisor must re-admit the run from its step-boundary
+    // checkpoint, bit-identically.
+    let backend_seed = 0xFA03;
+    let spec = FaultSpec { seed: 1, resume_panic: true, max_faults: 1, ..FaultSpec::default() };
+    let budget = FaultInjector::shared_budget(&spec);
+    // gate: the first generation step parks until the drain is staged
+    let gate = Arc::new((Mutex::new(false), Condvar::new()));
+    let (started_tx, started_rx) = mpsc::channel::<()>();
+    // Sender is !Sync; the factory closure must be Sync
+    let started_tx = Arc::new(Mutex::new(started_tx));
+    let mut cfg = SsrConfig::default();
+    cfg.shards = 2;
+    cfg.placement = PlacePolicy::RoundRobin;
+    cfg.migration = true;
+    let metrics = Arc::new(Mutex::new(Metrics::new()));
+    let (handle, joins) = BackendPool::spawn(
+        cfg,
+        tokenizer::builtin_vocab(),
+        Arc::clone(&metrics),
+        move |shard| {
+            let inner = Box::new(CalibratedBackend::for_suite(SUITE, backend_seed)?);
+            let faulty =
+                Box::new(FaultInjector::new(inner, spec, shard, budget.clone()));
+            let gate = Arc::clone(&gate);
+            let tx = started_tx.lock().unwrap().clone();
+            Ok(Box::new(Hooked {
+                inner: faulty,
+                on_step: Box::new(move || {
+                    let (lock, cv) = &*gate;
+                    let mut open = lock.lock().unwrap();
+                    if !*open {
+                        let _ = tx.send(());
+                        while !*open {
+                            open = cv.wait(open).unwrap();
+                        }
+                    }
+                }),
+            }) as Box<dyn Backend>)
+        },
+    )
+    .unwrap();
+
+    // round-robin: the job lands on shard 0 and parks in its first step
+    let job = ("17+25*3".to_string(), Method::Baseline, 3u64);
+    let reply = submit(&handle, &job.0, job.1, job.2);
+    started_rx.recv().unwrap();
+
+    // drain shard 0 from another thread; it unpublishes the slot
+    // immediately, then blocks until the shard migrates its run
+    let h2 = handle.clone();
+    let drainer = std::thread::spawn(move || h2.remove_shard(0).unwrap());
+    let t0 = Instant::now();
+    while handle.shards() > 1 {
+        assert!(t0.elapsed() < Duration::from_secs(20), "drain never unpublished shard 0");
+        std::thread::yield_now();
+    }
+    // open the gate: shard 0 finishes the step, observes the drain, and
+    // migrates the run to shard 1 — whose injector then panics on the
+    // first post-import step
+    {
+        let (lock, cv) = &*gate;
+        *lock.lock().unwrap() = true;
+        cv.notify_all();
+    }
+    drainer.join().unwrap();
+    let v = reply.recv().unwrap().unwrap();
+    assert!(v.get("ok").unwrap().bool().unwrap(), "{v:?}");
+    let answer = answer_of(&v);
+    assert_eq!(handle.shards(), 1, "crashed survivor was not respawned");
+    drop(handle);
+    for j in joins {
+        j.join().unwrap();
+    }
+
+    let m = metrics.lock().unwrap();
+    assert_eq!(m.errors, 0);
+    assert!(m.migrations >= 1, "the drain never migrated the in-flight run");
+    assert_eq!(m.shard_crashes, 1, "resume_panic must crash the importing shard once");
+    assert!(m.runs_recovered >= 1, "the checkpointed run was not re-admitted");
+    drop(m);
+    assert_eq!(
+        vec![answer],
+        fault_free_answers(std::slice::from_ref(&job), backend_seed),
+        "checkpoint recovery changed the decision sequence"
+    );
+}
+
+#[test]
+fn poison_run_is_quarantined_after_its_retry_budget() {
+    // A run whose every step panics keeps killing shards; after
+    // `recover_retries` re-admissions its placement-invariant seed
+    // joins the quarantine list and the client gets a structured
+    // error — and a resubmit is refused at admission, crash-free.
+    let backend_seed = 0xFA04;
+    let spec = FaultSpec { seed: 0xC4A4, panic_rate: 1.0, ..FaultSpec::default() };
+    let budget = FaultInjector::shared_budget(&spec);
+    let mut cfg = SsrConfig::default();
+    cfg.shards = 1;
+    cfg.recover_retries = 1;
+    let metrics = Arc::new(Mutex::new(Metrics::new()));
+    let (handle, joins) = BackendPool::spawn(
+        cfg,
+        tokenizer::builtin_vocab(),
+        Arc::clone(&metrics),
+        move |shard| {
+            let inner = Box::new(CalibratedBackend::for_suite(SUITE, backend_seed)?);
+            Ok(Box::new(FaultInjector::new(inner, spec, shard, budget.clone()))
+                as Box<dyn Backend>)
+        },
+    )
+    .unwrap();
+
+    let err = submit(&handle, "17+25*3", Method::Baseline, 3)
+        .recv()
+        .unwrap()
+        .expect_err("a poison run must fail, not hang");
+    assert!(
+        format!("{err:#}").contains("quarantin"),
+        "poison reply should say quarantined: {err:#}"
+    );
+    {
+        let m = metrics.lock().unwrap();
+        assert_eq!(m.shard_crashes, 2, "crash once, retry once, then quarantine");
+        assert_eq!(m.quarantined, 1);
+        assert_eq!(m.runs_recovered, 1);
+        assert_eq!(m.runs_replayed, 1);
+        assert_eq!(m.errors, 1);
+    }
+
+    // resubmit of the identical (expr, seed): refused at admission,
+    // without costing another shard
+    let err = submit(&handle, "17+25*3", Method::Baseline, 3)
+        .recv()
+        .unwrap()
+        .expect_err("quarantined run must be refused at admission");
+    assert!(format!("{err:#}").contains("quarantin"), "{err:#}");
+    assert_eq!(handle.shards(), 1, "pool must stay serving on its respawned shard");
+    drop(handle);
+    for j in joins {
+        j.join().unwrap();
+    }
+    let m = metrics.lock().unwrap();
+    assert_eq!(m.shard_crashes, 2, "the quarantine check must fire before the backend");
+    assert_eq!(m.errors, 2);
+}

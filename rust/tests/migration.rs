@@ -168,7 +168,7 @@ fn submit(
 ) -> mpsc::Receiver<anyhow::Result<Value>> {
     let (rtx, rrx) = mpsc::channel();
     handle
-        .submit(SolveRequest { expr: expr.to_string(), method, seed, reply: rtx })
+        .submit(SolveRequest { expr: expr.to_string(), method, seed, deadline_ms: 0, reply: rtx })
         .unwrap();
     rrx
 }

@@ -1,12 +1,16 @@
 //! TCP server protocol round-trip over the calibrated backend (no
-//! artifacts needed): solve / stats / error handling / shutdown.
+//! artifacts needed): solve / stats / error handling / shutdown,
+//! plus the fault-tolerance wire surface (DESIGN.md §13): per-request
+//! deadlines with degraded replies, and oversized/malformed request
+//! lines answered without dropping the connection.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 
 use ssr::backend::calibrated::CalibratedBackend;
+use ssr::backend::faulty::FaultInjector;
 use ssr::backend::Backend;
-use ssr::config::SsrConfig;
+use ssr::config::{FaultSpec, SsrConfig};
 use ssr::coordinator::server::Server;
 use ssr::model::tokenizer;
 use ssr::util::json::Value;
@@ -89,6 +93,104 @@ fn solve_stats_shutdown_roundtrip() {
     let r = request(&mut stream, r#"{"op":"shutdown"}"#);
     assert!(r.get("ok").unwrap().bool().unwrap());
     handle.join().unwrap();
+}
+
+#[test]
+fn deadline_expiry_returns_a_degraded_reply() {
+    // Every step stalls 30ms (seeded injector, unlimited budget), the
+    // wire deadline is 5ms: expiry is guaranteed by construction — the
+    // deadline scan at the first post-stall step boundary force-stops
+    // the run and finalizes from the votes so far. No timing race: the
+    // test never assumes a sleep finishes "fast enough", only that a
+    // 30ms stall cannot beat a 5ms deadline.
+    let cfg = SsrConfig::default();
+    let vocab = tokenizer::builtin_vocab();
+    let spec =
+        FaultSpec { seed: 11, stall_rate: 1.0, stall_ms: 30, ..FaultSpec::default() };
+    let budget = FaultInjector::shared_budget(&spec);
+    let (server, listener) = Server::start("127.0.0.1", 0, cfg, vocab, move |shard| {
+        let inner = Box::new(CalibratedBackend::for_suite("synth-math500", 7)?);
+        Ok(Box::new(FaultInjector::new(inner, spec, shard, budget.clone()))
+            as Box<dyn Backend>)
+    })
+    .unwrap();
+    let addr = server.addr.clone();
+    let srv = std::thread::spawn(move || {
+        let pool = ThreadPool::new(2);
+        server.serve(listener, &pool).unwrap();
+    });
+    let mut s = TcpStream::connect(&addr).unwrap();
+
+    let r = request(
+        &mut s,
+        r#"{"op":"solve","expr":"17+25*3","method":"baseline","seed":5,"deadline_ms":5}"#,
+    );
+    assert!(r.get("ok").unwrap().bool().unwrap(), "{r:?}");
+    assert!(
+        r.get("degraded").unwrap().bool().unwrap(),
+        "a 5ms deadline against 30ms step stalls must degrade: {r:?}"
+    );
+
+    // no deadline: the same request runs to completion, undegraded
+    let r = request(&mut s, r#"{"op":"solve","expr":"17+25*3","method":"baseline","seed":5}"#);
+    assert!(r.get("ok").unwrap().bool().unwrap(), "{r:?}");
+    assert!(!r.get("degraded").unwrap().bool().unwrap());
+
+    let r = request(&mut s, r#"{"op":"stats"}"#);
+    assert!(r.get_i64("deadline_expirations").unwrap() >= 1);
+    assert!(r.get_i64("degraded_replies").unwrap() >= 1);
+    assert_eq!(r.get_i64("errors").unwrap(), 0, "degradation is not an error");
+
+    let _ = request(&mut s, r#"{"op":"shutdown"}"#);
+    srv.join().unwrap();
+}
+
+#[test]
+fn oversized_lines_get_an_error_without_dropping_the_connection() {
+    let cfg = SsrConfig::default();
+    let vocab = tokenizer::builtin_vocab();
+    let (server, listener) = Server::start("127.0.0.1", 0, cfg, vocab, |_shard| {
+        Ok(Box::new(CalibratedBackend::for_suite("synth-math500", 7)?) as Box<dyn Backend>)
+    })
+    .unwrap();
+    let addr = server.addr.clone();
+    let srv = std::thread::spawn(move || {
+        let pool = ThreadPool::new(2);
+        server.serve(listener, &pool).unwrap();
+    });
+    let mut s = TcpStream::connect(&addr).unwrap();
+
+    // a 2 MiB line: bounded read caps the buffer at 1 MiB, drains the
+    // remainder, and answers with a structured error
+    let big = vec![b'x'; 2 << 20];
+    s.write_all(&big).unwrap();
+    s.write_all(b"\n").unwrap();
+    s.flush().unwrap();
+    let mut reader = BufReader::new(s.try_clone().unwrap());
+    let mut reply = String::new();
+    reader.read_line(&mut reply).unwrap();
+    let r = Value::parse(&reply).unwrap();
+    assert!(!r.get("ok").unwrap().bool().unwrap());
+    assert!(r.get_str("error").unwrap().contains("exceeds"), "{r:?}");
+
+    // the same connection still serves
+    let r = request(&mut s, r#"{"op":"solve","expr":"3+4","seed":1}"#);
+    assert!(r.get("ok").unwrap().bool().unwrap(), "{r:?}");
+    assert_eq!(r.get_i64("gold").unwrap(), 7);
+
+    // non-UTF-8 bytes: error reply, connection survives
+    s.write_all(&[0xff, 0xfe, 0xfd, b'\n']).unwrap();
+    s.flush().unwrap();
+    let mut reply = String::new();
+    let mut reader = BufReader::new(s.try_clone().unwrap());
+    reader.read_line(&mut reply).unwrap();
+    let r = Value::parse(&reply).unwrap();
+    assert!(!r.get("ok").unwrap().bool().unwrap());
+    let r = request(&mut s, r#"{"op":"solve","expr":"2+2","seed":1}"#);
+    assert!(r.get("ok").unwrap().bool().unwrap(), "{r:?}");
+
+    let _ = request(&mut s, r#"{"op":"shutdown"}"#);
+    srv.join().unwrap();
 }
 
 #[test]

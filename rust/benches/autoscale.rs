@@ -28,6 +28,7 @@ use ssr::backend::{
     StepOutcome,
 };
 use ssr::config::{PlacePolicy, SsrConfig, StopRule};
+use ssr::coordinator::admission::QosClass;
 use ssr::coordinator::autoscaler::Autoscaler;
 use ssr::coordinator::engine::Method;
 use ssr::coordinator::metrics::Metrics;
@@ -171,7 +172,14 @@ fn submit(
 ) -> mpsc::Receiver<anyhow::Result<ssr::util::json::Value>> {
     let (rtx, rrx) = mpsc::channel();
     handle
-        .submit(SolveRequest { expr: expr.to_string(), method, seed, deadline_ms: 0, reply: rtx })
+        .submit(SolveRequest {
+            expr: expr.to_string(),
+            method,
+            seed,
+            deadline_ms: 0,
+            class: QosClass::default(),
+            reply: rtx,
+        })
         .expect("pool alive");
     rrx
 }

@@ -28,6 +28,7 @@ use ssr::backend::calibrated::CalibratedBackend;
 use ssr::backend::faulty::FaultInjector;
 use ssr::backend::Backend;
 use ssr::config::{FaultSpec, SsrConfig, StopRule};
+use ssr::coordinator::admission::QosClass;
 use ssr::coordinator::engine::Method;
 use ssr::coordinator::metrics::Metrics;
 use ssr::coordinator::pool::{BackendPool, PoolHandle};
@@ -51,7 +52,14 @@ fn submit(
     let (rtx, rrx) = mpsc::channel();
     let method = Method::Ssr { n: 3, tau: 7, stop: StopRule::Full };
     handle
-        .submit(SolveRequest { expr: expr.to_string(), method, seed, deadline_ms: 0, reply: rtx })
+        .submit(SolveRequest {
+            expr: expr.to_string(),
+            method,
+            seed,
+            deadline_ms: 0,
+            class: QosClass::default(),
+            reply: rtx,
+        })
         .expect("pool alive");
     rrx
 }

@@ -21,6 +21,7 @@ use std::time::Instant;
 use ssr::backend::calibrated::CalibratedBackend;
 use ssr::backend::Backend;
 use ssr::config::{PlacePolicy, SsrConfig, StopRule};
+use ssr::coordinator::admission::QosClass;
 use ssr::coordinator::engine::Method;
 use ssr::coordinator::metrics::Metrics;
 use ssr::coordinator::pool::{BackendPool, PoolHandle};
@@ -40,7 +41,14 @@ fn submit(
 ) -> mpsc::Receiver<anyhow::Result<ssr::util::json::Value>> {
     let (rtx, rrx) = mpsc::channel();
     handle
-        .submit(SolveRequest { expr: expr.to_string(), method, seed, deadline_ms: 0, reply: rtx })
+        .submit(SolveRequest {
+            expr: expr.to_string(),
+            method,
+            seed,
+            deadline_ms: 0,
+            class: QosClass::default(),
+            reply: rtx,
+        })
         .expect("pool alive");
     rrx
 }

@@ -1,0 +1,624 @@
+//! Overload-safety bench (calibrated backend, no artifacts needed) for
+//! the DESIGN.md §14 intake gates, driven end-to-end over the TCP wire:
+//!
+//! 1. **Flash crowd** — a burst of interactive clients against a
+//!    deliberately small pool (1 shard, 4 lanes, real per-step wall
+//!    cost), once with QoS on (`queue_cap` bounds intake, the rest shed
+//!    with `retry_after_ms`) and once with QoS off (everything queues).
+//!    Acceptance: interactive goodput (replies within the SLO per wall
+//!    second) and p99 are strictly better with QoS on, every admitted
+//!    run replies (zero in-flight drops), and every reject carries a
+//!    sane structured hint.
+//! 2. **Hot tenant** — one greedy tenant firing far past its token
+//!    bucket while compliant tenants trickle. Acceptance: the hog is
+//!    bounded to burst + rate x wall, compliant tenants are all
+//!    admitted.
+//! 3. **Mixed classes** — interactive/batch/best_effort bursts through
+//!    the weighted queues. Acceptance: every reply is structured (ok or
+//!    overloaded), the pool records no errors.
+//!
+//! Every admitted answer from every preset is replayed on a static
+//! single-shard unthrottled pool — the decision-equivalence assert: QoS
+//! may refuse work, it must never change an admitted run's answer.
+//! Emits one BENCH_JSON line for the tracker.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::mpsc;
+use std::sync::{Arc, Barrier, Mutex};
+use std::time::{Duration, Instant};
+
+use ssr::backend::calibrated::CalibratedBackend;
+use ssr::backend::{
+    Backend, BackendMeta, LaneSnapshot, PathId, PathStats, PrefillStats, PrefixHandle,
+    StepOutcome,
+};
+use ssr::config::{SsrConfig, StopRule};
+use ssr::coordinator::admission::QosClass;
+use ssr::coordinator::engine::Method;
+use ssr::coordinator::metrics::Metrics;
+use ssr::coordinator::pool::BackendPool;
+use ssr::coordinator::scheduler::SolveRequest;
+use ssr::coordinator::server::Server;
+use ssr::model::tokenizer;
+use ssr::util::json::{self, Value};
+use ssr::util::threadpool::ThreadPool;
+
+// Calibrated runs take 3..14 steps; at 30ms per throttled step call a
+// solve costs roughly half a second of wall time, so a 16-deep crowd
+// against a queue_cap-4 intake is ~4x past the 2s SLO with QoS off —
+// decisive overload, not a timing coin-flip.
+const STEP_COST: Duration = Duration::from_millis(30);
+const CROWD: usize = 16;
+const SLO_MS: u64 = 2_000;
+const QUEUE_CAP: usize = 4;
+const HOT_RATE: f64 = 2.0;
+const HOT_BURST: f64 = 4.0;
+
+/// Delegating wrapper that makes each generation step cost real wall
+/// time, so queue pressure and SLO misses are measurable; decisions are
+/// driven by the inner calibrated substrate and untouched.
+struct ThrottledBackend {
+    inner: CalibratedBackend,
+    step_sleep: Duration,
+}
+
+impl Backend for ThrottledBackend {
+    fn meta(&self) -> BackendMeta {
+        self.inner.meta()
+    }
+
+    fn select_scores(&mut self, problem: &ssr::workload::Problem) -> anyhow::Result<Vec<f32>> {
+        self.inner.select_scores(problem)
+    }
+
+    fn open_paths(
+        &mut self,
+        problem: &ssr::workload::Problem,
+        strategies: &[Option<usize>],
+        seed: u64,
+        use_draft: bool,
+    ) -> anyhow::Result<Vec<PathId>> {
+        self.inner.open_paths(problem, strategies, seed, use_draft)
+    }
+
+    fn prefill_prefix(
+        &mut self,
+        problem: &ssr::workload::Problem,
+        use_draft: bool,
+        want_scores: bool,
+    ) -> anyhow::Result<PrefixHandle> {
+        self.inner.prefill_prefix(problem, use_draft, want_scores)
+    }
+
+    fn prefix_scores(&mut self, handle: PrefixHandle) -> anyhow::Result<Vec<f32>> {
+        self.inner.prefix_scores(handle)
+    }
+
+    fn fork_paths(
+        &mut self,
+        handle: PrefixHandle,
+        strategies: &[Option<usize>],
+        seed: u64,
+    ) -> anyhow::Result<Vec<PathId>> {
+        self.inner.fork_paths(handle, strategies, seed)
+    }
+
+    fn release_prefix(&mut self, handle: PrefixHandle) -> anyhow::Result<()> {
+        self.inner.release_prefix(handle)
+    }
+
+    fn prefix_bytes(&self, handle: PrefixHandle) -> u64 {
+        self.inner.prefix_bytes(handle)
+    }
+
+    fn prefill_stats(&self) -> PrefillStats {
+        self.inner.prefill_stats()
+    }
+
+    fn draft_step(&mut self, paths: &[PathId]) -> anyhow::Result<Vec<StepOutcome>> {
+        std::thread::sleep(self.step_sleep);
+        self.inner.draft_step(paths)
+    }
+
+    fn score_step(&mut self, paths: &[PathId]) -> anyhow::Result<Vec<u8>> {
+        self.inner.score_step(paths)
+    }
+
+    fn rewrite_step(&mut self, paths: &[PathId]) -> anyhow::Result<Vec<StepOutcome>> {
+        self.inner.rewrite_step(paths)
+    }
+
+    fn accept_step(&mut self, paths: &[PathId]) -> anyhow::Result<()> {
+        self.inner.accept_step(paths)
+    }
+
+    fn target_step(&mut self, paths: &[PathId]) -> anyhow::Result<Vec<StepOutcome>> {
+        std::thread::sleep(self.step_sleep);
+        self.inner.target_step(paths)
+    }
+
+    fn export_lane_state(&mut self, path: PathId) -> anyhow::Result<LaneSnapshot> {
+        self.inner.export_lane_state(path)
+    }
+
+    fn import_lane_state(&mut self, snapshot: LaneSnapshot) -> anyhow::Result<PathId> {
+        self.inner.import_lane_state(snapshot)
+    }
+
+    fn trace(&self, path: PathId) -> &[i32] {
+        self.inner.trace(path)
+    }
+
+    fn close_path(&mut self, path: PathId) -> anyhow::Result<PathStats> {
+        self.inner.close_path(path)
+    }
+
+    fn parse_answer(&self, trace: &[i32]) -> Option<i64> {
+        self.inner.parse_answer(trace)
+    }
+
+    fn clock_secs(&self) -> f64 {
+        self.inner.clock_secs()
+    }
+
+    fn score_histogram(&self) -> ssr::util::stats::Histogram {
+        self.inner.score_histogram()
+    }
+}
+
+/// Small single-shard server on a throttled backend; returns the bound
+/// address and the serve-thread handle (joined after `shutdown`).
+fn start_server(cfg: SsrConfig) -> (String, std::thread::JoinHandle<()>) {
+    let (server, listener) = Server::start("127.0.0.1", 0, cfg, tokenizer::builtin_vocab(), |_s| {
+        let inner = CalibratedBackend::for_suite("synth-math500", 0xBEEF)?;
+        Ok(Box::new(ThrottledBackend { inner, step_sleep: STEP_COST }) as Box<dyn Backend>)
+    })
+    .expect("server start");
+    let addr = server.addr.clone();
+    let srv = std::thread::spawn(move || {
+        let pool = ThreadPool::new(CROWD + 8);
+        server.serve(listener, &pool).unwrap();
+    });
+    (addr, srv)
+}
+
+fn wire(stream: &mut TcpStream, line: &str) -> Value {
+    stream.write_all(line.as_bytes()).unwrap();
+    stream.write_all(b"\n").unwrap();
+    stream.flush().unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut reply = String::new();
+    reader.read_line(&mut reply).unwrap();
+    Value::parse(&reply).expect("json reply")
+}
+
+/// One request on a fresh connection; returns (reply, latency seconds).
+fn wire_once(addr: &str, line: &str) -> (Value, f64) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    let t0 = Instant::now();
+    let r = wire(&mut s, line);
+    (r, t0.elapsed().as_secs_f64())
+}
+
+fn shutdown(addr: &str, srv: std::thread::JoinHandle<()>) -> Value {
+    let mut s = TcpStream::connect(addr).unwrap();
+    let stats = wire(&mut s, r#"{"op":"stats"}"#);
+    let _ = wire(&mut s, r#"{"op":"shutdown"}"#);
+    srv.join().unwrap();
+    stats
+}
+
+fn crowd_expr(i: usize) -> String {
+    format!("{}+{}*{}", i % 7 + 2, i % 9 + 3, i % 3 + 2)
+}
+
+/// `{"op":"solve","expr":E,<rest>}` — assembled in two pieces so the
+/// format lines stay inside the width limit.
+fn solve_line(expr: &str, rest: &str) -> String {
+    format!(r#"{{"op":"solve","expr":"{expr}",{rest}}}"#)
+}
+
+fn percentile(latencies: &mut [f64], q: f64) -> f64 {
+    if latencies.is_empty() {
+        return 0.0;
+    }
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((latencies.len() as f64 * q).ceil() as usize).clamp(1, latencies.len());
+    latencies[idx - 1]
+}
+
+/// A structured `overloaded` reply must carry a sane backoff contract.
+fn assert_overloaded(r: &Value) {
+    assert_eq!(r.get_str("err").unwrap(), "overloaded", "{r:?}");
+    let reason = r.get_str("reason").unwrap();
+    assert!(
+        ["rate_limited", "queue_full", "lane_quota", "shed"].contains(&reason),
+        "unknown reject reason {reason}"
+    );
+    let hint = r.get_i64("retry_after_ms").unwrap();
+    assert!((10..=30_000).contains(&hint), "retry_after_ms={hint}");
+}
+
+/// (expr, method-tag, seed) -> wire answer, for the equivalence replay.
+type Admitted = Vec<(String, &'static str, u64, Option<i64>)>;
+
+struct CrowdReport {
+    admitted: usize,
+    rejected: usize,
+    in_slo: usize,
+    goodput_rps: f64,
+    p99_s: f64,
+    wall_s: f64,
+    pairs: Admitted,
+}
+
+/// Preset 1: CROWD simultaneous interactive solves against a pool that
+/// can hold ~QUEUE_CAP of them. Closed loop: every client sends one
+/// request and waits for its (ok | overloaded) reply.
+fn flash_crowd(qos_on: bool) -> CrowdReport {
+    let mut cfg = SsrConfig::default();
+    cfg.shards = 1;
+    cfg.max_lanes = 4;
+    cfg.qos.enabled = qos_on;
+    cfg.qos.queue_cap = QUEUE_CAP;
+    cfg.qos.slo_ms = SLO_MS;
+    let (addr, srv) = start_server(cfg);
+
+    let barrier = Arc::new(Barrier::new(CROWD));
+    let (tx, rx) = mpsc::channel();
+    let t0 = Instant::now();
+    let clients: Vec<_> = (0..CROWD)
+        .map(|i| {
+            let addr = addr.clone();
+            let barrier = Arc::clone(&barrier);
+            let tx = tx.clone();
+            std::thread::spawn(move || {
+                let rest =
+                    format!(r#""method":"ssr","paths":3,"seed":{i},"class":"interactive""#);
+                let line = solve_line(&crowd_expr(i), &rest);
+                barrier.wait();
+                let (r, lat) = wire_once(&addr, &line);
+                tx.send((i, r, lat)).unwrap();
+            })
+        })
+        .collect();
+    for c in clients {
+        c.join().unwrap();
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    drop(tx);
+
+    let mut pairs = Admitted::new();
+    let mut latencies = Vec::new();
+    let (mut admitted, mut rejected, mut in_slo) = (0usize, 0usize, 0usize);
+    for (i, r, lat) in rx {
+        if r.get("ok").unwrap().bool().unwrap() {
+            admitted += 1;
+            latencies.push(lat);
+            if lat * 1000.0 <= SLO_MS as f64 {
+                in_slo += 1;
+            }
+            pairs.push((crowd_expr(i), "ssr3", i as u64, r.get_i64("answer").ok()));
+        } else {
+            assert_overloaded(&r);
+            rejected += 1;
+        }
+    }
+    let stats = shutdown(&addr, srv);
+    assert_eq!(stats.get_i64("errors").unwrap(), 0);
+    // zero in-flight drops: every admitted request produced a reply
+    assert_eq!(stats.get_i64("requests").unwrap() as usize, admitted);
+    if qos_on {
+        assert!(rejected >= 1, "flash crowd never tripped the intake gates");
+        let shed = stats.get_i64("shed").unwrap();
+        let refused = (stats.get_i64("rejected").unwrap() + shed) as usize;
+        assert_eq!(refused, rejected);
+    } else {
+        assert_eq!(rejected, 0, "QoS off must admit everything");
+        assert_eq!(admitted, CROWD);
+    }
+    let p99_s = percentile(&mut latencies, 0.99);
+    CrowdReport {
+        admitted,
+        rejected,
+        in_slo,
+        goodput_rps: in_slo as f64 / wall_s.max(1e-9),
+        p99_s,
+        wall_s,
+        pairs,
+    }
+}
+
+struct HotReport {
+    hog_admitted: usize,
+    hog_rejected: usize,
+    compliant_admitted: usize,
+    compliant_total: usize,
+    wall_s: f64,
+    pairs: Admitted,
+}
+
+/// Preset 2: tenant `hog` fires 16 back-to-back solves against a
+/// 2/s-rate, 4-burst bucket while tenants t1/t2 send 3 each — under
+/// their burst, so they must all admit.
+fn hot_tenant() -> HotReport {
+    let mut cfg = SsrConfig::default();
+    cfg.shards = 1;
+    cfg.max_lanes = 4;
+    cfg.qos.enabled = true;
+    cfg.qos.tenant_rate = HOT_RATE;
+    cfg.qos.tenant_burst = HOT_BURST;
+    let (addr, srv) = start_server(cfg);
+
+    let t0 = Instant::now();
+    let (tx, rx) = mpsc::channel();
+    let mut threads = Vec::new();
+    // 4 hog connections x 4 sequential requests each
+    for c in 0..4usize {
+        let addr = addr.clone();
+        let tx = tx.clone();
+        threads.push(std::thread::spawn(move || {
+            for k in 0..4usize {
+                let i = c * 4 + k;
+                let rest = format!(r#""method":"baseline","seed":{i},"tenant":"hog""#);
+                let line = solve_line(&crowd_expr(i), &rest);
+                let (r, _) = wire_once(&addr, &line);
+                tx.send(("hog", i, r)).unwrap();
+            }
+        }));
+    }
+    for t in ["t1", "t2"] {
+        let addr = addr.clone();
+        let tx = tx.clone();
+        threads.push(std::thread::spawn(move || {
+            for k in 0..3usize {
+                let i = 100 + k;
+                let rest = format!(r#""method":"baseline","seed":{i},"tenant":"{t}""#);
+                let line = solve_line(&crowd_expr(i), &rest);
+                let (r, _) = wire_once(&addr, &line);
+                tx.send((t, i, r)).unwrap();
+            }
+        }));
+    }
+    for t in threads {
+        t.join().unwrap();
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    drop(tx);
+
+    let mut pairs = Admitted::new();
+    let (mut hog_admitted, mut hog_rejected) = (0usize, 0usize);
+    let (mut compliant_admitted, mut compliant_total) = (0usize, 0usize);
+    for (tenant, i, r) in rx {
+        let ok = r.get("ok").unwrap().bool().unwrap();
+        if tenant == "hog" {
+            if ok {
+                hog_admitted += 1;
+                pairs.push((crowd_expr(i), "baseline", i as u64, r.get_i64("answer").ok()));
+            } else {
+                assert_overloaded(&r);
+                assert_eq!(r.get_str("reason").unwrap(), "rate_limited", "{r:?}");
+                hog_rejected += 1;
+            }
+        } else {
+            compliant_total += 1;
+            assert!(ok, "compliant tenant {tenant} was refused: {r:?}");
+            compliant_admitted += 1;
+        }
+    }
+    let stats = shutdown(&addr, srv);
+    assert_eq!(stats.get_i64("errors").unwrap(), 0);
+    // the hog is bounded by its bucket: burst + rate x wall (+slack
+    // for refill-at-admission-time rounding)
+    let bound = (HOT_BURST + HOT_RATE * wall_s).floor() as usize + 2;
+    assert!(
+        hog_admitted <= bound,
+        "hot tenant broke its bucket: {hog_admitted} admitted, bound {bound} over {wall_s:.2}s"
+    );
+    assert!(hog_rejected >= 1, "the hog was never rate-limited");
+    assert!(
+        stats.get("tenant_rejected").unwrap().get_i64("hog").unwrap() as usize == hog_rejected
+    );
+    HotReport { hog_admitted, hog_rejected, compliant_admitted, compliant_total, wall_s, pairs }
+}
+
+struct MixedReport {
+    admitted_by_class: [usize; 3],
+    rejected: usize,
+    shed: u64,
+    pairs: Admitted,
+}
+
+/// Preset 3: simultaneous interactive/batch/best_effort bursts through
+/// the weighted per-class queues under an SLO.
+fn mixed_classes() -> MixedReport {
+    let mut cfg = SsrConfig::default();
+    cfg.shards = 1;
+    cfg.max_lanes = 4;
+    cfg.qos.enabled = true;
+    cfg.qos.queue_cap = QUEUE_CAP;
+    cfg.qos.slo_ms = SLO_MS;
+    let (addr, srv) = start_server(cfg);
+
+    let classes = ["interactive", "batch", "best_effort"];
+    let barrier = Arc::new(Barrier::new(classes.len() * 6));
+    let (tx, rx) = mpsc::channel();
+    let clients: Vec<_> = (0..classes.len() * 6)
+        .map(|i| {
+            let addr = addr.clone();
+            let barrier = Arc::clone(&barrier);
+            let tx = tx.clone();
+            std::thread::spawn(move || {
+                let class = classes[i % 3];
+                let rest =
+                    format!(r#""method":"ssr","paths":3,"seed":{i},"class":"{class}""#);
+                let line = solve_line(&crowd_expr(i), &rest);
+                barrier.wait();
+                let (r, _) = wire_once(&addr, &line);
+                tx.send((i, r)).unwrap();
+            })
+        })
+        .collect();
+    for c in clients {
+        c.join().unwrap();
+    }
+    drop(tx);
+
+    let mut pairs = Admitted::new();
+    let mut admitted_by_class = [0usize; 3];
+    let mut rejected = 0usize;
+    for (i, r) in rx {
+        if r.get("ok").unwrap().bool().unwrap() {
+            admitted_by_class[i % 3] += 1;
+            pairs.push((crowd_expr(i), "ssr3", i as u64, r.get_i64("answer").ok()));
+        } else {
+            assert_overloaded(&r);
+            rejected += 1;
+        }
+    }
+    let stats = shutdown(&addr, srv);
+    assert_eq!(stats.get_i64("errors").unwrap(), 0);
+    let shed = stats.get_i64("shed").unwrap() as u64;
+    MixedReport { admitted_by_class, rejected, shed, pairs }
+}
+
+/// Replay every admitted (expr, method, seed) on a static single-shard
+/// unthrottled pool and demand the same answers.
+fn assert_decision_equivalence(pairs: &Admitted) {
+    let mut unique: HashMap<(String, &'static str, u64), Option<i64>> = HashMap::new();
+    for (expr, m, seed, answer) in pairs {
+        if let Some(prev) = unique.insert((expr.clone(), m, *seed), *answer) {
+            assert_eq!(prev, *answer, "same job, two answers: {expr} seed {seed}");
+        }
+    }
+    let cfg = SsrConfig::default();
+    let metrics = Arc::new(Mutex::new(Metrics::new()));
+    let (handle, joins) =
+        BackendPool::spawn(cfg, tokenizer::builtin_vocab(), Arc::clone(&metrics), |_s| {
+            Ok(Box::new(CalibratedBackend::for_suite("synth-math500", 0xBEEF)?)
+                as Box<dyn Backend>)
+        })
+        .expect("reference pool");
+    for ((expr, m, seed), wire_answer) in &unique {
+        let method = match *m {
+            "baseline" => Method::Baseline,
+            _ => Method::Ssr { n: 3, tau: 7, stop: StopRule::Full },
+        };
+        let (rtx, rrx) = mpsc::channel();
+        handle
+            .submit(SolveRequest {
+                expr: expr.clone(),
+                method,
+                seed: *seed,
+                deadline_ms: 0,
+                class: QosClass::default(),
+                reply: rtx,
+            })
+            .expect("pool alive");
+        let v = rrx.recv().expect("reply").expect("ok");
+        let reference = v.get_i64("answer").ok();
+        assert_eq!(
+            *wire_answer, reference,
+            "QoS changed an admitted decision: {expr} seed {seed}"
+        );
+    }
+    drop(handle);
+    for j in joins {
+        j.join().unwrap();
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let t_start = Instant::now();
+    println!(
+        "## overload: flash crowd {CROWD} vs queue_cap {QUEUE_CAP} (QoS on/off), \
+         hot tenant {HOT_RATE}/s burst {HOT_BURST}, mixed-class burst — 1 shard x 4 lanes, \
+         {}ms step cost",
+        STEP_COST.as_millis()
+    );
+
+    let on = flash_crowd(true);
+    let off = flash_crowd(false);
+    println!(
+        "  flash crowd  QoS on : {}/{} admitted ({} in SLO), p99 {:.3}s, \
+         goodput {:.2}/s, wall {:.2}s",
+        on.admitted, CROWD, on.in_slo, on.p99_s, on.goodput_rps, on.wall_s
+    );
+    println!(
+        "  flash crowd  QoS off: {}/{} admitted ({} in SLO), p99 {:.3}s, \
+         goodput {:.2}/s, wall {:.2}s",
+        off.admitted, CROWD, off.in_slo, off.p99_s, off.goodput_rps, off.wall_s
+    );
+    // ISSUE acceptance: under overload, interactive goodput and p99 are
+    // strictly better with the gates on
+    assert!(
+        on.goodput_rps > off.goodput_rps,
+        "QoS on did not improve goodput: {:.3}/s vs {:.3}/s",
+        on.goodput_rps,
+        off.goodput_rps
+    );
+    assert!(
+        on.p99_s < off.p99_s,
+        "QoS on did not improve p99: {:.3}s vs {:.3}s",
+        on.p99_s,
+        off.p99_s
+    );
+
+    let hot = hot_tenant();
+    println!(
+        "  hot tenant: hog {}/{} admitted ({} rate-limited), compliant {}/{}, wall {:.2}s",
+        hot.hog_admitted,
+        hot.hog_admitted + hot.hog_rejected,
+        hot.hog_rejected,
+        hot.compliant_admitted,
+        hot.compliant_total,
+        hot.wall_s
+    );
+    assert!(
+        hot.compliant_admitted as f64 >= 0.9 * hot.compliant_total as f64,
+        "compliant tenants starved"
+    );
+
+    let mixed = mixed_classes();
+    println!(
+        "  mixed classes: admitted i/b/e = {:?}, {} rejected, {} shed",
+        mixed.admitted_by_class, mixed.rejected, mixed.shed
+    );
+
+    let mut all_pairs = Admitted::new();
+    all_pairs.extend(on.pairs.iter().cloned());
+    all_pairs.extend(off.pairs.iter().cloned());
+    all_pairs.extend(hot.pairs.iter().cloned());
+    all_pairs.extend(mixed.pairs.iter().cloned());
+    assert_decision_equivalence(&all_pairs);
+    println!("  decision equivalence: {} admitted runs replayed identically", all_pairs.len());
+
+    let summary = json::obj(vec![
+        ("bench", json::s("overload")),
+        ("crowd", json::i(CROWD as i64)),
+        ("queue_cap", json::i(QUEUE_CAP as i64)),
+        ("slo_ms", json::i(SLO_MS as i64)),
+        // the tracker's regression gate keys on *throughput* scalars
+        ("interactive_goodput_throughput_rps", json::n(on.goodput_rps)),
+        ("goodput_qos_off_rps", json::n(off.goodput_rps)),
+        ("interactive_p99_on_s", json::n(on.p99_s)),
+        ("interactive_p99_off_s", json::n(off.p99_s)),
+        ("flash_rejected", json::i(on.rejected as i64)),
+        ("overload_shed_rate", json::n(on.rejected as f64 / CROWD as f64)),
+        ("hot_admitted", json::i(hot.hog_admitted as i64)),
+        ("hot_rejected", json::i(hot.hog_rejected as i64)),
+        (
+            "compliant_admit_rate",
+            json::n(hot.compliant_admitted as f64 / hot.compliant_total.max(1) as f64),
+        ),
+        ("mixed_rejected", json::i(mixed.rejected as i64)),
+        ("mixed_shed", json::i(mixed.shed as i64)),
+        ("qos_equivalent", Value::Bool(true)),
+        ("wall_s", json::n(t_start.elapsed().as_secs_f64())),
+    ]);
+    println!("\nBENCH_JSON {}", summary.print());
+    println!("[bench overload] completed in {:.2}s", t_start.elapsed().as_secs_f64());
+    Ok(())
+}

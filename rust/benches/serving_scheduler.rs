@@ -32,6 +32,7 @@ use std::time::Instant;
 use ssr::backend::calibrated::CalibratedBackend;
 use ssr::backend::Backend;
 use ssr::config::{PlacePolicy, SsrConfig, StopRule};
+use ssr::coordinator::admission::QosClass;
 use ssr::coordinator::engine::Method;
 use ssr::coordinator::metrics::Metrics;
 use ssr::coordinator::pool::BackendPool;
@@ -104,6 +105,7 @@ fn run_mode(label: &str, max_lanes: usize, shards: usize) -> anyhow::Result<Mode
                             method: mixed_method(c * JOBS_PER_CLIENT + j),
                             seed: (c * 1009 + j) as u64,
                             deadline_ms: 0,
+                            class: QosClass::default(),
                             reply: rtx,
                         })
                         .expect("pool alive");

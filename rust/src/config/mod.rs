@@ -280,6 +280,146 @@ impl FaultSpec {
     }
 }
 
+/// Per-tenant token-bucket override (`qos.tenants` / `--tenants '<json>'`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantOverride {
+    pub name: String,
+    /// sustained admits per second (0 = unlimited for this tenant)
+    pub rate: f64,
+    /// bucket capacity (max burst admitted at once)
+    pub burst: f64,
+}
+
+/// Overload-protection and QoS knobs (`coordinator::admission`,
+/// DESIGN.md §14). Requests carry optional `tenant` and `class` wire
+/// fields; admission gates intake with per-tenant token buckets,
+/// per-class bounded queues with weighted dequeue, fair-share lane
+/// quotas, and SLO-driven shedding of low-priority classes. Rejected
+/// requests get a structured `overloaded` reply with `retry_after_ms`
+/// — in-flight work is never dropped, only new intake is shed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QosCfg {
+    /// master switch: off = legacy unbounded intake (every request
+    /// admitted; class still recorded for metrics)
+    pub enabled: bool,
+    /// default per-tenant sustained admit rate in requests/second
+    /// (0 = no rate limit)
+    pub tenant_rate: f64,
+    /// default per-tenant bucket capacity (burst size)
+    pub tenant_burst: f64,
+    /// per-tenant overrides of (rate, burst)
+    pub tenants: Vec<TenantOverride>,
+    /// per-class bound on requests in the system (queued + in flight);
+    /// a full class rejects new intake with `retry_after_ms`
+    /// (0 = unbounded)
+    pub queue_cap: usize,
+    /// weighted-round-robin dequeue credits for
+    /// [interactive, batch, best_effort] — each class is guaranteed
+    /// weight/total of admissions while its queue is non-empty, so
+    /// neither batch nor interactive can starve the other
+    pub weights: [u64; 3],
+    /// interactive p99 latency SLO in milliseconds: when breached,
+    /// best_effort intake is shed first (batch past 2x); also a
+    /// scale-up pressure signal for the autoscaler (0 = off)
+    pub slo_ms: u64,
+    /// max cumulative shard-seconds (`model_secs`) the autoscaler may
+    /// spend before scale-ups are vetoed (0 = unlimited)
+    pub cost_ceiling_s: f64,
+    /// fair-share lane quota: one tenant may hold at most this
+    /// fraction of total lane capacity (shards x max_lanes) in flight
+    pub lane_share: f64,
+    /// cardinality bound on tracked tenants (token buckets + gauges);
+    /// beyond it, the least-recently-used idle bucket is recycled
+    pub max_tenants: usize,
+}
+
+impl Default for QosCfg {
+    fn default() -> Self {
+        QosCfg {
+            enabled: true,
+            tenant_rate: 0.0,
+            tenant_burst: 16.0,
+            tenants: Vec::new(),
+            queue_cap: 256,
+            weights: [4, 2, 1],
+            slo_ms: 0,
+            cost_ceiling_s: 0.0,
+            lane_share: 0.5,
+            max_tenants: 256,
+        }
+    }
+}
+
+impl QosCfg {
+    /// Effective (rate, burst) for a tenant name.
+    pub fn bucket_for(&self, tenant: &str) -> (f64, f64) {
+        for t in &self.tenants {
+            if t.name == tenant {
+                return (t.rate, t.burst);
+            }
+        }
+        (self.tenant_rate, self.tenant_burst)
+    }
+
+    fn parse_tenants(&mut self, v: &Value) -> Result<()> {
+        self.tenants.clear();
+        for (name, spec) in v.obj()? {
+            let mut rate = self.tenant_rate;
+            let mut burst = self.tenant_burst;
+            for (k, val) in spec.obj()? {
+                match k.as_str() {
+                    "rate" => rate = val.f64()?,
+                    "burst" => burst = val.f64()?,
+                    other => bail!("unknown tenant override key `{other}`"),
+                }
+            }
+            self.tenants.push(TenantOverride { name: name.clone(), rate, burst });
+        }
+        Ok(())
+    }
+
+    fn parse_weights(&mut self, s: &str) -> Result<()> {
+        let parts: Vec<&str> = s.split(',').collect();
+        if parts.len() != 3 {
+            bail!("class weights must be `interactive,batch,best_effort`, got `{s}`");
+        }
+        for (i, p) in parts.iter().enumerate() {
+            self.weights[i] = p
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad class weight `{p}` in `{s}`"))?;
+        }
+        Ok(())
+    }
+
+    fn apply_json(&mut self, v: &Value) -> Result<()> {
+        for (k, val) in v.obj()? {
+            match k.as_str() {
+                "enabled" => self.enabled = val.bool()?,
+                "tenant_rate" => self.tenant_rate = val.f64()?,
+                "tenant_burst" => self.tenant_burst = val.f64()?,
+                "tenants" => self.parse_tenants(val)?,
+                "queue_cap" => self.queue_cap = val.usize()?,
+                "weights" => {
+                    let a = val.arr()?;
+                    if a.len() != 3 {
+                        bail!("qos.weights must have 3 entries, got {}", a.len());
+                    }
+                    for (i, x) in a.iter().enumerate() {
+                        self.weights[i] = x.i64()? as u64;
+                    }
+                }
+                "slo_ms" => self.slo_ms = val.i64()? as u64,
+                "cost_ceiling_s" => self.cost_ceiling_s = val.f64()?,
+                "lane_share" => self.lane_share = val.f64()?,
+                "max_tenants" => self.max_tenants = val.usize()?,
+                other => bail!("unknown qos key `{other}`"),
+            }
+        }
+        Ok(())
+    }
+}
+
 fn parse_bool(s: &str) -> Result<bool> {
     Ok(match s {
         "on" | "true" | "1" | "yes" => true,
@@ -344,6 +484,17 @@ pub struct SsrConfig {
     /// to a shard crash is re-admitted before it is quarantined and
     /// failed with a structured reply (DESIGN.md §13)
     pub recover_retries: u32,
+    /// LRU bound on the poison-run quarantine list — an adversarial
+    /// client replaying unique poison (expr, seed) pairs cannot grow
+    /// coordinator memory unboundedly; evictions are counted in stats
+    pub quarantine_cap: usize,
+    /// per-connection read/idle timeout in milliseconds: a client that
+    /// opens a socket and never completes a line cannot pin a handler
+    /// thread forever (0 = no timeout)
+    pub conn_idle_timeout_ms: u64,
+    /// overload protection: admission control, priority QoS, bounded
+    /// backpressure, and graceful shedding (DESIGN.md §14)
+    pub qos: QosCfg,
     /// deterministic fault-injection schedule (inactive by default)
     pub fault: FaultSpec,
 }
@@ -371,6 +522,9 @@ impl Default for SsrConfig {
             prefix: PrefixCacheCfg::default(),
             deadline_ms: 0,
             recover_retries: 2,
+            quarantine_cap: 1024,
+            conn_idle_timeout_ms: 30_000,
+            qos: QosCfg::default(),
             fault: FaultSpec::default(),
         }
     }
@@ -401,6 +555,9 @@ impl SsrConfig {
                 "prefix_cache" => self.prefix.apply_json(val)?,
                 "deadline_ms" => self.deadline_ms = val.i64()? as u64,
                 "recover_retries" => self.recover_retries = val.i64()? as u32,
+                "quarantine_cap" => self.quarantine_cap = val.usize()?,
+                "conn_idle_timeout_ms" => self.conn_idle_timeout_ms = val.i64()? as u64,
+                "qos" => self.qos.apply_json(val)?,
                 "fault" => self.fault.apply_json(val)?,
                 other => bail!("unknown config key `{other}`"),
             }
@@ -463,6 +620,24 @@ impl SsrConfig {
         self.prefix.max_bytes = args.opt_u64("prefix-cache-bytes", self.prefix.max_bytes)?;
         self.deadline_ms = args.opt_u64("deadline-ms", self.deadline_ms)?;
         self.recover_retries = args.opt_u64("recover-retries", self.recover_retries as u64)? as u32;
+        self.quarantine_cap = args.opt_usize("quarantine-cap", self.quarantine_cap)?;
+        self.conn_idle_timeout_ms =
+            args.opt_u64("conn-idle-timeout-ms", self.conn_idle_timeout_ms)?;
+        if let Some(s) = args.opt("qos") {
+            self.qos.enabled = parse_bool(s)?;
+        }
+        self.qos.tenant_rate = args.opt_f64("tenant-rate", self.qos.tenant_rate)?;
+        self.qos.tenant_burst = args.opt_f64("tenant-burst", self.qos.tenant_burst)?;
+        if let Some(s) = args.opt("tenants") {
+            let v = Value::parse(s).with_context(|| format!("parsing --tenants `{s}`"))?;
+            self.qos.parse_tenants(&v)?;
+        }
+        self.qos.queue_cap = args.opt_usize("queue-cap", self.qos.queue_cap)?;
+        if let Some(s) = args.opt("class-weights") {
+            self.qos.parse_weights(s)?;
+        }
+        self.qos.slo_ms = args.opt_u64("slo-ms", self.qos.slo_ms)?;
+        self.qos.cost_ceiling_s = args.opt_f64("cost-ceiling", self.qos.cost_ceiling_s)?;
         if let Some(s) = args.opt("fault-spec") {
             let v = Value::parse(s).with_context(|| format!("parsing --fault-spec `{s}`"))?;
             self.fault.apply_json(&v)?;
@@ -543,6 +718,54 @@ impl SsrConfig {
         }
         if self.recover_retries > 16 {
             bail!("recover_retries must be <= 16, got {}", self.recover_retries);
+        }
+        if self.quarantine_cap == 0 || self.quarantine_cap > 1 << 20 {
+            bail!("quarantine_cap must be in 1..=1048576, got {}", self.quarantine_cap);
+        }
+        if self.conn_idle_timeout_ms > 86_400_000 {
+            bail!(
+                "conn_idle_timeout_ms must be <= 86400000 (one day), got {}",
+                self.conn_idle_timeout_ms
+            );
+        }
+        let q = &self.qos;
+        for (name, x) in [
+            ("tenant_rate", q.tenant_rate),
+            ("tenant_burst", q.tenant_burst),
+            ("cost_ceiling_s", q.cost_ceiling_s),
+        ] {
+            if !x.is_finite() || x < 0.0 {
+                bail!("qos.{name} must be a finite number >= 0, got {x}");
+            }
+        }
+        for t in &q.tenants {
+            if !t.rate.is_finite() || t.rate < 0.0 || !t.burst.is_finite() || t.burst < 0.0 {
+                bail!("qos tenant `{}` rate/burst must be finite and >= 0", t.name);
+            }
+            if t.rate > 0.0 && t.burst < 1.0 {
+                bail!("qos tenant `{}`: burst must be >= 1 when rate limited", t.name);
+            }
+        }
+        if q.tenant_rate > 0.0 && q.tenant_burst < 1.0 {
+            bail!("qos.tenant_burst must be >= 1 when tenant_rate > 0");
+        }
+        if q.queue_cap > 1 << 16 {
+            bail!("qos.queue_cap must be <= 65536, got {}", q.queue_cap);
+        }
+        if q.weights.iter().sum::<u64>() == 0 {
+            bail!("qos.weights must not all be zero");
+        }
+        if q.weights.iter().any(|&w| w > 1024) {
+            bail!("qos.weights entries must be <= 1024, got {:?}", q.weights);
+        }
+        if q.slo_ms > 3_600_000 {
+            bail!("qos.slo_ms must be <= 3600000, got {}", q.slo_ms);
+        }
+        if !(0.0..=1.0).contains(&q.lane_share) || q.lane_share == 0.0 {
+            bail!("qos.lane_share must be in (0, 1], got {}", q.lane_share);
+        }
+        if q.max_tenants == 0 || q.max_tenants > 4096 {
+            bail!("qos.max_tenants must be in 1..=4096, got {}", q.max_tenants);
         }
         let f = &self.fault;
         for (name, rate) in [
@@ -874,5 +1097,124 @@ mod tests {
         assert!(parse_bool("on").unwrap());
         assert!(!parse_bool("false").unwrap());
         assert!(parse_bool("maybe").is_err());
+    }
+
+    #[test]
+    fn qos_knobs() {
+        let c = SsrConfig::default();
+        assert!(c.qos.enabled, "admission control is the default intake path");
+        assert_eq!(c.qos.queue_cap, 256);
+        assert_eq!(c.qos.weights, [4, 2, 1]);
+        assert_eq!(c.qos.slo_ms, 0, "SLO shedding is opt-in");
+        assert_eq!(c.qos.tenant_rate, 0.0, "rate limiting is opt-in");
+
+        let mut c = SsrConfig::default();
+        let v = Value::parse(
+            r#"{"qos": {"enabled": true, "tenant_rate": 2.5, "tenant_burst": 4,
+                "tenants": {"hot": {"rate": 10, "burst": 20}},
+                "queue_cap": 32, "weights": [8, 3, 1], "slo_ms": 500,
+                "cost_ceiling_s": 120.5, "lane_share": 0.25, "max_tenants": 64}}"#,
+        )
+        .unwrap();
+        c.apply_json(&v).unwrap();
+        assert!((c.qos.tenant_rate - 2.5).abs() < 1e-12);
+        assert_eq!(c.qos.queue_cap, 32);
+        assert_eq!(c.qos.weights, [8, 3, 1]);
+        assert_eq!(c.qos.slo_ms, 500);
+        assert!((c.qos.cost_ceiling_s - 120.5).abs() < 1e-12);
+        assert_eq!(c.qos.bucket_for("hot"), (10.0, 20.0));
+        assert_eq!(c.qos.bucket_for("cold"), (2.5, 4.0), "default applies to others");
+
+        // invalid values rejected
+        let mut c = SsrConfig::default();
+        assert!(c.apply_json(&Value::parse(r#"{"qos": {"bogus": 1}}"#).unwrap()).is_err());
+        let mut c = SsrConfig::default();
+        assert!(c
+            .apply_json(&Value::parse(r#"{"qos": {"tenant_rate": -1}}"#).unwrap())
+            .is_err());
+        let mut c = SsrConfig::default();
+        assert!(c
+            .apply_json(&Value::parse(r#"{"qos": {"weights": [0, 0, 0]}}"#).unwrap())
+            .is_err());
+        let mut c = SsrConfig::default();
+        assert!(c
+            .apply_json(&Value::parse(r#"{"qos": {"weights": [1, 2]}}"#).unwrap())
+            .is_err());
+        let mut c = SsrConfig::default();
+        assert!(c
+            .apply_json(&Value::parse(r#"{"qos": {"lane_share": 1.5}}"#).unwrap())
+            .is_err());
+        let mut c = SsrConfig::default();
+        assert!(c
+            .apply_json(&Value::parse(r#"{"qos": {"queue_cap": 100000}}"#).unwrap())
+            .is_err());
+        // a rate-limited tenant with a sub-1 burst could never admit
+        let mut c = SsrConfig::default();
+        assert!(c
+            .apply_json(
+                &Value::parse(r#"{"qos": {"tenant_rate": 5, "tenant_burst": 0.5}}"#).unwrap()
+            )
+            .is_err());
+
+        let argv: Vec<String> = [
+            "serve",
+            "--qos",
+            "on",
+            "--tenant-rate",
+            "3",
+            "--tenant-burst",
+            "6",
+            "--tenants",
+            r#"{"vip": {"rate": 100, "burst": 200}}"#,
+            "--queue-cap",
+            "16",
+            "--class-weights",
+            "6,3,2",
+            "--slo-ms",
+            "250",
+            "--cost-ceiling",
+            "60",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let mut args = Args::parse(&argv).unwrap();
+        let mut c = SsrConfig::default();
+        c.apply_args(&mut args).unwrap();
+        args.finish().unwrap();
+        assert!((c.qos.tenant_rate - 3.0).abs() < 1e-12);
+        assert!((c.qos.tenant_burst - 6.0).abs() < 1e-12);
+        assert_eq!(c.qos.bucket_for("vip"), (100.0, 200.0));
+        assert_eq!(c.qos.queue_cap, 16);
+        assert_eq!(c.qos.weights, [6, 3, 2]);
+        assert_eq!(c.qos.slo_ms, 250);
+        assert!((c.qos.cost_ceiling_s - 60.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn connection_and_quarantine_knobs() {
+        let c = SsrConfig::default();
+        assert_eq!(c.conn_idle_timeout_ms, 30_000, "slow-loris guard on by default");
+        assert_eq!(c.quarantine_cap, 1024);
+
+        let mut c = SsrConfig::default();
+        let v = Value::parse(r#"{"conn_idle_timeout_ms": 5000, "quarantine_cap": 16}"#).unwrap();
+        c.apply_json(&v).unwrap();
+        assert_eq!(c.conn_idle_timeout_ms, 5000);
+        assert_eq!(c.quarantine_cap, 16);
+
+        let mut c = SsrConfig::default();
+        assert!(c.apply_json(&Value::parse(r#"{"quarantine_cap": 0}"#).unwrap()).is_err());
+
+        let argv: Vec<String> =
+            ["serve", "--conn-idle-timeout-ms", "1000", "--quarantine-cap", "8"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        let mut args = Args::parse(&argv).unwrap();
+        let mut c = SsrConfig::default();
+        c.apply_args(&mut args).unwrap();
+        assert_eq!(c.conn_idle_timeout_ms, 1000);
+        assert_eq!(c.quarantine_cap, 8);
     }
 }

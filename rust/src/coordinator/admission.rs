@@ -1,0 +1,539 @@
+//! Admission control and QoS at the serving boundary (DESIGN.md §14).
+//!
+//! PR 6 made the pool survive internal faults; this layer protects it
+//! from the *outside*: a flash crowd or one hot tenant must not degrade
+//! everyone. Requests carry optional `tenant` and `class` wire fields,
+//! and before a job touches the pool the [`AdmissionController`] runs
+//! four gates, in order:
+//!
+//! 1. **SLO shedding** — when the interactive p99 exceeds
+//!    `qos.slo_ms`, `best_effort` intake is shed first; `batch` joins
+//!    once the breach passes 2x the SLO. `interactive` is never shed by
+//!    SLO (it is bounded by its own queue cap instead).
+//! 2. **Per-tenant token bucket** — each tenant refills at
+//!    `qos.tenant_rate` admits/second up to `qos.tenant_burst`
+//!    (overridable per tenant); a dry bucket rejects with a
+//!    `retry_after_ms` computed from the refill time of one token.
+//! 3. **Per-class bounded queue** — at most `qos.queue_cap` requests
+//!    of a class may be in the system (queued + in flight); a full
+//!    class rejects with a `retry_after_ms` derived from the observed
+//!    per-class drain rate.
+//! 4. **Fair-share lane quota** — one tenant may hold at most
+//!    `qos.lane_share` of total lane capacity (shards x max_lanes) in
+//!    flight, so a single tenant cannot monopolize the batch even when
+//!    under its rate limit.
+//!
+//! Every reject is *intake-only*: admitted work is never dropped. An
+//! admitted request returns a [`Permit`] whose `Drop` releases the
+//! class slot and tenant lanes — RAII makes the accounting exact on
+//! every reply path, including errors and panics caught upstream.
+//!
+//! All decision logic takes an explicit `now_s` clock so unit tests
+//! drive time deterministically; the wall-clock entry points
+//! ([`AdmissionController::admit`]) are thin wrappers.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::config::QosCfg;
+
+/// Priority class of a request, carried on the `class` wire field.
+/// Absent field = `Interactive` (pre-QoS clients are latency-sensitive
+/// humans by assumption; batch pipelines opt in explicitly).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum QosClass {
+    #[default]
+    Interactive,
+    Batch,
+    BestEffort,
+}
+
+impl QosClass {
+    pub const ALL: [QosClass; 3] = [QosClass::Interactive, QosClass::Batch, QosClass::BestEffort];
+
+    pub fn parse(s: &str) -> Result<QosClass> {
+        Ok(match s {
+            "interactive" => QosClass::Interactive,
+            "batch" => QosClass::Batch,
+            "best_effort" | "best-effort" => QosClass::BestEffort,
+            _ => bail!("unknown class `{s}` (interactive|batch|best_effort)"),
+        })
+    }
+
+    /// Stable index into per-class arrays (metrics, weights, queues).
+    pub fn idx(self) -> usize {
+        match self {
+            QosClass::Interactive => 0,
+            QosClass::Batch => 1,
+            QosClass::BestEffort => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            QosClass::Interactive => "interactive",
+            QosClass::Batch => "batch",
+            QosClass::BestEffort => "best_effort",
+        }
+    }
+}
+
+/// Why intake was refused — named in the `reason` field of the
+/// structured `overloaded` reply.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectReason {
+    /// the tenant's token bucket is dry
+    RateLimited,
+    /// the class's bounded queue is full
+    QueueFull,
+    /// the tenant holds its full fair share of lanes
+    LaneQuota,
+    /// low-priority intake shed while the interactive SLO is breached
+    Shed,
+}
+
+impl RejectReason {
+    pub fn name(self) -> &'static str {
+        match self {
+            RejectReason::RateLimited => "rate_limited",
+            RejectReason::QueueFull => "queue_full",
+            RejectReason::LaneQuota => "lane_quota",
+            RejectReason::Shed => "shed",
+        }
+    }
+}
+
+/// A structured intake rejection: the wire reply is
+/// `{"ok":false,"err":"overloaded","reason":...,"retry_after_ms":...}`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Reject {
+    pub reason: RejectReason,
+    pub retry_after_ms: u64,
+}
+
+/// Classic token bucket with lazy refill. Time is an explicit seconds
+/// counter so the math is unit-testable without sleeping.
+#[derive(Debug, Clone)]
+struct Bucket {
+    tokens: f64,
+    rate: f64,
+    burst: f64,
+    last_refill_s: f64,
+    /// admission sequence of last use — LRU victim ordering when the
+    /// tenant table hits `max_tenants`
+    last_used: u64,
+}
+
+impl Bucket {
+    fn new(rate: f64, burst: f64, now_s: f64) -> Bucket {
+        Bucket { tokens: burst, rate, burst, last_refill_s: now_s, last_used: 0 }
+    }
+
+    fn refill(&mut self, now_s: f64) {
+        let dt = (now_s - self.last_refill_s).max(0.0);
+        self.tokens = (self.tokens + dt * self.rate).min(self.burst);
+        self.last_refill_s = now_s;
+    }
+
+    /// Seconds until one whole token is available (0 if already).
+    fn time_to_token_s(&self) -> f64 {
+        if self.tokens >= 1.0 || self.rate <= 0.0 {
+            0.0
+        } else {
+            (1.0 - self.tokens) / self.rate
+        }
+    }
+}
+
+const DRAIN_EWMA_ALPHA: f64 = 0.3;
+/// Retry hints are clamped into a sane band: long enough not to invite
+/// an instant retry storm, short enough that clients actually wait.
+const MIN_RETRY_MS: u64 = 10;
+const MAX_RETRY_MS: u64 = 30_000;
+/// Fallback hint before any completion has been observed for a class.
+const DEFAULT_RETRY_MS: u64 = 100;
+
+/// Shared mutable accounting behind one mutex — admit/release are a
+/// few map ops, far cheaper than the solve they gate.
+struct State {
+    seq: u64,
+    buckets: HashMap<String, Bucket>,
+    /// requests in the system (queued + in flight) per class index
+    in_system: [usize; 3],
+    /// outstanding lane estimate per tenant (fair-share quota)
+    tenant_lanes: HashMap<String, usize>,
+    /// EWMA of inter-completion gaps per class — the observed drain
+    /// rate that prices a queue-full retry hint
+    drain_gap_s: [f64; 3],
+    last_finish_s: [Option<f64>; 3],
+}
+
+/// The intake gate. One per server, shared across connection handlers.
+pub struct AdmissionController {
+    cfg: QosCfg,
+    /// total lane capacity (spawn-time shards x max_lanes) — the base
+    /// of the fair-share quota
+    lane_capacity: usize,
+    started: Instant,
+    state: Arc<Mutex<State>>,
+}
+
+/// RAII admission slot: dropping it releases the class slot and the
+/// tenant's lanes, and feeds the drain-rate estimator. Hold it for the
+/// life of the request (submit through reply).
+pub struct Permit {
+    state: Arc<Mutex<State>>,
+    class: usize,
+    tenant: String,
+    lanes: usize,
+    started: Instant,
+}
+
+impl Drop for Permit {
+    fn drop(&mut self) {
+        let now_s = self.started.elapsed().as_secs_f64();
+        if let Ok(mut st) = self.state.lock() {
+            st.release(self.class, &self.tenant, self.lanes, now_s);
+        }
+    }
+}
+
+impl State {
+    fn release(&mut self, class: usize, tenant: &str, lanes: usize, now_s: f64) {
+        self.in_system[class] = self.in_system[class].saturating_sub(1);
+        if let Some(l) = self.tenant_lanes.get_mut(tenant) {
+            *l = l.saturating_sub(lanes);
+            if *l == 0 {
+                self.tenant_lanes.remove(tenant);
+            }
+        }
+        if let Some(prev) = self.last_finish_s[class] {
+            let gap = (now_s - prev).max(0.0);
+            self.drain_gap_s[class] = if self.drain_gap_s[class] > 0.0 {
+                DRAIN_EWMA_ALPHA * gap + (1.0 - DRAIN_EWMA_ALPHA) * self.drain_gap_s[class]
+            } else {
+                gap
+            };
+        }
+        self.last_finish_s[class] = Some(now_s);
+    }
+
+    /// Retry hint for a full class queue: the time one slot takes to
+    /// drain at the observed completion rate.
+    fn drain_hint_ms(&self, class: usize) -> u64 {
+        let gap = self.drain_gap_s[class];
+        if gap <= 0.0 {
+            return DEFAULT_RETRY_MS;
+        }
+        ((gap * 1000.0).ceil() as u64).clamp(MIN_RETRY_MS, MAX_RETRY_MS)
+    }
+}
+
+impl AdmissionController {
+    pub fn new(cfg: QosCfg, lane_capacity: usize) -> AdmissionController {
+        AdmissionController {
+            cfg,
+            lane_capacity: lane_capacity.max(1),
+            started: Instant::now(),
+            state: Arc::new(Mutex::new(State {
+                seq: 0,
+                buckets: HashMap::new(),
+                in_system: [0; 3],
+                tenant_lanes: HashMap::new(),
+                drain_gap_s: [0.0; 3],
+                last_finish_s: [None; 3],
+            })),
+        }
+    }
+
+    /// Max lanes one tenant may hold in flight.
+    fn lane_quota(&self) -> usize {
+        // never below one max-width request, or nothing could admit
+        ((self.lane_capacity as f64 * self.cfg.lane_share).ceil() as usize).max(16)
+    }
+
+    /// Wall-clock entry point used by the server.
+    pub fn admit(
+        &self,
+        tenant: Option<&str>,
+        class: QosClass,
+        lanes: usize,
+        interactive_p99_s: f64,
+    ) -> Result<Permit, Reject> {
+        self.admit_at(tenant, class, lanes, interactive_p99_s, self.started.elapsed().as_secs_f64())
+    }
+
+    /// Deterministic core: all gates evaluated at an explicit time.
+    pub fn admit_at(
+        &self,
+        tenant: Option<&str>,
+        class: QosClass,
+        lanes: usize,
+        interactive_p99_s: f64,
+        now_s: f64,
+    ) -> Result<Permit, Reject> {
+        let tenant = tenant.unwrap_or("");
+        let mut st = self.state.lock().expect("admission state poisoned");
+        st.seq += 1;
+        let seq = st.seq;
+
+        if self.cfg.enabled {
+            // gate 1: SLO shed — low-priority intake first, never
+            // interactive, never anything already admitted
+            if self.cfg.slo_ms > 0 {
+                let slo_s = self.cfg.slo_ms as f64 / 1000.0;
+                let shed = match class {
+                    QosClass::BestEffort => interactive_p99_s > slo_s,
+                    QosClass::Batch => interactive_p99_s > 2.0 * slo_s,
+                    QosClass::Interactive => false,
+                };
+                if shed {
+                    return Err(Reject {
+                        reason: RejectReason::Shed,
+                        retry_after_ms: self.cfg.slo_ms.clamp(MIN_RETRY_MS, MAX_RETRY_MS),
+                    });
+                }
+            }
+
+            // gate 2: per-tenant token bucket (peek; consume only after
+            // every other gate passes so a queue-full reject does not
+            // burn the tenant's tokens)
+            let (rate, burst) = self.cfg.bucket_for(tenant);
+            if rate > 0.0 {
+                if !st.buckets.contains_key(tenant) {
+                    if st.buckets.len() >= self.cfg.max_tenants {
+                        // recycle the least-recently-used bucket; a new
+                        // tenant starting full is the safe direction
+                        if let Some(victim) = st
+                            .buckets
+                            .iter()
+                            .min_by_key(|(_, b)| b.last_used)
+                            .map(|(k, _)| k.clone())
+                        {
+                            st.buckets.remove(&victim);
+                        }
+                    }
+                    st.buckets.insert(tenant.to_string(), Bucket::new(rate, burst, now_s));
+                }
+                let b = st.buckets.get_mut(tenant).expect("bucket just ensured");
+                b.last_used = seq;
+                b.refill(now_s);
+                if b.tokens < 1.0 {
+                    let wait_ms = (b.time_to_token_s() * 1000.0).ceil() as u64;
+                    return Err(Reject {
+                        reason: RejectReason::RateLimited,
+                        retry_after_ms: wait_ms.clamp(MIN_RETRY_MS, MAX_RETRY_MS),
+                    });
+                }
+            }
+
+            // gate 3: per-class bounded queue
+            let ci = class.idx();
+            if self.cfg.queue_cap > 0 && st.in_system[ci] >= self.cfg.queue_cap {
+                let hint = st.drain_hint_ms(ci);
+                return Err(Reject { reason: RejectReason::QueueFull, retry_after_ms: hint });
+            }
+
+            // gate 4: fair-share lane quota
+            let held = st.tenant_lanes.get(tenant).copied().unwrap_or(0);
+            if held + lanes > self.lane_quota() {
+                let hint = st.drain_hint_ms(ci);
+                return Err(Reject { reason: RejectReason::LaneQuota, retry_after_ms: hint });
+            }
+
+            // all gates passed — consume the token
+            if rate > 0.0 {
+                if let Some(b) = st.buckets.get_mut(tenant) {
+                    b.tokens -= 1.0;
+                }
+            }
+        }
+
+        let ci = class.idx();
+        st.in_system[ci] += 1;
+        *st.tenant_lanes.entry(tenant.to_string()).or_insert(0) += lanes;
+        Ok(Permit {
+            state: Arc::clone(&self.state),
+            class: ci,
+            tenant: tenant.to_string(),
+            lanes,
+            started: self.started,
+        })
+    }
+
+    /// Requests currently in the system per class (tests, stats).
+    pub fn in_system(&self) -> [usize; 3] {
+        self.state.lock().expect("admission state poisoned").in_system
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> QosCfg {
+        QosCfg { tenant_rate: 2.0, tenant_burst: 4.0, queue_cap: 8, ..QosCfg::default() }
+    }
+
+    #[test]
+    fn class_parse_and_default() {
+        assert_eq!(QosClass::parse("interactive").unwrap(), QosClass::Interactive);
+        assert_eq!(QosClass::parse("batch").unwrap(), QosClass::Batch);
+        assert_eq!(QosClass::parse("best-effort").unwrap(), QosClass::BestEffort);
+        assert!(QosClass::parse("urgent").is_err());
+        assert_eq!(QosClass::default(), QosClass::Interactive);
+        for (i, c) in QosClass::ALL.iter().enumerate() {
+            assert_eq!(c.idx(), i);
+        }
+    }
+
+    #[test]
+    fn token_bucket_limits_sustained_rate_and_allows_burst() {
+        let ac = AdmissionController::new(cfg(), 64);
+        let mut permits = Vec::new();
+        // burst of 4 admits instantly...
+        for _ in 0..4 {
+            permits.push(
+                ac.admit_at(Some("t"), QosClass::Interactive, 5, 0.0, 0.0)
+                    .expect("burst should admit"),
+            );
+        }
+        // ...the 5th is dry, with a refill-priced retry hint
+        let rej = ac.admit_at(Some("t"), QosClass::Interactive, 5, 0.0, 0.0).unwrap_err();
+        assert_eq!(rej.reason, RejectReason::RateLimited);
+        // one token refills in 1/rate = 0.5s
+        assert!(rej.retry_after_ms >= 400 && rej.retry_after_ms <= 600, "{rej:?}");
+        // after 0.6s one token is back
+        assert!(ac.admit_at(Some("t"), QosClass::Interactive, 5, 0.0, 0.6).is_ok());
+        drop(permits);
+    }
+
+    #[test]
+    fn queue_cap_bounds_in_system_and_released_permits_free_slots() {
+        let mut c = cfg();
+        c.tenant_rate = 0.0; // isolate the queue gate
+        c.queue_cap = 2;
+        let ac = AdmissionController::new(c, 1024);
+        let p1 = ac.admit_at(None, QosClass::Batch, 1, 0.0, 0.0).unwrap();
+        let _p2 = ac.admit_at(None, QosClass::Batch, 1, 0.0, 0.0).unwrap();
+        let rej = ac.admit_at(None, QosClass::Batch, 1, 0.0, 0.0).unwrap_err();
+        assert_eq!(rej.reason, RejectReason::QueueFull);
+        assert!(rej.retry_after_ms >= MIN_RETRY_MS);
+        // other classes are unaffected by batch being full
+        assert!(ac.admit_at(None, QosClass::Interactive, 1, 0.0, 0.0).is_ok());
+        drop(p1);
+        assert_eq!(ac.in_system()[QosClass::Batch.idx()], 1);
+        assert!(ac.admit_at(None, QosClass::Batch, 1, 0.0, 0.1).is_ok());
+    }
+
+    #[test]
+    fn lane_quota_caps_one_tenant_but_not_others() {
+        let mut c = cfg();
+        c.tenant_rate = 0.0;
+        c.queue_cap = 0;
+        c.lane_share = 0.5;
+        // capacity 64 -> quota 32 lanes per tenant
+        let ac = AdmissionController::new(c, 64);
+        let mut held = Vec::new();
+        for _ in 0..4 {
+            held.push(ac.admit_at(Some("pig"), QosClass::Interactive, 8, 0.0, 0.0).unwrap());
+        }
+        let rej = ac.admit_at(Some("pig"), QosClass::Interactive, 8, 0.0, 0.0).unwrap_err();
+        assert_eq!(rej.reason, RejectReason::LaneQuota);
+        // a different tenant still has room
+        assert!(ac.admit_at(Some("other"), QosClass::Interactive, 8, 0.0, 0.0).is_ok());
+        // releasing lanes reopens the quota
+        held.pop();
+        assert!(ac.admit_at(Some("pig"), QosClass::Interactive, 8, 0.0, 0.1).is_ok());
+    }
+
+    #[test]
+    fn slo_breach_sheds_best_effort_then_batch_never_interactive() {
+        let mut c = cfg();
+        c.tenant_rate = 0.0;
+        c.slo_ms = 500;
+        let ac = AdmissionController::new(c, 64);
+        // p99 under SLO: everything admits
+        assert!(ac.admit_at(None, QosClass::BestEffort, 1, 0.4, 0.0).is_ok());
+        // p99 past SLO: best_effort shed, batch + interactive still in
+        let rej = ac.admit_at(None, QosClass::BestEffort, 1, 0.6, 0.0).unwrap_err();
+        assert_eq!(rej.reason, RejectReason::Shed);
+        assert_eq!(rej.retry_after_ms, 500);
+        assert!(ac.admit_at(None, QosClass::Batch, 1, 0.6, 0.0).is_ok());
+        assert!(ac.admit_at(None, QosClass::Interactive, 1, 0.6, 0.0).is_ok());
+        // p99 past 2x SLO: batch joins the shed; interactive never does
+        assert!(ac.admit_at(None, QosClass::Batch, 1, 1.1, 0.0).is_err());
+        assert!(ac.admit_at(None, QosClass::Interactive, 1, 1.1, 0.0).is_ok());
+    }
+
+    #[test]
+    fn queue_full_reject_does_not_burn_tokens() {
+        let mut c = cfg();
+        c.tenant_rate = 1.0;
+        c.tenant_burst = 2.0;
+        c.queue_cap = 1;
+        let ac = AdmissionController::new(c, 64);
+        let _held = ac.admit_at(Some("t"), QosClass::Interactive, 1, 0.0, 0.0).unwrap();
+        // queue full -> reject, but the bucket still holds 1 token...
+        let rej = ac.admit_at(Some("t"), QosClass::Interactive, 1, 0.0, 0.0).unwrap_err();
+        assert_eq!(rej.reason, RejectReason::QueueFull);
+        drop(_held);
+        // ...which admits as soon as the slot frees, without refill time
+        assert!(ac.admit_at(Some("t"), QosClass::Interactive, 1, 0.0, 0.0).is_ok());
+    }
+
+    #[test]
+    fn disabled_qos_admits_everything_but_still_accounts() {
+        let mut c = cfg();
+        c.enabled = false;
+        c.queue_cap = 1;
+        c.tenant_rate = 0.001;
+        let ac = AdmissionController::new(c, 4);
+        let permits: Vec<_> = (0..16)
+            .map(|_| ac.admit_at(Some("t"), QosClass::BestEffort, 8, 99.0, 0.0).unwrap())
+            .collect();
+        assert_eq!(ac.in_system()[QosClass::BestEffort.idx()], 16);
+        drop(permits);
+        assert_eq!(ac.in_system()[QosClass::BestEffort.idx()], 0);
+    }
+
+    #[test]
+    fn tenant_table_is_cardinality_bounded() {
+        let mut c = cfg();
+        c.max_tenants = 4;
+        let ac = AdmissionController::new(c, 1 << 16);
+        let mut permits = Vec::new();
+        for k in 0..64 {
+            permits.push(
+                ac.admit_at(Some(&format!("t{k}")), QosClass::Interactive, 1, 0.0, k as f64)
+                    .unwrap(),
+            );
+        }
+        let st = ac.state.lock().unwrap();
+        assert!(st.buckets.len() <= 4, "bucket table must stay bounded");
+        drop(st);
+        drop(permits);
+    }
+
+    #[test]
+    fn drain_rate_prices_retry_hints() {
+        let mut st = State {
+            seq: 0,
+            buckets: HashMap::new(),
+            in_system: [0; 3],
+            tenant_lanes: HashMap::new(),
+            drain_gap_s: [0.0; 3],
+            last_finish_s: [None; 3],
+        };
+        assert_eq!(st.drain_hint_ms(0), DEFAULT_RETRY_MS, "no data -> default hint");
+        // completions 200ms apart -> hint converges near 200ms
+        for k in 1..=20 {
+            st.release(0, "", 1, 0.2 * k as f64);
+        }
+        let hint = st.drain_hint_ms(0);
+        assert!((150..=260).contains(&hint), "hint {hint} should track the 200ms gap");
+    }
+}

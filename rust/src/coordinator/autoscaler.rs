@@ -9,11 +9,19 @@
 //! * **admission wait** — how long the oldest queued job has been
 //!   waiting (the head-of-line wait a new arrival is about to inherit),
 //! * **occupancy** — outstanding lane estimates / (shards x max_lanes),
+//! * **interactive p99** — the per-class latency reservoir (DESIGN.md
+//!   §14): with `--slo-ms` set, a sustained p99 breach is scale-up
+//!   pressure even when queues look shallow (latency is the contract,
+//!   depth is only a proxy),
 //!
 //! smooths them into EWMAs, and applies a [`Policy`]: scale UP when the
-//! wait or per-shard queue EWMAs breach their thresholds, scale DOWN
-//! when occupancy stays low with empty queues. Two guards keep it from
-//! thrashing the lifecycle primitives:
+//! wait / per-shard queue / SLO-breach EWMAs breach their thresholds,
+//! scale DOWN when occupancy stays low with empty queues and the SLO
+//! intact. With `--cost-ceiling` set, scale-ups are vetoed once the
+//! cumulative backend model-clock (`model_secs`, the shard-seconds
+//! bill) reaches the ceiling — overload is then handled by admission
+//! control alone rather than by unbounded capacity. Two guards keep it
+//! from thrashing the lifecycle primitives:
 //!
 //! * **hysteresis** — a threshold must be breached on `hysteresis`
 //!   *consecutive* evaluations before the policy acts, so one bursty
@@ -44,6 +52,7 @@
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
+use super::admission::QosClass;
 use super::metrics::Metrics;
 use super::pool::PoolHandle;
 use crate::config::{AutoscaleCfg, SsrConfig};
@@ -60,6 +69,12 @@ pub struct Signals {
     pub oldest_wait_s: f64,
     /// outstanding lane estimates across all shards
     pub outstanding_lanes: u64,
+    /// interactive-class p99 latency (seconds; 0.0 before any data) —
+    /// the SLO signal (DESIGN.md §14)
+    pub interactive_p99_s: f64,
+    /// cumulative backend model-clock across all shards (the
+    /// shard-seconds bill the cost ceiling is charged against)
+    pub model_secs: f64,
 }
 
 /// A policy decision the loop should apply.
@@ -79,9 +94,14 @@ pub struct Policy {
     cfg: AutoscaleCfg,
     min_shards: usize,
     max_lanes: usize,
+    /// interactive SLO in seconds (0 = no SLO signal; `--slo-ms`)
+    slo_s: f64,
+    /// max shard-seconds budget (0 = unlimited; `--cost-ceiling`)
+    cost_ceiling_s: f64,
     wait_ewma: f64,
     queue_ewma: f64,
     occ_ewma: f64,
+    p99_ewma: f64,
     up_breaches: u32,
     down_breaches: u32,
     /// virtual milliseconds since the last applied event (starts at
@@ -95,9 +115,12 @@ impl Policy {
             cfg: cfg.autoscale,
             min_shards: cfg.min_shards.max(1),
             max_lanes: cfg.max_lanes.max(1),
+            slo_s: cfg.qos.slo_ms as f64 / 1000.0,
+            cost_ceiling_s: cfg.qos.cost_ceiling_s,
             wait_ewma: 0.0,
             queue_ewma: 0.0,
             occ_ewma: 0.0,
+            p99_ewma: 0.0,
             up_breaches: 0,
             down_breaches: 0,
             since_event_ms: cfg.autoscale.cooldown_ms,
@@ -114,15 +137,23 @@ impl Policy {
         let capacity = (s.shards.max(1) * self.max_lanes) as f64;
         let occ = s.outstanding_lanes as f64 / capacity;
         self.occ_ewma = a * occ + (1.0 - a) * self.occ_ewma;
+        self.p99_ewma = a * s.interactive_p99_s + (1.0 - a) * self.p99_ewma;
 
         let per_shard_queue = self.queue_ewma / s.shards.max(1) as f64;
+        // a sustained interactive-SLO breach is scale-up pressure on
+        // its own: depth/wait are throughput proxies, the p99 IS the
+        // contract (DESIGN.md §14)
+        let slo_breach = self.slo_s > 0.0 && self.p99_ewma > self.slo_s;
         let pressured = self.wait_ewma > self.cfg.scale_up_wait_s
-            || per_shard_queue > self.cfg.scale_up_queue;
+            || per_shard_queue > self.cfg.scale_up_queue
+            || slo_breach;
         // scale-down wants sustained slack: low occupancy AND nothing
         // queued right now AND no meaningful head-of-line wait building
+        // AND the interactive SLO intact
         let slack = self.occ_ewma < self.cfg.scale_down_occupancy
             && s.queued_jobs == 0
-            && self.wait_ewma < self.cfg.scale_up_wait_s * 0.5;
+            && self.wait_ewma < self.cfg.scale_up_wait_s * 0.5
+            && !slo_breach;
         if pressured {
             self.up_breaches += 1;
             self.down_breaches = 0;
@@ -137,7 +168,15 @@ impl Policy {
         if self.since_event_ms < self.cfg.cooldown_ms {
             return None;
         }
-        if self.up_breaches >= self.cfg.hysteresis && s.shards < self.cfg.max_shards {
+        // cost ceiling: once the cumulative shard-seconds bill reaches
+        // the budget, capacity stops growing — overload is handled by
+        // admission control (shed/reject) instead of unbounded spend.
+        // Scale-DOWN stays allowed: the bill only stops growing faster.
+        let cost_capped = self.cost_ceiling_s > 0.0 && s.model_secs >= self.cost_ceiling_s;
+        if self.up_breaches >= self.cfg.hysteresis
+            && s.shards < self.cfg.max_shards
+            && !cost_capped
+        {
             self.up_breaches = 0;
             self.down_breaches = 0;
             self.since_event_ms = 0;
@@ -194,11 +233,17 @@ impl Autoscaler {
                     if shards == 0 {
                         continue;
                     }
+                    let (interactive_p99_s, model_secs) = {
+                        let m = lock_ok(&metrics);
+                        (m.class_p99(QosClass::Interactive), m.model_secs)
+                    };
                     let s = Signals {
                         shards,
                         queued_jobs,
                         oldest_wait_s,
                         outstanding_lanes,
+                        interactive_p99_s,
+                        model_secs,
                     };
                     match policy.observe(&s) {
                         Some(Action::Up) => match handle.add_shard() {
@@ -288,11 +333,20 @@ mod tests {
             queued_jobs: 20,
             oldest_wait_s: 1.0,
             outstanding_lanes: (shards * 8) as u64,
+            interactive_p99_s: 0.0,
+            model_secs: 0.0,
         }
     }
 
     fn idle(shards: usize) -> Signals {
-        Signals { shards, queued_jobs: 0, oldest_wait_s: 0.0, outstanding_lanes: 0 }
+        Signals {
+            shards,
+            queued_jobs: 0,
+            oldest_wait_s: 0.0,
+            outstanding_lanes: 0,
+            interactive_p99_s: 0.0,
+            model_secs: 0.0,
+        }
     }
 
     #[test]
@@ -420,6 +474,61 @@ mod tests {
             assert!(phase_events <= 2, "cycle {cycle}: {phase_events} down-events in one lull");
         }
         assert!(shards >= 1 && shards <= 4, "shards left the [min, max] band: {shards}");
+    }
+
+    #[test]
+    fn slo_breach_is_scale_up_pressure_and_vetoes_scale_down() {
+        let mut cfg = test_cfg();
+        cfg.qos.slo_ms = 200; // 0.2 s interactive SLO
+        let mut p = Policy::new(&cfg);
+        // shallow queues, zero wait — but the p99 is triple the SLO:
+        // pressure comes from the latency contract alone
+        let breach = Signals {
+            shards: 1,
+            queued_jobs: 0,
+            oldest_wait_s: 0.0,
+            outstanding_lanes: 4,
+            interactive_p99_s: 0.6,
+            model_secs: 0.0,
+        };
+        assert_eq!(p.observe(&breach), None);
+        assert_eq!(p.observe(&breach), None);
+        assert_eq!(p.observe(&breach), Some(Action::Up));
+        // an otherwise-idle pool breaching its SLO must not scale DOWN
+        let mut p = Policy::new(&cfg);
+        let idle_breach = Signals { shards: 3, ..breach };
+        for _ in 0..20 {
+            assert_ne!(p.observe(&idle_breach), Some(Action::Down), "drained under SLO breach");
+        }
+        // without --slo-ms the same p99 is not pressure
+        let mut p = Policy::new(&test_cfg());
+        for _ in 0..20 {
+            assert_eq!(p.observe(&Signals { shards: 1, ..breach }), None);
+        }
+    }
+
+    #[test]
+    fn cost_ceiling_vetoes_scale_up_but_not_scale_down() {
+        let mut cfg = test_cfg();
+        cfg.qos.cost_ceiling_s = 100.0;
+        let mut p = Policy::new(&cfg);
+        // over-budget sustained pressure: Up is vetoed forever
+        let over = Signals { model_secs: 150.0, ..pressured(1) };
+        for _ in 0..30 {
+            assert_eq!(p.observe(&over), None, "scaled up past the cost ceiling");
+        }
+        // under budget the same pressure scales up normally
+        let mut p = Policy::new(&cfg);
+        let under = Signals { model_secs: 50.0, ..pressured(1) };
+        assert_eq!(p.observe(&under), None);
+        assert_eq!(p.observe(&under), None);
+        assert_eq!(p.observe(&under), Some(Action::Up));
+        // scale-down is never cost-vetoed
+        let mut p = Policy::new(&cfg);
+        let idle_over = Signals { model_secs: 150.0, ..idle(3) };
+        assert_eq!(p.observe(&idle_over), None);
+        assert_eq!(p.observe(&idle_over), None);
+        assert_eq!(p.observe(&idle_over), Some(Action::Down));
     }
 
     #[test]

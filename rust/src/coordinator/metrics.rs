@@ -12,10 +12,20 @@
 use std::collections::BTreeMap;
 use std::time::Instant;
 
+use super::admission::QosClass;
 use crate::util::stats::{Histogram, Reservoir};
 
 /// Occupancy histogram buckets (lane counts; last bucket = overflow).
 const OCCUPANCY_BUCKETS: usize = 65;
+
+/// Cardinality bound on the per-tenant gauge maps: an adversarial
+/// client inventing tenant names must not grow stats memory without
+/// bound. Past the cap, new names fold into the `_other` row.
+const TENANT_GAUGE_CAP: usize = 64;
+/// Fold-in row for tenants beyond `TENANT_GAUGE_CAP`.
+const TENANT_OTHER: &str = "_other";
+/// Gauge row for requests with no `tenant` wire field.
+const TENANT_ANON: &str = "_anon";
 
 #[derive(Debug, Clone)]
 pub struct Metrics {
@@ -107,6 +117,29 @@ pub struct Metrics {
     pub deadline_expirations: u64,
     /// replies finalized early from partial votes (`degraded:true`)
     pub degraded_replies: u64,
+    /// overload-protection counters (DESIGN.md §14)
+    /// intake refused by admission control (dry token bucket, full
+    /// class queue, or lane quota) — never an admitted run
+    pub rejected: u64,
+    /// intake shed because the interactive latency SLO was breached
+    /// (best_effort first, batch past 2x)
+    pub shed: u64,
+    /// structured `overloaded` replies that carried a `retry_after_ms`
+    /// backoff hint (= rejected + shed), plus the hinted total so the
+    /// mean hint is reportable
+    pub retry_after_hints: u64,
+    retry_after_ms_sum: u64,
+    /// poison-run entries evicted by the quarantine LRU bound
+    pub quarantine_evictions: u64,
+    /// per-class end-to-end latency reservoirs, indexed by
+    /// `QosClass::idx` ([interactive, batch, best_effort])
+    class_latencies: [Reservoir; 3],
+    /// completed requests per class (same indexing)
+    pub class_requests: [u64; 3],
+    /// admitted requests per tenant (cardinality-bounded)
+    pub tenant_requests: BTreeMap<String, u64>,
+    /// refused intake per tenant (cardinality-bounded)
+    pub tenant_rejected: BTreeMap<String, u64>,
 }
 
 impl Metrics {
@@ -155,6 +188,15 @@ impl Metrics {
             quarantined: 0,
             deadline_expirations: 0,
             degraded_replies: 0,
+            rejected: 0,
+            shed: 0,
+            retry_after_hints: 0,
+            retry_after_ms_sum: 0,
+            quarantine_evictions: 0,
+            class_latencies: [Reservoir::default(), Reservoir::default(), Reservoir::default()],
+            class_requests: [0; 3],
+            tenant_requests: BTreeMap::new(),
+            tenant_rejected: BTreeMap::new(),
         }
     }
 
@@ -262,6 +304,64 @@ impl Metrics {
         self.requests += 1;
         if answered {
             self.answered += 1;
+        }
+    }
+
+    /// Like [`record_request`], additionally feeding the per-class
+    /// latency reservoir (the SLO/shedding signal).
+    ///
+    /// [`record_request`]: Metrics::record_request
+    pub fn record_request_class(&mut self, latency_s: f64, answered: bool, class: QosClass) {
+        self.record_request(latency_s, answered);
+        self.class_latencies[class.idx()].push(latency_s);
+        self.class_requests[class.idx()] += 1;
+    }
+
+    pub fn class_p50(&self, class: QosClass) -> f64 {
+        self.class_latencies[class.idx()].percentile(50.0)
+    }
+
+    pub fn class_p99(&self, class: QosClass) -> f64 {
+        self.class_latencies[class.idx()].percentile(99.0)
+    }
+
+    fn bump_tenant(map: &mut BTreeMap<String, u64>, tenant: Option<&str>) {
+        let name = match tenant {
+            None | Some("") => TENANT_ANON,
+            Some(t) => t,
+        };
+        let key = if map.contains_key(name) || map.len() < TENANT_GAUGE_CAP {
+            name
+        } else {
+            TENANT_OTHER
+        };
+        *map.entry(key.to_string()).or_insert(0) += 1;
+    }
+
+    /// One request admitted past the intake gates for `tenant`.
+    pub fn record_tenant_admit(&mut self, tenant: Option<&str>) {
+        Self::bump_tenant(&mut self.tenant_requests, tenant);
+    }
+
+    /// One intake refusal with its backoff hint. `shed` separates
+    /// SLO sheds from capacity rejects (buckets/queues/quotas).
+    pub fn record_reject(&mut self, tenant: Option<&str>, shed: bool, retry_after_ms: u64) {
+        if shed {
+            self.shed += 1;
+        } else {
+            self.rejected += 1;
+        }
+        self.retry_after_hints += 1;
+        self.retry_after_ms_sum += retry_after_ms;
+        Self::bump_tenant(&mut self.tenant_rejected, tenant);
+    }
+
+    /// Mean `retry_after_ms` hinted to refused clients (0 before any).
+    pub fn retry_after_hint_mean_ms(&self) -> f64 {
+        if self.retry_after_hints == 0 {
+            0.0
+        } else {
+            self.retry_after_ms_sum as f64 / self.retry_after_hints as f64
         }
     }
 
@@ -377,6 +477,11 @@ impl Metrics {
         use crate::util::json::{arr, i, n, obj, Value};
         let shard_requests: Vec<Value> =
             self.shard_requests.values().map(|&r| i(r as i64)).collect();
+        let class_requests: Vec<Value> =
+            self.class_requests.iter().map(|&r| i(r as i64)).collect();
+        let tenant_obj = |m: &BTreeMap<String, u64>| {
+            Value::Obj(m.iter().map(|(k, &v)| (k.clone(), i(v as i64))).collect())
+        };
         obj(vec![
             ("requests", i(self.requests as i64)),
             ("answered", i(self.answered as i64)),
@@ -419,6 +524,20 @@ impl Metrics {
             ("quarantined", i(self.quarantined as i64)),
             ("deadline_expirations", i(self.deadline_expirations as i64)),
             ("degraded_replies", i(self.degraded_replies as i64)),
+            ("rejected", i(self.rejected as i64)),
+            ("shed", i(self.shed as i64)),
+            ("retry_after_hints", i(self.retry_after_hints as i64)),
+            ("retry_after_hint_mean_ms", n(self.retry_after_hint_mean_ms())),
+            ("quarantine_evictions", i(self.quarantine_evictions as i64)),
+            ("class_requests", arr(class_requests)),
+            ("interactive_p50_s", n(self.class_p50(QosClass::Interactive))),
+            ("interactive_p99_s", n(self.class_p99(QosClass::Interactive))),
+            ("batch_p50_s", n(self.class_p50(QosClass::Batch))),
+            ("batch_p99_s", n(self.class_p99(QosClass::Batch))),
+            ("best_effort_p50_s", n(self.class_p50(QosClass::BestEffort))),
+            ("best_effort_p99_s", n(self.class_p99(QosClass::BestEffort))),
+            ("tenant_requests", tenant_obj(&self.tenant_requests)),
+            ("tenant_rejected", tenant_obj(&self.tenant_rejected)),
         ])
     }
 }
@@ -628,6 +747,68 @@ mod tests {
         assert_eq!(m.prefix_hits, 2);
         assert_eq!(m.prefix_evictions, 1);
         assert!((m.prefix_hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn per_class_latency_reservoirs() {
+        let mut m = Metrics::new();
+        for i in 1..=100 {
+            m.record_request_class(i as f64 / 100.0, true, QosClass::Interactive);
+            m.record_request_class(2.0 + i as f64 / 100.0, true, QosClass::Batch);
+        }
+        assert_eq!(m.requests, 200, "class recording feeds the global gauges too");
+        assert!((m.class_p50(QosClass::Interactive) - 0.5).abs() < 0.05);
+        assert!(m.class_p99(QosClass::Batch) > 2.9);
+        assert_eq!(m.class_p50(QosClass::BestEffort), 0.0, "empty class reads 0");
+        assert_eq!(m.class_requests, [100, 100, 0]);
+        let v = m.summary_json(1.0);
+        assert!(v.get_f64("interactive_p99_s").unwrap() > 0.9);
+        assert!(v.get_f64("batch_p50_s").unwrap() > 2.0);
+        assert_eq!(v.get("class_requests").unwrap().arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn reject_and_shed_counters_with_hints() {
+        let mut m = Metrics::new();
+        m.record_reject(Some("hot"), false, 200);
+        m.record_reject(Some("hot"), false, 400);
+        m.record_reject(None, true, 600);
+        assert_eq!((m.rejected, m.shed, m.retry_after_hints), (2, 1, 3));
+        assert!((m.retry_after_hint_mean_ms() - 400.0).abs() < 1e-12);
+        m.record_tenant_admit(Some("hot"));
+        m.record_tenant_admit(None);
+        let v = m.summary_json(1.0);
+        assert_eq!(v.get_i64("rejected").unwrap(), 2);
+        assert_eq!(v.get_i64("shed").unwrap(), 1);
+        assert_eq!(v.get_i64("retry_after_hints").unwrap(), 3);
+        let tr = v.get("tenant_rejected").unwrap();
+        assert_eq!(tr.get_i64("hot").unwrap(), 2);
+        assert_eq!(tr.get_i64("_anon").unwrap(), 1);
+        let ta = v.get("tenant_requests").unwrap();
+        assert_eq!(ta.get_i64("hot").unwrap(), 1);
+    }
+
+    #[test]
+    fn tenant_gauges_are_cardinality_bounded() {
+        let mut m = Metrics::new();
+        for k in 0..1000 {
+            m.record_tenant_admit(Some(&format!("tenant-{k}")));
+        }
+        assert!(
+            m.tenant_requests.len() <= TENANT_GAUGE_CAP + 1,
+            "gauge map grew unbounded: {}",
+            m.tenant_requests.len()
+        );
+        let folded = m.tenant_requests.get(TENANT_OTHER).copied().unwrap_or(0);
+        assert_eq!(folded, 1000 - TENANT_GAUGE_CAP as u64, "overflow folds into _other");
+    }
+
+    #[test]
+    fn quarantine_eviction_counter_surfaces() {
+        let mut m = Metrics::new();
+        m.quarantine_evictions += 5;
+        let v = m.summary_json(1.0);
+        assert_eq!(v.get_i64("quarantine_evictions").unwrap(), 5);
     }
 
     #[test]

@@ -14,14 +14,19 @@
 //!   immutable snapshot at submit, drain-on-shutdown across shards,
 //!   live run migration on drain/steal (DESIGN.md §10, §12)
 //! * [`autoscaler`] — queue-driven scale policy over the elastic pool:
-//!   admission-wait/queue-depth EWMAs with hysteresis and cooldown
+//!   admission-wait/queue-depth EWMAs (plus the interactive-p99 SLO
+//!   signal, bounded by the cost ceiling) with hysteresis and cooldown
 //!   drive `add_shard`/`remove_shard` within `[min, max]` (§12)
+//! * [`admission`] — overload protection at the intake boundary:
+//!   per-tenant token buckets, per-class bounded queues with weighted
+//!   dequeue, fair-share lane quotas, and SLO-driven shedding (§14)
 //! * [`prefix`] — prefix reuse: the single-backend `PrefixCache` and
 //!   the pool's `SharedPrefixTier` (one logical cache, per-shard handle
 //!   maps); repeated problems skip prompt prefill entirely
 //! * [`server`] — TCP front-end feeding the pool
 //! * [`metrics`] — latency/throughput/occupancy/shard instrumentation
 
+pub mod admission;
 pub mod aggregation;
 pub mod autoscaler;
 pub mod engine;
@@ -33,6 +38,7 @@ pub mod scheduler;
 pub mod server;
 pub mod spm;
 
+pub use admission::{AdmissionController, QosClass};
 pub use autoscaler::Autoscaler;
 pub use engine::{DetachedRun, Engine, Method, ProblemRun, RunResult};
 pub use pool::{BackendPool, PoolHandle};

@@ -73,7 +73,7 @@
 //! threads hold only a `Weak` registry reference, so they never keep
 //! their own channels alive.
 
-use std::collections::{HashMap, HashSet, VecDeque};
+use std::collections::{HashMap, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
@@ -82,6 +82,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use super::admission::QosClass;
 use super::metrics::Metrics;
 use super::prefix::SharedPrefixTier;
 use super::scheduler::{
@@ -172,6 +173,66 @@ pub(crate) struct ShedRequest {
 /// Cap on queued shed requests per shard: one slow victim must not
 /// accumulate an unbounded backlog of stale thief requests.
 const MAX_SHED_REQUESTS: usize = 4;
+
+/// Bounded LRU set of poison run seeds (DESIGN.md §13, §14): under a
+/// sustained crash storm the quarantine list must not grow without
+/// bound, so at `quarantine_cap` entries the least-recently-touched
+/// seed is evicted (and counted in the metrics) — a hard memory bound
+/// traded against a tiny chance of re-admitting a long-dormant poison
+/// run, which the retry budget would re-catch anyway.
+pub(crate) struct QuarantineLru {
+    cap: usize,
+    /// monotone touch counter: higher = more recently seen
+    seq: u64,
+    /// run seed -> last-touched sequence number
+    map: HashMap<u64, u64>,
+}
+
+impl QuarantineLru {
+    fn new(cap: usize) -> Self {
+        QuarantineLru { cap: cap.max(1), seq: 0, map: HashMap::new() }
+    }
+
+    /// Membership test; refreshes recency on hit (a seed that keeps
+    /// being refused at admission is exactly the one worth keeping).
+    fn contains(&mut self, seed: u64) -> bool {
+        self.seq += 1;
+        let seq = self.seq;
+        match self.map.get_mut(&seed) {
+            Some(s) => {
+                *s = seq;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Insert a seed, evicting least-recently-touched entries past the
+    /// cap. Returns the number of evictions (for the stats counter).
+    fn insert(&mut self, seed: u64) -> u64 {
+        self.seq += 1;
+        self.map.insert(seed, self.seq);
+        let mut evicted = 0u64;
+        while self.map.len() > self.cap {
+            // O(cap) scan: inserts only happen on shard crashes, never
+            // on the serving hot path, and the cap is small
+            let victim = self.map.iter().min_by_key(|&(_, &s)| s).map(|(&k, _)| k);
+            match victim {
+                Some(k) => {
+                    self.map.remove(&k);
+                    evicted += 1;
+                }
+                None => break,
+            }
+        }
+        evicted
+    }
+
+    #[cfg(test)]
+    fn len(&self) -> usize {
+        self.map.len()
+    }
+}
 
 /// One live shard's entry in the placement snapshot. Cloned wholesale
 /// when the snapshot is rebuilt; the queue / load / draining / shed
@@ -266,8 +327,9 @@ pub(crate) struct ShardRegistry {
     lifecycle: Mutex<HashMap<usize, ShardHook>>,
     /// placement-invariant run seeds of poison runs: work that crashed
     /// its shard more than `recover_retries` times is refused at
-    /// admission instead of taking down another shard (DESIGN.md §13)
-    quarantine: Mutex<HashSet<u64>>,
+    /// admission instead of taking down another shard (DESIGN.md §13).
+    /// LRU-bounded at `cfg.quarantine_cap` (DESIGN.md §14)
+    quarantine: Mutex<QuarantineLru>,
     pub(crate) signal: Arc<WorkSignal>,
 }
 
@@ -278,8 +340,9 @@ impl ShardRegistry {
     }
 
     /// Is this placement-invariant run seed on the poison list?
+    /// (Touches the LRU recency on hit.)
     pub(crate) fn is_quarantined(&self, run_seed: u64) -> bool {
-        lock_ok(&self.quarantine).contains(&run_seed)
+        lock_ok(&self.quarantine).contains(run_seed)
     }
 
     /// Spawn one shard thread for `id` and return its snapshot slot +
@@ -441,16 +504,19 @@ impl ShardRegistry {
                 enqueued,
                 deadline,
                 retries,
+                class,
                 checkpoint,
                 reply,
             } = t;
             if retries >= self.cfg.recover_retries {
+                let mut evicted = 0u64;
                 if let Some(p) = &problem {
                     let seed = wire_seed ^ hash::fnv1a_i32(&p.tokens);
-                    lock_ok(&self.quarantine).insert(seed);
+                    evicted = lock_ok(&self.quarantine).insert(seed);
                 }
                 let mut m = lock_ok(&self.metrics);
                 m.quarantined += 1;
+                m.quarantine_evictions += evicted;
                 m.errors += 1;
                 drop(m);
                 let _ = reply.send(Err(anyhow!(
@@ -484,6 +550,7 @@ impl ShardRegistry {
                 queued_at: Instant::now(),
                 deadline,
                 retries: retries + 1,
+                class,
                 work,
             };
             if self.resubmit(job).is_err() {
@@ -549,7 +616,20 @@ impl ShardRegistry {
             let mut moved = 0usize;
             let mut gained = 0usize;
             while gained < room {
-                let Some(job) = vq.pop_back() else { break };
+                // steal the lowest QoS class first (best_effort, then
+                // batch, then interactive): re-queueing costs the job a
+                // fresh head-of-line wait on the thief, so the churn
+                // lands on the class with the loosest latency contract.
+                // Within a class, take from the back of the deque (the
+                // owner admits from the front). Decision-equivalence is
+                // unaffected — the run seed is placement-invariant.
+                let Some(pos) = [QosClass::BestEffort, QosClass::Batch, QosClass::Interactive]
+                    .iter()
+                    .find_map(|c| vq.iter().rposition(|j| j.class == *c))
+                else {
+                    break;
+                };
+                let Some(job) = vq.remove(pos) else { break };
                 victim.load.fetch_sub(job.lanes as u64, Ordering::Relaxed);
                 ctx.load.fetch_add(job.lanes as u64, Ordering::Relaxed);
                 gained += job.lanes.max(1);
@@ -932,6 +1012,7 @@ impl BackendPool {
             cfg.prefix.max_bytes,
         ));
         lock_ok(&metrics).init_shards(shards);
+        let qcap = cfg.quarantine_cap;
         let reg = Arc::new(ShardRegistry {
             cfg,
             vocab,
@@ -942,7 +1023,7 @@ impl BackendPool {
             rr: AtomicUsize::new(0),
             slots: RwLock::new(Arc::new(Vec::new())),
             lifecycle: Mutex::new(HashMap::new()),
-            quarantine: Mutex::new(HashSet::new()),
+            quarantine: Mutex::new(QuarantineLru::new(qcap)),
             signal: Arc::new(WorkSignal::new()),
         });
         let mut joins = Vec::with_capacity(shards);
@@ -996,6 +1077,7 @@ mod tests {
                 method: Method::Ssr { n: 3, tau: 7, stop: StopRule::Full },
                 seed,
                 deadline_ms: 0,
+                class: QosClass::default(),
                 reply: rtx,
             })
             .unwrap();
@@ -1153,6 +1235,24 @@ mod tests {
         for j in joins {
             j.join().unwrap();
         }
+    }
+
+    #[test]
+    fn quarantine_lru_bounds_and_evicts_oldest() {
+        let mut q = QuarantineLru::new(3);
+        assert_eq!(q.insert(1), 0);
+        assert_eq!(q.insert(2), 0);
+        assert_eq!(q.insert(3), 0);
+        assert_eq!(q.len(), 3);
+        // touch 1 so 2 becomes the LRU victim
+        assert!(q.contains(1));
+        assert_eq!(q.insert(4), 1, "cap overflow evicts exactly one");
+        assert_eq!(q.len(), 3);
+        assert!(!q.contains(2), "least-recently-touched seed evicted");
+        assert!(q.contains(1) && q.contains(3) && q.contains(4));
+        // re-inserting a present seed never evicts
+        assert_eq!(q.insert(4), 0);
+        assert_eq!(q.len(), 3);
     }
 
     #[test]

@@ -95,6 +95,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use super::admission::QosClass;
 use super::engine::{step_tick, DetachedRun, Method, ProblemRun};
 use super::metrics::Metrics;
 use super::pool::{BackendPool, ShardRegistry, ShedRequest, WorkSignal};
@@ -128,6 +129,10 @@ pub struct SolveRequest {
     /// itself 0 = none). On expiry the run finalizes from the votes
     /// collected so far and the reply carries `degraded:true`
     pub deadline_ms: u64,
+    /// priority class from the `class` wire field (DESIGN.md §14):
+    /// weighted dequeue order and per-class latency gauges only — run
+    /// decisions never depend on it (determinism contract)
+    pub class: QosClass,
     pub reply: mpsc::Sender<Result<Value>>,
 }
 
@@ -218,6 +223,9 @@ pub(crate) struct QueuedJob {
     /// shard crashes this work has already survived (crash-recovery
     /// retry budget, DESIGN.md §13); 0 for never-crashed work
     pub(crate) retries: u32,
+    /// priority class: weighted dequeue + class-aware steal/shed order;
+    /// survives steals, migrations and crash recovery
+    pub(crate) class: QosClass,
     pub(crate) work: Work,
 }
 
@@ -250,6 +258,7 @@ struct InFlight {
     ticket: u64,
     deadline: Option<Instant>,
     retries: u32,
+    class: QosClass,
     /// the deadline expired and the run was force-stopped: the reply
     /// carries `degraded:true`
     degraded: bool,
@@ -280,6 +289,7 @@ pub(crate) struct RunTicket {
     pub(crate) enqueued: Instant,
     pub(crate) deadline: Option<Instant>,
     pub(crate) retries: u32,
+    pub(crate) class: QosClass,
     pub(crate) checkpoint: Option<DetachedRun>,
     pub(crate) reply: mpsc::Sender<Result<Value>>,
 }
@@ -327,16 +337,57 @@ impl Scheduler {
 }
 
 /// Index of the next queue entry the admission policy would admit.
-fn pick_next(queue: &VecDeque<QueuedJob>, policy: AdmitPolicy) -> Option<usize> {
-    match policy {
-        _ if queue.is_empty() => None,
-        AdmitPolicy::Fifo => Some(0),
-        AdmitPolicy::SmallestFirst => queue
-            .iter()
-            .enumerate()
-            .min_by_key(|(i, j)| (j.lanes, *i))
-            .map(|(i, _)| i),
+///
+/// Class-weighted dequeue (DESIGN.md §14): `tick` walks a
+/// weighted-round-robin cycle over `weights` =
+/// `[interactive, batch, best_effort]`, so while both queues are
+/// non-empty each class is guaranteed its weight's share of admissions
+/// — `batch` cannot starve `interactive` and vice versa. Within the
+/// preferred class the configured `AdmitPolicy` applies (FIFO /
+/// smallest-first); when the preferred class has nothing queued, the
+/// slot falls through in priority order. Dequeue order affects latency
+/// only, never run decisions (the determinism contract).
+fn pick_next(
+    queue: &VecDeque<QueuedJob>,
+    policy: AdmitPolicy,
+    weights: [u64; 3],
+    tick: u64,
+) -> Option<usize> {
+    if queue.is_empty() {
+        return None;
     }
+    let pick_in_class = |class: Option<usize>| -> Option<usize> {
+        let eligible =
+            |j: &QueuedJob| class.map(|c| j.class.idx() == c).unwrap_or(true);
+        match policy {
+            AdmitPolicy::Fifo => queue.iter().position(eligible),
+            AdmitPolicy::SmallestFirst => queue
+                .iter()
+                .enumerate()
+                .filter(|(_, j)| eligible(j))
+                .min_by_key(|(i, j)| (j.lanes, *i))
+                .map(|(i, _)| i),
+        }
+    };
+    let total: u64 = weights.iter().sum();
+    if total == 0 {
+        return pick_in_class(None);
+    }
+    let slot = tick % total;
+    let preferred = if slot < weights[0] {
+        0
+    } else if slot < weights[0] + weights[1] {
+        1
+    } else {
+        2
+    };
+    // preferred class first, then fall through in priority order
+    for class in [preferred, 0, 1, 2] {
+        if let Some(i) = pick_in_class(Some(class)) {
+            return Some(i);
+        }
+    }
+    None
 }
 
 fn intake(
@@ -365,6 +416,7 @@ fn intake(
                         queued_at: now,
                         deadline,
                         retries: 0,
+                        class: req.class,
                         work: Work::Fresh {
                             problem,
                             method: req.method,
@@ -398,7 +450,7 @@ fn finish_job(
     let queue_wait = f.admitted.duration_since(f.enqueued).as_secs_f64();
     {
         let mut m = lock_ok(metrics);
-        m.record_request(latency, r.answer().is_some());
+        m.record_request_class(latency, r.answer().is_some(), f.class);
         m.record_tokens(r.draft_tokens, r.target_tokens, r.steps, r.rewrites);
         if f.degraded {
             m.degraded_replies += 1;
@@ -432,7 +484,9 @@ fn detach_job(
     metrics: &Arc<Mutex<Metrics>>,
     ctx: &ShardCtx,
 ) -> Option<(QueuedJob, u64)> {
-    let InFlight { run, method, gold, est, enqueued, ticket, deadline, retries, reply, .. } = f;
+    let InFlight {
+        run, method, gold, est, enqueued, ticket, deadline, retries, class, reply, ..
+    } = f;
     ctx.clear_ticket(ticket);
     match run.detach(backend) {
         Ok(d) => {
@@ -443,6 +497,7 @@ fn detach_job(
                 queued_at: Instant::now(),
                 deadline,
                 retries,
+                class,
                 work: Work::Resume { run: d, method, gold, reply },
             };
             Some((job, bytes))
@@ -465,7 +520,7 @@ fn take_back(
     metrics: &Arc<Mutex<Metrics>>,
     ctx: &ShardCtx,
 ) {
-    let QueuedJob { lanes, enqueued, deadline, retries, work, .. } = job;
+    let QueuedJob { lanes, enqueued, deadline, retries, class, work, .. } = job;
     match work {
         Work::Resume { run, method, gold, reply } => {
             let checkpoint = run.clone();
@@ -480,6 +535,7 @@ fn take_back(
                         enqueued,
                         deadline,
                         retries,
+                        class,
                         checkpoint: Some(checkpoint),
                         reply: reply.clone(),
                     });
@@ -493,6 +549,7 @@ fn take_back(
                         ticket,
                         deadline,
                         retries,
+                        class,
                         degraded: false,
                         reply,
                     });
@@ -511,6 +568,7 @@ fn take_back(
                 queued_at: Instant::now(),
                 deadline,
                 retries,
+                class,
                 work,
             });
         }
@@ -587,7 +645,18 @@ fn shed_to_thieves(
         let budget = r.lanes.min(total_lanes / 2);
         let mut granted = 0usize;
         while inflight.len() > 1 {
-            let Some(pos) = inflight.iter().rposition(|f| !f.run.is_done()) else {
+            // prefer shedding the lowest QoS class first (best_effort,
+            // then batch, then interactive): moving a run costs it one
+            // detach/attach round-trip of latency, so the disruption
+            // lands on the class with the loosest latency contract.
+            // Within a class, still the most recently admitted run
+            // (least sunk context on this shard).
+            let Some(pos) = [QosClass::BestEffort, QosClass::Batch, QosClass::Interactive]
+                .iter()
+                .find_map(|c| {
+                    inflight.iter().rposition(|f| f.class == *c && !f.run.is_done())
+                })
+            else {
                 break;
             };
             // the cap is checked BEFORE detaching: a whole-run grant
@@ -640,6 +709,10 @@ pub(crate) fn run_loop(
     // full tick before raiding its peers (a fully idle one may steal
     // immediately — there is nothing it could be between)
     let mut hungry_ticks = 0usize;
+    // monotone admit counter driving the weighted-round-robin class
+    // schedule in `pick_next`: per-shard, deterministic, and only
+    // affects dequeue ORDER (latency), never run outcomes
+    let mut admit_tick: u64 = 0;
     // park epoch: read before each pass scans its wake sources, so an
     // enqueue signaled during/after the scan wakes the next park
     let mut seen = ctx.signal.epoch();
@@ -706,7 +779,10 @@ pub(crate) fn run_loop(
         loop {
             let job = {
                 let mut q = lock_ok(&ctx.queue);
-                let Some(pos) = pick_next(&q, cfg.admission) else { break };
+                let Some(pos) = pick_next(&q, cfg.admission, cfg.qos.weights, admit_tick)
+                else {
+                    break;
+                };
                 let need = q[pos].lanes;
                 // always admit into an idle pool so one oversized
                 // request cannot wedge the queue
@@ -715,7 +791,8 @@ pub(crate) fn run_loop(
                 }
                 q.remove(pos).expect("picked index in range")
             };
-            let QueuedJob { lanes: est, enqueued, deadline, retries, work, .. } = job;
+            let QueuedJob { lanes: est, enqueued, deadline, retries, class, work, .. } = job;
+            admit_tick += 1;
             match work {
                 Work::Fresh { problem, method, seed: wire_seed, reply } => {
                     // run seed = f(request seed, prompt): decorrelates
@@ -764,6 +841,7 @@ pub(crate) fn run_loop(
                                 enqueued,
                                 deadline,
                                 retries,
+                                class,
                                 checkpoint: None,
                                 reply: reply.clone(),
                             });
@@ -777,6 +855,7 @@ pub(crate) fn run_loop(
                                 ticket,
                                 deadline,
                                 retries,
+                                class,
                                 degraded: false,
                                 reply,
                             });
@@ -809,6 +888,7 @@ pub(crate) fn run_loop(
                                 enqueued,
                                 deadline,
                                 retries,
+                                class,
                                 checkpoint: Some(checkpoint),
                                 reply: reply.clone(),
                             });
@@ -822,6 +902,7 @@ pub(crate) fn run_loop(
                                 ticket,
                                 deadline,
                                 retries,
+                                class,
                                 degraded: false,
                                 reply,
                             });
@@ -993,6 +1074,7 @@ mod tests {
                 method,
                 seed,
                 deadline_ms: 0,
+                class: QosClass::default(),
                 reply: rtx,
             })
             .unwrap();
@@ -1226,7 +1308,83 @@ mod tests {
     #[test]
     fn pick_next_empty_queue() {
         let q: VecDeque<QueuedJob> = VecDeque::new();
-        assert_eq!(pick_next(&q, AdmitPolicy::Fifo), None);
-        assert_eq!(pick_next(&q, AdmitPolicy::SmallestFirst), None);
+        assert_eq!(pick_next(&q, AdmitPolicy::Fifo, [4, 2, 1], 0), None);
+        assert_eq!(pick_next(&q, AdmitPolicy::SmallestFirst, [4, 2, 1], 0), None);
+    }
+
+    fn queued(class: QosClass, lanes: usize) -> QueuedJob {
+        // the receiver is dropped; pick_next never sends, so a dangling
+        // reply sender is fine for these tests
+        let (rtx, _rrx) = mpsc::channel();
+        let problem =
+            problem_from_text(&tokenizer::builtin_vocab(), "1+1").unwrap();
+        QueuedJob {
+            lanes,
+            enqueued: Instant::now(),
+            queued_at: Instant::now(),
+            deadline: None,
+            retries: 0,
+            class,
+            work: Work::Fresh { problem, method: Method::Baseline, seed: 0, reply: rtx },
+        }
+    }
+
+    #[test]
+    fn weighted_dequeue_interleaves_classes_without_starvation() {
+        // queue: 1 interactive buried behind best_effort, plus batch —
+        // replay the WRR schedule over weights [4,2,1] and count how
+        // often each class is picked across one full period per job
+        let mut q: VecDeque<QueuedJob> = VecDeque::new();
+        for _ in 0..7 {
+            q.push_back(queued(QosClass::BestEffort, 1));
+        }
+        for _ in 0..7 {
+            q.push_back(queued(QosClass::Batch, 1));
+        }
+        for _ in 0..7 {
+            q.push_back(queued(QosClass::Interactive, 1));
+        }
+        let mut picks = [0usize; 3];
+        for tick in 0..21u64 {
+            let pos = pick_next(&q, AdmitPolicy::Fifo, [4, 2, 1], tick).unwrap();
+            let job = q.remove(pos).unwrap();
+            picks[job.class.idx()] += 1;
+        }
+        assert!(q.is_empty());
+        // every class drained; the weighted schedule gives interactive
+        // the most early slots but nobody is starved
+        assert_eq!(picks, [7, 7, 7]);
+        // and over the FIRST period (7 ticks), the 4/2/1 split holds
+        let mut q2: VecDeque<QueuedJob> = VecDeque::new();
+        for c in [QosClass::Interactive, QosClass::Batch, QosClass::BestEffort] {
+            for _ in 0..7 {
+                q2.push_back(queued(c, 1));
+            }
+        }
+        let mut first = [0usize; 3];
+        for tick in 0..7u64 {
+            let pos = pick_next(&q2, AdmitPolicy::Fifo, [4, 2, 1], tick).unwrap();
+            let job = q2.remove(pos).unwrap();
+            first[job.class.idx()] += 1;
+        }
+        assert_eq!(first, [4, 2, 1]);
+    }
+
+    #[test]
+    fn weighted_dequeue_falls_through_when_preferred_class_empty() {
+        // only best_effort is queued: every tick must still pick it,
+        // whatever class the WRR slot prefers
+        let mut q: VecDeque<QueuedJob> = VecDeque::new();
+        q.push_back(queued(QosClass::BestEffort, 2));
+        q.push_back(queued(QosClass::BestEffort, 1));
+        for tick in 0..4u64 {
+            assert!(pick_next(&q, AdmitPolicy::Fifo, [4, 2, 1], tick).is_some());
+        }
+        // SmallestFirst still orders by lanes within the class
+        let pos = pick_next(&q, AdmitPolicy::SmallestFirst, [4, 2, 1], 0).unwrap();
+        assert_eq!(q[pos].lanes, 1);
+        // zero weights (all slots weightless) degrade to class-blind
+        let pos = pick_next(&q, AdmitPolicy::Fifo, [0, 0, 0], 5).unwrap();
+        assert_eq!(pos, 0);
     }
 }

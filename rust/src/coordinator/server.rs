@@ -11,9 +11,12 @@
 //!
 //! Protocol (one JSON object per line):
 //!   -> {"op":"solve", "expr":"(17+25)*3", "method":"ssr", "paths":5,
-//!       "tau":7}                      // optional: "seed", "deadline_ms"
+//!       "tau":7}       // optional: "seed", "deadline_ms",
+//!                      //           "tenant", "class"
 //!   <- {"ok":true, "degraded":false, "answer":126, "method":"ssr-m5",
 //!       "steps":9, "rewrites":2, "latency_s":0.41, "queue_wait_s":0.02}
+//!   <- {"ok":false, "err":"overloaded", "reason":"rate_limited",
+//!       "retry_after_ms":125}         // intake shed (DESIGN.md §14)
 //!   -> {"op":"stats"}
 //!   <- {"ok":true, "requests":..., "p50_s":..., "p99_s":...,
 //!       "throughput_rps":..., "backend_calls":...,
@@ -27,13 +30,37 @@
 //!       "shards_live":...,
 //!       "shard_crashes":..., "runs_recovered":...,  // fault tolerance
 //!       "runs_replayed":..., "retries":..., "quarantined":...,
+//!       "quarantine_evictions":...,
 //!       "deadline_expirations":..., "degraded_replies":...,
+//!       "rejected":..., "shed":...,   // overload protection (§14)
+//!       "retry_after_hints":..., "retry_after_hint_mean_ms":...,
+//!       "class_requests":[...],       // [interactive, batch, best_effort]
+//!       "interactive_p50_s":..., "interactive_p99_s":...,
+//!       "batch_p50_s":..., "batch_p99_s":...,
+//!       "best_effort_p50_s":..., "best_effort_p99_s":...,
+//!       "tenant_requests":{...}, "tenant_rejected":{...},
 //!       "model_secs":...}             // backend model-clock
 //!   -> {"op":"add_shard"}             // hot-add one backend shard
 //!   <- {"ok":true, "shard":2, "shards_live":3}
 //!   -> {"op":"remove_shard", "shard":2}   // drain + remove at runtime
 //!   <- {"ok":true, "drained":2, "drain_s":0.18, "shards_live":2}
 //!   -> {"op":"shutdown"}
+//!
+//! **Overload protection (DESIGN.md §14).** A `solve` may carry a
+//! `tenant` (any string; rate-limit identity) and a `class`
+//! (`interactive` | `batch` | `best_effort`, default `interactive`).
+//! Intake passes four gates — SLO shed, the tenant's token bucket,
+//! the class's bounded queue, the tenant's fair-share lane quota —
+//! before the job touches the pool; a gate failure is answered
+//! immediately with the structured `overloaded` reply above, and the
+//! connection stays open. Class affects dequeue order and shed/steal
+//! preference only, NEVER run decisions (the determinism contract).
+//! In-flight work is never dropped by overload — only new intake.
+//!
+//! **Slow-loris guard.** A connection that stays silent mid-line for
+//! `--conn-idle-timeout-ms` (default 30s; 0 disables) gets a
+//! structured `{"ok":false,"error":"idle timeout..."}` reply and is
+//! closed, so stalled sockets cannot pin handler threads.
 //!
 //! With `--autoscale on` a policy loop (`coordinator::autoscaler`)
 //! drives add/remove automatically from queue-depth and admission-wait
@@ -71,15 +98,16 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
+use super::admission::{AdmissionController, QosClass, Reject, RejectReason};
 use super::autoscaler::Autoscaler;
 use super::engine::Method;
 use super::metrics::Metrics;
 use super::pool::{BackendPool, PoolHandle};
-use super::scheduler::SolveRequest;
+use super::scheduler::{lane_estimate, SolveRequest};
 use crate::backend::Backend;
 use crate::config::{SsrConfig, StopRule};
 use crate::util::json::{self, Value};
@@ -123,6 +151,9 @@ pub struct Server {
     started: Instant,
     shutdown: Arc<AtomicBool>,
     cfg: SsrConfig,
+    /// intake gates (token buckets / class queues / lane quotas / SLO
+    /// shed, DESIGN.md §14) — consulted before any job touches the pool
+    admission: Arc<AdmissionController>,
     /// the policy loop when `--autoscale on`; stopped (and its pool
     /// handle released) when the server shuts down
     autoscaler: Option<Autoscaler>,
@@ -149,6 +180,10 @@ impl Server {
             .autoscale
             .enabled
             .then(|| Autoscaler::spawn(sched.clone(), Arc::clone(&metrics), &cfg));
+        // fair-share lane quotas are sized against the pool's nominal
+        // lane capacity at start (autoscale growth only adds headroom)
+        let lane_capacity = cfg.shards.max(1) * cfg.max_lanes.max(1);
+        let admission = Arc::new(AdmissionController::new(cfg.qos.clone(), lane_capacity));
 
         let listener =
             TcpListener::bind((host, port)).with_context(|| format!("binding {host}:{port}"))?;
@@ -166,6 +201,7 @@ impl Server {
                 started: Instant::now(),
                 shutdown: Arc::new(AtomicBool::new(false)),
                 cfg,
+                admission,
                 autoscaler,
             },
             listener,
@@ -184,10 +220,11 @@ impl Server {
                     let started = self.started;
                     let shutdown = Arc::clone(&self.shutdown);
                     let cfg = self.cfg.clone();
+                    let admission = Arc::clone(&self.admission);
                     pool.execute(move || {
-                        if let Err(e) =
-                            handle_conn(stream, sched, metrics, started, shutdown, cfg)
-                        {
+                        if let Err(e) = handle_conn(
+                            stream, sched, metrics, started, shutdown, cfg, admission,
+                        ) {
                             log::warn!("connection error: {e:#}");
                         }
                     });
@@ -226,7 +263,14 @@ fn handle_conn(
     started: Instant,
     shutdown: Arc<AtomicBool>,
     cfg: SsrConfig,
+    admission: Arc<AdmissionController>,
 ) -> Result<()> {
+    // slow-loris guard: a peer that stalls mid-line for the idle
+    // timeout gets a structured reply and the socket is closed, so a
+    // handful of dribbling connections cannot pin every handler thread
+    if cfg.conn_idle_timeout_ms > 0 {
+        stream.set_read_timeout(Some(Duration::from_millis(cfg.conn_idle_timeout_ms)))?;
+    }
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut out = stream;
     let mut line = String::new();
@@ -241,6 +285,21 @@ fn handle_conn(
                 // answer and keep serving
                 write_reply(&mut out, &error_reply("request line is not valid UTF-8"))?;
                 continue;
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                // idle timeout expired (mid-line or between requests):
+                // best-effort structured goodbye, then close
+                let _ = write_reply(
+                    &mut out,
+                    &error_reply(format!(
+                        "idle timeout after {}ms",
+                        cfg.conn_idle_timeout_ms
+                    )),
+                );
+                return Ok(());
             }
             Err(e) => return Err(e.into()),
         };
@@ -264,7 +323,7 @@ fn handle_conn(
         // a panic while serving one request must not kill the handler
         // thread (and with it every queued line on this connection)
         let reply = match catch_unwind(AssertUnwindSafe(|| {
-            process_line(&line, &sched, &metrics, started, &shutdown, &cfg)
+            process_line(&line, &sched, &metrics, started, &shutdown, &cfg, &admission)
         })) {
             Ok(Ok(v)) => v,
             Ok(Err(e)) => error_reply(format!("{e:#}")),
@@ -279,6 +338,18 @@ fn handle_conn(
 
 fn error_reply(msg: impl std::fmt::Display) -> Value {
     json::obj(vec![("ok", Value::Bool(false)), ("error", json::s(msg.to_string()))])
+}
+
+/// The structured intake-shed reply (DESIGN.md §14): `err` (not
+/// `error`) distinguishes "back off and retry" from a malformed
+/// request, and `retry_after_ms` tells the client when.
+fn overloaded_reply(rej: &Reject) -> Value {
+    json::obj(vec![
+        ("ok", Value::Bool(false)),
+        ("err", json::s("overloaded")),
+        ("reason", json::s(rej.reason.name())),
+        ("retry_after_ms", json::i(rej.retry_after_ms as i64)),
+    ])
 }
 
 fn write_reply(out: &mut TcpStream, reply: &Value) -> Result<()> {
@@ -311,6 +382,7 @@ fn process_line(
     started: Instant,
     shutdown: &Arc<AtomicBool>,
     cfg: &SsrConfig,
+    admission: &AdmissionController,
 ) -> Result<Value> {
     let req = Value::parse(line).context("parsing request")?;
     match req.get_str("op")? {
@@ -320,9 +392,43 @@ fn process_line(
             let seed = req.opt("seed").map(|s| s.i64()).transpose()?.unwrap_or(0) as u64;
             let deadline_ms =
                 req.opt("deadline_ms").map(|x| x.i64()).transpose()?.unwrap_or(0).max(0) as u64;
+            // type errors here (numeric tenant, object class, ...) are
+            // plain `error` replies, NOT `overloaded` — the client sent
+            // a malformed request, not excess load
+            let tenant =
+                req.opt("tenant").map(|v| v.str()).transpose().context("`tenant` field")?;
+            let class = req
+                .opt("class")
+                .map(|v| v.str())
+                .transpose()
+                .context("`class` field")?
+                .map(QosClass::parse)
+                .transpose()?
+                .unwrap_or_default();
+            // intake gates (DESIGN.md §14) — consulted BEFORE the job
+            // touches the pool, so a shed request costs no shard work
+            let p99 = lock_ok(metrics).class_p99(QosClass::Interactive);
+            let lanes = lane_estimate(method, cfg.pool_size);
+            let permit = match admission.admit(tenant, class, lanes, p99) {
+                Ok(p) => p,
+                Err(rej) => {
+                    lock_ok(metrics).record_reject(
+                        tenant,
+                        rej.reason == RejectReason::Shed,
+                        rej.retry_after_ms,
+                    );
+                    return Ok(overloaded_reply(&rej));
+                }
+            };
+            lock_ok(metrics).record_tenant_admit(tenant);
             let (rtx, rrx) = mpsc::channel();
-            sched.submit(SolveRequest { expr, method, seed, deadline_ms, reply: rtx })?;
-            rrx.recv().context("scheduler reply")?
+            sched.submit(SolveRequest { expr, method, seed, deadline_ms, class, reply: rtx })?;
+            let reply = rrx.recv().context("scheduler reply")?;
+            // the permit spans submit -> terminal reply: its Drop frees
+            // the class slot + tenant lanes and feeds the per-class
+            // drain-rate EWMA that prices queue-full retry hints
+            drop(permit);
+            reply
         }
         "stats" => {
             let mut v = {

@@ -13,6 +13,11 @@
 //!           [--scale-interval-ms MS] [--scale-cooldown-ms MS]
 //!           [--deadline-ms MS] [--recover-retries N]
 //!           [--fault-spec '{"seed":7,"panic_rate":0.01,...}']
+//!           [--qos on|off] [--tenant-rate R] [--tenant-burst B]
+//!           [--tenants '{"acme":{"rate":2,"burst":8}}']
+//!           [--queue-cap N] [--class-weights 'i,b,e'] [--slo-ms MS]
+//!           [--cost-ceiling S] [--quarantine-cap N]
+//!           [--conn-idle-timeout-ms MS]
 //! ssr exp   fig2|fig3|fig4|fig5|table1|gamma|all [--backend calibrated]
 //!           [--trials 6] [--problems 60]
 //! ssr selfcheck            # artifacts -> PJRT -> one SSR problem
@@ -47,6 +52,19 @@
 //! seeded fault injector (step errors, stalls, panics) for chaos
 //! testing — see `{"op":"stats"}` keys `shard_crashes`,
 //! `runs_recovered`, `quarantined`, `degraded_replies`.
+//!
+//! Serving is overload-safe (DESIGN.md §14): a `solve` may carry
+//! `tenant` and `class` (`interactive`|`batch`|`best_effort`) wire
+//! fields; per-tenant token buckets (`--tenant-rate`/`--tenant-burst`,
+//! per-tenant overrides via `--tenants`), per-class bounded queues
+//! (`--queue-cap`, weighted dequeue via `--class-weights`), fair-share
+//! lane quotas and SLO-driven shedding (`--slo-ms`) gate intake before
+//! a job touches the pool — shed requests get a structured
+//! `{"ok":false,"err":"overloaded","retry_after_ms":...}` reply and
+//! in-flight work is never dropped. `--cost-ceiling` bounds the
+//! autoscaler's spend; `--conn-idle-timeout-ms` closes slow-loris
+//! connections — see `{"op":"stats"}` keys `rejected`, `shed`,
+//! `retry_after_hints`, per-class p50/p99 and per-tenant gauges.
 
 use std::path::PathBuf;
 
@@ -199,6 +217,18 @@ fn run() -> Result<()> {
                 cfg.prefix.enabled,
                 cfg.prefix.capacity,
                 cfg.prefix.max_bytes
+            );
+            println!(
+                "qos: enabled={} tenant_rate={}/s burst={} queue_cap={}/class \
+                 weights={:?} slo_ms={} cost_ceiling_s={} idle_timeout_ms={}",
+                cfg.qos.enabled,
+                cfg.qos.tenant_rate,
+                cfg.qos.tenant_burst,
+                cfg.qos.queue_cap,
+                cfg.qos.weights,
+                cfg.qos.slo_ms,
+                cfg.qos.cost_ceiling_s,
+                cfg.conn_idle_timeout_ms
             );
             let (server, listener) = Server::start(&host, port, cfg, vocab, shard_factory)?;
             println!("listening on {}", server.addr);

@@ -23,6 +23,7 @@ use ssr::backend::{
     StepOutcome,
 };
 use ssr::config::{FaultSpec, PlacePolicy, SsrConfig};
+use ssr::coordinator::admission::QosClass;
 use ssr::coordinator::engine::Method;
 use ssr::coordinator::metrics::Metrics;
 use ssr::coordinator::pool::{BackendPool, PoolHandle};
@@ -158,6 +159,7 @@ fn submit(
             method,
             seed,
             deadline_ms: 0,
+            class: QosClass::default(),
             reply: rtx,
         })
         .unwrap();

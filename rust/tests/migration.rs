@@ -20,6 +20,7 @@ use ssr::backend::{
     StepOutcome,
 };
 use ssr::config::{PlacePolicy, SsrConfig, StopRule};
+use ssr::coordinator::admission::QosClass;
 use ssr::coordinator::autoscaler::Autoscaler;
 use ssr::coordinator::engine::Method;
 use ssr::coordinator::metrics::Metrics;
@@ -168,7 +169,14 @@ fn submit(
 ) -> mpsc::Receiver<anyhow::Result<Value>> {
     let (rtx, rrx) = mpsc::channel();
     handle
-        .submit(SolveRequest { expr: expr.to_string(), method, seed, deadline_ms: 0, reply: rtx })
+        .submit(SolveRequest {
+            expr: expr.to_string(),
+            method,
+            seed,
+            deadline_ms: 0,
+            class: QosClass::default(),
+            reply: rtx,
+        })
         .unwrap();
     rrx
 }

@@ -3,9 +3,15 @@
 //! plus the fault-tolerance wire surface (DESIGN.md §13): per-request
 //! deadlines with degraded replies, and oversized/malformed request
 //! lines answered without dropping the connection.
+//!
+//! Also the overload surface (DESIGN.md §14): hostile `tenant`/`class`/
+//! `deadline_ms` field types, structured `overloaded` replies when a
+//! burst exceeds `--queue-cap` or a tenant's token bucket runs dry, and
+//! the slow-loris idle-timeout guard.
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
+use std::time::Duration;
 
 use ssr::backend::calibrated::CalibratedBackend;
 use ssr::backend::faulty::FaultInjector;
@@ -344,5 +350,240 @@ fn sharded_server_round_trip_and_shard_stats() {
         r.get_f64("model_secs").unwrap() >= r.get_f64("model_secs_makespan").unwrap() - 1e-9
     );
     let _ = request(&mut s, r#"{"op":"shutdown"}"#);
+    srv.join().unwrap();
+}
+
+#[test]
+fn hostile_field_types_get_errors_without_dropping_the_connection() {
+    let cfg = SsrConfig::default();
+    let vocab = tokenizer::builtin_vocab();
+    let (server, listener) = Server::start("127.0.0.1", 0, cfg, vocab, |_shard| {
+        Ok(Box::new(CalibratedBackend::for_suite("synth-math500", 7)?) as Box<dyn Backend>)
+    })
+    .unwrap();
+    let addr = server.addr.clone();
+    let srv = std::thread::spawn(move || {
+        let pool = ThreadPool::new(2);
+        server.serve(listener, &pool).unwrap();
+    });
+    let mut s = TcpStream::connect(&addr).unwrap();
+
+    // wrong JSON types for the QoS fields are plain `error` replies
+    // (malformed request, not excess load) and never drop the line
+    for bad in [
+        r#"{"op":"solve","expr":"1+2","deadline_ms":1.5}"#,
+        r#"{"op":"solve","expr":"1+2","deadline_ms":{"ms":5}}"#,
+        r#"{"op":"solve","expr":"1+2","tenant":7}"#,
+        r#"{"op":"solve","expr":"1+2","tenant":{"id":1}}"#,
+        r#"{"op":"solve","expr":"1+2","class":3}"#,
+        r#"{"op":"solve","expr":"1+2","class":["interactive"]}"#,
+    ] {
+        let r = request(&mut s, bad);
+        assert!(!r.get("ok").unwrap().bool().unwrap(), "{bad} -> {r:?}");
+        assert!(r.get_str("error").unwrap().len() > 3, "{bad} -> {r:?}");
+        assert!(r.get("err").is_err(), "type errors must not claim overload: {r:?}");
+    }
+
+    // unknown class value names the offender
+    let r = request(&mut s, r#"{"op":"solve","expr":"1+2","class":"platinum"}"#);
+    assert!(!r.get("ok").unwrap().bool().unwrap());
+    assert!(r.get_str("error").unwrap().contains("unknown class"), "{r:?}");
+
+    // a negative deadline is clamped to "no deadline", not an error
+    let r = request(&mut s, r#"{"op":"solve","expr":"3+4","deadline_ms":-5}"#);
+    assert!(r.get("ok").unwrap().bool().unwrap(), "{r:?}");
+    assert_eq!(r.get_i64("gold").unwrap(), 7);
+
+    // well-formed tenant/class still solve on the same connection and
+    // show up in the per-tenant / per-class stats gauges
+    let r = request(
+        &mut s,
+        r#"{"op":"solve","expr":"2+3","tenant":"acme","class":"batch"}"#,
+    );
+    assert!(r.get("ok").unwrap().bool().unwrap(), "{r:?}");
+    assert_eq!(r.get_i64("gold").unwrap(), 5);
+
+    let r = request(&mut s, r#"{"op":"stats"}"#);
+    assert!(r.get("ok").unwrap().bool().unwrap());
+    assert_eq!(r.get_i64("rejected").unwrap(), 0);
+    assert_eq!(r.get_i64("shed").unwrap(), 0);
+    let classes = r.get("class_requests").unwrap().arr().unwrap();
+    assert_eq!(classes.len(), 3);
+    assert_eq!(classes[0].i64().unwrap(), 1, "interactive (default class)");
+    assert_eq!(classes[1].i64().unwrap(), 1, "batch");
+    assert_eq!(r.get("tenant_requests").unwrap().get_i64("acme").unwrap(), 1);
+
+    let _ = request(&mut s, r#"{"op":"shutdown"}"#);
+    srv.join().unwrap();
+}
+
+#[test]
+fn tenant_token_bucket_replies_overloaded_with_retry_hint() {
+    // burst 2, refill 0.5/s: on one connection the third request in a
+    // row from the same tenant is deterministically out of tokens
+    // (fast solves cannot refill 1.0 tokens), while another tenant's
+    // fresh bucket still admits
+    let mut cfg = SsrConfig::default();
+    cfg.qos.tenant_rate = 0.5;
+    cfg.qos.tenant_burst = 2.0;
+    let vocab = tokenizer::builtin_vocab();
+    let (server, listener) = Server::start("127.0.0.1", 0, cfg, vocab, |_shard| {
+        Ok(Box::new(CalibratedBackend::for_suite("synth-math500", 7)?) as Box<dyn Backend>)
+    })
+    .unwrap();
+    let addr = server.addr.clone();
+    let srv = std::thread::spawn(move || {
+        let pool = ThreadPool::new(2);
+        server.serve(listener, &pool).unwrap();
+    });
+    let mut s = TcpStream::connect(&addr).unwrap();
+
+    for _ in 0..2 {
+        let r = request(
+            &mut s,
+            r#"{"op":"solve","expr":"1+2","method":"baseline","tenant":"acme"}"#,
+        );
+        assert!(r.get("ok").unwrap().bool().unwrap(), "{r:?}");
+    }
+    let r = request(
+        &mut s,
+        r#"{"op":"solve","expr":"1+2","method":"baseline","tenant":"acme"}"#,
+    );
+    assert!(!r.get("ok").unwrap().bool().unwrap(), "{r:?}");
+    assert_eq!(r.get_str("err").unwrap(), "overloaded");
+    assert_eq!(r.get_str("reason").unwrap(), "rate_limited");
+    let hint = r.get_i64("retry_after_ms").unwrap();
+    // one token at 0.5/s is at most 2s away
+    assert!((10..=2000).contains(&hint), "retry_after_ms={hint}");
+
+    // a different tenant has its own bucket and is still admitted
+    let r = request(
+        &mut s,
+        r#"{"op":"solve","expr":"4+4","method":"baseline","tenant":"other"}"#,
+    );
+    assert!(r.get("ok").unwrap().bool().unwrap(), "{r:?}");
+
+    let r = request(&mut s, r#"{"op":"stats"}"#);
+    assert_eq!(r.get_i64("rejected").unwrap(), 1);
+    assert_eq!(r.get_i64("retry_after_hints").unwrap(), 1);
+    assert!(r.get_f64("retry_after_hint_mean_ms").unwrap() >= 10.0);
+    assert_eq!(r.get("tenant_requests").unwrap().get_i64("acme").unwrap(), 2);
+    assert_eq!(r.get("tenant_rejected").unwrap().get_i64("acme").unwrap(), 1);
+
+    let _ = request(&mut s, r#"{"op":"shutdown"}"#);
+    srv.join().unwrap();
+}
+
+#[test]
+fn queue_cap_burst_gets_structured_overloaded_replies() {
+    // queue_cap 2 per class; every backend step stalls 500ms so the two
+    // admitted batch solves are pinned in the system (their permits
+    // held) while the rest of the burst arrives. Deterministic counts:
+    // nothing can complete before the whole burst has been gated, so
+    // exactly 2 of 5 admit and 3 reject with `queue_full`.
+    let mut cfg = SsrConfig::default();
+    cfg.qos.queue_cap = 2;
+    let vocab = tokenizer::builtin_vocab();
+    let spec =
+        FaultSpec { seed: 3, stall_rate: 1.0, stall_ms: 500, ..FaultSpec::default() };
+    let budget = FaultInjector::shared_budget(&spec);
+    let (server, listener) = Server::start("127.0.0.1", 0, cfg, vocab, move |shard| {
+        let inner = Box::new(CalibratedBackend::for_suite("synth-math500", 7)?);
+        Ok(Box::new(FaultInjector::new(inner, spec, shard, budget.clone()))
+            as Box<dyn Backend>)
+    })
+    .unwrap();
+    let addr = server.addr.clone();
+    let srv = std::thread::spawn(move || {
+        let pool = ThreadPool::new(8);
+        server.serve(listener, &pool).unwrap();
+    });
+
+    let barrier = std::sync::Arc::new(std::sync::Barrier::new(5));
+    let clients: Vec<_> = (0..5)
+        .map(|i| {
+            let addr = addr.clone();
+            let barrier = std::sync::Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                let mut s = TcpStream::connect(&addr).unwrap();
+                barrier.wait();
+                // a 50ms deadline degrades the admitted runs at the
+                // first post-stall step, keeping the test fast
+                let line = format!(
+                    r#"{{"op":"solve","expr":"1+{i}","method":"baseline",{}}}"#,
+                    r#""class":"batch","deadline_ms":50"#,
+                );
+                let r = request(&mut s, &line);
+                if r.get("ok").unwrap().bool().unwrap() {
+                    return ("ok", 0);
+                }
+                assert_eq!(r.get_str("err").unwrap(), "overloaded", "{r:?}");
+                assert_eq!(r.get_str("reason").unwrap(), "queue_full", "{r:?}");
+                let hint = r.get_i64("retry_after_ms").unwrap();
+                assert!((10..=30_000).contains(&hint), "retry_after_ms={hint}");
+                // the connection survives the rejection: the same
+                // stream still answers (a stats probe — a solve probe
+                // would race the other rejected clients for the cap)
+                let probe = request(&mut s, r#"{"op":"stats"}"#);
+                assert!(probe.get("ok").unwrap().bool().unwrap(), "{probe:?}");
+                ("overloaded", hint)
+            })
+        })
+        .collect();
+    let outcomes: Vec<(&str, i64)> =
+        clients.into_iter().map(|c| c.join().unwrap()).collect();
+    let admitted = outcomes.iter().filter(|(o, _)| *o == "ok").count();
+    let rejected = outcomes.iter().filter(|(o, _)| *o == "overloaded").count();
+    assert_eq!((admitted, rejected), (2, 3), "{outcomes:?}");
+
+    let mut s = TcpStream::connect(&addr).unwrap();
+    let r = request(&mut s, r#"{"op":"stats"}"#);
+    assert_eq!(r.get_i64("rejected").unwrap(), 3);
+    assert_eq!(r.get_i64("shed").unwrap(), 0);
+    assert_eq!(r.get_i64("retry_after_hints").unwrap(), 3);
+    // in-flight work is never dropped: both admitted runs replied
+    let classes = r.get("class_requests").unwrap().arr().unwrap();
+    assert_eq!(classes[1].i64().unwrap(), 2, "batch replies: {r:?}");
+
+    let _ = request(&mut s, r#"{"op":"shutdown"}"#);
+    srv.join().unwrap();
+}
+
+#[test]
+fn slow_loris_connection_is_timed_out_with_a_structured_reply() {
+    let mut cfg = SsrConfig::default();
+    cfg.conn_idle_timeout_ms = 150;
+    let vocab = tokenizer::builtin_vocab();
+    let (server, listener) = Server::start("127.0.0.1", 0, cfg, vocab, |_shard| {
+        Ok(Box::new(CalibratedBackend::for_suite("synth-math500", 7)?) as Box<dyn Backend>)
+    })
+    .unwrap();
+    let addr = server.addr.clone();
+    let srv = std::thread::spawn(move || {
+        let pool = ThreadPool::new(2);
+        server.serve(listener, &pool).unwrap();
+    });
+
+    // drip half a request and stop: the 150ms idle timeout must answer
+    // with a structured error and close, not hold the handler forever
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.write_all(b"{\"op\":\"sol").unwrap();
+    s.flush().unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut reader = BufReader::new(s.try_clone().unwrap());
+    let mut reply = String::new();
+    reader.read_line(&mut reply).unwrap();
+    let r = Value::parse(&reply).unwrap();
+    assert!(!r.get("ok").unwrap().bool().unwrap(), "{r:?}");
+    assert!(r.get_str("error").unwrap().contains("idle timeout"), "{r:?}");
+    // ...and then EOF: the server hung up on the loris
+    let mut rest = Vec::new();
+    assert_eq!(reader.read_to_end(&mut rest).unwrap(), 0);
+
+    // the listener itself is unharmed
+    let mut s2 = TcpStream::connect(&addr).unwrap();
+    let r = request(&mut s2, r#"{"op":"solve","expr":"9+1","method":"baseline"}"#);
+    assert!(r.get("ok").unwrap().bool().unwrap(), "{r:?}");
+    let _ = request(&mut s2, r#"{"op":"shutdown"}"#);
     srv.join().unwrap();
 }

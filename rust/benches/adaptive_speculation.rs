@@ -1,0 +1,241 @@
+//! Adaptive speculation depth bench (calibrated backend, no artifacts
+//! needed) — the perf acceptance for the gamma-adaptive depth ISSUE:
+//!
+//! 1. **Depth sweep on a mixed suite** — Ssr-m3 Full over an easy
+//!    high-gamma workload (synth-math500 at tau 7) plus a hard
+//!    low-gamma one (synth-aime at tau 9), under `fixed:{1,2,4,8}` and
+//!    `adaptive:8`. Depth is clock-only, so pass@1 must be identical
+//!    across every config; the assert is that the adaptive controller
+//!    spends fewer total model-seconds than the BEST fixed depth on
+//!    the mix (deep bursts pay off on math500, collapse to shallow on
+//!    aime — no single fixed k can do both).
+//! 2. **Heterogeneous serving smoke** — a 3-shard pool with one shard
+//!    per class (`draft_heavy,balanced,target_heavy`), adaptive depth
+//!    and gamma-driven migration on, serving a tau-7/tau-9 job mix.
+//!    Feeds the per-class gamma scalars the bench-gate tracks.
+//!
+//! Emits one BENCH_JSON line; the `*throughput*` keys are gated by
+//! tools/bench_gate.py (>10% regression fails CI).
+
+mod common;
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use ssr::backend::calibrated::CalibratedBackend;
+use ssr::backend::Backend;
+use ssr::config::{PlacePolicy, ShardClass, SpecDepth, SsrConfig, StopRule};
+use ssr::coordinator::admission::QosClass;
+use ssr::coordinator::engine::Method;
+use ssr::coordinator::metrics::Metrics;
+use ssr::coordinator::pool::{BackendPool, PoolHandle};
+use ssr::coordinator::scheduler::SolveRequest;
+use ssr::eval::experiments::{self, ExpOpts};
+use ssr::model::tokenizer;
+use ssr::util::json;
+
+/// (suite, tau): one easy high-gamma leg, one hard low-gamma leg.
+const MIX: [(&str, u8); 2] = [("synth-math500", 7), ("synth-aime", 9)];
+const FIXED_DEPTHS: [usize; 4] = [1, 2, 4, 8];
+const ADAPTIVE_MAX: usize = 8;
+
+/// One depth config evaluated over the mixed suite.
+struct SweepRow {
+    label: String,
+    /// per-suite pass@1, in MIX order
+    pass1: Vec<f64>,
+    /// summed mean model-seconds per run across the mix
+    model_secs: f64,
+}
+
+fn sweep_config(label: &str, depth: SpecDepth, opts: &ExpOpts) -> anyhow::Result<SweepRow> {
+    let mut factory = common::calibrated_factory();
+    let mut cfg = common::default_cfg();
+    cfg.spec_depth = depth;
+    let mut pass1 = Vec::new();
+    let mut model_secs = 0.0;
+    for (suite, tau) in MIX {
+        let m = Method::Ssr { n: 3, tau, stop: StopRule::Full };
+        let row = experiments::run_method(&mut factory, suite, m, &cfg, opts, None)?;
+        pass1.push(row.pass1);
+        model_secs += row.mean_time_s;
+    }
+    Ok(SweepRow { label: label.to_string(), pass1, model_secs })
+}
+
+fn submit(
+    handle: &PoolHandle,
+    expr: &str,
+    method: Method,
+    seed: u64,
+) -> mpsc::Receiver<anyhow::Result<json::Value>> {
+    let (rtx, rrx) = mpsc::channel();
+    handle
+        .submit(SolveRequest {
+            expr: expr.to_string(),
+            method,
+            seed,
+            deadline_ms: 0,
+            class: QosClass::default(),
+            reply: rtx,
+        })
+        .expect("pool alive");
+    rrx
+}
+
+struct ServingReport {
+    gamma_overall: f64,
+    gamma_draft_heavy: f64,
+    gamma_balanced: f64,
+    gamma_target_heavy: f64,
+    spec_depth_mean: f64,
+    gamma_migrations: u64,
+    target_only_runs: u64,
+}
+
+/// One shard per class, adaptive depth, gamma rebalancing on: the
+/// serving-plane source of the per-class gamma scalars.
+fn run_heterogeneous_pool() -> anyhow::Result<ServingReport> {
+    let mut cfg = SsrConfig::default();
+    cfg.shards = 3;
+    cfg.placement = PlacePolicy::RoundRobin;
+    cfg.migration = true;
+    cfg.spec_depth = SpecDepth::Adaptive { max: ADAPTIVE_MAX };
+    cfg.shard_classes =
+        vec![ShardClass::DraftHeavy, ShardClass::Balanced, ShardClass::TargetHeavy];
+    let metrics = Arc::new(Mutex::new(Metrics::new()));
+    let (handle, joins) =
+        BackendPool::spawn(cfg, tokenizer::builtin_vocab(), Arc::clone(&metrics), |_s| {
+            Ok(Box::new(CalibratedBackend::for_suite("synth-math500", 0xADA7)?)
+                as Box<dyn Backend>)
+        })?;
+    let jobs: Vec<(String, Method, u64)> = (0..18u64)
+        .map(|i| {
+            let tau = if i % 2 == 0 { 7 } else { 9 };
+            let m = Method::Ssr { n: 3, tau, stop: StopRule::Full };
+            (format!("{}+{}*{}", i % 7 + 2, i % 5 + 3, i % 3 + 2), m, i)
+        })
+        .collect();
+    let replies: Vec<_> = jobs.iter().map(|(e, m, s)| submit(&handle, e, *m, *s)).collect();
+    for r in &replies {
+        r.recv().expect("reply").expect("solve ok");
+    }
+    drop(handle);
+    for j in joins {
+        j.join().unwrap();
+    }
+    let m = metrics.lock().unwrap();
+    assert_eq!(m.errors, 0, "errors on the heterogeneous pool");
+    assert_eq!(m.requests as usize, jobs.len());
+    Ok(ServingReport {
+        gamma_overall: m.gamma_overall(),
+        gamma_draft_heavy: m.gamma_of_class(ShardClass::DraftHeavy),
+        gamma_balanced: m.gamma_of_class(ShardClass::Balanced),
+        gamma_target_heavy: m.gamma_of_class(ShardClass::TargetHeavy),
+        spec_depth_mean: m.spec_depth_mean(),
+        gamma_migrations: m.gamma_migrations,
+        target_only_runs: m.target_only_runs,
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let t0 = Instant::now();
+    let opts = ExpOpts { trials: 2, max_problems: 24 };
+    println!(
+        "## adaptive_speculation: ssr-m3 Full on {} x{} runs/suite, \
+         fixed {FIXED_DEPTHS:?} vs adaptive:{ADAPTIVE_MAX}",
+        MIX.map(|(s, t)| format!("{s}@tau{t}")).join(" + "),
+        opts.trials as usize * opts.max_problems,
+    );
+
+    let mut rows = Vec::new();
+    for k in FIXED_DEPTHS {
+        rows.push(sweep_config(&format!("fixed:{k}"), SpecDepth::Fixed(k), &opts)?);
+    }
+    let adaptive =
+        sweep_config("adaptive", SpecDepth::Adaptive { max: ADAPTIVE_MAX }, &opts)?;
+
+    println!("  {:<12} {:>10} {:>10} {:>14}", "config", "pass1-easy", "pass1-hard", "model-s/run");
+    for r in rows.iter().chain(std::iter::once(&adaptive)) {
+        println!(
+            "  {:<12} {:>10.3} {:>10.3} {:>14.3}",
+            r.label, r.pass1[0], r.pass1[1], r.model_secs
+        );
+    }
+
+    // depth is a pure cost knob: pass@1 must be bit-identical to fixed:1
+    for r in rows.iter().skip(1).chain(std::iter::once(&adaptive)) {
+        for (i, p) in r.pass1.iter().enumerate() {
+            assert!(
+                (p - rows[0].pass1[i]).abs() < 1e-12,
+                "{} changed pass@1 on {} ({p} vs {})",
+                r.label,
+                MIX[i].0,
+                rows[0].pass1[i]
+            );
+        }
+    }
+    // the perf acceptance: adaptive beats the BEST fixed depth on the mix
+    let (best_fixed, best_secs) = rows
+        .iter()
+        .map(|r| (r.label.clone(), r.model_secs))
+        .min_by(|a, b| a.1.total_cmp(&b.1))
+        .expect("sweep rows");
+    assert!(
+        adaptive.model_secs < best_secs,
+        "adaptive ({:.3}s/run) does not beat best fixed {best_fixed} ({best_secs:.3}s/run)",
+        adaptive.model_secs
+    );
+    let gain = best_secs / adaptive.model_secs;
+    println!(
+        "  adaptive saves {:.1}% model-seconds vs best fixed ({best_fixed})",
+        (1.0 - adaptive.model_secs / best_secs) * 100.0
+    );
+
+    let serving = run_heterogeneous_pool()?;
+    assert!(serving.gamma_overall > 0.0, "pool recorded no speculation telemetry");
+    assert!(serving.spec_depth_mean >= 1.0);
+    println!(
+        "  hetero pool: gamma overall {:.3} (draft_heavy {:.3} / balanced {:.3} / \
+         target_heavy {:.3}), mean depth {:.2}, {} gamma moves, {} target-only runs",
+        serving.gamma_overall,
+        serving.gamma_draft_heavy,
+        serving.gamma_balanced,
+        serving.gamma_target_heavy,
+        serving.spec_depth_mean,
+        serving.gamma_migrations,
+        serving.target_only_runs
+    );
+
+    let fixed_keys: Vec<String> =
+        FIXED_DEPTHS.iter().map(|k| format!("model_secs_fixed_{k}")).collect();
+    let mut pairs = vec![
+        // gated scalars: per-run solve rate under adaptive depth, and
+        // the adaptive-vs-best-fixed gain itself
+        ("adaptive_throughput_runs_per_model_s", json::n(1.0 / adaptive.model_secs)),
+        ("throughput_gain_vs_best_fixed", json::n(gain)),
+        ("model_secs_adaptive", json::n(adaptive.model_secs)),
+    ];
+    for (key, row) in fixed_keys.iter().zip(&rows) {
+        pairs.push((key.as_str(), json::n(row.model_secs)));
+    }
+    pairs.extend([
+        ("pass1_easy", json::n(adaptive.pass1[0])),
+        ("pass1_hard", json::n(adaptive.pass1[1])),
+        ("gamma_overall", json::n(serving.gamma_overall)),
+        ("gamma_draft_heavy", json::n(serving.gamma_draft_heavy)),
+        ("gamma_balanced", json::n(serving.gamma_balanced)),
+        ("gamma_target_heavy", json::n(serving.gamma_target_heavy)),
+        ("spec_depth_mean", json::n(serving.spec_depth_mean)),
+        ("gamma_migrations", json::i(serving.gamma_migrations as i64)),
+        ("target_only_runs", json::i(serving.target_only_runs as i64)),
+        ("wall_s", json::n(t0.elapsed().as_secs_f64())),
+    ]);
+    common::bench_json("adaptive_speculation", pairs);
+    println!(
+        "[bench adaptive_speculation] completed in {:.2}s",
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}

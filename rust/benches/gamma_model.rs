@@ -1,16 +1,35 @@
 //! Appendix B check: analytic gamma (Eqs. 6/8/11 and the Eq. 9 variant)
 //! vs the measured token ledger. Emits a BENCH_JSON line for the
-//! tracker (presence + wall time; the analytic-vs-measured assertions
-//! live in `eval::experiments::tests`).
+//! tracker carrying the per-suite analytic/measured gamma scalars —
+//! both sides come from the shared `flops::MeasuredGamma` ledger via
+//! `experiments::gamma_check` (never recomputed locally), so these
+//! numbers agree with every other bench's gamma by construction. The
+//! analytic-vs-measured assertions live in `eval::experiments::tests`.
 mod common;
 use ssr::eval::experiments;
 use ssr::util::json;
 
 fn main() {
     let t0 = std::time::Instant::now();
+    let mut rows = Vec::new();
     common::run_timed("gamma", || {
         let mut f = common::calibrated_factory();
-        experiments::gamma_check(&mut f, &common::default_cfg(), &common::bench_opts())
+        let (r, out) =
+            experiments::gamma_check(&mut f, &common::default_cfg(), &common::bench_opts())?;
+        rows = r;
+        Ok(out)
     });
-    common::bench_json("gamma", vec![("wall_s", json::n(t0.elapsed().as_secs_f64()))]);
+    let keys: Vec<String> = rows
+        .iter()
+        .flat_map(|r| {
+            let slug = r.suite.replace('-', "_");
+            [format!("gamma_measured_{slug}"), format!("gamma_analytic_{slug}")]
+        })
+        .collect();
+    let mut pairs = vec![("wall_s", json::n(t0.elapsed().as_secs_f64()))];
+    for (i, r) in rows.iter().enumerate() {
+        pairs.push((&keys[2 * i], json::n(r.measured)));
+        pairs.push((&keys[2 * i + 1], json::n(r.analytic)));
+    }
+    common::bench_json("gamma", pairs);
 }

@@ -190,6 +190,20 @@ impl Backend for FaultInjector {
         self.inner.target_step(paths)
     }
 
+    // `spec_steps` is deliberately NOT forwarded to the inner backend:
+    // the default trait impl decomposes a burst into the five wrapped
+    // step methods above, so every micro-cycle still passes through
+    // `before_step` and fault schedules keep firing at the same
+    // per-step granularity regardless of speculation depth.
+
+    fn set_cost_profile(&mut self, draft_mult: f64, target_mult: f64) {
+        self.inner.set_cost_profile(draft_mult, target_mult);
+    }
+
+    fn clock_split_secs(&self) -> (f64, f64) {
+        self.inner.clock_split_secs()
+    }
+
     fn export_lane_state(&mut self, path: PathId) -> Result<LaneSnapshot> {
         self.inner.export_lane_state(path)
     }

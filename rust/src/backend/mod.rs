@@ -277,6 +277,40 @@ pub struct PjrtLaneState {
     pub draft_kv: Option<HostKv>,
 }
 
+/// One lane's assignment in a speculative burst (DESIGN.md §15): run up
+/// to `depth` draft/score micro-cycles between engine barriers, ending
+/// early on a rejection (target rewrite) or a terminal step.
+#[derive(Debug, Clone, Copy)]
+pub struct SpecLane {
+    pub path: PathId,
+    /// max draft/score micro-cycles this burst may run (>= 1)
+    pub depth: usize,
+    /// rewrite threshold: scores >= tau accept the draft step
+    pub tau: u8,
+}
+
+/// One committed micro-step of a burst — exactly what the legacy
+/// lockstep tick would have committed for the lane: the accepted draft
+/// step (with its raw score) or the target's rewrite (recorded as 9,
+/// matching the engine's lockstep bookkeeping).
+#[derive(Debug, Clone)]
+pub struct MicroStep {
+    pub outcome: StepOutcome,
+    pub score: u8,
+    pub rewritten: bool,
+}
+
+/// Per-lane result of [`Backend::spec_steps`]. `proposed`/`accepted`
+/// feed the engine's per-run gamma EWMA (acceptance-rate controller).
+#[derive(Debug, Clone, Default)]
+pub struct LaneBurst {
+    pub steps: Vec<MicroStep>,
+    /// draft steps proposed this burst
+    pub proposed: u64,
+    /// of those, accepted by the target's score
+    pub accepted: u64,
+}
+
 /// Static facts the engine needs from a backend.
 #[derive(Debug, Clone)]
 pub struct BackendMeta {
@@ -377,6 +411,78 @@ pub trait Backend {
 
     /// Target-only generation of the next step (baselines; no draft).
     fn target_step(&mut self, paths: &[PathId]) -> Result<Vec<StepOutcome>>;
+
+    /// Run a speculative *burst*: up to `depth` draft/score micro-cycles
+    /// per lane between engine barriers, each lane stopping early at its
+    /// first rejection (the target's rewrite commits and closes the
+    /// window) or terminal step. Per-lane decisions are bit-identical to
+    /// the equivalent sequence of depth-1 lockstep cycles — bursts only
+    /// change how the work is grouped (and hence batch-barrier cost).
+    ///
+    /// This default implementation *is* that lockstep loop over the
+    /// five step methods, so delegating wrappers (throttles, gates,
+    /// fault injectors) inherit burst support without changing the call
+    /// schedule their instrumentation observes. Backends that can model
+    /// or exploit intra-burst scheduling (the calibrated substrate's
+    /// virtual clock, a real engine's fused window verification)
+    /// override it.
+    fn spec_steps(&mut self, lanes: &[SpecLane]) -> Result<Vec<LaneBurst>> {
+        let mut bursts: Vec<LaneBurst> = (0..lanes.len()).map(|_| LaneBurst::default()).collect();
+        let mut live: Vec<usize> = (0..lanes.len()).filter(|&i| lanes[i].depth > 0).collect();
+        while !live.is_empty() {
+            let ids: Vec<PathId> = live.iter().map(|&i| lanes[i].path).collect();
+            let drafts = self.draft_step(&ids)?;
+            let scores = self.score_step(&ids)?;
+            let mut accepted: Vec<PathId> = Vec::new();
+            let mut rejected: Vec<PathId> = Vec::new();
+            for (k, &i) in live.iter().enumerate() {
+                if scores[k] >= lanes[i].tau {
+                    accepted.push(lanes[i].path);
+                } else {
+                    rejected.push(lanes[i].path);
+                }
+            }
+            if !accepted.is_empty() {
+                self.accept_step(&accepted)?;
+            }
+            let rewrites =
+                if rejected.is_empty() { Vec::new() } else { self.rewrite_step(&rejected)? };
+            let mut next = Vec::new();
+            let mut ri = 0;
+            for (k, &i) in live.iter().enumerate() {
+                let b = &mut bursts[i];
+                b.proposed += 1;
+                if scores[k] >= lanes[i].tau {
+                    b.accepted += 1;
+                    let out = drafts[k].clone();
+                    let terminal = out.terminal;
+                    b.steps.push(MicroStep { outcome: out, score: scores[k], rewritten: false });
+                    if !terminal && b.steps.len() < lanes[i].depth {
+                        next.push(i);
+                    }
+                } else {
+                    let out = rewrites[ri].clone();
+                    ri += 1;
+                    b.steps.push(MicroStep { outcome: out, score: 9, rewritten: true });
+                }
+            }
+            live = next;
+        }
+        Ok(bursts)
+    }
+
+    /// Apply a shard-class cost profile: virtual-clock multipliers for
+    /// draft-side and target-side work (DESIGN.md §15). Clock-only by
+    /// contract — a backend must never let the profile perturb sampling
+    /// streams or decisions. Default: ignore (real time is what it is).
+    fn set_cost_profile(&mut self, _draft_mult: f64, _target_mult: f64) {}
+
+    /// `(draft_secs, target_secs)` split of [`Backend::clock_secs`] —
+    /// the draft-vs-target model-seconds accounting surfaced in stats.
+    /// Backends without a split attribute everything to the target.
+    fn clock_split_secs(&self) -> (f64, f64) {
+        (0.0, self.clock_secs())
+    }
 
     /// Detach one lane into a serializable [`LaneSnapshot`] (live run
     /// migration, DESIGN.md §12). The local lane is closed by the

@@ -102,6 +102,119 @@ impl PlacePolicy {
     }
 }
 
+/// Per-run speculation-depth policy (DESIGN.md §15). Depth is how many
+/// draft/score micro-cycles a lane may run between engine barriers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpecDepth {
+    /// burst exactly k cycles per tick; `fixed:1` is the legacy
+    /// lockstep draft/score/rewrite tick and the default. Any k is
+    /// decision-identical to k=1 (bursts replay the exact per-lane op
+    /// order, and fast-stop runs always tick at depth 1 so their early
+    /// stop keeps per-step granularity) — only the clock model differs
+    Fixed(usize),
+    /// bounded per-run controller in the engine: widens depth while the
+    /// run's gamma EWMA stays high, narrows as it drops, and falls back
+    /// to target-only generation once gamma collapses below break-even
+    Adaptive {
+        /// hard ceiling on controller depth
+        max: usize,
+    },
+}
+
+impl SpecDepth {
+    pub fn parse(s: &str) -> Result<SpecDepth> {
+        if s == "adaptive" {
+            return Ok(SpecDepth::Adaptive { max: 8 });
+        }
+        if let Some(rest) = s.strip_prefix("adaptive:") {
+            let max: usize =
+                rest.parse().map_err(|_| anyhow::anyhow!("bad adaptive depth `{s}`"))?;
+            return Ok(SpecDepth::Adaptive { max });
+        }
+        if let Some(rest) = s.strip_prefix("fixed:") {
+            let k: usize =
+                rest.parse().map_err(|_| anyhow::anyhow!("bad fixed depth `{s}`"))?;
+            return Ok(SpecDepth::Fixed(k));
+        }
+        bail!("unknown spec depth `{s}` (fixed:<k>|adaptive|adaptive:<max>)")
+    }
+
+    /// Canonical display form (round-trips through `parse`).
+    pub fn label(&self) -> String {
+        match self {
+            SpecDepth::Fixed(k) => format!("fixed:{k}"),
+            SpecDepth::Adaptive { max } => format!("adaptive:{max}"),
+        }
+    }
+}
+
+impl Default for SpecDepth {
+    fn default() -> Self {
+        SpecDepth::Fixed(1)
+    }
+}
+
+/// Heterogeneous shard classes (DESIGN.md §15): cost/capacity profiles
+/// only — a class never changes decision streams, so placement stays
+/// equivalence-safe. `draft_heavy` shards run drafts cheap and wide,
+/// `target_heavy` shards run target passes cheap; `balanced` is the
+/// uniform legacy profile.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum ShardClass {
+    DraftHeavy,
+    Balanced,
+    TargetHeavy,
+}
+
+impl ShardClass {
+    pub fn parse(s: &str) -> Result<ShardClass> {
+        Ok(match s {
+            "draft_heavy" | "draft-heavy" | "draft" => ShardClass::DraftHeavy,
+            "balanced" => ShardClass::Balanced,
+            "target_heavy" | "target-heavy" | "target" => ShardClass::TargetHeavy,
+            _ => bail!("unknown shard class `{s}` (draft_heavy|balanced|target_heavy)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShardClass::DraftHeavy => "draft_heavy",
+            ShardClass::Balanced => "balanced",
+            ShardClass::TargetHeavy => "target_heavy",
+        }
+    }
+
+    /// Virtual-clock cost multipliers `(draft, target)` applied to a
+    /// shard's backend at spawn. Clock-only: decisions are unaffected.
+    pub fn cost_profile(&self) -> (f64, f64) {
+        match self {
+            ShardClass::DraftHeavy => (0.5, 1.3),
+            ShardClass::Balanced => (1.0, 1.0),
+            ShardClass::TargetHeavy => (1.6, 0.7),
+        }
+    }
+
+    /// Lane-capacity multiplier over `max_lanes` for this class —
+    /// draft-heavy shards trade per-lane target speed for width.
+    pub fn lane_factor(&self) -> usize {
+        match self {
+            ShardClass::DraftHeavy => 2,
+            ShardClass::Balanced | ShardClass::TargetHeavy => 1,
+        }
+    }
+
+    /// Whether this class can serve target-dominated work at sane cost;
+    /// the pool never drains its last healthy target-capable shard.
+    pub fn target_capable(&self) -> bool {
+        !matches!(self, ShardClass::DraftHeavy)
+    }
+
+    /// Parse a comma-separated class pattern (`--shard-classes`).
+    pub fn parse_list(s: &str) -> Result<Vec<ShardClass>> {
+        s.split(',').map(|p| ShardClass::parse(p.trim())).collect()
+    }
+}
+
 /// Shared-prefix prefill & prefix-reuse cache knobs (DESIGN.md §2, §10).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct PrefixCacheCfg {
@@ -471,6 +584,14 @@ pub struct SsrConfig {
     /// idle thieves' shed requests. Off = PR-4 semantics (drains wait
     /// out their in-flight solves; stealing moves queued jobs only)
     pub migration: bool,
+    /// per-run speculation-depth policy: `fixed:1` (legacy lockstep,
+    /// default), `fixed:<k>` bursts, or `adaptive[:<max>]` — the
+    /// engine's gamma-EWMA controller (DESIGN.md §15)
+    pub spec_depth: SpecDepth,
+    /// heterogeneous shard-class pattern, assigned cyclically by shard
+    /// id (`class = pattern[id % len]`, hot-added shards included).
+    /// Empty = every shard `balanced` (the legacy uniform pool)
+    pub shard_classes: Vec<ShardClass>,
     /// queue-driven autoscaler policy (off by default)
     pub autoscale: AutoscaleCfg,
     /// shared-prefix prefill + cross-request prefix cache / shared tier
@@ -518,6 +639,8 @@ impl Default for SsrConfig {
             steal_threshold: 0,
             min_shards: 1,
             migration: true,
+            spec_depth: SpecDepth::default(),
+            shard_classes: Vec::new(),
             autoscale: AutoscaleCfg::default(),
             prefix: PrefixCacheCfg::default(),
             deadline_ms: 0,
@@ -551,6 +674,14 @@ impl SsrConfig {
                 "steal_threshold" => self.steal_threshold = val.usize()?,
                 "min_shards" => self.min_shards = val.usize()?,
                 "migration" => self.migration = val.bool()?,
+                "spec_depth" => self.spec_depth = SpecDepth::parse(val.str()?)?,
+                "shard_classes" => {
+                    self.shard_classes = val
+                        .arr()?
+                        .iter()
+                        .map(|x| ShardClass::parse(x.str()?))
+                        .collect::<Result<Vec<_>>>()?;
+                }
                 "autoscale" => self.autoscale.apply_json(val)?,
                 "prefix_cache" => self.prefix.apply_json(val)?,
                 "deadline_ms" => self.deadline_ms = val.i64()? as u64,
@@ -598,6 +729,12 @@ impl SsrConfig {
         self.min_shards = args.opt_usize("min-shards", self.min_shards)?;
         if let Some(s) = args.opt("migrate") {
             self.migration = parse_bool(s)?;
+        }
+        if let Some(s) = args.opt("spec-depth") {
+            self.spec_depth = SpecDepth::parse(s)?;
+        }
+        if let Some(s) = args.opt("shard-classes") {
+            self.shard_classes = ShardClass::parse_list(s)?;
         }
         if let Some(s) = args.opt("autoscale") {
             self.autoscale.enabled = parse_bool(s)?;
@@ -676,6 +813,27 @@ impl SsrConfig {
                  permanently below its own removal floor",
                 self.min_shards,
                 self.shards
+            );
+        }
+        match self.spec_depth {
+            SpecDepth::Fixed(k) if k == 0 || k > 16 => {
+                bail!("spec_depth fixed:<k> must have k in 1..=16, got {k}");
+            }
+            SpecDepth::Adaptive { max } if max < 2 || max > 16 => {
+                bail!("spec_depth adaptive:<max> must have max in 2..=16, got {max}");
+            }
+            _ => {}
+        }
+        if self.shard_classes.len() > 64 {
+            bail!("shard_classes pattern must have <= 64 entries, got {}", self.shard_classes.len());
+        }
+        if !self.shard_classes.is_empty()
+            && !self.shard_classes.iter().any(|c| c.target_capable())
+        {
+            bail!(
+                "shard_classes must include at least one target-capable class \
+                 (balanced or target_heavy): a pure draft_heavy pool cannot serve \
+                 gamma-collapsed or non-speculative work at sane cost"
             );
         }
         let a = &self.autoscale;
@@ -782,6 +940,17 @@ impl SsrConfig {
             bail!("fault.stall_ms must be <= 60000, got {}", f.stall_ms);
         }
         Ok(())
+    }
+
+    /// Class of a shard id under the configured pattern. Cyclic over the
+    /// pattern so hot-added shards (monotonic ids) keep a stable class;
+    /// an empty pattern is the uniform legacy pool.
+    pub fn class_of(&self, shard_id: usize) -> ShardClass {
+        if self.shard_classes.is_empty() {
+            ShardClass::Balanced
+        } else {
+            self.shard_classes[shard_id % self.shard_classes.len()]
+        }
     }
 
     /// Default artifacts location relative to the repo root.
@@ -1189,6 +1358,90 @@ mod tests {
         assert_eq!(c.qos.weights, [6, 3, 2]);
         assert_eq!(c.qos.slo_ms, 250);
         assert!((c.qos.cost_ceiling_s - 60.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spec_depth_knob() {
+        let c = SsrConfig::default();
+        assert_eq!(c.spec_depth, SpecDepth::Fixed(1), "legacy lockstep is the default");
+
+        assert_eq!(SpecDepth::parse("fixed:4").unwrap(), SpecDepth::Fixed(4));
+        assert_eq!(SpecDepth::parse("adaptive").unwrap(), SpecDepth::Adaptive { max: 8 });
+        assert_eq!(SpecDepth::parse("adaptive:6").unwrap(), SpecDepth::Adaptive { max: 6 });
+        assert!(SpecDepth::parse("deep").is_err());
+        assert!(SpecDepth::parse("fixed:x").is_err());
+        assert_eq!(SpecDepth::Fixed(4).label(), "fixed:4");
+        assert_eq!(SpecDepth::Adaptive { max: 8 }.label(), "adaptive:8");
+
+        let mut c = SsrConfig::default();
+        let v = Value::parse(r#"{"spec_depth": "fixed:2"}"#).unwrap();
+        c.apply_json(&v).unwrap();
+        assert_eq!(c.spec_depth, SpecDepth::Fixed(2));
+
+        // out-of-range depths rejected at validation
+        let mut c = SsrConfig::default();
+        assert!(c.apply_json(&Value::parse(r#"{"spec_depth": "fixed:0"}"#).unwrap()).is_err());
+        let mut c = SsrConfig::default();
+        assert!(c
+            .apply_json(&Value::parse(r#"{"spec_depth": "adaptive:32"}"#).unwrap())
+            .is_err());
+
+        let argv: Vec<String> = ["serve", "--spec-depth", "adaptive:4"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let mut args = Args::parse(&argv).unwrap();
+        let mut c = SsrConfig::default();
+        c.apply_args(&mut args).unwrap();
+        assert_eq!(c.spec_depth, SpecDepth::Adaptive { max: 4 });
+    }
+
+    #[test]
+    fn shard_class_knob() {
+        let c = SsrConfig::default();
+        assert!(c.shard_classes.is_empty(), "uniform pool is the default");
+        assert_eq!(c.class_of(0), ShardClass::Balanced);
+        assert_eq!(c.class_of(7), ShardClass::Balanced);
+
+        let mut c = SsrConfig::default();
+        let v =
+            Value::parse(r#"{"shard_classes": ["draft_heavy", "balanced", "target_heavy"]}"#)
+                .unwrap();
+        c.apply_json(&v).unwrap();
+        assert_eq!(c.class_of(0), ShardClass::DraftHeavy);
+        assert_eq!(c.class_of(2), ShardClass::TargetHeavy);
+        // cyclic: hot-added shard 3 wraps to the pattern head
+        assert_eq!(c.class_of(3), ShardClass::DraftHeavy);
+
+        // pure draft pools are rejected: nothing target-capable to
+        // migrate collapsed-gamma runs onto
+        let mut c = SsrConfig::default();
+        assert!(c
+            .apply_json(&Value::parse(r#"{"shard_classes": ["draft_heavy"]}"#).unwrap())
+            .is_err());
+        let mut c = SsrConfig::default();
+        assert!(c
+            .apply_json(&Value::parse(r#"{"shard_classes": ["gpu"]}"#).unwrap())
+            .is_err());
+
+        let argv: Vec<String> = ["serve", "--shard-classes", "draft_heavy,target_heavy"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let mut args = Args::parse(&argv).unwrap();
+        let mut c = SsrConfig::default();
+        c.apply_args(&mut args).unwrap();
+        assert_eq!(c.shard_classes, vec![ShardClass::DraftHeavy, ShardClass::TargetHeavy]);
+
+        // class contract: profiles are clock/capacity-only knobs
+        assert_eq!(ShardClass::Balanced.cost_profile(), (1.0, 1.0));
+        assert_eq!(ShardClass::DraftHeavy.lane_factor(), 2);
+        assert!(!ShardClass::DraftHeavy.target_capable());
+        assert!(ShardClass::TargetHeavy.target_capable());
+        assert_eq!(
+            ShardClass::parse_list("draft_heavy, balanced").unwrap(),
+            vec![ShardClass::DraftHeavy, ShardClass::Balanced]
+        );
     }
 
     #[test]

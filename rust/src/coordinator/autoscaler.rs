@@ -41,6 +41,15 @@
 //! without threads; the [`Autoscaler`] wrapper owns the sampling thread
 //! and stops promptly on drop (condvar, not sleep).
 //!
+//! Heterogeneous fleets (`--shard-classes`, DESIGN.md §15) get one
+//! policy instance per configured class, each fed that class's slice of
+//! `PoolHandle::sample_class_signals` and scaling it independently via
+//! `add_shard_of` / class-scoped victims — a draft-heavy backlog grows
+//! draft capacity without buying target-heavy iron and vice versa. Each
+//! class drains no lower than one shard (`remove_shard` additionally
+//! refuses to retire the last target-capable shard), and the fleet-wide
+//! `max_shards` ceiling binds across classes.
+//!
 //! Fault interaction (DESIGN.md §13): every signal the policy consumes
 //! comes from `PoolHandle::sample_signals` / `shard_loads`, which count
 //! only *healthy* shards — a crashed shard mid-respawn is invisible to
@@ -55,7 +64,7 @@ use std::time::Duration;
 use super::admission::QosClass;
 use super::metrics::Metrics;
 use super::pool::PoolHandle;
-use crate::config::{AutoscaleCfg, SsrConfig};
+use crate::config::{AutoscaleCfg, ShardClass, SsrConfig};
 use crate::util::sync::lock_ok;
 
 /// One evaluation's worth of pool signals.
@@ -110,6 +119,21 @@ pub struct Policy {
 }
 
 impl Policy {
+    /// Class-scoped policy for heterogeneous fleets (DESIGN.md §15):
+    /// one instance per configured [`ShardClass`], fed that class's
+    /// slice of `PoolHandle::sample_class_signals`. The class floor is
+    /// one — `remove_shard`'s per-class and target-capability guards
+    /// are the backstop, the pool-level `min_shards` stays a fleet
+    /// total — and capacity is scaled by the class's lane multiplier
+    /// (a draft-heavy shard runs twice the lanes, so the same
+    /// outstanding work reads as half the occupancy).
+    pub fn for_class(cfg: &SsrConfig, class: ShardClass) -> Policy {
+        let mut p = Policy::new(cfg);
+        p.min_shards = 1;
+        p.max_lanes = cfg.max_lanes.max(1).saturating_mul(class.lane_factor().max(1));
+        p
+    }
+
     pub fn new(cfg: &SsrConfig) -> Policy {
         Policy {
             cfg: cfg.autoscale,
@@ -192,6 +216,51 @@ impl Policy {
     }
 }
 
+/// Apply one scale-up: class-pinned on heterogeneous fleets (the
+/// id-indexed class pattern drifts under churn, so the class must be
+/// requested explicitly).
+fn apply_up(handle: &PoolHandle, metrics: &Arc<Mutex<Metrics>>, class: Option<ShardClass>) {
+    let res = match class {
+        Some(c) => handle.add_shard_of(c),
+        None => handle.add_shard(),
+    };
+    match res {
+        Ok(id) => {
+            lock_ok(metrics).record_scale_event(true);
+            let tag = class.map(|c| format!(" [{}]", c.name())).unwrap_or_default();
+            log::info!("autoscaler: +shard {id}{tag} ({} live)", handle.shards());
+        }
+        Err(e) => log::debug!("autoscaler: add_shard refused: {e:#}"),
+    }
+}
+
+/// Apply one scale-down: least-loaded victim (newest shard on ties),
+/// scoped to `class` on heterogeneous fleets. `remove_shard`'s
+/// min-shards / per-class / target-capability floors may still refuse
+/// the pick — refusal is a no-op, not an error.
+fn apply_down(handle: &PoolHandle, metrics: &Arc<Mutex<Metrics>>, class: Option<ShardClass>) {
+    let loads = match class {
+        Some(c) => handle.shard_loads_of(c),
+        None => handle.shard_loads(),
+    };
+    let victim = loads
+        .into_iter()
+        .min_by_key(|&(id, load)| (load, std::cmp::Reverse(id)))
+        .map(|(id, _)| id);
+    if let Some(id) = victim {
+        match handle.remove_shard(id) {
+            Ok(drain_s) => {
+                lock_ok(metrics).record_scale_event(false);
+                log::info!(
+                    "autoscaler: -shard {id} (drained {drain_s:.3}s, {} live)",
+                    handle.shards()
+                );
+            }
+            Err(e) => log::debug!("autoscaler: remove_shard refused: {e:#}"),
+        }
+    }
+}
+
 /// The sampling thread wrapper: owns a [`PoolHandle`] clone and applies
 /// [`Policy`] decisions via `add_shard` / `remove_shard`. Stop it (or
 /// drop it) before expecting the pool to drain — its handle keeps the
@@ -209,7 +278,18 @@ impl Autoscaler {
         metrics: Arc<Mutex<Metrics>>,
         cfg: &SsrConfig,
     ) -> Autoscaler {
-        let mut policy = Policy::new(cfg);
+        // heterogeneous fleet: one policy per configured class, each
+        // scaling its own slice of the pool independently (DESIGN.md
+        // §15); uniform pools keep the single pool-wide policy
+        let mut class_policies: Vec<(ShardClass, Policy)> = {
+            let mut classes = cfg.shard_classes.clone();
+            classes.sort();
+            classes.dedup();
+            classes.into_iter().map(|c| (c, Policy::for_class(cfg, c))).collect()
+        };
+        let mut pool_policy =
+            if class_policies.is_empty() { Some(Policy::new(cfg)) } else { None };
+        let max_total = cfg.autoscale.max_shards;
         let interval = Duration::from_millis(cfg.autoscale.interval_ms.max(1));
         let stop = Arc::new((Mutex::new(false), Condvar::new()));
         let stop2 = Arc::clone(&stop);
@@ -227,59 +307,69 @@ impl Autoscaler {
                             break;
                         }
                     }
-                    // one consistent sample, one lock pass per shard
-                    let (shards, queued_jobs, oldest_wait_s, outstanding_lanes) =
-                        handle.sample_signals();
-                    if shards == 0 {
-                        continue;
-                    }
+                    // the SLO and the cost bill are fleet-wide signals:
+                    // a p99 breach pressures every class up, the cost
+                    // ceiling vetoes every class's growth
                     let (interactive_p99_s, model_secs) = {
                         let m = lock_ok(&metrics);
                         (m.class_p99(QosClass::Interactive), m.model_secs)
                     };
-                    let s = Signals {
-                        shards,
-                        queued_jobs,
-                        oldest_wait_s,
-                        outstanding_lanes,
-                        interactive_p99_s,
-                        model_secs,
-                    };
-                    match policy.observe(&s) {
-                        Some(Action::Up) => match handle.add_shard() {
-                            Ok(id) => {
-                                lock_ok(&metrics).record_scale_event(true);
-                                log::info!(
-                                    "autoscaler: +shard {id} ({} live; wait ewma breach)",
-                                    handle.shards()
-                                );
+                    if let Some(policy) = pool_policy.as_mut() {
+                        // one consistent sample, one lock pass per shard
+                        let (shards, queued_jobs, oldest_wait_s, outstanding_lanes) =
+                            handle.sample_signals();
+                        if shards == 0 {
+                            continue;
+                        }
+                        let s = Signals {
+                            shards,
+                            queued_jobs,
+                            oldest_wait_s,
+                            outstanding_lanes,
+                            interactive_p99_s,
+                            model_secs,
+                        };
+                        match policy.observe(&s) {
+                            Some(Action::Up) => apply_up(&handle, &metrics, None),
+                            Some(Action::Down) => apply_down(&handle, &metrics, None),
+                            None => {}
+                        }
+                    } else {
+                        let per_class = handle.sample_class_signals();
+                        for (class, policy) in class_policies.iter_mut() {
+                            let Some(&(_, (shards, queued_jobs, oldest_wait_s, lanes))) =
+                                per_class.iter().find(|(c, _)| c == class)
+                            else {
+                                continue;
+                            };
+                            if shards == 0 {
+                                // remove_shard's floor keeps every class
+                                // populated; a transiently-crashed class
+                                // produces no load signal to act on
+                                continue;
                             }
-                            Err(e) => log::debug!("autoscaler: add_shard refused: {e:#}"),
-                        },
-                        Some(Action::Down) => {
-                            // least-loaded victim; newest shard on ties
-                            let victim = handle
-                                .shard_loads()
-                                .into_iter()
-                                .min_by_key(|&(id, load)| (load, std::cmp::Reverse(id)))
-                                .map(|(id, _)| id);
-                            if let Some(id) = victim {
-                                match handle.remove_shard(id) {
-                                    Ok(drain_s) => {
-                                        lock_ok(&metrics).record_scale_event(false);
-                                        log::info!(
-                                            "autoscaler: -shard {id} (drained {drain_s:.3}s, \
-                                             {} live)",
-                                            handle.shards()
-                                        );
-                                    }
-                                    Err(e) => {
-                                        log::debug!("autoscaler: remove_shard refused: {e:#}")
+                            let s = Signals {
+                                shards,
+                                queued_jobs,
+                                oldest_wait_s,
+                                outstanding_lanes: lanes,
+                                interactive_p99_s,
+                                model_secs,
+                            };
+                            match policy.observe(&s) {
+                                Some(Action::Up) => {
+                                    // each policy caps its own class at
+                                    // max_shards; the fleet total holds too
+                                    if handle.shards() < max_total {
+                                        apply_up(&handle, &metrics, Some(*class));
                                     }
                                 }
+                                Some(Action::Down) => {
+                                    apply_down(&handle, &metrics, Some(*class))
+                                }
+                                None => {}
                             }
                         }
-                        None => {}
                     }
                 }
                 // handle drops here: the autoscaler no longer keeps the
@@ -406,6 +496,8 @@ mod tests {
             queued_jobs: 1,
             oldest_wait_s: 0.0,
             outstanding_lanes: 0,
+            interactive_p99_s: 0.0,
+            model_secs: 0.0,
         };
         for _ in 0..20 {
             assert_eq!(p.observe(&queued), None, "scaled down with queued work");
@@ -529,6 +621,40 @@ mod tests {
         assert_eq!(p.observe(&idle_over), None);
         assert_eq!(p.observe(&idle_over), None);
         assert_eq!(p.observe(&idle_over), Some(Action::Down));
+    }
+
+    #[test]
+    fn class_policies_scale_against_a_floor_of_one() {
+        use crate::config::ShardClass;
+        let mut cfg = test_cfg();
+        cfg.min_shards = 2;
+        // pool-level policy: a 2-shard idle pool is already at its floor
+        let mut p = Policy::new(&cfg);
+        for _ in 0..20 {
+            assert_eq!(p.observe(&idle(2)), None);
+        }
+        // class policy: the same slice drains toward one shard —
+        // remove_shard's per-class floor guards the last member, the
+        // pool min_shards is a fleet total, not a per-class bound
+        let mut p = Policy::for_class(&cfg, ShardClass::TargetHeavy);
+        assert_eq!(p.observe(&idle(2)), None);
+        assert_eq!(p.observe(&idle(2)), None);
+        assert_eq!(p.observe(&idle(2)), Some(Action::Down));
+        // draft-heavy capacity doubles with its lane multiplier: 7
+        // outstanding lanes on 2x8-lane shards is ~0.44 occupancy for a
+        // balanced class (never sustained slack) but ~0.22 for a
+        // draft-heavy class (slack -> down)
+        let busy = Signals { outstanding_lanes: 7, ..idle(2) };
+        let mut bal = Policy::for_class(&cfg, ShardClass::Balanced);
+        let mut dh = Policy::for_class(&cfg, ShardClass::DraftHeavy);
+        let mut bal_down = false;
+        let mut dh_down = false;
+        for _ in 0..20 {
+            bal_down |= bal.observe(&busy) == Some(Action::Down);
+            dh_down |= dh.observe(&busy) == Some(Action::Down);
+        }
+        assert!(!bal_down, "balanced class drained at ~0.44 occupancy");
+        assert!(dh_down, "draft-heavy class never saw its doubled capacity");
     }
 
     #[test]

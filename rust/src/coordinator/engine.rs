@@ -22,8 +22,10 @@ use anyhow::Result;
 use super::aggregation::{aggregate, Decision, PathVote};
 use super::prefix::{Acquired, PrefixCache, PrefixProvider};
 use super::spm;
-use crate::backend::{severity_of, Backend, FaultSeverity, LaneSnapshot, PathId, StepOutcome};
-use crate::config::{Selection, SsrConfig, StopRule};
+use crate::backend::{
+    severity_of, Backend, FaultSeverity, LaneSnapshot, PathId, SpecLane, StepOutcome,
+};
+use crate::config::{Selection, SpecDepth, SsrConfig, StopRule};
 use crate::util::rng::Rng;
 use crate::workload::Problem;
 
@@ -92,6 +94,16 @@ pub struct RunResult {
     /// the scheduler reports the aggregate via `Metrics::model_secs`
     /// instead of surfacing this field per reply.
     pub model_secs: f64,
+    /// draft steps proposed to / accepted by the target (the run's
+    /// acceptance ledger; both 0 for non-speculative methods)
+    pub proposed: u64,
+    pub accepted: u64,
+    /// lifetime acceptance rate gamma (None if the run never speculated)
+    pub gamma: Option<f64>,
+    /// speculation window depth when the run finished (1 = per-step)
+    pub spec_depth: usize,
+    /// the controller abandoned speculation (gamma below break-even)
+    pub target_only: bool,
 }
 
 impl RunResult {
@@ -178,6 +190,118 @@ fn with_transient_retry<T>(retries: &mut u64, mut call: impl FnMut() -> Result<T
     }
 }
 
+/// EWMA smoothing for the per-run acceptance (gamma) signal.
+const GAMMA_EWMA_ALPHA: f64 = 0.3;
+
+/// Widening break-even on the calibrated cost model (DESIGN.md §15):
+/// a window span costs `alpha + 0.12 * tail` when discarded by a
+/// rejection and saves `0.12 * (1 - tail)` of verify time when
+/// committed (alpha = 0.047, verify tail = 0.15). Drafting one more
+/// span is worth it while the window survives to it with probability
+/// above waste / (waste + saving) = 0.065 / 0.167 ≈ 0.39, i.e. the
+/// gamma-optimal window depth is ≈ 1 + ln(0.39) / ln(gamma).
+const MARGINAL_REACH: f64 = 0.39;
+
+/// Below this lifetime acceptance, speculation loses outright: a
+/// proposed step costs alpha + 0.12 + (1 - gamma) rewrite target
+/// seconds versus 1.0 for a plain target step, which crosses 1 at
+/// gamma ≈ 0.167. The switch is sticky and gated on a meaningful
+/// sample so a few unlucky ticks cannot kill speculation for good.
+const TARGET_ONLY_BELOW: f64 = 0.12;
+const TARGET_ONLY_MIN_PROPOSED: u64 = 50;
+
+/// The per-run speculation controller (DESIGN.md §15): the acceptance
+/// EWMA, the bounded depth controller around it, and the lifetime
+/// accepted/proposed ledger. Lives in [`RunCore`], so a migrated run
+/// carries its learned operating point with it.
+#[derive(Debug, Clone)]
+struct SpecCtl {
+    mode: SpecDepth,
+    /// acceptance EWMA (None until the first speculative tick)
+    gamma: Option<f64>,
+    /// current window depth; 1 = the legacy per-step cycle
+    depth: usize,
+    /// sticky: speculation abandoned, lanes decode target-only
+    target_only: bool,
+    /// speculative ticks folded into the EWMA
+    samples: u64,
+    /// lifetime accepted / proposed draft steps
+    accepted: u64,
+    proposed: u64,
+    /// gamma-driven class migrations consumed — the scheduler's
+    /// anti-ping-pong budget travels with the run
+    class_moves: u32,
+}
+
+impl SpecCtl {
+    fn new(mode: SpecDepth) -> SpecCtl {
+        let depth = match mode {
+            SpecDepth::Fixed(k) => k,
+            SpecDepth::Adaptive { .. } => 1,
+        };
+        SpecCtl {
+            mode,
+            gamma: None,
+            depth,
+            target_only: false,
+            samples: 0,
+            accepted: 0,
+            proposed: 0,
+            class_moves: 0,
+        }
+    }
+
+    /// Gamma-optimal window depth (see [`MARGINAL_REACH`]).
+    fn optimal_depth(g: f64) -> usize {
+        if g <= MARGINAL_REACH {
+            return 1;
+        }
+        if g >= 0.98 {
+            return usize::MAX; // the Adaptive max clamps this
+        }
+        1 + (MARGINAL_REACH.ln() / g.ln()) as usize
+    }
+
+    /// Fold one tick's accepted/proposed counts into the EWMA and move
+    /// the depth one bounded step toward the gamma-optimal window —
+    /// widen by one, narrow by halving (AIMD, so a collapse backs off
+    /// fast while recovery re-widens carefully). Only Full-stop runs
+    /// adjust depth: fast-stop runs re-check their stop rule every
+    /// step, so they stay at depth 1 and every `--spec-depth` setting
+    /// remains decision-identical for them.
+    fn note_gamma(&mut self, accepted: u64, proposed: u64, stop: StopRule) {
+        if proposed == 0 {
+            return;
+        }
+        self.accepted += accepted;
+        self.proposed += proposed;
+        self.samples += 1;
+        let g = accepted as f64 / proposed as f64;
+        let ewma = match self.gamma {
+            None => g,
+            Some(prev) => prev + GAMMA_EWMA_ALPHA * (g - prev),
+        };
+        self.gamma = Some(ewma);
+        let SpecDepth::Adaptive { max } = self.mode else { return };
+        if self.target_only || stop != StopRule::Full {
+            return;
+        }
+        if self.proposed >= TARGET_ONLY_MIN_PROPOSED
+            && (self.accepted as f64) < TARGET_ONLY_BELOW * self.proposed as f64
+        {
+            self.target_only = true;
+            self.depth = 1;
+            return;
+        }
+        let target = Self::optimal_depth(ewma).min(max.max(1));
+        if self.depth < target {
+            self.depth += 1;
+        } else if self.depth > target {
+            self.depth = (self.depth / 2).max(target);
+        }
+    }
+}
+
 /// The placement-invariant half of a [`ProblemRun`]: every input to
 /// future decisions (stop rules, votes, per-lane score histories) and
 /// nothing shard-local. Plain `Send` data — it crosses shard-thread
@@ -195,6 +319,8 @@ struct RunCore {
     finished_answers: BTreeMap<i64, usize>,
     stopped: bool,
     t0: Instant,
+    /// speculation depth controller + acceptance ledger
+    spec: SpecCtl,
 }
 
 /// A resumable single-problem step machine. `start` selects strategies
@@ -238,6 +364,17 @@ impl DetachedRun {
     /// Lanes the run will occupy once re-attached (admission currency).
     pub fn lanes(&self) -> usize {
         self.core.lanes.len()
+    }
+
+    /// Acceptance EWMA carried in the detached core (class placement
+    /// hint for re-admission).
+    pub fn gamma_ewma(&self) -> Option<f64> {
+        self.core.spec.gamma
+    }
+
+    /// True if the detached run had dropped to target-only decoding.
+    pub fn target_only(&self) -> bool {
+        self.core.spec.target_only
     }
 
     /// Approximate serialized size — the `migration_bytes` gauge.
@@ -357,6 +494,7 @@ impl ProblemRun {
                 finished_answers: BTreeMap::new(),
                 stopped: false,
                 t0,
+                spec: SpecCtl::new(cfg.spec_depth),
             },
             ids,
             index,
@@ -380,6 +518,51 @@ impl ProblemRun {
 
     pub fn selection(&self) -> &[usize] {
         &self.core.selection
+    }
+
+    /// Acceptance EWMA the depth controller tracks (None until the run
+    /// has speculated) — the scheduler's class-migration signal.
+    pub fn gamma_ewma(&self) -> Option<f64> {
+        self.core.spec.gamma
+    }
+
+    /// Speculative ticks folded into the gamma EWMA.
+    pub fn gamma_samples(&self) -> u64 {
+        self.core.spec.samples
+    }
+
+    /// Current speculation window depth (1 = per-step cycling).
+    pub fn spec_depth(&self) -> usize {
+        self.core.spec.depth
+    }
+
+    /// True once the controller dropped the run to target-only decoding.
+    pub fn target_only(&self) -> bool {
+        self.core.spec.target_only
+    }
+
+    /// Gamma-driven class migrations this run has consumed — the
+    /// scheduler's anti-ping-pong budget, carried across shards.
+    pub fn class_moves(&self) -> u32 {
+        self.core.spec.class_moves
+    }
+
+    pub fn note_class_move(&mut self) {
+        self.core.spec.class_moves += 1;
+    }
+
+    /// Window depth for this run's next tick: 0 sends the lanes to the
+    /// target-only bucket, 1 is the legacy draft/score/rewrite cycle,
+    /// >1 bursts speculation windows. Fast-stop runs always tick at
+    /// depth 1 so their early-stop checks keep per-step granularity.
+    fn tick_depth(&self) -> usize {
+        if !self.core.speculative || self.core.spec.target_only {
+            return 0;
+        }
+        if self.core.stop != StopRule::Full {
+            return 1;
+        }
+        self.core.spec.depth.max(1)
     }
 
     /// Lanes that still need a step this tick.
@@ -537,6 +720,15 @@ impl ProblemRun {
             selection: self.core.selection.clone(),
             wall_secs: self.core.t0.elapsed().as_secs_f64(),
             model_secs: self.clock_carry + (backend.clock_secs() - self.clock0),
+            proposed: self.core.spec.proposed,
+            accepted: self.core.spec.accepted,
+            gamma: if self.core.spec.proposed > 0 {
+                Some(self.core.spec.accepted as f64 / self.core.spec.proposed as f64)
+            } else {
+                None
+            },
+            spec_depth: self.core.spec.depth,
+            target_only: self.core.spec.target_only,
         })
     }
 }
@@ -579,18 +771,18 @@ fn pick_strategies(
 /// requests, per-run groups when lanes are pinned to their prefill
 /// batch (PJRT). Entries arrive run-by-run, so same-run lanes are
 /// contiguous.
-fn call_groups(
-    lanes: Vec<(usize, PathId)>,
+fn call_groups<T: Copy>(
+    lanes: Vec<(usize, T)>,
     cross_request: bool,
     max_lanes_per_call: usize,
-) -> Vec<Vec<(usize, PathId)>> {
+) -> Vec<Vec<(usize, T)>> {
     let mut groups = Vec::new();
     if cross_request {
         for c in lanes.chunks(max_lanes_per_call) {
             groups.push(c.to_vec());
         }
     } else {
-        let mut cur: Vec<(usize, PathId)> = Vec::new();
+        let mut cur: Vec<(usize, T)> = Vec::new();
         for lp in lanes {
             if !cur.is_empty() && (cur[0].0 != lp.0 || cur.len() >= max_lanes_per_call) {
                 groups.push(std::mem::take(&mut cur));
@@ -604,31 +796,54 @@ fn call_groups(
     groups
 }
 
-/// Advance every active lane of every not-done run by exactly one
-/// reasoning step, batching lanes from different runs into shared
-/// backend calls where the backend allows it. Speculative lanes run one
-/// union draft -> score -> accept|rewrite cycle (each lane judged
-/// against its own run's tau); target-only lanes share one target_step.
-/// Outcomes are routed back per run and the stop rules applied once per
-/// tick.
+/// Advance every active lane of every not-done run, batching lanes
+/// from different runs into shared backend calls where the backend
+/// allows it. Lanes of runs at speculation depth 1 run one union
+/// draft -> score -> accept|rewrite cycle (each lane judged against
+/// its own run's tau) — the legacy tick, bit-identical to the
+/// pre-controller engine. Lanes of runs whose controller widened past
+/// depth 1 burst whole speculation windows through
+/// [`Backend::spec_steps`]; target-only lanes (non-speculative methods
+/// and gamma-collapsed runs) share one target_step. Outcomes are
+/// routed back per run, the stop rules applied once per tick, and each
+/// run's accepted/proposed tally feeds its gamma controller.
 pub fn step_tick(backend: &mut dyn Backend, runs: &mut [&mut ProblemRun]) -> Result<TickCalls> {
     let meta = backend.meta();
     let chunk = meta.max_batch_lanes.max(1);
     let mut calls = TickCalls::default();
 
-    let mut spec: Vec<(usize, PathId)> = Vec::new();
+    let mut spec1: Vec<(usize, PathId)> = Vec::new();
+    let mut burst: Vec<(usize, (PathId, usize))> = Vec::new();
     let mut tgt: Vec<(usize, PathId)> = Vec::new();
     for (ri, run) in runs.iter().enumerate() {
         if run.is_done() {
             continue;
         }
-        let bucket = if run.core.speculative { &mut spec } else { &mut tgt };
-        bucket.extend(run.active().into_iter().map(|id| (ri, id)));
+        let depth = run.tick_depth();
+        for id in run.active() {
+            match depth {
+                // non-speculative methods and target-only fallback
+                0 => tgt.push((ri, id)),
+                // the legacy per-step cycle (fixed:1 default)
+                1 => spec1.push((ri, id)),
+                d => {
+                    // clamp the window to the lane's remaining budget
+                    let li = run.index[&id];
+                    let left = run.core.max_steps - run.core.lanes[li].steps_taken;
+                    match d.min(left) {
+                        0 | 1 => spec1.push((ri, id)),
+                        d => burst.push((ri, (id, d))),
+                    }
+                }
+            }
+        }
     }
 
     let mut per_run: Vec<Vec<StepResult>> = runs.iter().map(|_| Vec::new()).collect();
+    let mut proposed = vec![0u64; runs.len()];
+    let mut accepted = vec![0u64; runs.len()];
 
-    for group in call_groups(spec, meta.cross_request_batch, chunk) {
+    for group in call_groups(spec1, meta.cross_request_batch, chunk) {
         let ids: Vec<PathId> = group.iter().map(|&(_, id)| id).collect();
         let outs = with_transient_retry(&mut calls.retries, || backend.draft_step(&ids))?;
         calls.record(ids.len());
@@ -638,7 +853,9 @@ pub fn step_tick(backend: &mut dyn Backend, runs: &mut [&mut ProblemRun]) -> Res
         let mut acc: Vec<(usize, PathId, StepOutcome, u8)> = Vec::new();
         let mut rej: Vec<(usize, PathId)> = Vec::new();
         for ((&(ri, id), o), &s) in group.iter().zip(outs).zip(&scores) {
+            proposed[ri] += 1;
             if s >= runs[ri].core.tau {
+                accepted[ri] += 1;
                 acc.push((ri, id, o, s));
             } else {
                 rej.push((ri, id));
@@ -664,6 +881,30 @@ pub fn step_tick(backend: &mut dyn Backend, runs: &mut [&mut ProblemRun]) -> Res
         }
     }
 
+    // speculation windows (depth > 1): one draft barrier and one
+    // verify/rewrite barrier per group instead of per micro-step. The
+    // backend replays the exact per-lane op order of the depth-1 cycle,
+    // so committed steps are bit-identical — only the clock model and
+    // the call count change. Errors are NOT retried in place: a burst
+    // is not transient-atomic (earlier micro-cycles may have committed),
+    // so a mid-window fault escalates to the scheduler's lane-fatal
+    // handling like an exhausted retry budget would (DESIGN.md §13).
+    for group in call_groups(burst, meta.cross_request_batch, chunk) {
+        let lanes: Vec<SpecLane> = group
+            .iter()
+            .map(|&(ri, (id, depth))| SpecLane { path: id, depth, tau: runs[ri].core.tau })
+            .collect();
+        let bursts = backend.spec_steps(&lanes)?;
+        calls.record(lanes.len());
+        for (&(ri, (id, _)), b) in group.iter().zip(bursts) {
+            proposed[ri] += b.proposed;
+            accepted[ri] += b.accepted;
+            for ms in b.steps {
+                per_run[ri].push(StepResult { path: id, outcome: ms.outcome, score: ms.score });
+            }
+        }
+    }
+
     for group in call_groups(tgt, meta.cross_request_batch, chunk) {
         let ids: Vec<PathId> = group.iter().map(|&(_, id)| id).collect();
         let outs = with_transient_retry(&mut calls.retries, || backend.target_step(&ids))?;
@@ -678,6 +919,10 @@ pub fn step_tick(backend: &mut dyn Backend, runs: &mut [&mut ProblemRun]) -> Res
         if !results.is_empty() {
             runs[ri].observe(&*backend, results);
         }
+    }
+    // fold this tick's acceptance into each run's gamma controller
+    for (ri, run) in runs.iter_mut().enumerate() {
+        run.core.spec.note_gamma(accepted[ri], proposed[ri], run.core.stop);
     }
     Ok(calls)
 }
@@ -1032,6 +1277,220 @@ mod tests {
         let _ = eng.run(&problems[0], m, 2).unwrap();
         assert_eq!(eng.prefix.misses, 1);
         assert_eq!(eng.prefix.hits, 1, "re-solving the same problem must hit");
+    }
+
+    #[test]
+    fn spec_ctl_fixed_mode_never_moves() {
+        let mut c = SpecCtl::new(SpecDepth::Fixed(4));
+        assert_eq!(c.depth, 4);
+        for _ in 0..100 {
+            c.note_gamma(0, 10, StopRule::Full);
+        }
+        assert_eq!(c.depth, 4, "fixed depth must not adapt");
+        assert!(!c.target_only, "fixed depth must never drop to target-only");
+        // ... but the gamma ledger still accumulates for reporting
+        assert_eq!(c.proposed, 1000);
+        assert_eq!(c.gamma, Some(0.0));
+    }
+
+    #[test]
+    fn spec_ctl_widens_on_high_gamma_and_collapses_to_target_only() {
+        // high acceptance: AIMD climbs to the gamma-optimal depth
+        let mut c = SpecCtl::new(SpecDepth::Adaptive { max: 8 });
+        for _ in 0..20 {
+            c.note_gamma(9, 10, StopRule::Full);
+        }
+        let settled = c.depth;
+        assert!(settled >= 4, "gamma 0.9 should widen well past 1 (got {settled})");
+        for _ in 0..5 {
+            c.note_gamma(9, 10, StopRule::Full);
+        }
+        assert_eq!(c.depth, settled, "controller should settle, not oscillate");
+        // collapse: halving backs off fast, then the sticky target-only
+        // switch fires once the lifetime sample is meaningful
+        for _ in 0..60 {
+            c.note_gamma(0, 10, StopRule::Full);
+        }
+        assert!(c.target_only, "gamma 0 must abandon speculation");
+        assert_eq!(c.depth, 1);
+        // sticky: recovery does not resurrect speculation
+        for _ in 0..50 {
+            c.note_gamma(10, 10, StopRule::Full);
+        }
+        assert!(c.target_only);
+    }
+
+    #[test]
+    fn spec_ctl_fast_stop_runs_stay_at_depth_one() {
+        let mut c = SpecCtl::new(SpecDepth::Adaptive { max: 8 });
+        for _ in 0..30 {
+            c.note_gamma(10, 10, StopRule::Fast1);
+        }
+        assert_eq!(c.depth, 1, "fast-stop runs must keep per-step granularity");
+        assert_eq!(c.gamma, Some(1.0), "... while still tracking gamma");
+    }
+
+    #[test]
+    fn spec_ctl_optimal_depth_tracks_gamma() {
+        assert_eq!(SpecCtl::optimal_depth(0.2), 1);
+        assert_eq!(SpecCtl::optimal_depth(0.39), 1);
+        assert_eq!(SpecCtl::optimal_depth(0.6), 2);
+        assert_eq!(SpecCtl::optimal_depth(0.8), 5);
+        assert_eq!(SpecCtl::optimal_depth(0.9), 9);
+        assert!(SpecCtl::optimal_depth(0.99) >= 100);
+        // monotone in gamma
+        let mut prev = 0;
+        for g in [0.1, 0.3, 0.5, 0.6, 0.7, 0.8, 0.85, 0.9, 0.95] {
+            let d = SpecCtl::optimal_depth(g);
+            assert!(d >= prev, "optimal depth not monotone at gamma {g}");
+            prev = d;
+        }
+    }
+
+    #[test]
+    fn fixed_depth_full_runs_match_depth1_bit_for_bit() {
+        // ISSUE acceptance: --spec-depth fixed:k is decision-equivalent
+        // to the pre-controller engine. Under the Full stop rule the
+        // whole run record must match at every depth.
+        let m = Method::Ssr { n: 3, tau: 7, stop: StopRule::Full };
+        for k in [2usize, 4, 8] {
+            let (mut b_ref, problems) = setup("synth-math500", 31);
+            let (mut b_k, problems_k) = setup("synth-math500", 31);
+            let mut cfg_k = SsrConfig::default();
+            cfg_k.spec_depth = SpecDepth::Fixed(k);
+            let mut e_ref = Engine::new(&mut b_ref, SsrConfig::default());
+            let mut e_k = Engine::new(&mut b_k, cfg_k);
+            let (mut secs_ref, mut secs_k) = (0.0, 0.0);
+            for (i, p) in problems.iter().take(6).enumerate() {
+                let r1 = e_ref.run(p, m, 50 + i as u64).unwrap();
+                let rk = e_k.run(&problems_k[i], m, 50 + i as u64).unwrap();
+                assert_eq!(r1.decision, rk.decision, "k={k} problem {i}: decision");
+                assert_eq!(r1.votes, rk.votes, "k={k} problem {i}: votes");
+                assert_eq!(r1.steps, rk.steps, "k={k} problem {i}: steps");
+                assert_eq!(r1.rewrites, rk.rewrites, "k={k} problem {i}: rewrites");
+                assert_eq!(r1.draft_tokens, rk.draft_tokens, "k={k} problem {i}");
+                assert_eq!(r1.target_tokens, rk.target_tokens, "k={k} problem {i}");
+                assert_eq!(r1.score_tokens, rk.score_tokens, "k={k} problem {i}");
+                assert_eq!(r1.proposed, rk.proposed, "k={k} problem {i}: proposed");
+                assert_eq!(r1.accepted, rk.accepted, "k={k} problem {i}: accepted");
+                assert_eq!(rk.spec_depth, k);
+                secs_ref += r1.model_secs;
+                secs_k += rk.model_secs;
+            }
+            // acceptance is high here, so a moderate window is cheaper
+            if k == 2 {
+                assert!(
+                    secs_k < secs_ref,
+                    "k=2 windows should amortize verification: {secs_k} vs {secs_ref}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fast_modes_are_depth_invariant() {
+        // fast-stop runs always tick at depth 1: a fixed:8 config must
+        // reproduce the default run exactly, clock included.
+        for stop in [StopRule::Fast1, StopRule::Fast2] {
+            let m = Method::Ssr { n: 5, tau: 7, stop };
+            let (mut b1, problems) = setup("synth-math500", 17);
+            let (mut b8, problems8) = setup("synth-math500", 17);
+            let mut cfg8 = SsrConfig::default();
+            cfg8.spec_depth = SpecDepth::Fixed(8);
+            let mut e1 = Engine::new(&mut b1, SsrConfig::default());
+            let mut e8 = Engine::new(&mut b8, cfg8);
+            for (i, p) in problems.iter().take(6).enumerate() {
+                let r1 = e1.run(p, m, 70 + i as u64).unwrap();
+                let r8 = e8.run(&problems8[i], m, 70 + i as u64).unwrap();
+                assert_eq!(r1.decision, r8.decision, "{stop:?} problem {i}");
+                assert_eq!(r1.votes, r8.votes, "{stop:?} problem {i}");
+                assert_eq!(r1.steps, r8.steps, "{stop:?} problem {i}");
+                assert!(
+                    (r1.model_secs - r8.model_secs).abs() < 1e-9,
+                    "{stop:?} problem {i}: clock diverged"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn adaptive_depth_saves_model_secs_at_equal_decisions() {
+        // The tentpole claim at engine scale: on a high-acceptance suite
+        // the controller widens and total model-seconds drop, while
+        // every decision matches the fixed:1 reference bit for bit.
+        let m = Method::Ssr { n: 5, tau: 7, stop: StopRule::Full };
+        let (mut b1, problems) = setup("synth-math500", 23);
+        let (mut ba, problems_a) = setup("synth-math500", 23);
+        let mut cfg_a = SsrConfig::default();
+        cfg_a.spec_depth = SpecDepth::Adaptive { max: 8 };
+        let mut e1 = Engine::new(&mut b1, SsrConfig::default());
+        let mut ea = Engine::new(&mut ba, cfg_a);
+        let (mut secs_1, mut secs_a) = (0.0, 0.0);
+        let mut widened = false;
+        for (i, p) in problems.iter().take(10).enumerate() {
+            let r1 = e1.run(p, m, 90 + i as u64).unwrap();
+            let ra = ea.run(&problems_a[i], m, 90 + i as u64).unwrap();
+            assert_eq!(r1.decision, ra.decision, "problem {i}: decision");
+            assert_eq!(r1.votes, ra.votes, "problem {i}: votes");
+            assert_eq!(r1.steps, ra.steps, "problem {i}: steps");
+            assert_eq!(r1.draft_tokens, ra.draft_tokens, "problem {i}");
+            assert_eq!(r1.target_tokens, ra.target_tokens, "problem {i}");
+            assert!(ra.gamma.is_some());
+            widened |= ra.spec_depth > 1;
+            secs_1 += r1.model_secs;
+            secs_a += ra.model_secs;
+        }
+        assert!(widened, "controller never widened on an easy suite");
+        assert!(
+            secs_a < secs_1,
+            "adaptive depth should cut model-seconds: {secs_a} vs {secs_1}"
+        );
+    }
+
+    #[test]
+    fn adaptive_spec_ctl_travels_with_migration() {
+        // The controller state lives in RunCore: a run migrated
+        // mid-solve keeps its gamma EWMA and depth, so the remaining
+        // windows (and the final record) are bit-identical.
+        let m = Method::Ssr { n: 3, tau: 7, stop: StopRule::Full };
+        let mut cfg = SsrConfig::default();
+        cfg.spec_depth = SpecDepth::Adaptive { max: 8 };
+
+        let (mut b_ref, problems) = setup("synth-math500", 47);
+        let mut run = ProblemRun::start(&mut b_ref, &cfg, &problems[0], m, 13).unwrap();
+        while !run.is_done() {
+            let mut group = [&mut run];
+            step_tick(&mut b_ref, &mut group).unwrap();
+        }
+        let depth_ref = run.spec_depth();
+        let r_ref = run.finish(&mut b_ref).unwrap();
+        assert!(depth_ref > 1, "controller never widened");
+
+        let (mut b_src, problems_s) = setup("synth-math500", 47);
+        let (mut b_dst, _) = setup("synth-math500", 47);
+        let mut run = ProblemRun::start(&mut b_src, &cfg, &problems_s[0], m, 13).unwrap();
+        // tick until the controller has widened, then migrate mid-run
+        for _ in 0..6 {
+            let mut group = [&mut run];
+            step_tick(&mut b_src, &mut group).unwrap();
+        }
+        assert!(run.spec_depth() > 1, "expected a widened run before detach");
+        let d = run.detach(&mut b_src).unwrap();
+        assert!(d.gamma_ewma().is_some());
+        let mut run = ProblemRun::attach(d, &mut b_dst).unwrap();
+        assert!(run.spec_depth() > 1, "depth lost in migration");
+        while !run.is_done() {
+            let mut group = [&mut run];
+            step_tick(&mut b_dst, &mut group).unwrap();
+        }
+        assert_eq!(run.spec_depth(), depth_ref, "migrated depth diverged");
+        let r = run.finish(&mut b_dst).unwrap();
+        assert_eq!(r.decision, r_ref.decision);
+        assert_eq!(r.votes, r_ref.votes);
+        assert_eq!(r.steps, r_ref.steps);
+        assert_eq!(r.proposed, r_ref.proposed);
+        assert_eq!(r.accepted, r_ref.accepted);
+        assert_eq!(r.gamma, r_ref.gamma);
     }
 
     #[test]

@@ -75,10 +75,23 @@ pub fn resource_saving(n: usize, k: usize, r: f64, alpha: f64) -> f64 {
 
 /// Measured FLOPs ledger for one inference method run, normalized against
 /// a measured baseline cost.
+///
+/// THE canonical gamma accounting — `eval::experiments` and the benches
+/// normalize through this one type so every BENCH_JSON gamma scalar
+/// agrees. The convention (Eq. 9): draft tokens cost `alpha` units,
+/// rewritten target tokens cost 1 unit, and *scored-but-not-rewritten*
+/// tokens are excluded — scoring rides the target's verify pass, whose
+/// cost Eq. 9 already folds into the rewrite term, so counting score
+/// tokens again would double-bill the verify pass. They are tracked
+/// (`score_tokens`) for visibility but never enter [`cost_units`].
+///
+/// [`cost_units`]: MeasuredGamma::cost_units
 #[derive(Debug, Clone, Default)]
 pub struct MeasuredGamma {
     pub draft_tokens: u64,
     pub target_tokens: u64,
+    /// scored-but-not-rewritten tokens — visible, never billed
+    pub score_tokens: u64,
     pub alpha: f64,
 }
 
@@ -92,6 +105,12 @@ impl MeasuredGamma {
         self.target_tokens += target;
     }
 
+    /// Record scored-but-not-rewritten tokens (excluded from the bill;
+    /// see the type docs).
+    pub fn add_score_tokens(&mut self, score: u64) {
+        self.score_tokens += score;
+    }
+
     /// Cost in units of target-token FLOPs.
     pub fn cost_units(&self) -> f64 {
         self.target_tokens as f64 + self.alpha * self.draft_tokens as f64
@@ -103,6 +122,13 @@ impl MeasuredGamma {
             return f64::NAN;
         }
         self.cost_units() / base_target_tokens
+    }
+
+    /// gamma of a multi-run ledger against a *per-run* baseline cost —
+    /// the normalization `eval::experiments::run_method` and the
+    /// gamma benches share.
+    pub fn gamma_per_run(&self, runs: f64, base_target_tokens_per_run: f64) -> f64 {
+        self.gamma(base_target_tokens_per_run * runs)
     }
 }
 
@@ -177,6 +203,19 @@ mod tests {
     fn gamma_handles_zero_baseline() {
         let m = MeasuredGamma::new(0.1);
         assert!(m.gamma(0.0).is_nan());
+    }
+
+    #[test]
+    fn score_tokens_are_visible_but_never_billed() {
+        let mut m = MeasuredGamma::new(0.1);
+        m.add_tokens(100, 30);
+        let before = m.cost_units();
+        m.add_score_tokens(500);
+        assert_eq!(m.score_tokens, 500);
+        assert_eq!(m.cost_units(), before, "score tokens entered the bill");
+        // per-run normalization: 2 runs against a 20-token baseline is
+        // the same gamma as one 40-token baseline
+        assert!((m.gamma_per_run(2.0, 20.0) - m.gamma(40.0)).abs() < 1e-12);
     }
 
     #[test]

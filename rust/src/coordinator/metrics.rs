@@ -13,6 +13,7 @@ use std::collections::BTreeMap;
 use std::time::Instant;
 
 use super::admission::QosClass;
+use crate::config::ShardClass;
 use crate::util::stats::{Histogram, Reservoir};
 
 /// Occupancy histogram buckets (lane counts; last bucket = overflow).
@@ -131,6 +132,29 @@ pub struct Metrics {
     retry_after_ms_sum: u64,
     /// poison-run entries evicted by the quarantine LRU bound
     pub quarantine_evictions: u64,
+    /// speculation accounting (DESIGN.md §15)
+    /// per-shard-class acceptance ledger `(accepted, proposed)`: the
+    /// retiring shard's class accrues each speculative run's lifetime
+    /// counts, so `gamma_of_class` reports measured per-class gamma
+    pub class_gamma: BTreeMap<ShardClass, (u64, u64)>,
+    /// final controller window depth per retired speculative run
+    /// (bucket = depth; last bucket = overflow)
+    pub spec_depth_hist: Histogram,
+    spec_depth_sum: u64,
+    spec_runs: u64,
+    /// speculative runs retired with the controller in target-only mode
+    pub target_only_runs: u64,
+    /// gamma-driven class migrations (a subset of `migrations`)
+    pub gamma_migrations: u64,
+    /// per-LIVE-shard `(draft, target)` model-clock split: where each
+    /// shard's `model_secs` went by side; dead ids fold into the
+    /// retired split on removal
+    pub shard_clock_splits: BTreeMap<usize, (f64, f64)>,
+    retired_draft_secs: f64,
+    retired_target_secs: f64,
+    /// least-loaded placements whose batch-shape hint matched (the
+    /// pool owns the live atomic; the server/bench pushes it here)
+    pub placement_shape_hits: u64,
     /// per-class end-to-end latency reservoirs, indexed by
     /// `QosClass::idx` ([interactive, batch, best_effort])
     class_latencies: [Reservoir; 3],
@@ -193,6 +217,19 @@ impl Metrics {
             retry_after_hints: 0,
             retry_after_ms_sum: 0,
             quarantine_evictions: 0,
+            class_gamma: BTreeMap::new(),
+            // depth buckets 0..=16 plus overflow (max configurable
+            // depth is 16; 0 is unused — target-only runs report their
+            // forced depth of 1)
+            spec_depth_hist: Histogram::new(18),
+            spec_depth_sum: 0,
+            spec_runs: 0,
+            target_only_runs: 0,
+            gamma_migrations: 0,
+            shard_clock_splits: BTreeMap::new(),
+            retired_draft_secs: 0.0,
+            retired_target_secs: 0.0,
+            placement_shape_hits: 0,
             class_latencies: [Reservoir::default(), Reservoir::default(), Reservoir::default()],
             class_requests: [0; 3],
             tenant_requests: BTreeMap::new(),
@@ -216,6 +253,24 @@ impl Metrics {
         self.model_secs = self.retired_model_secs + self.shard_clocks.values().sum::<f64>();
     }
 
+    /// One shard's cumulative `(draft, target)` model-clock split —
+    /// how its `model_secs` divide between draft-side and target-side
+    /// work (DESIGN.md §15); the two sum to the shard's clock.
+    pub fn set_shard_clock_split(&mut self, shard: usize, draft_s: f64, target_s: f64) {
+        self.shard_clock_splits.insert(shard, (draft_s, target_s));
+    }
+
+    /// Pool-wide `(draft, target)` model-seconds split across live and
+    /// retired shards.
+    pub fn model_secs_split(&self) -> (f64, f64) {
+        let (mut d, mut t) = (self.retired_draft_secs, self.retired_target_secs);
+        for &(ds, ts) in self.shard_clock_splits.values() {
+            d += ds;
+            t += ts;
+        }
+        (d, t)
+    }
+
     /// Fold a removed shard's per-id gauges into the retired
     /// accumulators and drop its columns, so week-long autoscale churn
     /// (monotonic ids, never reused) cannot grow memory without bound.
@@ -223,6 +278,10 @@ impl Metrics {
         if let Some(clock) = self.shard_clocks.remove(&shard) {
             self.retired_model_secs += clock;
             self.retired_makespan = self.retired_makespan.max(clock);
+        }
+        if let Some((d, t)) = self.shard_clock_splits.remove(&shard) {
+            self.retired_draft_secs += d;
+            self.retired_target_secs += t;
         }
         if let Some(reqs) = self.shard_requests.remove(&shard) {
             self.retired_requests += reqs;
@@ -365,6 +424,68 @@ impl Metrics {
         }
     }
 
+    /// One retired run's speculation ledger, attributed to the class of
+    /// the shard that retired it (DESIGN.md §15). Non-speculative runs
+    /// (`proposed == 0`, never target-only) are not counted.
+    pub fn record_speculation(
+        &mut self,
+        class: ShardClass,
+        proposed: u64,
+        accepted: u64,
+        depth: usize,
+        target_only: bool,
+    ) {
+        if proposed == 0 && !target_only {
+            return;
+        }
+        let e = self.class_gamma.entry(class).or_insert((0, 0));
+        e.0 += accepted;
+        e.1 += proposed;
+        self.spec_depth_hist.add(depth);
+        self.spec_depth_sum += depth as u64;
+        self.spec_runs += 1;
+        if target_only {
+            self.target_only_runs += 1;
+        }
+    }
+
+    /// Measured acceptance rate on shards of `class` (0 before any
+    /// speculative run retired there).
+    pub fn gamma_of_class(&self, class: ShardClass) -> f64 {
+        match self.class_gamma.get(&class) {
+            Some(&(acc, prop)) if prop > 0 => acc as f64 / prop as f64,
+            _ => 0.0,
+        }
+    }
+
+    /// Pool-wide measured acceptance rate across every class.
+    pub fn gamma_overall(&self) -> f64 {
+        let (acc, prop) = self
+            .class_gamma
+            .values()
+            .fold((0u64, 0u64), |(a, p), &(acc, prop)| (a + acc, p + prop));
+        if prop == 0 {
+            0.0
+        } else {
+            acc as f64 / prop as f64
+        }
+    }
+
+    /// Mean final controller depth across retired speculative runs.
+    pub fn spec_depth_mean(&self) -> f64 {
+        if self.spec_runs == 0 {
+            0.0
+        } else {
+            self.spec_depth_sum as f64 / self.spec_runs as f64
+        }
+    }
+
+    /// Sync the pool's batch-shape placement-hit counter (the pool owns
+    /// the live lock-free counter; see `PoolHandle::placement_shape_hits`).
+    pub fn set_placement_shape_hits(&mut self, hits: u64) {
+        self.placement_shape_hits = hits;
+    }
+
     pub fn record_tokens(&mut self, draft: u64, target: u64, steps: u64, rewrites: u64) {
         self.draft_tokens += draft;
         self.target_tokens += target;
@@ -477,6 +598,8 @@ impl Metrics {
         use crate::util::json::{arr, i, n, obj, Value};
         let shard_requests: Vec<Value> =
             self.shard_requests.values().map(|&r| i(r as i64)).collect();
+        let spec_depth_hist: Vec<Value> =
+            self.spec_depth_hist.counts.iter().map(|&c| i(c as i64)).collect();
         let class_requests: Vec<Value> =
             self.class_requests.iter().map(|&r| i(r as i64)).collect();
         let tenant_obj = |m: &BTreeMap<String, u64>| {
@@ -506,6 +629,17 @@ impl Metrics {
             ("prefix_hit_rate", n(self.prefix_hit_rate())),
             ("model_secs", n(self.model_secs)),
             ("model_secs_makespan", n(self.model_secs_makespan())),
+            ("model_secs_draft", n(self.model_secs_split().0)),
+            ("model_secs_target", n(self.model_secs_split().1)),
+            ("gamma_overall", n(self.gamma_overall())),
+            ("gamma_draft_heavy", n(self.gamma_of_class(ShardClass::DraftHeavy))),
+            ("gamma_balanced", n(self.gamma_of_class(ShardClass::Balanced))),
+            ("gamma_target_heavy", n(self.gamma_of_class(ShardClass::TargetHeavy))),
+            ("spec_depth_mean", n(self.spec_depth_mean())),
+            ("spec_depth_hist", arr(spec_depth_hist)),
+            ("target_only_runs", i(self.target_only_runs as i64)),
+            ("gamma_migrations", i(self.gamma_migrations as i64)),
+            ("placement_shape_hits", i(self.placement_shape_hits as i64)),
             ("shards", i(self.shard_clocks.len().max(1) as i64)),
             ("shard_requests", arr(shard_requests)),
             ("steals", i(self.steals as i64)),
@@ -801,6 +935,55 @@ mod tests {
         );
         let folded = m.tenant_requests.get(TENANT_OTHER).copied().unwrap_or(0);
         assert_eq!(folded, 1000 - TENANT_GAUGE_CAP as u64, "overflow folds into _other");
+    }
+
+    #[test]
+    fn speculation_accounting_by_class() {
+        let mut m = Metrics::new();
+        // non-speculative runs are invisible
+        m.record_speculation(ShardClass::Balanced, 0, 0, 1, false);
+        assert_eq!(m.spec_depth_mean(), 0.0);
+        assert_eq!(m.gamma_overall(), 0.0);
+        // two runs on balanced, one on target_heavy (collapsed)
+        m.record_speculation(ShardClass::Balanced, 10, 8, 4, false);
+        m.record_speculation(ShardClass::Balanced, 10, 9, 6, false);
+        m.record_speculation(ShardClass::TargetHeavy, 20, 4, 1, true);
+        assert!((m.gamma_of_class(ShardClass::Balanced) - 0.85).abs() < 1e-12);
+        assert!((m.gamma_of_class(ShardClass::TargetHeavy) - 0.2).abs() < 1e-12);
+        assert_eq!(m.gamma_of_class(ShardClass::DraftHeavy), 0.0);
+        assert!((m.gamma_overall() - 21.0 / 40.0).abs() < 1e-12);
+        assert!((m.spec_depth_mean() - 11.0 / 3.0).abs() < 1e-12);
+        assert_eq!(m.target_only_runs, 1);
+        assert_eq!(m.spec_depth_hist.counts[4], 1);
+        assert_eq!(m.spec_depth_hist.counts[6], 1);
+        assert_eq!(m.spec_depth_hist.counts[1], 1);
+        m.gamma_migrations += 2;
+        m.set_placement_shape_hits(7);
+        let v = m.summary_json(1.0);
+        assert!((v.get_f64("gamma_balanced").unwrap() - 0.85).abs() < 1e-12);
+        assert!((v.get_f64("gamma_target_heavy").unwrap() - 0.2).abs() < 1e-12);
+        assert!(v.get_f64("spec_depth_mean").unwrap() > 3.0);
+        assert_eq!(v.get_i64("target_only_runs").unwrap(), 1);
+        assert_eq!(v.get_i64("gamma_migrations").unwrap(), 2);
+        assert_eq!(v.get_i64("placement_shape_hits").unwrap(), 7);
+    }
+
+    #[test]
+    fn clock_split_folds_through_retirement() {
+        let mut m = Metrics::new();
+        assert_eq!(m.model_secs_split(), (0.0, 0.0));
+        m.set_shard_clock_split(0, 1.0, 3.0);
+        m.set_shard_clock_split(1, 0.5, 2.0);
+        let (d, t) = m.model_secs_split();
+        assert!((d - 1.5).abs() < 1e-12 && (t - 5.0).abs() < 1e-12);
+        // retiring a shard folds its split into the accumulators
+        m.retire_shard(1);
+        let (d, t) = m.model_secs_split();
+        assert!((d - 1.5).abs() < 1e-12 && (t - 5.0).abs() < 1e-12);
+        assert!(!m.shard_clock_splits.contains_key(&1), "dead-id split retained");
+        let v = m.summary_json(1.0);
+        assert!((v.get_f64("model_secs_draft").unwrap() - 1.5).abs() < 1e-12);
+        assert!((v.get_f64("model_secs_target").unwrap() - 5.0).abs() < 1e-12);
     }
 
     #[test]

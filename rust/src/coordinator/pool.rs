@@ -11,7 +11,10 @@
 //! * **least-loaded** (default) — argmin over the pool-wide load
 //!   gauges (outstanding lane estimates, incremented at submit and
 //!   returned on the terminal reply). Balances mixed loads; ties break
-//!   to the lowest slot so single-stream traffic stays put.
+//!   first to a shard whose last-accepted batch shape (lane estimate)
+//!   matches the incoming request — keeping equal-width lanes together
+//!   so step batches stay dense (`placement_shape_hits` counts these) —
+//!   then to the lowest slot so single-stream traffic stays put.
 //! * **affinity** — hash of the request expression mod live shards:
 //!   every repeat of a prompt lands on the shard that already holds its
 //!   prefilled prefix, maximizing tier hits at the cost of balance
@@ -89,7 +92,7 @@ use super::scheduler::{
     self, lane_estimate, QueuedJob, RunTicket, ShardCtx, ShardMsg, SolveRequest, TicketMap, Work,
 };
 use crate::backend::Backend;
-use crate::config::{PlacePolicy, SsrConfig};
+use crate::config::{PlacePolicy, ShardClass, SsrConfig};
 use crate::runtime::Vocab;
 use crate::util::hash;
 use crate::util::sync::{lock_ok, read_ok, write_ok};
@@ -243,11 +246,18 @@ impl QuarantineLru {
 #[derive(Clone)]
 pub(crate) struct ShardSlot {
     pub(crate) id: usize,
+    /// the shard's hardware class (DESIGN.md §15): a cost/capacity
+    /// profile applied to its backend at spawn, never a decision input
+    pub(crate) class: ShardClass,
     tx: mpsc::Sender<ShardMsg>,
     pub(crate) queue: Arc<Mutex<VecDeque<QueuedJob>>>,
     pub(crate) load: Arc<AtomicU64>,
     draining: Arc<AtomicBool>,
     pub(crate) shed: Arc<Mutex<Vec<ShedRequest>>>,
+    /// lane estimate of the last job this shard accepted — the
+    /// batch-shape placement hint: least-loaded ties break toward a
+    /// shard already running this width (0 = no job accepted yet)
+    pub(crate) shape: Arc<AtomicU64>,
     /// the shard's admitted-run re-admission tickets (crash recovery,
     /// DESIGN.md §13)
     tickets: TicketMap,
@@ -298,7 +308,10 @@ fn send_with_fallback(
         }
         s.load.fetch_add(est, Ordering::Relaxed);
         match s.tx.send(msg) {
-            Ok(()) => return Ok(()),
+            Ok(()) => {
+                s.shape.store(est, Ordering::Relaxed);
+                return Ok(());
+            }
             Err(mpsc::SendError(returned)) => {
                 s.load.fetch_sub(est, Ordering::Relaxed);
                 msg = returned;
@@ -331,6 +344,10 @@ pub(crate) struct ShardRegistry {
     /// LRU-bounded at `cfg.quarantine_cap` (DESIGN.md §14)
     quarantine: Mutex<QuarantineLru>,
     pub(crate) signal: Arc<WorkSignal>,
+    /// least-loaded placements whose tie-break matched the incoming
+    /// request's batch shape (lock-free: the submit hot path must not
+    /// touch the metrics mutex)
+    shape_hits: AtomicU64,
 }
 
 impl ShardRegistry {
@@ -345,12 +362,15 @@ impl ShardRegistry {
         lock_ok(&self.quarantine).contains(run_seed)
     }
 
-    /// Spawn one shard thread for `id` and return its snapshot slot +
-    /// teardown hook — the caller publishes the slot. The backend is
-    /// built by the stored factory ON the new thread.
+    /// Spawn one shard thread for `id` with hardware class `class` and
+    /// return its snapshot slot + teardown hook — the caller publishes
+    /// the slot. The backend is built by the stored factory ON the new
+    /// thread, then gets the class's cost profile applied (clock-only;
+    /// decisions are class-invariant by the Backend contract).
     fn spawn_shard(
         self: &Arc<Self>,
         id: usize,
+        class: ShardClass,
     ) -> Result<(ShardSlot, ShardHook, std::thread::JoinHandle<()>)> {
         let (tx, rx) = mpsc::channel::<ShardMsg>();
         let (done_tx, done_rx) = mpsc::channel::<()>();
@@ -360,8 +380,10 @@ impl ShardRegistry {
         let shed = Arc::new(Mutex::new(Vec::new()));
         let tickets: TicketMap = Arc::new(Mutex::new(HashMap::new()));
         let dead = Arc::new(AtomicBool::new(false));
+        let shape = Arc::new(AtomicU64::new(0));
         let ctx = ShardCtx {
             shard: id,
+            class,
             tier: Arc::clone(&self.tier),
             load: Arc::clone(&load),
             queue: Arc::clone(&queue),
@@ -399,6 +421,10 @@ impl ShardRegistry {
                         return;
                     }
                 };
+                // apply the class's virtual-clock profile before any
+                // work runs (Balanced is (1.0, 1.0), a numeric no-op)
+                let (draft_mult, target_mult) = class.cost_profile();
+                b.set_cost_profile(draft_mult, target_mult);
                 // supervision (DESIGN.md §13): a panic on the shard
                 // thread — injected, shard-fatal escalation, or a plain
                 // bug — is caught here and recovery runs on this same
@@ -417,7 +443,7 @@ impl ShardRegistry {
                 }
             })
             .with_context(|| format!("spawning scheduler shard {id}"))?;
-        let slot = ShardSlot { id, tx, queue, load, draining, shed, tickets, dead };
+        let slot = ShardSlot { id, class, tx, queue, load, draining, shed, tickets, dead, shape };
         Ok((slot, ShardHook { done_rx, join: None }, join))
     }
 
@@ -461,7 +487,9 @@ impl ShardRegistry {
             // holds done_rx and keeps blocking until this thread exits)
             lc.remove(&id);
             if !draining {
-                match self.respawn_locked(&mut lc) {
+                // the replacement inherits the dead shard's class so a
+                // crash storm cannot silently skew the capacity mix
+                match self.respawn_locked(&mut lc, Some(ctx.class)) {
                     Ok(nid) => log::warn!("shard {id}: respawned as shard {nid}"),
                     Err(e) => log::error!("shard {id}: respawn failed: {e:#}"),
                 }
@@ -567,17 +595,21 @@ impl ShardRegistry {
     }
 
     /// `add_shard` minus the handle: spawn and publish a replacement
-    /// shard under the already-held lifecycle lock.
+    /// shard under the already-held lifecycle lock. `class` overrides
+    /// the config pattern (crash respawns and class-targeted scale-ups
+    /// must not drift with the monotone id counter).
     fn respawn_locked(
         self: &Arc<Self>,
         lc: &mut HashMap<usize, ShardHook>,
+        class: Option<ShardClass>,
     ) -> Result<usize> {
         let cur = self.snapshot();
         if cur.len() >= MAX_SHARDS {
             bail!("shard cap ({MAX_SHARDS}) reached");
         }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let (slot, mut hook, join) = self.spawn_shard(id)?;
+        let class = class.unwrap_or_else(|| self.cfg.class_of(id));
+        let (slot, mut hook, join) = self.spawn_shard(id, class)?;
         hook.join = Some(join);
         lc.insert(id, hook);
         let mut v: Vec<ShardSlot> = cur.iter().cloned().collect();
@@ -717,6 +749,34 @@ impl ShardRegistry {
             Err(_) => unreachable!("send_to sent a Job"),
         }
     }
+
+    /// Least-loaded live shard of the first class in `pref` that has
+    /// any healthy non-draining candidate, excluding `exclude` — the
+    /// gamma-driven migration destination picker (DESIGN.md §15). The
+    /// preference list encodes the fallback chain (e.g. a high-gamma
+    /// run prefers `DraftHeavy`, falls back to `Balanced`).
+    pub(crate) fn pick_shard_of_class(
+        &self,
+        exclude: usize,
+        pref: &[ShardClass],
+    ) -> Option<usize> {
+        let slots = self.snapshot();
+        for &want in pref {
+            let best = slots
+                .iter()
+                .filter(|s| {
+                    s.id != exclude
+                        && s.class == want
+                        && s.healthy()
+                        && !s.draining.load(Ordering::Relaxed)
+                })
+                .min_by_key(|s| s.load.load(Ordering::Relaxed));
+            if let Some(s) = best {
+                return Some(s.id);
+            }
+        }
+        None
+    }
 }
 
 /// Cloneable submitter side of the pool: routes each request to a live
@@ -842,8 +902,11 @@ impl PoolHandle {
     }
 
     /// Pick the slot position for one request (see the module docs for
-    /// the policies) over a frozen snapshot.
-    fn place(&self, slots: &[ShardSlot], expr: &str) -> usize {
+    /// the policies) over a frozen snapshot. `est` is the request's
+    /// lane estimate — least-loaded ties break toward a shard whose
+    /// last-accepted batch had the same shape, so equal-width lanes
+    /// pack into dense step batches instead of fragmenting.
+    fn place(&self, slots: &[ShardSlot], expr: &str, est: u64) -> usize {
         let n = slots.len();
         if n == 1 {
             return 0;
@@ -854,12 +917,18 @@ impl PoolHandle {
             PlacePolicy::LeastLoaded => {
                 let mut best = 0;
                 let mut best_load = u64::MAX;
+                let mut best_shape = false;
                 for (i, s) in slots.iter().enumerate() {
                     let v = s.load.load(Ordering::Relaxed);
-                    if v < best_load {
+                    let shape = s.shape.load(Ordering::Relaxed) == est;
+                    if v < best_load || (v == best_load && shape && !best_shape) {
                         best = i;
                         best_load = v;
+                        best_shape = shape;
                     }
+                }
+                if best_shape {
+                    self.reg.shape_hits.fetch_add(1, Ordering::Relaxed);
                 }
                 best
             }
@@ -881,8 +950,8 @@ impl PoolHandle {
         if n == 0 {
             bail!("no live scheduler shards");
         }
-        let first = self.place(&slots, &req.expr);
         let est = lane_estimate(req.method, self.reg.cfg.pool_size) as u64;
+        let first = self.place(&slots, &req.expr, est);
         match send_with_fallback(&slots, first, est, ShardMsg::Solve(req)) {
             Ok(()) => {
                 // wake parked steal-mode shards: intake goes through the
@@ -906,10 +975,93 @@ impl PoolHandle {
             // reap the thread after its done signal (initial shards are
             // joined by BackendPool::spawn's caller instead)
             let mut lc = lock_ok(&self.reg.lifecycle);
-            self.reg.respawn_locked(&mut lc)?
+            self.reg.respawn_locked(&mut lc, None)?
         };
         lock_ok(&self.reg.metrics).record_shard_added();
         Ok(id)
+    }
+
+    /// Hot-add one shard of a specific hardware class (the class-scoped
+    /// autoscaler's scale-up path — the config pattern indexes by shard
+    /// id, which drifts monotonically under churn, so a targeted
+    /// scale-up must pin the class explicitly).
+    pub fn add_shard_of(&self, class: ShardClass) -> Result<usize> {
+        let id = {
+            let mut lc = lock_ok(&self.reg.lifecycle);
+            self.reg.respawn_locked(&mut lc, Some(class))?
+        };
+        lock_ok(&self.reg.metrics).record_shard_added();
+        Ok(id)
+    }
+
+    /// Live healthy shards of `class`.
+    pub fn shards_of(&self, class: ShardClass) -> usize {
+        self.reg
+            .snapshot()
+            .iter()
+            .filter(|s| s.healthy() && s.class == class)
+            .count()
+    }
+
+    /// The hardware class of live shard `id` (None once removed).
+    pub fn class_of_shard(&self, id: usize) -> Option<ShardClass> {
+        self.reg.snapshot().iter().find(|s| s.id == id).map(|s| s.class)
+    }
+
+    /// `(shard id, outstanding lane estimate)` per live healthy shard
+    /// of `class` — the class-scoped autoscaler's victim input.
+    pub fn shard_loads_of(&self, class: ShardClass) -> Vec<(usize, u64)> {
+        self.reg
+            .snapshot()
+            .iter()
+            .filter(|s| s.healthy() && s.class == class)
+            .map(|s| (s.id, s.load.load(Ordering::Relaxed)))
+            .collect()
+    }
+
+    /// Least-loaded placements that landed on a shard whose last batch
+    /// shape matched the request (the batch-shape placement hint).
+    pub fn placement_shape_hits(&self) -> u64 {
+        self.reg.shape_hits.load(Ordering::Relaxed)
+    }
+
+    /// One consistent [`PoolHandle::sample_signals`]-shaped sample per
+    /// hardware class in the configured pattern (deduped; `[Balanced]`
+    /// for a uniform pool) — the class-scoped autoscaler's input. A
+    /// class every shard of which has drained away still reports a row
+    /// (all zeros), so its policy can scale it back up.
+    pub fn sample_class_signals(&self) -> Vec<(ShardClass, (usize, usize, f64, u64))> {
+        let mut classes: Vec<ShardClass> = self.reg.cfg.shard_classes.clone();
+        classes.sort();
+        classes.dedup();
+        if classes.is_empty() {
+            classes.push(ShardClass::Balanced);
+        }
+        let slots = self.reg.snapshot();
+        classes
+            .into_iter()
+            .map(|c| {
+                let mut healthy = 0usize;
+                let mut queued = 0usize;
+                let mut oldest: Option<Instant> = None;
+                let mut lanes = 0u64;
+                for s in slots.iter().filter(|s| s.class == c && s.healthy()) {
+                    healthy += 1;
+                    let q = lock_ok(&s.queue);
+                    queued += q.len();
+                    if let Some(job) = q.front() {
+                        oldest = Some(match oldest {
+                            Some(t) if t <= job.queued_at => t,
+                            _ => job.queued_at,
+                        });
+                    }
+                    drop(q);
+                    lanes += s.load.load(Ordering::Relaxed);
+                }
+                let wait = oldest.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
+                (c, (healthy, queued, wait, lanes))
+            })
+            .collect()
     }
 
     /// Hot-remove shard `id`: publish a snapshot without it and mark it
@@ -937,6 +1089,33 @@ impl PoolHandle {
             let victim_healthy = cur[pos].healthy();
             if victim_healthy && healthy <= min {
                 bail!("cannot drain shard {id}: pool is at min_shards={min}");
+            }
+            // with a heterogeneous fleet the floor holds PER CLASS: a
+            // class drained to zero could never be scaled back up from
+            // load alone, and losing the last target-capable shard
+            // would strand every speculative run's verify/rewrite work
+            // on hostile cost profiles (DESIGN.md §15)
+            if victim_healthy && !self.reg.cfg.shard_classes.is_empty() {
+                let vclass = cur[pos].class;
+                let same_class =
+                    cur.iter().filter(|s| s.healthy() && s.class == vclass).count();
+                if same_class <= 1 {
+                    bail!(
+                        "cannot drain shard {id}: last healthy {} shard",
+                        vclass.name()
+                    );
+                }
+                if vclass.target_capable() {
+                    let capable = cur
+                        .iter()
+                        .filter(|s| s.healthy() && s.class.target_capable())
+                        .count();
+                    if capable <= 1 {
+                        bail!(
+                            "cannot drain shard {id}: last target-capable shard"
+                        );
+                    }
+                }
             }
             let mut v: Vec<ShardSlot> = cur.iter().cloned().collect();
             let slot = v.remove(pos);
@@ -1025,12 +1204,14 @@ impl BackendPool {
             lifecycle: Mutex::new(HashMap::new()),
             quarantine: Mutex::new(QuarantineLru::new(qcap)),
             signal: Arc::new(WorkSignal::new()),
+            shape_hits: AtomicU64::new(0),
         });
         let mut joins = Vec::with_capacity(shards);
         let mut v = Vec::with_capacity(shards);
         for _ in 0..shards {
             let id = reg.next_id.fetch_add(1, Ordering::Relaxed);
-            let (slot, hook, join) = reg.spawn_shard(id)?;
+            let class = reg.cfg.class_of(id);
+            let (slot, hook, join) = reg.spawn_shard(id, class)?;
             lock_ok(&reg.lifecycle).insert(id, hook);
             v.push(slot);
             joins.push(join);
@@ -1235,6 +1416,112 @@ mod tests {
         for j in joins {
             j.join().unwrap();
         }
+    }
+
+    #[test]
+    fn shard_classes_floor_and_targeted_scale_up() {
+        let mut cfg = SsrConfig::default();
+        cfg.shards = 2;
+        cfg.placement = PlacePolicy::RoundRobin;
+        cfg.shard_classes = vec![ShardClass::DraftHeavy, ShardClass::TargetHeavy];
+        let metrics = Arc::new(Mutex::new(Metrics::new()));
+        let (handle, joins) =
+            BackendPool::spawn(cfg, tokenizer::builtin_vocab(), Arc::clone(&metrics), |_s| {
+                Ok(Box::new(CalibratedBackend::for_suite("synth-math500", 7)?)
+                    as Box<dyn Backend>)
+            })
+            .unwrap();
+        assert_eq!(handle.class_of_shard(0), Some(ShardClass::DraftHeavy));
+        assert_eq!(handle.class_of_shard(1), Some(ShardClass::TargetHeavy));
+        // classes shape clocks and capacity, never decisions: both serve
+        let replies: Vec<_> = (0..4).map(|i| solve(&handle, "3+4*2", i as u64)).collect();
+        for r in &replies {
+            assert!(r.recv().unwrap().is_ok());
+        }
+        // per-class floor: neither shard is removable while it is the
+        // last healthy member of its class
+        assert!(handle.remove_shard(0).is_err(), "drained last draft_heavy");
+        assert!(handle.remove_shard(1).is_err(), "drained last target-capable");
+        // targeted scale-up pins the class (the id-indexed pattern would
+        // have made shard 2 draft_heavy)
+        let id = handle.add_shard_of(ShardClass::TargetHeavy).unwrap();
+        assert_eq!(id, 2);
+        assert_eq!(handle.class_of_shard(2), Some(ShardClass::TargetHeavy));
+        assert_eq!(handle.shards_of(ShardClass::TargetHeavy), 2);
+        // with a second target-capable shard live, the first can drain
+        assert!(handle.remove_shard(1).is_ok());
+        assert_eq!(handle.shards_of(ShardClass::TargetHeavy), 1);
+        let sig = handle.sample_class_signals();
+        assert_eq!(sig.len(), 2, "one signal row per configured class");
+        assert_eq!(sig[0].0, ShardClass::DraftHeavy);
+        assert_eq!(sig[1].0, ShardClass::TargetHeavy);
+        assert_eq!((sig[0].1 .0, sig[1].1 .0), (1, 1), "healthy counts");
+        let loads = handle.shard_loads_of(ShardClass::TargetHeavy);
+        assert_eq!(loads.len(), 1);
+        assert_eq!(loads[0], (2, 0));
+        drop(handle);
+        for j in joins {
+            j.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn least_loaded_tie_breaks_on_batch_shape() {
+        // gate the backends so both submissions queue (and stamp the
+        // slots' shape hints) before either shard starts serving
+        let (gate_tx, gate_rx) = mpsc::channel::<()>();
+        let gate = Arc::new(Mutex::new(gate_rx));
+        let mut cfg = SsrConfig::default();
+        cfg.shards = 2;
+        cfg.placement = PlacePolicy::LeastLoaded;
+        let metrics = Arc::new(Mutex::new(Metrics::new()));
+        let (handle, joins) = BackendPool::spawn(
+            cfg,
+            tokenizer::builtin_vocab(),
+            Arc::clone(&metrics),
+            move |_s| {
+                let _ = gate.lock().unwrap().recv();
+                Ok(Box::new(CalibratedBackend::for_suite("synth-math500", 7)?)
+                    as Box<dyn Backend>)
+            },
+        )
+        .unwrap();
+        let solve_n = |n: usize, seed: u64| {
+            let (rtx, rrx) = mpsc::channel();
+            handle
+                .submit(SolveRequest {
+                    expr: "3+4*2".to_string(),
+                    method: Method::Ssr { n, tau: 7, stop: StopRule::Full },
+                    seed,
+                    deadline_ms: 0,
+                    class: QosClass::default(),
+                    reply: rtx,
+                })
+                .unwrap();
+            rrx
+        };
+        // empty pool: est 3 -> slot 0 (lowest), est 5 -> slot 1 (less
+        // loaded); each send stamps the slot's shape hint
+        let r0 = solve_n(3, 1);
+        let r1 = solve_n(5, 2);
+        gate_tx.send(()).unwrap();
+        gate_tx.send(()).unwrap();
+        assert!(r0.recv().unwrap().is_ok());
+        assert!(r1.recv().unwrap().is_ok());
+        assert_eq!(handle.load_of(0) + handle.load_of(1), 0);
+        assert_eq!(handle.placement_shape_hits(), 0, "no tie matched yet");
+        // drained pool, loads tied at 0: the 5-lane repeat prefers the
+        // shard whose last batch was 5 lanes wide instead of slot 0
+        let r2 = solve_n(5, 3);
+        assert!(r2.recv().unwrap().is_ok());
+        assert_eq!(handle.placement_shape_hits(), 1);
+        drop(handle);
+        for j in joins {
+            j.join().unwrap();
+        }
+        let m = metrics.lock().unwrap();
+        assert_eq!(m.shard_requests.get(&1).copied().unwrap_or(0), 2);
+        assert_eq!(m.placement_shape_hits, 0, "metrics gauge synced by stats op only");
     }
 
     #[test]

@@ -56,6 +56,18 @@
 //!   (`Metrics::record_batch` -> mean/histogram batch occupancy), every
 //!   admission pass samples queue depth, and every admitted job records
 //!   its admission wait and shard. `{"op":"stats"}` surfaces all of it.
+//! * **Gamma-driven class rebalancing.** With a heterogeneous fleet
+//!   (`--shard-classes`, DESIGN.md §15) every shard watches its runs'
+//!   per-run acceptance EWMA after each retire pass: a run whose gamma
+//!   collapsed below the break-even band (or that went target-only)
+//!   migrates to a `target_heavy` shard, and a high-gamma run stuck on
+//!   one migrates to `draft_heavy`/`balanced` capacity — through the
+//!   same detach/attach machinery as stealing, so decisions never
+//!   change. Ping-pong is bounded three ways: a run must breach the
+//!   threshold for `GAMMA_BREACH_TICKS` consecutive ticks
+//!   (hysteresis), each run has a lifetime budget of
+//!   `MAX_CLASS_MOVES` class migrations, and a shard moves at most one
+//!   run per tick.
 //! * **Work stealing & live migration.** With `steal_threshold > 0`, a
 //!   shard whose occupancy sat below the threshold (for a full tick,
 //!   or instantly when fully idle) and whose own queue is empty pulls
@@ -101,7 +113,7 @@ use super::metrics::Metrics;
 use super::pool::{BackendPool, ShardRegistry, ShedRequest, WorkSignal};
 use super::prefix::{PrefixProvider, ShardPrefix, SharedPrefixTier};
 use crate::backend::{severity_of, Backend, FaultSeverity};
-use crate::config::{AdmitPolicy, SsrConfig};
+use crate::config::{AdmitPolicy, ShardClass, SsrConfig};
 use crate::runtime::Vocab;
 use crate::util::hash;
 use crate::util::json::{self, Value};
@@ -165,6 +177,10 @@ pub(crate) fn lane_estimate(method: Method, pool_size: usize) -> usize {
 /// could never drain by dropping its handles.
 pub(crate) struct ShardCtx {
     pub shard: usize,
+    /// the shard's hardware class (DESIGN.md §15): scales the lane
+    /// pool (`lane_factor`) and anchors gamma-driven rebalancing;
+    /// `Balanced` for uniform pools
+    pub class: ShardClass,
     pub tier: Arc<SharedPrefixTier>,
     pub load: Arc<AtomicU64>,
     pub queue: Arc<Mutex<VecDeque<QueuedJob>>>,
@@ -262,6 +278,10 @@ struct InFlight {
     /// the deadline expired and the run was force-stopped: the reply
     /// carries `degraded:true`
     degraded: bool,
+    /// consecutive ticks this run's gamma EWMA has sat on the wrong
+    /// side of the class-rebalancing thresholds (hysteresis: a single
+    /// noisy window must not trigger a migration)
+    gamma_breach: u32,
     reply: mpsc::Sender<Result<Value>>,
 }
 
@@ -444,6 +464,7 @@ fn finish_job(
     backend: &mut dyn Backend,
     f: &mut InFlight,
     metrics: &Arc<Mutex<Metrics>>,
+    shard_class: ShardClass,
 ) -> Result<Value> {
     let r = f.run.finish(backend)?;
     let latency = f.enqueued.elapsed().as_secs_f64();
@@ -452,6 +473,10 @@ fn finish_job(
         let mut m = lock_ok(metrics);
         m.record_request_class(latency, r.answer().is_some(), f.class);
         m.record_tokens(r.draft_tokens, r.target_tokens, r.steps, r.rewrites);
+        // speculation accounting (DESIGN.md §15): the run's acceptance
+        // ledger lands on the class of the shard that RETIRED it — a
+        // migrated run is attributed where it finished
+        m.record_speculation(shard_class, r.proposed, r.accepted, r.spec_depth, r.target_only);
         if f.degraded {
             m.degraded_replies += 1;
         }
@@ -472,6 +497,12 @@ fn finish_job(
         ("target_tokens", json::i(r.target_tokens as i64)),
         ("latency_s", json::n(latency)),
         ("queue_wait_s", json::n(queue_wait)),
+        // speculation telemetry (DESIGN.md §15): lifetime acceptance
+        // rate (null when the run never speculated) and the window
+        // depth the controller had settled on at retirement
+        ("gamma", r.gamma.map(json::n).unwrap_or(Value::Null)),
+        ("spec_depth", json::i(r.spec_depth as i64)),
+        ("target_only", Value::Bool(r.target_only)),
     ]))
 }
 
@@ -551,6 +582,7 @@ fn take_back(
                         retries,
                         class,
                         degraded: false,
+                        gamma_breach: 0,
                         reply,
                     });
                 }
@@ -687,10 +719,98 @@ fn shed_to_thieves(
     }
 }
 
+/// A run's gamma EWMA below this on a non-target-heavy shard marks it
+/// collapsed: its windows are mostly rewrites, so it wants target-cheap
+/// capacity (DESIGN.md §15).
+const GAMMA_COLLAPSE: f64 = 0.3;
+/// A run's gamma EWMA above this on a target-heavy shard marks it
+/// draft-friendly: it is paying the target-heavy draft surcharge for
+/// verification passes it almost never needs.
+const GAMMA_RICH: f64 = 0.85;
+/// Windows observed before the EWMA is trusted for placement at all.
+const GAMMA_MIN_SAMPLES: u64 = 3;
+/// Consecutive ticks a run must breach a threshold before it migrates
+/// (hysteresis against single noisy windows).
+const GAMMA_BREACH_TICKS: u32 = 3;
+/// Lifetime cap on gamma-driven class migrations per run: with the
+/// hysteresis this bounds ping-pong even when a run's gamma straddles a
+/// threshold for its whole life.
+const MAX_CLASS_MOVES: u32 = 2;
+
+/// Gamma-driven class rebalancing (DESIGN.md §15): move at most ONE
+/// misplaced run per tick to a shard class that matches its observed
+/// acceptance rate, through the same detach/attach machinery as work
+/// stealing — so the migrated run's decisions are bit-identical, only
+/// its clock placement changes. Breach counters for every other
+/// misplaced run keep accumulating, so a backlog drains over successive
+/// ticks without ever bursting the migration channel.
+fn rebalance_by_gamma(
+    backend: &mut dyn Backend,
+    inflight: &mut Vec<InFlight>,
+    reg: &Arc<ShardRegistry>,
+    metrics: &Arc<Mutex<Metrics>>,
+    ctx: &ShardCtx,
+) {
+    let here = ctx.class;
+    let mut pick: Option<(usize, &'static [ShardClass])> = None;
+    for (i, f) in inflight.iter_mut().enumerate() {
+        if f.run.is_done() {
+            continue;
+        }
+        // non-speculative runs have no gamma; immature EWMAs and runs
+        // out of migration budget stay where they are
+        let Some(g) = f.run.gamma_ewma() else { continue };
+        if f.run.gamma_samples() < GAMMA_MIN_SAMPLES
+            || f.run.class_moves() >= MAX_CLASS_MOVES
+        {
+            continue;
+        }
+        let collapsed = (g < GAMMA_COLLAPSE || f.run.target_only())
+            && here != ShardClass::TargetHeavy;
+        let rich = g > GAMMA_RICH && here == ShardClass::TargetHeavy;
+        if collapsed || rich {
+            f.gamma_breach += 1;
+            if pick.is_none() && f.gamma_breach >= GAMMA_BREACH_TICKS {
+                let pref: &'static [ShardClass] = if collapsed {
+                    &[ShardClass::TargetHeavy]
+                } else {
+                    &[ShardClass::DraftHeavy, ShardClass::Balanced]
+                };
+                pick = Some((i, pref));
+            }
+        } else {
+            f.gamma_breach = 0;
+        }
+    }
+    let Some((i, pref)) = pick else { return };
+    // no destination of the wanted class -> stay put (the breach
+    // counter saturates and retries next tick; capacity may appear)
+    let Some(dest) = reg.pick_shard_of_class(ctx.shard, pref) else { return };
+    let mut f = inflight.remove(i);
+    // spend the budget BEFORE detaching — the counter travels inside
+    // the run's controller state, so the destination sees it
+    f.run.note_class_move();
+    let est = f.est;
+    let Some((job, bytes)) = detach_job(backend, f, metrics, ctx) else { return };
+    ctx.load.fetch_sub(est as u64, Ordering::Relaxed);
+    match reg.send_to(dest, job) {
+        Ok(()) => {
+            let mut m = lock_ok(metrics);
+            m.record_migration(bytes);
+            m.gamma_migrations += 1;
+        }
+        Err(job) => {
+            // destination vanished between pick and send: take it back
+            ctx.load.fetch_add(est as u64, Ordering::Relaxed);
+            take_back(backend, job, inflight, metrics, ctx);
+        }
+    }
+}
+
 /// One shard's thread body: intake -> migrate/steal -> admit -> tick ->
-/// retire -> shed, until every submitter is gone (channel disconnected
-/// — pool shutdown or `remove_shard` drain) and all of this shard's
-/// work has finished or been re-homed.
+/// retire -> rebalance -> shed, until every submitter is gone (channel
+/// disconnected — pool shutdown or `remove_shard` drain) and all of
+/// this shard's work has finished or been re-homed.
 pub(crate) fn run_loop(
     backend: &mut dyn Backend,
     cfg: &SsrConfig,
@@ -701,7 +821,10 @@ pub(crate) fn run_loop(
 ) {
     let mut inflight: Vec<InFlight> = Vec::new();
     let mut disconnected = false;
-    let max_lanes = cfg.max_lanes.max(1);
+    // the class's lane factor scales the pool: draft-heavy shards run
+    // wider (cheap drafts buy lane width), so admission, stealing and
+    // the autoscaler's occupancy all see the effective capacity
+    let max_lanes = cfg.max_lanes.max(1).saturating_mul(ctx.class.lane_factor().max(1));
     let steal_at = cfg.steal_threshold;
     let migration = cfg.migration;
     // consecutive passes this shard sat under the steal threshold with
@@ -857,6 +980,7 @@ pub(crate) fn run_loop(
                                 retries,
                                 class,
                                 degraded: false,
+                                gamma_breach: 0,
                                 reply,
                             });
                         }
@@ -904,6 +1028,7 @@ pub(crate) fn run_loop(
                                 retries,
                                 class,
                                 degraded: false,
+                                gamma_breach: 0,
                                 reply,
                             });
                         }
@@ -958,6 +1083,8 @@ pub(crate) fn run_loop(
                 }
                 m.retries += tick.retries;
                 m.set_shard_clock(ctx.shard, backend.clock_secs());
+                let (draft_s, target_s) = backend.clock_split_secs();
+                m.set_shard_clock_split(ctx.shard, draft_s, target_s);
             }
             Err(e) => {
                 // shard-fatal faults (substrate gone, device wedged)
@@ -998,7 +1125,7 @@ pub(crate) fn run_loop(
             if inflight[i].run.is_done() {
                 let mut f = inflight.swap_remove(i);
                 ctx.clear_ticket(f.ticket);
-                let result = finish_job(backend, &mut f, metrics);
+                let result = finish_job(backend, &mut f, metrics, ctx.class);
                 if result.is_err() {
                     // finish bailed mid-close: close whatever it left
                     // open (abort swallows double-close errors)
@@ -1009,6 +1136,16 @@ pub(crate) fn run_loop(
                 let _ = f.reply.send(result);
             } else {
                 i += 1;
+            }
+        }
+
+        // --- gamma-driven class rebalancing ---------------------------
+        if migration
+            && !cfg.shard_classes.is_empty()
+            && !ctx.draining.load(Ordering::Relaxed)
+        {
+            if let Some(reg) = ctx.registry.upgrade() {
+                rebalance_by_gamma(backend, &mut inflight, &reg, metrics, ctx);
             }
         }
 
@@ -1026,6 +1163,8 @@ pub(crate) fn run_loop(
     m.set_prefix_cache(ts.hits, ts.misses, ts.evictions);
     m.set_prefix_shard_fills(ts.shard_fills);
     m.set_shard_clock(ctx.shard, backend.clock_secs());
+    let (draft_s, target_s) = backend.clock_split_secs();
+    m.set_shard_clock_split(ctx.shard, draft_s, target_s);
 }
 
 #[cfg(test)]
@@ -1204,6 +1343,38 @@ mod tests {
         drop(handle);
         join.join().unwrap();
         assert_eq!(metrics.lock().unwrap().requests, 4);
+    }
+
+    #[test]
+    fn reply_carries_speculation_telemetry() {
+        use crate::config::{ShardClass, StopRule};
+        let (handle, join, metrics) = spawn_test_scheduler(SsrConfig::default(), None);
+        let ssr = submit(
+            &handle,
+            "17+25*3",
+            Method::Ssr { n: 3, tau: 7, stop: StopRule::Full },
+            0,
+        );
+        let v = ssr.recv().unwrap().unwrap();
+        // speculative run: the reply surfaces its controller state
+        let g = v.get_f64("gamma").unwrap();
+        assert!(g > 0.0 && g <= 1.0, "gamma {g}");
+        assert_eq!(v.get_i64("spec_depth").unwrap(), 1, "fixed:1 default");
+        assert_eq!(v.get("target_only").unwrap(), &Value::Bool(false));
+        // non-speculative run: gamma is null, not 0 (no proposals made)
+        let base = submit(&handle, "2+3", Method::Baseline, 0);
+        let v = base.recv().unwrap().unwrap();
+        assert_eq!(v.get("gamma").unwrap(), &Value::Null);
+        drop(handle);
+        join.join().unwrap();
+        let m = metrics.lock().unwrap();
+        // the SSR run's ledger landed under the retiring shard's class
+        // (classless pools default to balanced)
+        assert!(m.gamma_of_class(ShardClass::Balanced) > 0.0);
+        assert_eq!(m.gamma_of_class(ShardClass::TargetHeavy), 0.0);
+        assert!((m.gamma_overall() - m.gamma_of_class(ShardClass::Balanced)).abs() < 1e-12);
+        assert_eq!(m.target_only_runs, 0);
+        assert!(m.spec_depth_mean() >= 1.0);
     }
 
     #[test]

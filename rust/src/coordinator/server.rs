@@ -14,7 +14,11 @@
 //!       "tau":7}       // optional: "seed", "deadline_ms",
 //!                      //           "tenant", "class"
 //!   <- {"ok":true, "degraded":false, "answer":126, "method":"ssr-m5",
-//!       "steps":9, "rewrites":2, "latency_s":0.41, "queue_wait_s":0.02}
+//!       "steps":9, "rewrites":2, "latency_s":0.41, "queue_wait_s":0.02,
+//!       "gamma":0.81,        // measured acceptance rate (null when the
+//!                            // method never speculated, e.g. baseline)
+//!       "spec_depth":1,      // final controller depth (DESIGN.md §15)
+//!       "target_only":false} // gamma collapsed -> draft retired
 //!   <- {"ok":false, "err":"overloaded", "reason":"rate_limited",
 //!       "retry_after_ms":125}         // intake shed (DESIGN.md §14)
 //!   -> {"op":"stats"}
@@ -39,7 +43,15 @@
 //!       "batch_p50_s":..., "batch_p99_s":...,
 //!       "best_effort_p50_s":..., "best_effort_p99_s":...,
 //!       "tenant_requests":{...}, "tenant_rejected":{...},
-//!       "model_secs":...}             // backend model-clock
+//!       "model_secs":...,             // backend model-clock
+//!       "model_secs_draft":..., "model_secs_target":...,  // §15 split
+//!       "gamma_overall":...,          // pooled acceptance rate
+//!       "gamma_draft_heavy":..., "gamma_balanced":...,
+//!       "gamma_target_heavy":...,     // per shard class
+//!       "spec_depth_mean":..., "spec_depth_hist":[...],
+//!       "target_only_runs":...,
+//!       "gamma_migrations":...,       // class rebalance moves
+//!       "placement_shape_hits":...}   // batch-shape tie-breaks
 //!   -> {"op":"add_shard"}             // hot-add one backend shard
 //!   <- {"ok":true, "shard":2, "shards_live":3}
 //!   -> {"op":"remove_shard", "shard":2}   // drain + remove at runtime
@@ -432,7 +444,11 @@ fn process_line(
         }
         "stats" => {
             let mut v = {
-                let m = lock_ok(metrics);
+                let mut m = lock_ok(metrics);
+                // the pool owns the live lock-free shape-hit counter
+                // (the submit hot path never takes this mutex); sync it
+                // into the snapshot the summary renders
+                m.set_placement_shape_hits(sched.placement_shape_hits());
                 m.summary_json(started.elapsed().as_secs_f64())
             };
             if let Value::Obj(ref mut map) = v {

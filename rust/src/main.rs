@@ -8,6 +8,8 @@
 //!           [--max-lanes 32] [--admission fifo|smallest-first]
 //!           [--shards N] [--placement least-loaded|affinity|round-robin]
 //!           [--steal-threshold L] [--min-shards N] [--migrate on|off]
+//!           [--spec-depth fixed:<k>|adaptive:<max>]
+//!           [--shard-classes draft_heavy,balanced,target_heavy]
 //!           [--autoscale on|off] [--max-shards N] [--scale-up-wait S]
 //!           [--scale-up-queue Q] [--scale-down-occupancy F]
 //!           [--scale-interval-ms MS] [--scale-cooldown-ms MS]
@@ -52,6 +54,20 @@
 //! seeded fault injector (step errors, stalls, panics) for chaos
 //! testing — see `{"op":"stats"}` keys `shard_crashes`,
 //! `runs_recovered`, `quarantined`, `degraded_replies`.
+//!
+//! Speculation is adaptive (DESIGN.md §15): `--spec-depth adaptive:<max>`
+//! lets each run's depth controller widen the draft burst while its
+//! measured acceptance rate (gamma) stays high and narrow it — down to
+//! target-only — when gamma collapses; `fixed:<k>` (default `fixed:1`)
+//! pins the depth, and `fixed:1` is bit-identical to the pre-§15
+//! lockstep engine. `--shard-classes` declares a heterogeneous fleet
+//! (`draft_heavy` doubles lanes and cheapens draft seconds,
+//! `target_heavy` the reverse); the scheduler migrates gamma-collapsed
+//! runs to target-heavy shards and gamma-rich runs to draft-heavy ones,
+//! and the autoscaler scales each class independently. See
+//! `{"op":"stats"}` keys `gamma_overall`, `gamma_<class>`,
+//! `spec_depth_mean`, `target_only_runs`, `gamma_migrations`,
+//! `model_secs_draft`/`model_secs_target` and `placement_shape_hits`.
 //!
 //! Serving is overload-safe (DESIGN.md §14): a `solve` may carry
 //! `tenant` and `class` (`interactive`|`batch`|`best_effort`) wire
@@ -219,6 +235,11 @@ fn run() -> Result<()> {
                 cfg.prefix.max_bytes
             );
             println!(
+                "speculation: spec_depth={:?} shard_classes={:?}",
+                cfg.spec_depth,
+                cfg.shard_classes.iter().map(|c| c.name()).collect::<Vec<_>>()
+            );
+            println!(
                 "qos: enabled={} tenant_rate={}/s burst={} queue_cap={}/class \
                  weights={:?} slo_ms={} cost_ceiling_s={} idle_timeout_ms={}",
                 cfg.qos.enabled,
@@ -280,7 +301,7 @@ fn run_experiment(
         "fig4" => experiments::fig4(factory, cfg, opts)?.1,
         "fig5" => experiments::fig5(factory, cfg, opts)?.1,
         "table1" => experiments::table1(factory, cfg, opts)?.1,
-        "gamma" => experiments::gamma_check(factory, cfg, opts)?,
+        "gamma" => experiments::gamma_check(factory, cfg, opts)?.1,
         "tau" => experiments::tau_sweep(factory, cfg, opts)?.1,
         "selection" => experiments::selection_ablation(factory, cfg, opts)?.1,
         "all" => {

@@ -22,7 +22,7 @@ use ssr::backend::{
     Backend, BackendMeta, LaneSnapshot, PathId, PathStats, PrefillStats, PrefixHandle,
     StepOutcome,
 };
-use ssr::config::{FaultSpec, PlacePolicy, SsrConfig};
+use ssr::config::{FaultSpec, PlacePolicy, SpecDepth, SsrConfig};
 use ssr::coordinator::admission::QosClass;
 use ssr::coordinator::engine::Method;
 use ssr::coordinator::metrics::Metrics;
@@ -310,6 +310,67 @@ fn forced_shard_panic_recovers_in_flight_runs() {
         answers,
         fault_free_answers(&jobs, backend_seed),
         "recovered runs diverge from the fault-free reference"
+    );
+}
+
+#[test]
+fn fixed_depth_runs_recover_to_the_depth_one_reference() {
+    // Spec-depth satellite: a forced shard panic with `--spec-depth
+    // fixed:4` runs in flight. Crash recovery (checkpoint resume or
+    // seeded replay) must land on the same answers as the fault-free
+    // DEPTH-1 reference — depth is clock-only, and the recovery path
+    // replays deterministically at any depth.
+    let backend_seed = 0xFA08;
+    let spec = FaultSpec { seed: 0xC4A8, transient_rate: 0.01, ..FaultSpec::default() };
+    let budget = FaultInjector::shared_budget(&spec);
+    let calls = Arc::new(AtomicU64::new(0));
+    let mut cfg = SsrConfig::default();
+    cfg.shards = 2;
+    cfg.placement = PlacePolicy::RoundRobin;
+    cfg.spec_depth = SpecDepth::Fixed(4);
+    let metrics = Arc::new(Mutex::new(Metrics::new()));
+    let (handle, joins) = BackendPool::spawn(
+        cfg,
+        tokenizer::builtin_vocab(),
+        Arc::clone(&metrics),
+        move |shard| {
+            let inner = Box::new(CalibratedBackend::for_suite(SUITE, backend_seed)?);
+            let faulty =
+                Box::new(FaultInjector::new(inner, spec, shard, budget.clone()));
+            let calls = Arc::clone(&calls);
+            Ok(Box::new(Hooked {
+                inner: faulty,
+                on_step: Box::new(move || {
+                    if calls.fetch_add(1, Ordering::SeqCst) + 1 == 7 {
+                        panic!("chaos: forced shard panic on step call #7");
+                    }
+                }),
+            }) as Box<dyn Backend>)
+        },
+    )
+    .unwrap();
+
+    let jobs = mixed_jobs(8);
+    let replies: Vec<_> = jobs.iter().map(|(e, m, s)| submit(&handle, e, *m, *s)).collect();
+    let answers: Vec<Option<i64>> =
+        replies.iter().map(|r| answer_of(&r.recv().unwrap().unwrap())).collect();
+    assert_eq!(handle.shards(), 2, "pool did not end at its healthy shard count");
+    drop(handle);
+    for j in joins {
+        j.join().unwrap();
+    }
+
+    let m = metrics.lock().unwrap();
+    assert_eq!(m.errors, 0, "a crash leaked an error to a client");
+    assert_eq!(m.requests, 8);
+    assert_eq!(m.shard_crashes, 1, "the forced panic must crash exactly one shard");
+    assert!(m.runs_recovered >= 1, "the dead shard's in-flight runs were not re-admitted");
+    drop(m);
+    // reference runs at the DEFAULT depth (fixed:1) and fault-free
+    assert_eq!(
+        answers,
+        fault_free_answers(&jobs, backend_seed),
+        "fixed:4 recovered runs diverge from the depth-1 fault-free reference"
     );
 }
 

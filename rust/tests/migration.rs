@@ -19,7 +19,7 @@ use ssr::backend::{
     Backend, BackendMeta, LaneSnapshot, PathId, PathStats, PrefillStats, PrefixHandle,
     StepOutcome,
 };
-use ssr::config::{PlacePolicy, SsrConfig, StopRule};
+use ssr::config::{PlacePolicy, ShardClass, SpecDepth, SsrConfig, StopRule};
 use ssr::coordinator::admission::QosClass;
 use ssr::coordinator::autoscaler::Autoscaler;
 use ssr::coordinator::engine::Method;
@@ -38,6 +38,10 @@ struct ThrottledBackend {
     inner: CalibratedBackend,
     step_sleep: Duration,
     started: Option<mpsc::Sender<()>>,
+    /// When set, `score_step` returns all zeros: every speculative
+    /// proposal is rejected, so a run's gamma EWMA collapses to 0 and
+    /// the gamma rebalancer must fire deterministically.
+    zero_scores: bool,
 }
 
 impl ThrottledBackend {
@@ -46,7 +50,12 @@ impl ThrottledBackend {
         step_sleep: Duration,
         started: Option<mpsc::Sender<()>>,
     ) -> Self {
-        ThrottledBackend { inner, step_sleep, started }
+        ThrottledBackend { inner, step_sleep, started, zero_scores: false }
+    }
+
+    fn zero_scores(mut self) -> Self {
+        self.zero_scores = true;
+        self
     }
 
     fn note_step(&mut self) {
@@ -116,7 +125,13 @@ impl Backend for ThrottledBackend {
     }
 
     fn score_step(&mut self, paths: &[PathId]) -> Result<Vec<u8>> {
-        self.inner.score_step(paths)
+        // always drive the inner substrate so its state stays identical
+        // to a reference pool using the same wrapper
+        let scores = self.inner.score_step(paths)?;
+        if self.zero_scores {
+            return Ok(vec![0; paths.len()]);
+        }
+        Ok(scores)
     }
 
     fn rewrite_step(&mut self, paths: &[PathId]) -> Result<Vec<StepOutcome>> {
@@ -421,4 +436,115 @@ fn autoscaler_grows_under_burst_and_shrinks_when_idle() {
         single_shard_answers(&jobs, 0xA5C),
         "autoscaled pool changed decisions"
     );
+}
+
+#[test]
+fn fixed_depth_runs_survive_shed_migration_unchanged() {
+    // Satellite of the spec-depth ISSUE: `--spec-depth fixed:4` runs
+    // that get shed-migrated mid-flight must still match the depth-1
+    // single-shard reference — depth is clock-only, and the burst state
+    // is never split across a migration boundary.
+    let step = Duration::from_millis(8);
+    let mut cfg = SsrConfig::default();
+    cfg.shards = 2;
+    cfg.placement = PlacePolicy::Affinity;
+    cfg.steal_threshold = 4;
+    cfg.migration = true;
+    cfg.spec_depth = SpecDepth::Fixed(4);
+    let metrics = Arc::new(Mutex::new(Metrics::new()));
+    let (handle, joins) = BackendPool::spawn(
+        cfg,
+        tokenizer::builtin_vocab(),
+        Arc::clone(&metrics),
+        move |_s| {
+            let inner = CalibratedBackend::for_suite("synth-math500", 0x5ED)?;
+            Ok(Box::new(ThrottledBackend::new(inner, step, None)) as Box<dyn Backend>)
+        },
+    )
+    .unwrap();
+    let m = Method::Ssr { n: 3, tau: 7, stop: StopRule::Full };
+    let jobs: Vec<(String, Method, u64)> =
+        (0..4).map(|i| ("17+25*3".to_string(), m, i as u64)).collect();
+    let replies: Vec<_> =
+        jobs.iter().map(|(e, m, s)| submit(&handle, e, *m, *s)).collect();
+    let answers: Vec<Option<i64>> = replies
+        .iter()
+        .map(|r| answer_of(&r.recv().unwrap().unwrap()))
+        .collect();
+    drop(handle);
+    for j in joins {
+        j.join().unwrap();
+    }
+    let mm = metrics.lock().unwrap();
+    assert_eq!(mm.errors, 0);
+    assert!(mm.migrations > 0, "the affinity-pinned burst never shed a run");
+    drop(mm);
+    assert_eq!(
+        answers,
+        single_shard_answers(&jobs, 0x5ED),
+        "fixed:4 shed-migrated runs diverge from the depth-1 reference"
+    );
+}
+
+#[test]
+fn gamma_collapse_migrates_runs_to_target_heavy_without_changing_decisions() {
+    // Deterministic collapse: zeroed scores reject every speculative
+    // proposal, so each Ssr run's gamma EWMA pins to 0. Runs placed on
+    // the balanced shard must breach the collapse threshold and migrate
+    // to the target-heavy shard (hysteresis permitting), with decisions
+    // identical to a single-shard pool using the same zeroed wrapper.
+    let build = |shards: usize, classes: Vec<ShardClass>| {
+        let mut cfg = SsrConfig::default();
+        cfg.shards = shards;
+        cfg.placement = PlacePolicy::RoundRobin;
+        cfg.migration = true;
+        cfg.shard_classes = classes;
+        cfg.spec_depth = SpecDepth::Adaptive { max: 4 };
+        let metrics = Arc::new(Mutex::new(Metrics::new()));
+        let (handle, joins) = BackendPool::spawn(
+            cfg,
+            tokenizer::builtin_vocab(),
+            Arc::clone(&metrics),
+            move |_s| {
+                let inner = CalibratedBackend::for_suite("synth-math500", 0xC011)?;
+                Ok(Box::new(
+                    ThrottledBackend::new(inner, Duration::ZERO, None).zero_scores(),
+                ) as Box<dyn Backend>)
+            },
+        )
+        .unwrap();
+        (handle, joins, metrics)
+    };
+    let m = Method::Ssr { n: 3, tau: 7, stop: StopRule::Full };
+    let jobs: Vec<(String, Method, u64)> = (0..6)
+        .map(|i| (format!("{}+{}*2", i % 7 + 2, i % 5 + 3), m, i as u64))
+        .collect();
+
+    let run = |shards: usize, classes: Vec<ShardClass>| -> (Vec<Option<i64>>, u64) {
+        let (handle, joins, metrics) = build(shards, classes);
+        let replies: Vec<_> =
+            jobs.iter().map(|(e, m, s)| submit(&handle, e, *m, *s)).collect();
+        let answers: Vec<Option<i64>> = replies
+            .iter()
+            .map(|r| answer_of(&r.recv().unwrap().unwrap()))
+            .collect();
+        drop(handle);
+        for j in joins {
+            j.join().unwrap();
+        }
+        let mm = metrics.lock().unwrap();
+        assert_eq!(mm.errors, 0);
+        (answers, mm.gamma_migrations)
+    };
+
+    // round-robin: three runs land on the balanced shard, all collapsed
+    let (answers, gamma_moves) =
+        run(2, vec![ShardClass::Balanced, ShardClass::TargetHeavy]);
+    let (reference, reference_moves) = run(1, Vec::new());
+    assert_eq!(reference_moves, 0, "a classless pool performed a class move");
+    assert!(
+        gamma_moves >= 1,
+        "no collapsed run migrated to the target-heavy shard"
+    );
+    assert_eq!(answers, reference, "gamma-driven migration changed decisions");
 }

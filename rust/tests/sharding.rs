@@ -18,7 +18,7 @@ use ssr::backend::{
     Backend, BackendMeta, LaneSnapshot, PathId, PathStats, PrefillStats, PrefixHandle,
     StepOutcome,
 };
-use ssr::config::{PlacePolicy, SsrConfig, StopRule};
+use ssr::config::{PlacePolicy, ShardClass, SpecDepth, SsrConfig, StopRule};
 use ssr::coordinator::admission::QosClass;
 use ssr::coordinator::engine::Method;
 use ssr::coordinator::metrics::Metrics;
@@ -32,15 +32,19 @@ use ssr::workload::Problem;
 
 /// Spawn an N-shard pool; every shard's backend gets the SAME seed, so
 /// the calibrated substrate's derived per-problem streams make results
-/// independent of placement (DESIGN.md §10).
-fn spawn(
+/// independent of placement (DESIGN.md §10). `tweak` mutates the config
+/// after the shard/placement fields are set (spec depth, shard classes,
+/// ...).
+fn spawn_with(
     shards: usize,
     placement: PlacePolicy,
     backend_seed: u64,
+    tweak: impl FnOnce(&mut SsrConfig),
 ) -> (PoolHandle, Vec<std::thread::JoinHandle<()>>, Arc<Mutex<Metrics>>) {
     let mut cfg = SsrConfig::default();
     cfg.shards = shards;
     cfg.placement = placement;
+    tweak(&mut cfg);
     let metrics = Arc::new(Mutex::new(Metrics::new()));
     let (handle, joins) =
         BackendPool::spawn(cfg, tokenizer::builtin_vocab(), Arc::clone(&metrics), move |_s| {
@@ -49,6 +53,14 @@ fn spawn(
         })
         .unwrap();
     (handle, joins, metrics)
+}
+
+fn spawn(
+    shards: usize,
+    placement: PlacePolicy,
+    backend_seed: u64,
+) -> (PoolHandle, Vec<std::thread::JoinHandle<()>>, Arc<Mutex<Metrics>>) {
+    spawn_with(shards, placement, backend_seed, |_| {})
 }
 
 fn submit(
@@ -94,7 +106,17 @@ fn run_workload(
     shards: usize,
     placement: PlacePolicy,
 ) -> Vec<BTreeMap<String, String>> {
-    let (handle, joins, metrics) = spawn(shards, placement, 0xD15C);
+    run_workload_with(shards, placement, |_| {})
+}
+
+/// `run_workload` with a config tweak applied before spawn — the vector
+/// the speculation-equivalence tests compare against the stock pool.
+fn run_workload_with(
+    shards: usize,
+    placement: PlacePolicy,
+    tweak: impl FnOnce(&mut SsrConfig),
+) -> Vec<BTreeMap<String, String>> {
+    let (handle, joins, metrics) = spawn_with(shards, placement, 0xD15C, tweak);
     let replies: Vec<_> = workload()
         .into_iter()
         .map(|(expr, method, seed)| submit(&handle, &expr, method, seed))
@@ -137,6 +159,49 @@ fn sharded_run_is_decision_equivalent_to_single_shard() {
             "results diverge at shards={shards} placement={placement:?}"
         );
     }
+}
+
+#[test]
+fn fixed_depth_pools_are_decision_equivalent_to_depth_one() {
+    // ISSUE acceptance: `--spec-depth fixed:<k>` reproduces today's
+    // behavior bit-identically. Depth only reshapes the draft burst
+    // inside a tick; every vote-visible field — answers, step counts,
+    // rewrites, token ledgers — must match the stock (fixed:1) pool on
+    // the same workload, sharded and single-shard alike.
+    let baseline = run_workload(1, PlacePolicy::LeastLoaded);
+    for k in [2usize, 4, 8] {
+        for (shards, placement) in
+            [(1, PlacePolicy::LeastLoaded), (2, PlacePolicy::RoundRobin), (3, PlacePolicy::Affinity)]
+        {
+            let deep = run_workload_with(shards, placement, |cfg| {
+                cfg.spec_depth = SpecDepth::Fixed(k);
+            });
+            assert_eq!(
+                baseline, deep,
+                "fixed:{k} diverges at shards={shards} placement={placement:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn adaptive_depth_and_shard_classes_never_change_decisions() {
+    // Adaptive speculation and heterogeneous shard classes are pure
+    // cost/clock concerns: the controller widens or narrows the draft
+    // burst and the rebalancer moves runs between classes, but every
+    // decision-visible reply field stays bit-identical to the stock
+    // homogeneous fixed:1 pool.
+    let baseline = run_workload(1, PlacePolicy::LeastLoaded);
+    let adaptive = run_workload_with(2, PlacePolicy::LeastLoaded, |cfg| {
+        cfg.spec_depth = SpecDepth::Adaptive { max: 8 };
+    });
+    assert_eq!(baseline, adaptive, "adaptive depth changed decisions");
+    let hetero = run_workload_with(3, PlacePolicy::LeastLoaded, |cfg| {
+        cfg.spec_depth = SpecDepth::Adaptive { max: 8 };
+        cfg.shard_classes =
+            vec![ShardClass::DraftHeavy, ShardClass::Balanced, ShardClass::TargetHeavy];
+    });
+    assert_eq!(baseline, hetero, "shard classes leaked into decisions");
 }
 
 #[test]

@@ -58,7 +58,7 @@ fn submit(
             seed,
             deadline_ms: 0,
             class: QosClass::default(),
-            reply: rtx,
+            reply: rtx.into(),
         })
         .expect("pool alive");
     rrx

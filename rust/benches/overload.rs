@@ -514,7 +514,7 @@ fn assert_decision_equivalence(pairs: &Admitted) {
                 seed: *seed,
                 deadline_ms: 0,
                 class: QosClass::default(),
-                reply: rtx,
+                reply: rtx.into(),
             })
             .expect("pool alive");
         let v = rrx.recv().expect("reply").expect("ok");

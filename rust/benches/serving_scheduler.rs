@@ -106,7 +106,7 @@ fn run_mode(label: &str, max_lanes: usize, shards: usize) -> anyhow::Result<Mode
                             seed: (c * 1009 + j) as u64,
                             deadline_ms: 0,
                             class: QosClass::default(),
-                            reply: rtx,
+                            reply: rtx.into(),
                         })
                         .expect("pool alive");
                     let v = rrx.recv().expect("reply").expect("solve ok");

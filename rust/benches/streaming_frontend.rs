@@ -1,0 +1,420 @@
+//! Streaming front-end bench (calibrated backend, no artifacts needed)
+//! for the DESIGN.md §16 event-loop rewrite, driven end-to-end over TCP:
+//!
+//! 1. **Connection fan-out** — CROWD streamed multi-path solves on
+//!    CROWD simultaneous connections against a serve loop given a
+//!    ThreadPool of only `POOL_THREADS`. The old thread-per-connection
+//!    front end could hold at most `POOL_THREADS` connections in
+//!    flight; the event loop must be observed (via the
+//!    `streams_active` gauge, sampled while the storm is in the air)
+//!    holding at least 4x that. Every terminal reply must be correct,
+//!    and each stream's first_vote must land strictly before its
+//!    terminal — the observable payoff of speculative parallel
+//!    scaling (paths vote early, the plurality is live mid-run).
+//! 2. **Framed vs jsonl goodput** — the same closed-loop blocking
+//!    workload over both transports; both goodput scalars join the
+//!    `*throughput*` regression gate.
+//!
+//! Emits one BENCH_JSON line for the tracker.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+use ssr::backend::calibrated::CalibratedBackend;
+use ssr::backend::{
+    Backend, BackendMeta, LaneSnapshot, PathId, PathStats, PrefillStats, PrefixHandle,
+    StepOutcome,
+};
+use ssr::config::{SsrConfig, Transport};
+use ssr::coordinator::protocol;
+use ssr::coordinator::server::Server;
+use ssr::model::tokenizer;
+use ssr::util::json::{self, Value};
+use ssr::util::threadpool::ThreadPool;
+
+/// Streamed fan-out: enough per-step wall cost that the whole crowd is
+/// provably in flight at once (runs take hundreds of ms; the gauge
+/// sampler needs only one hit inside that window).
+const STEP_COST: Duration = Duration::from_millis(30);
+/// Goodput phase: lighter steps, throughput is the point.
+const FAST_STEP_COST: Duration = Duration::from_millis(5);
+const CROWD: usize = 32;
+/// The serve loop's ThreadPool — the old front end's concurrency cap.
+const POOL_THREADS: usize = 4;
+/// Goodput phase: connections x sequential requests each.
+const GOODPUT_CONNS: usize = 8;
+const GOODPUT_REQS: usize = 4;
+
+/// Delegating wrapper that makes each generation step cost real wall
+/// time; decisions come from the calibrated substrate and are untouched.
+struct ThrottledBackend {
+    inner: CalibratedBackend,
+    step_sleep: Duration,
+}
+
+impl Backend for ThrottledBackend {
+    fn meta(&self) -> BackendMeta {
+        self.inner.meta()
+    }
+
+    fn select_scores(&mut self, problem: &ssr::workload::Problem) -> anyhow::Result<Vec<f32>> {
+        self.inner.select_scores(problem)
+    }
+
+    fn open_paths(
+        &mut self,
+        problem: &ssr::workload::Problem,
+        strategies: &[Option<usize>],
+        seed: u64,
+        use_draft: bool,
+    ) -> anyhow::Result<Vec<PathId>> {
+        self.inner.open_paths(problem, strategies, seed, use_draft)
+    }
+
+    fn prefill_prefix(
+        &mut self,
+        problem: &ssr::workload::Problem,
+        use_draft: bool,
+        want_scores: bool,
+    ) -> anyhow::Result<PrefixHandle> {
+        self.inner.prefill_prefix(problem, use_draft, want_scores)
+    }
+
+    fn prefix_scores(&mut self, handle: PrefixHandle) -> anyhow::Result<Vec<f32>> {
+        self.inner.prefix_scores(handle)
+    }
+
+    fn fork_paths(
+        &mut self,
+        handle: PrefixHandle,
+        strategies: &[Option<usize>],
+        seed: u64,
+    ) -> anyhow::Result<Vec<PathId>> {
+        self.inner.fork_paths(handle, strategies, seed)
+    }
+
+    fn release_prefix(&mut self, handle: PrefixHandle) -> anyhow::Result<()> {
+        self.inner.release_prefix(handle)
+    }
+
+    fn prefix_bytes(&self, handle: PrefixHandle) -> u64 {
+        self.inner.prefix_bytes(handle)
+    }
+
+    fn prefill_stats(&self) -> PrefillStats {
+        self.inner.prefill_stats()
+    }
+
+    fn draft_step(&mut self, paths: &[PathId]) -> anyhow::Result<Vec<StepOutcome>> {
+        std::thread::sleep(self.step_sleep);
+        self.inner.draft_step(paths)
+    }
+
+    fn score_step(&mut self, paths: &[PathId]) -> anyhow::Result<Vec<u8>> {
+        self.inner.score_step(paths)
+    }
+
+    fn rewrite_step(&mut self, paths: &[PathId]) -> anyhow::Result<Vec<StepOutcome>> {
+        self.inner.rewrite_step(paths)
+    }
+
+    fn accept_step(&mut self, paths: &[PathId]) -> anyhow::Result<()> {
+        self.inner.accept_step(paths)
+    }
+
+    fn target_step(&mut self, paths: &[PathId]) -> anyhow::Result<Vec<StepOutcome>> {
+        std::thread::sleep(self.step_sleep);
+        self.inner.target_step(paths)
+    }
+
+    fn export_lane_state(&mut self, path: PathId) -> anyhow::Result<LaneSnapshot> {
+        self.inner.export_lane_state(path)
+    }
+
+    fn import_lane_state(&mut self, snapshot: LaneSnapshot) -> anyhow::Result<PathId> {
+        self.inner.import_lane_state(snapshot)
+    }
+
+    fn trace(&self, path: PathId) -> &[i32] {
+        self.inner.trace(path)
+    }
+
+    fn close_path(&mut self, path: PathId) -> anyhow::Result<PathStats> {
+        self.inner.close_path(path)
+    }
+
+    fn parse_answer(&self, trace: &[i32]) -> Option<i64> {
+        self.inner.parse_answer(trace)
+    }
+
+    fn clock_secs(&self) -> f64 {
+        self.inner.clock_secs()
+    }
+
+    fn score_histogram(&self) -> ssr::util::stats::Histogram {
+        self.inner.score_histogram()
+    }
+}
+
+fn start_server(cfg: SsrConfig, step_sleep: Duration) -> (String, std::thread::JoinHandle<()>) {
+    let (server, listener) =
+        Server::start("127.0.0.1", 0, cfg, tokenizer::builtin_vocab(), move |_s| {
+            let inner = CalibratedBackend::for_suite("synth-math500", 0xBEEF)?;
+            Ok(Box::new(ThrottledBackend { inner, step_sleep }) as Box<dyn Backend>)
+        })
+        .expect("server start");
+    let addr = server.addr.clone();
+    let srv = std::thread::spawn(move || {
+        let pool = ThreadPool::new(POOL_THREADS);
+        server.serve(listener, &pool).unwrap();
+    });
+    (addr, srv)
+}
+
+fn crowd_expr(i: usize) -> (String, i64) {
+    let (a, b, c) = ((i % 7 + 2) as i64, (i % 9 + 3) as i64, (i % 3 + 2) as i64);
+    (format!("{a}+{b}*{c}"), a + b * c)
+}
+
+/// One blocking request over the selected transport.
+fn wire(s: &mut TcpStream, transport: Transport, line: &str) -> Value {
+    match transport {
+        Transport::Framed => {
+            protocol::write_frame(s, line).unwrap();
+            Value::parse(&protocol::read_frame(s).unwrap()).expect("json reply")
+        }
+        Transport::Jsonl => {
+            s.write_all(line.as_bytes()).unwrap();
+            s.write_all(b"\n").unwrap();
+            s.flush().unwrap();
+            let mut reader = BufReader::new(s.try_clone().unwrap());
+            let mut reply = String::new();
+            reader.read_line(&mut reply).unwrap();
+            Value::parse(&reply).expect("json reply")
+        }
+    }
+}
+
+fn shutdown(addr: &str, transport: Transport, srv: std::thread::JoinHandle<()>) -> Value {
+    let mut s = TcpStream::connect(addr).unwrap();
+    let stats = wire(&mut s, transport, r#"{"op":"stats"}"#);
+    let _ = wire(&mut s, transport, r#"{"op":"shutdown"}"#);
+    srv.join().unwrap();
+    stats
+}
+
+struct FanoutReport {
+    max_streams_observed: u64,
+    ttfv_mean_s: f64,
+    e2e_mean_s: f64,
+    e2e_p99_s: f64,
+    goodput_rps: f64,
+}
+
+/// Phase 1: CROWD streamed ssr solves on CROWD simultaneous framed
+/// connections, with a sampler watching `streams_active` from the side.
+fn streamed_fanout() -> FanoutReport {
+    let mut cfg = SsrConfig::default();
+    cfg.shards = 1;
+    cfg.max_lanes = 64;
+    cfg.qos.enabled = false;
+    cfg.transport = Transport::Framed;
+    let (addr, srv) = start_server(cfg, STEP_COST);
+
+    let done = Arc::new(AtomicBool::new(false));
+    let max_streams = Arc::new(AtomicU64::new(0));
+    let sampler = {
+        let addr = addr.clone();
+        let done = Arc::clone(&done);
+        let max_streams = Arc::clone(&max_streams);
+        std::thread::spawn(move || {
+            let mut s = TcpStream::connect(&addr).unwrap();
+            while !done.load(Ordering::Acquire) {
+                let r = wire(&mut s, Transport::Framed, r#"{"op":"stats"}"#);
+                let live = r.get_i64("streams_active").unwrap() as u64;
+                max_streams.fetch_max(live, Ordering::Relaxed);
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        })
+    };
+
+    let barrier = Arc::new(Barrier::new(CROWD));
+    let clients: Vec<_> = (0..CROWD)
+        .map(|i| {
+            let addr = addr.clone();
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                let (expr, gold) = crowd_expr(i);
+                let line = format!(
+                    r#"{{"op":"solve","expr":"{expr}","method":"ssr","paths":3,"seed":{i},"stream":true,"request_id":{i}}}"#
+                );
+                let mut s = TcpStream::connect(&addr).unwrap();
+                barrier.wait();
+                let t0 = Instant::now();
+                protocol::write_frame(&mut s, &line).unwrap();
+                let mut ttfv: Option<f64> = None;
+                let terminal = loop {
+                    let v =
+                        Value::parse(&protocol::read_frame(&mut s).unwrap()).expect("frame");
+                    match v.get("event") {
+                        Ok(ev) => {
+                            if ev.str().unwrap() == "first_vote" && ttfv.is_none() {
+                                ttfv = Some(t0.elapsed().as_secs_f64());
+                            }
+                        }
+                        Err(_) => break v,
+                    }
+                };
+                let e2e = t0.elapsed().as_secs_f64();
+                assert!(terminal.get("ok").unwrap().bool().unwrap(), "{terminal:?}");
+                assert_eq!(terminal.get_i64("gold").unwrap(), gold, "wrong gold for {expr}");
+                assert_eq!(terminal.get_i64("request_id").unwrap(), i as i64);
+                let ttfv = ttfv.expect("a multi-path stream must emit first_vote");
+                assert!(
+                    ttfv < e2e,
+                    "first_vote ({ttfv:.3}s) must land before the terminal ({e2e:.3}s)"
+                );
+                (ttfv, e2e)
+            })
+        })
+        .collect();
+    let t0 = Instant::now();
+    let timings: Vec<(f64, f64)> = clients.into_iter().map(|c| c.join().unwrap()).collect();
+    let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+    done.store(true, Ordering::Release);
+    sampler.join().unwrap();
+
+    let stats = shutdown(&addr, Transport::Framed, srv);
+    assert_eq!(stats.get_i64("errors").unwrap(), 0);
+    assert_eq!(stats.get_i64("requests").unwrap() as usize, CROWD);
+    assert_eq!(stats.get_i64("streams_active").unwrap(), 0, "streams must retire");
+    assert_eq!(stats.get_i64("first_votes").unwrap() as usize, CROWD);
+    assert!(stats.get_i64("stream_events").unwrap() >= CROWD as i64 * 2);
+    // the stats-plane view of the same ordering guarantee (both
+    // measured from enqueue)
+    assert!(
+        stats.get_f64("time_to_first_vote_mean_s").unwrap()
+            < stats.get_f64("mean_latency_s").unwrap(),
+        "ttfv must sit strictly below end-to-end latency: {stats:?}"
+    );
+
+    let max_streams_observed = max_streams.load(Ordering::Relaxed);
+    let ttfv_mean_s = timings.iter().map(|(t, _)| t).sum::<f64>() / CROWD as f64;
+    let e2e_mean_s = timings.iter().map(|(_, e)| e).sum::<f64>() / CROWD as f64;
+    let mut e2e: Vec<f64> = timings.iter().map(|(_, e)| *e).collect();
+    e2e.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let e2e_p99_s = e2e[((e2e.len() as f64 * 0.99).ceil() as usize).clamp(1, e2e.len()) - 1];
+    FanoutReport {
+        max_streams_observed,
+        ttfv_mean_s,
+        e2e_mean_s,
+        e2e_p99_s,
+        goodput_rps: CROWD as f64 / wall_s,
+    }
+}
+
+/// Phase 2: the same closed-loop blocking workload over each transport.
+fn goodput(transport: Transport) -> (f64, f64) {
+    let mut cfg = SsrConfig::default();
+    cfg.shards = 1;
+    cfg.max_lanes = 16;
+    cfg.qos.enabled = false;
+    cfg.transport = transport;
+    let (addr, srv) = start_server(cfg, FAST_STEP_COST);
+
+    let barrier = Arc::new(Barrier::new(GOODPUT_CONNS));
+    let t0 = Instant::now();
+    let clients: Vec<_> = (0..GOODPUT_CONNS)
+        .map(|c| {
+            let addr = addr.clone();
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                let mut s = TcpStream::connect(&addr).unwrap();
+                barrier.wait();
+                let mut lats = Vec::new();
+                for k in 0..GOODPUT_REQS {
+                    let i = c * GOODPUT_REQS + k;
+                    let (expr, gold) = crowd_expr(i);
+                    let line = format!(
+                        r#"{{"op":"solve","expr":"{expr}","method":"baseline","seed":{i}}}"#
+                    );
+                    let t = Instant::now();
+                    let r = wire(&mut s, transport, &line);
+                    lats.push(t.elapsed().as_secs_f64());
+                    assert!(r.get("ok").unwrap().bool().unwrap(), "{r:?}");
+                    assert_eq!(r.get_i64("gold").unwrap(), gold);
+                }
+                lats
+            })
+        })
+        .collect();
+    let mut lats: Vec<f64> =
+        clients.into_iter().flat_map(|c| c.join().unwrap()).collect();
+    let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+    let stats = shutdown(&addr, transport, srv);
+    assert_eq!(stats.get_i64("errors").unwrap(), 0);
+    assert_eq!(stats.get_i64("requests").unwrap() as usize, GOODPUT_CONNS * GOODPUT_REQS);
+    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p99 = lats[((lats.len() as f64 * 0.99).ceil() as usize).clamp(1, lats.len()) - 1];
+    ((GOODPUT_CONNS * GOODPUT_REQS) as f64 / wall_s, p99)
+}
+
+fn main() -> anyhow::Result<()> {
+    let t_start = Instant::now();
+    println!(
+        "## streaming front end: {CROWD} streamed conns vs a {POOL_THREADS}-thread pool \
+         ({}ms steps), then framed-vs-jsonl goodput ({GOODPUT_CONNS} conns x {GOODPUT_REQS} reqs, \
+         {}ms steps)",
+        STEP_COST.as_millis(),
+        FAST_STEP_COST.as_millis()
+    );
+
+    let fan = streamed_fanout();
+    println!(
+        "  fan-out: max {} streams in flight (pool width {POOL_THREADS}), \
+         ttfv mean {:.3}s, e2e mean {:.3}s, p99 {:.3}s, goodput {:.2}/s",
+        fan.max_streams_observed, fan.ttfv_mean_s, fan.e2e_mean_s, fan.e2e_p99_s, fan.goodput_rps
+    );
+    // ISSUE acceptance: the event loop sustains >= 4x the connection
+    // count the thread-per-connection front end was capped at
+    assert!(
+        fan.max_streams_observed >= 4 * POOL_THREADS as u64,
+        "only {} concurrent streams observed; the event loop must hold >= {}",
+        fan.max_streams_observed,
+        4 * POOL_THREADS
+    );
+    assert!(fan.ttfv_mean_s < fan.e2e_mean_s);
+
+    let (framed_rps, framed_p99) = goodput(Transport::Framed);
+    let (jsonl_rps, jsonl_p99) = goodput(Transport::Jsonl);
+    println!(
+        "  goodput: framed {framed_rps:.2}/s (p99 {framed_p99:.3}s), \
+         jsonl {jsonl_rps:.2}/s (p99 {jsonl_p99:.3}s)"
+    );
+
+    let summary = json::obj(vec![
+        ("bench", json::s("streaming_frontend")),
+        ("crowd", json::i(CROWD as i64)),
+        ("pool_threads", json::i(POOL_THREADS as i64)),
+        ("max_streams_in_flight", json::i(fan.max_streams_observed as i64)),
+        // the tracker's regression gate keys on *throughput* scalars
+        ("streamed_goodput_throughput_rps", json::n(fan.goodput_rps)),
+        ("framed_goodput_throughput_rps", json::n(framed_rps)),
+        ("jsonl_goodput_throughput_rps", json::n(jsonl_rps)),
+        ("framed_p99_s", json::n(framed_p99)),
+        ("jsonl_p99_s", json::n(jsonl_p99)),
+        ("time_to_first_vote_mean_s", json::n(fan.ttfv_mean_s)),
+        ("streamed_e2e_mean_s", json::n(fan.e2e_mean_s)),
+        ("streamed_e2e_p99_s", json::n(fan.e2e_p99_s)),
+        ("wall_s", json::n(t_start.elapsed().as_secs_f64())),
+    ]);
+    println!("\nBENCH_JSON {}", summary.print());
+    println!(
+        "[bench streaming_frontend] completed in {:.2}s",
+        t_start.elapsed().as_secs_f64()
+    );
+    Ok(())
+}

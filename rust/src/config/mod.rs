@@ -102,6 +102,36 @@ impl PlacePolicy {
     }
 }
 
+/// Wire transport the serving front end speaks (PROTOCOL.md). Both
+/// carry the same JSON payloads; only the framing differs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Transport {
+    /// newline-delimited JSON — the legacy compat mode (and default
+    /// for one release): one request per line, legacy error shapes
+    #[default]
+    Jsonl,
+    /// 4-byte big-endian length prefix + JSON payload: multiplexing,
+    /// streaming, and the structured error envelope
+    Framed,
+}
+
+impl Transport {
+    pub fn parse(s: &str) -> Result<Transport> {
+        Ok(match s {
+            "jsonl" | "json-lines" => Transport::Jsonl,
+            "framed" => Transport::Framed,
+            _ => bail!("unknown transport `{s}` (framed|jsonl)"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Transport::Jsonl => "jsonl",
+            Transport::Framed => "framed",
+        }
+    }
+}
+
 /// Per-run speculation-depth policy (DESIGN.md §15). Depth is how many
 /// draft/score micro-cycles a lane may run between engine barriers.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -613,6 +643,13 @@ pub struct SsrConfig {
     /// opens a socket and never completes a line cannot pin a handler
     /// thread forever (0 = no timeout)
     pub conn_idle_timeout_ms: u64,
+    /// wire transport the server speaks (`--transport framed|jsonl`,
+    /// PROTOCOL.md); jsonl is the compat default for one release
+    pub transport: Transport,
+    /// per-streamed-solve event ring capacity (`--stream-buffer`): a
+    /// consumer more than this many step boundaries behind loses the
+    /// oldest events (counted in `stream_drops`), never shard time
+    pub stream_buffer: usize,
     /// overload protection: admission control, priority QoS, bounded
     /// backpressure, and graceful shedding (DESIGN.md §14)
     pub qos: QosCfg,
@@ -647,6 +684,8 @@ impl Default for SsrConfig {
             recover_retries: 2,
             quarantine_cap: 1024,
             conn_idle_timeout_ms: 30_000,
+            transport: Transport::default(),
+            stream_buffer: 64,
             qos: QosCfg::default(),
             fault: FaultSpec::default(),
         }
@@ -688,6 +727,8 @@ impl SsrConfig {
                 "recover_retries" => self.recover_retries = val.i64()? as u32,
                 "quarantine_cap" => self.quarantine_cap = val.usize()?,
                 "conn_idle_timeout_ms" => self.conn_idle_timeout_ms = val.i64()? as u64,
+                "transport" => self.transport = Transport::parse(val.str()?)?,
+                "stream_buffer" => self.stream_buffer = val.usize()?,
                 "qos" => self.qos.apply_json(val)?,
                 "fault" => self.fault.apply_json(val)?,
                 other => bail!("unknown config key `{other}`"),
@@ -760,6 +801,10 @@ impl SsrConfig {
         self.quarantine_cap = args.opt_usize("quarantine-cap", self.quarantine_cap)?;
         self.conn_idle_timeout_ms =
             args.opt_u64("conn-idle-timeout-ms", self.conn_idle_timeout_ms)?;
+        if let Some(s) = args.opt("transport") {
+            self.transport = Transport::parse(s)?;
+        }
+        self.stream_buffer = args.opt_usize("stream-buffer", self.stream_buffer)?;
         if let Some(s) = args.opt("qos") {
             self.qos.enabled = parse_bool(s)?;
         }
@@ -885,6 +930,9 @@ impl SsrConfig {
                 "conn_idle_timeout_ms must be <= 86400000 (one day), got {}",
                 self.conn_idle_timeout_ms
             );
+        }
+        if self.stream_buffer == 0 || self.stream_buffer > 4096 {
+            bail!("stream_buffer must be in 1..=4096, got {}", self.stream_buffer);
         }
         let q = &self.qos;
         for (name, x) in [
@@ -1469,5 +1517,37 @@ mod tests {
         c.apply_args(&mut args).unwrap();
         assert_eq!(c.conn_idle_timeout_ms, 1000);
         assert_eq!(c.quarantine_cap, 8);
+    }
+
+    #[test]
+    fn transport_and_stream_buffer_knobs() {
+        let c = SsrConfig::default();
+        assert_eq!(c.transport, Transport::Jsonl, "jsonl stays the compat default");
+        assert_eq!(c.stream_buffer, 64);
+        assert_eq!(Transport::parse("framed").unwrap(), Transport::Framed);
+        assert_eq!(Transport::parse("json-lines").unwrap(), Transport::Jsonl);
+        assert!(Transport::parse("carrier-pigeon").is_err());
+        assert_eq!(Transport::Framed.name(), "framed");
+
+        let mut c = SsrConfig::default();
+        let v = Value::parse(r#"{"transport": "framed", "stream_buffer": 8}"#).unwrap();
+        c.apply_json(&v).unwrap();
+        assert_eq!(c.transport, Transport::Framed);
+        assert_eq!(c.stream_buffer, 8);
+
+        let mut c = SsrConfig::default();
+        assert!(c.apply_json(&Value::parse(r#"{"stream_buffer": 0}"#).unwrap()).is_err());
+        let mut c = SsrConfig::default();
+        assert!(c.apply_json(&Value::parse(r#"{"stream_buffer": 5000}"#).unwrap()).is_err());
+
+        let argv: Vec<String> = ["serve", "--transport", "framed", "--stream-buffer", "1"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let mut args = Args::parse(&argv).unwrap();
+        let mut c = SsrConfig::default();
+        c.apply_args(&mut args).unwrap();
+        assert_eq!(c.transport, Transport::Framed);
+        assert_eq!(c.stream_buffer, 1);
     }
 }

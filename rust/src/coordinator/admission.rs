@@ -33,6 +33,7 @@
 //! ([`AdmissionController::admit`]) are thin wrappers.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -179,6 +180,12 @@ pub struct AdmissionController {
     lane_capacity: usize,
     started: Instant,
     state: Arc<Mutex<State>>,
+    /// permits whose requester vanished before the terminal reply
+    /// (closed connection or slow-consumer disconnect, DESIGN.md §16).
+    /// The permit is still held until the run reaches its terminal
+    /// reply — the lanes stay occupied either way — so this counts
+    /// capacity spent on answers nobody read, not an accounting leak.
+    disconnects: AtomicU64,
 }
 
 /// RAII admission slot: dropping it releases the class slot and the
@@ -246,7 +253,20 @@ impl AdmissionController {
                 drain_gap_s: [0.0; 3],
                 last_finish_s: [None; 3],
             })),
+            disconnects: AtomicU64::new(0),
         }
+    }
+
+    /// A request's connection died before its terminal reply (the
+    /// server releases the permit only once the run retires — see the
+    /// struct field doc). Feeds the `stream_disconnects` stat.
+    pub fn note_disconnect(&self) {
+        self.disconnects.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Permits released after their requester disconnected.
+    pub fn disconnects(&self) -> u64 {
+        self.disconnects.load(Ordering::Relaxed)
     }
 
     /// Max lanes one tenant may hold in flight.
@@ -516,6 +536,21 @@ mod tests {
         assert!(st.buckets.len() <= 4, "bucket table must stay bounded");
         drop(st);
         drop(permits);
+    }
+
+    #[test]
+    fn disconnect_accounting_is_independent_of_release() {
+        let ac = AdmissionController::new(cfg(), 64);
+        assert_eq!(ac.disconnects(), 0);
+        let p = ac.admit_at(Some("t"), QosClass::Interactive, 1, 0.0, 0.0).unwrap();
+        // requester vanished mid-solve: counted, but the permit (and
+        // its class slot) is still held until the run retires
+        ac.note_disconnect();
+        assert_eq!(ac.disconnects(), 1);
+        assert_eq!(ac.in_system()[QosClass::Interactive.idx()], 1);
+        drop(p);
+        assert_eq!(ac.in_system()[QosClass::Interactive.idx()], 0);
+        assert_eq!(ac.disconnects(), 1, "release does not touch the counter");
     }
 
     #[test]

@@ -122,6 +122,39 @@ impl RunResult {
     }
 }
 
+/// Step-boundary snapshot of one in-flight run — what a streamed
+/// `progress` event carries (DESIGN.md §16). Everything here is
+/// derived from the placement-invariant [`RunCore`], so identical
+/// requests stream identical snapshots at identical step counts
+/// regardless of shard placement or migration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RunProgress {
+    /// steps taken by the furthest lane so far
+    pub steps: u64,
+    pub lanes: usize,
+    /// lanes that have terminated with a parsed answer (votes cast)
+    pub finished: usize,
+    /// current plurality answer over the finished lanes (ties break to
+    /// the smallest answer — deterministic); None before any vote
+    pub vote: Option<i64>,
+    /// live acceptance EWMA (None until the run speculates)
+    pub gamma: Option<f64>,
+    /// current speculation window depth
+    pub spec_depth: usize,
+}
+
+/// Plurality answer over a finished-vote tally; ties break to the
+/// smallest answer (BTreeMap iteration order + strict `>`).
+fn plurality(tally: &BTreeMap<i64, usize>) -> Option<i64> {
+    let mut best: Option<(i64, usize)> = None;
+    for (&a, &c) in tally {
+        if best.map_or(true, |(_, bc)| c > bc) {
+            best = Some((a, c));
+        }
+    }
+    best.map(|(a, _)| a)
+}
+
 /// Placement-invariant decision state of one lane: what the run has
 /// decided about this path so far, with NO backend handle in it — the
 /// half of a lane that travels verbatim when a run migrates between
@@ -545,6 +578,22 @@ impl ProblemRun {
     /// scheduler's anti-ping-pong budget, carried across shards.
     pub fn class_moves(&self) -> u32 {
         self.core.spec.class_moves
+    }
+
+    /// The per-run event tap (DESIGN.md §16): a read-only snapshot of
+    /// the run's observable state at a step boundary, for streaming
+    /// `progress`/`first_vote` frames. Pure observation over the same
+    /// decision core the stop rules read — it can never steer the run,
+    /// so streaming cannot violate the determinism contract.
+    pub fn progress(&self) -> RunProgress {
+        RunProgress {
+            steps: self.core.lanes.iter().map(|l| l.steps_taken).max().unwrap_or(0) as u64,
+            lanes: self.core.lanes.len(),
+            finished: self.core.finished_answers.values().sum(),
+            vote: plurality(&self.core.finished_answers),
+            gamma: self.core.spec.gamma,
+            spec_depth: self.core.spec.depth,
+        }
     }
 
     pub fn note_class_move(&mut self) {

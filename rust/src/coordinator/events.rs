@@ -1,0 +1,194 @@
+//! Stream-event plumbing between shard threads and the serving front
+//! end (DESIGN.md §16, PROTOCOL.md).
+//!
+//! A streamed solve (`"stream":true`) subscribes its connection to the
+//! run's step-boundary events. The shard thread is the producer and
+//! must NEVER block on a slow reader, so the channel is a bounded
+//! ring with drop-oldest backpressure: [`EventTap::push_batch`] is
+//! non-blocking, overflow evicts the oldest queued event and counts it
+//! (`stream_drops` in `{"op":"stats"}`), and the terminal `result`
+//! frame never travels through the tap at all — it rides the reply
+//! channel, so backpressure can drop progress telemetry but never the
+//! answer.
+//!
+//! [`ReplySink`] bundles the terminal reply sender with the optional
+//! tap so the scheduler threads one handle through queueing, stealing,
+//! migration and crash re-admission — a migrated or recovered run keeps
+//! streaming to its original connection because the tap is an `Arc`
+//! travelling inside its [`RunTicket`](super::scheduler) clone.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::util::json::Value;
+use crate::util::sync::lock_ok;
+
+/// Bounded drop-oldest event buffer for one streamed solve. Cheap to
+/// clone (shared state); producers and the consumer never block each
+/// other beyond a short critical section.
+#[derive(Clone)]
+pub struct EventTap {
+    state: Arc<TapState>,
+}
+
+struct TapState {
+    buf: Mutex<VecDeque<Value>>,
+    /// ring capacity (`--stream-buffer`); overflow evicts the oldest
+    cap: usize,
+    /// events evicted by overflow since the stream started
+    dropped: AtomicU64,
+    /// latched by the first `first_vote` emission (exactly-once)
+    first_vote: AtomicBool,
+    /// client `request_id`, stamped onto every queued event
+    request_id: Option<Value>,
+}
+
+impl EventTap {
+    pub fn new(cap: usize, request_id: Option<Value>) -> EventTap {
+        EventTap {
+            state: Arc::new(TapState {
+                buf: Mutex::new(VecDeque::new()),
+                cap: cap.max(1),
+                dropped: AtomicU64::new(0),
+                first_vote: AtomicBool::new(false),
+                request_id,
+            }),
+        }
+    }
+
+    /// Queue a step boundary's events atomically (one lock: a consumer
+    /// cannot observe half a boundary). Never blocks; when the batch
+    /// overflows the ring the OLDEST events are evicted — fresh
+    /// telemetry always wins. Returns how many events were dropped.
+    pub fn push_batch(&self, events: Vec<Value>) -> u64 {
+        let mut dropped = 0u64;
+        let mut buf = lock_ok(&self.state.buf);
+        for mut ev in events {
+            if let (Some(id), Value::Obj(map)) = (&self.state.request_id, &mut ev) {
+                map.insert("request_id".into(), id.clone());
+            }
+            while buf.len() >= self.state.cap {
+                buf.pop_front();
+                dropped += 1;
+            }
+            buf.push_back(ev);
+        }
+        drop(buf);
+        if dropped > 0 {
+            self.state.dropped.fetch_add(dropped, Ordering::Relaxed);
+        }
+        dropped
+    }
+
+    /// Take everything queued (consumer side; the server's event loop).
+    pub fn drain(&self) -> Vec<Value> {
+        lock_ok(&self.state.buf).drain(..).collect()
+    }
+
+    /// Total events evicted by backpressure since the stream started.
+    pub fn dropped(&self) -> u64 {
+        self.state.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Latch the first-vote emission; true exactly once per run.
+    pub fn mark_first_vote(&self) -> bool {
+        !self.state.first_vote.swap(true, Ordering::Relaxed)
+    }
+}
+
+/// The reply handle one solve carries through the scheduler: the
+/// terminal reply sender plus the optional stream tap. Replaces the
+/// bare `mpsc::Sender` so event routing survives every re-homing path
+/// (steal, migration, crash re-admission) without extra plumbing.
+#[derive(Clone)]
+pub struct ReplySink {
+    tx: mpsc::Sender<Result<Value>>,
+    pub events: Option<EventTap>,
+}
+
+impl ReplySink {
+    pub fn with_events(tx: mpsc::Sender<Result<Value>>, events: Option<EventTap>) -> ReplySink {
+        ReplySink { tx, events }
+    }
+
+    /// Forward the terminal reply; same contract as `mpsc::Sender::send`
+    /// (an error only means the requester is gone — callers ignore it).
+    pub fn send(
+        &self,
+        v: Result<Value>,
+    ) -> std::result::Result<(), mpsc::SendError<Result<Value>>> {
+        self.tx.send(v)
+    }
+}
+
+impl From<mpsc::Sender<Result<Value>>> for ReplySink {
+    fn from(tx: mpsc::Sender<Result<Value>>) -> ReplySink {
+        ReplySink { tx, events: None }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn ev(step: i64) -> Value {
+        json::obj(vec![("event", json::s("progress")), ("steps", json::i(step))])
+    }
+
+    #[test]
+    fn drop_oldest_under_overflow() {
+        let tap = EventTap::new(2, None);
+        assert_eq!(tap.push_batch(vec![ev(1), ev(2)]), 0);
+        // cap 2: pushing a third evicts the oldest
+        assert_eq!(tap.push_batch(vec![ev(3)]), 1);
+        let got = tap.drain();
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].get_i64("steps").unwrap(), 2);
+        assert_eq!(got[1].get_i64("steps").unwrap(), 3);
+        assert_eq!(tap.dropped(), 1);
+    }
+
+    #[test]
+    fn batch_overflow_drops_within_one_lock() {
+        // cap 1, batch of 2: the consumer can never observe the first
+        // event — it is evicted before the lock is released. This is
+        // the deterministic slow-consumer case the protocol tests use.
+        let tap = EventTap::new(1, None);
+        assert_eq!(tap.push_batch(vec![ev(1), ev(2)]), 1);
+        let got = tap.drain();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].get_i64("steps").unwrap(), 2);
+    }
+
+    #[test]
+    fn request_id_is_stamped_on_every_event() {
+        let tap = EventTap::new(8, Some(json::s("req-7")));
+        tap.push_batch(vec![ev(1), ev(2)]);
+        for e in tap.drain() {
+            assert_eq!(e.get_str("request_id").unwrap(), "req-7");
+        }
+    }
+
+    #[test]
+    fn first_vote_latches_once() {
+        let tap = EventTap::new(8, None);
+        assert!(tap.mark_first_vote());
+        assert!(!tap.mark_first_vote());
+        let clone = tap.clone();
+        assert!(!clone.mark_first_vote(), "latch is shared state");
+    }
+
+    #[test]
+    fn reply_sink_forwards_and_survives_clone() {
+        let (tx, rx) = mpsc::channel();
+        let sink: ReplySink = tx.into();
+        assert!(sink.events.is_none());
+        let clone = sink.clone();
+        clone.send(Ok(json::s("hi"))).unwrap();
+        assert_eq!(rx.recv().unwrap().unwrap().str().unwrap(), "hi");
+    }
+}

@@ -164,6 +164,19 @@ pub struct Metrics {
     pub tenant_requests: BTreeMap<String, u64>,
     /// refused intake per tenant (cardinality-bounded)
     pub tenant_rejected: BTreeMap<String, u64>,
+    /// streaming front-end gauges (DESIGN.md §16)
+    /// streamed solves currently between admission and terminal frame
+    pub streams_active: u64,
+    /// step-boundary events queued to stream taps (progress + first_vote)
+    pub stream_events: u64,
+    /// events evicted by drop-oldest backpressure (slow readers)
+    pub stream_drops: u64,
+    /// requesters that vanished before their terminal frame (closed or
+    /// slow-consumer-disconnected connections; permits release late)
+    pub stream_disconnects: u64,
+    /// seconds from enqueue to the first lane finishing with a parsed
+    /// answer, per streamed run — time-to-first-useful-answer
+    time_to_first_vote: Reservoir,
 }
 
 impl Metrics {
@@ -234,7 +247,31 @@ impl Metrics {
             class_requests: [0; 3],
             tenant_requests: BTreeMap::new(),
             tenant_rejected: BTreeMap::new(),
+            streams_active: 0,
+            stream_events: 0,
+            stream_drops: 0,
+            stream_disconnects: 0,
+            time_to_first_vote: Reservoir::default(),
         }
+    }
+
+    /// One streamed run produced its first finished-lane vote,
+    /// `elapsed_s` after enqueue (the `first_vote` stream event).
+    pub fn record_first_vote(&mut self, elapsed_s: f64) {
+        self.time_to_first_vote.push(elapsed_s);
+    }
+
+    pub fn ttfv_mean(&self) -> f64 {
+        self.time_to_first_vote.mean()
+    }
+
+    pub fn ttfv_p99(&self) -> f64 {
+        self.time_to_first_vote.percentile(99.0)
+    }
+
+    /// First-vote observations recorded (reservoir `seen`, not capped).
+    pub fn first_votes(&self) -> u64 {
+        self.time_to_first_vote.seen()
     }
 
     /// Seed the per-shard gauges for the spawn-time shard set (hot-added
@@ -672,6 +709,13 @@ impl Metrics {
             ("best_effort_p99_s", n(self.class_p99(QosClass::BestEffort))),
             ("tenant_requests", tenant_obj(&self.tenant_requests)),
             ("tenant_rejected", tenant_obj(&self.tenant_rejected)),
+            ("streams_active", i(self.streams_active as i64)),
+            ("stream_events", i(self.stream_events as i64)),
+            ("stream_drops", i(self.stream_drops as i64)),
+            ("stream_disconnects", i(self.stream_disconnects as i64)),
+            ("first_votes", i(self.first_votes() as i64)),
+            ("time_to_first_vote_mean_s", n(self.ttfv_mean())),
+            ("time_to_first_vote_p99_s", n(self.ttfv_p99())),
         ])
     }
 }
@@ -768,6 +812,29 @@ mod tests {
         assert_eq!(v.get_i64("prefix_hits").unwrap(), 3);
         assert_eq!(v.get_i64("prefix_misses").unwrap(), 1);
         assert!((v.get_f64("prefix_hit_rate").unwrap() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stream_gauges_and_first_vote_reservoir() {
+        let mut m = Metrics::new();
+        assert_eq!(m.ttfv_mean(), 0.0);
+        m.streams_active = 2;
+        m.stream_events += 7;
+        m.stream_drops += 3;
+        m.stream_disconnects += 1;
+        m.record_first_vote(0.2);
+        m.record_first_vote(0.4);
+        assert_eq!(m.first_votes(), 2);
+        assert!((m.ttfv_mean() - 0.3).abs() < 1e-12);
+        let v = m.summary_json(1.0);
+        assert_eq!(v.get_i64("streams_active").unwrap(), 2);
+        assert_eq!(v.get_i64("stream_events").unwrap(), 7);
+        assert_eq!(v.get_i64("stream_drops").unwrap(), 3);
+        assert_eq!(v.get_i64("stream_disconnects").unwrap(), 1);
+        assert_eq!(v.get_i64("first_votes").unwrap(), 2);
+        assert!((v.get_f64("time_to_first_vote_mean_s").unwrap() - 0.3).abs() < 1e-12);
+        // p99 interpolates between the two samples: 0.2 + 0.99 * 0.2
+        assert!((v.get_f64("time_to_first_vote_p99_s").unwrap() - 0.398).abs() < 1e-12);
     }
 
     #[test]

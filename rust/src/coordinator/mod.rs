@@ -23,17 +23,25 @@
 //! * [`prefix`] — prefix reuse: the single-backend `PrefixCache` and
 //!   the pool's `SharedPrefixTier` (one logical cache, per-shard handle
 //!   maps); repeated problems skip prompt prefill entirely
-//! * [`server`] — TCP front-end feeding the pool
+//! * [`server`] — nonblocking TCP front-end feeding the pool: framed or
+//!   JSON-lines transport, request multiplexing, and streamed progress
+//!   (PROTOCOL.md, DESIGN.md §16)
+//! * [`protocol`] — the versioned wire protocol: frame codec, error
+//!   envelope, and the machine-readable error-code enum
+//! * [`events`] — bounded drop-oldest stream taps routing step-boundary
+//!   events from shard threads to connections ([`ReplySink`])
 //! * [`metrics`] — latency/throughput/occupancy/shard instrumentation
 
 pub mod admission;
 pub mod aggregation;
 pub mod autoscaler;
 pub mod engine;
+pub mod events;
 pub mod flops;
 pub mod metrics;
 pub mod pool;
 pub mod prefix;
+pub mod protocol;
 pub mod scheduler;
 pub mod server;
 pub mod spm;
@@ -41,6 +49,7 @@ pub mod spm;
 pub use admission::{AdmissionController, QosClass};
 pub use autoscaler::Autoscaler;
 pub use engine::{DetachedRun, Engine, Method, ProblemRun, RunResult};
+pub use events::{EventTap, ReplySink};
 pub use pool::{BackendPool, PoolHandle};
 pub use prefix::{PrefixCache, SharedPrefixTier};
 pub use scheduler::{Scheduler, SchedulerHandle, SolveRequest};

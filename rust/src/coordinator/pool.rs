@@ -1259,7 +1259,7 @@ mod tests {
                 seed,
                 deadline_ms: 0,
                 class: QosClass::default(),
-                reply: rtx,
+                reply: rtx.into(),
             })
             .unwrap();
         rrx
@@ -1495,7 +1495,7 @@ mod tests {
                     seed,
                     deadline_ms: 0,
                     class: QosClass::default(),
-                    reply: rtx,
+                    reply: rtx.into(),
                 })
                 .unwrap();
             rrx

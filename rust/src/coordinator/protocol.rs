@@ -1,0 +1,344 @@
+//! The versioned wire protocol the serving front end speaks
+//! (PROTOCOL.md is the normative schema reference; DESIGN.md §16 the
+//! design notes). This module owns the pieces both the server and its
+//! clients (tests, benches) need:
+//!
+//! * the protocol version and feature list the `hello` op advertises,
+//! * the length-delimited frame codec (`--transport framed`): 4-byte
+//!   big-endian payload length + UTF-8 JSON payload, bounded by
+//!   [`MAX_FRAME_BYTES`] on both sides,
+//! * the machine-readable [`ErrorCode`] enum and the [`WireError`]
+//!   envelope, rendered per transport — the framed envelope is
+//!   `{"ok":false,"error":{"code":...,"message":...}}`; jsonl keeps
+//!   the legacy top-level shapes for one release (`"error":<string>`,
+//!   and `"err":"overloaded"` with `reason`/`retry_after_ms`) with the
+//!   `code` field added alongside so clients can migrate early.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::Transport;
+use crate::util::json::{self, Value};
+
+/// Wire protocol version, advertised by `{"op":"hello"}` and included
+/// in `{"op":"stats"}`. Bumped only on breaking changes; additive
+/// fields and events do NOT bump it (PROTOCOL.md versioning policy).
+pub const PROTO_VERSION: i64 = 1;
+
+/// Capabilities advertised by the `hello` handshake.
+pub const FEATURES: [&str; 2] = ["streaming", "framed"];
+
+/// Hard cap on one request/reply payload, both transports: a framed
+/// header declaring more is answered with an `oversized` error and the
+/// payload is discarded without buffering it; a JSON line past this is
+/// drained the same way (the historical `MAX_LINE_BYTES`).
+pub const MAX_FRAME_BYTES: usize = 1 << 20;
+
+/// Machine-readable error class, carried as `code` on every error
+/// reply (framed: inside the `error` envelope; jsonl: a top-level
+/// field next to the legacy shape).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// unparseable JSON, bad field types, unknown method, bad values
+    Malformed,
+    /// request line/frame exceeded [`MAX_FRAME_BYTES`]
+    Oversized,
+    /// connection idle past `--conn-idle-timeout-ms` (then closed)
+    IdleTimeout,
+    /// intake refused by admission control; `reason` and
+    /// `retry_after_ms` say why and when to retry (DESIGN.md §14)
+    Overloaded,
+    /// poison run refused after exhausting its crash-retry budget
+    Quarantined,
+    /// unknown `op` value (the handshake lists what this server speaks)
+    UnsupportedOp,
+    /// caught panic or non-classifiable scheduler failure
+    Internal,
+}
+
+impl ErrorCode {
+    pub const ALL: [ErrorCode; 7] = [
+        ErrorCode::Malformed,
+        ErrorCode::Oversized,
+        ErrorCode::IdleTimeout,
+        ErrorCode::Overloaded,
+        ErrorCode::Quarantined,
+        ErrorCode::UnsupportedOp,
+        ErrorCode::Internal,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ErrorCode::Malformed => "malformed",
+            ErrorCode::Oversized => "oversized",
+            ErrorCode::IdleTimeout => "idle_timeout",
+            ErrorCode::Overloaded => "overloaded",
+            ErrorCode::Quarantined => "quarantined",
+            ErrorCode::UnsupportedOp => "unsupported_op",
+            ErrorCode::Internal => "internal",
+        }
+    }
+
+    /// Classify a scheduler/pool error message bubbling up the reply
+    /// channel. Quarantine refusals are the one machine-actionable
+    /// case (the client must change its request, not retry it);
+    /// everything else from that path is an internal serving failure.
+    pub fn classify(msg: &str) -> ErrorCode {
+        if msg.contains("quarantined") {
+            ErrorCode::Quarantined
+        } else {
+            ErrorCode::Internal
+        }
+    }
+}
+
+/// A structured error reply, transport-agnostic until rendered.
+#[derive(Debug, Clone)]
+pub struct WireError {
+    pub code: ErrorCode,
+    pub message: String,
+    /// overload backoff hint (DESIGN.md §14); `overloaded` only
+    pub retry_after_ms: Option<u64>,
+    /// which intake gate refused (`rate_limited` | `queue_full` |
+    /// `lane_quota` | `shed`); `overloaded` only
+    pub reason: Option<String>,
+}
+
+impl WireError {
+    pub fn new(code: ErrorCode, message: impl Into<String>) -> WireError {
+        WireError { code, message: message.into(), retry_after_ms: None, reason: None }
+    }
+
+    /// An admission-control refusal with its gate and backoff hint.
+    pub fn overloaded(reason: &str, retry_after_ms: u64) -> WireError {
+        WireError {
+            code: ErrorCode::Overloaded,
+            message: format!("overloaded ({reason})"),
+            retry_after_ms: Some(retry_after_ms),
+            reason: Some(reason.to_string()),
+        }
+    }
+
+    /// Classify an error that came up the scheduler reply channel.
+    pub fn from_scheduler(e: &anyhow::Error) -> WireError {
+        let msg = format!("{e:#}");
+        WireError::new(ErrorCode::classify(&msg), msg)
+    }
+
+    /// Render the reply object for `transport`. Framed always uses the
+    /// envelope; jsonl reproduces the legacy shapes exactly (plus the
+    /// additive `code` field) so pre-PR-9 clients keep parsing.
+    pub fn render(&self, transport: Transport) -> Value {
+        match transport {
+            Transport::Framed => {
+                let mut e = vec![
+                    ("code", json::s(self.code.name())),
+                    ("message", json::s(self.message.clone())),
+                ];
+                if let Some(r) = &self.reason {
+                    e.push(("reason", json::s(r.clone())));
+                }
+                if let Some(ms) = self.retry_after_ms {
+                    e.push(("retry_after_ms", json::i(ms as i64)));
+                }
+                json::obj(vec![("ok", Value::Bool(false)), ("error", json::obj(e))])
+            }
+            Transport::Jsonl => {
+                if self.code == ErrorCode::Overloaded {
+                    json::obj(vec![
+                        ("ok", Value::Bool(false)),
+                        ("err", json::s("overloaded")),
+                        ("code", json::s(self.code.name())),
+                        ("reason", json::s(self.reason.clone().unwrap_or_default())),
+                        ("retry_after_ms", json::i(self.retry_after_ms.unwrap_or(0) as i64)),
+                    ])
+                } else {
+                    json::obj(vec![
+                        ("ok", Value::Bool(false)),
+                        ("error", json::s(self.message.clone())),
+                        ("code", json::s(self.code.name())),
+                    ])
+                }
+            }
+        }
+    }
+}
+
+/// The `{"op":"hello"}` handshake reply.
+pub fn hello_reply() -> Value {
+    json::obj(vec![
+        ("ok", Value::Bool(true)),
+        ("proto", json::i(PROTO_VERSION)),
+        ("features", json::arr(FEATURES.iter().map(|f| json::s(*f)).collect())),
+    ])
+}
+
+/// Length-prefix a payload. Fails (rather than truncates) on payloads
+/// past [`MAX_FRAME_BYTES`] — the server never produces one; a client
+/// asking us to is a bug at the call site.
+pub fn encode_frame(payload: &[u8]) -> Result<Vec<u8>> {
+    if payload.len() > MAX_FRAME_BYTES {
+        bail!("frame payload of {} bytes exceeds {MAX_FRAME_BYTES}", payload.len());
+    }
+    let mut out = Vec::with_capacity(4 + payload.len());
+    out.extend_from_slice(&(payload.len() as u32).to_be_bytes());
+    out.extend_from_slice(payload);
+    Ok(out)
+}
+
+/// One step of incremental frame decoding over a connection's read
+/// buffer (the server's event loop calls this until `NeedMore`).
+#[derive(Debug, PartialEq, Eq)]
+pub enum FrameDecode {
+    /// header or payload incomplete — read more bytes first
+    NeedMore,
+    /// one complete payload, drained from the buffer
+    Frame(Vec<u8>),
+    /// header declared more than [`MAX_FRAME_BYTES`]: the header was
+    /// drained; the caller must discard this many payload bytes as
+    /// they arrive (keeping the connection alive), then resume decoding
+    Oversized(usize),
+}
+
+/// Try to decode one frame from the front of `buf`, draining consumed
+/// bytes. Declared-oversized frames consume only the header — see
+/// [`FrameDecode::Oversized`].
+pub fn decode_frame(buf: &mut Vec<u8>) -> FrameDecode {
+    if buf.len() < 4 {
+        return FrameDecode::NeedMore;
+    }
+    let len = u32::from_be_bytes([buf[0], buf[1], buf[2], buf[3]]) as usize;
+    if len > MAX_FRAME_BYTES {
+        buf.drain(..4);
+        return FrameDecode::Oversized(len);
+    }
+    if buf.len() < 4 + len {
+        return FrameDecode::NeedMore;
+    }
+    let payload = buf[4..4 + len].to_vec();
+    buf.drain(..4 + len);
+    FrameDecode::Frame(payload)
+}
+
+/// Client-side helper (tests, benches): write one framed request.
+pub fn write_frame(w: &mut impl Write, payload: &str) -> Result<()> {
+    w.write_all(&encode_frame(payload.as_bytes())?)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Client-side helper (tests, benches): read one framed reply.
+pub fn read_frame(r: &mut impl Read) -> Result<String> {
+    let mut hdr = [0u8; 4];
+    r.read_exact(&mut hdr).context("reading frame header")?;
+    let len = u32::from_be_bytes(hdr) as usize;
+    if len > MAX_FRAME_BYTES {
+        bail!("peer declared a {len}-byte frame (cap {MAX_FRAME_BYTES})");
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload).context("reading frame payload")?;
+    String::from_utf8(payload).context("frame payload is not valid UTF-8")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip_through_the_incremental_decoder() {
+        let a = encode_frame(br#"{"op":"hello"}"#).unwrap();
+        let b = encode_frame(br#"{"op":"stats"}"#).unwrap();
+        // two frames, delivered byte-by-byte: decoder yields each
+        // exactly once, in order
+        let mut buf = Vec::new();
+        let mut got = Vec::new();
+        for byte in a.iter().chain(b.iter()) {
+            buf.push(*byte);
+            while let FrameDecode::Frame(p) = decode_frame(&mut buf) {
+                got.push(String::from_utf8(p).unwrap());
+            }
+        }
+        assert_eq!(got, vec![r#"{"op":"hello"}"#.to_string(), r#"{"op":"stats"}"#.to_string()]);
+        assert!(buf.is_empty());
+    }
+
+    #[test]
+    fn oversized_header_consumes_only_the_header() {
+        let mut buf = ((MAX_FRAME_BYTES + 1) as u32).to_be_bytes().to_vec();
+        buf.extend_from_slice(b"xxxx");
+        assert_eq!(decode_frame(&mut buf), FrameDecode::Oversized(MAX_FRAME_BYTES + 1));
+        // the 4 garbage payload bytes are still there for the caller's
+        // discard accounting
+        assert_eq!(buf, b"xxxx");
+        assert!(encode_frame(&vec![0u8; MAX_FRAME_BYTES + 1]).is_err());
+    }
+
+    #[test]
+    fn client_helpers_roundtrip() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, r#"{"op":"hello"}"#).unwrap();
+        let got = read_frame(&mut wire.as_slice()).unwrap();
+        assert_eq!(got, r#"{"op":"hello"}"#);
+    }
+
+    #[test]
+    fn error_codes_have_stable_names() {
+        let names: Vec<&str> = ErrorCode::ALL.iter().map(|c| c.name()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "malformed",
+                "oversized",
+                "idle_timeout",
+                "overloaded",
+                "quarantined",
+                "unsupported_op",
+                "internal"
+            ]
+        );
+        assert_eq!(ErrorCode::classify("run is quarantined (...)"), ErrorCode::Quarantined);
+        assert_eq!(ErrorCode::classify("scheduler tick failed"), ErrorCode::Internal);
+    }
+
+    #[test]
+    fn framed_errors_use_the_envelope() {
+        let v = WireError::overloaded("rate_limited", 125).render(Transport::Framed);
+        assert!(!v.get("ok").unwrap().bool().unwrap());
+        let e = v.get("error").unwrap();
+        assert_eq!(e.get_str("code").unwrap(), "overloaded");
+        assert_eq!(e.get_str("reason").unwrap(), "rate_limited");
+        assert_eq!(e.get_i64("retry_after_ms").unwrap(), 125);
+        assert!(v.get("err").is_err(), "legacy key must not leak into framed mode");
+
+        let v = WireError::new(ErrorCode::Malformed, "bad json").render(Transport::Framed);
+        assert_eq!(v.get("error").unwrap().get_str("message").unwrap(), "bad json");
+    }
+
+    #[test]
+    fn jsonl_errors_keep_the_legacy_shapes_plus_code() {
+        // overload: the historical {"err":"overloaded",...} shape
+        let v = WireError::overloaded("queue_full", 40).render(Transport::Jsonl);
+        assert_eq!(v.get_str("err").unwrap(), "overloaded");
+        assert_eq!(v.get_str("reason").unwrap(), "queue_full");
+        assert_eq!(v.get_i64("retry_after_ms").unwrap(), 40);
+        assert_eq!(v.get_str("code").unwrap(), "overloaded");
+
+        // everything else: the historical flat {"error":<string>} —
+        // and never an `err` key (clients key "back off" on it)
+        let v = WireError::new(ErrorCode::Malformed, "parsing request: x").render(Transport::Jsonl);
+        assert_eq!(v.get_str("error").unwrap(), "parsing request: x");
+        assert_eq!(v.get_str("code").unwrap(), "malformed");
+        assert!(v.get("err").is_err());
+    }
+
+    #[test]
+    fn hello_advertises_version_and_features() {
+        let v = hello_reply();
+        assert!(v.get("ok").unwrap().bool().unwrap());
+        assert_eq!(v.get_i64("proto").unwrap(), PROTO_VERSION);
+        let feats: Vec<&str> =
+            v.get("features").unwrap().arr().unwrap().iter().map(|f| f.str().unwrap()).collect();
+        assert_eq!(feats, vec!["streaming", "framed"]);
+    }
+}

@@ -109,6 +109,7 @@ use anyhow::{anyhow, Result};
 
 use super::admission::QosClass;
 use super::engine::{step_tick, DetachedRun, Method, ProblemRun};
+use super::events::ReplySink;
 use super::metrics::Metrics;
 use super::pool::{BackendPool, ShardRegistry, ShedRequest, WorkSignal};
 use super::prefix::{PrefixProvider, ShardPrefix, SharedPrefixTier};
@@ -145,7 +146,9 @@ pub struct SolveRequest {
     /// weighted dequeue order and per-class latency gauges only — run
     /// decisions never depend on it (determinism contract)
     pub class: QosClass,
-    pub reply: mpsc::Sender<Result<Value>>,
+    /// terminal reply sender plus the optional stream tap
+    /// ([`ReplySink`]); a plain `mpsc::Sender` converts with `.into()`
+    pub reply: ReplySink,
 }
 
 /// What travels over a shard's channel: a wire request to parse, or an
@@ -252,13 +255,13 @@ pub(crate) enum Work {
         problem: Problem,
         method: Method,
         seed: u64,
-        reply: mpsc::Sender<Result<Value>>,
+        reply: ReplySink,
     },
     Resume {
         run: DetachedRun,
         method: Method,
         gold: i64,
-        reply: mpsc::Sender<Result<Value>>,
+        reply: ReplySink,
     },
 }
 
@@ -282,7 +285,7 @@ struct InFlight {
     /// side of the class-rebalancing thresholds (hysteresis: a single
     /// noisy window must not trigger a migration)
     gamma_breach: u32,
-    reply: mpsc::Sender<Result<Value>>,
+    reply: ReplySink,
 }
 
 /// Re-admission record for one *admitted* run — the state the pool
@@ -311,7 +314,7 @@ pub(crate) struct RunTicket {
     pub(crate) retries: u32,
     pub(crate) class: QosClass,
     pub(crate) checkpoint: Option<DetachedRun>,
-    pub(crate) reply: mpsc::Sender<Result<Value>>,
+    pub(crate) reply: ReplySink,
 }
 
 /// Per-shard map of admitted-run tickets, shared between the shard's
@@ -807,6 +810,53 @@ fn rebalance_by_gamma(
     }
 }
 
+/// Publish one step boundary's telemetry to every tapped (streamed)
+/// run: a `progress` event per tick, plus a once-latched `first_vote`
+/// on the first tick where any lane holds a parsed answer (the metric
+/// SSR's early-stopping methods exist to move — time-to-first-useful-
+/// answer, recorded into the `time_to_first_vote` reservoir). Each
+/// run's events go down in ONE `push_batch` call, so a consumer never
+/// observes half a boundary, and the tap's drop-oldest ring means a
+/// slow reader costs dropped telemetry — never shard time (the
+/// terminal reply rides the reply channel, not the tap).
+fn emit_stream_events(inflight: &[InFlight], metrics: &Arc<Mutex<Metrics>>) {
+    let mut pushed = 0u64;
+    let mut dropped = 0u64;
+    let mut first_votes: Vec<f64> = Vec::new();
+    for f in inflight {
+        let Some(tap) = f.reply.events.as_ref() else { continue };
+        let p = f.run.progress();
+        let mut evs = vec![json::obj(vec![
+            ("event", json::s("progress")),
+            ("steps", json::i(p.steps as i64)),
+            ("lanes", json::i(p.lanes as i64)),
+            ("finished", json::i(p.finished as i64)),
+            ("gamma", p.gamma.map(json::n).unwrap_or(Value::Null)),
+            ("spec_depth", json::i(p.spec_depth as i64)),
+        ])];
+        if p.finished > 0 && tap.mark_first_vote() {
+            let elapsed = f.enqueued.elapsed().as_secs_f64();
+            first_votes.push(elapsed);
+            evs.push(json::obj(vec![
+                ("event", json::s("first_vote")),
+                ("answer", p.vote.map(json::i).unwrap_or(Value::Null)),
+                ("votes", json::i(p.finished as i64)),
+                ("elapsed_s", json::n(elapsed)),
+            ]));
+        }
+        pushed += evs.len() as u64;
+        dropped += tap.push_batch(evs);
+    }
+    if pushed > 0 {
+        let mut m = lock_ok(metrics);
+        m.stream_events += pushed;
+        m.stream_drops += dropped;
+        for t in first_votes {
+            m.record_first_vote(t);
+        }
+    }
+}
+
 /// One shard's thread body: intake -> migrate/steal -> admit -> tick ->
 /// retire -> rebalance -> shed, until every submitter is gone (channel
 /// disconnected — pool shutdown or `remove_shard` drain) and all of
@@ -1119,6 +1169,9 @@ pub(crate) fn run_loop(
             }
         }
 
+        // --- stream events (step boundary) ----------------------------
+        emit_stream_events(&inflight, metrics);
+
         // --- retire finished problems ---------------------------------
         let mut i = 0;
         while i < inflight.len() {
@@ -1214,7 +1267,7 @@ mod tests {
                 seed,
                 deadline_ms: 0,
                 class: QosClass::default(),
-                reply: rtx,
+                reply: rtx.into(),
             })
             .unwrap();
         rrx
@@ -1496,7 +1549,7 @@ mod tests {
             deadline: None,
             retries: 0,
             class,
-            work: Work::Fresh { problem, method: Method::Baseline, seed: 0, reply: rtx },
+            work: Work::Fresh { problem, method: Method::Baseline, seed: 0, reply: rtx.into() },
         }
     }
 

@@ -1,110 +1,55 @@
-//! TCP serving front-end: JSON-lines protocol over a router that feeds
-//! the sharded backend pool (PJRT wrapper types are not Send, so each
-//! model-executor thread owns its shard's backend; the listener and
-//! connection handlers run on the thread pool and submit work items
-//! that the placement policy routes to a shard and each shard's
-//! scheduler multiplexes into shared step batches — see
-//! `coordinator::pool` and `coordinator::scheduler` for the design
-//! notes). `--shards N` scales throughput with backend count;
-//! `{"op":"stats"}` adds `shards`, `shard_requests`,
-//! `model_secs_makespan` and `prefix_shard_fills` gauges.
+//! TCP serving front end: a single nonblocking event loop multiplexing
+//! many concurrent connections over a versioned wire protocol
+//! (PROTOCOL.md is the normative schema reference; DESIGN.md §16 the
+//! design notes).
 //!
-//! Protocol (one JSON object per line):
-//!   -> {"op":"solve", "expr":"(17+25)*3", "method":"ssr", "paths":5,
-//!       "tau":7}       // optional: "seed", "deadline_ms",
-//!                      //           "tenant", "class"
-//!   <- {"ok":true, "degraded":false, "answer":126, "method":"ssr-m5",
-//!       "steps":9, "rewrites":2, "latency_s":0.41, "queue_wait_s":0.02,
-//!       "gamma":0.81,        // measured acceptance rate (null when the
-//!                            // method never speculated, e.g. baseline)
-//!       "spec_depth":1,      // final controller depth (DESIGN.md §15)
-//!       "target_only":false} // gamma collapsed -> draft retired
-//!   <- {"ok":false, "err":"overloaded", "reason":"rate_limited",
-//!       "retry_after_ms":125}         // intake shed (DESIGN.md §14)
-//!   -> {"op":"stats"}
-//!   <- {"ok":true, "requests":..., "p50_s":..., "p99_s":...,
-//!       "throughput_rps":..., "backend_calls":...,
-//!       "mean_batch_occupancy":...,   // lanes per backend step call
-//!       "queue_depth_mean":..., "queue_depth_max":...,
-//!       "admission_wait_mean_s":..., "admission_wait_p99_s":...,
-//!       "prefix_hits":..., "prefix_misses":...,   // prefix-reuse cache
-//!       "prefix_evictions":..., "prefix_hit_rate":...,
-//!       "steals":..., "shards_added":..., "shards_removed":...,
-//!       "drain_mean_s":..., "drain_max_s":...,    // shard lifecycle
-//!       "shards_live":...,
-//!       "shard_crashes":..., "runs_recovered":...,  // fault tolerance
-//!       "runs_replayed":..., "retries":..., "quarantined":...,
-//!       "quarantine_evictions":...,
-//!       "deadline_expirations":..., "degraded_replies":...,
-//!       "rejected":..., "shed":...,   // overload protection (§14)
-//!       "retry_after_hints":..., "retry_after_hint_mean_ms":...,
-//!       "class_requests":[...],       // [interactive, batch, best_effort]
-//!       "interactive_p50_s":..., "interactive_p99_s":...,
-//!       "batch_p50_s":..., "batch_p99_s":...,
-//!       "best_effort_p50_s":..., "best_effort_p99_s":...,
-//!       "tenant_requests":{...}, "tenant_rejected":{...},
-//!       "model_secs":...,             // backend model-clock
-//!       "model_secs_draft":..., "model_secs_target":...,  // §15 split
-//!       "gamma_overall":...,          // pooled acceptance rate
-//!       "gamma_draft_heavy":..., "gamma_balanced":...,
-//!       "gamma_target_heavy":...,     // per shard class
-//!       "spec_depth_mean":..., "spec_depth_hist":[...],
-//!       "target_only_runs":...,
-//!       "gamma_migrations":...,       // class rebalance moves
-//!       "placement_shape_hits":...}   // batch-shape tie-breaks
-//!   -> {"op":"add_shard"}             // hot-add one backend shard
-//!   <- {"ok":true, "shard":2, "shards_live":3}
-//!   -> {"op":"remove_shard", "shard":2}   // drain + remove at runtime
-//!   <- {"ok":true, "drained":2, "drain_s":0.18, "shards_live":2}
-//!   -> {"op":"shutdown"}
+//! Two transports carry the same JSON payloads (`--transport`):
+//! newline-delimited JSON (`jsonl`, the compat default — one release of
+//! legacy error shapes) and a 4-byte big-endian length-delimited framed
+//! codec (`framed`, the structured error envelope). Ops: `hello`
+//! (version/feature handshake), `solve` (optionally `"stream":true`),
+//! `stats`, `add_shard`, `remove_shard`, `shutdown`.
 //!
-//! **Overload protection (DESIGN.md §14).** A `solve` may carry a
-//! `tenant` (any string; rate-limit identity) and a `class`
-//! (`interactive` | `batch` | `best_effort`, default `interactive`).
-//! Intake passes four gates — SLO shed, the tenant's token bucket,
-//! the class's bounded queue, the tenant's fair-share lane quota —
-//! before the job touches the pool; a gate failure is answered
-//! immediately with the structured `overloaded` reply above, and the
-//! connection stays open. Class affects dequeue order and shed/steal
-//! preference only, NEVER run decisions (the determinism contract).
-//! In-flight work is never dropped by overload — only new intake.
+//! **Multiplexing.** A connection may have any number of `solve`s in
+//! flight; each request may carry a client `request_id`, echoed on
+//! every reply (and stamped onto every stream event), so replies can
+//! return out of order. The old thread-per-connection handler blocked
+//! in `rrx.recv()` inside the permit span; the event loop instead
+//! registers a pending entry per submitted solve and polls its reply
+//! channel, so one stalled solve never pins a thread or a connection.
 //!
-//! **Slow-loris guard.** A connection that stays silent mid-line for
-//! `--conn-idle-timeout-ms` (default 30s; 0 disables) gets a
-//! structured `{"ok":false,"error":"idle timeout..."}` reply and is
-//! closed, so stalled sockets cannot pin handler threads.
+//! **Streaming.** `"stream":true` subscribes the connection to
+//! `progress` events (step count, live gamma/spec_depth) and a
+//! once-per-run `first_vote` early answer, followed by a terminal
+//! `result` frame that is byte-identical to the blocking reply
+//! (streaming observes runs, never steers them — the determinism
+//! contract is untouched). Events ride bounded drop-oldest taps
+//! (`--stream-buffer`; drops counted in `stream_drops`), so a slow
+//! reader costs telemetry, never shard time; the terminal reply rides
+//! the reply channel and is never dropped. A connection whose unsent
+//! backlog passes a hard cap is disconnected (slow-consumer guard);
+//! its admission permit is held until the run's terminal reply so
+//! lanes stay accounted, then released with `stream_disconnects` /
+//! `AdmissionController::note_disconnect` accounting.
 //!
-//! With `--autoscale on` a policy loop (`coordinator::autoscaler`)
-//! drives add/remove automatically from queue-depth and admission-wait
-//! EWMAs within `[--min-shards, --max-shards]`; its decisions surface
-//! as `scale_ups`/`scale_downs` in `{"op":"stats"}`, and live run
-//! migration (`--migrate`, default on) keeps its scale-down drains
-//! O(one step) (`migrations`/`migration_bytes` gauges).
+//! **Robustness.** Malformed, oversized (> 1 MiB), non-UTF-8 and
+//! unknown-op requests are answered with structured errors and the
+//! connection stays open; a panic while serving one request is caught
+//! and answered the same way. A connection idle past
+//! `--conn-idle-timeout-ms` (default 30s; 0 disables) with nothing in
+//! flight gets an `idle_timeout` error and is closed. Overload
+//! protection (DESIGN.md §14) runs at intake exactly as before:
+//! `tenant`/`class` gates refuse with a structured `overloaded` reply
+//! before a shed request costs any shard work.
 //!
-//! `latency_s` is enqueue-to-reply (it includes queue wait, reported
-//! separately as `queue_wait_s`). Concurrent `solve` requests from any
-//! number of connections interleave at step granularity and share
-//! backend batches.
-//!
-//! Serving is deterministic: identical (expr, method, seed) requests
-//! return identical answers regardless of arrival order or shard
-//! placement (DESIGN.md §10). Independent resamples of one problem
-//! (pass@k) must therefore vary the wire `seed` field — repeats with
-//! one seed are replays, not fresh samples.
-//!
-//! Fault tolerance (DESIGN.md §13): a `solve` may carry `deadline_ms`
-//! (overriding `--deadline-ms`; 0 = none). On expiry the run is
-//! finalized from the votes accumulated so far and the reply carries
-//! `"degraded":true` — still `"ok":true`. Shard crashes are recovered
-//! transparently (re-admission on survivors); a run that crashes more
-//! than `--recover-retries` shards is quarantined and answered with
-//! `"ok":false`. The connection handler never drops the line protocol
-//! on bad input: a malformed or oversized (> 1 MiB) request line gets
-//! an `{"ok":false,"error":...}` reply and the connection stays open,
-//! and a panic while serving one request is caught and answered the
-//! same way rather than killing the handler thread.
+//! Serving stays deterministic: identical (expr, method, seed)
+//! requests return identical answers regardless of arrival order,
+//! shard placement, migration, or whether anyone was streaming
+//! (DESIGN.md §10). `latency_s` is enqueue-to-reply; `queue_wait_s`
+//! reported separately.
 
-use std::io::{BufRead, BufReader, Read, Write};
+use std::collections::HashMap;
+use std::io::{ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -114,21 +59,32 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use super::admission::{AdmissionController, QosClass, Reject, RejectReason};
+use super::admission::{AdmissionController, Permit, QosClass, RejectReason};
 use super::autoscaler::Autoscaler;
 use super::engine::Method;
+use super::events::{EventTap, ReplySink};
 use super::metrics::Metrics;
 use super::pool::{BackendPool, PoolHandle};
+use super::protocol::{self, ErrorCode, FrameDecode, WireError, MAX_FRAME_BYTES};
 use super::scheduler::{lane_estimate, SolveRequest};
 use crate::backend::Backend;
-use crate::config::{SsrConfig, StopRule};
+use crate::config::{SsrConfig, StopRule, Transport};
 use crate::util::json::{self, Value};
 use crate::util::sync::lock_ok;
 use crate::util::threadpool::ThreadPool;
 
-/// Hard cap on one request line; anything longer is drained and
-/// answered with an error instead of buffering without bound.
-const MAX_LINE_BYTES: u64 = 1 << 20;
+/// Event-loop idle sleep when no connection made progress.
+const IDLE_SLEEP: Duration = Duration::from_micros(500);
+/// Per-iteration read chunk.
+const READ_CHUNK: usize = 16 * 1024;
+/// Stop queueing stream events to a connection whose unsent backlog
+/// passes this (events then age out in the tap's drop-oldest ring).
+const OUT_SOFT_CAP: usize = 64 * 1024;
+/// Disconnect a consumer whose unsent backlog passes this — it is not
+/// reading at all, and unsent terminal replies must not grow unbounded.
+const OUT_HARD_CAP: usize = 8 * 1024 * 1024;
+/// Grace period for flushing remaining output after shutdown.
+const SHUTDOWN_FLUSH: Duration = Duration::from_secs(1);
 
 /// Parse the request's method field (mirrors `Method::name`). The
 /// wire-supplied `paths` count is bounded like `SsrConfig::n_paths`
@@ -201,8 +157,9 @@ impl Server {
             TcpListener::bind((host, port)).with_context(|| format!("binding {host}:{port}"))?;
         let addr = listener.local_addr()?.to_string();
         log::info!(
-            "ssr server listening on {addr} ({} shard(s), autoscale={})",
+            "ssr server listening on {addr} ({} shard(s), transport={}, autoscale={})",
             sched.shards(),
+            cfg.transport.name(),
             cfg.autoscale.enabled
         );
         Ok((
@@ -220,33 +177,23 @@ impl Server {
         ))
     }
 
-    /// Accept-loop; blocks until a shutdown request arrives.
+    /// The front-end event loop; blocks until a shutdown request
+    /// arrives and every in-flight request has replied. `pool` runs
+    /// blocking admin work (`remove_shard` drains) off the loop.
     pub fn serve(&self, listener: TcpListener, pool: &ThreadPool) -> Result<()> {
         listener.set_nonblocking(true)?;
-        while !self.shutdown.load(Ordering::Acquire) {
-            match listener.accept() {
-                Ok((stream, peer)) => {
-                    log::debug!("connection from {peer}");
-                    let sched = self.sched.clone();
-                    let metrics = Arc::clone(&self.metrics);
-                    let started = self.started;
-                    let shutdown = Arc::clone(&self.shutdown);
-                    let cfg = self.cfg.clone();
-                    let admission = Arc::clone(&self.admission);
-                    pool.execute(move || {
-                        if let Err(e) = handle_conn(
-                            stream, sched, metrics, started, shutdown, cfg, admission,
-                        ) {
-                            log::warn!("connection error: {e:#}");
-                        }
-                    });
-                }
-                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                    std::thread::sleep(std::time::Duration::from_millis(10));
-                }
-                Err(e) => return Err(e.into()),
-            }
-        }
+        let mut el = EventLoop {
+            sched: &self.sched,
+            metrics: &self.metrics,
+            started: self.started,
+            shutdown: &self.shutdown,
+            cfg: &self.cfg,
+            admission: &self.admission,
+            conns: HashMap::new(),
+            pendings: Vec::new(),
+            next_conn: 0,
+        };
+        el.run(&listener, pool)?;
         pool.join();
         Ok(())
     }
@@ -268,223 +215,688 @@ impl Server {
     }
 }
 
-fn handle_conn(
+/// One connection's buffers and framing state.
+struct Conn {
     stream: TcpStream,
-    sched: PoolHandle,
-    metrics: Arc<Mutex<Metrics>>,
-    started: Instant,
-    shutdown: Arc<AtomicBool>,
-    cfg: SsrConfig,
-    admission: Arc<AdmissionController>,
-) -> Result<()> {
-    // slow-loris guard: a peer that stalls mid-line for the idle
-    // timeout gets a structured reply and the socket is closed, so a
-    // handful of dribbling connections cannot pin every handler thread
-    if cfg.conn_idle_timeout_ms > 0 {
-        stream.set_read_timeout(Some(Duration::from_millis(cfg.conn_idle_timeout_ms)))?;
+    inbuf: Vec<u8>,
+    outbuf: Vec<u8>,
+    out_pos: usize,
+    last_activity: Instant,
+    /// jsonl: discarding an oversized line up to its next newline
+    discard_line: bool,
+    /// framed: payload bytes of a declared-oversized frame to skip
+    discard_bytes: usize,
+    /// requests submitted and not yet terminally replied
+    pending: usize,
+    /// peer half-closed its write side; close once we finish replying
+    eof: bool,
+    /// reply queued that ends the connection (idle timeout / shutdown)
+    close_after_flush: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Conn {
+        Conn {
+            stream,
+            inbuf: Vec::new(),
+            outbuf: Vec::new(),
+            out_pos: 0,
+            last_activity: Instant::now(),
+            discard_line: false,
+            discard_bytes: 0,
+            pending: 0,
+            eof: false,
+            close_after_flush: false,
+        }
     }
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut out = stream;
-    let mut line = String::new();
-    loop {
-        line.clear();
-        // bounded read: a line that never ends cannot grow the buffer
-        // past MAX_LINE_BYTES (the remainder is discarded below)
-        let n = match reader.by_ref().take(MAX_LINE_BYTES).read_line(&mut line) {
-            Ok(n) => n,
-            Err(e) if e.kind() == std::io::ErrorKind::InvalidData => {
-                // non-UTF-8 bytes: the offending line was consumed, so
-                // answer and keep serving
-                write_reply(&mut out, &error_reply("request line is not valid UTF-8"))?;
+
+    fn backlog(&self) -> usize {
+        self.outbuf.len() - self.out_pos
+    }
+}
+
+/// One submitted request awaiting its terminal reply.
+struct Pending {
+    conn: u64,
+    request_id: Option<Value>,
+    rx: mpsc::Receiver<Result<Value>>,
+    kind: PendingKind,
+}
+
+enum PendingKind {
+    Solve {
+        /// held until the terminal reply: the run occupies lanes until
+        /// it retires whether or not anyone is still listening
+        permit: Option<Permit>,
+        tap: Option<EventTap>,
+        stream: bool,
+    },
+    /// blocking admin op (remove_shard) running on the thread pool
+    Admin,
+}
+
+/// What processing one request decided.
+enum Action {
+    Reply(Value),
+    Solve {
+        rx: mpsc::Receiver<Result<Value>>,
+        permit: Permit,
+        tap: Option<EventTap>,
+        stream: bool,
+    },
+    Admin { rx: mpsc::Receiver<Result<Value>> },
+    Shutdown(Value),
+}
+
+/// One decoded inbound message (or framing-layer defect) — produced by
+/// the transport extractors, consumed by the dispatcher.
+enum InMsg {
+    Payload(String),
+    BadUtf8,
+    OversizedLine,
+    OversizedFrame(usize),
+}
+
+/// Echo the client's `request_id` onto a reply object.
+fn stamp_request_id(v: &mut Value, id: &Option<Value>) {
+    if let (Some(id), Value::Obj(map)) = (id, v) {
+        map.insert("request_id".into(), id.clone());
+    }
+}
+
+struct EventLoop<'a> {
+    sched: &'a PoolHandle,
+    metrics: &'a Arc<Mutex<Metrics>>,
+    started: Instant,
+    shutdown: &'a Arc<AtomicBool>,
+    cfg: &'a SsrConfig,
+    admission: &'a Arc<AdmissionController>,
+    conns: HashMap<u64, Conn>,
+    pendings: Vec<Pending>,
+    next_conn: u64,
+}
+
+impl EventLoop<'_> {
+    fn run(&mut self, listener: &TcpListener, pool: &ThreadPool) -> Result<()> {
+        let mut flush_deadline: Option<Instant> = None;
+        loop {
+            let mut progress = false;
+            let shutting_down = self.shutdown.load(Ordering::Acquire);
+
+            // --- accept -----------------------------------------------
+            if !shutting_down {
+                loop {
+                    match listener.accept() {
+                        Ok((stream, peer)) => {
+                            log::debug!("connection from {peer}");
+                            stream.set_nonblocking(true)?;
+                            let id = self.next_conn;
+                            self.next_conn += 1;
+                            self.conns.insert(id, Conn::new(stream));
+                            progress = true;
+                        }
+                        Err(ref e) if e.kind() == ErrorKind::WouldBlock => break,
+                        Err(e) => return Err(e.into()),
+                    }
+                }
+            }
+
+            // --- read + dispatch --------------------------------------
+            let ids: Vec<u64> = self.conns.keys().copied().collect();
+            for id in ids {
+                progress |= self.pump_conn(id, pool);
+            }
+
+            // --- poll pending replies ---------------------------------
+            let mut k = 0;
+            while k < self.pendings.len() {
+                match self.pendings[k].rx.try_recv() {
+                    Ok(result) => {
+                        let p = self.pendings.swap_remove(k);
+                        self.complete(p, result);
+                        progress = true;
+                    }
+                    Err(mpsc::TryRecvError::Empty) => k += 1,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        // replier died without a terminal reply (pool
+                        // torn down mid-request): still answer
+                        let p = self.pendings.swap_remove(k);
+                        self.complete(
+                            p,
+                            Err(anyhow::anyhow!("scheduler dropped the request")),
+                        );
+                        progress = true;
+                    }
+                }
+            }
+
+            // --- stream events -> output buffers ----------------------
+            progress |= self.drain_taps();
+
+            // --- flush + reap -----------------------------------------
+            progress |= self.flush_and_reap();
+
+            // --- idle timeouts ----------------------------------------
+            self.fire_idle_timeouts();
+
+            // --- shutdown drain ---------------------------------------
+            if shutting_down && self.pendings.is_empty() {
+                let flushed = self.conns.values().all(|c| c.backlog() == 0);
+                match flush_deadline {
+                    _ if flushed => return Ok(()),
+                    None => flush_deadline = Some(Instant::now() + SHUTDOWN_FLUSH),
+                    Some(d) if Instant::now() >= d => return Ok(()),
+                    Some(_) => {}
+                }
+            }
+
+            if !progress {
+                std::thread::sleep(IDLE_SLEEP);
+            }
+        }
+    }
+
+    /// Read whatever the connection has, extract complete requests for
+    /// the active transport, dispatch each. Returns true on progress.
+    fn pump_conn(&mut self, id: u64, pool: &ThreadPool) -> bool {
+        let mut progress = false;
+        let mut dead = false;
+        let transport = self.cfg.transport;
+        let msgs = {
+            let Some(conn) = self.conns.get_mut(&id) else { return false };
+            if conn.close_after_flush {
+                return false;
+            }
+            // bounded read: one oversized request is handled (discard
+            // mode) before buffering more of it
+            let mut chunk = [0u8; READ_CHUNK];
+            while !conn.eof && conn.inbuf.len() <= MAX_FRAME_BYTES + 4 {
+                match conn.stream.read(&mut chunk) {
+                    Ok(0) => conn.eof = true,
+                    Ok(n) => {
+                        conn.inbuf.extend_from_slice(&chunk[..n]);
+                        conn.last_activity = Instant::now();
+                        progress = true;
+                    }
+                    Err(ref e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(ref e) if e.kind() == ErrorKind::Interrupted => {}
+                    Err(e) => {
+                        log::debug!("conn {id}: read error: {e}");
+                        dead = true;
+                        break;
+                    }
+                }
+            }
+            if dead {
+                Vec::new()
+            } else {
+                match transport {
+                    Transport::Jsonl => extract_jsonl(conn),
+                    Transport::Framed => extract_framed(conn),
+                }
+            }
+        };
+        if dead {
+            self.drop_conn(id);
+            return true;
+        }
+        for msg in msgs {
+            progress = true;
+            self.dispatch(id, msg, pool);
+        }
+        progress
+    }
+
+    /// Handle one inbound message on connection `id`.
+    fn dispatch(&mut self, id: u64, msg: InMsg, pool: &ThreadPool) {
+        let transport = self.cfg.transport;
+        let payload = match msg {
+            InMsg::Payload(p) => p,
+            InMsg::BadUtf8 => {
+                let text = match transport {
+                    Transport::Jsonl => "request line is not valid UTF-8",
+                    Transport::Framed => "frame payload is not valid UTF-8",
+                };
+                let reply = WireError::new(ErrorCode::Malformed, text).render(transport);
+                self.queue_reply(id, &reply);
+                return;
+            }
+            InMsg::OversizedLine => {
+                let reply = WireError::new(
+                    ErrorCode::Oversized,
+                    format!("request line exceeds {MAX_FRAME_BYTES} bytes"),
+                )
+                .render(transport);
+                self.queue_reply(id, &reply);
+                return;
+            }
+            InMsg::OversizedFrame(n) => {
+                let reply = WireError::new(
+                    ErrorCode::Oversized,
+                    format!("frame of {n} bytes exceeds {MAX_FRAME_BYTES} bytes"),
+                )
+                .render(transport);
+                self.queue_reply(id, &reply);
+                return;
+            }
+        };
+        let req = match Value::parse(&payload) {
+            Ok(v) => v,
+            Err(e) => {
+                let reply = WireError::new(ErrorCode::Malformed, format!("parsing request: {e:#}"))
+                    .render(transport);
+                self.queue_reply(id, &reply);
+                return;
+            }
+        };
+        let request_id = req.opt("request_id").cloned();
+        // a panic while serving one request must not kill the front end
+        let action = match catch_unwind(AssertUnwindSafe(|| self.handle_op(&req, pool))) {
+            Ok(Ok(a)) => a,
+            Ok(Err(e)) => Action::Reply(
+                WireError::new(ErrorCode::Malformed, format!("{e:#}")).render(transport),
+            ),
+            Err(_) => Action::Reply(
+                WireError::new(ErrorCode::Internal, "internal error serving request")
+                    .render(transport),
+            ),
+        };
+        match action {
+            Action::Reply(mut v) => {
+                stamp_request_id(&mut v, &request_id);
+                self.queue_reply(id, &v);
+            }
+            Action::Shutdown(mut v) => {
+                stamp_request_id(&mut v, &request_id);
+                self.queue_reply(id, &v);
+                if let Some(c) = self.conns.get_mut(&id) {
+                    c.close_after_flush = true;
+                }
+                self.shutdown.store(true, Ordering::Release);
+            }
+            Action::Solve { rx, permit, tap, stream } => {
+                if let Some(c) = self.conns.get_mut(&id) {
+                    c.pending += 1;
+                }
+                self.pendings.push(Pending {
+                    conn: id,
+                    request_id,
+                    rx,
+                    kind: PendingKind::Solve { permit: Some(permit), tap, stream },
+                });
+            }
+            Action::Admin { rx } => {
+                if let Some(c) = self.conns.get_mut(&id) {
+                    c.pending += 1;
+                }
+                self.pendings.push(Pending { conn: id, request_id, rx, kind: PendingKind::Admin });
+            }
+        }
+    }
+
+    /// Dispatch one parsed request object — the op surface of
+    /// PROTOCOL.md. Errors become `malformed` replies at the caller.
+    fn handle_op(&self, req: &Value, pool: &ThreadPool) -> Result<Action> {
+        let cfg = self.cfg;
+        match req.get_str("op").context("request needs an `op`")? {
+            "hello" => Ok(Action::Reply(protocol::hello_reply())),
+            "solve" => {
+                let expr = req.get_str("expr")?.to_string();
+                let method = parse_method(req, cfg.n_paths, cfg.tau)?;
+                let seed = req.opt("seed").map(|s| s.i64()).transpose()?.unwrap_or(0) as u64;
+                let deadline_ms =
+                    req.opt("deadline_ms").map(|x| x.i64()).transpose()?.unwrap_or(0).max(0)
+                        as u64;
+                // type errors here (numeric tenant, object class, ...)
+                // are `malformed` replies, NOT `overloaded` — the
+                // client sent a bad request, not excess load
+                let tenant =
+                    req.opt("tenant").map(|v| v.str()).transpose().context("`tenant` field")?;
+                let class = req
+                    .opt("class")
+                    .map(|v| v.str())
+                    .transpose()
+                    .context("`class` field")?
+                    .map(QosClass::parse)
+                    .transpose()?
+                    .unwrap_or_default();
+                let stream = req
+                    .opt("stream")
+                    .map(|v| v.bool())
+                    .transpose()
+                    .context("`stream` field")?
+                    .unwrap_or(false);
+                // intake gates (DESIGN.md §14) — consulted BEFORE the
+                // job touches the pool, so a shed costs no shard work
+                let p99 = lock_ok(self.metrics).class_p99(QosClass::Interactive);
+                let lanes = lane_estimate(method, cfg.pool_size);
+                let permit = match self.admission.admit(tenant, class, lanes, p99) {
+                    Ok(p) => p,
+                    Err(rej) => {
+                        lock_ok(self.metrics).record_reject(
+                            tenant,
+                            rej.reason == RejectReason::Shed,
+                            rej.retry_after_ms,
+                        );
+                        return Ok(Action::Reply(
+                            WireError::overloaded(rej.reason.name(), rej.retry_after_ms)
+                                .render(cfg.transport),
+                        ));
+                    }
+                };
+                lock_ok(self.metrics).record_tenant_admit(tenant);
+                let request_id = req.opt("request_id").cloned();
+                let tap = stream.then(|| EventTap::new(cfg.stream_buffer, request_id));
+                let (rtx, rrx) = mpsc::channel();
+                self.sched.submit(SolveRequest {
+                    expr,
+                    method,
+                    seed,
+                    deadline_ms,
+                    class,
+                    reply: ReplySink::with_events(rtx, tap.clone()),
+                })?;
+                if stream {
+                    lock_ok(self.metrics).streams_active += 1;
+                }
+                Ok(Action::Solve { rx: rrx, permit, tap, stream })
+            }
+            "stats" => {
+                let mut v = {
+                    let mut m = lock_ok(self.metrics);
+                    // the pool owns the live lock-free shape-hit
+                    // counter (the submit hot path never takes this
+                    // mutex); sync it into the snapshot
+                    m.set_placement_shape_hits(self.sched.placement_shape_hits());
+                    m.stream_disconnects = self.admission.disconnects();
+                    m.summary_json(self.started.elapsed().as_secs_f64())
+                };
+                if let Value::Obj(ref mut map) = v {
+                    map.insert("ok".into(), Value::Bool(true));
+                    map.insert("proto".into(), json::i(protocol::PROTO_VERSION));
+                    map.insert("shards_live".into(), json::i(self.sched.shards() as i64));
+                }
+                Ok(Action::Reply(v))
+            }
+            "add_shard" => {
+                let id = self.sched.add_shard()?;
+                log::info!("hot-added shard {id} ({} live)", self.sched.shards());
+                Ok(Action::Reply(json::obj(vec![
+                    ("ok", Value::Bool(true)),
+                    ("shard", json::i(id as i64)),
+                    ("shards_live", json::i(self.sched.shards() as i64)),
+                ])))
+            }
+            "remove_shard" => {
+                let id = req.get("shard").context("remove_shard needs a `shard` id")?.usize()?;
+                // draining a shard blocks until its in-flight runs are
+                // re-homed or finished: run it on the thread pool so
+                // every other connection keeps being served meanwhile
+                let sched = self.sched.clone();
+                let (rtx, rrx) = mpsc::channel();
+                pool.execute(move || {
+                    let result = sched.remove_shard(id).map(|drain_s| {
+                        log::info!(
+                            "drained shard {id} in {drain_s:.3}s ({} live)",
+                            sched.shards()
+                        );
+                        json::obj(vec![
+                            ("ok", Value::Bool(true)),
+                            ("drained", json::i(id as i64)),
+                            ("drain_s", json::n(drain_s)),
+                            ("shards_live", json::i(sched.shards() as i64)),
+                        ])
+                    });
+                    let _ = rtx.send(result);
+                });
+                Ok(Action::Admin { rx: rrx })
+            }
+            "shutdown" => Ok(Action::Shutdown(json::obj(vec![
+                ("ok", Value::Bool(true)),
+                ("bye", Value::Bool(true)),
+            ]))),
+            other => Ok(Action::Reply(
+                WireError::new(ErrorCode::UnsupportedOp, format!("unknown op `{other}`"))
+                    .render(cfg.transport),
+            )),
+        }
+    }
+
+    /// A pending request reached its terminal reply.
+    fn complete(&mut self, p: Pending, result: Result<Value>) {
+        let alive = self.conns.contains_key(&p.conn);
+        if let PendingKind::Solve { permit, tap, stream } = p.kind {
+            // flush any still-queued events BEFORE the terminal frame
+            // (the scheduler pushed them before replying, so ordering
+            // holds end to end)
+            if alive {
+                if let Some(tap) = &tap {
+                    for ev in tap.drain() {
+                        self.queue_reply(p.conn, &ev);
+                    }
+                }
+            }
+            if stream {
+                let mut m = lock_ok(self.metrics);
+                m.streams_active = m.streams_active.saturating_sub(1);
+            }
+            if !alive {
+                // requester vanished mid-solve: the run still ran to
+                // its terminal reply (lanes were occupied throughout),
+                // so the permit releases only now — with accounting
+                self.admission.note_disconnect();
+            }
+            drop(permit);
+        }
+        if alive {
+            let transport = self.cfg.transport;
+            let mut reply = match result {
+                Ok(v) => v,
+                Err(e) => WireError::from_scheduler(&e).render(transport),
+            };
+            stamp_request_id(&mut reply, &p.request_id);
+            self.queue_reply(p.conn, &reply);
+        }
+        if let Some(c) = self.conns.get_mut(&p.conn) {
+            c.pending = c.pending.saturating_sub(1);
+        }
+    }
+
+    /// Move queued stream events into connection output buffers —
+    /// unless the connection is already backlogged past the soft cap,
+    /// in which case events keep aging out in their bounded taps
+    /// (drop-oldest) instead of growing the buffer.
+    fn drain_taps(&mut self) -> bool {
+        let mut queued: Vec<(u64, Value)> = Vec::new();
+        for p in &self.pendings {
+            let PendingKind::Solve { tap: Some(tap), .. } = &p.kind else { continue };
+            let Some(conn) = self.conns.get(&p.conn) else { continue };
+            if conn.backlog() > OUT_SOFT_CAP {
                 continue;
             }
-            Err(e)
-                if e.kind() == std::io::ErrorKind::WouldBlock
-                    || e.kind() == std::io::ErrorKind::TimedOut =>
-            {
-                // idle timeout expired (mid-line or between requests):
-                // best-effort structured goodbye, then close
-                let _ = write_reply(
-                    &mut out,
-                    &error_reply(format!(
-                        "idle timeout after {}ms",
-                        cfg.conn_idle_timeout_ms
-                    )),
-                );
-                return Ok(());
+            for ev in tap.drain() {
+                queued.push((p.conn, ev));
             }
-            Err(e) => return Err(e.into()),
-        };
-        if n == 0 {
-            return Ok(()); // client closed
         }
-        if n as u64 == MAX_LINE_BYTES && !line.ends_with('\n') {
-            let eof = !drain_line(&mut reader)?;
-            write_reply(
-                &mut out,
-                &error_reply(format!("request line exceeds {MAX_LINE_BYTES} bytes")),
-            )?;
-            if eof {
-                return Ok(());
-            }
-            continue;
+        let progress = !queued.is_empty();
+        for (id, ev) in queued {
+            self.queue_reply(id, &ev);
         }
-        if line.trim().is_empty() {
-            continue;
-        }
-        // a panic while serving one request must not kill the handler
-        // thread (and with it every queued line on this connection)
-        let reply = match catch_unwind(AssertUnwindSafe(|| {
-            process_line(&line, &sched, &metrics, started, &shutdown, &cfg, &admission)
-        })) {
-            Ok(Ok(v)) => v,
-            Ok(Err(e)) => error_reply(format!("{e:#}")),
-            Err(_) => error_reply("internal error serving request"),
-        };
-        write_reply(&mut out, &reply)?;
-        if shutdown.load(Ordering::Acquire) {
-            return Ok(());
-        }
+        progress
     }
-}
 
-fn error_reply(msg: impl std::fmt::Display) -> Value {
-    json::obj(vec![("ok", Value::Bool(false)), ("error", json::s(msg.to_string()))])
-}
-
-/// The structured intake-shed reply (DESIGN.md §14): `err` (not
-/// `error`) distinguishes "back off and retry" from a malformed
-/// request, and `retry_after_ms` tells the client when.
-fn overloaded_reply(rej: &Reject) -> Value {
-    json::obj(vec![
-        ("ok", Value::Bool(false)),
-        ("err", json::s("overloaded")),
-        ("reason", json::s(rej.reason.name())),
-        ("retry_after_ms", json::i(rej.retry_after_ms as i64)),
-    ])
-}
-
-fn write_reply(out: &mut TcpStream, reply: &Value) -> Result<()> {
-    out.write_all(reply.print().as_bytes())?;
-    out.write_all(b"\n")?;
-    out.flush()?;
-    Ok(())
-}
-
-/// Discard bytes up to and including the next newline; `false` on EOF.
-fn drain_line(reader: &mut impl BufRead) -> std::io::Result<bool> {
-    loop {
-        let buf = reader.fill_buf()?;
-        if buf.is_empty() {
-            return Ok(false);
-        }
-        if let Some(pos) = buf.iter().position(|&b| b == b'\n') {
-            reader.consume(pos + 1);
-            return Ok(true);
-        }
-        let n = buf.len();
-        reader.consume(n);
-    }
-}
-
-fn process_line(
-    line: &str,
-    sched: &PoolHandle,
-    metrics: &Arc<Mutex<Metrics>>,
-    started: Instant,
-    shutdown: &Arc<AtomicBool>,
-    cfg: &SsrConfig,
-    admission: &AdmissionController,
-) -> Result<Value> {
-    let req = Value::parse(line).context("parsing request")?;
-    match req.get_str("op")? {
-        "solve" => {
-            let expr = req.get_str("expr")?.to_string();
-            let method = parse_method(&req, cfg.n_paths, cfg.tau)?;
-            let seed = req.opt("seed").map(|s| s.i64()).transpose()?.unwrap_or(0) as u64;
-            let deadline_ms =
-                req.opt("deadline_ms").map(|x| x.i64()).transpose()?.unwrap_or(0).max(0) as u64;
-            // type errors here (numeric tenant, object class, ...) are
-            // plain `error` replies, NOT `overloaded` — the client sent
-            // a malformed request, not excess load
-            let tenant =
-                req.opt("tenant").map(|v| v.str()).transpose().context("`tenant` field")?;
-            let class = req
-                .opt("class")
-                .map(|v| v.str())
-                .transpose()
-                .context("`class` field")?
-                .map(QosClass::parse)
-                .transpose()?
-                .unwrap_or_default();
-            // intake gates (DESIGN.md §14) — consulted BEFORE the job
-            // touches the pool, so a shed request costs no shard work
-            let p99 = lock_ok(metrics).class_p99(QosClass::Interactive);
-            let lanes = lane_estimate(method, cfg.pool_size);
-            let permit = match admission.admit(tenant, class, lanes, p99) {
-                Ok(p) => p,
-                Err(rej) => {
-                    lock_ok(metrics).record_reject(
-                        tenant,
-                        rej.reason == RejectReason::Shed,
-                        rej.retry_after_ms,
-                    );
-                    return Ok(overloaded_reply(&rej));
+    /// Write what we can, then reap connections that are finished
+    /// (EOF/close-after-flush with nothing left to say), dead (write
+    /// error) or hopeless (backlog past the hard cap).
+    fn flush_and_reap(&mut self) -> bool {
+        let mut progress = false;
+        let mut dead: Vec<u64> = Vec::new();
+        for (&id, conn) in self.conns.iter_mut() {
+            while conn.backlog() > 0 {
+                match conn.stream.write(&conn.outbuf[conn.out_pos..]) {
+                    Ok(0) => {
+                        dead.push(id);
+                        break;
+                    }
+                    Ok(n) => {
+                        conn.out_pos += n;
+                        progress = true;
+                    }
+                    Err(ref e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(ref e) if e.kind() == ErrorKind::Interrupted => {}
+                    Err(e) => {
+                        log::debug!("conn {id}: write error: {e}");
+                        dead.push(id);
+                        break;
+                    }
                 }
-            };
-            lock_ok(metrics).record_tenant_admit(tenant);
-            let (rtx, rrx) = mpsc::channel();
-            sched.submit(SolveRequest { expr, method, seed, deadline_ms, class, reply: rtx })?;
-            let reply = rrx.recv().context("scheduler reply")?;
-            // the permit spans submit -> terminal reply: its Drop frees
-            // the class slot + tenant lanes and feeds the per-class
-            // drain-rate EWMA that prices queue-full retry hints
-            drop(permit);
-            reply
-        }
-        "stats" => {
-            let mut v = {
-                let mut m = lock_ok(metrics);
-                // the pool owns the live lock-free shape-hit counter
-                // (the submit hot path never takes this mutex); sync it
-                // into the snapshot the summary renders
-                m.set_placement_shape_hits(sched.placement_shape_hits());
-                m.summary_json(started.elapsed().as_secs_f64())
-            };
-            if let Value::Obj(ref mut map) = v {
-                map.insert("ok".into(), Value::Bool(true));
-                map.insert("shards_live".into(), json::i(sched.shards() as i64));
             }
-            Ok(v)
+            if conn.backlog() == 0 {
+                conn.outbuf.clear();
+                conn.out_pos = 0;
+            } else if conn.out_pos > OUT_SOFT_CAP {
+                conn.outbuf.drain(..conn.out_pos);
+                conn.out_pos = 0;
+            }
+            if conn.backlog() > OUT_HARD_CAP {
+                log::warn!(
+                    "conn {id}: slow consumer ({} bytes unsent), disconnecting",
+                    conn.backlog()
+                );
+                dead.push(id);
+            } else if conn.backlog() == 0
+                && (conn.close_after_flush || (conn.eof && conn.pending == 0))
+            {
+                dead.push(id);
+            }
         }
-        "add_shard" => {
-            let id = sched.add_shard()?;
-            log::info!("hot-added shard {id} ({} live)", sched.shards());
-            Ok(json::obj(vec![
-                ("ok", Value::Bool(true)),
-                ("shard", json::i(id as i64)),
-                ("shards_live", json::i(sched.shards() as i64)),
-            ]))
+        for id in dead {
+            progress = true;
+            self.drop_conn(id);
         }
-        "remove_shard" => {
-            let id = req.get("shard").context("remove_shard needs a `shard` id")?.usize()?;
-            // blocks this connection handler until the shard has
-            // finished its in-flight runs; other connections keep
-            // solving on the surviving shards meanwhile
-            let drain_s = sched.remove_shard(id)?;
-            log::info!("drained shard {id} in {drain_s:.3}s ({} live)", sched.shards());
-            Ok(json::obj(vec![
-                ("ok", Value::Bool(true)),
-                ("drained", json::i(id as i64)),
-                ("drain_s", json::n(drain_s)),
-                ("shards_live", json::i(sched.shards() as i64)),
-            ]))
+        progress
+    }
+
+    /// Close idle connections (no bytes, nothing in flight) past the
+    /// configured timeout, with a structured goodbye.
+    fn fire_idle_timeouts(&mut self) {
+        if self.cfg.conn_idle_timeout_ms == 0 {
+            return;
         }
-        "shutdown" => {
-            shutdown.store(true, Ordering::Release);
-            Ok(json::obj(vec![("ok", Value::Bool(true)), ("bye", Value::Bool(true))]))
+        let limit = Duration::from_millis(self.cfg.conn_idle_timeout_ms);
+        let transport = self.cfg.transport;
+        let mut fired: Vec<u64> = Vec::new();
+        for (&id, conn) in self.conns.iter() {
+            if conn.pending == 0
+                && !conn.close_after_flush
+                && conn.backlog() == 0
+                && conn.last_activity.elapsed() >= limit
+            {
+                fired.push(id);
+            }
         }
-        other => bail!("unknown op `{other}`"),
+        for id in fired {
+            let reply = WireError::new(
+                ErrorCode::IdleTimeout,
+                format!("idle timeout after {}ms", self.cfg.conn_idle_timeout_ms),
+            )
+            .render(transport);
+            self.queue_reply(id, &reply);
+            if let Some(c) = self.conns.get_mut(&id) {
+                c.close_after_flush = true;
+            }
+        }
+    }
+
+    /// Serialize one reply/event for the active transport onto a
+    /// connection's output buffer.
+    fn queue_reply(&mut self, id: u64, reply: &Value) {
+        let Some(conn) = self.conns.get_mut(&id) else { return };
+        let text = reply.print();
+        match self.cfg.transport {
+            Transport::Jsonl => {
+                conn.outbuf.extend_from_slice(text.as_bytes());
+                conn.outbuf.push(b'\n');
+            }
+            Transport::Framed => match protocol::encode_frame(text.as_bytes()) {
+                Ok(frame) => conn.outbuf.extend_from_slice(&frame),
+                Err(e) => log::error!("conn {id}: unencodable reply dropped: {e:#}"),
+            },
+        }
+        conn.last_activity = Instant::now();
+    }
+
+    /// Remove a connection. Its pending requests stay registered: their
+    /// permits release (with disconnect accounting) when each terminal
+    /// reply arrives, because the runs occupy lanes until then.
+    fn drop_conn(&mut self, id: u64) {
+        self.conns.remove(&id);
+    }
+}
+
+/// Extract complete JSON-lines requests from a connection's read
+/// buffer, honoring oversized-line discard mode.
+fn extract_jsonl(conn: &mut Conn) -> Vec<InMsg> {
+    let mut out = Vec::new();
+    loop {
+        if conn.discard_line {
+            match conn.inbuf.iter().position(|&b| b == b'\n') {
+                Some(pos) => {
+                    conn.inbuf.drain(..=pos);
+                    conn.discard_line = false;
+                }
+                None => {
+                    conn.inbuf.clear();
+                    return out;
+                }
+            }
+        }
+        match conn.inbuf.iter().position(|&b| b == b'\n') {
+            Some(pos) => {
+                let line: Vec<u8> = conn.inbuf.drain(..=pos).collect();
+                match std::str::from_utf8(&line) {
+                    Ok(s) if s.trim().is_empty() => {}
+                    Ok(s) => out.push(InMsg::Payload(s.trim().to_string())),
+                    Err(_) => out.push(InMsg::BadUtf8),
+                }
+            }
+            None if conn.inbuf.len() >= MAX_FRAME_BYTES => {
+                // line too long to ever complete within the cap:
+                // answer now, discard through its eventual newline
+                conn.inbuf.clear();
+                conn.discard_line = true;
+                out.push(InMsg::OversizedLine);
+            }
+            None => return out,
+        }
+    }
+}
+
+/// Extract complete framed requests from a connection's read buffer,
+/// honoring declared-oversized skip mode.
+fn extract_framed(conn: &mut Conn) -> Vec<InMsg> {
+    let mut out = Vec::new();
+    loop {
+        if conn.discard_bytes > 0 {
+            let k = conn.discard_bytes.min(conn.inbuf.len());
+            conn.inbuf.drain(..k);
+            conn.discard_bytes -= k;
+            if conn.discard_bytes > 0 {
+                return out;
+            }
+        }
+        match protocol::decode_frame(&mut conn.inbuf) {
+            FrameDecode::NeedMore => return out,
+            FrameDecode::Oversized(n) => {
+                conn.discard_bytes = n;
+                out.push(InMsg::OversizedFrame(n));
+            }
+            FrameDecode::Frame(p) => match String::from_utf8(p) {
+                Ok(s) if s.trim().is_empty() => {}
+                Ok(s) => out.push(InMsg::Payload(s)),
+                Err(_) => out.push(InMsg::BadUtf8),
+            },
+        }
     }
 }
 
@@ -520,5 +932,63 @@ mod tests {
         }
         let v = Value::parse(r#"{"method":"parallel","paths":16}"#).unwrap();
         assert!(parse_method(&v, 5, 7).is_ok());
+    }
+
+    #[test]
+    fn request_id_stamping() {
+        let mut v = json::obj(vec![("ok", Value::Bool(true))]);
+        stamp_request_id(&mut v, &Some(json::s("r1")));
+        assert_eq!(v.get_str("request_id").unwrap(), "r1");
+        let mut v = json::obj(vec![("ok", Value::Bool(true))]);
+        stamp_request_id(&mut v, &None);
+        assert!(v.get("request_id").is_err());
+    }
+
+    fn test_conn() -> Conn {
+        // a socket pair just for the struct; framing helpers only touch
+        // the buffers
+        let l = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let s = TcpStream::connect(l.local_addr().unwrap()).unwrap();
+        Conn::new(s)
+    }
+
+    #[test]
+    fn jsonl_extractor_handles_split_lines_and_oversize() {
+        let mut c = test_conn();
+        c.inbuf.extend_from_slice(b"{\"op\":\"hello\"}\n{\"op\":");
+        let got = extract_jsonl(&mut c);
+        assert_eq!(got.len(), 1);
+        assert!(matches!(&got[0], InMsg::Payload(p) if p == "{\"op\":\"hello\"}"));
+        // the partial line stays buffered until its newline arrives
+        c.inbuf.extend_from_slice(b"\"stats\"}\n");
+        let got = extract_jsonl(&mut c);
+        assert!(matches!(&got[0], InMsg::Payload(p) if p == "{\"op\":\"stats\"}"));
+
+        // oversized: answered once, then discarded through the newline
+        c.inbuf = vec![b'x'; MAX_FRAME_BYTES + 10];
+        let got = extract_jsonl(&mut c);
+        assert!(matches!(got[0], InMsg::OversizedLine));
+        assert!(c.discard_line);
+        c.inbuf.extend_from_slice(b"tail\n{\"op\":\"hello\"}\n");
+        let got = extract_jsonl(&mut c);
+        assert_eq!(got.len(), 1, "the oversized tail is skipped, the next line parses");
+        assert!(matches!(&got[0], InMsg::Payload(p) if p == "{\"op\":\"hello\"}"));
+    }
+
+    #[test]
+    fn framed_extractor_skips_declared_oversize() {
+        let mut c = test_conn();
+        c.inbuf.extend_from_slice(&((MAX_FRAME_BYTES + 5) as u32).to_be_bytes());
+        let got = extract_framed(&mut c);
+        assert!(matches!(got[0], InMsg::OversizedFrame(n) if n == MAX_FRAME_BYTES + 5));
+        // payload arrives in chunks and is skipped without buffering
+        c.inbuf = vec![0u8; MAX_FRAME_BYTES];
+        assert!(extract_framed(&mut c).is_empty());
+        c.inbuf.extend_from_slice(&[0u8; 5]);
+        c.inbuf.extend_from_slice(&protocol::encode_frame(b"{\"op\":\"hello\"}").unwrap());
+        let got = extract_framed(&mut c);
+        assert_eq!(got.len(), 1);
+        assert!(matches!(&got[0], InMsg::Payload(p) if p == "{\"op\":\"hello\"}"));
+        assert_eq!(c.discard_bytes, 0);
     }
 }

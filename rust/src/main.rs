@@ -20,6 +20,7 @@
 //!           [--queue-cap N] [--class-weights 'i,b,e'] [--slo-ms MS]
 //!           [--cost-ceiling S] [--quarantine-cap N]
 //!           [--conn-idle-timeout-ms MS]
+//!           [--transport jsonl|framed] [--stream-buffer N]
 //! ssr exp   fig2|fig3|fig4|fig5|table1|gamma|all [--backend calibrated]
 //!           [--trials 6] [--problems 60]
 //! ssr selfcheck            # artifacts -> PJRT -> one SSR problem
@@ -68,6 +69,18 @@
 //! `{"op":"stats"}` keys `gamma_overall`, `gamma_<class>`,
 //! `spec_depth_mean`, `target_only_runs`, `gamma_migrations`,
 //! `model_secs_draft`/`model_secs_target` and `placement_shape_hits`.
+//!
+//! The front end is a single nonblocking event loop multiplexing many
+//! connections (PROTOCOL.md, DESIGN.md §16): `--transport` selects
+//! newline-delimited JSON (`jsonl`, the compat default) or the
+//! length-delimited `framed` codec; requests may carry a `request_id`
+//! (echoed on every reply) and interleave freely on one connection; a
+//! solve with `"stream":true` also receives `progress` / `first_vote`
+//! events over a bounded drop-oldest buffer (`--stream-buffer N`)
+//! before its terminal reply. `{"op":"hello"}` reports the protocol
+//! version and feature list. See `{"op":"stats"}` keys
+//! `streams_active`, `stream_events`, `stream_drops`,
+//! `stream_disconnects` and `time_to_first_vote_*`.
 //!
 //! Serving is overload-safe (DESIGN.md §14): a `solve` may carry
 //! `tenant` and `class` (`interactive`|`batch`|`best_effort`) wire

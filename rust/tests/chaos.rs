@@ -160,7 +160,7 @@ fn submit(
             seed,
             deadline_ms: 0,
             class: QosClass::default(),
-            reply: rtx,
+            reply: rtx.into(),
         })
         .unwrap();
     rrx
@@ -523,4 +523,91 @@ fn poison_run_is_quarantined_after_its_retry_budget() {
     let m = metrics.lock().unwrap();
     assert_eq!(m.shard_crashes, 2, "the quarantine check must fire before the backend");
     assert_eq!(m.errors, 2);
+}
+
+#[test]
+fn streamed_runs_match_blocking_replies_under_faults() {
+    // Streaming observes runs, it never steers them: with seeded
+    // transient faults AND shard panics in play, a tapped run's
+    // terminal reply must stay byte-identical to the untapped run's
+    // (only the wall-clock fields differ), and the tap must still see
+    // progress. Extends the chaos suite to the §16 streaming surface.
+    use ssr::coordinator::{EventTap, ReplySink};
+
+    let backend_seed = 0xFA05;
+    let spec = FaultSpec {
+        seed: 0xC4A5,
+        transient_rate: 0.05,
+        panic_rate: 0.002,
+        ..FaultSpec::default()
+    };
+    let jobs = mixed_jobs(6);
+
+    let run = |tapped: bool| -> (Vec<Value>, u64) {
+        let budget = FaultInjector::shared_budget(&spec);
+        let mut cfg = SsrConfig::default();
+        cfg.shards = 2;
+        cfg.placement = PlacePolicy::RoundRobin;
+        let metrics = Arc::new(Mutex::new(Metrics::new()));
+        let (handle, joins) = BackendPool::spawn(
+            cfg,
+            tokenizer::builtin_vocab(),
+            Arc::clone(&metrics),
+            move |shard| {
+                let inner = Box::new(CalibratedBackend::for_suite(SUITE, backend_seed)?);
+                Ok(Box::new(FaultInjector::new(inner, spec, shard, budget.clone()))
+                    as Box<dyn Backend>)
+            },
+        )
+        .unwrap();
+        let mut taps = Vec::new();
+        let replies: Vec<_> = jobs
+            .iter()
+            .map(|(expr, method, seed)| {
+                let (rtx, rrx) = mpsc::channel();
+                let tap = tapped.then(|| EventTap::new(64, None));
+                taps.extend(tap.clone());
+                handle
+                    .submit(SolveRequest {
+                        expr: expr.clone(),
+                        method: *method,
+                        seed: *seed,
+                        deadline_ms: 0,
+                        class: QosClass::default(),
+                        reply: ReplySink::with_events(rtx, tap),
+                    })
+                    .unwrap();
+                rrx
+            })
+            .collect();
+        let mut terminals: Vec<Value> = replies
+            .iter()
+            .map(|r| r.recv().unwrap().expect("every run must reply under faults"))
+            .collect();
+        drop(handle);
+        for j in joins {
+            j.join().unwrap();
+        }
+        // events were observed for every tapped run
+        let mut events = 0u64;
+        for tap in &taps {
+            let drained = tap.drain();
+            assert!(!drained.is_empty(), "a tapped run streamed no events");
+            events += drained.len() as u64 + tap.dropped();
+        }
+        for t in &mut terminals {
+            if let Value::Obj(map) = t {
+                map.insert("latency_s".into(), ssr::util::json::n(0.0));
+                map.insert("queue_wait_s".into(), ssr::util::json::n(0.0));
+            }
+        }
+        (terminals, events)
+    };
+
+    let (blocking, _) = run(false);
+    let (streamed, events) = run(true);
+    assert!(events > 0);
+    let blocking: Vec<String> = blocking.iter().map(|v| v.print()).collect();
+    let streamed: Vec<String> = streamed.iter().map(|v| v.print()).collect();
+    assert_eq!(blocking, streamed, "streaming taps changed a terminal reply under faults");
 }

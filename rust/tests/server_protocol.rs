@@ -587,3 +587,310 @@ fn slow_loris_connection_is_timed_out_with_a_structured_reply() {
     let _ = request(&mut s2, r#"{"op":"shutdown"}"#);
     srv.join().unwrap();
 }
+
+// ---------------------------------------------------------------------
+// PROTOCOL.md surface: hello/versioning, error codes, request_id echo,
+// multiplexing, the framed transport, streaming, and stats-doc drift.
+// ---------------------------------------------------------------------
+
+use ssr::config::Transport;
+use ssr::coordinator::protocol;
+use ssr::util::json;
+
+fn start_default_server(
+    cfg: SsrConfig,
+    pool_threads: usize,
+) -> (String, std::thread::JoinHandle<()>) {
+    let vocab = tokenizer::builtin_vocab();
+    let (server, listener) = Server::start("127.0.0.1", 0, cfg, vocab, |_shard| {
+        Ok(Box::new(CalibratedBackend::for_suite("synth-math500", 7)?) as Box<dyn Backend>)
+    })
+    .unwrap();
+    let addr = server.addr.clone();
+    let srv = std::thread::spawn(move || {
+        let pool = ThreadPool::new(pool_threads);
+        server.serve(listener, &pool).unwrap();
+    });
+    (addr, srv)
+}
+
+/// Zero the wall-clock-only reply fields so deterministic replies can
+/// be compared byte-for-byte.
+fn normalize_clock_fields(v: &mut Value) {
+    if let Value::Obj(map) = v {
+        for key in ["latency_s", "queue_wait_s"] {
+            if map.contains_key(key) {
+                map.insert(key.to_string(), json::n(0.0));
+            }
+        }
+    }
+}
+
+#[test]
+fn hello_reports_version_and_unknown_ops_get_a_machine_code() {
+    let (addr, srv) = start_default_server(SsrConfig::default(), 2);
+    let mut s = TcpStream::connect(&addr).unwrap();
+
+    let r = request(&mut s, r#"{"op":"hello"}"#);
+    assert!(r.get("ok").unwrap().bool().unwrap(), "{r:?}");
+    assert_eq!(r.get_i64("proto").unwrap(), 1);
+    let features: Vec<&str> =
+        r.get("features").unwrap().arr().unwrap().iter().map(|f| f.str().unwrap()).collect();
+    assert!(features.contains(&"streaming") && features.contains(&"framed"), "{features:?}");
+
+    // stats reports the protocol version too
+    let r = request(&mut s, r#"{"op":"stats"}"#);
+    assert_eq!(r.get_i64("proto").unwrap(), 1);
+
+    // unknown op: legacy `error` string plus the machine-readable code,
+    // with the client's request_id echoed
+    let r = request(&mut s, r#"{"op":"dance","request_id":"rq-7"}"#);
+    assert!(!r.get("ok").unwrap().bool().unwrap());
+    assert_eq!(r.get_str("code").unwrap(), "unsupported_op", "{r:?}");
+    assert!(r.get_str("error").unwrap().contains("unknown op"), "{r:?}");
+    assert_eq!(r.get_str("request_id").unwrap(), "rq-7");
+
+    // the other structured codes on the jsonl compat shapes
+    let r = request(&mut s, "not json at all");
+    assert_eq!(r.get_str("code").unwrap(), "malformed", "{r:?}");
+    let r = request(&mut s, r#"{"op":"solve","expr":"1+2","tenant":7}"#);
+    assert_eq!(r.get_str("code").unwrap(), "malformed", "{r:?}");
+
+    let _ = request(&mut s, r#"{"op":"shutdown"}"#);
+    srv.join().unwrap();
+}
+
+#[test]
+fn framed_transport_round_trip_with_envelope_errors() {
+    let mut cfg = SsrConfig::default();
+    cfg.transport = Transport::Framed;
+    let (addr, srv) = start_default_server(cfg, 2);
+    let mut s = TcpStream::connect(&addr).unwrap();
+
+    let frame_request = |s: &mut TcpStream, payload: &str| -> Value {
+        protocol::write_frame(s, payload).unwrap();
+        Value::parse(&protocol::read_frame(s).unwrap()).unwrap()
+    };
+
+    let r = frame_request(&mut s, r#"{"op":"hello"}"#);
+    assert_eq!(r.get_i64("proto").unwrap(), 1, "{r:?}");
+
+    let r = frame_request(&mut s, r#"{"op":"solve","expr":"17+25*3","seed":5,"request_id":9}"#);
+    assert!(r.get("ok").unwrap().bool().unwrap(), "{r:?}");
+    assert_eq!(r.get_i64("gold").unwrap(), 92);
+    assert_eq!(r.get_i64("request_id").unwrap(), 9, "request_id echo");
+
+    // malformed payload: the framed error envelope, not the legacy keys
+    let r = frame_request(&mut s, "not json at all");
+    assert!(!r.get("ok").unwrap().bool().unwrap());
+    let err = r.get("error").unwrap();
+    assert_eq!(err.get_str("code").unwrap(), "malformed", "{r:?}");
+    assert!(err.get_str("message").unwrap().contains("parsing request"), "{r:?}");
+    assert!(r.get("err").is_err(), "no legacy keys in framed mode: {r:?}");
+
+    // a frame declaring a >1MiB payload: `oversized` envelope, the
+    // declared bytes are skipped, and the connection keeps serving
+    let declared = (1usize << 20) + 5;
+    s.write_all(&(declared as u32).to_be_bytes()).unwrap();
+    s.write_all(&vec![b'x'; declared]).unwrap();
+    s.flush().unwrap();
+    let r = Value::parse(&protocol::read_frame(&mut s).unwrap()).unwrap();
+    assert_eq!(r.get("error").unwrap().get_str("code").unwrap(), "oversized", "{r:?}");
+    let r = frame_request(&mut s, r#"{"op":"solve","expr":"3+4","seed":1}"#);
+    assert!(r.get("ok").unwrap().bool().unwrap(), "{r:?}");
+    assert_eq!(r.get_i64("gold").unwrap(), 7);
+
+    let r = frame_request(&mut s, r#"{"op":"shutdown"}"#);
+    assert!(r.get("bye").unwrap().bool().unwrap());
+    srv.join().unwrap();
+}
+
+#[test]
+fn multiplexed_replies_return_out_of_order_with_request_id_echo() {
+    // Every backend step stalls 30ms, so a solve pipelined ahead of a
+    // stats on the SAME connection cannot reply first: the stats is
+    // served inline by the event loop while the solve is still pending.
+    // Deterministic by construction — the solve needs at least one
+    // 30ms step, the stats needs none.
+    let mut cfg = SsrConfig::default();
+    cfg.transport = Transport::Framed;
+    let vocab = tokenizer::builtin_vocab();
+    let spec = FaultSpec { seed: 5, stall_rate: 1.0, stall_ms: 30, ..FaultSpec::default() };
+    let budget = FaultInjector::shared_budget(&spec);
+    let (server, listener) = Server::start("127.0.0.1", 0, cfg, vocab, move |shard| {
+        let inner = Box::new(CalibratedBackend::for_suite("synth-math500", 7)?);
+        Ok(Box::new(FaultInjector::new(inner, spec, shard, budget.clone())) as Box<dyn Backend>)
+    })
+    .unwrap();
+    let addr = server.addr.clone();
+    let srv = std::thread::spawn(move || {
+        let pool = ThreadPool::new(2);
+        server.serve(listener, &pool).unwrap();
+    });
+    let mut s = TcpStream::connect(&addr).unwrap();
+
+    // pipeline both requests before reading anything; a 50ms deadline
+    // keeps the stalled solve short (degraded replies are still replies)
+    protocol::write_frame(
+        &mut s,
+        r#"{"op":"solve","expr":"17+25*3","method":"baseline","deadline_ms":50,"request_id":"slow"}"#,
+    )
+    .unwrap();
+    protocol::write_frame(&mut s, r#"{"op":"stats","request_id":"fast"}"#).unwrap();
+    s.flush().unwrap();
+
+    let first = Value::parse(&protocol::read_frame(&mut s).unwrap()).unwrap();
+    let second = Value::parse(&protocol::read_frame(&mut s).unwrap()).unwrap();
+    assert_eq!(first.get_str("request_id").unwrap(), "fast", "stats must overtake: {first:?}");
+    assert!(first.get("requests").is_ok());
+    assert_eq!(second.get_str("request_id").unwrap(), "slow");
+    assert!(second.get("ok").unwrap().bool().unwrap(), "{second:?}");
+
+    let _ = protocol::write_frame(&mut s, r#"{"op":"shutdown"}"#);
+    let _ = protocol::read_frame(&mut s);
+    srv.join().unwrap();
+}
+
+#[test]
+fn streamed_terminal_reply_is_byte_identical_to_the_blocking_reply() {
+    let (addr, srv) = start_default_server(SsrConfig::default(), 2);
+    let mut s = TcpStream::connect(&addr).unwrap();
+
+    // blocking reference reply
+    let line = r#"{"op":"solve","expr":"17+25*3","method":"ssr","paths":3,"seed":5,"request_id":"rA"}"#;
+    let mut blocking = request(&mut s, line);
+    assert!(blocking.get("ok").unwrap().bool().unwrap(), "{blocking:?}");
+
+    // the same request streamed: interim events, then the terminal
+    let streamed_line = line.replace(r#""request_id":"rA""#, r#""request_id":"rA","stream":true"#);
+    s.write_all(streamed_line.as_bytes()).unwrap();
+    s.write_all(b"\n").unwrap();
+    s.flush().unwrap();
+    let mut reader = BufReader::new(s.try_clone().unwrap());
+    let mut progress_events = 0usize;
+    let mut first_votes = 0usize;
+    let mut terminal = loop {
+        let mut l = String::new();
+        reader.read_line(&mut l).unwrap();
+        let v = Value::parse(&l).unwrap();
+        match v.get("event") {
+            Ok(ev) => {
+                assert_eq!(v.get_str("request_id").unwrap(), "rA", "events carry the id");
+                match ev.str().unwrap() {
+                    "progress" => {
+                        progress_events += 1;
+                        assert!(v.get_i64("steps").unwrap() >= 0);
+                        assert!(v.get_i64("lanes").unwrap() >= 1);
+                        assert!(v.get_i64("spec_depth").unwrap() >= 0);
+                    }
+                    "first_vote" => {
+                        first_votes += 1;
+                        assert!(v.get_f64("elapsed_s").unwrap() >= 0.0);
+                        assert!(v.get_i64("votes").unwrap() >= 1);
+                    }
+                    other => panic!("unknown event `{other}`"),
+                }
+            }
+            Err(_) => break v,
+        }
+    };
+    assert!(progress_events >= 1, "no progress events streamed");
+    assert_eq!(first_votes, 1, "first_vote fires exactly once per run");
+
+    // byte-for-byte equality after zeroing the wall-clock-only fields
+    normalize_clock_fields(&mut blocking);
+    normalize_clock_fields(&mut terminal);
+    assert_eq!(
+        blocking.print(),
+        terminal.print(),
+        "the streamed terminal frame must equal the blocking reply"
+    );
+
+    // gauges: the stream retired, its events were counted, and the
+    // first vote landed before the end-to-end reply
+    let r = request(&mut s, r#"{"op":"stats"}"#);
+    assert_eq!(r.get_i64("streams_active").unwrap(), 0);
+    assert!(r.get_i64("stream_events").unwrap() >= 2, "{r:?}");
+    assert_eq!(r.get_i64("first_votes").unwrap(), 1, "{r:?}");
+    assert!(r.get_f64("time_to_first_vote_mean_s").unwrap() >= 0.0);
+
+    let _ = request(&mut s, r#"{"op":"shutdown"}"#);
+    srv.join().unwrap();
+}
+
+#[test]
+fn slow_consumer_stream_buffer_drops_oldest_events() {
+    // --stream-buffer 1: the step boundary that finishes the first path
+    // pushes [progress, first_vote] as ONE batch into a capacity-1
+    // ring, so at least one drop is guaranteed no matter how fast the
+    // consumer drains — the accounting is deterministic, not a race.
+    let mut cfg = SsrConfig::default();
+    cfg.stream_buffer = 1;
+    let (addr, srv) = start_default_server(cfg, 2);
+    let mut s = TcpStream::connect(&addr).unwrap();
+
+    s.write_all(
+        br#"{"op":"solve","expr":"17+25*3","method":"ssr","paths":3,"seed":5,"stream":true}"#,
+    )
+    .unwrap();
+    s.write_all(b"\n").unwrap();
+    s.flush().unwrap();
+    let mut reader = BufReader::new(s.try_clone().unwrap());
+    let terminal = loop {
+        let mut l = String::new();
+        reader.read_line(&mut l).unwrap();
+        let v = Value::parse(&l).unwrap();
+        if v.get("event").is_err() {
+            break v;
+        }
+    };
+    assert!(terminal.get("ok").unwrap().bool().unwrap(), "{terminal:?}");
+
+    let r = request(&mut s, r#"{"op":"stats"}"#);
+    assert!(r.get_i64("stream_drops").unwrap() >= 1, "{r:?}");
+    assert!(
+        r.get_i64("stream_events").unwrap() > r.get_i64("stream_drops").unwrap(),
+        "some events must still be delivered: {r:?}"
+    );
+
+    let _ = request(&mut s, r#"{"op":"shutdown"}"#);
+    srv.join().unwrap();
+}
+
+#[test]
+fn stats_fields_match_the_protocol_doc() {
+    // PROTOCOL.md's <!-- stats-fields --> block is the contract; this
+    // test diffs it against a live `stats` reply in both directions so
+    // neither the doc nor `Metrics::summary_json` can drift alone.
+    let doc = include_str!("../../PROTOCOL.md");
+    let begin = doc.find("<!-- stats-fields:begin -->").expect("begin marker");
+    let end = doc.find("<!-- stats-fields:end -->").expect("end marker");
+    let documented: Vec<String> = doc[begin..end]
+        .lines()
+        .filter_map(|l| l.trim().strip_prefix("- `"))
+        .filter_map(|l| l.strip_suffix('`'))
+        .map(|l| l.to_string())
+        .collect();
+    assert!(!documented.is_empty(), "no fields parsed from PROTOCOL.md");
+
+    let (addr, srv) = start_default_server(SsrConfig::default(), 2);
+    let mut s = TcpStream::connect(&addr).unwrap();
+    let r = request(&mut s, r#"{"op":"stats"}"#);
+    let Value::Obj(map) = &r else { panic!("stats is not an object: {r:?}") };
+    let live: Vec<String> = map.keys().cloned().collect();
+
+    let undocumented: Vec<&String> = live.iter().filter(|k| !documented.contains(k)).collect();
+    let stale: Vec<&String> = documented.iter().filter(|k| !live.contains(k)).collect();
+    assert!(
+        undocumented.is_empty() && stale.is_empty(),
+        "stats/doc drift — missing from PROTOCOL.md: {undocumented:?}; \
+         documented but not served: {stale:?}"
+    );
+    // the doc list is sorted, like the wire object's keys
+    let mut sorted = documented.clone();
+    sorted.sort();
+    assert_eq!(documented, sorted, "PROTOCOL.md stats fields must stay sorted");
+
+    let _ = request(&mut s, r#"{"op":"shutdown"}"#);
+    srv.join().unwrap();
+}

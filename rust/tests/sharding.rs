@@ -77,7 +77,7 @@ fn submit(
             seed,
             deadline_ms: 0,
             class: QosClass::default(),
-            reply: rtx,
+            reply: rtx.into(),
         })
         .unwrap();
     rrx

@@ -3,11 +3,21 @@
 //! table plus its own wall time).
 #![allow(dead_code)]
 
+use std::sync::{mpsc, Arc, Mutex};
+
 use anyhow::Result;
 use ssr::backend::calibrated::CalibratedBackend;
 use ssr::backend::Backend;
 use ssr::config::SsrConfig;
+use ssr::coordinator::admission::QosClass;
+use ssr::coordinator::metrics::Metrics;
+use ssr::coordinator::pool::BackendPool;
+use ssr::coordinator::scheduler::SolveRequest;
+use ssr::coordinator::server::parse_method;
 use ssr::eval::experiments::ExpOpts;
+use ssr::model::tokenizer;
+use ssr::util::json::Value;
+use ssr::workload::trace::TraceEntry;
 
 pub fn calibrated_factory() -> impl FnMut(&str, u64) -> Result<Box<dyn Backend>> {
     |suite: &str, seed: u64| {
@@ -66,6 +76,72 @@ pub fn bench_json(name: &str, mut pairs: Vec<(&str, ssr::util::json::Value)>) {
     let mut all = vec![("bench", ssr::util::json::s(name))];
     all.append(&mut pairs);
     println!("\nBENCH_JSON {}", ssr::util::json::obj(all).print());
+}
+
+/// Replay a serving trace against a fresh pool: entries submit in
+/// arrival order, closed-loop (each awaits its terminal reply before
+/// the next submits), so placement and eviction order are functions of
+/// the trace alone — no wall clock, no thread interleaving. Arrival
+/// offsets and deadlines are deliberately ignored: both are wall-clock
+/// constructs, and replay is about decisions, not SLOs. Methods are
+/// re-derived through `parse_method` from the same wire fields the
+/// recording captured. Returns the replies in trace order plus the
+/// pool's final metrics snapshot.
+pub fn replay_trace(
+    cfg: SsrConfig,
+    backend_seed: u64,
+    entries: &[TraceEntry],
+) -> Result<(Vec<Value>, Metrics)> {
+    let (n_paths, tau) = (cfg.n_paths, cfg.tau);
+    let metrics = Arc::new(Mutex::new(Metrics::new()));
+    let (handle, joins) =
+        BackendPool::spawn(cfg, tokenizer::builtin_vocab(), Arc::clone(&metrics), move |_s| {
+            Ok(Box::new(CalibratedBackend::for_suite("synth-math500", backend_seed)?)
+                as Box<dyn Backend>)
+        })?;
+    let mut replies = Vec::with_capacity(entries.len());
+    for e in entries {
+        let (rtx, rrx) = mpsc::channel();
+        handle.submit(SolveRequest {
+            expr: e.expr.clone(),
+            method: parse_method(&e.to_value(), n_paths, tau)?,
+            seed: e.seed,
+            deadline_ms: 0,
+            class: QosClass::parse(&e.class)?,
+            reply: rtx.into(),
+        })?;
+        replies.push(rrx.recv()??);
+    }
+    drop(handle);
+    for j in joins {
+        j.join().expect("shard thread");
+    }
+    let snapshot = metrics.lock().unwrap().clone();
+    Ok((replies, snapshot))
+}
+
+/// Drop the wall-clock fields from a reply so two replays of the same
+/// trace can be compared byte-for-byte on everything deterministic.
+pub fn strip_timing(mut v: Value) -> Value {
+    if let Value::Obj(ref mut m) = v {
+        m.remove("latency_s");
+        m.remove("queue_wait_s");
+    }
+    v
+}
+
+/// The decision fingerprint of one reply: the fields that are pure
+/// functions of (seed, prompt) and therefore must not move under any
+/// caching/eviction/placement change. Token ledgers are excluded —
+/// billing legitimately differs when a prefill is served from cache.
+pub fn decision_key(v: &Value) -> (Option<i64>, Option<i64>, bool, Option<i64>, Option<i64>) {
+    (
+        v.get_i64("gold").ok(),
+        v.get_i64("answer").ok(),
+        v.get("correct").ok().and_then(|c| c.bool().ok()).unwrap_or(false),
+        v.get_i64("steps").ok(),
+        v.get_i64("rewrites").ok(),
+    )
 }
 
 /// Mean pass@1 (and gamma) across suites for one method name out of a

@@ -1,0 +1,102 @@
+//! Warm-restart bench for the persistent prefix spill tier
+//! (DESIGN.md §17, `--prefix-spill-dir`).
+//!
+//! One heavy-tailed trace is replayed twice against single-shard pools
+//! sharing a spill directory. The COLD run starts with an empty store:
+//! every distinct prompt prefills at least once, and a deliberately
+//! tiny hot tier (capacity 2) demotes evicted entries to disk mid-run;
+//! the drain path demotes the survivors on shutdown. The WARM run is a
+//! restarted pool pointed at the same directory: first touches promote
+//! serialized prefill state back from disk (`warm_hits`) instead of
+//! recomputing the prompt pass, so it must prefill STRICTLY fewer
+//! prompt tokens than the cold run while producing identical decision
+//! fingerprints — the ISSUE's warm-restart acceptance scalar,
+//! emitted as BENCH_JSON (`warm_replay_throughput_runs_per_model_s`
+//! joins the `*throughput*` regression gate).
+
+mod common;
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use ssr::config::{EvictPolicy, SsrConfig};
+use ssr::util::json;
+use ssr::workload::trace::{self, GenSpec};
+
+fn spill_dir() -> PathBuf {
+    std::env::temp_dir().join(format!("ssr-bench-spill-{}", std::process::id()))
+}
+
+fn cfg_with_spill(dir: &PathBuf) -> SsrConfig {
+    let mut cfg = common::default_cfg();
+    cfg.shards = 1;
+    // capacity 2 over a 5-prompt pool: the hot tier churns, so the
+    // spill store sees demotions during the run, not just at drain
+    cfg.prefix.capacity = 2;
+    cfg.prefix.evict = EvictPolicy::Lru;
+    cfg.prefix.spill_dir = Some(dir.clone());
+    cfg.prefix.spill_bytes = 0;
+    cfg
+}
+
+fn main() -> anyhow::Result<()> {
+    let t0 = Instant::now();
+    let dir = spill_dir();
+    let _ = std::fs::remove_dir_all(&dir); // stale state from a killed run
+
+    let spec = GenSpec { n: 18, pool: 5, ..GenSpec::default() };
+    let entries = trace::heavy_tailed(&spec);
+
+    // --- cold: empty store, prompts prefill, evictions demote ---------
+    let (cold_replies, cold_m) = common::replay_trace(cfg_with_spill(&dir), 0xC01D, &entries)?;
+    assert_eq!(cold_m.errors, 0, "cold replay errored");
+    let cold_prefill = cold_m.prefill_prompt_tokens();
+    assert!(cold_prefill > 0, "cold run must prefill prompts");
+    assert!(cold_m.prefix_spills > 0, "tiny hot tier must demote to the spill store");
+
+    // --- warm: restarted pool, same dir, promotes instead of prefills -
+    let (warm_replies, warm_m) = common::replay_trace(cfg_with_spill(&dir), 0xC01D, &entries)?;
+    assert_eq!(warm_m.errors, 0, "warm replay errored");
+    let warm_prefill = warm_m.prefill_prompt_tokens();
+
+    let cold_keys: Vec<_> = cold_replies.iter().map(common::decision_key).collect();
+    let warm_keys: Vec<_> = warm_replies.iter().map(common::decision_key).collect();
+    assert_eq!(cold_keys, warm_keys, "warm restart changed solve decisions");
+    assert!(warm_m.prefix_promotes > 0, "warm run never promoted from the spill store");
+    assert!(warm_m.prefix_warm_hits > 0, "no promote came from the previous incarnation");
+    assert!(
+        warm_prefill < cold_prefill,
+        "warm restart must prefill strictly fewer prompt tokens (warm {warm_prefill} vs \
+         cold {cold_prefill})"
+    );
+
+    let saved = 1.0 - warm_prefill as f64 / cold_prefill as f64;
+    let throughput = spec.n as f64 / warm_m.model_secs_makespan().max(1e-9);
+    println!(
+        "## prefix_spill: {} requests, cold prefill {cold_prefill} prompt tokens -> warm \
+         {warm_prefill} ({:.1}% saved; {} promotes, {} warm hits, {} spills cold-side)",
+        spec.n,
+        100.0 * saved,
+        warm_m.prefix_promotes,
+        warm_m.prefix_warm_hits,
+        cold_m.prefix_spills
+    );
+
+    common::bench_json(
+        "prefix_spill",
+        vec![
+            ("requests", json::i(spec.n as i64)),
+            ("cold_prefill_prompt_tokens", json::i(cold_prefill as i64)),
+            ("warm_prefill_prompt_tokens", json::i(warm_prefill as i64)),
+            ("prefill_saved_ratio", json::n(saved)),
+            ("spills", json::i(cold_m.prefix_spills as i64)),
+            ("promotes", json::i(warm_m.prefix_promotes as i64)),
+            ("warm_hits", json::i(warm_m.prefix_warm_hits as i64)),
+            ("warm_replay_throughput_runs_per_model_s", json::n(throughput)),
+        ],
+    );
+
+    let _ = std::fs::remove_dir_all(&dir);
+    println!("[bench prefix_spill] completed in {:.2}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

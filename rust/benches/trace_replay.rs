@@ -1,0 +1,168 @@
+//! Trace record/replay bench (DESIGN.md §17): the workload half of the
+//! two-tier prefix-store work.
+//!
+//! Three claims are exercised, all on the calibrated backend (no PJRT
+//! artifacts needed):
+//!
+//! 1. **Replay determinism** — a generated heavy-tailed trace is
+//!    written through [`TraceWriter`], loaded back, and replayed twice
+//!    against identical single-shard pools; the two reply sequences
+//!    must be identical byte-for-byte once the wall-clock fields
+//!    (`latency_s`, `queue_wait_s`) are stripped.
+//! 2. **Cost-aware eviction wins without changing decisions** — a
+//!    skewed repeated-prompt trace (one hot long prompt, a heavy tail
+//!    of one-shot short prompts) replayed under `--prefix-evict lru`
+//!    and `cost` with a tiny hot tier must produce the SAME decision
+//!    fingerprints (gold/answer/correct/steps/rewrites) while the cost
+//!    policy achieves a strictly higher prefix hit rate: LRU evicts
+//!    the hot prompt whenever two tail prompts intervene, the
+//!    cost policy keeps it because its refork-scaled recompute cost
+//!    dominates.
+//! 3. **Generator presets replay clean** — `diurnal` and `flash_crowd`
+//!    traces run end to end with zero errors.
+//!
+//! Emits one BENCH_JSON line; `trace_replay_throughput_runs_per_model_s`
+//! joins the `*throughput*` regression gate.
+
+mod common;
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use ssr::util::json;
+use ssr::workload::trace::{self, GenSpec, TraceEntry, TraceWriter};
+
+/// Hot-prompt repeats after the 3-access warmup (each separated by two
+/// one-shot tail prompts, so an LRU tier of capacity 2 always evicts
+/// the hot entry before it returns).
+const HOT_REPEATS: usize = 8;
+
+fn tmp_trace() -> PathBuf {
+    std::env::temp_dir().join(format!("ssr-bench-trace-{}.jsonl", std::process::id()))
+}
+
+fn entry(i: usize, expr: &str) -> TraceEntry {
+    TraceEntry {
+        offset_ms: (i * 10) as u64,
+        tenant: Some("bench".into()),
+        expr: expr.to_string(),
+        method: "ssr".into(),
+        paths: 2,
+        tau: 7,
+        seed: i as u64,
+        class: "interactive".into(),
+        deadline_ms: 0,
+    }
+}
+
+/// The adversarial skewed trace: warm the hot prompt with three
+/// consecutive accesses (it accrues reforks the cost score rides on),
+/// then alternate two fresh one-shot prompts with one hot access.
+/// Popularity is maximally heavy-tailed: one dominant prompt, a long
+/// tail of singletons.
+fn skewed_trace() -> Vec<TraceEntry> {
+    let hot = "37+24*15+38*2";
+    let mut out: Vec<TraceEntry> = (0..3).map(|i| entry(i, hot)).collect();
+    let mut i = out.len();
+    for k in 0..HOT_REPEATS {
+        for c in 0..2 {
+            out.push(entry(i, &format!("{}+{}", 2 + 2 * k, 3 + c)));
+            i += 1;
+        }
+        out.push(entry(i, hot));
+        i += 1;
+    }
+    out
+}
+
+fn base_cfg() -> ssr::config::SsrConfig {
+    let mut cfg = common::default_cfg();
+    cfg.shards = 1;
+    cfg
+}
+
+fn main() -> anyhow::Result<()> {
+    let t0 = Instant::now();
+
+    // --- 1. record -> load -> replay x2: determinism ------------------
+    let spec = GenSpec { n: 20, pool: 6, ..GenSpec::default() };
+    let generated = trace::heavy_tailed(&spec);
+    let path = tmp_trace();
+    {
+        let mut w = TraceWriter::create(&path)?;
+        for e in &generated {
+            w.record(e)?;
+        }
+    }
+    let loaded = trace::load(&path)?;
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(loaded, generated, "trace file round-trip drifted");
+
+    let (replies_a, metrics_a) = common::replay_trace(base_cfg(), 0x7ACE, &loaded)?;
+    let (replies_b, _) = common::replay_trace(base_cfg(), 0x7ACE, &loaded)?;
+    assert_eq!(metrics_a.errors, 0, "replay errored");
+    let a: Vec<_> = replies_a.into_iter().map(common::strip_timing).collect();
+    let b: Vec<_> = replies_b.into_iter().map(common::strip_timing).collect();
+    assert_eq!(a, b, "two replays of the same trace diverged");
+    let makespan = metrics_a.model_secs_makespan().max(1e-9);
+    let throughput = spec.n as f64 / makespan;
+    println!(
+        "## trace_replay: {} heavy-tailed requests replayed twice, identical replies \
+         ({throughput:.3} runs/model-s)",
+        spec.n
+    );
+
+    // --- 2. lru vs cost on the skewed trace ---------------------------
+    let skewed = skewed_trace();
+    let mut lru_cfg = base_cfg();
+    lru_cfg.prefix.capacity = 2;
+    lru_cfg.prefix.evict = ssr::config::EvictPolicy::Lru;
+    let mut cost_cfg = lru_cfg.clone();
+    cost_cfg.prefix.evict = ssr::config::EvictPolicy::Cost;
+
+    let (lru_replies, lru_m) = common::replay_trace(lru_cfg, 0x5EED, &skewed)?;
+    let (cost_replies, cost_m) = common::replay_trace(cost_cfg, 0x5EED, &skewed)?;
+    let lru_keys: Vec<_> = lru_replies.iter().map(common::decision_key).collect();
+    let cost_keys: Vec<_> = cost_replies.iter().map(common::decision_key).collect();
+    assert_eq!(lru_keys, cost_keys, "eviction policy changed solve decisions");
+    let (lru_rate, cost_rate) = (lru_m.prefix_hit_rate(), cost_m.prefix_hit_rate());
+    println!(
+        "  eviction: lru hit rate {lru_rate:.3} ({} hits)  cost hit rate {cost_rate:.3} \
+         ({} hits)  decisions identical over {} requests",
+        lru_m.prefix_hits,
+        cost_m.prefix_hits,
+        skewed.len()
+    );
+    assert!(
+        cost_rate > lru_rate,
+        "cost eviction must beat lru on the skewed trace (cost {cost_rate:.3} vs lru {lru_rate:.3})"
+    );
+
+    // --- 3. the other generator presets replay clean ------------------
+    let small = GenSpec { n: 8, pool: 4, ..GenSpec::default() };
+    for (name, t) in
+        [("diurnal", trace::diurnal(&small)), ("flash_crowd", trace::flash_crowd(&small))]
+    {
+        let (replies, m) = common::replay_trace(base_cfg(), 0xD1A, &t)?;
+        assert_eq!(m.errors, 0, "{name} replay errored");
+        assert!(
+            replies.iter().all(|r| r.get("ok").and_then(|v| v.bool()).unwrap_or(false)),
+            "{name}: non-ok reply"
+        );
+        println!("  preset {name}: {} requests replayed, 0 errors", t.len());
+    }
+
+    common::bench_json(
+        "trace_replay",
+        vec![
+            ("requests", json::i(spec.n as i64)),
+            ("skewed_requests", json::i(skewed.len() as i64)),
+            ("deterministic", ssr::util::json::Value::Bool(true)),
+            ("lru_hit_rate", json::n(lru_rate)),
+            ("cost_hit_rate", json::n(cost_rate)),
+            ("trace_replay_throughput_runs_per_model_s", json::n(throughput)),
+        ],
+    );
+    println!("[bench trace_replay] completed in {:.2}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -157,6 +157,16 @@ impl Backend for FaultInjector {
         self.inner.release_prefix(handle)
     }
 
+    // Spill export/import are cache bookkeeping, not step work: faults
+    // are injected only on the five step methods, so these pass through.
+    fn export_prefix(&mut self, handle: PrefixHandle) -> Option<Vec<u8>> {
+        self.inner.export_prefix(handle)
+    }
+
+    fn import_prefix(&mut self, bytes: &[u8]) -> Result<PrefixHandle> {
+        self.inner.import_prefix(bytes)
+    }
+
     fn prefix_bytes(&self, handle: PrefixHandle) -> u64 {
         self.inner.prefix_bytes(handle)
     }

@@ -386,6 +386,30 @@ pub trait Backend {
     /// open). Safe after forking: lanes own copies of the prefix state.
     fn release_prefix(&mut self, handle: PrefixHandle) -> Result<()>;
 
+    /// Serialize a live prefix into plain host bytes so the two-tier
+    /// prefix store (DESIGN.md §17) can demote it to disk on eviction
+    /// and resurrect it later — possibly in a different process — via
+    /// [`Backend::import_prefix`]. The handle stays live (the caller
+    /// still releases it). Backends whose prefix state is not cheaply
+    /// host-serializable return `None` and the tier simply drops the
+    /// entry on eviction (pjrt: documented best-effort — the K/V rows
+    /// are device-resident and recomputable, so spilling them is a
+    /// size/speed trade the host-side substrate doesn't need to make).
+    fn export_prefix(&mut self, _handle: PrefixHandle) -> Option<Vec<u8>> {
+        None
+    }
+
+    /// Rebuild a prefix from bytes produced by
+    /// [`Backend::export_prefix`] on an identically-seeded backend of
+    /// the same kind, returning a fresh live handle. Like
+    /// [`Backend::import_lane_state`], no prefill is billed and no
+    /// clock is charged — the spilled state *is* the paid-for prefill;
+    /// re-derivable state is recomputed from (backend seed, prompt
+    /// key). Default: unsupported.
+    fn import_prefix(&mut self, _bytes: &[u8]) -> Result<PrefixHandle> {
+        anyhow::bail!("this backend does not support prefix import")
+    }
+
     /// Approximate host bytes a live prefix retains (cached K/V
     /// literals, memoized logits, prompt copy) — the input to the
     /// prefix cache's byte bound. 0 for released/unknown handles.

@@ -245,8 +245,41 @@ impl ShardClass {
     }
 }
 
-/// Shared-prefix prefill & prefix-reuse cache knobs (DESIGN.md §2, §10).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// Eviction policy of the shared prefix tier (`--prefix-evict`,
+/// DESIGN.md §17). Cost/clock-only: the policy changes which prompts
+/// stay cached, never any run's decision stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EvictPolicy {
+    /// least-recently-used logical entry goes first (the historical
+    /// behaviour and the default)
+    #[default]
+    Lru,
+    /// minimum retention value goes first: prompt-prefill recompute
+    /// cost (`flops.rs` closed form) scaled by the entry's observed
+    /// refork frequency, recency as the tie-break
+    Cost,
+}
+
+impl EvictPolicy {
+    pub fn parse(s: &str) -> Result<EvictPolicy> {
+        Ok(match s {
+            "lru" => EvictPolicy::Lru,
+            "cost" => EvictPolicy::Cost,
+            _ => bail!("unknown eviction policy `{s}` (lru|cost)"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            EvictPolicy::Lru => "lru",
+            EvictPolicy::Cost => "cost",
+        }
+    }
+}
+
+/// Shared-prefix prefill & prefix-reuse cache knobs (DESIGN.md §2, §10,
+/// §17).
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct PrefixCacheCfg {
     /// open lane groups by prefilling the problem prompt once and
     /// forking lanes from it (off = legacy per-lane prefill, kept for
@@ -258,13 +291,30 @@ pub struct PrefixCacheCfg {
     /// byte budget over retained prefix state (`Backend::prefix_bytes`,
     /// summed across shards in the shared tier; 0 = entry cap only)
     pub max_bytes: u64,
+    /// hot-tier eviction policy (`--prefix-evict lru|cost`)
+    pub evict: EvictPolicy,
+    /// persistent spill tier directory (`--prefix-spill-dir`): evicted
+    /// and drained entries are demoted here and promoted back on miss;
+    /// survives restarts. None = evict-and-forget (the default). Must
+    /// be an absolute path (validated up front)
+    pub spill_dir: Option<PathBuf>,
+    /// live-payload byte budget of the spill tier
+    /// (`--prefix-spill-bytes`; 0 = unbounded)
+    pub spill_bytes: u64,
 }
 
 impl Default for PrefixCacheCfg {
     fn default() -> Self {
         // 1 GiB default budget: irrelevant for the calibrated substrate
         // (entries are ~100 bytes) but caps PJRT prompt K/V retention
-        PrefixCacheCfg { enabled: true, capacity: 256, max_bytes: 1 << 30 }
+        PrefixCacheCfg {
+            enabled: true,
+            capacity: 256,
+            max_bytes: 1 << 30,
+            evict: EvictPolicy::Lru,
+            spill_dir: None,
+            spill_bytes: 0,
+        }
     }
 }
 
@@ -280,6 +330,15 @@ impl PrefixCacheCfg {
                         bail!("prefix_cache.max_bytes must be >= 0, got {b}");
                     }
                     self.max_bytes = b as u64;
+                }
+                "evict" => self.evict = EvictPolicy::parse(val.str()?)?,
+                "spill_dir" => self.spill_dir = Some(PathBuf::from(val.str()?)),
+                "spill_bytes" => {
+                    let b = val.i64()?;
+                    if b < 0 {
+                        bail!("prefix_cache.spill_bytes must be >= 0, got {b}");
+                    }
+                    self.spill_bytes = b as u64;
                 }
                 other => bail!("unknown prefix_cache key `{other}`"),
             }
@@ -563,6 +622,20 @@ impl QosCfg {
     }
 }
 
+/// Path-style flags are rejected up front unless non-empty and
+/// absolute — a relative spill dir or trace path would silently depend
+/// on the server's CWD and surface as a confusing I/O error at first
+/// use instead of at startup.
+fn validate_path_flag(name: &str, p: &Path) -> Result<()> {
+    if p.as_os_str().is_empty() {
+        bail!("{name} must not be empty");
+    }
+    if !p.is_absolute() {
+        bail!("{name} must be an absolute path, got `{}`", p.display());
+    }
+    Ok(())
+}
+
 fn parse_bool(s: &str) -> Result<bool> {
     Ok(match s {
         "on" | "true" | "1" | "yes" => true,
@@ -655,6 +728,11 @@ pub struct SsrConfig {
     pub qos: QosCfg,
     /// deterministic fault-injection schedule (inactive by default)
     pub fault: FaultSpec,
+    /// record every admitted solve to this file (`--trace-record`;
+    /// versioned JSONL, `workload::trace`) for later deterministic
+    /// replay. None = recording off. Must be an absolute path
+    /// (validated up front)
+    pub trace_record: Option<PathBuf>,
 }
 
 impl Default for SsrConfig {
@@ -688,6 +766,7 @@ impl Default for SsrConfig {
             stream_buffer: 64,
             qos: QosCfg::default(),
             fault: FaultSpec::default(),
+            trace_record: None,
         }
     }
 }
@@ -731,6 +810,7 @@ impl SsrConfig {
                 "stream_buffer" => self.stream_buffer = val.usize()?,
                 "qos" => self.qos.apply_json(val)?,
                 "fault" => self.fault.apply_json(val)?,
+                "trace_record" => self.trace_record = Some(PathBuf::from(val.str()?)),
                 other => bail!("unknown config key `{other}`"),
             }
         }
@@ -796,6 +876,16 @@ impl SsrConfig {
         }
         self.prefix.capacity = args.opt_usize("prefix-cache-cap", self.prefix.capacity)?;
         self.prefix.max_bytes = args.opt_u64("prefix-cache-bytes", self.prefix.max_bytes)?;
+        if let Some(s) = args.opt("prefix-evict") {
+            self.prefix.evict = EvictPolicy::parse(s)?;
+        }
+        if let Some(d) = args.opt("prefix-spill-dir") {
+            self.prefix.spill_dir = Some(PathBuf::from(d));
+        }
+        self.prefix.spill_bytes = args.opt_u64("prefix-spill-bytes", self.prefix.spill_bytes)?;
+        if let Some(p) = args.opt("trace-record") {
+            self.trace_record = Some(PathBuf::from(p));
+        }
         self.deadline_ms = args.opt_u64("deadline-ms", self.deadline_ms)?;
         self.recover_retries = args.opt_u64("recover-retries", self.recover_retries as u64)? as u32;
         self.quarantine_cap = args.opt_usize("quarantine-cap", self.quarantine_cap)?;
@@ -918,6 +1008,16 @@ impl SsrConfig {
         // bound keeps the cache's O(capacity) LRU eviction scan cheap
         if self.prefix.capacity > 4096 {
             bail!("prefix_cache.capacity must be <= 4096, got {}", self.prefix.capacity);
+        }
+        // path-style flags fail at validation time with a structured
+        // error, not at first spill/record attempt deep in a shard
+        // thread. (`artifacts_dir` is exempt: its relative default is
+        // resolved against the repo root by `locate_artifacts`.)
+        if let Some(d) = &self.prefix.spill_dir {
+            validate_path_flag("prefix_cache.spill_dir (--prefix-spill-dir)", d)?;
+        }
+        if let Some(p) = &self.trace_record {
+            validate_path_flag("trace_record (--trace-record)", p)?;
         }
         if self.recover_retries > 16 {
             bail!("recover_retries must be <= 16, got {}", self.recover_retries);
@@ -1314,6 +1414,79 @@ mod tests {
         assert!(parse_bool("on").unwrap());
         assert!(!parse_bool("false").unwrap());
         assert!(parse_bool("maybe").is_err());
+    }
+
+    #[test]
+    fn spill_and_trace_knobs() {
+        let c = SsrConfig::default();
+        assert_eq!(c.prefix.evict, EvictPolicy::Lru, "lru stays the default policy");
+        assert!(c.prefix.spill_dir.is_none(), "spill tier is opt-in");
+        assert_eq!(c.prefix.spill_bytes, 0);
+        assert!(c.trace_record.is_none(), "trace recording is opt-in");
+
+        assert_eq!(EvictPolicy::parse("cost").unwrap(), EvictPolicy::Cost);
+        assert!(EvictPolicy::parse("mru").is_err());
+        assert_eq!(EvictPolicy::Cost.name(), "cost");
+        assert_eq!(EvictPolicy::Lru.name(), "lru");
+
+        let mut c = SsrConfig::default();
+        let v = Value::parse(
+            r#"{"prefix_cache": {"evict": "cost", "spill_dir": "/tmp/ssr-spill",
+                "spill_bytes": 4096}, "trace_record": "/tmp/ssr.trace"}"#,
+        )
+        .unwrap();
+        c.apply_json(&v).unwrap();
+        assert_eq!(c.prefix.evict, EvictPolicy::Cost);
+        assert_eq!(c.prefix.spill_dir.as_deref(), Some(Path::new("/tmp/ssr-spill")));
+        assert_eq!(c.prefix.spill_bytes, 4096);
+        assert_eq!(c.trace_record.as_deref(), Some(Path::new("/tmp/ssr.trace")));
+
+        let argv: Vec<String> = [
+            "serve",
+            "--prefix-evict",
+            "cost",
+            "--prefix-spill-dir",
+            "/tmp/s",
+            "--prefix-spill-bytes",
+            "1024",
+            "--trace-record",
+            "/tmp/t.trace",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let mut args = Args::parse(&argv).unwrap();
+        let mut c = SsrConfig::default();
+        c.apply_args(&mut args).unwrap();
+        assert_eq!(c.prefix.evict, EvictPolicy::Cost);
+        assert_eq!(c.prefix.spill_dir.as_deref(), Some(Path::new("/tmp/s")));
+        assert_eq!(c.prefix.spill_bytes, 1024);
+        assert_eq!(c.trace_record.as_deref(), Some(Path::new("/tmp/t.trace")));
+    }
+
+    #[test]
+    fn path_flags_are_validated_up_front() {
+        // empty and relative paths fail at config validation with a
+        // structured error, not at the first spill/record attempt
+        let mut c = SsrConfig::default();
+        assert!(c
+            .apply_json(&Value::parse(r#"{"prefix_cache": {"spill_dir": ""}}"#).unwrap())
+            .is_err());
+        let mut c = SsrConfig::default();
+        assert!(c
+            .apply_json(&Value::parse(r#"{"prefix_cache": {"spill_dir": "rel/dir"}}"#).unwrap())
+            .is_err());
+        let mut c = SsrConfig::default();
+        assert!(c
+            .apply_json(&Value::parse(r#"{"trace_record": "rel.trace"}"#).unwrap())
+            .is_err());
+        let mut c = SsrConfig::default();
+        assert!(c
+            .apply_json(&Value::parse(r#"{"prefix_cache": {"spill_bytes": -1}}"#).unwrap())
+            .is_err());
+        // the historical relative artifacts_dir default stays valid —
+        // it is resolved against the repo root, not the CWD
+        SsrConfig::default().validate().unwrap();
     }
 
     #[test]

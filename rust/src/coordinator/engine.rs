@@ -141,6 +141,9 @@ pub struct RunProgress {
     pub gamma: Option<f64>,
     /// current speculation window depth
     pub spec_depth: usize,
+    /// committed step tokens across all lanes so far — the monotone
+    /// total behind streamed `token_delta` frames
+    pub tokens: u64,
 }
 
 /// Plurality answer over a finished-vote tally; ties break to the
@@ -350,6 +353,10 @@ struct RunCore {
     selection: Vec<usize>,
     /// answer -> finished lanes voting it (Fast2 agreement tally)
     finished_answers: BTreeMap<i64, usize>,
+    /// committed step tokens across all lanes (monotone; outcomes are
+    /// decision inputs, so this is placement-invariant like the rest of
+    /// the core and survives migration verbatim)
+    tokens: u64,
     stopped: bool,
     t0: Instant,
     /// speculation depth controller + acceptance ledger
@@ -525,6 +532,7 @@ impl ProblemRun {
                 lanes,
                 selection,
                 finished_answers: BTreeMap::new(),
+                tokens: 0,
                 stopped: false,
                 t0,
                 spec: SpecCtl::new(cfg.spec_depth),
@@ -593,6 +601,7 @@ impl ProblemRun {
             vote: plurality(&self.core.finished_answers),
             gamma: self.core.spec.gamma,
             spec_depth: self.core.spec.depth,
+            tokens: self.core.tokens,
         }
     }
 
@@ -644,6 +653,7 @@ impl ProblemRun {
     pub fn observe(&mut self, backend: &dyn Backend, results: Vec<StepResult>) {
         for r in results {
             let i = *self.index.get(&r.path).expect("step result for unknown path");
+            self.core.tokens += r.outcome.tokens.len() as u64;
             let lp = &mut self.core.lanes[i];
             lp.steps_taken += 1;
             lp.scores.push(r.score);

@@ -42,6 +42,11 @@ struct TapState {
     dropped: AtomicU64,
     /// latched by the first `first_vote` emission (exactly-once)
     first_vote: AtomicBool,
+    /// token total already announced via a `token_delta` event — lives
+    /// on the shared tap state (not the scheduler's per-shard run
+    /// bookkeeping) so a migrated run resumes its delta stream where
+    /// the previous shard left off
+    tokens_reported: AtomicU64,
     /// client `request_id`, stamped onto every queued event
     request_id: Option<Value>,
 }
@@ -54,6 +59,7 @@ impl EventTap {
                 cap: cap.max(1),
                 dropped: AtomicU64::new(0),
                 first_vote: AtomicBool::new(false),
+                tokens_reported: AtomicU64::new(0),
                 request_id,
             }),
         }
@@ -96,6 +102,15 @@ impl EventTap {
     /// Latch the first-vote emission; true exactly once per run.
     pub fn mark_first_vote(&self) -> bool {
         !self.state.first_vote.swap(true, Ordering::Relaxed)
+    }
+
+    /// Advance the announced token total to `total`, returning how many
+    /// tokens are newly accounted since the last call (0 when the total
+    /// has not moved — emit nothing then). Totals are monotone per run,
+    /// so the swap makes the sum of all emitted deltas equal the final
+    /// total even across migration/steal re-homing.
+    pub fn token_delta(&self, total: u64) -> u64 {
+        total.saturating_sub(self.state.tokens_reported.swap(total, Ordering::Relaxed))
     }
 }
 
@@ -180,6 +195,19 @@ mod tests {
         assert!(!tap.mark_first_vote());
         let clone = tap.clone();
         assert!(!clone.mark_first_vote(), "latch is shared state");
+    }
+
+    #[test]
+    fn token_deltas_sum_to_the_final_total() {
+        let tap = EventTap::new(8, None);
+        assert_eq!(tap.token_delta(0), 0, "no tokens yet, nothing to announce");
+        let mut announced = 0;
+        for total in [3u64, 3, 10, 42] {
+            announced += tap.token_delta(total);
+        }
+        assert_eq!(announced, 42);
+        // a re-homed run keeps counting on the shared state
+        assert_eq!(tap.clone().token_delta(50), 8);
     }
 
     #[test]

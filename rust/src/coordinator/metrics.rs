@@ -66,6 +66,27 @@ pub struct Metrics {
     /// tier hits that still prefilled because the serving shard had no
     /// handle yet (sharded serving only; 0 on a single shard)
     pub prefix_shard_fills: u64,
+    /// spill-tier counters (DESIGN.md §17): hot-tier evictions/drains
+    /// demoted into the persistent store
+    pub prefix_spills: u64,
+    /// logical misses served by promoting a spill record instead of
+    /// prefilling (counted under `prefix_misses` too, so the hot-tier
+    /// hit rate stays honest)
+    pub prefix_promotes: u64,
+    /// promotes of records that predate this process — the warm-restart
+    /// wins `--prefix-spill-dir` exists for
+    pub prefix_warm_hits: u64,
+    /// two-tier occupancy gauges: hot-tier live entries/bytes and
+    /// persistent spill-store records/payload bytes
+    pub prefix_hot_entries: u64,
+    pub prefix_hot_bytes: u64,
+    pub prefix_spill_entries: u64,
+    pub prefix_spill_bytes: u64,
+    /// per-LIVE-shard cumulative prompt-prefill tokens (target + draft
+    /// prompt passes only — the ingest warm restarts avoid); dead ids
+    /// fold into `retired_prefill_tokens` on removal
+    pub shard_prefill_tokens: BTreeMap<usize, u64>,
+    retired_prefill_tokens: u64,
     /// sum of the per-shard backend model-clocks (real PJRT seconds,
     /// virtual seconds on the calibrated substrate) — total model COST
     pub model_secs: f64,
@@ -202,6 +223,15 @@ impl Metrics {
             prefix_misses: 0,
             prefix_evictions: 0,
             prefix_shard_fills: 0,
+            prefix_spills: 0,
+            prefix_promotes: 0,
+            prefix_warm_hits: 0,
+            prefix_hot_entries: 0,
+            prefix_hot_bytes: 0,
+            prefix_spill_entries: 0,
+            prefix_spill_bytes: 0,
+            shard_prefill_tokens: BTreeMap::new(),
+            retired_prefill_tokens: 0,
             model_secs: 0.0,
             shard_clocks: BTreeMap::new(),
             shard_requests: BTreeMap::new(),
@@ -322,6 +352,9 @@ impl Metrics {
         }
         if let Some(reqs) = self.shard_requests.remove(&shard) {
             self.retired_requests += reqs;
+        }
+        if let Some(toks) = self.shard_prefill_tokens.remove(&shard) {
+            self.retired_prefill_tokens += toks;
         }
         self.model_secs = self.retired_model_secs + self.shard_clocks.values().sum::<f64>();
     }
@@ -562,6 +595,41 @@ impl Metrics {
         self.prefix_shard_fills = fills;
     }
 
+    /// Sync the spill-tier counters (demotions, promotes, warm-restart
+    /// promotes) from the shared tier's stats.
+    pub fn set_prefix_spill(&mut self, spills: u64, promotes: u64, warm_hits: u64) {
+        self.prefix_spills = spills;
+        self.prefix_promotes = promotes;
+        self.prefix_warm_hits = warm_hits;
+    }
+
+    /// Sync the two-tier occupancy gauges.
+    pub fn set_prefix_tier_gauges(
+        &mut self,
+        hot_entries: usize,
+        hot_bytes: u64,
+        spill_entries: usize,
+        spill_bytes: u64,
+    ) {
+        self.prefix_hot_entries = hot_entries as u64;
+        self.prefix_hot_bytes = hot_bytes;
+        self.prefix_spill_entries = spill_entries as u64;
+        self.prefix_spill_bytes = spill_bytes;
+    }
+
+    /// One shard's cumulative prompt-prefill token count (target +
+    /// draft prompt passes); the pool total is the retired fold plus
+    /// the live columns.
+    pub fn set_shard_prefill_tokens(&mut self, shard: usize, tokens: u64) {
+        self.shard_prefill_tokens.insert(shard, tokens);
+    }
+
+    /// Prompt tokens prefilled across live and retired shards — the
+    /// scalar the warm-restart bench compares cold vs warm.
+    pub fn prefill_prompt_tokens(&self) -> u64 {
+        self.retired_prefill_tokens + self.shard_prefill_tokens.values().sum::<u64>()
+    }
+
     /// Fraction of solves whose prompt prefill was served from cache.
     pub fn prefix_hit_rate(&self) -> f64 {
         let total = self.prefix_hits + self.prefix_misses;
@@ -569,6 +637,17 @@ impl Metrics {
             0.0
         } else {
             self.prefix_hits as f64 / total as f64
+        }
+    }
+
+    /// Fraction of hot-tier misses rescued by the spill store (promotes
+    /// are counted under `prefix_misses`, so this reads promotes over
+    /// misses; 0 before any miss).
+    pub fn prefix_spill_hit_rate(&self) -> f64 {
+        if self.prefix_misses == 0 {
+            0.0
+        } else {
+            self.prefix_promotes as f64 / self.prefix_misses as f64
         }
     }
 
@@ -664,6 +743,15 @@ impl Metrics {
             ("prefix_evictions", i(self.prefix_evictions as i64)),
             ("prefix_shard_fills", i(self.prefix_shard_fills as i64)),
             ("prefix_hit_rate", n(self.prefix_hit_rate())),
+            ("prefix_spills", i(self.prefix_spills as i64)),
+            ("prefix_promotes", i(self.prefix_promotes as i64)),
+            ("prefix_warm_hits", i(self.prefix_warm_hits as i64)),
+            ("prefix_spill_hit_rate", n(self.prefix_spill_hit_rate())),
+            ("prefix_hot_entries", i(self.prefix_hot_entries as i64)),
+            ("prefix_hot_bytes", i(self.prefix_hot_bytes as i64)),
+            ("prefix_spill_entries", i(self.prefix_spill_entries as i64)),
+            ("prefix_spill_bytes", i(self.prefix_spill_bytes as i64)),
+            ("prefill_prompt_tokens", i(self.prefill_prompt_tokens() as i64)),
             ("model_secs", n(self.model_secs)),
             ("model_secs_makespan", n(self.model_secs_makespan())),
             ("model_secs_draft", n(self.model_secs_split().0)),
@@ -948,6 +1036,34 @@ mod tests {
         assert_eq!(m.prefix_hits, 2);
         assert_eq!(m.prefix_evictions, 1);
         assert!((m.prefix_hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spill_tier_gauges_and_prefill_fold() {
+        let mut m = Metrics::new();
+        assert_eq!(m.prefix_spill_hit_rate(), 0.0, "no misses reads 0");
+        m.set_prefix_cache(6, 4, 3);
+        m.set_prefix_spill(3, 2, 1);
+        m.set_prefix_tier_gauges(5, 1200, 7, 900);
+        assert!((m.prefix_spill_hit_rate() - 0.5).abs() < 1e-12, "2 of 4 misses promoted");
+        m.set_shard_prefill_tokens(0, 100);
+        m.set_shard_prefill_tokens(1, 40);
+        assert_eq!(m.prefill_prompt_tokens(), 140);
+        // a retired shard's ingest keeps counting, its column is freed
+        m.retire_shard(1);
+        m.set_shard_prefill_tokens(0, 110);
+        assert_eq!(m.prefill_prompt_tokens(), 150);
+        assert!(!m.shard_prefill_tokens.contains_key(&1));
+        let v = m.summary_json(1.0);
+        assert_eq!(v.get_i64("prefix_spills").unwrap(), 3);
+        assert_eq!(v.get_i64("prefix_promotes").unwrap(), 2);
+        assert_eq!(v.get_i64("prefix_warm_hits").unwrap(), 1);
+        assert!((v.get_f64("prefix_spill_hit_rate").unwrap() - 0.5).abs() < 1e-12);
+        assert_eq!(v.get_i64("prefix_hot_entries").unwrap(), 5);
+        assert_eq!(v.get_i64("prefix_hot_bytes").unwrap(), 1200);
+        assert_eq!(v.get_i64("prefix_spill_entries").unwrap(), 7);
+        assert_eq!(v.get_i64("prefix_spill_bytes").unwrap(), 900);
+        assert_eq!(v.get_i64("prefill_prompt_tokens").unwrap(), 150);
     }
 
     #[test]

@@ -87,7 +87,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use super::admission::QosClass;
 use super::metrics::Metrics;
-use super::prefix::SharedPrefixTier;
+use super::prefix::{SharedPrefixTier, SpillStore};
 use super::scheduler::{
     self, lane_estimate, QueuedJob, RunTicket, ShardCtx, ShardMsg, SolveRequest, TicketMap, Work,
 };
@@ -1186,9 +1186,22 @@ impl BackendPool {
         F: Fn(usize) -> Result<Box<dyn Backend>> + Send + Sync + 'static,
     {
         let shards = cfg.shards.max(1);
-        let tier = Arc::new(SharedPrefixTier::new(
+        // the spill store opens before any shard spawns: a warm restart
+        // reloads the prior process's demoted prefixes, and an unusable
+        // spill dir fails pool construction instead of surfacing as
+        // silent cache misses later
+        let spill = cfg
+            .prefix
+            .spill_dir
+            .as_ref()
+            .map(|d| SpillStore::open(d, cfg.prefix.spill_bytes))
+            .transpose()
+            .context("opening prefix spill store")?;
+        let tier = Arc::new(SharedPrefixTier::with_options(
             if cfg.prefix.enabled { cfg.prefix.capacity } else { 0 },
             cfg.prefix.max_bytes,
+            cfg.prefix.evict,
+            spill,
         ));
         lock_ok(&metrics).init_shards(shards);
         let qcap = cfg.quarantine_cap;

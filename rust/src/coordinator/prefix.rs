@@ -27,25 +27,55 @@
 //!   on first use and `clear_shard` leaves no dead-id residue, so
 //!   sustained autoscale churn cannot grow the tables (DESIGN.md §12).
 //!
+//! A third, persistent tier sits UNDER the shared tier (DESIGN.md §17):
+//! [`SpillStore`], an append-only on-disk log plus index snapshot.
+//! When the hot tier evicts a logical entry, the evicting shard's
+//! serialized prefill state (`Backend::export_prefix` — exact for the
+//! calibrated backend, best-effort `None` for pjrt) is *demoted* to the
+//! store; a later logical miss *promotes* it back via
+//! `Backend::import_prefix` (no prompt prefill, no clock charge).
+//! `clear_shard` — the graceful drain path — demotes every entry the
+//! departing shard holds, so a restarted pool pointed at the same
+//! `--prefix-spill-dir` reloads the store at startup and serves the old
+//! working set warm (`warm_hits` counts promotes of entries that
+//! predate this process). Spill I/O runs under the tier lock, matching
+//! the existing release-under-lock discipline: eviction is already a
+//! stop-the-tier event and the store does one appending write per
+//! demotion.
+//!
+//! Eviction is policy-selectable (`--prefix-evict lru|cost`):
+//! [`EvictPolicy::Lru`] is the historical recency order;
+//! [`EvictPolicy::Cost`] keeps the entries that are most expensive to
+//! lose — recompute cost from the `flops.rs` closed form (prompt
+//! prefill tokens) scaled by the observed refork frequency, recency as
+//! the tie-break. Either way prefix reuse stays a cost/clock concern
+//! only: run seeds and decisions are untouched (DESIGN.md §2).
+//!
 //! Ownership: a handle returned with `retained = true` belongs to the
 //! cache/tier (released on eviction or clear); with `retained = false`
 //! (capacity 0 passthrough) the caller must release it after forking.
 //! Forked lanes never dangle either way — the backend contract says
 //! lanes copy what they need at fork time. Hit / miss / eviction /
-//! shard-fill counters feed the serving [`Metrics`] (`prefix_hits` etc.
-//! in `{"op":"stats"}`).
+//! shard-fill / spill / promote counters feed the serving [`Metrics`]
+//! (`prefix_hits` etc. in `{"op":"stats"}`).
 //!
 //! [`Metrics`]: super::metrics::Metrics
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
 use std::sync::{Condvar, Mutex};
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::backend::{Backend, PrefixHandle};
+use crate::config::EvictPolicy;
 use crate::util::hash;
 use crate::util::sync::lock_ok;
 use crate::workload::Problem;
+
+use super::flops;
 
 /// Result of a prefix acquisition ([`PrefixCache::acquire`] /
 /// [`SharedPrefixTier::acquire_for_shard`]).
@@ -241,6 +271,251 @@ impl PrefixProvider for PrefixCache {
 }
 
 // ---------------------------------------------------------------------------
+// Spill tier: append-only on-disk store for demoted prefixes (§17)
+// ---------------------------------------------------------------------------
+
+/// Index entry for one live spill record: where its payload sits in
+/// `spill.dat`, plus the prompt length (for the cost policy on
+/// re-promotion) and whether the record predates this process.
+struct SpillRec {
+    offset: u64,
+    len: u32,
+    prompt_tokens: u64,
+    /// loaded from disk at `open` rather than demoted in-process — a
+    /// promote of a warm record is a `warm_hits` (warm-restart) hit
+    warm: bool,
+}
+
+/// Persistent spill tier under the [`SharedPrefixTier`]: an append-only
+/// record log (`spill.dat`) plus an index snapshot (`spill.idx`).
+///
+/// Log format (little-endian), one record per mutation:
+/// `[tag u8][key u64][prompt_tokens u32][len u32][payload: len bytes]`
+/// with `tag = 1` for a put and `tag = 0` (empty payload) for a
+/// delete/tombstone — so the live set is always reconstructible by a
+/// forward scan where later records win. The index file is a snapshot
+/// (`[dat_len u64][n u32]` then `n × [key u64][offset u64][len
+/// u32][prompt_tokens u32]` in insertion order), rewritten atomically
+/// (tmp + rename) after each mutation and trusted at `open` only when
+/// its `dat_len` stamp matches the log — otherwise the log is scanned.
+///
+/// A byte budget (`--prefix-spill-bytes`, 0 = unbounded) bounds the
+/// LIVE payload bytes: overflow drops the oldest live records with
+/// tombstones (the newest record is always admitted, mirroring the hot
+/// tiers' always-admit rule). Dead log space is not compacted — the log
+/// is bench/restart-scale, not a database; compaction is a ROADMAP item.
+pub struct SpillStore {
+    dir: PathBuf,
+    file: File,
+    /// log length in bytes (tracked, not re-stat'ed; append-only)
+    dat_len: u64,
+    /// live payload byte budget (0 = unbounded)
+    max_bytes: u64,
+    live_bytes: u64,
+    index: HashMap<u64, SpillRec>,
+    /// live keys in insertion order (unique; re-put moves to the back)
+    order: VecDeque<u64>,
+}
+
+const SPILL_HDR: usize = 17; // tag(1) + key(8) + prompt_tokens(4) + len(4)
+const SPILL_IDX_ENTRY: usize = 24; // key(8) + offset(8) + len(4) + prompt_tokens(4)
+
+impl SpillStore {
+    /// Open (or create) the spill store in `dir`. Records already on
+    /// disk are loaded as the warm set for this incarnation.
+    pub fn open(dir: &Path, max_bytes: u64) -> Result<SpillStore> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating prefix spill dir {}", dir.display()))?;
+        let dat = dir.join("spill.dat");
+        let file = OpenOptions::new()
+            .read(true)
+            .append(true)
+            .create(true)
+            .open(&dat)
+            .with_context(|| format!("opening {}", dat.display()))?;
+        let dat_len = file.metadata()?.len();
+        let mut store = SpillStore {
+            dir: dir.to_path_buf(),
+            file,
+            dat_len,
+            max_bytes,
+            live_bytes: 0,
+            index: HashMap::new(),
+            order: VecDeque::new(),
+        };
+        if !store.load_index()? {
+            store.scan_dat()?;
+            store.write_index()?;
+        }
+        Ok(store)
+    }
+
+    /// Live records.
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+
+    /// Live payload bytes (dead log space excluded).
+    pub fn bytes_live(&self) -> u64 {
+        self.live_bytes
+    }
+
+    #[cfg(test)]
+    fn contains(&self, key: u64) -> bool {
+        self.index.contains_key(&key)
+    }
+
+    /// Trust the index snapshot only when its stamp matches the log.
+    fn load_index(&mut self) -> Result<bool> {
+        let buf = match std::fs::read(self.dir.join("spill.idx")) {
+            Ok(b) => b,
+            Err(_) => return Ok(false),
+        };
+        if buf.len() < 12 {
+            return Ok(false);
+        }
+        let stamp = u64::from_le_bytes(buf[0..8].try_into().expect("8 bytes"));
+        let n = u32::from_le_bytes(buf[8..12].try_into().expect("4 bytes")) as usize;
+        if stamp != self.dat_len || buf.len() != 12 + n * SPILL_IDX_ENTRY {
+            return Ok(false);
+        }
+        for i in 0..n {
+            let o = 12 + i * SPILL_IDX_ENTRY;
+            let key = u64::from_le_bytes(buf[o..o + 8].try_into().expect("8 bytes"));
+            let offset = u64::from_le_bytes(buf[o + 8..o + 16].try_into().expect("8 bytes"));
+            let len = u32::from_le_bytes(buf[o + 16..o + 20].try_into().expect("4 bytes"));
+            let ptoks = u32::from_le_bytes(buf[o + 20..o + 24].try_into().expect("4 bytes"));
+            self.order.push_back(key);
+            self.index.insert(
+                key,
+                SpillRec { offset, len, prompt_tokens: ptoks as u64, warm: true },
+            );
+        }
+        self.live_bytes = self.index.values().map(|r| r.len as u64).sum();
+        Ok(true)
+    }
+
+    /// Rebuild the live set by a forward log scan (later records win,
+    /// tombstones delete). A truncated tail record is ignored.
+    fn scan_dat(&mut self) -> Result<()> {
+        self.index.clear();
+        self.order.clear();
+        self.file.seek(SeekFrom::Start(0))?;
+        let mut pos = 0u64;
+        let mut hdr = [0u8; SPILL_HDR];
+        while pos + SPILL_HDR as u64 <= self.dat_len {
+            self.file.read_exact(&mut hdr)?;
+            let tag = hdr[0];
+            let key = u64::from_le_bytes(hdr[1..9].try_into().expect("8 bytes"));
+            let ptoks = u32::from_le_bytes(hdr[9..13].try_into().expect("4 bytes"));
+            let len = u32::from_le_bytes(hdr[13..17].try_into().expect("4 bytes"));
+            let payload_off = pos + SPILL_HDR as u64;
+            if payload_off + len as u64 > self.dat_len {
+                break;
+            }
+            self.order.retain(|k| *k != key);
+            if tag == 1 {
+                self.order.push_back(key);
+                self.index.insert(
+                    key,
+                    SpillRec { offset: payload_off, len, prompt_tokens: ptoks as u64, warm: true },
+                );
+            } else {
+                self.index.remove(&key);
+            }
+            self.file.seek(SeekFrom::Current(len as i64))?;
+            pos = payload_off + len as u64;
+        }
+        self.live_bytes = self.index.values().map(|r| r.len as u64).sum();
+        Ok(())
+    }
+
+    /// Snapshot the live index atomically (tmp + rename).
+    fn write_index(&mut self) -> Result<()> {
+        let mut buf = Vec::with_capacity(12 + self.order.len() * SPILL_IDX_ENTRY);
+        buf.extend_from_slice(&self.dat_len.to_le_bytes());
+        buf.extend_from_slice(&(self.index.len() as u32).to_le_bytes());
+        for k in &self.order {
+            let r = &self.index[k];
+            buf.extend_from_slice(&k.to_le_bytes());
+            buf.extend_from_slice(&r.offset.to_le_bytes());
+            buf.extend_from_slice(&r.len.to_le_bytes());
+            buf.extend_from_slice(&(r.prompt_tokens.min(u32::MAX as u64) as u32).to_le_bytes());
+        }
+        let tmp = self.dir.join("spill.idx.tmp");
+        std::fs::write(&tmp, &buf)?;
+        std::fs::rename(&tmp, self.dir.join("spill.idx"))?;
+        Ok(())
+    }
+
+    /// Append a tombstone and drop `key` from the live set.
+    fn delete(&mut self, key: u64) -> Result<()> {
+        if let Some(rec) = self.index.remove(&key) {
+            self.order.retain(|k| *k != key);
+            self.live_bytes = self.live_bytes.saturating_sub(rec.len as u64);
+            let mut hdr = [0u8; SPILL_HDR];
+            hdr[1..9].copy_from_slice(&key.to_le_bytes());
+            self.file.write_all(&hdr)?;
+            self.dat_len += SPILL_HDR as u64;
+        }
+        Ok(())
+    }
+
+    /// Demote: append a record for `key` (re-put replaces), then shed
+    /// the oldest live records until back under the byte budget.
+    fn put(&mut self, key: u64, prompt_tokens: u64, payload: &[u8]) -> Result<()> {
+        let len = u32::try_from(payload.len()).context("spill payload too large")?;
+        if let Some(old) = self.index.remove(&key) {
+            self.live_bytes = self.live_bytes.saturating_sub(old.len as u64);
+            self.order.retain(|k| *k != key);
+        }
+        let mut rec = Vec::with_capacity(SPILL_HDR + payload.len());
+        rec.push(1u8);
+        rec.extend_from_slice(&key.to_le_bytes());
+        rec.extend_from_slice(&(prompt_tokens.min(u32::MAX as u64) as u32).to_le_bytes());
+        rec.extend_from_slice(&len.to_le_bytes());
+        rec.extend_from_slice(payload);
+        self.file.write_all(&rec)?;
+        let offset = self.dat_len + SPILL_HDR as u64;
+        self.dat_len += rec.len() as u64;
+        self.index.insert(key, SpillRec { offset, len, prompt_tokens, warm: false });
+        self.order.push_back(key);
+        self.live_bytes += len as u64;
+        while self.max_bytes > 0 && self.live_bytes > self.max_bytes && self.index.len() > 1 {
+            let Some(oldest) = self.order.front().copied() else { break };
+            if oldest == key {
+                break; // the newcomer is always admitted
+            }
+            self.delete(oldest)?;
+        }
+        self.write_index()
+    }
+
+    /// Promote: read `key`'s payload and remove it from the live set.
+    /// I/O failures degrade to a miss (the record is tombstoned).
+    fn take(&mut self, key: u64) -> Option<(Vec<u8>, u64, bool)> {
+        let (offset, len, ptoks, warm) = {
+            let r = self.index.get(&key)?;
+            (r.offset, r.len, r.prompt_tokens, r.warm)
+        };
+        let mut payload = vec![0u8; len as usize];
+        let read_ok = self.file.seek(SeekFrom::Start(offset)).is_ok()
+            && self.file.read_exact(&mut payload).is_ok();
+        let _ = self.delete(key);
+        let _ = self.write_index();
+        if read_ok {
+            Some((payload, ptoks, warm))
+        } else {
+            None
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Shared tier: one logical cache, per-shard handle maps (DESIGN.md §10)
 // ---------------------------------------------------------------------------
 
@@ -258,6 +533,13 @@ pub struct TierStats {
     pub shard_fills: u64,
     /// logical entries evicted by the capacity/byte bounds
     pub evictions: u64,
+    /// evicted/drained entries demoted into the spill store
+    pub spills: u64,
+    /// logical misses served by promoting a spill record (no prefill;
+    /// still counted under `misses` so the hot-tier hit rate is honest)
+    pub promotes: u64,
+    /// promotes of records that predate this process (warm restarts)
+    pub warm_hits: u64,
 }
 
 /// One (entry, shard) slot of the tier: the in-flight latch. `Pending`
@@ -279,11 +561,25 @@ struct TierEntry {
     /// the shard never served this prompt)
     per_shard: HashMap<usize, SlotState>,
     last_used: u64,
+    /// prompt length in tokens — the recompute cost of losing the entry
+    prompt_tokens: u64,
+    /// ready-slot hits + shard fills since the entry was created: how
+    /// often this prompt actually reforked out of the cache
+    reforks: u64,
 }
 
 impl TierEntry {
     fn has_pending(&self) -> bool {
         self.per_shard.values().any(|s| matches!(s, SlotState::Pending))
+    }
+
+    /// Cost-aware retention value: the prompt-prefill recompute cost
+    /// (`flops.rs` closed form at zero forks = the shared prompt pass)
+    /// scaled by the observed refork frequency. The eviction victim is
+    /// the MINIMUM — cheap-to-recompute, rarely-reforked entries go
+    /// first; recency breaks ties.
+    fn retain_score(&self) -> u64 {
+        (1 + self.reforks) * flops::prefill_tokens_shared(0, self.prompt_tokens, 0)
     }
 }
 
@@ -292,35 +588,58 @@ struct TierInner {
     max_bytes: u64,
     bytes: u64,
     tick: u64,
+    policy: EvictPolicy,
     map: HashMap<u64, TierEntry>,
     /// handles evicted while their owning shard wasn't the caller:
     /// release must run on the owning shard's thread (backends are
     /// thread-owned), so they park here until that shard next calls in.
     /// Keyed by live shard id; a drained shard's queue leaves with it.
     pending_release: HashMap<usize, Vec<PrefixHandle>>,
+    /// persistent demotion target (`--prefix-spill-dir`); None = the
+    /// historical evict-and-forget behaviour
+    spill: Option<SpillStore>,
     stats: TierStats,
 }
 
 impl TierInner {
-    /// Evict the LRU logical entry (skipping `protect` and any entry
-    /// with an in-flight fill — a `Pending` slot has no handle to
-    /// release yet): this shard's handle is released inline on
-    /// `backend`; other shards' handles park on their pending queues.
-    /// Returns false when nothing evictable remains.
-    fn evict_lru(
+    /// Evict one logical entry (skipping `protect` and any entry with
+    /// an in-flight fill — a `Pending` slot has no handle to release
+    /// yet), chosen by the configured policy: LRU recency or minimum
+    /// retain-score. If a spill store is configured and the CALLING
+    /// shard holds a Ready handle (the only backend this thread may
+    /// touch), the entry is demoted to disk before release. This
+    /// shard's handle is released inline on `backend`; other shards'
+    /// handles park on their pending queues. Returns false when nothing
+    /// evictable remains.
+    fn evict_one(
         &mut self,
         backend: &mut dyn Backend,
         cur_shard: usize,
         protect: Option<u64>,
     ) -> bool {
-        let victim = self
-            .map
-            .iter()
-            .filter(|(k, e)| Some(**k) != protect && !e.has_pending())
-            .min_by_key(|(_, e)| e.last_used)
-            .map(|(&k, _)| k);
+        let candidates = || {
+            self.map.iter().filter(|(k, e)| Some(**k) != protect && !e.has_pending())
+        };
+        let victim = match self.policy {
+            EvictPolicy::Lru => candidates().min_by_key(|(_, e)| e.last_used),
+            EvictPolicy::Cost => {
+                candidates().min_by_key(|(_, e)| (e.retain_score(), e.last_used))
+            }
+        }
+        .map(|(&k, _)| k);
         let Some(k) = victim else { return false };
         let e = self.map.remove(&k).expect("victim key present");
+        if let (Some(spill), Some(SlotState::Ready { handle, .. })) =
+            (self.spill.as_mut(), e.per_shard.get(&cur_shard))
+        {
+            // demotion is best-effort: a backend without export support
+            // (pjrt) or an I/O failure degrades to plain eviction
+            if let Some(payload) = backend.export_prefix(*handle) {
+                if spill.put(k, e.prompt_tokens, &payload).is_ok() {
+                    self.stats.spills += 1;
+                }
+            }
+        }
         for (s, slot) in e.per_shard {
             if let SlotState::Ready { handle, bytes } = slot {
                 self.bytes = self.bytes.saturating_sub(bytes);
@@ -360,14 +679,29 @@ impl SharedPrefixTier {
     /// shard leaves no residue, so no shard count is declared up
     /// front.
     pub fn new(capacity: usize, max_bytes: u64) -> Self {
+        Self::with_options(capacity, max_bytes, EvictPolicy::Lru, None)
+    }
+
+    /// Full construction: eviction `policy` (`--prefix-evict`) and an
+    /// optional persistent [`SpillStore`] (`--prefix-spill-dir`). With
+    /// the defaults (`Lru`, no spill) this is byte-for-byte the
+    /// historical tier.
+    pub fn with_options(
+        capacity: usize,
+        max_bytes: u64,
+        policy: EvictPolicy,
+        spill: Option<SpillStore>,
+    ) -> Self {
         SharedPrefixTier {
             inner: Mutex::new(TierInner {
                 capacity,
                 max_bytes,
                 bytes: 0,
                 tick: 0,
+                policy,
                 map: HashMap::new(),
                 pending_release: HashMap::new(),
+                spill,
                 stats: TierStats::default(),
             }),
             filled: Condvar::new(),
@@ -394,6 +728,16 @@ impl SharedPrefixTier {
 
     pub fn stats(&self) -> TierStats {
         lock_ok(&self.inner).stats.clone()
+    }
+
+    /// Live records in the spill tier (0 when no spill dir is set).
+    pub fn spill_entries(&self) -> usize {
+        lock_ok(&self.inner).spill.as_ref().map_or(0, |s| s.len())
+    }
+
+    /// Live payload bytes in the spill tier.
+    pub fn spill_bytes(&self) -> u64 {
+        lock_ok(&self.inner).spill.as_ref().map_or(0, |s| s.bytes_live())
     }
 
     /// Return a live prefix for `problem` on `shard`'s backend,
@@ -439,6 +783,7 @@ impl SharedPrefixTier {
                 match e.per_shard.get(&shard) {
                     Some(SlotState::Ready { handle, .. }) => {
                         let handle = *handle;
+                        e.reforks += 1;
                         inner.stats.hits += 1;
                         return Ok(Acquired { handle, retained: true, hit: true });
                     }
@@ -467,16 +812,59 @@ impl SharedPrefixTier {
                     }
                 }
             }
-            // logical miss: make room, insert the latched entry, then
-            // prefill outside the lock
+            // logical miss: promote from the spill tier if the prompt
+            // was demoted earlier (no prefill), else make room, insert
+            // the latched entry, and prefill outside the lock
             inner.stats.misses += 1;
+            if let Some((payload, ptoks, warm)) = inner.spill.as_mut().and_then(|s| s.take(k)) {
+                // import under the tier lock, matching the
+                // release-under-lock discipline; a failed import (e.g.
+                // a backend without import support) consumed the record
+                // and degrades to a plain prefill below
+                if let Ok(handle) = backend.import_prefix(&payload) {
+                    inner.stats.promotes += 1;
+                    if warm {
+                        inner.stats.warm_hits += 1;
+                    }
+                    while inner.map.len() >= inner.capacity {
+                        if !inner.evict_one(backend, shard, None) {
+                            break;
+                        }
+                    }
+                    let cost = backend.prefix_bytes(handle);
+                    let per_shard =
+                        HashMap::from([(shard, SlotState::Ready { handle, bytes: cost })]);
+                    inner.map.insert(
+                        k,
+                        TierEntry { per_shard, last_used: tick, prompt_tokens: ptoks, reforks: 0 },
+                    );
+                    inner.bytes += cost;
+                    while inner.max_bytes > 0
+                        && inner.bytes > inner.max_bytes
+                        && inner.map.len() > 1
+                    {
+                        if !inner.evict_one(backend, shard, Some(k)) {
+                            break;
+                        }
+                    }
+                    return Ok(Acquired { handle, retained: true, hit: true });
+                }
+            }
             while inner.map.len() >= inner.capacity {
-                if !inner.evict_lru(backend, shard, None) {
+                if !inner.evict_one(backend, shard, None) {
                     break;
                 }
             }
             let per_shard = HashMap::from([(shard, SlotState::Pending)]);
-            inner.map.insert(k, TierEntry { per_shard, last_used: tick });
+            inner.map.insert(
+                k,
+                TierEntry {
+                    per_shard,
+                    last_used: tick,
+                    prompt_tokens: problem.tokens.len() as u64,
+                    reforks: 0,
+                },
+            );
             drop(guard);
             return self.fill(shard, backend, problem, use_draft, want_scores, k, false);
         }
@@ -516,6 +904,9 @@ impl SharedPrefixTier {
                 let retained = match inner.map.get_mut(&k) {
                     Some(e) => {
                         e.per_shard.insert(shard, SlotState::Ready { handle, bytes: cost });
+                        if shard_fill {
+                            e.reforks += 1;
+                        }
                         inner.bytes += cost;
                         true
                     }
@@ -526,7 +917,7 @@ impl SharedPrefixTier {
                         && inner.bytes > inner.max_bytes
                         && inner.map.len() > 1
                     {
-                        if !inner.evict_lru(backend, shard, Some(k)) {
+                        if !inner.evict_one(backend, shard, Some(k)) {
                             break;
                         }
                     }
@@ -554,6 +945,11 @@ impl SharedPrefixTier {
     /// can be `Pending` here. After this the tier holds NO state keyed
     /// by the dead shard id — the compaction that keeps week-long
     /// autoscale churn from growing the per-shard tables.
+    ///
+    /// With a spill store configured, each released entry is demoted to
+    /// disk first (best-effort) — the graceful-drain path that makes
+    /// `--prefix-spill-dir` warm restarts work: the next incarnation
+    /// reloads the store at startup and promotes instead of prefilling.
     pub fn clear_shard(&self, shard: usize, backend: &mut dyn Backend) {
         let mut guard = lock_ok(&self.inner);
         let inner = &mut *guard;
@@ -561,12 +957,21 @@ impl SharedPrefixTier {
             let _ = backend.release_prefix(h);
         }
         let mut freed = 0u64;
-        for e in inner.map.values_mut() {
+        let mut spilled = 0u64;
+        for (k, e) in inner.map.iter_mut() {
             if let Some(SlotState::Ready { handle, bytes }) = e.per_shard.remove(&shard) {
                 freed += bytes;
+                if let Some(spill) = inner.spill.as_mut() {
+                    if let Some(payload) = backend.export_prefix(handle) {
+                        if spill.put(*k, e.prompt_tokens, &payload).is_ok() {
+                            spilled += 1;
+                        }
+                    }
+                }
                 let _ = backend.release_prefix(handle);
             }
         }
+        inner.stats.spills += spilled;
         inner.bytes = inner.bytes.saturating_sub(freed);
         inner.map.retain(|_, e| !e.per_shard.is_empty());
         // a crashed shard may have died mid-fill: waiters latched on one
@@ -854,6 +1259,174 @@ mod tests {
         }
         assert!(t.is_empty());
         assert_eq!(t.bytes(), 0);
+    }
+
+    // --- spill store + policies --------------------------------------------
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("ssr-prefix-{}-{}", name, std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn spill_store_round_trips_and_rebuilds_from_the_log() {
+        let dir = tmp_dir("log");
+        {
+            let mut s = SpillStore::open(&dir, 0).unwrap();
+            s.put(7, 9, b"payload-a").unwrap();
+            s.put(8, 3, b"payload-b").unwrap();
+            s.put(7, 9, b"payload-c").unwrap(); // re-put replaces
+            assert_eq!(s.len(), 2);
+            let _ = s.take(8).unwrap();
+            assert_eq!(s.len(), 1);
+        }
+        // a stale/missing index must not matter: the log is the truth
+        std::fs::remove_file(dir.join("spill.idx")).unwrap();
+        let mut s = SpillStore::open(&dir, 0).unwrap();
+        assert_eq!(s.len(), 1);
+        assert!(!s.contains(8), "taken record resurrected by the log scan");
+        let (payload, ptoks, warm) = s.take(7).unwrap();
+        assert_eq!(payload, b"payload-c");
+        assert_eq!(ptoks, 9);
+        assert!(warm, "records loaded at open are the warm set");
+        assert!(s.is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn spill_store_byte_budget_drops_oldest() {
+        let dir = tmp_dir("budget");
+        let mut s = SpillStore::open(&dir, 64).unwrap();
+        s.put(1, 4, &[0u8; 40]).unwrap();
+        assert_eq!(s.bytes_live(), 40);
+        s.put(2, 4, &[1u8; 40]).unwrap(); // 80 > 64: key 1 is shed
+        assert_eq!(s.len(), 1);
+        assert!(!s.contains(1));
+        let (payload, _, warm) = s.take(2).unwrap();
+        assert_eq!(payload, vec![1u8; 40]);
+        assert!(!warm);
+        assert_eq!(s.bytes_live(), 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn cost_policy_keeps_high_refork_entries_where_lru_would_not() {
+        let ps = problems();
+        // LRU control: p0 is hot (many reforks) but least recent once
+        // p1 arrives, so the next miss evicts it
+        let mut b = CalibratedBackend::for_suite("synth-math500", 16).unwrap();
+        let lru = SharedPrefixTier::new(2, 0);
+        for _ in 0..8 {
+            let _ = lru.acquire_for_shard(0, &mut b, &ps[0], false, false).unwrap();
+        }
+        let _ = lru.acquire_for_shard(0, &mut b, &ps[1], false, false).unwrap();
+        let _ = lru.acquire_for_shard(0, &mut b, &ps[2], false, false).unwrap();
+        assert_eq!(lru.stats().evictions, 1);
+        let back = lru.acquire_for_shard(0, &mut b, &ps[0], false, false).unwrap();
+        assert!(!back.hit, "LRU control: the hot-but-older entry was kept");
+
+        // cost policy: p0's refork count outweighs recency — the
+        // single-use p1 is the cheaper loss
+        let mut b = CalibratedBackend::for_suite("synth-math500", 16).unwrap();
+        let t = SharedPrefixTier::with_options(2, 0, EvictPolicy::Cost, None);
+        for _ in 0..8 {
+            let _ = t.acquire_for_shard(0, &mut b, &ps[0], false, false).unwrap();
+        }
+        let _ = t.acquire_for_shard(0, &mut b, &ps[1], false, false).unwrap();
+        let _ = t.acquire_for_shard(0, &mut b, &ps[2], false, false).unwrap();
+        assert_eq!(t.stats().evictions, 1);
+        let kept = t.acquire_for_shard(0, &mut b, &ps[0], false, false).unwrap();
+        assert!(kept.hit, "cost policy must keep the frequently reforked entry");
+    }
+
+    #[test]
+    fn spill_tier_demotes_promotes_and_survives_restart() {
+        let dir = tmp_dir("warm");
+        let ps = problems();
+        let mut b = CalibratedBackend::for_suite("synth-math500", 15).unwrap();
+        {
+            let spill = SpillStore::open(&dir, 0).unwrap();
+            let t = SharedPrefixTier::with_options(1, 0, EvictPolicy::Lru, Some(spill));
+            let _ = t.acquire_for_shard(0, &mut b, &ps[0], false, false).unwrap();
+            // capacity 1: p1 evicts p0, demoting it to the spill store
+            let _ = t.acquire_for_shard(0, &mut b, &ps[1], false, false).unwrap();
+            assert_eq!(t.stats().spills, 1);
+            assert_eq!(t.spill_entries(), 1);
+            // p0 comes back from disk: a promote, not a prefill (p1 is
+            // demoted in turn by the capacity bound)
+            let before = b.prefill_stats().prefixes;
+            let a = t.acquire_for_shard(0, &mut b, &ps[0], false, false).unwrap();
+            assert!(a.hit && a.retained);
+            assert_eq!(b.prefill_stats().prefixes, before, "promotion must not prefill");
+            let s = t.stats();
+            assert_eq!(s.promotes, 1);
+            assert_eq!(s.warm_hits, 0, "same-process promote is not a warm hit");
+            // graceful drain demotes the survivor for the next incarnation
+            t.clear_shard(0, &mut b);
+            assert!(t.is_empty());
+            assert_eq!(t.spill_entries(), 2);
+        }
+        assert_eq!(b.live_prefix_count(), 0, "drain leaked backend prefixes");
+        // warm restart: a fresh tier over the same dir serves the old
+        // working set without prefilling
+        let spill = SpillStore::open(&dir, 0).unwrap();
+        assert_eq!(spill.len(), 2);
+        let t = SharedPrefixTier::with_options(8, 0, EvictPolicy::Lru, Some(spill));
+        let before = b.prefill_stats().prefixes;
+        let a = t.acquire_for_shard(0, &mut b, &ps[0], false, false).unwrap();
+        assert!(a.hit);
+        assert_eq!(b.prefill_stats().prefixes, before);
+        let s = t.stats();
+        assert_eq!((s.promotes, s.warm_hits), (1, 1));
+        t.clear_shard(0, &mut b);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn tier_eviction_under_byte_pressure_with_concurrent_shard_churn() {
+        use std::sync::Arc;
+        // byte-budget eviction racing hot shard remove/re-add: parked
+        // mid-release handles must neither leak nor double-release. One
+        // calibrated backend PER THREAD (backends are thread-owned);
+        // the tier is the only shared state.
+        let ps = problems();
+        let one = {
+            let mut probe = CalibratedBackend::for_suite("synth-math500", 17).unwrap();
+            let h = probe.prefill_prefix(&ps[0], false, false).unwrap();
+            probe.prefix_bytes(h)
+        };
+        let t = Arc::new(SharedPrefixTier::with_options(64, 2 * one, EvictPolicy::Cost, None));
+        let mut joins = Vec::new();
+        for shard in 0..4usize {
+            let t = Arc::clone(&t);
+            let ps = ps.clone();
+            joins.push(std::thread::spawn(move || {
+                let mut b =
+                    CalibratedBackend::for_suite("synth-math500", 20 + shard as u64).unwrap();
+                for round in 0..40usize {
+                    let p = &ps[(round + shard) % 6];
+                    let a = t.acquire_for_shard(shard, &mut b, p, false, false).unwrap();
+                    if !a.retained {
+                        let _ = b.release_prefix(a.handle);
+                    }
+                    if round % 9 == 8 {
+                        // hot remove + re-add of this shard id's state
+                        t.clear_shard(shard, &mut b);
+                    }
+                }
+                t.clear_shard(shard, &mut b);
+                b
+            }));
+        }
+        let backends: Vec<CalibratedBackend> =
+            joins.into_iter().map(|j| j.join().unwrap()).collect();
+        assert!(t.is_empty(), "entries outlived every shard");
+        assert_eq!(t.bytes(), 0);
+        for (i, b) in backends.iter().enumerate() {
+            assert_eq!(b.live_prefix_count(), 0, "shard {i} leaked prefix handles");
+        }
+        assert!(t.stats().evictions > 0, "budget pressure never evicted");
     }
 
     #[test]

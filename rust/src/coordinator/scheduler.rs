@@ -811,11 +811,14 @@ fn rebalance_by_gamma(
 }
 
 /// Publish one step boundary's telemetry to every tapped (streamed)
-/// run: a `progress` event per tick, plus a once-latched `first_vote`
-/// on the first tick where any lane holds a parsed answer (the metric
-/// SSR's early-stopping methods exist to move — time-to-first-useful-
-/// answer, recorded into the `time_to_first_vote` reservoir). Each
-/// run's events go down in ONE `push_batch` call, so a consumer never
+/// run: a `progress` event per tick, a `token_delta` whenever the
+/// run's committed-token total moved since the last announcement (the
+/// tap tracks the announced total, so deltas sum to the final total
+/// even across migration), plus a once-latched `first_vote` on the
+/// first tick where any lane holds a parsed answer (the metric SSR's
+/// early-stopping methods exist to move — time-to-first-useful-answer,
+/// recorded into the `time_to_first_vote` reservoir). Each run's
+/// events go down in ONE `push_batch` call, so a consumer never
 /// observes half a boundary, and the tap's drop-oldest ring means a
 /// slow reader costs dropped telemetry — never shard time (the
 /// terminal reply rides the reply channel, not the tap).
@@ -834,6 +837,14 @@ fn emit_stream_events(inflight: &[InFlight], metrics: &Arc<Mutex<Metrics>>) {
             ("gamma", p.gamma.map(json::n).unwrap_or(Value::Null)),
             ("spec_depth", json::i(p.spec_depth as i64)),
         ])];
+        let delta = tap.token_delta(p.tokens);
+        if delta > 0 {
+            evs.push(json::obj(vec![
+                ("event", json::s("token_delta")),
+                ("tokens", json::i(delta as i64)),
+                ("total_tokens", json::i(p.tokens as i64)),
+            ]));
+        }
         if p.finished > 0 && tap.mark_first_vote() {
             let elapsed = f.enqueued.elapsed().as_secs_f64();
             first_votes.push(elapsed);
@@ -1100,6 +1111,13 @@ pub(crate) fn run_loop(
             m.record_queue_depth(depth);
             m.set_prefix_cache(ts.hits, ts.misses, ts.evictions);
             m.set_prefix_shard_fills(ts.shard_fills);
+            m.set_prefix_spill(ts.spills, ts.promotes, ts.warm_hits);
+            m.set_prefix_tier_gauges(
+                ctx.tier.len(),
+                ctx.tier.bytes(),
+                ctx.tier.spill_entries(),
+                ctx.tier.spill_bytes(),
+            );
         }
 
         if inflight.is_empty() {
@@ -1135,6 +1153,14 @@ pub(crate) fn run_loop(
                 m.set_shard_clock(ctx.shard, backend.clock_secs());
                 let (draft_s, target_s) = backend.clock_split_secs();
                 m.set_shard_clock_split(ctx.shard, draft_s, target_s);
+                // prompt ingest only (target + draft prompt passes):
+                // suffix/spm prefills scale with lane count identically
+                // cold vs warm, so this is the scalar warm restarts move
+                let ps = backend.prefill_stats();
+                m.set_shard_prefill_tokens(
+                    ctx.shard,
+                    ps.target_prompt_tokens + ps.draft_prompt_tokens,
+                );
             }
             Err(e) => {
                 // shard-fatal faults (substrate gone, device wedged)
@@ -1209,15 +1235,29 @@ pub(crate) fn run_loop(
             }
         }
     }
-    // drain: release this shard's tier handles and flush final gauges
+    // drain: release this shard's tier handles (clear_shard runs first
+    // so drain-time demotions land in the spill counters) and flush
+    // final gauges
     ctx.tier.clear_shard(ctx.shard, backend);
     let ts = ctx.tier.stats();
     let mut m = lock_ok(metrics);
     m.set_prefix_cache(ts.hits, ts.misses, ts.evictions);
     m.set_prefix_shard_fills(ts.shard_fills);
+    m.set_prefix_spill(ts.spills, ts.promotes, ts.warm_hits);
+    m.set_prefix_tier_gauges(
+        ctx.tier.len(),
+        ctx.tier.bytes(),
+        ctx.tier.spill_entries(),
+        ctx.tier.spill_bytes(),
+    );
     m.set_shard_clock(ctx.shard, backend.clock_secs());
     let (draft_s, target_s) = backend.clock_split_secs();
     m.set_shard_clock_split(ctx.shard, draft_s, target_s);
+    let ps = backend.prefill_stats();
+    m.set_shard_prefill_tokens(
+        ctx.shard,
+        ps.target_prompt_tokens + ps.draft_prompt_tokens,
+    );
 }
 
 #[cfg(test)]

@@ -72,6 +72,7 @@ use crate::config::{SsrConfig, StopRule, Transport};
 use crate::util::json::{self, Value};
 use crate::util::sync::lock_ok;
 use crate::util::threadpool::ThreadPool;
+use crate::workload::trace::{TraceEntry, TraceWriter};
 
 /// Event-loop idle sleep when no connection made progress.
 const IDLE_SLEEP: Duration = Duration::from_micros(500);
@@ -125,6 +126,10 @@ pub struct Server {
     /// the policy loop when `--autoscale on`; stopped (and its pool
     /// handle released) when the server shuts down
     autoscaler: Option<Autoscaler>,
+    /// serving-trace appender behind `--trace-record` (DESIGN.md §17):
+    /// every ADMITTED solve is logged with its arrival offset so the
+    /// workload can be replayed decision-for-decision offline
+    trace: Option<Mutex<TraceWriter>>,
 }
 
 impl Server {
@@ -153,6 +158,15 @@ impl Server {
         let lane_capacity = cfg.shards.max(1) * cfg.max_lanes.max(1);
         let admission = Arc::new(AdmissionController::new(cfg.qos.clone(), lane_capacity));
 
+        // the trace log opens before the listener: an unwritable path
+        // fails startup instead of silently recording nothing
+        let trace = cfg
+            .trace_record
+            .as_ref()
+            .map(|p| TraceWriter::create(p).map(Mutex::new))
+            .transpose()
+            .context("opening trace log")?;
+
         let listener =
             TcpListener::bind((host, port)).with_context(|| format!("binding {host}:{port}"))?;
         let addr = listener.local_addr()?.to_string();
@@ -172,6 +186,7 @@ impl Server {
                 cfg,
                 admission,
                 autoscaler,
+                trace,
             },
             listener,
         ))
@@ -189,6 +204,7 @@ impl Server {
             shutdown: &self.shutdown,
             cfg: &self.cfg,
             admission: &self.admission,
+            trace: self.trace.as_ref(),
             conns: HashMap::new(),
             pendings: Vec::new(),
             next_conn: 0,
@@ -311,6 +327,7 @@ struct EventLoop<'a> {
     shutdown: &'a Arc<AtomicBool>,
     cfg: &'a SsrConfig,
     admission: &'a Arc<AdmissionController>,
+    trace: Option<&'a Mutex<TraceWriter>>,
     conns: HashMap<u64, Conn>,
     pendings: Vec<Pending>,
     next_conn: u64,
@@ -585,6 +602,42 @@ impl EventLoop<'_> {
                     }
                 };
                 lock_ok(self.metrics).record_tenant_admit(tenant);
+                // trace admitted requests only (rejects cost no shard
+                // work and carry no replayable decision state). The
+                // record keeps the RAW wire method fields — the exact
+                // inputs `parse_method` read — so replay re-derives the
+                // identical `Method` from the log alone.
+                if let Some(tr) = self.trace {
+                    let rec = TraceEntry {
+                        offset_ms: self.started.elapsed().as_millis() as u64,
+                        tenant: tenant.map(String::from),
+                        expr: expr.clone(),
+                        method: req
+                            .opt("method")
+                            .map(|m| m.str())
+                            .transpose()?
+                            .unwrap_or("ssr")
+                            .to_string(),
+                        paths: req
+                            .opt("paths")
+                            .map(|x| x.usize())
+                            .transpose()?
+                            .unwrap_or(cfg.n_paths),
+                        tau: req
+                            .opt("tau")
+                            .map(|x| x.i64())
+                            .transpose()?
+                            .unwrap_or(cfg.tau as i64) as u8,
+                        seed,
+                        class: class.name().to_string(),
+                        deadline_ms,
+                    };
+                    // best-effort: a full disk degrades to a truncated
+                    // (still replayable) trace, never a failed solve
+                    if let Err(e) = lock_ok(tr).record(&rec) {
+                        log::warn!("trace record failed: {e:#}");
+                    }
+                }
                 let request_id = req.opt("request_id").cloned();
                 let tap = stream.then(|| EventTap::new(cfg.stream_buffer, request_id));
                 let (rtx, rrx) = mpsc::channel();

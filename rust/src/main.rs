@@ -21,6 +21,8 @@
 //!           [--cost-ceiling S] [--quarantine-cap N]
 //!           [--conn-idle-timeout-ms MS]
 //!           [--transport jsonl|framed] [--stream-buffer N]
+//!           [--prefix-evict lru|cost] [--prefix-spill-dir DIR]
+//!           [--prefix-spill-bytes B] [--trace-record PATH]
 //! ssr exp   fig2|fig3|fig4|fig5|table1|gamma|all [--backend calibrated]
 //!           [--trials 6] [--problems 60]
 //! ssr selfcheck            # artifacts -> PJRT -> one SSR problem
@@ -80,7 +82,22 @@
 //! before its terminal reply. `{"op":"hello"}` reports the protocol
 //! version and feature list. See `{"op":"stats"}` keys
 //! `streams_active`, `stream_events`, `stream_drops`,
-//! `stream_disconnects` and `time_to_first_vote_*`.
+//! `stream_disconnects` and `time_to_first_vote_*`. Streamed solves
+//! also emit `token_delta` events (newly committed tokens since the
+//! last frame plus the monotone running total).
+//!
+//! The prefix store is two-tier (DESIGN.md §17): `--prefix-evict`
+//! selects the hot-tier victim policy (`lru` default; `cost` weighs
+//! recompute cost × refork frequency), and `--prefix-spill-dir`
+//! enables a persistent spill tier — evicted prefill state is
+//! serialized to disk (bounded by `--prefix-spill-bytes`, 0 =
+//! unbounded), promoted back on a hot-tier miss, and reloaded on the
+//! next start for warm restarts. `--trace-record PATH` appends every
+//! admitted solve to a compact replayable trace log
+//! (`workload::trace`); benches replay such traces deterministically.
+//! See `{"op":"stats"}` keys `prefix_spills`, `prefix_promotes`,
+//! `prefix_warm_hits`, `prefix_spill_hit_rate`, the tier size gauges
+//! and `prefill_prompt_tokens`.
 //!
 //! Serving is overload-safe (DESIGN.md §14): a `solve` may carry
 //! `tenant` and `class` (`interactive`|`batch`|`best_effort`) wire
@@ -233,7 +250,8 @@ fn run() -> Result<()> {
             println!(
                 "pool: shards={} (min {} max {}) placement={:?} max_lanes={}/shard \
                  steal_threshold={} migration={} autoscale={} admission={:?} \
-                 prefix_reuse={} prefix_cache_cap={} prefix_cache_bytes={}",
+                 prefix_reuse={} prefix_cache_cap={} prefix_cache_bytes={} \
+                 prefix_evict={} prefix_spill_dir={:?} prefix_spill_bytes={}",
                 cfg.shards,
                 cfg.min_shards,
                 cfg.autoscale.max_shards,
@@ -245,8 +263,14 @@ fn run() -> Result<()> {
                 cfg.admission,
                 cfg.prefix.enabled,
                 cfg.prefix.capacity,
-                cfg.prefix.max_bytes
+                cfg.prefix.max_bytes,
+                cfg.prefix.evict.name(),
+                cfg.prefix.spill_dir,
+                cfg.prefix.spill_bytes
             );
+            if let Some(p) = &cfg.trace_record {
+                println!("trace record: {p:?} (one entry per admitted solve)");
+            }
             println!(
                 "speculation: spec_depth={:?} shard_classes={:?}",
                 cfg.spec_depth,

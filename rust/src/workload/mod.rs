@@ -1,10 +1,12 @@
 //! Workload substrate: procedural problem generation (the stand-in for
 //! the paper's math benchmarks), the strategy pool, canonical evaluation
-//! suites, and serving traces.
+//! suites, and serving traces (`traces` for closed-loop engine benches,
+//! `trace` for the recorded/replayed serving-request logs).
 
 pub mod problems;
 pub mod strategies;
 pub mod suites;
+pub mod trace;
 pub mod traces;
 
 pub use problems::{Family, Problem};

@@ -1,0 +1,369 @@
+//! Serving-trace record/replay — the workload side of DESIGN.md §17.
+//!
+//! A *serving trace* is a compact, versioned log of admitted `solve`
+//! requests: one JSON header line `{"ssr_trace":1}` followed by one
+//! JSON object per request carrying everything needed to replay it
+//! decision-for-decision against a pool — arrival offset, tenant,
+//! expression text, method (wire name + `paths` + `tau`), seed, QoS
+//! class and deadline. The live server appends to such a log behind
+//! `--trace-record <path>` ([`TraceWriter`]); benches replay one
+//! deterministically (`benches/trace_replay.rs`,
+//! `benches/prefix_spill.rs`).
+//!
+//! Unlike [`super::traces`] (closed-loop problem-level arrival traces
+//! for engine benchmarks), this module captures the *serving* surface:
+//! entries round-trip through the same wire fields the TCP front end
+//! parses (`coordinator::server::parse_method`, `QosClass::parse`), so
+//! a recorded trace replays with zero drift and a hand-written one is
+//! validated by the same parsers the socket path uses.
+//!
+//! Three synthetic generator presets produce the arrival shapes the
+//! overload and caching work cares about: [`heavy_tailed`]
+//! (Zipf-skewed repeated prompts + Pareto interarrivals), [`diurnal`]
+//! (sinusoidal rate swing) and [`flash_crowd`] (mid-trace burst of one
+//! hot prompt). All are pure functions of their [`GenSpec`].
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::tokenizer;
+use crate::util::json::{self, Value};
+use crate::util::rng::Rng;
+
+use super::problems::{self, FAMILIES};
+
+/// Trace format version — the header line's `ssr_trace` value. Bump on
+/// any incompatible record-shape change; `load` refuses other versions.
+pub const TRACE_VERSION: i64 = 1;
+
+/// One recorded `solve` request. Field names match the wire protocol
+/// (PROTOCOL.md) wherever a wire field exists, so `to_value()` output
+/// feeds `parse_method` directly.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEntry {
+    /// arrival offset from trace start, milliseconds
+    pub offset_ms: u64,
+    pub tenant: Option<String>,
+    pub expr: String,
+    /// wire method name (`ssr`, `parallel-spm`, ...)
+    pub method: String,
+    pub paths: usize,
+    pub tau: u8,
+    pub seed: u64,
+    /// QoS class wire name (`interactive` | `batch` | `best_effort`)
+    pub class: String,
+    /// 0 = no deadline
+    pub deadline_ms: u64,
+}
+
+impl TraceEntry {
+    /// Render as one trace record. The object doubles as a `solve`
+    /// request body minus `op`: `parse_method(&e.to_value(), ..)` is
+    /// the supported replay path.
+    pub fn to_value(&self) -> Value {
+        let mut pairs = vec![
+            ("offset_ms", json::i(self.offset_ms as i64)),
+            ("expr", json::s(self.expr.clone())),
+            ("method", json::s(self.method.clone())),
+            ("paths", json::i(self.paths as i64)),
+            ("tau", json::i(self.tau as i64)),
+            ("seed", json::i(self.seed as i64)),
+            ("class", json::s(self.class.clone())),
+            ("deadline_ms", json::i(self.deadline_ms as i64)),
+        ];
+        if let Some(t) = &self.tenant {
+            pairs.push(("tenant", json::s(t.clone())));
+        }
+        json::obj(pairs)
+    }
+
+    pub fn from_value(v: &Value) -> Result<TraceEntry> {
+        Ok(TraceEntry {
+            offset_ms: v.get_i64("offset_ms")?.max(0) as u64,
+            tenant: v.opt("tenant").map(|t| t.str().map(String::from)).transpose()?,
+            expr: v.get_str("expr")?.to_string(),
+            method: v.get_str("method")?.to_string(),
+            paths: v.get_usize("paths")?,
+            tau: v.get_i64("tau")? as u8,
+            seed: v.get_i64("seed")? as u64,
+            class: v.get_str("class")?.to_string(),
+            deadline_ms: v.get_i64("deadline_ms")?.max(0) as u64,
+        })
+    }
+}
+
+/// Appends entries to a trace file, one flushed JSON line each, so a
+/// crashed or killed server still leaves a replayable prefix. Created
+/// by the server when `--trace-record` is set.
+pub struct TraceWriter {
+    out: BufWriter<File>,
+}
+
+impl TraceWriter {
+    /// Create (truncating) `path` and write the version header line.
+    pub fn create(path: &Path) -> Result<TraceWriter> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating trace dir {}", dir.display()))?;
+            }
+        }
+        let file =
+            File::create(path).with_context(|| format!("creating trace {}", path.display()))?;
+        let mut out = BufWriter::new(file);
+        writeln!(out, "{}", json::obj(vec![("ssr_trace", json::i(TRACE_VERSION))]).print())?;
+        out.flush()?;
+        Ok(TraceWriter { out })
+    }
+
+    pub fn record(&mut self, e: &TraceEntry) -> Result<()> {
+        writeln!(self.out, "{}", e.to_value().print())?;
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+/// Load a trace, validating the version header. Blank lines are
+/// skipped; any malformed record is an error (traces are machine
+/// written — a bad line means truncation mid-record or version skew,
+/// not style).
+pub fn load(path: &Path) -> Result<Vec<TraceEntry>> {
+    let file = File::open(path).with_context(|| format!("opening trace {}", path.display()))?;
+    let mut lines = BufReader::new(file).lines();
+    let header = loop {
+        match lines.next() {
+            Some(l) => {
+                let l = l?;
+                if !l.trim().is_empty() {
+                    break l;
+                }
+            }
+            None => bail!("trace {} is empty (missing header line)", path.display()),
+        }
+    };
+    let v = Value::parse(&header).context("parsing trace header")?;
+    let version = v.get_i64("ssr_trace").context("trace header")?;
+    if version != TRACE_VERSION {
+        bail!("unsupported trace version {version} (this build reads {TRACE_VERSION})");
+    }
+    let mut out = Vec::new();
+    for (i, line) in lines.enumerate() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = Value::parse(&line).with_context(|| format!("trace record {}", i + 1))?;
+        out.push(
+            TraceEntry::from_value(&v).with_context(|| format!("trace record {}", i + 1))?,
+        );
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------
+// synthetic generator presets
+// ---------------------------------------------------------------------
+
+/// Parameters shared by the synthetic trace generators.
+#[derive(Debug, Clone, Copy)]
+pub struct GenSpec {
+    /// total requests
+    pub n: usize,
+    /// distinct prompts in the pool (popularity rank 0 is hottest)
+    pub pool: usize,
+    /// mean arrival rate, requests per virtual second
+    pub rate_rps: f64,
+    pub seed: u64,
+}
+
+impl Default for GenSpec {
+    fn default() -> GenSpec {
+        GenSpec { n: 64, pool: 8, rate_rps: 50.0, seed: 0x7ACE }
+    }
+}
+
+/// (wire name, mix weight) — names must stay parseable by
+/// `coordinator::server::parse_method` (pinned by a test below).
+const METHODS: [(&str, f64); 7] = [
+    ("ssr", 4.0),
+    ("ssr-fast1", 1.0),
+    ("ssr-fast2", 1.0),
+    ("parallel", 2.0),
+    ("parallel-spm", 1.0),
+    ("spec-reason", 1.0),
+    ("baseline", 1.0),
+];
+const CLASSES: [(&str, f64); 3] = [("interactive", 7.0), ("batch", 2.0), ("best_effort", 1.0)];
+const TENANTS: [(&str, f64); 4] =
+    [("acme", 5.0), ("globex", 2.0), ("initech", 2.0), ("hooli", 1.0)];
+
+fn pick<'a>(rng: &mut Rng, table: &[(&'a str, f64)]) -> &'a str {
+    let weights: Vec<f64> = table.iter().map(|(_, w)| *w).collect();
+    table[rng.choice_weighted(&weights)].0
+}
+
+/// Render `spec.pool` distinct prompt strings (rank 0 first), drawn
+/// from the procedural problem families so every expr parses back
+/// through `problem_from_text`.
+fn prompt_pool(spec: &GenSpec, rng: &mut Rng) -> Vec<String> {
+    let v = tokenizer::builtin_vocab();
+    (0..spec.pool.max(1))
+        .map(|i| {
+            let fam = FAMILIES[i % FAMILIES.len()];
+            let p = problems::gen_valid_problem(rng, &v, fam, 40, 2 + i % 3);
+            tokenizer::detokenize(&v, &p.tokens)
+        })
+        .collect()
+}
+
+/// One synthetic request against `prompt` at virtual time `t_s`.
+fn entry_at(t_s: f64, prompt: &str, rng: &mut Rng) -> TraceEntry {
+    let method = pick(rng, &METHODS).to_string();
+    let class = pick(rng, &CLASSES).to_string();
+    let deadline_ms = if class == "interactive" { rng.range(2_000, 8_000) as u64 } else { 0 };
+    TraceEntry {
+        offset_ms: (t_s * 1_000.0) as u64,
+        tenant: Some(pick(rng, &TENANTS).to_string()),
+        expr: prompt.to_string(),
+        method,
+        paths: [2usize, 4, 8][rng.below(3) as usize],
+        tau: rng.range(5, 9) as u8,
+        seed: rng.below(1 << 32),
+        class,
+        deadline_ms,
+    }
+}
+
+/// Zipf-skewed repeated prompts (exponent 1.2, rank 0 dominates) with
+/// Pareto(α = 1.5) interarrivals: bursts of near-simultaneous arrivals
+/// plus a heavy tail of long gaps, mean gap ≈ `1/rate_rps` (capped at
+/// 100× the mean so one tail draw cannot stall a replay).
+pub fn heavy_tailed(spec: &GenSpec) -> Vec<TraceEntry> {
+    let mut rng = Rng::new(spec.seed);
+    let pool = prompt_pool(spec, &mut rng);
+    let zipf: Vec<f64> = (0..pool.len()).map(|i| 1.0 / ((i + 1) as f64).powf(1.2)).collect();
+    let alpha = 1.5;
+    let xm = (alpha - 1.0) / (alpha * spec.rate_rps.max(1e-6));
+    let mut t = 0.0;
+    (0..spec.n)
+        .map(|_| {
+            let dt = xm * rng.f64().max(1e-12).powf(-1.0 / alpha);
+            t += dt.min(100.0 / spec.rate_rps.max(1e-6));
+            let k = rng.choice_weighted(&zipf);
+            entry_at(t, &pool[k], &mut rng)
+        })
+        .collect()
+}
+
+/// Sinusoidal rate swing (±80% around `rate_rps`, two full cycles over
+/// the trace) with uniform prompt popularity — the slow cache
+/// warm/cool shape the spill tier rides through.
+pub fn diurnal(spec: &GenSpec) -> Vec<TraceEntry> {
+    let mut rng = Rng::new(spec.seed);
+    let pool = prompt_pool(spec, &mut rng);
+    let period_s = (spec.n as f64 / spec.rate_rps.max(1e-6) / 2.0).max(1e-3);
+    let mut t = 0.0;
+    (0..spec.n)
+        .map(|_| {
+            let phase = (2.0 * std::f64::consts::PI * t / period_s).sin();
+            let rate = (spec.rate_rps * (1.0 + 0.8 * phase)).max(0.05 * spec.rate_rps);
+            t += -rng.f64().max(1e-12).ln() / rate;
+            let k = rng.below(pool.len() as u64) as usize;
+            entry_at(t, &pool[k], &mut rng)
+        })
+        .collect()
+}
+
+/// Steady Poisson baseline with a 10× burst over the middle fifth of
+/// the trace, every burst request hitting the rank-0 prompt — the
+/// flash-crowd shape admission control and the prefix tiers absorb.
+pub fn flash_crowd(spec: &GenSpec) -> Vec<TraceEntry> {
+    let mut rng = Rng::new(spec.seed);
+    let pool = prompt_pool(spec, &mut rng);
+    let (burst_lo, burst_hi) = (2 * spec.n / 5, 3 * spec.n / 5);
+    let mut t = 0.0;
+    (0..spec.n)
+        .map(|i| {
+            let burst = (burst_lo..burst_hi).contains(&i);
+            let rate = if burst { 10.0 * spec.rate_rps } else { spec.rate_rps };
+            t += -rng.f64().max(1e-12).ln() / rate.max(1e-6);
+            let k = if burst { 0 } else { rng.below(pool.len() as u64) as usize };
+            entry_at(t, &pool[k], &mut rng)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::admission::QosClass;
+    use crate::coordinator::server::parse_method;
+    use crate::model::tokenizer::builtin_vocab;
+    use crate::workload::problems::problem_from_text;
+    use std::path::PathBuf;
+
+    fn tmp_trace(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("ssr-trace-{name}-{}.jsonl", std::process::id()))
+    }
+
+    #[test]
+    fn file_round_trip_and_version_gate() {
+        let path = tmp_trace("roundtrip");
+        let entries = heavy_tailed(&GenSpec { n: 12, ..GenSpec::default() });
+        {
+            let mut w = TraceWriter::create(&path).unwrap();
+            for e in &entries {
+                w.record(e).unwrap();
+            }
+        }
+        assert_eq!(load(&path).unwrap(), entries);
+        // a future version is refused, not misread
+        std::fs::write(&path, "{\"ssr_trace\":99}\n").unwrap();
+        let err = load(&path).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+        std::fs::write(&path, "").unwrap();
+        assert!(load(&path).is_err(), "empty trace must not load");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn generators_are_deterministic_and_serve_ready() {
+        let spec = GenSpec { n: 40, ..GenSpec::default() };
+        let vocab = builtin_vocab();
+        for (name, gen) in [
+            ("heavy_tailed", heavy_tailed as fn(&GenSpec) -> Vec<TraceEntry>),
+            ("diurnal", diurnal),
+            ("flash_crowd", flash_crowd),
+        ] {
+            let a = gen(&spec);
+            assert_eq!(a, gen(&spec), "{name}: not deterministic");
+            assert_eq!(a.len(), spec.n, "{name}");
+            let mut last = 0;
+            for e in &a {
+                assert!(e.offset_ms >= last, "{name}: offsets must be nondecreasing");
+                last = e.offset_ms;
+                // every record must replay through the real wire parsers
+                parse_method(&e.to_value(), 5, 7).unwrap();
+                QosClass::parse(&e.class).unwrap();
+                problem_from_text(&vocab, &e.expr).unwrap();
+                assert_eq!(e, &TraceEntry::from_value(&e.to_value()).unwrap(), "{name}");
+            }
+        }
+    }
+
+    #[test]
+    fn heavy_tailed_is_actually_skewed() {
+        let spec = GenSpec { n: 200, pool: 8, ..GenSpec::default() };
+        let t = heavy_tailed(&spec);
+        let mut counts: std::collections::HashMap<&str, usize> = Default::default();
+        for e in &t {
+            *counts.entry(e.expr.as_str()).or_default() += 1;
+        }
+        assert!(counts.len() >= 2, "trace must mix prompts, got {}", counts.len());
+        let hottest = counts.values().copied().max().unwrap();
+        assert!(hottest * 4 > spec.n, "hottest prompt only {hottest}/{}", spec.n);
+    }
+}

@@ -769,6 +769,8 @@ fn streamed_terminal_reply_is_byte_identical_to_the_blocking_reply() {
     let mut reader = BufReader::new(s.try_clone().unwrap());
     let mut progress_events = 0usize;
     let mut first_votes = 0usize;
+    let mut delta_sum = 0i64;
+    let mut last_total = 0i64;
     let mut terminal = loop {
         let mut l = String::new();
         reader.read_line(&mut l).unwrap();
@@ -783,6 +785,19 @@ fn streamed_terminal_reply_is_byte_identical_to_the_blocking_reply() {
                         assert!(v.get_i64("lanes").unwrap() >= 1);
                         assert!(v.get_i64("spec_depth").unwrap() >= 0);
                     }
+                    "token_delta" => {
+                        // PROTOCOL.md golden properties: deltas are
+                        // never 0, totals are strictly monotone, and a
+                        // frame's total moves by at least its delta
+                        // (exactly, when nothing was dropped between)
+                        let delta = v.get_i64("tokens").unwrap();
+                        let total = v.get_i64("total_tokens").unwrap();
+                        assert!(delta >= 1, "zero-token delta frame: {v:?}");
+                        assert!(total > last_total, "total_tokens not monotone: {v:?}");
+                        assert!(total - last_total >= delta, "{v:?}");
+                        delta_sum += delta;
+                        last_total = total;
+                    }
                     "first_vote" => {
                         first_votes += 1;
                         assert!(v.get_f64("elapsed_s").unwrap() >= 0.0);
@@ -795,6 +810,7 @@ fn streamed_terminal_reply_is_byte_identical_to_the_blocking_reply() {
         }
     };
     assert!(progress_events >= 1, "no progress events streamed");
+    assert!(last_total >= 1, "no token_delta events streamed");
     assert_eq!(first_votes, 1, "first_vote fires exactly once per run");
 
     // byte-for-byte equality after zeroing the wall-clock-only fields
@@ -813,6 +829,14 @@ fn streamed_terminal_reply_is_byte_identical_to_the_blocking_reply() {
     assert!(r.get_i64("stream_events").unwrap() >= 2, "{r:?}");
     assert_eq!(r.get_i64("first_votes").unwrap(), 1, "{r:?}");
     assert!(r.get_f64("time_to_first_vote_mean_s").unwrap() >= 0.0);
+    // absent drops the received deltas sum exactly to the final total
+    // (this is the only stream on the server, so the global drop gauge
+    // is this stream's)
+    if r.get_i64("stream_drops").unwrap() == 0 {
+        assert_eq!(delta_sum, last_total, "token deltas must sum to the final total");
+    } else {
+        assert!(delta_sum <= last_total, "deltas overshot the total despite drops");
+    }
 
     let _ = request(&mut s, r#"{"op":"shutdown"}"#);
     srv.join().unwrap();
